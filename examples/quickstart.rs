@@ -1,0 +1,78 @@
+//! Quickstart: the whole stack in one page.
+//!
+//! 1. bit-accurate mixed-precision MACs on one XR-NPE engine,
+//! 2. a GEMM through the morphable 8×8 co-processor (cycles + energy),
+//! 3. an AOT-compiled JAX model served through the PJRT runtime
+//!    (requires `make artifacts`; step 3 is skipped gracefully if the
+//!    artifacts are missing).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use xr_npe::arith::Precision;
+use xr_npe::energy::AsicModel;
+use xr_npe::npe::{Engine, PrecSel};
+use xr_npe::soc::{Soc, SocConfig};
+use xr_npe::util::{Matrix, Rng};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. one engine, three precisions ----------------------------
+    println!("== XR-NPE engine: fused dot product, per `prec_sel` ==");
+    for sel in [PrecSel::Fp4x4, PrecSel::Posit8x2, PrecSel::Posit16x1] {
+        let p = sel.precision();
+        let mut eng = Engine::new(sel);
+        // dot([0.5, 1.5, -2], [2, 1, 0.25]) = 1 + 1.5 - 0.5 = 2.0
+        let xs = [0.5, 1.5, -2.0];
+        let ys = [2.0, 1.0, 0.25];
+        for (&x, &y) in xs.iter().zip(&ys) {
+            let mut lanes_a = vec![0u32; sel.lanes()];
+            let mut lanes_b = vec![0u32; sel.lanes()];
+            lanes_a[0] = p.encode(x);
+            lanes_b[0] = p.encode(y);
+            eng.mac_word_fused(sel.pack(&lanes_a), sel.pack(&lanes_b));
+        }
+        println!(
+            "  {:<11} dot = {:<8} ({} lanes/word, {} RMMEC blocks/lane, {} gated MACs)",
+            p.name(),
+            eng.read_lane_f64(0),
+            sel.lanes(),
+            xr_npe::npe::rmmec::blocks_for_width(p.mant_mult_bits()),
+            eng.stats.gated_macs,
+        );
+    }
+
+    // ---- 2. a GEMM on the co-processor -------------------------------
+    println!("\n== 64x128x64 GEMM on the 8x8 morphable array ==");
+    let mut rng = Rng::new(7);
+    let a = Matrix::random(64, 128, 0.5, &mut rng);
+    let b = Matrix::random(128, 64, 0.5, &mut rng);
+    let asic = AsicModel::xr_npe();
+    for sel in PrecSel::ALL {
+        let mut soc = Soc::new(SocConfig::default());
+        let (_, rep) = soc.gemm(&a, &b, sel, Precision::Fp32)?;
+        let e_pj = asic.energy_from_stats_pj(sel, &rep.array.stats);
+        println!(
+            "  {:<10} {:>7} cycles  {:>5.1} MACs/cyc  {:>6} B moved  {:>7.1} nJ compute",
+            format!("{:?}", sel),
+            rep.total_cycles,
+            rep.array.macs_per_cycle,
+            rep.bytes_in + rep.bytes_out,
+            e_pj / 1e3,
+        );
+    }
+
+    // ---- 3. serve an AOT-compiled JAX model --------------------------
+    println!("\n== PJRT: serving the AOT-compiled GazeNet (Pallas-kerneled MxP) ==");
+    match xr_npe::runtime::Registry::open("artifacts") {
+        Ok(mut reg) => {
+            let landmarks = vec![0.1f32; 16];
+            let out = reg.get("gaze_mxp_pallas")?.run_f32(&[(&landmarks, &[1, 16])])?;
+            println!("  gaze(yaw, pitch) = {:?} rad", out[0]);
+            let out32 = reg.get("gaze_fp32")?.run_f32(&[(&landmarks, &[1, 16])])?;
+            println!("  fp32 reference   = {:?} rad", out32[0]);
+        }
+        Err(e) => println!("  (skipped: {e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! VIO deep-dive: drive UL-VIO-lite over a long synthetic-KITTI
+//! trajectory at every precision configuration, integrate the predicted
+//! poses, and compare trajectories + Fig. 6-style RMSE + model sizes.
+//!
+//! Uses the *Rust* trajectory generator for the stream (streaming
+//! workload) and the trained weights from `make artifacts` — QAT
+//! variants where they exist.
+//!
+//! ```bash
+//! cargo run --release --example vio_kitti
+//! ```
+
+use anyhow::Result;
+use xr_npe::artifacts;
+use xr_npe::coordinator::scheduler::ModelInstance;
+use xr_npe::models::ulvio;
+use xr_npe::npe::PrecSel;
+use xr_npe::quant::PlanBudget;
+use xr_npe::soc::{Soc, SocConfig};
+use xr_npe::vio::kitti::{SequenceConfig, TrajectoryGenerator};
+use xr_npe::vio::odometry::{self, RelPose};
+
+fn main() -> Result<()> {
+    let frames = 300usize;
+    println!("UL-VIO-lite on a synthetic KITTI sequence ({frames} frames)\n");
+    let seq = TrajectoryGenerator::new(SequenceConfig { frames, seed: 77, ..Default::default() })
+        .sequence();
+    let gt: Vec<RelPose> = seq.iter().map(|f| f.rel_pose).collect();
+
+    // configurations: uniform per-mode (QAT weights where available) +
+    // the layer-adaptive MxP plan on FP32 weights
+    let configs: Vec<(String, ModelInstance)> = {
+        let mut v = Vec::new();
+        let w32 = artifacts::weights("ulvio")?;
+        v.push((
+            "Posit(16,1)".into(),
+            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "posit16").unwrap_or_else(|_| w32.clone()), PrecSel::Posit16x1),
+        ));
+        v.push((
+            "Posit(8,0)".into(),
+            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "posit8").unwrap_or_else(|_| w32.clone()), PrecSel::Posit8x2),
+        ));
+        v.push((
+            "FP4 (QAT)".into(),
+            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "fp4").unwrap_or_else(|_| w32.clone()), PrecSel::Fp4x4),
+        ));
+        v.push((
+            "Posit(4,1) (QAT)".into(),
+            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "posit4").unwrap_or_else(|_| w32.clone()), PrecSel::Posit4x4),
+        ));
+        v.push((
+            "MxP plan".into(),
+            ModelInstance::planned(ulvio::build(), w32, PlanBudget { avg_bits: 6.0 }, PrecSel::Fp4x4, true),
+        ));
+        v
+    };
+
+    // FP32 reference trajectory
+    let ref_inst = ModelInstance::uniform(ulvio::build(), artifacts::weights("ulvio")?, PrecSel::Posit16x1);
+    let mut fp32_pred = Vec::with_capacity(frames);
+    for f in &seq {
+        let out = ref_inst.infer_ref(&f.image, &f.imu)?;
+        let mut p = [0f32; 6];
+        p.copy_from_slice(&out[..6]);
+        fp32_pred.push(p);
+    }
+    let t32 = odometry::rmse_translation(&fp32_pred, &gt);
+    let r32 = odometry::rmse_rotation_deg(&fp32_pred, &gt);
+    println!("{:<18} {:>9} {:>12} {:>10} {:>10} {:>10}",
+        "config", "t_rmse%", "r_rmse deg", "Δt pp", "ATE m", "size KB");
+    println!("{:<18} {:>9.2} {:>12.4} {:>10} {:>10.2} {:>10.1}",
+        "FP32 (ref)", t32, r32, "-", odometry::ate(&fp32_pred, &gt),
+        ref_inst.graph.total_params() as f64 * 4.0 / 1e3);
+
+    for (name, inst) in &configs {
+        let mut soc = Soc::new(SocConfig::default());
+        let mut pred = Vec::with_capacity(frames);
+        for f in &seq {
+            let (out, _) = inst.infer(&mut soc, &f.image, &f.imu)?;
+            let mut p = [0f32; 6];
+            p.copy_from_slice(&out[..6]);
+            pred.push(p);
+        }
+        let t = odometry::rmse_translation(&pred, &gt);
+        let r = odometry::rmse_rotation_deg(&pred, &gt);
+        println!("{:<18} {:>9.2} {:>12.4} {:>+10.2} {:>10.2} {:>10.1}",
+            name, t, r, t - t32, odometry::ate(&pred, &gt), inst.model_bytes() / 1e3);
+    }
+
+    // model-size report (paper §I: 13.5 MB FP32 → 2.42 MB MxP at UL-VIO scale)
+    println!("\n-- model size scaling (paper's UL-VIO parameter count) --");
+    for (scheme, mb) in xr_npe::quant::policy::size_report(&[13_500_000 / 4]) {
+        println!("  {scheme:<28} {mb:>6.2} MB");
+    }
+
+    // trajectory endpoints (drift visual)
+    let tr_gt = odometry::integrate_poses(&gt);
+    let tr32 = odometry::integrate_poses(&fp32_pred);
+    println!("\n-- integrated trajectory endpoints --");
+    println!("  ground truth: ({:7.1}, {:7.1}, {:7.1}) m", tr_gt.last().unwrap()[0], tr_gt.last().unwrap()[1], tr_gt.last().unwrap()[2]);
+    println!("  FP32        : ({:7.1}, {:7.1}, {:7.1}) m", tr32.last().unwrap()[0], tr32.last().unwrap()[1], tr32.last().unwrap()[2]);
+    Ok(())
+}

@@ -1,0 +1,171 @@
+"""AOT build driver: train → verify kernels → export everything the
+Rust side consumes.
+
+Outputs under ``--out`` (default ``../artifacts``):
+
+* ``weights_{model}.bin``          FP32 QAT-ready params + per-layer
+                                   loss gradients (``<layer>.g``) —
+                                   XRT1 containers (rust `util::io`).
+* ``weights_{model}_qat_{fmt}.bin``  QAT-fine-tuned params per HW format.
+* ``eval_shapes.bin`` / ``eval_gaze.bin`` / ``eval_vio.bin``
+                                   held-out evaluation sets.
+* ``{model}_{variant}.hlo.txt``    inference graphs lowered to HLO TEXT
+                                   (not .serialize() — xla_extension
+                                   0.5.1 rejects jax>=0.5's 64-bit-id
+                                   protos; the text parser round-trips).
+* ``mpmatmul_{fmt}.hlo.txt``       the Pallas kernel lowered standalone.
+* ``plan.json``                    the python-side layer-adaptive plan
+                                   (mirrors rust `quant::policy`).
+* ``metrics.json``                 training-side accuracy/MSE per
+                                   precision (cross-checked by benches).
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M, quantlib as ql, train, xrt
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_hlo(path: Path, fn, *example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    path.write_text(to_hlo_text(lowered))
+    print(f"  wrote {path.name}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true", help="tiny training run (CI smoke)")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+
+    scale = 0.15 if args.fast else 1.0
+
+    def s(n):
+        return max(20, int(n * scale))
+
+    # ---------------- train ----------------
+    print("[1/4] training EffNet-XR (shapes-10)…")
+    eff_p, eff_g, (ex, ey), eff_qat, eff_m = train.train_effnet(s(700), s(250))
+    print(f"      fp32 acc {eff_m['fp32']:.3f}  qat_fp4 {eff_m['qat_fp4']:.3f}")
+    print("[2/4] training GazeNet…")
+    gz_p, gz_g, (gx, gy), gz_qat, gz_m = train.train_gaze(s(800), s(250))
+    print(f"      fp32 mse {gz_m['fp32']:.5f}")
+    print("[3/4] training UL-VIO-lite (KITTI-like)…")
+    vio_p, vio_g, (vi, vu, vp), vio_qat, vio_m = train.train_ulvio(s(900), s(300))
+    print(f"      fp32 t_rmse {vio_m['fp32']['t_rmse']:.4f} r_rmse {vio_m['fp32']['r_rmse']:.5f}")
+    print("[3b/4] training MLP-XR…")
+    mlp_p, mlp_g, _, mlp_qat, mlp_m = train.train_mlp(s(600), s(200))
+    print(f"      fp32 acc {mlp_m['fp32']:.3f}")
+
+    # ---------------- plans ----------------
+    def plan_for(params, grads, compute, pin_last):
+        ws = [params[f"{n}.w"] for n in compute]
+        gs = [grads[f"{n}.w"] for n in compute]
+        pins = (len(compute) - 1,) if pin_last else ()
+        return ql.plan_formats(ws, gs, avg_bits_budget=6.0, base4="fp4", pin_high=pins)
+
+    plans = {
+        "effnet": plan_for(eff_p, eff_g, M.EFFNET_COMPUTE, False),
+        "gaze": plan_for(gz_p, gz_g, M.GAZE_COMPUTE, False),
+        "ulvio": plan_for(vio_p, vio_g, M.ULVIO_COMPUTE, True),
+        "mlp": plan_for(mlp_p, mlp_g, M.MLP_COMPUTE, False),
+    }
+    (out / "plan.json").write_text(json.dumps(plans, indent=2))
+    print(f"      plans: {plans}")
+
+    # ---------------- weights + eval sets ----------------
+    print("[4/4] exporting artifacts…")
+    for name, params, grads, qat in [
+        ("effnet", eff_p, eff_g, eff_qat),
+        ("gaze", gz_p, gz_g, gz_qat),
+        ("ulvio", vio_p, vio_g, vio_qat),
+        ("mlp", mlp_p, mlp_g, mlp_qat),
+    ]:
+        blob = dict(params)
+        blob.update({k + ".g" if not k.endswith(".g") else k: v
+                     for k, v in ((f"{kk[:-2]}.g", vv) for kk, vv in grads.items()
+                                  if kk.endswith(".w"))})
+        xrt.save_tensors(out / f"weights_{name}.bin", blob)
+        for fmt, qp in qat.items():
+            xrt.save_tensors(out / f"weights_{name}_qat_{fmt}.bin", qp)
+
+    xrt.save_tensors(out / "eval_shapes.bin",
+                     {"images": ex, "labels": ey.astype(np.float32)})
+    xrt.save_tensors(out / "eval_gaze.bin", {"landmarks": gx, "gaze": gy})
+    xrt.save_tensors(out / "eval_vio.bin", {"images": vi, "imu": vu, "poses": vp})
+
+    # ---------------- metrics ----------------
+    (out / "metrics.json").write_text(json.dumps(
+        {"effnet": eff_m, "gaze": gz_m, "ulvio": vio_m, "mlp": mlp_m}, indent=2))
+
+    # ---------------- HLO exports ----------------
+    ep = {k: jnp.asarray(v) for k, v in eff_p.items()}
+    gp = {k: jnp.asarray(v) for k, v in gz_p.items()}
+    up = {k: jnp.asarray(v) for k, v in vio_p.items()}
+    img1 = jnp.zeros((1, 1, 16, 16), jnp.float32)
+    lnd1 = jnp.zeros((1, 16), jnp.float32)
+    vimg1 = jnp.zeros((1, 2, 16, 16), jnp.float32)
+    imu1 = jnp.zeros((1, 6), jnp.float32)
+
+    export_hlo(out / "effnet_fp32.hlo.txt",
+               lambda x: (M.effnet_forward(ep, x),), img1)
+    export_hlo(out / "effnet_mxp.hlo.txt",
+               lambda x: (M.effnet_forward(ep, x, plans["effnet"]),), img1)
+    export_hlo(out / "gaze_fp32.hlo.txt",
+               lambda x: (M.gaze_forward(gp, x),), lnd1)
+    export_hlo(out / "gaze_mxp.hlo.txt",
+               lambda x: (M.gaze_forward(gp, x, plans["gaze"]),), lnd1)
+    export_hlo(out / "gaze_mxp_pallas.hlo.txt",
+               lambda x: (M.gaze_forward_pallas(gp, x, plans["gaze"]),), lnd1)
+    export_hlo(out / "ulvio_fp32.hlo.txt",
+               lambda i, u: (M.ulvio_forward(up, i, u),), vimg1, imu1)
+    export_hlo(out / "ulvio_mxp.hlo.txt",
+               lambda i, u: (M.ulvio_forward(up, i, u, plans["ulvio"]),), vimg1, imu1)
+
+    mp = {k: jnp.asarray(v) for k, v in mlp_p.items()}
+    flat1 = jnp.zeros((1, 256), jnp.float32)
+    export_hlo(out / "mlp_fp32.hlo.txt", lambda x: (M.mlp_forward(mp, x),), flat1)
+    export_hlo(out / "mlp_mxp.hlo.txt",
+               lambda x: (M.mlp_forward(mp, x, plans["mlp"]),), flat1)
+
+    # standalone Pallas kernel artifact (the L1 demo the quickstart runs)
+    from .kernels import mpmatmul
+    export_hlo(out / "mpmatmul_posit8.hlo.txt",
+               lambda a, b: (mpmatmul.mpmatmul(a, b, "posit8"),),
+               jnp.zeros((16, 32), jnp.float32), jnp.zeros((32, 16), jnp.float32))
+
+    manifest = {
+        "models": sorted(p.name for p in out.glob("*.hlo.txt")),
+        "weights": sorted(p.name for p in out.glob("weights_*.bin")),
+        "eval_sets": sorted(p.name for p in out.glob("eval_*.bin")),
+        "build_seconds": round(time.time() - t0, 1),
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"done in {manifest['build_seconds']}s → {out}")
+
+
+if __name__ == "__main__":
+    main()

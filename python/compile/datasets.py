@@ -1,0 +1,166 @@
+"""Synthetic XR perception datasets (build-time, numpy).
+
+Mirrors the *structure* of the paper's workloads on procedurally
+generated data (substitution rule — see DESIGN.md):
+
+* :func:`shapes10` — object classification: 16x16 grayscale images of 10
+  procedural pattern classes (the EfficientNet/shapes stand-in).
+* :func:`gaze` — eye-gaze extraction: 8 eye landmarks -> (yaw, pitch).
+* :func:`kitti_like` — VIO: smooth 6-DoF trajectories with projected
+  landmark feature frames + noisy IMU (the KITTI odometry stand-in; the
+  Rust pipeline uses the same generator design in `vio::kitti`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# shapes-10 classification
+# --------------------------------------------------------------------------
+
+def _grid(size: int = 16):
+    y, x = np.mgrid[0:size, 0:size].astype(np.float64)
+    return x, y
+
+
+def _shape_image(cls: int, rng: np.random.Generator, size: int = 16) -> np.ndarray:
+    x, y = _grid(size)
+    ph = rng.uniform(0, 2 * np.pi)
+    cx, cy = rng.uniform(5, 11, size=2)
+    f = rng.uniform(0.8, 1.3)
+    if cls == 0:  # horizontal stripes
+        img = np.sin(y * f + ph)
+    elif cls == 1:  # vertical stripes
+        img = np.sin(x * f + ph)
+    elif cls == 2:  # diagonal stripes
+        img = np.sin((x + y) * f * 0.8 + ph)
+    elif cls == 3:  # checkerboard
+        img = np.sin(x * f + ph) * np.sin(y * f + ph)
+    elif cls == 4:  # filled disc
+        r = np.hypot(x - cx, y - cy)
+        img = (r < rng.uniform(3.5, 5.5)).astype(float)
+    elif cls == 5:  # ring
+        r = np.hypot(x - cx, y - cy)
+        r0 = rng.uniform(4.0, 6.0)
+        img = (np.abs(r - r0) < 1.2).astype(float)
+    elif cls == 6:  # cross
+        img = ((np.abs(x - cx) < 1.5) | (np.abs(y - cy) < 1.5)).astype(float)
+    elif cls == 7:  # corner gradient
+        img = (x / size) * (y / size)
+        if rng.uniform() < 0.5:
+            img = img[::-1]
+        if rng.uniform() < 0.5:
+            img = img[:, ::-1]
+    elif cls == 8:  # sparse dots
+        img = np.zeros((size, size))
+        pts = rng.integers(0, size, size=(12, 2))
+        img[pts[:, 0], pts[:, 1]] = 1.0
+    else:  # 9: radial gradient
+        r = np.hypot(x - cx, y - cy)
+        img = 1.0 - r / r.max()
+    img = img.astype(np.float64)
+    img = (img - img.min()) / max(img.max() - img.min(), 1e-9)
+    img *= rng.uniform(0.55, 1.0)          # contrast jitter
+    img += rng.normal(0, 0.22, img.shape)  # sensor noise
+    return img.astype(np.float32)
+
+
+def shapes10(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """(images [n,1,16,16], labels [n]) balanced across 10 classes."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n) % 10
+    rng.shuffle(labels)
+    imgs = np.stack([_shape_image(int(c), rng) for c in labels])
+    return imgs[:, None, :, :].astype(np.float32), labels.astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# synthetic eye-gaze
+# --------------------------------------------------------------------------
+
+def gaze(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """(landmarks [n,16], gaze [n,2]).
+
+    8 landmarks on an eye ellipse; the pupil (landmarks 6-7) displaces
+    with gaze direction; lid openness couples to pitch. Targets in
+    radians, |yaw| <= 0.6, |pitch| <= 0.4.
+    """
+    rng = np.random.default_rng(seed)
+    yaw = rng.uniform(-0.6, 0.6, n)
+    pitch = rng.uniform(-0.4, 0.4, n)
+    feats = np.zeros((n, 16), dtype=np.float64)
+    t = np.linspace(0, 2 * np.pi, 6, endpoint=False)
+    for i in range(n):
+        open_ = 0.5 + 0.3 * np.cos(pitch[i])
+        ex = np.cos(t)
+        ey = open_ * np.sin(t)
+        px = 0.6 * np.sin(yaw[i])
+        py = 0.5 * np.sin(pitch[i])
+        pts = np.concatenate([np.stack([ex, ey], 1), [[px, py], [px, py * 0.8 + 0.05]]])
+        pts += rng.normal(0, 0.015, pts.shape)
+        feats[i] = pts.reshape(-1)
+    targets = np.stack([yaw, pitch], 1)
+    return feats.astype(np.float32), targets.astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# KITTI-like VIO sequences
+# --------------------------------------------------------------------------
+
+def kitti_like(frames: int, seed: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(images [frames,2,16,16], imu [frames,6], rel_pose [frames,6]).
+
+    Same generator design as rust `vio::kitti`: landmark-cloud
+    projection + vehicle dynamics + noisy IMU.
+    """
+    rng = np.random.default_rng(seed)
+    cloud = np.stack([
+        rng.uniform(-40, 40, 96),
+        rng.uniform(-4, 8, 96),
+        rng.uniform(-40, 40, 96),
+    ], 1)
+    pos = np.zeros(3)
+    yaw = pitch = roll = 0.0
+    v, yaw_rate = 0.8, 0.0
+    prev = np.zeros((16, 16), dtype=np.float32)
+    imgs, imus, poses = [], [], []
+    for i in range(frames):
+        if i % 40 == 0:
+            yaw_rate = rng.uniform(-0.06, 0.06)
+        v = np.clip(v + rng.normal(0, 0.016), 0.24, 1.44)
+        dyaw = yaw_rate + rng.normal(0, 0.002)
+        dpitch = -pitch * 0.2 + rng.normal(0, 0.004)
+        droll = -roll * 0.2 + rng.normal(0, 0.003)
+        dz, dx, dy = v, rng.normal(0, 0.01), rng.normal(0, 0.008)
+        rel = np.array([dx, dy, dz, droll, dpitch, dyaw], dtype=np.float32)
+
+        sy, cy = np.sin(yaw), np.cos(yaw)
+        pos += [cy * dx + sy * dz, dy, -sy * dx + cy * dz]
+        yaw += dyaw
+        pitch += dpitch
+        roll += droll
+
+        # render feature frame
+        img = np.zeros((16, 16), dtype=np.float32)
+        d = cloud - pos
+        bx = cy * d[:, 0] + sy * d[:, 2]
+        bz = -sy * d[:, 0] + cy * d[:, 2]
+        by = d[:, 1] - pitch * bz
+        vis = (bz > 1.0) & (bz < 60.0)
+        u = 8 + 8 * bx[vis] / bz[vis]
+        w = 8 + 8 * by[vis] / bz[vis]
+        inb = (u >= 0) & (u < 16) & (w >= 0) & (w < 16)
+        inten = np.minimum(8.0 / bz[vis][inb], 1.0)
+        np.add.at(img, (w[inb].astype(int), u[inb].astype(int)), inten)
+        img = np.minimum(img, 1.0)
+
+        imgs.append(np.stack([img, prev]))
+        prev = img
+        nstd = 0.02
+        imus.append(rel + rng.normal(0, [nstd] * 3 + [nstd * 0.3] * 3).astype(np.float32))
+        poses.append(rel)
+    return (np.stack(imgs).astype(np.float32),
+            np.stack(imus).astype(np.float32),
+            np.stack(poses).astype(np.float32))

@@ -1,0 +1,141 @@
+"""L1 — the mixed-precision blocked matmul as a Pallas kernel.
+
+## Hardware adaptation (DESIGN.md §Hardware-Adaptation)
+
+The paper's hot-spot is a GEMM on an 8x8 output-stationary MAC array
+with per-layer `prec_sel`. On a TPU-shaped machine the same insight maps
+to:
+
+* **quantize at the VMEM boundary** — operand tiles are fake-quantized
+  (threshold-table searchsorted, the vector-unit analogue of the input
+  processing stage) right before the MXU consumes them, so HBM<->VMEM
+  traffic is what sets the achievable arithmetic intensity, exactly like
+  the paper's off-chip-movement argument;
+* **accumulate wide** — `jnp.dot(..., preferred_element_type=f32)`
+  stands in for the quire: one rounding at tile output;
+* **BlockSpec tiling** — the grid expresses the HBM->VMEM schedule the
+  ASIC's DMA + banked SPM implement (block sizes default to the MXU-
+  friendly 128 but shrink to the problem).
+
+Run with ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls; interpret-mode lowers to plain HLO so the
+kernel runs inside the AOT artifacts the Rust runtime loads.
+
+VMEM budget per grid step (f32): `bm*bk + bk*bn + bm*bn + tables` —
+at the default 128³ blocks ≈ 192 KiB + ~0.5 MiB of posit16 tables,
+comfortably under the ~16 MiB/core budget (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quantlib as ql
+
+
+def _quant_tile(x, pv, th):
+    """Codec-exact fake quantization of a tile via threshold tables
+    (vectorized searchsorted — the input-processing stage)."""
+    idx = jnp.searchsorted(th, jnp.abs(x), side="right")
+    q = pv[idx]
+    return jnp.where(jnp.signbit(x), -q, q).astype(jnp.float32)
+
+
+def _kernel(a_ref, b_ref, pv_ref, th_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i,j] += quant(a[i,k]) @ quant(b[k,j])."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qa = _quant_tile(a_ref[...], pv_ref[...], th_ref[...])
+    qb = _quant_tile(b_ref[...], pv_ref[...], th_ref[...])
+    o_ref[...] += jnp.dot(qa, qb, preferred_element_type=jnp.float32)
+    del n_k
+
+
+def _block(dim: int, pref: int) -> int:
+    """Largest block <= pref that keeps the grid simple (dims here are
+    small; real-TPU tuning would pin 128x128 MXU tiles)."""
+    return min(dim, pref)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "bm", "bk", "bn"))
+def mpmatmul(a, b, fmt: str, bm: int = 128, bk: int = 128, bn: int = 128):
+    """Mixed-precision matmul: `quant(a) @ quant(b)` with f32 (quire-
+    style) accumulation. `fmt` is any `quantlib` format; `fp32` skips
+    quantization but keeps the same kernel path."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    if fmt != "fp32":
+        # per-tensor pow-2 scaling (the exponent-offset registers of the
+        # input stage); folded back after the quire-style accumulate
+        sa = ql.dyn_scale(a, fmt)
+        sb = ql.dyn_scale(b, fmt)
+        a = a / sa
+        b = b / sb
+        pv_np, th_np = ql.tables(fmt)
+        pv = jnp.asarray(pv_np, jnp.float32)
+        th = jnp.asarray(th_np, jnp.float32)
+
+    if fmt == "fp32":
+        # identity quantization: same blocked kernel without the tables
+        def kern(a_ref, b_ref, o_ref, *, n_k):
+            kk = pl.program_id(2)
+
+            @pl.when(kk == 0)
+            def _init():
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+            o_ref[...] += jnp.dot(
+                a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+            )
+            del n_k
+
+        bm_, bk_, bn_ = _block(m, bm), _block(k, bk), _block(n, bn)
+        grid = (pl.cdiv(m, bm_), pl.cdiv(n, bn_), pl.cdiv(k, bk_))
+        return pl.pallas_call(
+            functools.partial(kern, n_k=grid[2]),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+    bm_, bk_, bn_ = _block(m, bm), _block(k, bk), _block(n, bn)
+    grid = (pl.cdiv(m, bm_), pl.cdiv(n, bn_), pl.cdiv(k, bk_))
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            # tables are broadcast to every grid step (resident in VMEM)
+            pl.BlockSpec(pv.shape, lambda i, j, kk: (0,)),
+            pl.BlockSpec(th.shape, lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32), pv, th)
+    return out * (sa * sb)
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, fmt: str) -> int:
+    """Static VMEM footprint estimate per grid step (f32), for the
+    DESIGN.md/EXPERIMENTS.md roofline discussion."""
+    tiles = (bm * bk + bk * bn + bm * bn) * 4
+    if fmt == "fp32":
+        return tiles
+    pv, th = ql.tables(fmt)
+    return tiles + (len(pv) + len(th)) * 4

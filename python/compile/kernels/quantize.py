@@ -1,0 +1,49 @@
+"""L1 — elementwise tile quantizer as a Pallas kernel.
+
+The standalone version of the input-processing stage: quantize a tensor
+to a hardware format, tile by tile (BlockSpec expresses the HBM->VMEM
+stream). Used by the activation-requantization step between layers and
+as the simplest kernel for the hypothesis shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quantlib as ql
+
+
+def _kernel(x_ref, pv_ref, th_ref, o_ref):
+    x = x_ref[...]
+    idx = jnp.searchsorted(th_ref[...], jnp.abs(x), side="right")
+    q = pv_ref[...][idx]
+    o_ref[...] = jnp.where(jnp.signbit(x), -q, q).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block"))
+def quantize(x, fmt: str, block: int = 256):
+    """Quantize a 2-D array to `fmt`, tiled along the leading axis."""
+    if fmt == "fp32":
+        return x.astype(jnp.float32)
+    m, n = x.shape
+    pv_np, th_np = ql.tables(fmt)
+    pv = jnp.asarray(pv_np, jnp.float32)
+    th = jnp.asarray(th_np, jnp.float32)
+    bm = min(m, block)
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec(pv.shape, lambda i: (0,)),
+            pl.BlockSpec(th.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), pv, th)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *definitions of correctness* the kernels are tested
+against (pytest + hypothesis sweeps in python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import quantlib as ql
+
+
+def mpmatmul_ref(a: jnp.ndarray, b: jnp.ndarray, fmt: str) -> jnp.ndarray:
+    """Mixed-precision matmul oracle: quantize both operands to `fmt`
+    (codec-exact, no STE), multiply-accumulate in f32.
+
+    f32 accumulation models the engine's quire over a tile's dot
+    products: every product of <=16-bit-format operands is exact in f32's
+    24-bit significand only for 4/8-bit formats; for posit16 the oracle
+    (and the kernel) accumulate in f32 like the XLA dot they lower to —
+    the Rust simulator is the stricter quire-exact reference.
+    """
+    if fmt == "fp32":
+        return a.astype(jnp.float32) @ b.astype(jnp.float32)
+    sa = ql.dyn_scale(a, fmt)
+    sb = ql.dyn_scale(b, fmt)
+    qa = ql.quantize_jnp(a / sa, fmt).astype(jnp.float32)
+    qb = ql.quantize_jnp(b / sb, fmt).astype(jnp.float32)
+    return (qa @ qb) * (sa * sb)
+
+
+def quantize_ref(x: jnp.ndarray, fmt: str) -> jnp.ndarray:
+    """Elementwise codec-exact quantization oracle."""
+    return ql.quantize_jnp(x, fmt).astype(jnp.float32)

@@ -1,0 +1,254 @@
+"""L2 — the three XR perception models in JAX, with the QAT
+quantization hooks (fake-quant weights/activations + PACT).
+
+Layer names and weight layouts match the Rust executor exactly
+(`rust/src/models/exec.rs`): conv weights are HWIO ``[k, k, in, out]``,
+fc weights ``[in, out]``, PACT thresholds ``<act>.alpha``. The forward
+functions are written against a flat ``params: dict[str, Array]`` so the
+same dict round-trips through the XRT1 container to Rust.
+
+``fmts`` — one format string per *compute* layer (see
+``quantlib.ALL_FORMATS``) or ``None`` for the FP32 reference. When set,
+both the layer's weights and its *output activations* are fake-quantized
+to that format (the paper: "activations are retained with particular
+precision across all layers, while computations remain in
+FP-arithmetic").
+
+The compute hot-spot (quantized GEMM) also exists as a Pallas kernel —
+``kernels.mpmatmul`` — used by :func:`fc_pallas` so the exported HLO
+exercises the L1 path; the pure-jnp forward here is its oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import quantlib as ql
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+
+def conv2d(params, name, x, stride=1, pad=1, fmt=None):
+    """NCHW conv with HWIO weights + bias. Both operands are quantized
+    (the hardware input stage encodes activations and weights alike)."""
+    w = params[f"{name}.w"]
+    b = params[f"{name}.b"]
+    if fmt is not None:
+        x = ql.fake_quant(x, fmt)
+        w = ql.fake_quant(w, fmt)
+        b = ql.fake_quant(b, fmt)
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "HWIO", "NCHW"),
+    )
+    y = y + b[None, :, None, None]
+    if fmt is not None:
+        y = ql.fake_quant(y, fmt)
+    return y
+
+
+def fc(params, name, x, fmt=None):
+    w = params[f"{name}.w"]
+    b = params[f"{name}.b"]
+    if fmt is not None:
+        x = ql.fake_quant(x, fmt)
+        w = ql.fake_quant(w, fmt)
+        b = ql.fake_quant(b, fmt)
+    y = x @ w + b
+    if fmt is not None:
+        y = ql.fake_quant(y, fmt)
+    return y
+
+
+def pact_act(params, name, x, n_bits=8):
+    """PACT activation (eqs. 6-7); α is trained."""
+    alpha = jnp.maximum(params[f"{name}.alpha"], 1e-3)
+    return ql.pact_quantize(x, alpha, n_bits)
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _he(rng, shape, fan_in):
+    return (jax.random.normal(rng, shape) * jnp.sqrt(2.0 / fan_in)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# EffNet-XR (classification, 5 compute layers)
+# --------------------------------------------------------------------------
+
+EFFNET_COMPUTE = ["conv1", "conv2", "conv3", "fc1", "fc2"]
+
+
+def effnet_params(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "conv1.w": _he(ks[0], (3, 3, 1, 8), 9),
+        "conv1.b": jnp.zeros(8),
+        "conv2.w": _he(ks[1], (3, 3, 8, 16), 72),
+        "conv2.b": jnp.zeros(16),
+        "conv3.w": _he(ks[2], (3, 3, 16, 32), 144),
+        "conv3.b": jnp.zeros(32),
+        "fc1.w": _he(ks[3], (128, 64), 128),
+        "fc1.b": jnp.zeros(64),
+        "fc2.w": _he(ks[4], (64, 10), 64),
+        "fc2.b": jnp.zeros(10),
+        "act1.alpha": jnp.array([4.0]),
+        "act2.alpha": jnp.array([4.0]),
+        "act3.alpha": jnp.array([4.0]),
+        "act4.alpha": jnp.array([4.0]),
+    }
+
+
+def effnet_forward(params, x, fmts=None):
+    """x: [n, 1, 16, 16] -> logits [n, 10]."""
+    f = (lambda i: fmts[i]) if fmts is not None else (lambda i: None)
+    x = conv2d(params, "conv1", x, fmt=f(0))
+    x = maxpool2(pact_act(params, "act1", x))
+    x = conv2d(params, "conv2", x, fmt=f(1))
+    x = maxpool2(pact_act(params, "act2", x))
+    x = conv2d(params, "conv3", x, fmt=f(2))
+    x = maxpool2(pact_act(params, "act3", x))
+    x = x.reshape(x.shape[0], -1)
+    x = pact_act(params, "act4", fc(params, "fc1", x, fmt=f(3)))
+    return fc(params, "fc2", x, fmt=f(4))
+
+
+# --------------------------------------------------------------------------
+# GazeNet (regression, 3 compute layers)
+# --------------------------------------------------------------------------
+
+GAZE_COMPUTE = ["fc1", "fc2", "fc3"]
+
+
+def gaze_params(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "fc1.w": _he(ks[0], (16, 64), 16),
+        "fc1.b": jnp.zeros(64),
+        "fc2.w": _he(ks[1], (64, 64), 64),
+        "fc2.b": jnp.zeros(64),
+        "fc3.w": _he(ks[2], (64, 2), 64),
+        "fc3.b": jnp.zeros(2),
+        "act1.alpha": jnp.array([4.0]),
+        "act2.alpha": jnp.array([4.0]),
+    }
+
+
+def gaze_forward(params, x, fmts=None):
+    """x: [n, 16] -> gaze [n, 2] (radians)."""
+    f = (lambda i: fmts[i]) if fmts is not None else (lambda i: None)
+    x = pact_act(params, "act1", fc(params, "fc1", x, fmt=f(0)))
+    x = pact_act(params, "act2", fc(params, "fc2", x, fmt=f(1)))
+    return fc(params, "fc3", x, fmt=f(2))
+
+
+# --------------------------------------------------------------------------
+# UL-VIO-lite (odometry, 4 compute layers)
+# --------------------------------------------------------------------------
+
+ULVIO_COMPUTE = ["conv1", "conv2", "fc1", "fc2"]
+
+
+def ulvio_params(key):
+    ks = jax.random.split(key, 4)
+    return {
+        "conv1.w": _he(ks[0], (3, 3, 2, 8), 18),
+        "conv1.b": jnp.zeros(8),
+        "conv2.w": _he(ks[1], (3, 3, 8, 16), 72),
+        "conv2.b": jnp.zeros(16),
+        "fc1.w": _he(ks[2], (262, 64), 262),
+        "fc1.b": jnp.zeros(64),
+        "fc2.w": _he(ks[3], (64, 6), 64),
+        "fc2.b": jnp.zeros(6),
+        "act1.alpha": jnp.array([4.0]),
+        "act2.alpha": jnp.array([4.0]),
+        "act3.alpha": jnp.array([4.0]),
+    }
+
+
+def ulvio_forward(params, img, imu, fmts=None):
+    """img: [n, 2, 16, 16], imu: [n, 6] -> rel pose [n, 6]."""
+    f = (lambda i: fmts[i]) if fmts is not None else (lambda i: None)
+    x = conv2d(params, "conv1", img, stride=2, fmt=f(0))
+    x = pact_act(params, "act1", x)
+    x = conv2d(params, "conv2", x, stride=2, fmt=f(1))
+    x = pact_act(params, "act2", x)
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.concatenate([x, imu], axis=1)
+    x = pact_act(params, "act3", fc(params, "fc1", x, fmt=f(2)))
+    return fc(params, "fc2", x, fmt=f(3))
+
+
+# --------------------------------------------------------------------------
+# Pallas-kerneled FC (the L1 integration point; see kernels/mpmatmul.py)
+# --------------------------------------------------------------------------
+
+
+def fc_pallas(params, name, x, fmt):
+    """Same contract as :func:`fc` with the quantized matmul running in
+    the Pallas kernel (interpret mode on CPU)."""
+    from .kernels import mpmatmul
+
+    w = params[f"{name}.w"]
+    b = params[f"{name}.b"]
+    if fmt != "fp32":
+        b = ql.fake_quant(b, fmt)
+    y = mpmatmul.mpmatmul(x, w, fmt)
+    y = y + b
+    if fmt == "fp32":
+        return y
+    return ql.scaled_quantize_jnp(y, fmt, ql.dyn_scale(y, fmt))
+
+
+def gaze_forward_pallas(params, x, fmts):
+    """GazeNet with every FC running through the Pallas kernel — the
+    variant exported to HLO as `gaze_mxp_pallas`."""
+    x = pact_act(params, "act1", fc_pallas(params, "fc1", x, fmts[0]))
+    x = pact_act(params, "act2", fc_pallas(params, "fc2", x, fmts[1]))
+    return fc_pallas(params, "fc3", x, fmts[2])
+
+
+# --------------------------------------------------------------------------
+# MLP-XR (the Table-IV-style MLP workload: flattened shapes-10)
+# --------------------------------------------------------------------------
+
+MLP_COMPUTE = ["fc1", "fc2", "fc3"]
+
+
+def mlp_params(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "fc1.w": _he(ks[0], (256, 128), 256),
+        "fc1.b": jnp.zeros(128),
+        "fc2.w": _he(ks[1], (128, 64), 128),
+        "fc2.b": jnp.zeros(64),
+        "fc3.w": _he(ks[2], (64, 10), 64),
+        "fc3.b": jnp.zeros(10),
+        "act1.alpha": jnp.array([4.0]),
+        "act2.alpha": jnp.array([4.0]),
+    }
+
+
+def mlp_forward(params, x, fmts=None):
+    """x: [n, 256] (flattened 16x16) -> logits [n, 10]."""
+    f = (lambda i: fmts[i]) if fmts is not None else (lambda i: None)
+    x = pact_act(params, "act1", fc(params, "fc1", x, fmt=f(0)))
+    x = pact_act(params, "act2", fc(params, "fc2", x, fmt=f(1)))
+    return fc(params, "fc3", x, fmt=f(2))
+
+
+MODELS = {
+    "effnet": dict(params=effnet_params, forward=effnet_forward, compute=EFFNET_COMPUTE),
+    "gaze": dict(params=gaze_params, forward=gaze_forward, compute=GAZE_COMPUTE),
+    "ulvio": dict(params=ulvio_params, forward=ulvio_forward, compute=ULVIO_COMPUTE),
+    "mlp": dict(params=mlp_params, forward=mlp_forward, compute=MLP_COMPUTE),
+}

@@ -1,0 +1,452 @@
+"""Mixed-precision quantization library — the Python mirror of
+`rust/src/arith` + `rust/src/quant` (paper eqs. 1-7).
+
+Bit-exact posit/minifloat codecs (ported from the Rust implementation,
+including posit *bit-string* rounding, which is NOT value-nearest when
+the truncation point falls inside the regime/exponent field), value +
+threshold tables for vectorized fake quantization, straight-through
+estimators for QAT, PACT, the entropy clipping scheme and the layer
+sensitivity metric.
+
+`python/tests/test_quantlib.py` pins decode values and rounding
+behaviour against golden vectors verified by the Rust test suite, so the
+two sides cannot drift silently.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# posit codec (mirror of rust/src/arith/posit.rs)
+# --------------------------------------------------------------------------
+
+
+def posit_decode(bits: int, n: int, es: int) -> float:
+    """Decode an n-bit posit encoding to a float (NaR → nan)."""
+    mask = (1 << n) - 1
+    bits &= mask
+    if bits == 0:
+        return 0.0
+    nar = 1 << (n - 1)
+    if bits == nar:
+        return math.nan
+    sign = bool(bits & nar)
+    v = (-bits) & mask if sign else bits
+    body_bits = n - 1
+    r0 = (v >> (n - 2)) & 1
+    run = 0
+    while run < body_bits and ((v >> (n - 2 - run)) & 1) == r0:
+        run += 1
+    k = run - 1 if r0 == 1 else -run
+    consumed = min(run + 1, body_bits)
+    rem = body_bits - consumed
+    e_avail = min(rem, es)
+    e = ((v >> (rem - e_avail)) & ((1 << e_avail) - 1)) << (es - e_avail) if e_avail else 0
+    fb = rem - e_avail
+    frac = v & ((1 << fb) - 1) if fb else 0
+    scale = (k << es) + e
+    sig = (1 << fb) | frac
+    val = sig * 2.0 ** (scale - fb)
+    return -val if sign else val
+
+
+def posit_encode(x: float, n: int, es: int) -> int:
+    """Encode a float to the nearest n-bit posit (bit-string RNE)."""
+    mask = (1 << n) - 1
+    if x == 0.0:
+        return 0
+    if math.isnan(x) or math.isinf(x):
+        return (1 << (n - 1)) & mask
+    sign = x < 0.0
+    a = abs(x)
+    top = 2.0 ** ((n - 2) << es)
+    bot = 1.0 / top
+    if a >= top:
+        body = mask >> 1
+    elif a <= bot:
+        body = 1
+    else:
+        m, e2 = math.frexp(a)  # a = m * 2**e2, m in [0.5, 1)
+        scale = e2 - 1
+        frac52 = int((m * 2 - 1) * (1 << 52))  # 52-bit fraction of 1.f
+        k, e = divmod(scale, 1 << es)
+        bs = 0
+        ln = 0
+        if k >= 0:
+            for _ in range(k + 1):
+                bs = (bs << 1) | 1
+                ln += 1
+            bs <<= 1
+            ln += 1
+        else:
+            bs <<= -k
+            ln += -k
+            bs = (bs << 1) | 1
+            ln += 1
+        for i in reversed(range(es)):
+            bs = (bs << 1) | ((e >> i) & 1)
+            ln += 1
+        bs = (bs << 52) | frac52
+        ln += 52
+        keep = n - 1
+        if ln <= keep:
+            body = bs << (keep - ln)
+        else:
+            drop = ln - keep
+            topbits = bs >> drop
+            guard = (bs >> (drop - 1)) & 1
+            sticky = (bs & ((1 << (drop - 1)) - 1)) != 0 if drop > 1 else False
+            r = topbits
+            if guard == 1 and (sticky or (topbits & 1) == 1):
+                r += 1
+            if r >> keep:
+                body = mask >> 1
+            elif r == 0:
+                body = 1
+            else:
+                body = r
+    body &= mask >> 1
+    return ((-body) & mask) if sign else body
+
+
+# --------------------------------------------------------------------------
+# minifloat codec (mirror of rust/src/arith/fp.rs)
+# --------------------------------------------------------------------------
+
+# (e_bits, m_bits, bias, flavor); flavor: 'ieee' | 'finite_nan' | 'finite'
+MINIFLOATS = {
+    "fp4": (2, 1, 1, "finite"),
+    "e4m3": (4, 3, 7, "finite_nan"),
+    "e5m2": (5, 2, 15, "ieee"),
+    "fp16": (5, 10, 15, "ieee"),
+    "bf16": (8, 7, 127, "ieee"),
+}
+
+
+def minifloat_decode(raw: int, fmt: str) -> float:
+    e_bits, m_bits, bias, flavor = MINIFLOATS[fmt]
+    total = 1 + e_bits + m_bits
+    raw &= (1 << total) - 1
+    sign = (raw >> (total - 1)) & 1
+    exp = (raw >> m_bits) & ((1 << e_bits) - 1)
+    mant = raw & ((1 << m_bits) - 1)
+    emax = (1 << e_bits) - 1
+    if exp == emax:
+        if flavor == "ieee":
+            return math.nan if mant else (-math.inf if sign else math.inf)
+        if flavor == "finite_nan" and mant == (1 << m_bits) - 1:
+            return math.nan
+    if exp == 0:
+        val = mant * 2.0 ** (1 - bias - m_bits)
+    else:
+        val = (1 + mant / (1 << m_bits)) * 2.0 ** (exp - bias)
+    return -val if sign else val
+
+
+# --------------------------------------------------------------------------
+# value/threshold tables (codec-exact quantization, vectorized)
+# --------------------------------------------------------------------------
+
+POSITS = {"posit4": (4, 1), "posit8": (8, 0), "posit16": (16, 1), "posit32": (32, 2)}
+FIXED = {"fxp4": (4, 2), "fxp8": (8, 4), "fxp16": (16, 8)}
+
+HW_FORMATS = ["fp4", "posit4", "posit8", "posit16"]
+ALL_FORMATS = ["fp32", "bf16", "fp16", "e4m3", "e5m2", "fp4",
+               "posit16", "posit8", "posit4", "fxp8", "fxp4"]
+
+
+def _decode_fn(fmt: str):
+    if fmt in MINIFLOATS:
+        return lambda b: minifloat_decode(b, fmt)
+    if fmt in POSITS:
+        n, es = POSITS[fmt]
+        return lambda b: posit_decode(b, n, es)
+    if fmt in FIXED:
+        n, frac = FIXED[fmt]
+
+        def dec(b):
+            m = (1 << n) - 1
+            v = b & m
+            if v & (1 << (n - 1)):
+                v -= 1 << n
+            return v / (1 << frac)
+
+        return dec
+    raise ValueError(f"unknown format {fmt}")
+
+
+@functools.lru_cache(maxsize=None)
+def tables(fmt: str) -> tuple[np.ndarray, np.ndarray]:
+    """(pos_vals, thresholds): non-negative representable values
+    (ascending, from 0) and decision thresholds between them, matching
+    `rust/src/arith/tables.rs` exactly.
+
+    * posits: the threshold between adjacent bodies i, i+1 under
+      bit-string RNE is the value of the guard-bit midpoint — i.e. the
+      (n+1)-bit posit with body `2i+1`; an exact tie keeps the body with
+      even LSB. Non-zero values never round to zero (minpos clamp), so
+      the 0→minpos threshold is the smallest positive double.
+    * minifloats / fixed point: value midpoints with ties to the even
+      encoding (== even index in the value grid, since every exponent
+      block holds an even count of values).
+    """
+    if fmt == "fp32":
+        raise ValueError("fp32 is identity")
+    if fmt in POSITS:
+        n, es = POSITS[fmt]
+        if n > 16:
+            raise ValueError(f"{fmt}: tables only for <=16-bit formats")
+        bodies = np.arange(1, 1 << (n - 1))
+        pos_vals = np.array(
+            [0.0] + [posit_decode(int(b), n, es) for b in bodies], dtype=np.float64
+        )
+        thresholds = np.empty(len(pos_vals) - 1, dtype=np.float64)
+        thresholds[0] = 5e-324  # anything > 0 rounds to minpos
+        for i in range(1, len(pos_vals) - 1):
+            mid = posit_decode(2 * i + 1, n + 1, es)
+            # tie keeps even body: body i even → tie stays at i → the
+            # round-up threshold is just above mid
+            thresholds[i] = np.nextafter(mid, np.inf) if i % 2 == 0 else mid
+        return pos_vals, thresholds
+
+    bits = {"fp4": 4, "e4m3": 8, "e5m2": 8, "fp16": 16, "bf16": 16}.get(fmt)
+    if bits is None:
+        bits = FIXED[fmt][0]
+    dec = _decode_fn(fmt)
+    vals = set()
+    for b in range(1 << bits):
+        v = dec(b)
+        if not math.isnan(v) and not math.isinf(v) and v >= 0.0:
+            vals.add(v)
+    pos_vals = np.array(sorted(vals | {0.0}), dtype=np.float64)
+    thresholds = np.empty(len(pos_vals) - 1, dtype=np.float64)
+    for i in range(len(pos_vals) - 1):
+        lo, hi = pos_vals[i], pos_vals[i + 1]
+        mid = (lo + hi) / 2.0
+        # tie → even index: if lo's index (i) is even, ties stay at lo
+        thresholds[i] = np.nextafter(mid, np.inf) if i % 2 == 0 else mid
+    return pos_vals, thresholds
+
+
+def quantize_np(x: np.ndarray, fmt: str) -> np.ndarray:
+    """Codec-exact fake quantization (numpy, for tests/offline)."""
+    if fmt == "fp32":
+        return np.asarray(x, dtype=np.float32).astype(np.float64)
+    pos_vals, thr = tables(fmt)
+    a = np.abs(x)
+    idx = np.searchsorted(thr, a, side="right")
+    q = pos_vals[idx]
+    return np.where(np.signbit(x), -q, q)
+
+
+def quantize_jnp(x: jnp.ndarray, fmt: str) -> jnp.ndarray:
+    """Codec-exact fake quantization as a jax op (no gradient)."""
+    if fmt == "fp32":
+        return x
+    pos_vals, thr = tables(fmt)
+    pv = jnp.asarray(pos_vals, dtype=x.dtype)
+    th = jnp.asarray(thr, dtype=x.dtype)
+    idx = jnp.searchsorted(th, jnp.abs(x), side="right")
+    q = pv[idx]
+    return jnp.where(jnp.signbit(x), -q, q)
+
+
+# largest finite value per format (for range-fit scaling)
+FMT_MAX = {
+    "fp4": 6.0, "e4m3": 448.0, "e5m2": 57344.0,
+    "fxp4": 1.75, "fxp8": 127.0 / 16.0, "fxp16": 32767.0 / 256.0,
+    "posit4": 16.0, "posit8": 64.0, "posit16": 2.0**28,
+    "fp16": 65504.0, "bf16": 3.389e38,
+}
+
+#: formats that need range-fit scaling (narrow dynamic range)
+_RANGE_FIT = {"fp4", "fxp4", "fxp8", "fxp16", "e4m3", "e5m2"}
+#: tapered-precision formats, centered at 1.0 where resolution peaks
+_CENTER = {"posit4", "posit8", "posit16", "posit32"}
+
+
+def scale_for(x, fmt: str) -> float:
+    """Host-side (numpy) per-tensor power-of-two scale — paper eq. (3)
+    restricted to powers of two so hardware folds the scale into the
+    exponent path. Range-fit for narrow formats (max|x| → format max),
+    magnitude-centering for posits (tapered precision peaks at 1.0).
+    Mirrored by `rust/src/models/exec.rs::scale_for` and by
+    :func:`dyn_scale` inside traced graphs."""
+    if fmt == "fp32" or fmt in ("fp16", "bf16"):
+        return 1.0
+    ax = np.abs(np.asarray(x, dtype=np.float64))
+    if ax.size == 0:
+        return 1.0
+    if fmt in _RANGE_FIT:
+        m = float(ax.max())
+        if m == 0.0:
+            return 1.0
+        return 2.0 ** round(math.log2(m / FMT_MAX[fmt]))
+    m = float(ax.mean())
+    if m == 0.0:
+        return 1.0
+    return 2.0 ** round(math.log2(m))
+
+
+def dyn_scale(x: jnp.ndarray, fmt: str) -> jnp.ndarray:
+    """In-graph version of :func:`scale_for` (works on tracers, so
+    activation scales are computed dynamically — the input-processing
+    stage's exponent-offset register)."""
+    if fmt == "fp32" or fmt in ("fp16", "bf16"):
+        return jnp.float32(1.0)
+    ax = jnp.abs(x)
+    if fmt in _RANGE_FIT:
+        m = jnp.max(ax)
+        s = jnp.exp2(jnp.round(jnp.log2(jnp.maximum(m, 1e-12) / FMT_MAX[fmt])))
+        return jnp.where(m > 0, s, 1.0).astype(x.dtype)
+    m = jnp.mean(ax)
+    s = jnp.exp2(jnp.round(jnp.log2(jnp.maximum(m, 1e-12))))
+    return jnp.where(m > 0, s, 1.0).astype(x.dtype)
+
+
+def scaled_quantize_jnp(x: jnp.ndarray, fmt: str, scale) -> jnp.ndarray:
+    """`s · Q(x / s)` — codec-exact, no gradient."""
+    if fmt == "fp32":
+        return x
+    return scale * quantize_jnp(x / scale, fmt)
+
+
+def fake_quant(x: jnp.ndarray, fmt: str) -> jnp.ndarray:
+    """Straight-through-estimator fake quantization (QAT) with the
+    dynamic per-tensor pow-2 scale."""
+    if fmt == "fp32":
+        return x
+    s = dyn_scale(jax.lax.stop_gradient(x), fmt)
+    q = scaled_quantize_jnp(x, fmt, s)
+    return x + jax.lax.stop_gradient(q - x)
+
+
+# --------------------------------------------------------------------------
+# PACT (eqs. 6-7)
+# --------------------------------------------------------------------------
+
+
+def pact(x: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (6): y = 0.5 (|x| - |x - α| + α) == clip(x, 0, α)."""
+    return 0.5 * (jnp.abs(x) - jnp.abs(x - alpha) + alpha)
+
+
+def pact_quantize(x: jnp.ndarray, alpha: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Eq. (7) with STE on the rounding."""
+    y = pact(x, alpha)
+    levels = (1 << n_bits) - 1
+    q = jnp.round(y * levels / alpha) * alpha / levels
+    return y + jax.lax.stop_gradient(q - y)
+
+
+# --------------------------------------------------------------------------
+# entropy clipping (eqs. 3-5) — offline, numpy
+# --------------------------------------------------------------------------
+
+
+def scale_k(w: np.ndarray, n_bits: int) -> float:
+    """Eq. (3)."""
+    mean_abs = float(np.mean(np.abs(w))) if w.size else 1.0
+    return max(mean_abs * (2.0**n_bits - 1.0) / 2.0 ** (n_bits - 1), 1e-12)
+
+
+def entropy_fit(w: np.ndarray, n_bits: int) -> tuple[float, float, float]:
+    """Fit (k, w_l, w_h) by scanning tail-clip candidates for maximum
+    bin entropy (mirror of rust/src/quant/entropy.rs)."""
+    k = scale_k(w, n_bits)
+    if w.size == 0:
+        return k, -1.0, 1.0
+    wn = np.sort(w.astype(np.float64) / k)
+    best = (-np.inf, wn[0], wn[-1])
+    bins = 1 << n_bits
+    for tail in (0.0, 0.001, 0.005, 0.01, 0.025, 0.05):
+        lo = wn[int(round((len(wn) - 1) * tail))]
+        hi = wn[int(round((len(wn) - 1) * (1 - tail)))]
+        if hi - lo < 1e-9:
+            continue
+        clipped = np.clip(wn, lo, hi)
+        b = np.round((clipped - lo) / (hi - lo) * (bins - 1)).astype(int)
+        hist = np.bincount(b, minlength=bins)
+        p = hist[hist > 0] / len(wn)
+        h = float(-(p * np.log2(p)).sum())
+        if h > best[0]:
+            best = (h, lo, hi)
+    return k, best[1], best[2]
+
+
+def entropy_quantize(w: np.ndarray, n_bits: int) -> np.ndarray:
+    """Eqs. (4)+(5) (returns to weight space)."""
+    k, lo, hi = entropy_fit(w, n_bits)
+    levels = (1 << n_bits) - 1
+    c = np.clip(w / k, lo, hi)
+    w_hat = np.round((c - lo) * levels / (hi - lo))
+    return (w_hat * (hi - lo) / levels + lo) * k
+
+
+# --------------------------------------------------------------------------
+# sensitivity metric (eqs. 1-2) — offline, numpy
+# --------------------------------------------------------------------------
+
+
+def distortion(w: np.ndarray, fmt: str) -> float:
+    return float(np.linalg.norm(quantize_np(w, fmt) - w))
+
+
+def sensitivity(w: np.ndarray, g: np.ndarray, current: str, cand: str) -> float:
+    """Eq. (1)."""
+    if w.size == 0:
+        return 0.0
+    d_cur = distortion(w, current)
+    d_cand = distortion(w, cand)
+    return (d_cur - d_cand) * float(np.linalg.norm(g)) / w.size
+
+
+def layer_cost_low(w: np.ndarray, g: np.ndarray, fmt4: str = "fp4") -> float:
+    """Gradient-weighted 4-bit distortion — the planner's ranking key
+    (mirror of rust LayerSensitivity::cost_low)."""
+    if w.size == 0:
+        return 0.0
+    return distortion(w, fmt4) * float(np.linalg.norm(g)) / w.size
+
+
+def plan_formats(
+    weights: list[np.ndarray],
+    grads: list[np.ndarray],
+    avg_bits_budget: float,
+    base4: str = "fp4",
+    pin_high: tuple[int, ...] = (),
+) -> list[str]:
+    """Budgeted 4→8→16 promotion, mirror of rust/src/quant/policy.rs."""
+    fmt_bits = {"fp4": 4, "posit4": 4, "posit8": 8, "posit16": 16}
+    ladder = {"fp4": "posit8", "posit4": "posit8", "posit8": "posit16"}
+    params = [w.size for w in weights]
+    fmts = [base4] * len(weights)
+    for i in pin_high:
+        fmts[i] = "posit16"
+
+    def avg_bits():
+        total = sum(params)
+        return sum(fmt_bits[f] * p for f, p in zip(fmts, params)) / max(total, 1)
+
+    order = sorted(range(len(weights)),
+                   key=lambda i: -layer_cost_low(weights[i], grads[i], base4))
+    while True:
+        promoted = False
+        for i in order:
+            if i in pin_high or fmts[i] not in ladder:
+                continue
+            old = fmts[i]
+            fmts[i] = ladder[old]
+            if avg_bits() > avg_bits_budget:
+                fmts[i] = old
+            else:
+                promoted = True
+                break
+        if not promoted:
+            return fmts

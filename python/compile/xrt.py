@@ -1,0 +1,55 @@
+"""XRT1 tensor-container IO — the Python half of `rust/src/util/io.rs`.
+
+A deliberately trivial tagged binary so the Rust runtime needs no
+zip/npz parsing:
+
+    magic  b"XRT1"
+    u32    n_tensors
+    repeat n_tensors:
+      u32 name_len, name (utf-8)
+      u32 ndim, u32 dims[ndim]
+      f32 data[prod(dims)]   (little-endian)
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"XRT1"
+
+
+def save_tensors(path: str | Path, tensors: dict[str, np.ndarray]) -> None:
+    """Write a name→array map (arrays are cast to f32)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load_tensors(path: str | Path) -> dict[str, np.ndarray]:
+    """Read a container back."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"bad magic in {path}")
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", f.read(4))
+            name = f.read(nl).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            total = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * total), dtype="<f4")
+            out[name] = data.reshape(dims).copy()
+    return out

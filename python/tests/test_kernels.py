@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE L1 correctness signal.
+
+Hypothesis sweeps shapes and formats; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mpmatmul, quantize, ref
+
+FMTS = ["fp32", "fp4", "posit4", "posit8", "posit16", "e4m3"]
+
+
+def rand(shape, seed, scale=1.0):
+    return (np.random.default_rng(seed).normal(0, scale, shape)).astype(np.float32)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_mpmatmul_matches_ref_square(fmt):
+    a = rand((32, 32), 1)
+    b = rand((32, 32), 2)
+    got = np.asarray(mpmatmul.mpmatmul(jnp.asarray(a), jnp.asarray(b), fmt))
+    want = np.asarray(ref.mpmatmul_ref(jnp.asarray(a), jnp.asarray(b), fmt))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 48),
+    n=st.integers(1, 40),
+    fmt=st.sampled_from(FMTS),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=40, deadline=None)
+def test_mpmatmul_matches_ref_hypothesis(m, k, n, fmt, seed):
+    a = rand((m, k), seed, scale=0.7)
+    b = rand((k, n), seed + 1, scale=0.7)
+    got = np.asarray(mpmatmul.mpmatmul(jnp.asarray(a), jnp.asarray(b), fmt))
+    want = np.asarray(ref.mpmatmul_ref(jnp.asarray(a), jnp.asarray(b), fmt))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_mpmatmul_blocking_invariance():
+    # different block sizes must give identical results (bit-exact
+    # accumulation order within f32 tolerance of the k-loop order change)
+    a = rand((48, 64), 3)
+    b = rand((64, 40), 4)
+    full = np.asarray(mpmatmul.mpmatmul(jnp.asarray(a), jnp.asarray(b), "posit8"))
+    tiled = np.asarray(
+        mpmatmul.mpmatmul(jnp.asarray(a), jnp.asarray(b), "posit8", bm=16, bk=16, bn=16)
+    )
+    np.testing.assert_allclose(full, tiled, rtol=1e-5, atol=1e-6)
+
+
+def test_mpmatmul_fp32_is_plain_matmul():
+    a = rand((20, 30), 5)
+    b = rand((30, 10), 6)
+    got = np.asarray(mpmatmul.mpmatmul(jnp.asarray(a), jnp.asarray(b), "fp32"))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_mpmatmul_quantizes_coarsely_at_fp4():
+    a = rand((16, 16), 7)
+    b = rand((16, 16), 8)
+    q4 = np.asarray(mpmatmul.mpmatmul(jnp.asarray(a), jnp.asarray(b), "fp4"))
+    f32 = a @ b
+    # correlated but not equal
+    assert not np.allclose(q4, f32, atol=1e-4)
+    c = np.corrcoef(q4.ravel(), f32.ravel())[0, 1]
+    assert c > 0.85, c
+
+
+@given(
+    m=st.integers(1, 64),
+    n=st.integers(1, 33),
+    fmt=st.sampled_from(["fp4", "posit8", "posit16"]),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=30, deadline=None)
+def test_quantize_kernel_matches_ref(m, n, fmt, seed):
+    x = rand((m, n), seed, scale=2.0)
+    got = np.asarray(quantize.quantize(jnp.asarray(x), fmt))
+    want = np.asarray(ref.quantize_ref(jnp.asarray(x), fmt))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_vmem_budget_documented_blocks():
+    # default 128-blocks stay far under a 16 MiB VMEM budget
+    assert mpmatmul.vmem_bytes(128, 128, 128, "posit16") < 16 * 2**20
+    assert mpmatmul.vmem_bytes(128, 128, 128, "fp4") < 1 * 2**20

@@ -1,0 +1,107 @@
+"""Model graph checks: shapes, quantization hooks, rust-layout parity,
+and the Pallas-kerneled forward vs the jnp forward."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import datasets
+
+
+@pytest.fixture(scope="module")
+def keys():
+    return jax.random.split(jax.random.PRNGKey(0), 3)
+
+
+def test_effnet_shapes(keys):
+    p = M.effnet_params(keys[0])
+    x = jnp.zeros((4, 1, 16, 16))
+    out = M.effnet_forward(p, x)
+    assert out.shape == (4, 10)
+    # quantized path same shape
+    out_q = M.effnet_forward(p, x, ["fp4"] * 5)
+    assert out_q.shape == (4, 10)
+
+
+def test_gaze_shapes(keys):
+    p = M.gaze_params(keys[1])
+    out = M.gaze_forward(p, jnp.zeros((7, 16)))
+    assert out.shape == (7, 2)
+
+
+def test_ulvio_shapes(keys):
+    p = M.ulvio_params(keys[2])
+    out = M.ulvio_forward(p, jnp.zeros((3, 2, 16, 16)), jnp.zeros((3, 6)))
+    assert out.shape == (3, 6)
+
+
+def test_param_layout_matches_rust_graph(keys):
+    """Dims must agree with rust/src/models builders (HWIO conv, [in,out]
+    fc) — the contract the XRT1 container relies on."""
+    p = M.effnet_params(keys[0])
+    assert p["conv1.w"].shape == (3, 3, 1, 8)
+    assert p["conv2.w"].shape == (3, 3, 8, 16)
+    assert p["conv3.w"].shape == (3, 3, 16, 32)
+    assert p["fc1.w"].shape == (128, 64)
+    assert p["fc2.w"].shape == (64, 10)
+    u = M.ulvio_params(keys[2])
+    assert u["fc1.w"].shape == (262, 64)  # 16*4*4 + 6 IMU
+
+
+def test_quantization_changes_output(keys):
+    p = M.effnet_params(keys[0])
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (2, 1, 16, 16)).astype(np.float32))
+    a = M.effnet_forward(p, x)
+    b = M.effnet_forward(p, x, ["fp4"] * 5)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+    c = M.effnet_forward(p, x, ["posit16"] * 5)
+    # 16-bit stays close to fp32
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=0.15)
+
+
+def test_gaze_pallas_matches_jnp(keys):
+    p = M.gaze_params(keys[1])
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 0.5, (5, 16)).astype(np.float32))
+    fmts = ["posit8", "fp4", "posit16"]
+    a = np.asarray(M.gaze_forward(p, x, fmts))
+    b = np.asarray(M.gaze_forward_pallas(p, x, fmts))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_datasets_are_learnable_shapes():
+    xs, ys = datasets.shapes10(200, seed=1)
+    assert xs.shape == (200, 1, 16, 16)
+    assert set(np.unique(ys)) == set(range(10))
+    # images differ across classes
+    m0 = xs[ys == 0].mean(axis=0)
+    m1 = xs[ys == 1].mean(axis=0)
+    assert np.abs(m0 - m1).mean() > 0.05
+
+
+def test_gaze_dataset_correlates():
+    x, y = datasets.gaze(500, seed=2)
+    assert x.shape == (500, 16)
+    # pupil x landmark (index 12) correlates with yaw
+    c = np.corrcoef(x[:, 12], y[:, 0])[0, 1]
+    assert c > 0.9, c
+
+
+def test_kitti_like_structure():
+    imgs, imus, poses = datasets.kitti_like(50, seed=3)
+    assert imgs.shape == (50, 2, 16, 16)
+    assert imus.shape == (50, 6)
+    assert poses.shape == (50, 6)
+    # previous-frame stacking
+    np.testing.assert_array_equal(imgs[1, 1], imgs[0, 0])
+    # IMU tracks forward motion
+    assert np.abs(imus[:, 2] - poses[:, 2]).mean() < 0.1
+
+
+def test_mlp_shapes_and_quant(keys):
+    p = M.mlp_params(keys[0])
+    x = jnp.zeros((3, 256))
+    assert M.mlp_forward(p, x).shape == (3, 10)
+    assert M.mlp_forward(p, x, ["fp4"] * 3).shape == (3, 10)
+    assert p["fc1.w"].shape == (256, 128)  # rust models::mlp contract

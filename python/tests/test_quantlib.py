@@ -1,0 +1,212 @@
+"""quantlib correctness: codec goldens pinned against the Rust test
+suite, table/rounding semantics, STE gradients, PACT, entropy scheme,
+sensitivity metric, planner."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantlib as ql
+
+
+# ---------------------------------------------------------------- codecs
+
+# Golden vectors verified by rust/src/arith tests (posit.rs, fp.rs).
+POSIT_GOLDENS = [
+    # (bits, n, es, value)
+    (0x40, 8, 0, 1.0),
+    (0x20, 8, 0, 0.5),
+    (0x60, 8, 0, 2.0),
+    (0x01, 8, 0, 2.0**-6),
+    (0x7F, 8, 0, 64.0),
+    (0xC0, 8, 0, -1.0),
+    (0x41, 8, 0, 1.03125),
+    (0x4000, 16, 1, 1.0),
+    (0x7FFF, 16, 1, 2.0**28),
+    (0x0001, 16, 1, 2.0**-28),
+    (0x5000, 16, 1, 2.0),
+    (0x7, 4, 1, 16.0),
+    (0x1, 4, 1, 0.0625),
+]
+
+
+@pytest.mark.parametrize("bits,n,es,value", POSIT_GOLDENS)
+def test_posit_decode_goldens(bits, n, es, value):
+    assert ql.posit_decode(bits, n, es) == value
+
+
+def test_posit_nar_and_zero():
+    assert ql.posit_decode(0, 16, 1) == 0.0
+    assert math.isnan(ql.posit_decode(0x8000, 16, 1))
+    assert ql.posit_encode(0.0, 16, 1) == 0
+    assert ql.posit_encode(float("nan"), 16, 1) == 0x8000
+
+
+@pytest.mark.parametrize("n,es", [(4, 1), (8, 0), (16, 1)])
+def test_posit_roundtrip_exhaustive(n, es):
+    for b in range(1 << n):
+        v = ql.posit_decode(b, n, es)
+        if math.isnan(v) or v == 0.0:
+            continue
+        assert ql.posit_encode(v, n, es) == b, f"bits {b:#x} value {v}"
+
+
+def test_posit_bitstring_rounding_matches_rust():
+    # rust arith::tables::tests::posit4_bitstring_rounding_threshold
+    assert ql.quantize_np(np.array([9.0]), "posit4")[0] == 16.0
+    assert ql.quantize_np(np.array([7.9]), "posit4")[0] == 4.0
+
+
+def test_fp4_value_set_and_ties():
+    vals = [ql.minifloat_decode(b, "fp4") for b in range(8)]
+    assert vals == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    # ties to even (rust fp.rs::fp4_encode_rounds_to_nearest_even)
+    q = ql.quantize_np(np.array([0.25, 1.25, 1.75, 2.5, 5.0, 100.0]), "fp4")
+    assert list(q) == [0.0, 1.0, 2.0, 2.0, 4.0, 6.0]
+
+
+def test_e4m3_landmarks():
+    assert ql.minifloat_decode(0x78, "e4m3") == 256.0
+    assert math.isnan(ql.minifloat_decode(0x7F, "e4m3"))
+    assert ql.minifloat_decode(0x01, "e4m3") == 2.0**-9
+    q = ql.quantize_np(np.array([1e6]), "e4m3")
+    assert q[0] == 448.0
+
+
+@pytest.mark.parametrize("fmt", ["fp4", "posit4", "posit8", "posit16", "e4m3", "bf16"])
+def test_quantize_idempotent(fmt):
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 4, 500)
+    q1 = ql.quantize_np(x, fmt)
+    q2 = ql.quantize_np(q1, fmt)
+    np.testing.assert_array_equal(q1, q2)
+
+
+@given(st.floats(min_value=-1e4, max_value=1e4, allow_nan=False))
+@settings(max_examples=300, deadline=None)
+def test_quantize_np_matches_scalar_codec_posit8(x):
+    got = float(ql.quantize_np(np.array([x]), "posit8")[0])
+    want = ql.posit_decode(ql.posit_encode(x, 8, 0), 8, 0)
+    assert got == want
+
+
+@given(st.floats(min_value=-1e6, max_value=1e6, allow_nan=False))
+@settings(max_examples=300, deadline=None)
+def test_quantize_np_matches_scalar_codec_posit16(x):
+    got = float(ql.quantize_np(np.array([x]), "posit16")[0])
+    want = ql.posit_decode(ql.posit_encode(x, 16, 1), 16, 1)
+    assert got == want
+
+
+def test_jnp_matches_np():
+    rng = np.random.default_rng(2)
+    x = rng.normal(0, 2, 400).astype(np.float32)
+    for fmt in ["fp4", "posit8", "posit16"]:
+        a = np.asarray(ql.quantize_jnp(jnp.asarray(x), fmt))
+        b = ql.quantize_np(x.astype(np.float64), fmt).astype(np.float32)
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------- scaling
+
+def test_scale_is_power_of_two():
+    rng = np.random.default_rng(3)
+    for fmt in ["fp4", "posit8", "e4m3"]:
+        s = ql.scale_for(rng.normal(0, 0.05, 256), fmt)
+        assert s > 0
+        assert math.log2(s) == round(math.log2(s))
+
+
+def test_scaled_quant_preserves_small_weights():
+    rng = np.random.default_rng(4)
+    w = rng.normal(0, 0.05, 1024)
+    s = ql.scale_for(w, "fp4")
+    q = s * ql.quantize_np(w / s, "fp4")
+    # without scaling everything dies to 0; with scaling most survives
+    assert np.mean(q != 0) > 0.5
+    assert np.corrcoef(w, q)[0, 1] > 0.95
+
+
+def test_dyn_scale_matches_host_scale():
+    rng = np.random.default_rng(5)
+    x = rng.normal(0, 0.3, 512).astype(np.float32)
+    for fmt in ["fp4", "posit8", "posit16"]:
+        a = float(ql.dyn_scale(jnp.asarray(x), fmt))
+        b = ql.scale_for(x, fmt)
+        assert a == pytest.approx(b, rel=1e-6), fmt
+
+
+# ---------------------------------------------------------------- STE/PACT
+
+def test_fake_quant_ste_gradient_is_identity():
+    def f(x):
+        return jnp.sum(ql.fake_quant(x, "fp4") ** 2)
+
+    x = jnp.asarray(np.random.default_rng(6).normal(0, 0.2, 64).astype(np.float32))
+    g = jax.grad(f)(x)
+    q = ql.fake_quant(x, "fp4")
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * q), rtol=1e-5)
+
+
+def test_pact_equals_clipped_relu():
+    x = jnp.linspace(-3, 8, 101)
+    y = ql.pact(x, jnp.float32(4.0))
+    np.testing.assert_allclose(np.asarray(y), np.clip(np.asarray(x), 0, 4), atol=1e-6)
+
+
+def test_pact_quantize_grid():
+    x = jnp.linspace(-1, 6, 57)
+    q = np.asarray(ql.pact_quantize(x, jnp.float32(4.0), 4))
+    step = 4.0 / 15
+    np.testing.assert_allclose(q / step, np.round(q / step), atol=1e-5)
+    assert q.min() >= 0 and q.max() <= 4.0
+
+
+def test_pact_alpha_gradient_flows():
+    def f(alpha, x):
+        return jnp.sum(ql.pact_quantize(x, alpha, 4))
+
+    g = jax.grad(f)(jnp.float32(2.0), jnp.asarray([1.0, 3.0, 5.0]))
+    # x >= α contributes dα = 1 (two elements)
+    assert float(g) == pytest.approx(2.0, abs=0.3)
+
+
+# ---------------------------------------------------------------- entropy / sensitivity / planner
+
+def test_entropy_quantize_reduces_outlier_damage():
+    rng = np.random.default_rng(7)
+    w = rng.normal(0, 0.2, 4096)
+    w[0], w[1] = 50.0, -50.0
+    q = ql.entropy_quantize(w, 4)
+    bulk_err = np.sqrt(np.mean((q[2:] - w[2:]) ** 2))
+    assert bulk_err < 0.1
+
+
+def test_scale_k_eq3():
+    w = np.array([1.0, -1.0, 1.0, -1.0])
+    assert ql.scale_k(w, 4) == pytest.approx(15 / 8)
+
+
+def test_sensitivity_sign():
+    rng = np.random.default_rng(8)
+    w = rng.normal(0, 0.5, 256)
+    g = rng.normal(0, 0.1, 256)
+    assert ql.sensitivity(w, g, "fp4", "posit16") > 0
+    assert ql.sensitivity(w, g, "posit16", "fp4") < 0
+
+
+def test_planner_budget_and_pins():
+    rng = np.random.default_rng(9)
+    ws = [rng.normal(0, 2.0, 512), rng.normal(0, 0.1, 4096), rng.normal(0, 0.1, 64)]
+    gs = [np.ones(512), 0.01 * np.ones(4096), np.ones(64)]
+    fmts = ql.plan_formats(ws, gs, avg_bits_budget=6.0, pin_high=(2,))
+    assert fmts[2] == "posit16"
+    bits = {"fp4": 4, "posit4": 4, "posit8": 8, "posit16": 16}
+    avg = sum(bits[f] * w.size for f, w in zip(fmts, ws)) / sum(w.size for w in ws)
+    assert avg <= 6.0 + 1e-9
+    # the fragile wide layer promoted before the robust big one
+    assert bits[fmts[0]] >= bits[fmts[1]]

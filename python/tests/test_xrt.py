@@ -1,0 +1,55 @@
+"""XRT1 container round-trip + artifact presence checks."""
+
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import xrt
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_roundtrip(tmp_path):
+    t = {
+        "a.w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([1.5], dtype=np.float32),
+        "deep": np.zeros((2, 3, 4, 5), dtype=np.float32),
+    }
+    p = tmp_path / "t.bin"
+    xrt.save_tensors(p, t)
+    back = xrt.load_tensors(p)
+    assert set(back) == set(t)
+    for k in t:
+        np.testing.assert_array_equal(back[k], t[k])
+
+
+def test_bad_magic(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOPE\x00\x00\x00\x00")
+    with pytest.raises(ValueError):
+        xrt.load_tensors(p)
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+def test_artifacts_complete():
+    import json
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    for name in ["effnet_fp32.hlo.txt", "effnet_mxp.hlo.txt", "gaze_mxp_pallas.hlo.txt",
+                 "ulvio_mxp.hlo.txt", "mpmatmul_posit8.hlo.txt"]:
+        assert name in manifest["models"], name
+    for name in ["weights_effnet.bin", "weights_ulvio.bin", "weights_gaze.bin"]:
+        assert name in manifest["weights"]
+    for name in ["eval_shapes.bin", "eval_gaze.bin", "eval_vio.bin"]:
+        assert name in manifest["eval_sets"]
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "weights_effnet.bin").exists(),
+                    reason="run `make artifacts` first")
+def test_exported_weights_shape_contract():
+    w = xrt.load_tensors(ARTIFACTS / "weights_effnet.bin")
+    assert w["conv1.w"].shape == (3, 3, 1, 8)
+    assert w["fc2.w"].shape == (64, 10)
+    assert "conv1.g" in w  # gradients for the sensitivity planner
+    assert w["act1.alpha"].shape == (1,)

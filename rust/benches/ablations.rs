@@ -1,0 +1,125 @@
+//! Ablations over the design choices DESIGN.md calls out — the paper's
+//! implicit "why this microarchitecture" arguments, made quantitative:
+//!
+//! 1. RMMEC reconfigurable pool  vs dedicated per-precision multipliers
+//! 2. zero power gating          on vs off (energy on real activations)
+//! 3. quire accumulation         vs rounded per-MAC accumulation (accuracy)
+//! 4. per-tensor pow-2 scaling   vs raw format range (accuracy)
+//! 5. output-stationary          vs weight-stationary dataflow (traffic)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use xr_npe::arith::{tables, Precision, Quire, Decoded};
+use xr_npe::array::{dataflow_cost, Dataflow};
+use xr_npe::coordinator::scheduler::ModelInstance;
+use xr_npe::energy::AsicModel;
+use xr_npe::npe::PrecSel;
+use xr_npe::util::Rng;
+
+fn main() {
+    println!("== ablations over XR-NPE design choices ==\n");
+
+    // ---- 1. RMMEC vs dedicated multiplier banks ----
+    let ours = AsicModel::xr_npe();
+    let base = AsicModel::dedicated_baseline();
+    println!("-- 1. RMMEC reconfigurable pool vs dedicated banks --");
+    println!("  area:        {:.4} vs {:.4} mm2  ({:.2}x)", ours.area_mm2(), base.area_mm2(),
+        base.area_mm2() / ours.area_mm2());
+    for sel in PrecSel::ALL {
+        println!("  {:?}: {:.2} vs {:.2} pJ/MAC ({:.2}x)", sel,
+            ours.energy_per_mac_pj(sel, 0.72, 0.0),
+            base.energy_per_mac_baseline_pj(sel),
+            base.energy_per_mac_baseline_pj(sel) / ours.energy_per_mac_pj(sel, 0.72, 0.0));
+    }
+
+    // ---- 2. zero gating on/off with REAL activation sparsity ----
+    println!("\n-- 2. zero power gating (real post-PACT activations) --");
+    if common::have_artifacts() {
+        let inst = ModelInstance::uniform(
+            common::graph_of("effnet"),
+            xr_npe::artifacts::weights("effnet").unwrap(),
+            PrecSel::Fp4x4,
+        );
+        let eval = xr_npe::artifacts::eval_shapes().unwrap();
+        let mut soc = xr_npe::soc::Soc::new(xr_npe::soc::SocConfig::default());
+        for img in eval.images.iter().take(10) {
+            let _ = inst.infer(&mut soc, img, &[]).unwrap();
+        }
+        let stats = &soc.lifetime.array.stats;
+        let gating = stats.gating_ratio();
+        let e_gated = ours.energy_from_stats_pj(PrecSel::Fp4x4, stats);
+        // "no gating": every gated MAC charged as a live one
+        let mut no_gate = *stats;
+        no_gate.blocks_switched += no_gate.gated_macs
+            * xr_npe::npe::rmmec::blocks_for_width(4) as u64 / 2;
+        no_gate.gated_macs = 0;
+        let e_ungated = ours.energy_from_stats_pj(PrecSel::Fp4x4, &no_gate);
+        println!("  measured zero-operand MAC ratio: {:.1}%", 100.0 * gating);
+        println!("  energy with gating: {:.1} nJ | without: {:.1} nJ  (saves {:.1}%)",
+            e_gated / 1e3, e_ungated / 1e3, 100.0 * (1.0 - e_gated / e_ungated));
+    } else {
+        println!("  (needs artifacts)");
+    }
+
+    // ---- 3. quire vs per-MAC rounding ----
+    println!("\n-- 3. quire accumulation vs per-MAC rounded accumulation --");
+    let mut rng = Rng::new(31);
+    for (prec, k) in [(Precision::Posit8, 256), (Precision::Fp4, 256), (Precision::Posit16, 1024)] {
+        let t = tables::table(prec);
+        let mut err_quire = 0f64;
+        let mut err_round = 0f64;
+        let trials = 200;
+        for _ in 0..trials {
+            let mut q = Quire::new();
+            let mut acc_rounded = 0f64;
+            let mut exact = 0f64;
+            for _ in 0..k {
+                let a = t.quantize(rng.normal() * 0.5);
+                let b = t.quantize(rng.normal() * 0.5);
+                exact += a * b;
+                q.add_product(Decoded::from_f64(a), Decoded::from_f64(b));
+                // non-quire datapath: round the running sum every MAC
+                acc_rounded = t.quantize(acc_rounded + t.quantize(a * b));
+            }
+            let qv = t.quantize(q.to_f64()); // single final rounding
+            err_quire += (qv - exact).abs();
+            err_round += (acc_rounded - exact).abs();
+        }
+        println!("  {:<11} K={k}: |err| quire {:.4} vs rounded {:.4}  ({:.0}x better)",
+            prec.name(), err_quire / trials as f64, err_round / trials as f64,
+            err_round / err_quire.max(1e-12));
+    }
+
+    // ---- 4. pow-2 scaling vs raw range ----
+    println!("\n-- 4. per-tensor pow-2 scaling vs raw format range (FP4 weights) --");
+    let mut rng = Rng::new(32);
+    let w: Vec<f32> = (0..4096).map(|_| (rng.normal() * 0.05) as f32).collect();
+    let t = tables::table(Precision::Fp4);
+    let s = xr_npe::models::exec::scale_for(&w, Precision::Fp4);
+    let (mut e_raw, mut e_scaled, mut zeros_raw) = (0f64, 0f64, 0usize);
+    for &x in &w {
+        let raw = t.quantize(x as f64);
+        let sc = s * t.quantize(x as f64 / s);
+        e_raw += (raw - x as f64).powi(2);
+        e_scaled += (sc - x as f64).powi(2);
+        zeros_raw += (raw == 0.0) as usize;
+    }
+    println!("  N(0, 0.05) weights: raw kills {:.1}% to zero; RMS err {:.4} vs {:.5} scaled ({:.0}x)",
+        100.0 * zeros_raw as f64 / w.len() as f64,
+        (e_raw / w.len() as f64).sqrt(),
+        (e_scaled / w.len() as f64).sqrt(),
+        (e_raw / e_scaled).sqrt());
+
+    // ---- 5. dataflow ----
+    println!("\n-- 5. output-stationary vs weight-stationary (8x8, posit16) --");
+    println!("  {:<26} {:>10} {:>12} {:>11} {:>13}", "GEMM", "OS cycles", "WS cycles", "WS psum", "WS spills");
+    for (m, k, n) in [(64, 64, 64), (32, 1024, 32), (256, 16, 256), (64, 262, 64)] {
+        let os = dataflow_cost(Dataflow::OutputStationary, m, k, n, 8, 8, PrecSel::Posit16x1);
+        let ws = dataflow_cost(Dataflow::WeightStationary, m, k, n, 8, 8, PrecSel::Posit16x1);
+        println!("  {m:>4}x{k:>4}x{n:<4}              {:>10} {:>12} {:>11} {:>13}",
+            os.cycles, ws.cycles, ws.psum_words, ws.quire_spill_rounds);
+    }
+    println!("\n  OS keeps every dot product in one quire (zero spill roundings),");
+    println!("  which is why the paper pairs output-stationary with the quire.");
+}

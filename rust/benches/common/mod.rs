@@ -1,0 +1,151 @@
+//! Shared helpers for the table/figure benches (no criterion in the
+//! offline image — a thin timing harness + workload evaluators).
+
+#![allow(dead_code)]
+
+use xr_npe::artifacts;
+use xr_npe::coordinator::scheduler::ModelInstance;
+use xr_npe::models::{effnet, gaze, mlp, ulvio, ModelGraph};
+use xr_npe::npe::PrecSel;
+use xr_npe::soc::{Soc, SocConfig};
+use xr_npe::util::argmax;
+use xr_npe::util::io::TensorMap;
+use xr_npe::vio::odometry::{self, RelPose};
+
+/// Measure wall time of `f` over `iters` runs; returns ns/iter.
+pub fn time_ns(iters: u32, mut f: impl FnMut()) -> f64 {
+    // warmup
+    f();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+pub fn fmt_of(sel: PrecSel) -> &'static str {
+    match sel {
+        PrecSel::Fp4x4 => "fp4",
+        PrecSel::Posit4x4 => "posit4",
+        PrecSel::Posit8x2 => "posit8",
+        PrecSel::Posit16x1 => "posit16",
+    }
+}
+
+/// Weights for a model at a mode: QAT variant when exported, else FP32.
+pub fn weights_for(model: &str, sel: PrecSel) -> TensorMap {
+    artifacts::weights_qat(model, fmt_of(sel))
+        .or_else(|_| artifacts::weights(model))
+        .expect("run `make artifacts` first")
+}
+
+pub fn graph_of(model: &str) -> ModelGraph {
+    match model {
+        "effnet" => effnet::build(),
+        "gaze" => gaze::build(),
+        "ulvio" => ulvio::build(),
+        "mlp" => mlp::build(),
+        _ => panic!("unknown model {model}"),
+    }
+}
+
+/// Classification accuracy of a model instance on the NPE simulator.
+/// (`flatten` feeds the image as a flat vector — the MLP workload.)
+pub fn cls_accuracy_npe(inst: &ModelInstance, n: usize) -> f64 {
+    let eval = artifacts::eval_shapes().expect("eval_shapes");
+    let n = n.min(eval.images.len());
+    let mut soc = Soc::new(SocConfig::default());
+    let mut ok = 0usize;
+    for i in 0..n {
+        let (out, _) = inst.infer(&mut soc, &eval.images[i], &[]).unwrap();
+        ok += (argmax(&out) == eval.labels[i]) as usize;
+    }
+    ok as f64 / n as f64
+}
+
+/// Classification accuracy of the FP32 reference path.
+pub fn cls_accuracy_ref(inst: &ModelInstance, n: usize) -> f64 {
+    let eval = artifacts::eval_shapes().expect("eval_shapes");
+    let n = n.min(eval.images.len());
+    let mut ok = 0usize;
+    for i in 0..n {
+        let out = inst.infer_ref(&eval.images[i], &[]).unwrap();
+        ok += (argmax(&out) == eval.labels[i]) as usize;
+    }
+    ok as f64 / n as f64
+}
+
+/// Gaze MSE on the NPE simulator.
+pub fn gaze_mse_npe(inst: &ModelInstance, n: usize) -> f64 {
+    let eval = artifacts::eval_gaze().expect("eval_gaze");
+    let n = n.min(eval.landmarks.len());
+    let mut soc = Soc::new(SocConfig::default());
+    let mut se = 0f64;
+    for i in 0..n {
+        let (out, _) = inst.infer(&mut soc, &eval.landmarks[i], &[]).unwrap();
+        let t = eval.gaze[i];
+        se += ((out[0] - t[0]).powi(2) + (out[1] - t[1]).powi(2)) as f64 / 2.0;
+    }
+    se / n as f64
+}
+
+pub fn gaze_mse_ref(inst: &ModelInstance, n: usize) -> f64 {
+    let eval = artifacts::eval_gaze().expect("eval_gaze");
+    let n = n.min(eval.landmarks.len());
+    let mut se = 0f64;
+    for i in 0..n {
+        let out = inst.infer_ref(&eval.landmarks[i], &[]).unwrap();
+        let t = eval.gaze[i];
+        se += ((out[0] - t[0]).powi(2) + (out[1] - t[1]).powi(2)) as f64 / 2.0;
+    }
+    se / n as f64
+}
+
+/// VIO (t_rmse %, r_rmse deg) on the NPE simulator over the eval
+/// sequence.
+pub fn vio_rmse_npe(inst: &ModelInstance, n: usize) -> (f64, f64) {
+    let eval = artifacts::eval_vio().expect("eval_vio");
+    let n = n.min(eval.images.len());
+    let mut soc = Soc::new(SocConfig::default());
+    let mut pred: Vec<RelPose> = Vec::with_capacity(n);
+    for i in 0..n {
+        let (out, _) = inst.infer(&mut soc, &eval.images[i], &eval.imu[i]).unwrap();
+        let mut p = [0f32; 6];
+        p.copy_from_slice(&out[..6]);
+        pred.push(p);
+    }
+    let gt = &eval.poses[..n];
+    (odometry::rmse_translation(&pred, gt), odometry::rmse_rotation_deg(&pred, gt))
+}
+
+pub fn vio_rmse_ref(inst: &ModelInstance, n: usize) -> (f64, f64) {
+    let eval = artifacts::eval_vio().expect("eval_vio");
+    let n = n.min(eval.images.len());
+    let mut pred: Vec<RelPose> = Vec::with_capacity(n);
+    for i in 0..n {
+        let out = inst.infer_ref(&eval.images[i], &eval.imu[i]).unwrap();
+        let mut p = [0f32; 6];
+        p.copy_from_slice(&out[..6]);
+        pred.push(p);
+    }
+    let gt = &eval.poses[..n];
+    (odometry::rmse_translation(&pred, gt), odometry::rmse_rotation_deg(&pred, gt))
+}
+
+/// Pull a python-side (emulated software framework) metric for formats
+/// the NPE has no native mode for.
+pub fn py_metric(model: &str, key: &str) -> Option<f64> {
+    let j = artifacts::metrics_json().ok()?;
+    artifacts::metric_f64(&j, model, key)
+}
+
+pub fn have_artifacts() -> bool {
+    artifacts::dir().join("manifest.json").exists()
+}
+
+pub fn require_artifacts() {
+    if !have_artifacts() {
+        eprintln!("ERROR: artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+}

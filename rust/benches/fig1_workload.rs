@@ -1,0 +1,95 @@
+//! Fig. 1 — workload analysis for application runtime: the perception
+//! pipeline dominates (~60%) XR application runtime.
+//!
+//! Reproduced by driving the full perception pipeline (VIO + gaze +
+//! classification on the simulated co-processor) against host-stage
+//! budgets calibrated at the FP32-equivalent operating point, then
+//! *measuring* the same breakdown under the layer-adaptive MxP plan —
+//! showing how XR-NPE's 4-bit throughput shrinks the perception share.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use xr_npe::coordinator::scheduler::ModelInstance;
+use xr_npe::coordinator::{PerceptionPipeline, PipelineConfig, Router, WorkloadKind};
+use xr_npe::npe::PrecSel;
+use xr_npe::quant::PlanBudget;
+use xr_npe::soc::SocConfig;
+
+const FRAMES: usize = 60;
+
+fn router_with(sel_vio: PrecSel, sel_gaze: PrecSel, sel_cls: PrecSel, mxp: bool) -> Router {
+    let mut r = Router::new(1, SocConfig::default());
+    let mk = |model: &str, sel: PrecSel| {
+        if mxp {
+            ModelInstance::planned(
+                common::graph_of(model),
+                xr_npe::artifacts::weights(model).unwrap(),
+                PlanBudget { avg_bits: 6.0 },
+                PrecSel::Fp4x4,
+                model == "ulvio",
+            )
+        } else {
+            ModelInstance::uniform(common::graph_of(model), common::weights_for(model, sel), sel)
+        }
+    };
+    r.register(WorkloadKind::Vio, mk("ulvio", sel_vio));
+    r.register(WorkloadKind::Gaze, mk("gaze", sel_gaze));
+    r.register(WorkloadKind::Classify, mk("effnet", sel_cls));
+    r
+}
+
+fn main() {
+    common::require_artifacts();
+    let eval = xr_npe::artifacts::eval_vio().unwrap();
+    let gaze_eval = xr_npe::artifacts::eval_gaze().unwrap();
+    let n = FRAMES.min(eval.images.len()).min(gaze_eval.landmarks.len());
+    let frames: Vec<xr_npe::vio::Frame> = (0..n)
+        .map(|i| xr_npe::vio::Frame {
+            image: eval.images[i].clone(),
+            imu: eval.imu[i].clone(),
+            rel_pose: eval.poses[i],
+        })
+        .collect();
+    let gaze_in: Vec<Vec<f32>> = (0..n).map(|i| gaze_eval.landmarks[i].clone()).collect();
+
+    // baseline operating point: everything at 16-bit (the "existing
+    // accelerator" Aspen characterizes) → calibrate host stages to 60%
+    let hi = PrecSel::Posit16x1;
+    let mut base_router = router_with(hi, hi, hi, false);
+    let probe = PerceptionPipeline::new(PipelineConfig {
+        visual_cycles: 0,
+        audio_cycles: 0,
+        other_cycles: 0,
+        classify_every: 5,
+    });
+    let base = probe.run(&mut base_router, &frames, &gaze_in).unwrap();
+    let per_frame = base.breakdown.perception_cycles() / n as u64;
+    let cfg = PipelineConfig::calibrated_to(per_frame);
+
+    println!("== Fig. 1: application runtime breakdown ==");
+    for (label, mxp) in [("16-bit perception (baseline accelerator)", false), ("layer-adaptive MxP on XR-NPE", true)] {
+        let mut router = if mxp {
+            router_with(hi, hi, hi, true)
+        } else {
+            router_with(hi, hi, hi, false)
+        };
+        let pipe = PerceptionPipeline::new(cfg);
+        let rep = pipe.run(&mut router, &frames, &gaze_in).unwrap();
+        println!("\n-- {label} --");
+        for (name, cyc, frac) in rep.breakdown.rows() {
+            let bar = "#".repeat((frac * 50.0).round() as usize);
+            println!("  {name:<28} {:>5.1}% {bar}", frac * 100.0);
+            let _ = cyc;
+        }
+        println!(
+            "  perception share: {:.1}%   frame p99 {:.2} ms @250MHz ({:.0} fps)",
+            rep.breakdown.perception_fraction() * 100.0,
+            rep.frame_latency.p99() as f64 / 250e6 * 1e3,
+            rep.frame_latency.fps(250e6)
+        );
+    }
+    println!("\n(paper/Aspen: perception ~60% of runtime at the baseline point;");
+    println!(" MxP shrinks the perception share, freeing headroom for the 630-FPS-class");
+    println!(" targets Aspen reports.)");
+}

@@ -1,0 +1,86 @@
+//! Fig. 5 — object-classification accuracy per precision vs the FP32
+//! baseline and the FxP SoTA ([11]) implementation.
+//!
+//! Hardware modes (FP4, Posit-4/8/16) run **on the bit-accurate NPE
+//! simulator** with QAT weights (the paper's protocol). Non-native
+//! formats (BF16/FP8/FxP…) come from the emulated software framework —
+//! exactly as in the paper ("quantized algorithmic analysis (emulated
+//! software framework)") — i.e. the python QAT/PTQ sweep recorded in
+//! `artifacts/metrics.json`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use xr_npe::coordinator::scheduler::ModelInstance;
+use xr_npe::npe::PrecSel;
+
+const EVAL_N: usize = 150;
+
+fn main() {
+    common::require_artifacts();
+    println!("== Fig. 5: EffNet-XR (shapes-10) accuracy vs precision ==\n");
+    println!("{:<22} {:>6} {:>10} {:<28}", "precision", "bits", "top-1 %", "path");
+
+    // FP32 baseline (rust reference executor)
+    let base = ModelInstance::uniform(
+        common::graph_of("effnet"),
+        xr_npe::artifacts::weights("effnet").unwrap(),
+        PrecSel::Posit16x1,
+    );
+    let fp32 = common::cls_accuracy_ref(&base, EVAL_N);
+    println!("{:<22} {:>6} {:>10.1} {:<28}", "FP32 (baseline)", 32, 100.0 * fp32, "rust f32 reference");
+
+    // software-framework rows (python emulation)
+    for (label, bits, key) in [
+        ("BF16", 16, "ptq_bf16"),
+        ("FP16", 16, "ptq_fp16"),
+        ("FP8-E4M3", 8, "ptq_e4m3"),
+        ("FP8-E5M2", 8, "ptq_e5m2"),
+        ("FxP8 (SoTA [11])", 8, "ptq_fxp8"),
+        ("FxP4 (SoTA [11])", 4, "ptq_fxp4"),
+    ] {
+        if let Some(acc) = common::py_metric("effnet", key) {
+            println!(
+                "{:<22} {:>6} {:>10.1} {:<28}",
+                label, bits, 100.0 * acc, "emulated sw framework (PTQ)"
+            );
+        }
+    }
+
+    // hardware modes on the NPE simulator, QAT weights
+    for sel in [PrecSel::Posit16x1, PrecSel::Posit8x2, PrecSel::Fp4x4, PrecSel::Posit4x4] {
+        let inst = ModelInstance::uniform(
+            common::graph_of("effnet"),
+            common::weights_for("effnet", sel),
+            sel,
+        );
+        let acc = common::cls_accuracy_npe(&inst, EVAL_N);
+        println!(
+            "{:<22} {:>6} {:>10.1} {:<28}",
+            format!("{} (QAT)", sel.precision().name()),
+            sel.precision().bits(),
+            100.0 * acc,
+            "bit-accurate NPE sim"
+        );
+    }
+
+    // PTQ collapse rows (the paper's "sensitive to quantization errors,
+    // accuracy loss up to 83%" motivation): 4-bit without QAT
+    for sel in [PrecSel::Fp4x4, PrecSel::Posit4x4] {
+        let inst = ModelInstance::uniform(
+            common::graph_of("effnet"),
+            xr_npe::artifacts::weights("effnet").unwrap(),
+            sel,
+        );
+        let acc = common::cls_accuracy_npe(&inst, EVAL_N);
+        println!(
+            "{:<22} {:>6} {:>10.1} {:<28}",
+            format!("{} (PTQ)", sel.precision().name()),
+            sel.precision().bits(),
+            100.0 * acc,
+            "bit-accurate NPE sim"
+        );
+    }
+
+    println!("\nshape to check (paper): QAT-FP4 ~ BF16/FP8 >> PTQ-4bit; posit8 lossless.");
+}

@@ -1,0 +1,113 @@
+//! Fig. 8 — comparative application accuracy for the different AI models
+//! used in XR applications, at every precision, against the FP32
+//! baseline: the full (model × precision) matrix.
+//!
+//! Metrics are normalized to "% of FP32 quality" so the three workloads
+//! (top-1 accuracy, gaze MSE, VIO t_rmse) print on one scale, like the
+//! figure's grouped bars: 100 = FP32, higher is better.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use xr_npe::coordinator::scheduler::ModelInstance;
+use xr_npe::npe::PrecSel;
+
+fn main() {
+    common::require_artifacts();
+    println!("== Fig. 8: model suite accuracy vs precision (% of FP32 quality) ==\n");
+
+    // FP32 baselines
+    let eff32 = ModelInstance::uniform(
+        common::graph_of("effnet"),
+        xr_npe::artifacts::weights("effnet").unwrap(),
+        PrecSel::Posit16x1,
+    );
+    let gz32 = ModelInstance::uniform(
+        common::graph_of("gaze"),
+        xr_npe::artifacts::weights("gaze").unwrap(),
+        PrecSel::Posit16x1,
+    );
+    let vio32 = ModelInstance::uniform(
+        common::graph_of("ulvio"),
+        xr_npe::artifacts::weights("ulvio").unwrap(),
+        PrecSel::Posit16x1,
+    );
+    let mlp32 = ModelInstance::uniform(
+        common::graph_of("mlp"),
+        xr_npe::artifacts::weights("mlp").unwrap(),
+        PrecSel::Posit16x1,
+    );
+    let acc32 = common::cls_accuracy_ref(&eff32, 120);
+    let mse32 = common::gaze_mse_ref(&gz32, 200);
+    let (t32, _) = common::vio_rmse_ref(&vio32, 200);
+    let macc32 = common::cls_accuracy_ref(&mlp32, 120);
+
+    println!(
+        "{:<22} {:>12} {:>12} {:>12} {:>12}",
+        "precision", "EffNet-XR", "GazeNet", "UL-VIO-lite", "MLP-XR"
+    );
+    println!(
+        "{:<22} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+        "FP32 (baseline)", 100.0, 100.0, 100.0, 100.0
+    );
+
+    for sel in [PrecSel::Posit16x1, PrecSel::Posit8x2, PrecSel::Fp4x4, PrecSel::Posit4x4] {
+        let eff = ModelInstance::uniform(
+            common::graph_of("effnet"),
+            common::weights_for("effnet", sel),
+            sel,
+        );
+        let gz = ModelInstance::uniform(
+            common::graph_of("gaze"),
+            common::weights_for("gaze", sel),
+            sel,
+        );
+        let vio = ModelInstance::uniform(
+            common::graph_of("ulvio"),
+            common::weights_for("ulvio", sel),
+            sel,
+        );
+        let mlp = ModelInstance::uniform(
+            common::graph_of("mlp"),
+            common::weights_for("mlp", sel),
+            sel,
+        );
+        let acc = common::cls_accuracy_npe(&eff, 120);
+        let mse = common::gaze_mse_npe(&gz, 200);
+        let (t, _) = common::vio_rmse_npe(&vio, 200);
+        let macc = common::cls_accuracy_npe(&mlp, 120);
+        // quality scores: accuracy ratio; error ratios inverted
+        println!(
+            "{:<22} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+            format!("{} (QAT, NPE)", sel.precision().name()),
+            100.0 * acc / acc32,
+            100.0 * (mse32 / mse).min(1.2),
+            100.0 * (t32 / t).min(1.2),
+            100.0 * macc / macc32
+        );
+    }
+
+    // software-framework rows for the non-native formats
+    for (label, ek, gk) in [
+        ("BF16 (sw)", "ptq_bf16", "ptq_bf16"),
+        ("FP8-E4M3 (sw)", "ptq_e4m3", "ptq_e4m3"),
+        ("FxP4 (sw)", "ptq_fxp4", "ptq_fxp4"),
+    ] {
+        let ea = common::py_metric("effnet", ek);
+        let gm = common::py_metric("gaze", gk);
+        if let (Some(ea), Some(gm)) = (ea, gm) {
+            let mm = common::py_metric("mlp", ek);
+            println!(
+                "{:<22} {:>12.1} {:>12.1} {:>12} {:>12}",
+                label,
+                100.0 * ea / acc32,
+                100.0 * (mse32 / gm).min(1.2),
+                "-",
+                mm.map(|m| format!("{:.1}", 100.0 * m / macc32)).unwrap_or("-".into())
+            );
+        }
+    }
+    println!("\n(error metrics inverted and capped at 120% so all columns read");
+    println!(" \"% of FP32 quality\"; paper shape: 8-bit ~ FP32 everywhere, QAT-4-bit");
+    println!(" close behind, PTQ-4-bit collapses.)");
+}

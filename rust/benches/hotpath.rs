@@ -1,0 +1,103 @@
+//! §Perf micro-benchmarks — the simulator's hot paths, used to drive the
+//! optimization loop (EXPERIMENTS.md §Perf): engine MACs, table decode /
+//! quantize, array GEMM, end-to-end model inference.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use xr_npe::arith::{tables, Precision};
+use xr_npe::array::{ArrayMorph, MatrixArray};
+use xr_npe::npe::{Engine, PrecSel};
+use xr_npe::util::{Matrix, Rng};
+
+fn main() {
+    println!("== hot-path micro-benchmarks (host wall time) ==\n");
+
+    // 1. engine word-MAC throughput per mode
+    println!("-- engine mac_word_fused --");
+    let mut rng = Rng::new(1);
+    let words: Vec<u16> = (0..4096).map(|_| rng.next_u64() as u16).collect();
+    for sel in PrecSel::ALL {
+        let mut eng = Engine::new(sel);
+        let ns = common::time_ns(200, || {
+            for i in 0..4096 {
+                eng.mac_word_fused(words[i], words[(i * 13 + 7) & 4095]);
+            }
+        });
+        println!(
+            "  {:<11} {:>7.2} ns/word-op   {:>7.1} M MACs/s",
+            format!("{sel:?}"),
+            ns / 4096.0,
+            4096.0 * sel.lanes() as f64 / ns * 1e3
+        );
+    }
+
+    // 2. decode-table quantization throughput
+    println!("\n-- table quantize (1024 f32) --");
+    let xs: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+    for p in [Precision::Fp4, Precision::Posit8, Precision::Posit16, Precision::Bf16] {
+        let t = tables::table(p);
+        let mut acc = 0f64;
+        let ns = common::time_ns(2000, || {
+            for &x in &xs {
+                acc += t.quantize(x as f64);
+            }
+        });
+        std::hint::black_box(acc);
+        println!("  {:<11} {:>7.2} ns/elem", p.name(), ns / 1024.0);
+    }
+
+    // 3. encode throughput (input-processing stage of the DMA pack path)
+    println!("\n-- codec encode (1024 f32) --");
+    for p in [Precision::Fp4, Precision::Posit8, Precision::Posit16] {
+        let mut acc = 0u32;
+        let ns = common::time_ns(1000, || {
+            for &x in &xs {
+                acc = acc.wrapping_add(p.encode(x as f64));
+            }
+        });
+        std::hint::black_box(acc);
+        println!("  {:<11} {:>7.2} ns/elem", p.name(), ns / 1024.0);
+    }
+
+    // 4. array GEMM end to end
+    println!("\n-- array GEMM 64x256x64 (bit-accurate) --");
+    let a = Matrix::random(64, 256, 0.5, &mut rng);
+    let b = Matrix::random(256, 64, 0.5, &mut rng);
+    for sel in PrecSel::ALL {
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
+        let mut cycles = 0u64;
+        let ns = common::time_ns(10, || {
+            let (_, rep) = arr.gemm(&a, &b, sel.precision());
+            cycles = rep.cycles;
+        });
+        let macs = 64.0 * 256.0 * 64.0;
+        println!(
+            "  {:<11} host {:>7.2} ms  {:>6.1} M MACs/s  ({} sim-cycles)",
+            format!("{sel:?}"),
+            ns / 1e6,
+            macs / ns * 1e3,
+            cycles
+        );
+    }
+
+    // 5. full model inference on the co-processor (if artifacts exist)
+    if common::have_artifacts() {
+        println!("\n-- EffNet-XR inference on the simulated co-processor --");
+        let inst = xr_npe::coordinator::scheduler::ModelInstance::uniform(
+            common::graph_of("effnet"),
+            xr_npe::artifacts::weights("effnet").unwrap(),
+            PrecSel::Posit8x2,
+        );
+        let eval = xr_npe::artifacts::eval_shapes().unwrap();
+        let mut soc = xr_npe::soc::Soc::new(xr_npe::soc::SocConfig::default());
+        let ns = common::time_ns(20, || {
+            let _ = inst.infer(&mut soc, &eval.images[0], &[]).unwrap();
+        });
+        println!(
+            "  posit8       host {:>7.2} ms/inference  ({:.0} sim-inferences/s/host-core)",
+            ns / 1e6,
+            1e9 / ns
+        );
+    }
+}

@@ -1,0 +1,87 @@
+//! Table III — FPGA accelerator comparison at iso-compute (64 MACs).
+//!
+//! Published SoTA rows next to the modeled XR-NPE co-processor
+//! (LUT/FF/DSP from the component resource model; power/GOPS/W on the
+//! mixed-precision VIO layer mix), with the paper's 1.4×/1.77×/1.2×
+//! ratio claims. Also measures the simulated co-processor's GEMM
+//! throughput on VIO-shaped layers (host wall time, §Perf).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use xr_npe::energy::baselines::{TABLE3_BASELINES, TABLE3_THIS_WORK};
+use xr_npe::energy::FpgaModel;
+use xr_npe::npe::PrecSel;
+use xr_npe::soc::{Soc, SocConfig};
+use xr_npe::util::{Matrix, Rng};
+
+fn main() {
+    println!("== Table III: FPGA accelerator comparison (iso 64 compute units) ==\n");
+    println!(
+        "{:<22} {:<10} {:>5} {:<13} {:>6} {:>9} {:>8} {:>8} {:>5} {:>7} {:>8}",
+        "design", "board", "nm", "model", "MHz", "bits", "LUTs k", "FFs k", "DSP", "W", "GOPS/W"
+    );
+    for r in TABLE3_BASELINES {
+        println!(
+            "{:<22} {:<10} {:>5} {:<13} {:>6.0} {:>9} {:>8.2} {:>8.2} {:>5} {:>7.2} {:>8.2}",
+            r.design, r.board, r.tech_nm, r.model, r.freq_mhz, r.bitwidths, r.luts_k, r.ffs_k,
+            r.dsp, r.power_w, r.gops_per_w
+        );
+    }
+    let m = FpgaModel::xr_npe_8x8();
+    let (luts, ffs) = (m.luts_k(), m.ffs_k());
+    let power = m.power_w(0.55);
+    let eff = m.gops_per_w(2.0, 0.55);
+    println!(
+        "{:<22} {:<10} {:>5} {:<13} {:>6.0} {:>9} {:>8.2} {:>8.2} {:>5} {:>7.2} {:>8.2}   <- modeled",
+        "This work (modeled)", "XCZU7EV", 16, "VIO", m.freq_mhz, "4/8/16", luts, ffs, m.dsps(),
+        power, eff
+    );
+    let t = TABLE3_THIS_WORK;
+    println!(
+        "{:<22} {:<10} {:>5} {:<13} {:>6.0} {:>9} {:>8.2} {:>8.2} {:>5} {:>7.2} {:>8.2}   <- paper",
+        "This work (paper)", t.board, t.tech_nm, t.model, t.freq_mhz, t.bitwidths, t.luts_k,
+        t.ffs_k, t.dsp, t.power_w, t.gops_per_w
+    );
+
+    let r29 = TABLE3_BASELINES.iter().find(|r| r.design.contains("[29]")).unwrap();
+    println!("\n-- headline claims (paper §III, vs [29]) --");
+    println!("  LUT ratio:        {:.2}x fewer (paper: 1.4x)", r29.luts_k / luts);
+    println!("  FF ratio:         {:.2}x fewer (paper: 1.77x)", r29.ffs_k / ffs);
+    println!("  energy-eff ratio: {:.2}x better (paper: 1.2x)", eff / r29.gops_per_w);
+
+    println!("\n-- morph scaling --");
+    let big = FpgaModel::xr_npe_16x16();
+    println!(
+        "  8x8:   {:.2}k LUT {:.2}k FF  peak {:.1} GOPS (posit8)",
+        m.luts_k(), m.ffs_k(), m.gops(2.0)
+    );
+    println!(
+        "  16x16: {:.2}k LUT {:.2}k FF  peak {:.1} GOPS (posit8)  ({:.2}x LUT for 4x compute)",
+        big.luts_k(), big.ffs_k(), big.gops(2.0), big.luts_k() / m.luts_k()
+    );
+
+    // measured co-processor GEMM throughput on VIO-shaped layers
+    println!("\n-- simulated co-processor on VIO layer shapes (wall time) --");
+    let mut rng = Rng::new(42);
+    for (name, m_, k_, n_, sel) in [
+        ("conv1 im2col (64x19x8)", 64usize, 19usize, 8usize, PrecSel::Posit16x1),
+        ("conv2 im2col (16x73x16)", 16, 73, 16, PrecSel::Posit16x1),
+        ("fc1 (1x262x64)", 1, 262, 64, PrecSel::Fp4x4),
+        ("fc2 (1x64x6)", 1, 64, 6, PrecSel::Posit16x1),
+    ] {
+        let a = Matrix::random(m_, k_, 0.5, &mut rng);
+        let b = Matrix::random(k_, n_, 0.5, &mut rng);
+        let mut soc = Soc::new(SocConfig::default());
+        let mut cycles = 0u64;
+        let ns = common::time_ns(20, || {
+            let (_, rep) = soc.gemm(&a, &b, sel, sel.precision()).unwrap();
+            cycles = rep.total_cycles;
+        });
+        println!(
+            "  {name:<26} {cycles:>6} sim-cycles ({:>6.1} us @250MHz) | host {:>8.1} us",
+            cycles as f64 / 250.0,
+            ns / 1e3
+        );
+    }
+}

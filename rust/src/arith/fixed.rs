@@ -1,0 +1,103 @@
+//! Two's-complement fixed-point formats (FxP4/8/16) — the baseline the
+//! FxP competitor designs (Flex-PE [11] et al.) use in Fig. 5.
+//!
+//! `Q(n−1−frac).frac`: value = signed(bits) / 2^frac. Per-tensor scaling
+//! is the quantizer's job (`quant::entropy`); the codec here is the raw
+//! datapath format.
+
+use super::Decoded;
+
+/// Decode the low `n` bits as Q(n−1−frac).frac.
+pub fn decode(bits: u32, n: u32, frac: u32) -> Decoded {
+    assert!(n <= 32 && frac < n);
+    let mask: u32 = if n == 32 { u32::MAX } else { (1 << n) - 1 };
+    let v = bits & mask;
+    // sign-extend
+    let sign_bit = 1u32 << (n - 1);
+    let sv: i64 = if v & sign_bit != 0 { (v as i64) - ((mask as i64) + 1) } else { v as i64 };
+    Decoded::from_f64(sv as f64 * 2f64.powi(-(frac as i32)))
+}
+
+/// Encode `x` to Q(n−1−frac).frac with round-to-nearest-even and
+/// saturation.
+pub fn encode(x: f64, n: u32, frac: u32) -> u32 {
+    assert!(n <= 32 && frac < n);
+    let mask: u32 = if n == 32 { u32::MAX } else { (1 << n) - 1 };
+    if x.is_nan() {
+        return 0;
+    }
+    let scaled = x * 2f64.powi(frac as i32);
+    let hi = (1i64 << (n - 1)) - 1;
+    let lo = -(1i64 << (n - 1));
+    let r = round_half_even(scaled).clamp(lo, hi);
+    (r as u32) & mask
+}
+
+/// decode(encode(x)).
+pub fn quantize(x: f64, n: u32, frac: u32) -> f64 {
+    decode(encode(x, n, frac), n, frac).to_f64()
+}
+
+fn round_half_even(t: f64) -> i64 {
+    if t.is_infinite() {
+        return if t > 0.0 { i64::MAX } else { i64::MIN };
+    }
+    let fl = t.floor();
+    let fr = t - fl;
+    let base = fl as i64;
+    if fr > 0.5 {
+        base + 1
+    } else if fr < 0.5 {
+        base
+    } else if base % 2 == 0 {
+        base
+    } else {
+        base + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fxp4_q12_values() {
+        // Q1.2: step 0.25, range [-2, 1.75]
+        assert_eq!(decode(0b0001, 4, 2).to_f64(), 0.25);
+        assert_eq!(decode(0b0111, 4, 2).to_f64(), 1.75);
+        assert_eq!(decode(0b1000, 4, 2).to_f64(), -2.0);
+        assert_eq!(decode(0b1111, 4, 2).to_f64(), -0.25);
+        assert_eq!(decode(0, 4, 2).to_f64(), 0.0);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(quantize(100.0, 4, 2), 1.75);
+        assert_eq!(quantize(-100.0, 4, 2), -2.0);
+        assert_eq!(quantize(100.0, 8, 4), 127.0 / 16.0);
+    }
+
+    #[test]
+    fn rne_ties() {
+        // 0.125 is halfway between 0 and 0.25 in Q1.2 → ties to even (0)
+        assert_eq!(quantize(0.125, 4, 2), 0.0);
+        // 0.375 halfway between 0.25 and 0.5 → even is 0.5 (bits 0b10)
+        assert_eq!(quantize(0.375, 4, 2), 0.5);
+        assert_eq!(quantize(-0.125, 4, 2), 0.0);
+    }
+
+    #[test]
+    fn exhaustive_roundtrip_all_widths() {
+        for &(n, f) in &[(4u32, 2u32), (8, 4), (16, 8)] {
+            for b in 0..(1u64 << n) {
+                let v = decode(b as u32, n, f).to_f64();
+                assert_eq!(encode(v, n, f), b as u32, "Q({n},{f}) bits {b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_to_zero() {
+        assert_eq!(encode(f64::NAN, 8, 4), 0);
+    }
+}

@@ -1,0 +1,412 @@
+//! Generic minifloat codec: HFP4 (E2M1), FP8 (E4M3 / E5M2), FP16, BF16.
+//!
+//! One parameterized implementation covers every IEEE-style format in the
+//! paper. Three "flavors" capture how the top exponent code is spent:
+//!
+//! * [`Flavor::Ieee`] — top exponent reserved for Inf/NaN (FP16, BF16,
+//!   E5M2).
+//! * [`Flavor::FiniteNan`] — OCP E4M3: only `S.1111.111` is NaN, the rest
+//!   of the top exponent is numeric (max 448); no Inf, overflow saturates.
+//! * [`Flavor::Finite`] — HFP4/MXFP4-style: no Inf/NaN at all; the whole
+//!   code space is numeric (FP4 max = 6.0); NaN inputs quantize to 0,
+//!   overflow saturates.
+//!
+//! Encoding is round-to-nearest-even with full subnormal support.
+
+use super::{Class, Decoded};
+
+/// How the format spends its top exponent code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    Ieee,
+    FiniteNan,
+    Finite,
+}
+
+/// A sign + exponent + mantissa minifloat format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MiniFloat {
+    pub e_bits: u32,
+    pub m_bits: u32,
+    pub bias: i32,
+    pub flavor: Flavor,
+    pub name: &'static str,
+}
+
+impl MiniFloat {
+    /// HFP4: E2M1, bias 1 — values ±{0, 0.5, 1, 1.5, 2, 3, 4, 6}.
+    pub const FP4: MiniFloat =
+        MiniFloat { e_bits: 2, m_bits: 1, bias: 1, flavor: Flavor::Finite, name: "FP4" };
+    /// OCP FP8 E4M3.
+    pub const E4M3: MiniFloat =
+        MiniFloat { e_bits: 4, m_bits: 3, bias: 7, flavor: Flavor::FiniteNan, name: "E4M3" };
+    /// OCP FP8 E5M2 (IEEE-style specials).
+    pub const E5M2: MiniFloat =
+        MiniFloat { e_bits: 5, m_bits: 2, bias: 15, flavor: Flavor::Ieee, name: "E5M2" };
+    /// IEEE binary16.
+    pub const FP16: MiniFloat =
+        MiniFloat { e_bits: 5, m_bits: 10, bias: 15, flavor: Flavor::Ieee, name: "FP16" };
+    /// bfloat16.
+    pub const BF16: MiniFloat =
+        MiniFloat { e_bits: 8, m_bits: 7, bias: 127, flavor: Flavor::Ieee, name: "BF16" };
+
+    /// Total storage bits.
+    pub fn bits(self) -> u32 {
+        1 + self.e_bits + self.m_bits
+    }
+
+    fn exp_mask(self) -> u32 {
+        (1 << self.e_bits) - 1
+    }
+
+    fn mant_mask(self) -> u32 {
+        (1 << self.m_bits) - 1
+    }
+
+    /// Scale (unbiased exponent) of the smallest normal.
+    fn min_normal_scale(self) -> i32 {
+        1 - self.bias
+    }
+
+    /// Largest exponent *field* that holds numeric values.
+    fn max_numeric_exp_field(self) -> u32 {
+        match self.flavor {
+            Flavor::Ieee => self.exp_mask() - 1,
+            Flavor::FiniteNan | Flavor::Finite => self.exp_mask(),
+        }
+    }
+
+    /// Largest finite value.
+    pub fn max_value(self) -> f64 {
+        let e = self.max_numeric_exp_field() as i32 - self.bias;
+        let mut mant = self.mant_mask();
+        if self.flavor == Flavor::FiniteNan {
+            mant -= 1; // top mantissa in top exponent is NaN
+        }
+        (1.0 + mant as f64 / (1u64 << self.m_bits) as f64) * 2f64.powi(e)
+    }
+
+    /// Decode the low `bits()` bits.
+    pub fn decode(self, raw: u32) -> Decoded {
+        let raw = raw & ((1u32 << self.bits()) - 1);
+        let sign = (raw >> (self.bits() - 1)) & 1 == 1;
+        let exp = (raw >> self.m_bits) & self.exp_mask();
+        let mant = raw & self.mant_mask();
+        if exp == self.exp_mask() {
+            match self.flavor {
+                Flavor::Ieee => {
+                    return if mant == 0 { Decoded::inf(sign) } else { Decoded::NAN };
+                }
+                Flavor::FiniteNan => {
+                    if mant == self.mant_mask() {
+                        return Decoded::NAN;
+                    }
+                    // else numeric — fall through
+                }
+                Flavor::Finite => {} // numeric
+            }
+        }
+        if exp == 0 {
+            if mant == 0 {
+                return Decoded::ZERO;
+            }
+            // subnormal: value = mant · 2^(min_normal_scale − m_bits)
+            let lead = 31 - mant.leading_zeros();
+            return Decoded {
+                class: Class::Normal,
+                sign,
+                scale: self.min_normal_scale() - self.m_bits as i32 + lead as i32,
+                sig: mant as u64,
+                frac_bits: lead,
+            };
+        }
+        Decoded {
+            class: Class::Normal,
+            sign,
+            scale: exp as i32 - self.bias,
+            sig: ((1 << self.m_bits) | mant) as u64,
+            frac_bits: self.m_bits,
+        }
+    }
+
+    /// Encode `x` with round-to-nearest-even (subnormal-aware).
+    pub fn encode(self, x: f64) -> u32 {
+        let sign_bit = 1u32 << (self.bits() - 1);
+        if x.is_nan() {
+            return match self.flavor {
+                Flavor::Ieee => (self.exp_mask() << self.m_bits) | 1, // a quiet NaN
+                Flavor::FiniteNan => (self.exp_mask() << self.m_bits) | self.mant_mask(),
+                Flavor::Finite => 0, // FP4: NaN squashes to 0 (documented)
+            };
+        }
+        let sign = x.is_sign_negative();
+        let s = if sign { sign_bit } else { 0 };
+        if x == 0.0 {
+            return s;
+        }
+        if x.is_infinite() {
+            return match self.flavor {
+                Flavor::Ieee => s | (self.exp_mask() << self.m_bits),
+                _ => s | self.encode_max(),
+            };
+        }
+        let a = x.abs();
+        let d = Decoded::from_f64(a);
+
+        if d.scale >= self.min_normal_scale() {
+            // Candidate normal: round the 52-bit significand to m_bits.
+            let shift = 52 - self.m_bits;
+            let (mut sig, carry) = rne_shift(d.sig, shift);
+            let mut scale = d.scale;
+            if carry {
+                sig = 1 << self.m_bits; // 10…0 — rounding overflowed 1.11…1
+                scale += 1;
+            }
+            let exp_field = scale + self.bias;
+            if exp_field > self.max_numeric_exp_field() as i32 {
+                return self.overflow(s);
+            }
+            let mut mant = (sig as u32) & self.mant_mask();
+            let mut exp_field = exp_field as u32;
+            // FiniteNan: the all-ones (exp, mant) slot is NaN → clamp down.
+            if self.flavor == Flavor::FiniteNan
+                && exp_field == self.exp_mask()
+                && mant == self.mant_mask()
+            {
+                // rounded into the NaN slot: saturate to max finite
+                mant -= 1;
+                // (exp stays)
+                let _ = &mut exp_field;
+            }
+            s | (exp_field << self.m_bits) | mant
+        } else {
+            // Subnormal candidate: quantum = 2^(min_normal_scale − m_bits).
+            let q = self.min_normal_scale() - self.m_bits as i32;
+            // t = a / 2^q — exact scaling by a power of two.
+            let t = a * 2f64.powi(-q);
+            let r = round_half_even_f64(t);
+            if r == 0 {
+                return s; // underflow to (signed) zero
+            }
+            // r == 2^m_bits lands exactly on the smallest normal; the bit
+            // pattern works out because r then occupies the exponent LSB.
+            debug_assert!(r <= (1 << self.m_bits));
+            s | r as u32
+        }
+    }
+
+    fn encode_max(self) -> u32 {
+        let mut mant = self.mant_mask();
+        if self.flavor == Flavor::FiniteNan {
+            mant -= 1;
+        }
+        (self.max_numeric_exp_field() << self.m_bits) | mant
+    }
+
+    fn overflow(self, s: u32) -> u32 {
+        match self.flavor {
+            Flavor::Ieee => s | (self.exp_mask() << self.m_bits), // Inf
+            _ => s | self.encode_max(),                           // saturate
+        }
+    }
+
+    /// decode(encode(x)) as f64.
+    pub fn quantize(self, x: f64) -> f64 {
+        self.decode(self.encode(x)).to_f64()
+    }
+}
+
+/// Shift `sig` right by `shift` with round-to-nearest-even; returns
+/// (rounded, carried_out_of_width) where width is the pre-shift leading-one
+/// position minus shift.
+fn rne_shift(sig: u64, shift: u32) -> (u64, bool) {
+    if shift == 0 {
+        return (sig, false);
+    }
+    let top = sig >> shift;
+    let guard = (sig >> (shift - 1)) & 1;
+    let sticky = if shift > 1 { sig & ((1u64 << (shift - 1)) - 1) != 0 } else { false };
+    let lead = 63 - sig.leading_zeros();
+    let width_after = lead - shift; // leading-one position after shift
+    let mut r = top;
+    if guard == 1 && (sticky || (top & 1) == 1) {
+        r += 1;
+    }
+    let carry = (63 - r.leading_zeros()) > width_after;
+    (r, carry)
+}
+
+/// Round f64 to nearest integer, ties to even, as u64 (input must be ≥ 0
+/// and small).
+fn round_half_even_f64(t: f64) -> u64 {
+    let fl = t.floor();
+    let fr = t - fl;
+    let base = fl as u64;
+    if fr > 0.5 {
+        base + 1
+    } else if fr < 0.5 {
+        base
+    } else if base % 2 == 0 {
+        base
+    } else {
+        base + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp4_value_set() {
+        // positive encodings 0..=7: 0, .5, 1, 1.5, 2, 3, 4, 6
+        let expect = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+        for b in 0..8u32 {
+            assert_eq!(MiniFloat::FP4.decode(b).to_f64(), expect[b as usize], "bits {b}");
+        }
+        // negatives mirror
+        for b in 0..8u32 {
+            let v = MiniFloat::FP4.decode(b | 8).to_f64();
+            assert_eq!(v, -expect[b as usize], "bits {}", b | 8);
+        }
+    }
+
+    #[test]
+    fn fp4_encode_rounds_to_nearest_even() {
+        let f = MiniFloat::FP4;
+        assert_eq!(f.quantize(0.24), 0.0); // below 0.25 → 0
+        assert_eq!(f.quantize(0.25), 0.0); // tie 0 vs 0.5 → even (0)
+        assert_eq!(f.quantize(0.3), 0.5);
+        assert_eq!(f.quantize(1.25), 1.0); // tie 1 vs 1.5 → even mant (1.0)
+        assert_eq!(f.quantize(1.75), 2.0); // tie 1.5 vs 2 → even (2.0)
+        assert_eq!(f.quantize(2.5), 2.0); // tie 2 vs 3 → even (2)
+        assert_eq!(f.quantize(5.0), 4.0); // tie 4 vs 6 → even (4)
+        assert_eq!(f.quantize(5.1), 6.0);
+        assert_eq!(f.quantize(100.0), 6.0); // saturate
+        assert_eq!(f.quantize(-100.0), -6.0);
+        assert_eq!(f.quantize(f64::INFINITY), 6.0);
+        assert_eq!(f.quantize(f64::NAN), 0.0);
+    }
+
+    #[test]
+    fn e4m3_landmarks() {
+        let f = MiniFloat::E4M3;
+        assert_eq!(f.max_value(), 448.0);
+        assert_eq!(f.quantize(448.0), 448.0);
+        assert_eq!(f.quantize(1e6), 448.0); // saturating overflow
+        assert_eq!(f.decode(0x7F).class, Class::Nan); // S.1111.111
+        assert_eq!(f.decode(0x78).to_f64(), 256.0); // exp=15 numeric
+        // smallest subnormal: 2^-9
+        assert_eq!(f.decode(0x01).to_f64(), 2f64.powi(-9));
+        assert_eq!(f.quantize(1.0), 1.0);
+        assert!(f.quantize(f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn e5m2_ieee_specials() {
+        let f = MiniFloat::E5M2;
+        assert_eq!(f.decode(0x7C).class, Class::Inf);
+        assert_eq!(f.decode(0x7D).class, Class::Nan);
+        assert_eq!(f.max_value(), 57344.0);
+        assert_eq!(f.quantize(1e9), f64::INFINITY); // IEEE overflow → Inf
+    }
+
+    #[test]
+    fn fp16_matches_native_f32_path() {
+        let f = MiniFloat::FP16;
+        for &x in &[0.0, 1.0, -2.5, 65504.0, 6.1e-5, 5.96e-8, 0.1, 3.14159] {
+            let q = f.quantize(x);
+            // compare against decode of the canonical half-precision bits
+            // computed by the generic algorithm itself (self-consistency)
+            let q2 = f.quantize(q);
+            assert_eq!(q, q2, "idempotent at {x}");
+        }
+        assert_eq!(f.quantize(65504.0), 65504.0);
+        assert_eq!(f.quantize(1e6), f64::INFINITY);
+        // known: 0.1 → 0x2E66 → 0.0999755859375
+        assert!((f.quantize(0.1) - 0.0999755859375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bf16_is_truncated_f32_rne() {
+        let f = MiniFloat::BF16;
+        for &x in &[1.0f32, -3.75, 0.1, 1234.5, 1e-30] {
+            let expect = {
+                // round f32 to bf16 via RNE on the upper 16 bits
+                let b = x.to_bits();
+                let lsb = (b >> 16) & 1;
+                let rounded = (b + 0x7FFF + lsb) >> 16;
+                f32::from_bits(rounded << 16) as f64
+            };
+            assert_eq!(f.quantize(x as f64), expect, "x={x}");
+        }
+    }
+
+    fn exhaustive_roundtrip(f: MiniFloat) {
+        for b in 0..(1u32 << f.bits()) {
+            let d = f.decode(b);
+            if d.class != Class::Normal {
+                continue;
+            }
+            let v = d.to_f64();
+            let back = f.encode(v);
+            // -0 vs 0 aside, the encoding must round-trip
+            assert_eq!(back, b, "{} bits {b:#x} value {v}", f.name);
+        }
+    }
+
+    #[test]
+    fn roundtrip_fp4() {
+        exhaustive_roundtrip(MiniFloat::FP4);
+    }
+    #[test]
+    fn roundtrip_e4m3() {
+        exhaustive_roundtrip(MiniFloat::E4M3);
+    }
+    #[test]
+    fn roundtrip_e5m2() {
+        exhaustive_roundtrip(MiniFloat::E5M2);
+    }
+    #[test]
+    fn roundtrip_fp16() {
+        exhaustive_roundtrip(MiniFloat::FP16);
+    }
+    #[test]
+    fn roundtrip_bf16() {
+        exhaustive_roundtrip(MiniFloat::BF16);
+    }
+
+    #[test]
+    fn nearest_value_property_e4m3() {
+        // encode must pick the closest representable (scan neighbours)
+        let f = MiniFloat::E4M3;
+        let mut vals: Vec<f64> = (0..256u32)
+            .map(|b| f.decode(b))
+            .filter(|d| d.class == Class::Normal)
+            .map(|d| d.to_f64())
+            .collect();
+        vals.push(0.0);
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..3000 {
+            let x = rng.normal() * 10.0;
+            let q = f.quantize(x);
+            let best = vals
+                .iter()
+                .map(|&v| (v - x).abs())
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                ((q - x).abs() - best).abs() < 1e-12,
+                "x={x} q={q} best-dist={best}"
+            );
+        }
+    }
+
+    #[test]
+    fn subnormal_boundary_promotion() {
+        // value rounding up from subnormal range into min normal
+        let f = MiniFloat::E4M3;
+        let min_normal = 2f64.powi(-6);
+        let just_below = min_normal * (1.0 - 1e-9);
+        assert_eq!(f.quantize(just_below), min_normal);
+    }
+}

@@ -1,0 +1,424 @@
+//! Bit-accurate scalar arithmetic for every number format XR-NPE touches.
+//!
+//! The engine (Fig. 3 of the paper) natively supports **HFP4 (E2M1)**,
+//! **Posit(4,1)**, **Posit(8,0)** and **Posit(16,1)**, selected at run
+//! time by `prec_sel`. For baselines and QAT analysis we additionally
+//! model FP8 (E4M3 / E5M2), FP16, BF16, FP32, Posit(32,2) and the
+//! fixed-point formats used by the FxP competitor designs.
+//!
+//! Everything decodes into a single exact intermediate, [`Decoded`]:
+//! `value = (-1)^sign · sig · 2^(scale − frac_bits)` with
+//! `2^frac_bits ≤ sig < 2^(frac_bits+1)` for normal values — i.e. the
+//! classic `1.f × 2^scale` form the multiplier datapath consumes. All of
+//! these formats are exactly representable in `f64`, so `f64` doubles as
+//! a lossless carrier between the codecs and the rest of the simulator;
+//! *accumulation* exactness is provided by [`quire::Quire`], never by
+//! floating point.
+
+pub mod fixed;
+pub mod fp;
+pub mod posit;
+pub mod quire;
+pub mod tables;
+
+pub use quire::Quire;
+
+/// Classification of a decoded value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    /// Exact zero.
+    Zero,
+    /// Finite non-zero (normal or subnormal — already normalized).
+    Normal,
+    /// IEEE infinity (FP16/BF16/FP32/E5M2 only; posits have none).
+    Inf,
+    /// IEEE NaN, or posit NaR (Not a Real).
+    Nan,
+}
+
+/// Exact decoded number: `(-1)^sign · sig · 2^(scale − frac_bits)`.
+///
+/// For `class == Normal`, `sig` is normalized: bit `frac_bits` is the
+/// (implicit/explicit) leading one, so `sig ∈ [2^frac_bits, 2^(frac_bits+1))`
+/// and `scale = ⌊log2 |value|⌋`. For other classes the numeric fields are
+/// zero and must be ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decoded {
+    pub class: Class,
+    pub sign: bool,
+    pub scale: i32,
+    pub sig: u64,
+    pub frac_bits: u32,
+}
+
+impl Decoded {
+    pub const ZERO: Decoded =
+        Decoded { class: Class::Zero, sign: false, scale: 0, sig: 0, frac_bits: 0 };
+    pub const NAN: Decoded =
+        Decoded { class: Class::Nan, sign: false, scale: 0, sig: 0, frac_bits: 0 };
+
+    pub fn inf(sign: bool) -> Decoded {
+        Decoded { class: Class::Inf, sign, scale: 0, sig: 0, frac_bits: 0 }
+    }
+
+    /// Exact conversion to f64 (always exact for ≤32-bit formats).
+    pub fn to_f64(self) -> f64 {
+        match self.class {
+            Class::Zero => 0.0,
+            Class::Nan => f64::NAN,
+            Class::Inf => {
+                if self.sign {
+                    f64::NEG_INFINITY
+                } else {
+                    f64::INFINITY
+                }
+            }
+            Class::Normal => {
+                let mag = self.sig as f64
+                    * (self.scale - self.frac_bits as i32).exp2_i();
+                if self.sign {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+        }
+    }
+
+    /// Exact decomposition of a finite non-zero f64 (normalized form).
+    ///
+    /// Keeps all 52 fraction bits, so the decomposition is exact.
+    pub fn from_f64(x: f64) -> Decoded {
+        if x == 0.0 {
+            return Decoded::ZERO;
+        }
+        if x.is_nan() {
+            return Decoded::NAN;
+        }
+        if x.is_infinite() {
+            return Decoded::inf(x < 0.0);
+        }
+        let sign = x < 0.0;
+        let bits = x.abs().to_bits();
+        let raw_exp = ((bits >> 52) & 0x7FF) as i32;
+        let mant = bits & ((1u64 << 52) - 1);
+        let (scale, sig, frac_bits) = if raw_exp == 0 {
+            // f64 subnormal: value = mant · 2^-1074 with the leading one at
+            // bit `lead`, so scale = lead − 1074 and frac_bits = lead.
+            let lead = 63 - mant.leading_zeros();
+            (lead as i32 - 1074, mant, lead)
+        } else {
+            (raw_exp - 1023, (1u64 << 52) | mant, 52)
+        };
+        Decoded { class: Class::Normal, sign, scale, sig, frac_bits }
+    }
+}
+
+/// `2^i` as f64 for i in the range any of our formats use.
+trait Exp2I {
+    fn exp2_i(self) -> f64;
+}
+impl Exp2I for i32 {
+    #[inline]
+    fn exp2_i(self) -> f64 {
+        if (-1022..=1023).contains(&self) {
+            // exact normal-range fast path
+            f64::from_bits(((1023 + self) as u64) << 52)
+        } else if (-1074..-1022).contains(&self) {
+            // exact f64 subnormal power of two (powi would round to 0)
+            f64::from_bits(1u64 << (self + 1074))
+        } else if self < -1074 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Every precision the simulator can run. The first four are the modes
+/// natively supported by the XR-NPE SIMD datapath (`prec_sel`); the rest
+/// exist for baselines, QAT sweeps and SoTA comparisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    /// HFP4: E2M1 minifloat (±{0, .5, 1, 1.5, 2, 3, 4, 6}), no Inf/NaN.
+    Fp4,
+    /// Posit(4,1).
+    Posit4,
+    /// Posit(8,0).
+    Posit8,
+    /// Posit(16,1).
+    Posit16,
+    /// Posit(32,2) — QAT analysis only, not a hardware mode.
+    Posit32,
+    /// FP8 E4M3 (OCP: single NaN encoding, no Inf, max 448).
+    Fp8E4M3,
+    /// FP8 E5M2 (IEEE-style Inf/NaN).
+    Fp8E5M2,
+    /// IEEE binary16.
+    Fp16,
+    /// bfloat16.
+    Bf16,
+    /// IEEE binary32 (identity quantization; the baseline).
+    Fp32,
+    /// Fixed-point Q1.2 (4-bit, 2 fraction bits) — FxP competitor mode.
+    Fxp4,
+    /// Fixed-point Q3.4 (8-bit, 4 fraction bits).
+    Fxp8,
+    /// Fixed-point Q7.8 (16-bit, 8 fraction bits).
+    Fxp16,
+}
+
+impl Precision {
+    /// All precisions, in sweep order used by figures.
+    pub const ALL: [Precision; 13] = [
+        Precision::Fp32,
+        Precision::Bf16,
+        Precision::Fp16,
+        Precision::Fp8E4M3,
+        Precision::Fp8E5M2,
+        Precision::Fp4,
+        Precision::Posit32,
+        Precision::Posit16,
+        Precision::Posit8,
+        Precision::Posit4,
+        Precision::Fxp16,
+        Precision::Fxp8,
+        Precision::Fxp4,
+    ];
+
+    /// The four modes the XR-NPE datapath supports natively.
+    pub const HW_MODES: [Precision; 4] =
+        [Precision::Fp4, Precision::Posit4, Precision::Posit8, Precision::Posit16];
+
+    /// Storage width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Fp4 | Precision::Posit4 | Precision::Fxp4 => 4,
+            Precision::Posit8
+            | Precision::Fp8E4M3
+            | Precision::Fp8E5M2
+            | Precision::Fxp8 => 8,
+            Precision::Posit16 | Precision::Fp16 | Precision::Bf16 | Precision::Fxp16 => 16,
+            Precision::Posit32 | Precision::Fp32 => 32,
+        }
+    }
+
+    /// SIMD lanes packed into one 16-bit engine word (paper: 4× 4-bit,
+    /// 2× 8-bit, 1× 16-bit). 32-bit formats occupy two words and are not
+    /// hardware modes; they report 0 lanes.
+    pub fn simd_lanes(self) -> u32 {
+        match self.bits() {
+            4 => 4,
+            8 => 2,
+            16 => 1,
+            _ => 0,
+        }
+    }
+
+    /// Width of the mantissa multiplication the RMMEC must perform in this
+    /// mode (paper §II: 2-bit for Posit(4,1)/FP4, 6-bit for Posit(8,0),
+    /// 12-bit for Posit(16,1)). This is `frac_bits + hidden bit` of the
+    /// widest normal significand.
+    pub fn mant_mult_bits(self) -> u32 {
+        match self {
+            Precision::Fp4 | Precision::Posit4 => 2,
+            Precision::Posit8 | Precision::Fp8E4M3 => 6, // posit(8,0): 5 frac + hidden
+            Precision::Fp8E5M2 => 3,
+            Precision::Posit16 => 12, // 11 frac + hidden? regime ≥2 bits → ≤12 frac incl. hidden
+            Precision::Fp16 => 11,
+            Precision::Bf16 => 8,
+            Precision::Posit32 => 28,
+            Precision::Fp32 => 24,
+            Precision::Fxp4 => 4,
+            Precision::Fxp8 => 8,
+            Precision::Fxp16 => 16,
+        }
+    }
+
+    /// True if this is a posit format.
+    pub fn is_posit(self) -> bool {
+        matches!(
+            self,
+            Precision::Posit4 | Precision::Posit8 | Precision::Posit16 | Precision::Posit32
+        )
+    }
+
+    /// True if this is one of the engine's native `prec_sel` modes.
+    pub fn is_hw_mode(self) -> bool {
+        Precision::HW_MODES.contains(&self)
+    }
+
+    /// (n, es) for posit formats.
+    pub fn posit_spec(self) -> Option<(u32, u32)> {
+        match self {
+            Precision::Posit4 => Some((4, 1)),
+            Precision::Posit8 => Some((8, 0)),
+            Precision::Posit16 => Some((16, 1)),
+            Precision::Posit32 => Some((32, 2)),
+            _ => None,
+        }
+    }
+
+    /// Short display name matching the paper's figures.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp4 => "FP4",
+            Precision::Posit4 => "Posit(4,1)",
+            Precision::Posit8 => "Posit(8,0)",
+            Precision::Posit16 => "Posit(16,1)",
+            Precision::Posit32 => "Posit(32,2)",
+            Precision::Fp8E4M3 => "FP8-E4M3",
+            Precision::Fp8E5M2 => "FP8-E5M2",
+            Precision::Fp16 => "FP16",
+            Precision::Bf16 => "BF16",
+            Precision::Fp32 => "FP32",
+            Precision::Fxp4 => "FxP4",
+            Precision::Fxp8 => "FxP8",
+            Precision::Fxp16 => "FxP16",
+        }
+    }
+
+    /// Decode a raw encoding (low `bits()` bits) to its exact value.
+    pub fn decode(self, bits: u32) -> Decoded {
+        match self {
+            Precision::Fp4 => fp::MiniFloat::FP4.decode(bits),
+            Precision::Fp8E4M3 => fp::MiniFloat::E4M3.decode(bits),
+            Precision::Fp8E5M2 => fp::MiniFloat::E5M2.decode(bits),
+            Precision::Fp16 => fp::MiniFloat::FP16.decode(bits),
+            Precision::Bf16 => fp::MiniFloat::BF16.decode(bits),
+            Precision::Fp32 => Decoded::from_f64(f32::from_bits(bits) as f64),
+            Precision::Posit4 => posit::decode(bits, 4, 1),
+            Precision::Posit8 => posit::decode(bits, 8, 0),
+            Precision::Posit16 => posit::decode(bits, 16, 1),
+            Precision::Posit32 => posit::decode(bits, 32, 2),
+            Precision::Fxp4 => fixed::decode(bits, 4, 2),
+            Precision::Fxp8 => fixed::decode(bits, 8, 4),
+            Precision::Fxp16 => fixed::decode(bits, 16, 8),
+        }
+    }
+
+    /// Encode an f64 to the nearest representable encoding (RNE in format
+    /// space; posit clamping rules: never round a non-zero to zero/NaR).
+    pub fn encode(self, x: f64) -> u32 {
+        match self {
+            Precision::Fp4 => fp::MiniFloat::FP4.encode(x),
+            Precision::Fp8E4M3 => fp::MiniFloat::E4M3.encode(x),
+            Precision::Fp8E5M2 => fp::MiniFloat::E5M2.encode(x),
+            Precision::Fp16 => fp::MiniFloat::FP16.encode(x),
+            Precision::Bf16 => fp::MiniFloat::BF16.encode(x),
+            Precision::Fp32 => (x as f32).to_bits(),
+            Precision::Posit4 => posit::encode(x, 4, 1),
+            Precision::Posit8 => posit::encode(x, 8, 0),
+            Precision::Posit16 => posit::encode(x, 16, 1),
+            Precision::Posit32 => posit::encode(x, 32, 2),
+            Precision::Fxp4 => fixed::encode(x, 4, 2),
+            Precision::Fxp8 => fixed::encode(x, 8, 4),
+            Precision::Fxp16 => fixed::encode(x, 16, 8),
+        }
+    }
+
+    /// Round-trip quantization `decode(encode(x))` — the "fake quant"
+    /// the QAT flow applies. NaN-safe.
+    pub fn quantize(self, x: f64) -> f64 {
+        if self == Precision::Fp32 {
+            return x as f32 as f64;
+        }
+        self.decode(self.encode(x)).to_f64()
+    }
+
+    /// Largest finite representable magnitude.
+    pub fn max_value(self) -> f64 {
+        match self {
+            Precision::Fp32 => f32::MAX as f64,
+            Precision::Fp16 => 65504.0,
+            Precision::Bf16 => f32::from_bits(0x7F7F_0000) as f64,
+            _ => {
+                // scan top encodings — formats are ≤16 bit except posit32
+                if let Some((n, es)) = self.posit_spec() {
+                    return posit::maxpos(n, es);
+                }
+                let mask = (1u64 << self.bits()) - 1;
+                let mut best = 0.0f64;
+                for b in 0..=mask {
+                    let d = self.decode(b as u32);
+                    if d.class == Class::Normal {
+                        best = best.max(d.to_f64().abs());
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decoded_f64_roundtrip_exact() {
+        for &x in &[1.0, -1.5, 0.375, 6.0, -448.0, 3.0e-5, 2.0f64.powi(-28)] {
+            let d = Decoded::from_f64(x);
+            assert_eq!(d.to_f64(), x, "roundtrip {x}");
+            assert_eq!(d.class, Class::Normal);
+            // normalized: leading bit at frac_bits
+            assert_eq!(63 - d.sig.leading_zeros(), d.frac_bits);
+        }
+    }
+
+    #[test]
+    fn decoded_specials() {
+        assert_eq!(Decoded::from_f64(0.0).class, Class::Zero);
+        assert_eq!(Decoded::from_f64(f64::NAN).class, Class::Nan);
+        assert_eq!(Decoded::from_f64(f64::INFINITY).class, Class::Inf);
+        assert!(Decoded::from_f64(f64::NEG_INFINITY).sign);
+    }
+
+    #[test]
+    fn decoded_subnormal_f64() {
+        let x = f64::from_bits(1); // smallest subnormal
+        let d = Decoded::from_f64(x);
+        assert_eq!(d.to_f64(), x);
+        assert_eq!(d.frac_bits, 0);
+        assert_eq!(d.scale, -1074);
+    }
+
+    #[test]
+    fn simd_lane_counts_match_paper() {
+        assert_eq!(Precision::Fp4.simd_lanes(), 4);
+        assert_eq!(Precision::Posit4.simd_lanes(), 4);
+        assert_eq!(Precision::Posit8.simd_lanes(), 2);
+        assert_eq!(Precision::Posit16.simd_lanes(), 1);
+    }
+
+    #[test]
+    fn mant_mult_widths_match_paper() {
+        // §II: "from 2-bit in Posit(4,1)/FP4 to 6-bit in Posit(8,0) and
+        // 12-bit in Posit(16,1)".
+        assert_eq!(Precision::Fp4.mant_mult_bits(), 2);
+        assert_eq!(Precision::Posit4.mant_mult_bits(), 2);
+        assert_eq!(Precision::Posit8.mant_mult_bits(), 6);
+        assert_eq!(Precision::Posit16.mant_mult_bits(), 12);
+    }
+
+    #[test]
+    fn quantize_identity_on_representables() {
+        for p in Precision::HW_MODES {
+            for b in 0..(1u32 << p.bits().min(8)) {
+                let v = p.decode(b).to_f64();
+                if v.is_finite() {
+                    assert_eq!(p.quantize(v), v, "{p:?} bits {b:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_values_sane() {
+        assert_eq!(Precision::Fp4.max_value(), 6.0);
+        assert_eq!(Precision::Fp8E4M3.max_value(), 448.0);
+        assert_eq!(Precision::Posit8.max_value(), 64.0); // 2^(8-2), es=0
+        assert_eq!(Precision::Posit16.max_value(), 2.0f64.powi(28));
+        assert_eq!(Precision::Posit4.max_value(), 16.0); // 2^((4-2)*2)
+    }
+}

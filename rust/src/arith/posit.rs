@@ -1,0 +1,322 @@
+//! Generic Posit(n, es) codec, bit-accurate per the posit standard
+//! (softposit-compatible bit-string rounding).
+//!
+//! Encoding layout (MSB→LSB): `sign | regime | exponent(es bits) | fraction`.
+//! Negative values are the two's complement of the positive encoding.
+//! Two reserved encodings: `0…0` = zero, `10…0` = NaR.
+//!
+//! Rounding: round-to-nearest-even on the (unbounded) bit string truncated
+//! to `n` bits — the de-facto standard implementation. Per the standard,
+//! non-zero reals never round to zero (they clamp to ±minpos) and finite
+//! reals never round to NaR (they clamp to ±maxpos).
+
+use super::{Class, Decoded};
+
+/// Largest representable posit magnitude: `2^((n−2)·2^es)`.
+pub fn maxpos(n: u32, es: u32) -> f64 {
+    2f64.powi(((n - 2) << es) as i32)
+}
+
+/// Smallest non-zero posit magnitude: `2^−((n−2)·2^es)`.
+pub fn minpos(n: u32, es: u32) -> f64 {
+    2f64.powi(-(((n - 2) << es) as i32))
+}
+
+/// Decode an n-bit posit (low `n` bits of `bits`) into its exact value.
+pub fn decode(bits: u32, n: u32, es: u32) -> Decoded {
+    assert!((2..=32).contains(&n), "posit n out of range");
+    assert!(es <= 3, "posit es out of range");
+    let mask: u32 = if n == 32 { u32::MAX } else { (1 << n) - 1 };
+    let bits = bits & mask;
+    if bits == 0 {
+        return Decoded::ZERO;
+    }
+    let nar = 1u32 << (n - 1);
+    if bits == nar {
+        return Decoded::NAN; // posit NaR
+    }
+    let sign = bits & nar != 0;
+    // Two's complement magnitude for negative encodings.
+    let v = if sign { bits.wrapping_neg() & mask } else { bits };
+
+    // Regime: run of identical bits starting at bit n-2.
+    let body_bits = n - 1; // bits below the sign
+    let r0 = (v >> (n - 2)) & 1;
+    let mut run = 0u32;
+    while run < body_bits && ((v >> (n - 2 - run)) & 1) == r0 {
+        run += 1;
+        if run == body_bits {
+            break;
+        }
+    }
+    let k: i32 = if r0 == 1 { run as i32 - 1 } else { -(run as i32) };
+    // Bits consumed: run + 1 terminating bit (if any remain).
+    let consumed = (run + 1).min(body_bits);
+    let rem = body_bits - consumed; // bits available for exponent+fraction
+
+    // Exponent: next up-to-es bits; missing low bits are zero.
+    let e_avail = rem.min(es);
+    let e_bits = if e_avail > 0 {
+        ((v >> (rem - e_avail)) & ((1 << e_avail) - 1)) << (es - e_avail)
+    } else {
+        0
+    };
+    let fb = rem - e_avail; // fraction bits present
+    let frac = if fb > 0 { v & ((1 << fb) - 1) } else { 0 };
+
+    let scale = (k << es) + e_bits as i32;
+    let sig = (1u64 << fb) | frac as u64;
+    Decoded { class: Class::Normal, sign, scale, sig, frac_bits: fb }
+}
+
+/// Encode `x` to the nearest n-bit posit (low `n` bits of the result).
+pub fn encode(x: f64, n: u32, es: u32) -> u32 {
+    assert!((2..=32).contains(&n), "posit n out of range");
+    let mask: u32 = if n == 32 { u32::MAX } else { (1 << n) - 1 };
+    if x == 0.0 {
+        return 0;
+    }
+    if x.is_nan() || x.is_infinite() {
+        return (1u32 << (n - 1)) & mask; // NaR
+    }
+    let sign = x < 0.0;
+    let a = x.abs();
+
+    // Clamp to the representable range first (standard posit saturation:
+    // no rounding to zero / NaR).
+    let top = maxpos(n, es);
+    let bot = minpos(n, es);
+    let body = if a >= top {
+        (mask >> 1) as u128 // maxpos encoding: 0111…1
+    } else if a <= bot {
+        1u128 // minpos encoding
+    } else {
+        // Decompose a = 1.f × 2^scale exactly (normal f64 guaranteed here).
+        let d = Decoded::from_f64(a);
+        debug_assert_eq!(d.frac_bits, 52);
+        let scale = d.scale;
+        let frac52 = d.sig & ((1u64 << 52) - 1);
+
+        // scale = k·2^es + e with 0 ≤ e < 2^es.
+        let k = scale.div_euclid(1 << es);
+        let e = scale.rem_euclid(1 << es) as u32;
+
+        // Assemble the unbounded bit string (below the sign bit), MSB
+        // first, into a u128: regime, exponent, fraction.
+        let mut bs: u128 = 0;
+        let mut len: u32 = 0;
+        let push = |bs: &mut u128, len: &mut u32, bit: u32| {
+            *bs = (*bs << 1) | bit as u128;
+            *len += 1;
+        };
+        if k >= 0 {
+            for _ in 0..(k + 1) {
+                push(&mut bs, &mut len, 1);
+            }
+            push(&mut bs, &mut len, 0);
+        } else {
+            for _ in 0..(-k) {
+                push(&mut bs, &mut len, 0);
+            }
+            push(&mut bs, &mut len, 1);
+        }
+        for i in (0..es).rev() {
+            push(&mut bs, &mut len, (e >> i) & 1);
+        }
+        // 52 fraction bits; the clamp above bounds the regime length to
+        // ≤ n ≤ 32 bits, so len ≤ 33 + es + 52 < 96 — fits u128.
+        bs = (bs << 52) | frac52 as u128;
+        len += 52;
+
+        // Round-to-nearest-even at n−1 bits.
+        let keep = n - 1;
+        if len <= keep {
+            bs << (keep - len)
+        } else {
+            let drop = len - keep;
+            let topbits = bs >> drop;
+            let guard = (bs >> (drop - 1)) & 1;
+            let sticky = if drop > 1 { (bs & ((1u128 << (drop - 1)) - 1)) != 0 } else { false };
+            let lsb = topbits & 1;
+            let mut r = topbits;
+            if guard == 1 && (sticky || lsb == 1) {
+                r += 1;
+            }
+            // Carry out of n−1 bits ⇒ we rounded past maxpos; clamp.
+            if r >> keep != 0 {
+                (mask >> 1) as u128
+            } else if r == 0 {
+                1 // never round a non-zero to zero
+            } else {
+                r
+            }
+        }
+    };
+
+    let body = body as u32 & (mask >> 1);
+    if sign {
+        body.wrapping_neg() & mask
+    } else {
+        body
+    }
+}
+
+/// Quantize: decode(encode(x)) as f64. NaR → NaN.
+pub fn quantize(x: f64, n: u32, es: u32) -> f64 {
+    decode(encode(x, n, es), n, es).to_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_posit8_values() {
+        // posit(8,0): 0x40 = 1.0, 0x20 = 0.5, 0x60 = 2.0, 0x01 = minpos = 2^-6
+        assert_eq!(decode(0x40, 8, 0).to_f64(), 1.0);
+        assert_eq!(decode(0x20, 8, 0).to_f64(), 0.5);
+        assert_eq!(decode(0x60, 8, 0).to_f64(), 2.0);
+        assert_eq!(decode(0x01, 8, 0).to_f64(), 2f64.powi(-6));
+        assert_eq!(decode(0x7F, 8, 0).to_f64(), 64.0); // maxpos
+        // negative: -1.0 is two's complement of 0x40 → 0xC0
+        assert_eq!(decode(0xC0, 8, 0).to_f64(), -1.0);
+    }
+
+    #[test]
+    fn known_posit16_values() {
+        // posit(16,1): 0x4000 = 1.0, maxpos = 2^28, minpos = 2^-28
+        assert_eq!(decode(0x4000, 16, 1).to_f64(), 1.0);
+        assert_eq!(decode(0x7FFF, 16, 1).to_f64(), 2f64.powi(28));
+        assert_eq!(decode(0x0001, 16, 1).to_f64(), 2f64.powi(-28));
+        // 0x5000: sign 0, regime "10" (k=0), e=1 → 2^1, frac 0 → 2.0
+        assert_eq!(decode(0x5000, 16, 1).to_f64(), 2.0);
+    }
+
+    #[test]
+    fn known_posit4_values() {
+        // posit(4,1): encodings 0..15 — the full value set.
+        let expect = [
+            0.0, 0.0625, 0.25, 0.5, 1.0, 2.0, 4.0, 16.0, // 0x0..=0x7
+            f64::NAN, -16.0, -4.0, -2.0, -1.0, -0.5, -0.25, -0.0625,
+        ];
+        for b in 0..16u32 {
+            let v = decode(b, 4, 1).to_f64();
+            if expect[b as usize].is_nan() {
+                assert!(v.is_nan(), "bits {b:#x}");
+            } else {
+                assert_eq!(v, expect[b as usize], "bits {b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(decode(0, 16, 1).class, Class::Zero);
+        assert_eq!(decode(0x8000, 16, 1).class, Class::Nan);
+        assert_eq!(encode(0.0, 16, 1), 0);
+        assert_eq!(encode(f64::NAN, 16, 1), 0x8000);
+        assert_eq!(encode(f64::INFINITY, 16, 1), 0x8000);
+    }
+
+    #[test]
+    fn saturation_rules() {
+        // above maxpos clamps to maxpos, below minpos clamps to minpos
+        assert_eq!(encode(1e30, 16, 1), 0x7FFF);
+        assert_eq!(encode(1e-30, 16, 1), 0x0001);
+        assert_eq!(encode(-1e30, 16, 1), 0x8001); // -maxpos
+        assert_eq!(encode(-1e-30, 16, 1), 0xFFFF); // -minpos
+    }
+
+    fn exhaustive_roundtrip(n: u32, es: u32) {
+        let count = 1u64 << n;
+        for b in 0..count {
+            let d = decode(b as u32, n, es);
+            if d.class != Class::Normal {
+                continue;
+            }
+            let v = d.to_f64();
+            let back = encode(v, n, es);
+            assert_eq!(back, b as u32, "posit({n},{es}) bits {b:#x} value {v}");
+            // normalization invariant
+            assert_eq!(63 - d.sig.leading_zeros(), d.frac_bits);
+        }
+    }
+
+    #[test]
+    fn roundtrip_posit4() {
+        exhaustive_roundtrip(4, 1);
+    }
+    #[test]
+    fn roundtrip_posit8() {
+        exhaustive_roundtrip(8, 0);
+    }
+    #[test]
+    fn roundtrip_posit16() {
+        exhaustive_roundtrip(16, 1);
+    }
+    #[test]
+    fn roundtrip_posit6_es2() {
+        exhaustive_roundtrip(6, 2); // odd config to exercise generic paths
+    }
+
+    #[test]
+    fn decode_monotonic_posit16() {
+        // Positive encodings 1..=0x7FFF decode to strictly increasing values.
+        let mut prev = f64::NEG_INFINITY;
+        for b in 1u32..=0x7FFF {
+            let v = decode(b, 16, 1).to_f64();
+            assert!(v > prev, "bits {b:#x}: {v} !> {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn encode_nearest_posit8() {
+        // Midpoints and nearby values round correctly (spot checks).
+        // Between 1.0 (0x40) and next 1.0625? posit(8,0): after 0x40 comes
+        // 0x41 = 1 + 1/32 = 1.03125.
+        assert_eq!(decode(0x41, 8, 0).to_f64(), 1.03125);
+        assert_eq!(encode(1.01, 8, 0), 0x40);
+        assert_eq!(encode(1.03, 8, 0), 0x41);
+        // exact midpoint 1.015625 → ties to even → 0x40
+        assert_eq!(encode(1.015625, 8, 0), 0x40);
+        // midpoint between 0x41 and 0x42 (1.046875) → ties to even → 0x42
+        assert_eq!(encode(1.046875, 8, 0), 0x42);
+    }
+
+    #[test]
+    fn encode_nearest_is_truly_nearest_posit16() {
+        // randomized nearest-value check against a scan of neighbours
+        let mut rng = crate::util::Rng::new(99);
+        for _ in 0..2000 {
+            let x = rng.normal() * 4.0;
+            let b = encode(x, 16, 1);
+            let v = decode(b, 16, 1).to_f64();
+            let err = (v - x).abs();
+            // compare against both neighbours
+            for nb in [b.wrapping_sub(1) & 0xFFFF, (b + 1) & 0xFFFF] {
+                let d = decode(nb, 16, 1);
+                if d.class == Class::Normal {
+                    let e2 = (d.to_f64() - x).abs();
+                    assert!(
+                        err <= e2 + 1e-18,
+                        "x={x}: chose {v} (err {err}) but neighbour {} has err {e2}",
+                        d.to_f64()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn negation_symmetry() {
+        for b in 1u32..256 {
+            let v = decode(b, 8, 0);
+            if v.class != Class::Normal {
+                continue;
+            }
+            let neg = encode(-v.to_f64(), 8, 0);
+            assert_eq!(neg, b.wrapping_neg() & 0xFF);
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! The quire: an exact fixed-point accumulator for sums of products.
+//!
+//! Fig. 3's "Quire scale-accumulate stage" performs the dot-product
+//! accumulation *without intermediate rounding* — the defining numerical
+//! property of posit MACs. We model it as a 128-bit two's-complement
+//! fixed-point register with `FRAC = 56` fraction bits:
+//!
+//! * Posit(16,1) products have LSB weight ≥ 2^−56 (minpos² = 2^−56) and
+//!   magnitude < 2^57, so every product of every native mode (FP4,
+//!   Posit(4,1), Posit(8,0), Posit(16,1), and FP8 for baselines) is
+//!   representable **exactly**.
+//! * Headroom: 127 − (57 + 56) = 14 bits ⇒ ≥ 2^14 worst-case products can
+//!   accumulate before saturation; real workloads are far below this, and
+//!   overflow is detected and flagged, never silent.
+//!
+//! This matches the sizing rationale of the posit-standard quire
+//! (16·n bits for n = 16).
+
+use super::{Class, Decoded};
+
+/// Fraction bits of the quire fixed-point representation.
+pub const QUIRE_FRAC: u32 = 56;
+
+/// Exact fixed-point accumulator.
+#[derive(Debug, Clone, Copy)]
+pub struct Quire {
+    acc: i128,
+    /// Saturation happened (would-be hardware sticky flag).
+    pub overflow: bool,
+    /// A value below quire resolution was rounded on insertion (only
+    /// possible via [`Quire::add_value`] with sub-2^−56 inputs, which no
+    /// native-mode product can produce).
+    pub inexact: bool,
+    /// NaR/NaN was accumulated; the result is NaR.
+    pub nar: bool,
+}
+
+impl Default for Quire {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Quire {
+    pub fn new() -> Self {
+        Quire { acc: 0, overflow: false, inexact: false, nar: false }
+    }
+
+    /// Accumulate the exact product `a · b`.
+    ///
+    /// Infinities are treated as NaR (the engine's posit-centric exception
+    /// unit maps FP Inf into NaR on the accumulate path; see
+    /// `npe::lane`). Zero products are skipped — this is exactly the
+    /// power-gating condition the paper exploits.
+    pub fn add_product(&mut self, a: Decoded, b: Decoded) {
+        match (a.class, b.class) {
+            (Class::Nan, _) | (_, Class::Nan) | (Class::Inf, _) | (_, Class::Inf) => {
+                self.nar = true;
+            }
+            (Class::Zero, _) | (_, Class::Zero) => {}
+            (Class::Normal, Class::Normal) => {
+                let sig = a.sig as u128 * b.sig as u128;
+                let e = (a.scale - a.frac_bits as i32) + (b.scale - b.frac_bits as i32);
+                self.add_fixed(sig, e, a.sign ^ b.sign);
+            }
+        }
+    }
+
+    /// Accumulate a single value (bias add, residual add).
+    pub fn add_value(&mut self, v: Decoded) {
+        match v.class {
+            Class::Nan | Class::Inf => self.nar = true,
+            Class::Zero => {}
+            Class::Normal => {
+                self.add_fixed(v.sig as u128, v.scale - v.frac_bits as i32, v.sign)
+            }
+        }
+    }
+
+    /// Accumulate a raw significand product `±sig · 2^e` — the entry
+    /// point the NPE multiplier datapath uses (`npe::lane`), keeping the
+    /// RMMEC-computed integer product on the modeled path.
+    pub fn add_sig_product(&mut self, sig: u128, e: i32, neg: bool) {
+        if sig != 0 {
+            self.add_fixed(sig, e, neg);
+        }
+    }
+
+    /// Core: add `±sig · 2^e` into the accumulator.
+    fn add_fixed(&mut self, sig: u128, e: i32, neg: bool) {
+        let shift = e + QUIRE_FRAC as i32;
+        let mag: i128 = if shift >= 0 {
+            if shift >= 127 || (sig.leading_zeros() as i32) < shift + 2 {
+                self.overflow = true;
+                return;
+            }
+            (sig << shift) as i128
+        } else {
+            let s = (-shift) as u32;
+            if s >= 128 {
+                if sig != 0 {
+                    self.inexact = true;
+                }
+                return;
+            }
+            let kept = sig >> s;
+            if kept << s != sig {
+                self.inexact = true; // bits below quire resolution dropped
+            }
+            kept as i128
+        };
+        let signed = if neg { -mag } else { mag };
+        match self.acc.checked_add(signed) {
+            Some(v) => self.acc = v,
+            None => self.overflow = true,
+        }
+    }
+
+    /// Exact value currently held (f64 rounds the 128-bit fixed point to
+    /// nearest — the final output-processing round to the target format
+    /// happens *after* this, matching the hardware's single-rounding
+    /// behaviour for all practically-sized accumulations).
+    pub fn to_f64(&self) -> f64 {
+        if self.nar {
+            return f64::NAN;
+        }
+        // i128 → f64 conversion rounds to nearest even.
+        (self.acc as f64) * 2f64.powi(-(QUIRE_FRAC as i32))
+    }
+
+    /// True if the accumulated value is exactly zero.
+    pub fn is_zero(&self) -> bool {
+        !self.nar && self.acc == 0
+    }
+
+    /// Raw fixed-point accumulator (tests / debugging).
+    pub fn raw(&self) -> i128 {
+        self.acc
+    }
+
+    /// Merge another quire (adder-tree reduction of partial quires).
+    pub fn merge(&mut self, other: &Quire) {
+        self.nar |= other.nar;
+        self.inexact |= other.inexact;
+        match self.acc.checked_add(other.acc) {
+            Some(v) => self.acc = v,
+            None => self.overflow = true,
+        }
+        self.overflow |= other.overflow;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::Precision;
+
+    fn dec(x: f64) -> Decoded {
+        Decoded::from_f64(x)
+    }
+
+    #[test]
+    fn exact_simple_dot() {
+        let mut q = Quire::new();
+        q.add_product(dec(1.5), dec(2.0));
+        q.add_product(dec(-0.5), dec(3.0));
+        assert_eq!(q.to_f64(), 1.5);
+        assert!(!q.overflow && !q.inexact && !q.nar);
+    }
+
+    #[test]
+    fn exact_minpos_squared_posit16() {
+        // minpos² = 2^-56 = exactly one quire LSB
+        let minpos = 2f64.powi(-28);
+        let mut q = Quire::new();
+        q.add_product(dec(minpos), dec(minpos));
+        assert_eq!(q.raw(), 1);
+        assert_eq!(q.to_f64(), 2f64.powi(-56));
+        assert!(!q.inexact);
+    }
+
+    #[test]
+    fn catastrophic_cancellation_is_exact() {
+        // The reason the quire exists: (maxish · maxish) − (maxish · maxish)
+        // + tiny must yield exactly tiny.
+        let big = 2f64.powi(27);
+        let tiny = 2f64.powi(-28);
+        let mut q = Quire::new();
+        q.add_product(dec(big), dec(big));
+        q.add_product(dec(-big), dec(big));
+        q.add_product(dec(tiny), dec(1.0));
+        assert_eq!(q.to_f64(), tiny);
+    }
+
+    #[test]
+    fn zero_products_skipped() {
+        let mut q = Quire::new();
+        q.add_product(Decoded::ZERO, dec(5.0));
+        q.add_product(dec(5.0), Decoded::ZERO);
+        assert!(q.is_zero());
+    }
+
+    #[test]
+    fn nar_propagates() {
+        let mut q = Quire::new();
+        q.add_product(dec(1.0), dec(1.0));
+        q.add_product(Decoded::NAN, dec(1.0));
+        assert!(q.to_f64().is_nan());
+        let mut q2 = Quire::new();
+        q2.add_value(Decoded::inf(false));
+        assert!(q2.to_f64().is_nan());
+    }
+
+    #[test]
+    fn overflow_detected_not_silent() {
+        let mut q = Quire::new();
+        let big = dec(2f64.powi(28)); // posit16 maxpos
+        for _ in 0..40_000 {
+            q.add_product(big, big);
+        }
+        assert!(q.overflow);
+    }
+
+    #[test]
+    fn all_hw_mode_products_exact() {
+        // Every representable product of every native mode accumulates
+        // exactly: check random pairs against rational arithmetic via f64
+        // (all products fit f64's 52-bit mantissa exactly: ≤ 13+13 bits).
+        let mut rng = crate::util::Rng::new(21);
+        for p in Precision::HW_MODES {
+            let mask = (1u64 << p.bits()) - 1;
+            for _ in 0..2000 {
+                let a = p.decode((rng.next_u64() & mask) as u32);
+                let b = p.decode((rng.next_u64() & mask) as u32);
+                if a.class != Class::Normal || b.class != Class::Normal {
+                    continue;
+                }
+                let mut q = Quire::new();
+                q.add_product(a, b);
+                assert_eq!(q.to_f64(), a.to_f64() * b.to_f64(), "{p:?}");
+                assert!(!q.inexact);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut rng = crate::util::Rng::new(33);
+        let xs: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        // quantize to posit8 so products are quire-exact
+        let p = Precision::Posit8;
+        let xs: Vec<f64> = xs.iter().map(|&x| p.quantize(x)).collect();
+        let ys: Vec<f64> = ys.iter().map(|&y| p.quantize(y)).collect();
+        let mut q_all = Quire::new();
+        let mut q_a = Quire::new();
+        let mut q_b = Quire::new();
+        for i in 0..64 {
+            q_all.add_product(dec(xs[i]), dec(ys[i]));
+            if i % 2 == 0 {
+                q_a.add_product(dec(xs[i]), dec(ys[i]));
+            } else {
+                q_b.add_product(dec(xs[i]), dec(ys[i]));
+            }
+        }
+        q_a.merge(&q_b);
+        assert_eq!(q_a.raw(), q_all.raw());
+    }
+}

@@ -1,0 +1,333 @@
+//! Precomputed decode/quantize tables — the simulator's hot-path lookup
+//! structures (§Perf: replaces per-MAC bit-scanning with O(1) loads).
+//!
+//! The hardware decodes operands combinationally every cycle; the
+//! simulator amortizes the same work into per-precision tables built once
+//! per process (≤ 2^16 entries — at most 1 MiB of [`Decoded`] per 16-bit
+//! format).
+//!
+//! **Quantization semantics.** `PrecTable::quantize` must agree *exactly*
+//! with `Precision::quantize` (the codec), including posit bit-string
+//! rounding — which is **not** value-nearest when the truncation point
+//! falls inside the regime/exponent field (e.g. Posit(4,1) rounds 9.0 up
+//! to 16, not down to 4, because the cut bit is the exponent bit). We
+//! therefore precompute, by bisection over f64 bit space (monotone for
+//! positive floats), the exact decision *thresholds* between adjacent
+//! representable values, and look those up. Both the FP formats and
+//! posits negate symmetrically, so thresholds are stored for the positive
+//! half only.
+
+use super::{Class, Decoded, Precision};
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Decode + quantize tables for one precision.
+pub struct PrecTable {
+    pub prec: Precision,
+    /// `decoded[bits]` — exact decode of every encoding.
+    pub decoded: Vec<Decoded>,
+    /// `values[bits]` — f32 value of every encoding (NaN for NaR).
+    pub values: Vec<f32>,
+    /// Non-negative representable values, ascending, starting at 0 (or the
+    /// smallest non-negative value if 0 is not representable — never the
+    /// case for our formats).
+    pos_vals: Vec<f64>,
+    /// `thresholds[i]` = smallest positive f64 that the codec rounds to
+    /// `pos_vals[i + 1]`. len = pos_vals.len() − 1.
+    thresholds: Vec<f64>,
+    /// Encoding of each `pos_vals` entry (for the fast encode path).
+    pos_enc: Vec<u32>,
+    /// How to negate a positive encoding (None ⇒ format is asymmetric,
+    /// fall back to the codec — FxP two's complement min has no positive
+    /// counterpart).
+    neg: Option<NegRule>,
+}
+
+/// Sign-application rule for symmetric formats.
+#[derive(Clone, Copy)]
+enum NegRule {
+    /// Two's complement in n bits (posits).
+    TwosComplement(u32),
+    /// OR the sign bit (sign-magnitude minifloats).
+    SignBit(u32),
+}
+
+impl PrecTable {
+    fn build(prec: Precision) -> PrecTable {
+        assert!(prec.bits() <= 16, "PrecTable only for ≤16-bit formats");
+        let n = 1usize << prec.bits();
+        let mut decoded = Vec::with_capacity(n);
+        let mut values = Vec::with_capacity(n);
+        let mut pos_vals = vec![0.0f64];
+        for b in 0..n as u32 {
+            let d = prec.decode(b);
+            decoded.push(d);
+            let v = d.to_f64();
+            values.push(v as f32);
+            if d.class == Class::Normal && !d.sign {
+                pos_vals.push(v);
+            }
+        }
+        pos_vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        pos_vals.dedup();
+        let pos_enc: Vec<u32> = pos_vals.iter().map(|&v| prec.encode(v)).collect();
+        let neg = match prec {
+            Precision::Fxp4 | Precision::Fxp8 | Precision::Fxp16 => None,
+            p if p.is_posit() => Some(NegRule::TwosComplement(p.bits())),
+            p => Some(NegRule::SignBit(1u32 << (p.bits() - 1))),
+        };
+
+        // Bisect each adjacent pair for the codec's decision threshold.
+        let mut thresholds = Vec::with_capacity(pos_vals.len() - 1);
+        for w in pos_vals.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            debug_assert_eq!(prec.quantize(lo), lo);
+            debug_assert_eq!(prec.quantize(hi), hi);
+            // smallest positive-float bits whose quantization != lo
+            let mut a = lo.to_bits(); // quantizes to lo
+            let mut b = hi.to_bits(); // quantizes to hi (or beyond lo anyway)
+            while b - a > 1 {
+                let m = a + (b - a) / 2;
+                if prec.quantize(f64::from_bits(m)) == lo {
+                    a = m;
+                } else {
+                    b = m;
+                }
+            }
+            thresholds.push(f64::from_bits(b));
+        }
+        PrecTable { prec, decoded, values, pos_vals, thresholds, pos_enc, neg }
+    }
+
+    /// Exact decode of an encoding.
+    #[inline]
+    pub fn decode(&self, bits: u32) -> Decoded {
+        self.decoded[bits as usize & (self.decoded.len() - 1)]
+    }
+
+    /// f32 value of an encoding.
+    #[inline]
+    pub fn value(&self, bits: u32) -> f32 {
+        self.values[bits as usize & (self.values.len() - 1)]
+    }
+
+    /// Nearest representable encoding. Fast path: threshold lookup +
+    /// sign rule (§Perf — this is the array's input-processing stage,
+    /// M·K + K·N calls per GEMM); asymmetric formats and specials fall
+    /// back to the codec. Agrees with `Precision::encode` exactly
+    /// (tested).
+    pub fn encode(&self, x: f64) -> u32 {
+        if x.is_nan() {
+            return self.prec.encode(x);
+        }
+        let Some(neg) = self.neg else {
+            return self.prec.encode(x);
+        };
+        let a = x.abs();
+        let idx = self.thresholds.partition_point(|&t| t <= a);
+        let enc = self.pos_enc[idx];
+        if x.is_sign_negative() && enc != 0 {
+            match neg {
+                NegRule::TwosComplement(bits) => {
+                    enc.wrapping_neg() & (((1u64 << bits) - 1) as u32)
+                }
+                NegRule::SignBit(bit) => enc | bit,
+            }
+        } else if x.is_sign_negative() {
+            // −0 / underflow-to-zero: FP keeps a sign bit, posit has one 0
+            match neg {
+                NegRule::TwosComplement(_) => 0,
+                NegRule::SignBit(bit) => enc | bit,
+            }
+        } else {
+            enc
+        }
+    }
+
+    /// Codec-exact fake quantization of a value (threshold lookup).
+    pub fn quantize(&self, x: f64) -> f64 {
+        if x.is_nan() {
+            return self.prec.quantize(x); // format-specific NaN policy
+        }
+        let neg = x < 0.0;
+        let a = x.abs();
+        let idx = self.thresholds.partition_point(|&t| t <= a);
+        let v = self.pos_vals[idx];
+        if neg {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Quantize a whole slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for v in xs.iter_mut() {
+            *v = self.quantize(*v as f64) as f32;
+        }
+    }
+
+    /// All distinct non-negative representable values (ascending, from 0).
+    pub fn positive_values(&self) -> &[f64] {
+        &self.pos_vals
+    }
+}
+
+/// Process-wide table cache.
+static CACHE: OnceLock<Mutex<HashMap<Precision, &'static PrecTable>>> = OnceLock::new();
+
+/// Get (building on first use) the table for `prec`. Tables are leaked
+/// intentionally: one per precision per process, used for the entire run.
+pub fn table(prec: Precision) -> &'static PrecTable {
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    if let Some(t) = map.get(&prec) {
+        return t;
+    }
+    let t: &'static PrecTable = Box::leak(Box::new(PrecTable::build(prec)));
+    map.insert(prec, t);
+    t
+}
+
+/// Quantize through the table cache (convenience; Fp32 is identity at f32
+/// resolution, 32-bit formats bypass tables).
+pub fn quantize(prec: Precision, x: f64) -> f64 {
+    match prec {
+        Precision::Fp32 => x as f32 as f64,
+        Precision::Posit32 => prec.quantize(x),
+        _ => table(prec).quantize(x),
+    }
+}
+
+/// Decode an encoding to its value through the table cache (32-bit
+/// formats go through the codec directly).
+pub fn decode_value(prec: Precision, bits: u32) -> f64 {
+    match prec {
+        Precision::Fp32 | Precision::Posit32 => prec.decode(bits).to_f64(),
+        _ => table(prec).value(bits) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_codec_decode() {
+        for p in [Precision::Fp4, Precision::Posit4, Precision::Posit8, Precision::Fp8E4M3] {
+            let t = table(p);
+            for b in 0..(1u32 << p.bits()) {
+                assert_eq!(t.decode(b), p.decode(b), "{p:?} {b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_quantize_matches_codec_quantize() {
+        let mut rng = crate::util::Rng::new(17);
+        for p in [
+            Precision::Fp4,
+            Precision::Posit4,
+            Precision::Posit8,
+            Precision::Posit16,
+            Precision::Fp8E4M3,
+            Precision::Bf16,
+        ] {
+            let t = table(p);
+            for i in 0..20_000 {
+                let x = match i % 4 {
+                    0 => rng.normal() * 8.0,
+                    1 => rng.normal() * 0.01,
+                    2 => rng.normal() * 1e4,
+                    _ => rng.range(-20.0, 20.0),
+                };
+                let a = t.quantize(x);
+                let b = p.quantize(x);
+                assert_eq!(a, b, "{p:?} at x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn posit4_bitstring_rounding_threshold() {
+        // Posit(4,1) has values … 4, 16(maxpos). The codec's bit-string
+        // rounding cuts at the exponent bit → geometric-style threshold 8,
+        // NOT the arithmetic midpoint 10. The table must reproduce this.
+        let t = table(Precision::Posit4);
+        assert_eq!(t.quantize(7.9), 4.0);
+        assert_eq!(t.quantize(9.0), 16.0);
+        assert_eq!(Precision::Posit4.quantize(9.0), 16.0); // codec agrees
+    }
+
+    #[test]
+    fn quantize_saturates_at_extremes() {
+        let t = table(Precision::Fp4);
+        assert_eq!(t.quantize(1e9), 6.0);
+        assert_eq!(t.quantize(-1e9), -6.0);
+        // posit: huge values go to maxpos, tiny non-zero to minpos
+        let tp = table(Precision::Posit8);
+        assert_eq!(tp.quantize(1e20), 64.0);
+        assert_eq!(tp.quantize(1e-20), 2f64.powi(-6));
+    }
+
+    #[test]
+    fn posit16_table_size() {
+        let t = table(Precision::Posit16);
+        assert_eq!(t.decoded.len(), 65536);
+        assert_eq!(t.value(0x4000), 1.0);
+        // 0, then 2^15 - 1 positive values
+        assert_eq!(t.positive_values().len(), 32768);
+    }
+
+    #[test]
+    fn nan_handling_fp_vs_posit() {
+        // FP4 squashes NaN to 0; posit quantize(NaN) = NaR -> NaN
+        assert_eq!(quantize(Precision::Fp4, f64::NAN), 0.0);
+        assert!(quantize(Precision::Posit8, f64::NAN).is_nan());
+    }
+
+    #[test]
+    fn fast_encode_matches_codec() {
+        let mut rng = crate::util::Rng::new(23);
+        for p in [
+            Precision::Fp4,
+            Precision::Posit4,
+            Precision::Posit8,
+            Precision::Posit16,
+            Precision::Fp8E4M3,
+            Precision::Bf16,
+            Precision::Fxp8,
+        ] {
+            let t = table(p);
+            for i in 0..20_000 {
+                let x = match i % 5 {
+                    0 => rng.normal() * 4.0,
+                    1 => rng.normal() * 1e-4,
+                    2 => rng.normal() * 1e5,
+                    3 => rng.range(-1.0, 1.0),
+                    _ => -rng.normal().abs() * 8.0,
+                };
+                // encodings must produce the same decoded value (FP ±0
+                // and redundant encodings may differ in bits, never value)
+                let fast = t.encode(x);
+                let codec = p.encode(x);
+                let vf = p.decode(fast).to_f64();
+                let vc = p.decode(codec).to_f64();
+                assert!(
+                    vf == vc || (vf == 0.0 && vc == 0.0),
+                    "{p:?} x={x}: fast {fast:#x}->{vf} codec {codec:#x}->{vc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_threshold_behaviour() {
+        // At an exact threshold the table and codec must still agree
+        // (thresholds are inclusive-up by construction).
+        let t = table(Precision::Fp4);
+        for &x in &[0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0] {
+            assert_eq!(t.quantize(x), Precision::Fp4.quantize(x), "x={x}");
+        }
+    }
+}

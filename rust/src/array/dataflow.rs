@@ -1,0 +1,160 @@
+//! Dataflow schedule models: output-stationary (the paper's choice,
+//! implemented functionally in [`super::morphable`]) vs weight-stationary
+//! — the ablation that justifies the design (bench `ablations`).
+//!
+//! Both models price the same GEMM on the same R×C array; they differ in
+//! *what stays put* and therefore in operand-fetch traffic and cycle
+//! overheads:
+//!
+//! * **Output-stationary (OS)**: each PE owns one output element for a
+//!   whole K sweep; A rows and B columns stream. One quire write-back per
+//!   output; operands are fetched per tile.
+//! * **Weight-stationary (WS)**: a K×C slab of B is pinned in the PEs;
+//!   A streams through, partial sums spill/reload when K exceeds the
+//!   resident slab (the classic partial-sum traffic penalty — and with a
+//!   quire, spilling means *rounding* partial sums, which also costs
+//!   accuracy; see `quire_spill_rounds`).
+
+use super::morphable::PIPE_STAGES;
+use super::tiling::TilePlan;
+use crate::npe::PrecSel;
+
+/// Which schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    OutputStationary,
+    WeightStationary,
+}
+
+/// Cost estimate for one GEMM under a schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct DataflowCost {
+    /// Array compute cycles.
+    pub cycles: u64,
+    /// Operand words fetched from SPM into the array.
+    pub operand_words: u64,
+    /// Partial-sum words spilled + reloaded (WS only).
+    pub psum_words: u64,
+    /// Quire drain/restore events that force intermediate rounding
+    /// (WS only — the numerical argument for OS with a quire).
+    pub quire_spill_rounds: u64,
+}
+
+/// Price a GEMM (m×k×n) on an r×c array in the given mode.
+pub fn cost(
+    flow: Dataflow,
+    m: usize,
+    k: usize,
+    n: usize,
+    r: usize,
+    c: usize,
+    sel: PrecSel,
+) -> DataflowCost {
+    let lanes = sel.lanes();
+    let k_words = k.div_ceil(lanes) as u64;
+    let plan = TilePlan::new(m, k, n, r, c);
+    let fill = (r as u64 - 1) + (c as u64 - 1) + PIPE_STAGES;
+    match flow {
+        Dataflow::OutputStationary => {
+            let mut cycles = 0u64;
+            let mut words = 0u64;
+            let mut prev_row = usize::MAX;
+            for t in &plan.tiles {
+                cycles += fill + k_words + r as u64;
+                // B cols per tile; A rows once per tile row
+                words += t.nt as u64 * k_words;
+                if t.m0 != prev_row {
+                    words += t.mt as u64 * k_words;
+                    prev_row = t.m0;
+                }
+            }
+            DataflowCost { cycles, operand_words: words, psum_words: 0, quire_spill_rounds: 0 }
+        }
+        Dataflow::WeightStationary => {
+            // B slab resident: r rows of K are pinned per pass, i.e. the
+            // array holds an (k_res × c) weight block with k_res = r·lanes
+            // elements of K; the K loop outside that spills partial sums.
+            let k_res = (r * lanes).max(1);
+            let k_passes = k.div_ceil(k_res) as u64;
+            let m_tiles = m.div_ceil(r) as u64; // A streams in r-row groups
+            let n_tiles = n.div_ceil(c) as u64;
+            let mut cycles = 0u64;
+            let mut words = 0u64;
+            let mut psum = 0u64;
+            for _ in 0..n_tiles {
+                for _ in 0..k_passes {
+                    // load the weight slab once per (n-tile, k-pass)
+                    words += (k_res.min(k) as u64).div_ceil(lanes as u64) * c as u64;
+                    cycles += fill;
+                    for _ in 0..m_tiles {
+                        // stream A rows; each produces c partials
+                        words += (r as u64) * (k_res as u64).div_ceil(lanes as u64);
+                        cycles += (k_res as u64).div_ceil(lanes as u64) + r as u64;
+                        if k_passes > 1 {
+                            psum += (r * c) as u64; // spill + reload
+                        }
+                    }
+                }
+            }
+            let spill_rounds = if k_passes > 1 {
+                (k_passes - 1) * m_tiles * n_tiles * (r * c) as u64
+            } else {
+                0
+            };
+            DataflowCost {
+                cycles,
+                operand_words: words,
+                psum_words: psum * 2, // out and back
+                quire_spill_rounds: spill_rounds,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn os_matches_morphable_cycle_model() {
+        // the OS cost here must equal the executed array's cycle count
+        use crate::array::{ArrayMorph, MatrixArray};
+        use crate::util::{Matrix, Rng};
+        let mut rng = Rng::new(5);
+        let a = Matrix::random(16, 64, 1.0, &mut rng);
+        let b = Matrix::random(64, 16, 1.0, &mut rng);
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Posit8x2);
+        let (_, rep) = arr.gemm(&a, &b, PrecSel::Posit8x2.precision());
+        let c = cost(Dataflow::OutputStationary, 16, 64, 16, 8, 8, PrecSel::Posit8x2);
+        assert_eq!(c.cycles, rep.cycles);
+    }
+
+    #[test]
+    fn ws_pays_partial_sum_traffic_on_deep_k() {
+        // deep K (≫ resident slab): WS spills partial sums, OS doesn't
+        let os = cost(Dataflow::OutputStationary, 32, 1024, 32, 8, 8, PrecSel::Posit16x1);
+        let ws = cost(Dataflow::WeightStationary, 32, 1024, 32, 8, 8, PrecSel::Posit16x1);
+        assert_eq!(os.psum_words, 0);
+        assert!(ws.psum_words > 0);
+        assert!(ws.quire_spill_rounds > 0, "WS must round partial sums");
+    }
+
+    #[test]
+    fn ws_competitive_on_shallow_k_wide_n() {
+        // WS's sweet spot: K fits the resident slab (FP4: 8 PEs x 4
+        // lanes = 32 >= K), weights reused across many A rows
+        let os = cost(Dataflow::OutputStationary, 512, 16, 8, 8, 8, PrecSel::Fp4x4);
+        let ws = cost(Dataflow::WeightStationary, 512, 16, 8, 8, 8, PrecSel::Fp4x4);
+        assert_eq!(ws.quire_spill_rounds, 0);
+        assert!(ws.operand_words < 2 * os.operand_words);
+    }
+
+    #[test]
+    fn lanes_reduce_kwords_for_both() {
+        for flow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let p16 = cost(flow, 64, 256, 64, 8, 8, PrecSel::Posit16x1);
+            let fp4 = cost(flow, 64, 256, 64, 8, 8, PrecSel::Fp4x4);
+            assert!(fp4.cycles < p16.cycles, "{flow:?}");
+        }
+    }
+}

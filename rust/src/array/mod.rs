@@ -1,0 +1,21 @@
+//! The morphable matrix-multiplication array (paper Fig. 4).
+//!
+//! An R×C grid of XR-NPE engines in an **output-stationary** dataflow:
+//! engine (i, j) owns output element (i, j) of the current tile and
+//! consumes one packed engine-word of the K dimension per cycle (so a
+//! FP4-mode array retires `R·C·4` MACs/cycle). The array morphs between
+//! 8×8 and 16×16 (`ArrayMorph`), and between precisions per tile via the
+//! engines' `prec_sel` — both under the control FSM's drain rules.
+//!
+//! [`tiling`] turns arbitrary GEMM shapes into tile schedules;
+//! [`morphable::MatrixArray::gemm`] executes them bit-accurately and
+//! returns cycle/activity reports that feed `energy` and the Table II-IV
+//! benches.
+
+pub mod dataflow;
+pub mod morphable;
+pub mod tiling;
+
+pub use dataflow::{cost as dataflow_cost, Dataflow, DataflowCost};
+pub use morphable::{ArrayMorph, ArrayReport, MatrixArray};
+pub use tiling::{Tile, TilePlan};

@@ -1,0 +1,326 @@
+//! The morphable output-stationary MAC array.
+//!
+//! Geometry morphs between 8×8 (the paper's evaluated configuration — 64
+//! MAC units, iso-compute with the SoTA comparisons of Table III) and
+//! 16×16 (the scalability configuration). Precision morphs per tile via
+//! `prec_sel`.
+//!
+//! ## Cycle model
+//!
+//! Output-stationary with systolically skewed operand feeding:
+//!
+//! ```text
+//! tile_cycles = fill + k_words + drain
+//!   fill  = (R − 1) + (C − 1) + PIPE_STAGES   (operand skew + MAC pipe)
+//!   k_words = ⌈K / lanes⌉                      (one engine word / cycle)
+//!   drain = R                                  (row-parallel readout)
+//! ```
+//!
+//! The *functional* result is bit-accurate: every PE is a real
+//! [`Engine`] accumulating in a quire; the report carries the activity
+//! statistics the energy model consumes.
+
+use super::tiling::TilePlan;
+use crate::arith::{tables, Precision};
+use crate::npe::{Engine, EngineStats, PrecSel};
+use crate::util::Matrix;
+
+/// MAC pipeline depth (input proc, multiply, quire-acc, output proc).
+pub const PIPE_STAGES: u64 = 4;
+
+/// Array geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrayMorph {
+    /// 8×8 = 64 MAC units (the paper's evaluation point).
+    M8x8,
+    /// 16×16 = 256 MAC units (scalability point).
+    M16x16,
+}
+
+impl ArrayMorph {
+    pub fn dims(self) -> (usize, usize) {
+        match self {
+            ArrayMorph::M8x8 => (8, 8),
+            ArrayMorph::M16x16 => (16, 16),
+        }
+    }
+
+    pub fn pes(self) -> usize {
+        let (r, c) = self.dims();
+        r * c
+    }
+}
+
+/// Execution report for one GEMM.
+#[derive(Debug, Clone, Default)]
+pub struct ArrayReport {
+    /// Compute cycles (array clock).
+    pub cycles: u64,
+    /// Useful MACs (M·K·N).
+    pub macs: u64,
+    /// Engine-level activity (summed over all PEs).
+    pub stats: EngineStats,
+    /// PE-slot occupancy of the tile schedule.
+    pub occupancy: f64,
+    /// MACs per cycle actually achieved.
+    pub macs_per_cycle: f64,
+    /// Peak MACs per cycle for the mode (R·C·lanes).
+    pub peak_macs_per_cycle: f64,
+    /// Any lane saw quire overflow (sticky CSR bit).
+    pub overflow: bool,
+    /// Any lane produced NaR.
+    pub nar: bool,
+}
+
+impl ArrayReport {
+    /// Merge another report (sequential composition).
+    pub fn merge(&mut self, o: &ArrayReport) {
+        self.cycles += o.cycles;
+        self.macs += o.macs;
+        self.stats.merge(&o.stats);
+        self.overflow |= o.overflow;
+        self.nar |= o.nar;
+        // occupancy / rates are recomputed by the caller when needed
+        if self.cycles > 0 {
+            self.macs_per_cycle = self.macs as f64 / self.cycles as f64;
+        }
+        self.peak_macs_per_cycle = self.peak_macs_per_cycle.max(o.peak_macs_per_cycle);
+    }
+
+    /// Compute utilization vs. peak.
+    pub fn utilization(&self) -> f64 {
+        if self.peak_macs_per_cycle == 0.0 {
+            0.0
+        } else {
+            self.macs_per_cycle / self.peak_macs_per_cycle
+        }
+    }
+}
+
+/// The morphable MAC array.
+pub struct MatrixArray {
+    morph: ArrayMorph,
+    sel: PrecSel,
+    /// One engine per PE (row-major R×C).
+    pes: Vec<Engine>,
+}
+
+impl MatrixArray {
+    pub fn new(morph: ArrayMorph, sel: PrecSel) -> MatrixArray {
+        let n = morph.pes();
+        MatrixArray { morph, sel, pes: (0..n).map(|_| Engine::new(sel)).collect() }
+    }
+
+    pub fn morph(&self) -> ArrayMorph {
+        self.morph
+    }
+
+    pub fn prec_sel(&self) -> PrecSel {
+        self.sel
+    }
+
+    /// Re-morph geometry and/or precision (drains all PEs — the control
+    /// FSM's morph rule).
+    pub fn reconfigure(&mut self, morph: ArrayMorph, sel: PrecSel) {
+        self.morph = morph;
+        self.sel = sel;
+        let n = morph.pes();
+        self.pes = (0..n).map(|_| Engine::new(sel)).collect();
+    }
+
+    /// Bit-accurate GEMM: quantizes `a` (M×K) and `b` (K×N) to the engine
+    /// precision, runs the tile schedule, and returns the result in f32
+    /// (each output = exactly-accumulated dot, rounded once to
+    /// `out_prec`).
+    ///
+    /// `out_prec` is the activation format the output-processing stage
+    /// rounds to (usually the same as the engine mode; a higher-precision
+    /// format models the "keep activations wide" option of §III).
+    pub fn gemm(&mut self, a: &Matrix, b: &Matrix, out_prec: Precision) -> (Matrix, ArrayReport) {
+        assert_eq!(a.cols, b.rows, "gemm inner-dim mismatch");
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let (r, c) = self.morph.dims();
+        let prec = self.sel.precision();
+        let t = tables::table(prec);
+        let lanes = self.sel.lanes();
+
+        // Input processing: encode operands once (the SoC's load path).
+        let a_enc: Vec<u32> = a.data.iter().map(|&x| t.encode(x as f64)).collect();
+        let b_t = b.transpose(); // column access pattern
+        let b_enc: Vec<u32> = b_t.data.iter().map(|&x| t.encode(x as f64)).collect();
+
+        // Pack rows of A and cols of B into engine words along K.
+        let k_words = k.div_ceil(lanes);
+        let pack_row = |enc: &[u32]| -> Vec<u16> { self.sel.pack_slice(enc) };
+        let a_words: Vec<Vec<u16>> =
+            (0..m).map(|i| pack_row(&a_enc[i * k..(i + 1) * k])).collect();
+        let b_words: Vec<Vec<u16>> =
+            (0..n).map(|j| pack_row(&b_enc[j * k..(j + 1) * k])).collect();
+
+        let plan = TilePlan::new(m, k, n, r, c);
+        let mut out = Matrix::zeros(m, n);
+        let mut report = ArrayReport {
+            occupancy: plan.occupancy(),
+            peak_macs_per_cycle: (r * c * lanes) as f64,
+            ..Default::default()
+        };
+
+        let fill = (r as u64 - 1) + (c as u64 - 1) + PIPE_STAGES;
+        let drain = r as u64;
+
+        for tile in &plan.tiles {
+            // Each PE (i, j) fused-dots A row (m0+i) with B col (n0+j).
+            for ti in 0..tile.mt {
+                for tj in 0..tile.nt {
+                    let pe = &mut self.pes[ti * c + tj];
+                    pe.clear();
+                    pe.dot_words_fused(&a_words[tile.m0 + ti], &b_words[tile.n0 + tj]);
+                    let v = pe.read_lane(0, out_prec);
+                    let (ovf, nar) = pe.lane_flags(0);
+                    report.overflow |= ovf;
+                    report.nar |= nar;
+                    out.set(tile.m0 + ti, tile.n0 + tj, tables::decode_value(out_prec, v) as f32);
+                }
+            }
+            report.cycles += fill + k_words as u64 + drain;
+        }
+
+        // Collect PE activity.
+        for pe in &mut self.pes {
+            report.stats.merge(&pe.stats);
+            pe.stats = EngineStats::new();
+        }
+        report.macs = plan.macs();
+        report.macs_per_cycle = report.macs as f64 / report.cycles as f64;
+        (out, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self, Draw};
+    use crate::util::Rng;
+
+    /// Oracle: quantize inputs, exact f64 dot, round once to out_prec.
+    fn oracle_gemm(a: &Matrix, b: &Matrix, prec: Precision, out_prec: Precision) -> Matrix {
+        let qa = a.map(|x| tables::quantize(prec, x as f64) as f32);
+        let qb = b.map(|x| tables::quantize(prec, x as f64) as f32);
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for k in 0..a.cols {
+                    // all products/sums exact in f64 for ≤16-bit formats
+                    // at these sizes
+                    acc += qa.at(i, k) as f64 * qb.at(k, j) as f64;
+                }
+                out.set(i, j, tables::quantize(out_prec, acc) as f32);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemm_matches_oracle_all_modes() {
+        let mut rng = Rng::new(42);
+        for sel in PrecSel::ALL {
+            let prec = sel.precision();
+            let a = Matrix::random(10, 17, 1.0, &mut rng);
+            let b = Matrix::random(17, 12, 1.0, &mut rng);
+            let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
+            let (got, rep) = arr.gemm(&a, &b, prec);
+            let want = oracle_gemm(&a, &b, prec, prec);
+            assert_eq!(got.data, want.data, "{sel:?}");
+            assert_eq!(rep.macs, 10 * 17 * 12);
+            assert!(rep.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn gemm_identity_posit16() {
+        // I @ B == quantized B exactly (products by 1.0 are exact)
+        let mut rng = Rng::new(7);
+        let b = Matrix::random(8, 8, 1.0, &mut rng);
+        let i = Matrix::eye(8);
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Posit16x1);
+        let (got, _) = arr.gemm(&i, &b, Precision::Posit16);
+        let qb = b.map(|x| tables::quantize(Precision::Posit16, x as f64) as f32);
+        assert_eq!(got.data, qb.data);
+    }
+
+    #[test]
+    fn cycle_model_shapes() {
+        // K=64 posit16 (1 lane): tile cycles = fill(8+8-2+4=18) + 64 + 8
+        let a = Matrix::zeros(8, 64);
+        let b = Matrix::zeros(64, 8);
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Posit16x1);
+        let (_, rep) = arr.gemm(&a, &b, Precision::Posit16);
+        assert_eq!(rep.cycles, 18 + 64 + 8);
+        // FP4 mode: 4 lanes → 16 k-words
+        let mut arr4 = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Fp4x4);
+        let (_, rep4) = arr4.gemm(&a, &b, Precision::Fp4);
+        assert_eq!(rep4.cycles, 18 + 16 + 8);
+    }
+
+    #[test]
+    fn fp4_mode_quadruples_throughput() {
+        let a = Matrix::zeros(16, 256);
+        let b = Matrix::zeros(256, 16);
+        let mut a16 = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Posit16x1);
+        let (_, r16) = a16.gemm(&a, &b, Precision::Posit16);
+        let mut a4 = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Fp4x4);
+        let (_, r4) = a4.gemm(&a, &b, Precision::Fp4);
+        let speedup = r16.cycles as f64 / r4.cycles as f64;
+        assert!(speedup > 3.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn morph_16x16_fewer_tiles() {
+        let a = Matrix::zeros(16, 32);
+        let b = Matrix::zeros(32, 16);
+        let mut small = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Posit8x2);
+        let (_, rs) = small.gemm(&a, &b, Precision::Posit8);
+        let mut big = MatrixArray::new(ArrayMorph::M16x16, PrecSel::Posit8x2);
+        let (_, rb) = big.gemm(&a, &b, Precision::Posit8);
+        assert!(rb.cycles < rs.cycles);
+    }
+
+    #[test]
+    fn zero_inputs_fully_gated() {
+        let a = Matrix::zeros(4, 8);
+        let b = Matrix::zeros(8, 4);
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Posit8x2);
+        let (out, rep) = arr.gemm(&a, &b, Precision::Posit8);
+        assert!(out.data.iter().all(|&x| x == 0.0));
+        assert_eq!(rep.stats.gated_macs, rep.stats.macs);
+    }
+
+    #[test]
+    fn property_gemm_matches_oracle_random_shapes() {
+        proptest::run(proptest::Config { cases: 24, seed: 0xA11CE }, |rng, _| {
+            let m = rng.usize_in(1, 20);
+            let k = rng.usize_in(1, 40);
+            let n = rng.usize_in(1, 20);
+            let sel = PrecSel::ALL[rng.usize_in(0, 3)];
+            let out_prec = sel.precision();
+            let a = Matrix::random(m, k, 2.0, rng);
+            let b = Matrix::random(k, n, 2.0, rng);
+            let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
+            let (got, _) = arr.gemm(&a, &b, out_prec);
+            let want = oracle_gemm(&a, &b, sel.precision(), out_prec);
+            assert_eq!(got.data, want.data, "{m}x{k}x{n} {sel:?}");
+        });
+    }
+
+    #[test]
+    fn report_utilization_bounded() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::random(9, 33, 1.0, &mut rng);
+        let b = Matrix::random(33, 11, 1.0, &mut rng);
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Posit8x2);
+        let (_, rep) = arr.gemm(&a, &b, Precision::Posit8);
+        let u = rep.utilization();
+        assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+    }
+}

@@ -1,0 +1,105 @@
+//! GEMM tiling: decompose an (M × K) · (K × N) multiplication into
+//! output-stationary tiles matching the array geometry.
+//!
+//! The schedule is the simple row-major output sweep the control FSM
+//! (`soc::control`) walks; weight-reuse-friendlier orders are a scheduler
+//! concern (`coordinator::scheduler` chooses the loop order that minimizes
+//! DMA traffic — see its `plan_layer`).
+
+/// One output tile: rows `[m0, m0+mt)` × cols `[n0, n0+nt)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub m0: usize,
+    pub n0: usize,
+    pub mt: usize,
+    pub nt: usize,
+}
+
+impl Tile {
+    /// Output elements in this tile.
+    pub fn outputs(&self) -> usize {
+        self.mt * self.nt
+    }
+}
+
+/// A full tile schedule for a GEMM of shape (m, k, n) on an r×c array.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub r: usize,
+    pub c: usize,
+    pub tiles: Vec<Tile>,
+}
+
+impl TilePlan {
+    /// Row-major output sweep.
+    pub fn new(m: usize, k: usize, n: usize, r: usize, c: usize) -> TilePlan {
+        assert!(m > 0 && k > 0 && n > 0, "degenerate GEMM shape");
+        assert!(r > 0 && c > 0);
+        let mut tiles = Vec::with_capacity(m.div_ceil(r) * n.div_ceil(c));
+        for m0 in (0..m).step_by(r) {
+            for n0 in (0..n).step_by(c) {
+                tiles.push(Tile { m0, n0, mt: r.min(m - m0), nt: c.min(n - n0) });
+            }
+        }
+        TilePlan { m, k, n, r, c, tiles }
+    }
+
+    /// Total MAC count of the GEMM.
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.n) as u64
+    }
+
+    /// Fraction of PE slots occupied over the schedule (edge tiles leave
+    /// PEs idle).
+    pub fn occupancy(&self) -> f64 {
+        let used: usize = self.tiles.iter().map(Tile::outputs).sum();
+        used as f64 / (self.tiles.len() * self.r * self.c) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fit() {
+        let p = TilePlan::new(16, 32, 16, 8, 8);
+        assert_eq!(p.tiles.len(), 4);
+        assert!(p.tiles.iter().all(|t| t.mt == 8 && t.nt == 8));
+        assert_eq!(p.occupancy(), 1.0);
+    }
+
+    #[test]
+    fn ragged_edges() {
+        let p = TilePlan::new(10, 5, 9, 8, 8);
+        assert_eq!(p.tiles.len(), 4);
+        // corner tile is 2×1
+        let corner = p.tiles.last().unwrap();
+        assert_eq!((corner.mt, corner.nt), (2, 1));
+        assert!(p.occupancy() < 1.0);
+    }
+
+    #[test]
+    fn tiles_cover_exactly_once() {
+        let p = TilePlan::new(13, 7, 21, 8, 8);
+        let mut hit = vec![vec![0u32; 21]; 13];
+        for t in &p.tiles {
+            for i in t.m0..t.m0 + t.mt {
+                for j in t.n0..t.n0 + t.nt {
+                    hit[i][j] += 1;
+                }
+            }
+        }
+        assert!(hit.iter().flatten().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn small_gemm_single_tile() {
+        let p = TilePlan::new(3, 3, 3, 16, 16);
+        assert_eq!(p.tiles.len(), 1);
+        assert_eq!(p.tiles[0], Tile { m0: 0, n0: 0, mt: 3, nt: 3 });
+    }
+}

@@ -1,0 +1,132 @@
+//! Typed access to the build artifacts (`make artifacts`): trained
+//! weights, QAT variants, evaluation datasets and the python-side plan.
+//!
+//! Everything here is *read-side only*; the files are produced once by
+//! `python/compile/aot.py`. The directory defaults to `./artifacts` and
+//! can be overridden with `XR_NPE_ARTIFACTS`.
+
+use crate::util::io::{load_tensors, TensorMap};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Artifact directory (env-overridable).
+pub fn dir() -> PathBuf {
+    std::env::var_os("XR_NPE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Load the FP32-trained weights (+ `.g` gradients, `.alpha`s) for a
+/// model (`effnet`, `gaze`, `ulvio`).
+pub fn weights(model: &str) -> Result<TensorMap> {
+    load_tensors(dir().join(format!("weights_{model}.bin")))
+}
+
+/// Load the QAT-fine-tuned weights for a model at a hardware format
+/// (`fp4`, `posit4`, `posit8`, `posit16`).
+pub fn weights_qat(model: &str, fmt: &str) -> Result<TensorMap> {
+    load_tensors(dir().join(format!("weights_{model}_qat_{fmt}.bin")))
+}
+
+/// shapes-10 evaluation set.
+pub struct EvalShapes {
+    /// flattened 1×16×16 images
+    pub images: Vec<Vec<f32>>,
+    pub labels: Vec<usize>,
+}
+
+pub fn eval_shapes() -> Result<EvalShapes> {
+    let t = load_tensors(dir().join("eval_shapes.bin"))?;
+    let imgs = t.get("images").context("eval_shapes: images")?;
+    let labels = t.get("labels").context("eval_shapes: labels")?;
+    let n = imgs.dims[0];
+    let sz: usize = imgs.dims[1..].iter().product();
+    Ok(EvalShapes {
+        images: (0..n).map(|i| imgs.data[i * sz..(i + 1) * sz].to_vec()).collect(),
+        labels: labels.data.iter().map(|&x| x as usize).collect(),
+    })
+}
+
+/// Gaze evaluation set.
+pub struct EvalGaze {
+    pub landmarks: Vec<Vec<f32>>,
+    pub gaze: Vec<[f32; 2]>,
+}
+
+pub fn eval_gaze() -> Result<EvalGaze> {
+    let t = load_tensors(dir().join("eval_gaze.bin"))?;
+    let x = t.get("landmarks").context("eval_gaze: landmarks")?;
+    let y = t.get("gaze").context("eval_gaze: gaze")?;
+    let n = x.dims[0];
+    Ok(EvalGaze {
+        landmarks: (0..n).map(|i| x.data[i * 16..(i + 1) * 16].to_vec()).collect(),
+        gaze: (0..n).map(|i| [y.data[i * 2], y.data[i * 2 + 1]]).collect(),
+    })
+}
+
+/// VIO evaluation sequence.
+pub struct EvalVio {
+    /// flattened 2×16×16 stacked frames
+    pub images: Vec<Vec<f32>>,
+    pub imu: Vec<Vec<f32>>,
+    pub poses: Vec<[f32; 6]>,
+}
+
+pub fn eval_vio() -> Result<EvalVio> {
+    let t = load_tensors(dir().join("eval_vio.bin"))?;
+    let im = t.get("images").context("eval_vio: images")?;
+    let iu = t.get("imu").context("eval_vio: imu")?;
+    let ps = t.get("poses").context("eval_vio: poses")?;
+    let n = im.dims[0];
+    let sz: usize = im.dims[1..].iter().product();
+    let mut poses = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut p = [0f32; 6];
+        p.copy_from_slice(&ps.data[i * 6..(i + 1) * 6]);
+        poses.push(p);
+    }
+    Ok(EvalVio {
+        images: (0..n).map(|i| im.data[i * sz..(i + 1) * sz].to_vec()).collect(),
+        imu: (0..n).map(|i| iu.data[i * 6..(i + 1) * 6].to_vec()).collect(),
+        poses,
+    })
+}
+
+/// Training-side metrics.json (accuracy per precision) as raw JSON text
+/// (we avoid a JSON dependency; benches print it for cross-reference).
+pub fn metrics_json() -> Result<String> {
+    Ok(std::fs::read_to_string(dir().join("metrics.json"))?)
+}
+
+/// Extract a float field from the (flat, known-shape) metrics JSON, e.g.
+/// `metric_f64(&txt, "effnet", "qat_fp4")`. Tiny purpose-built parser —
+/// not a general JSON reader.
+pub fn metric_f64(json: &str, model: &str, key: &str) -> Option<f64> {
+    let mpos = json.find(&format!("\"{model}\""))?;
+    let rest = &json[mpos..];
+    let kpos = rest.find(&format!("\"{key}\""))?;
+    let after = &rest[kpos..];
+    let colon = after.find(':')?;
+    let tail = after[colon + 1..].trim_start();
+    let end = tail.find([',', '}', '\n']).unwrap_or(tail.len());
+    tail[..end].trim().parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_parser_on_sample() {
+        let j = r#"{ "effnet": { "fp32": 1.0, "qat_fp4": 0.97 }, "gaze": { "fp32": 0.0006 } }"#;
+        assert_eq!(metric_f64(j, "effnet", "qat_fp4"), Some(0.97));
+        assert_eq!(metric_f64(j, "gaze", "fp32"), Some(0.0006));
+        assert_eq!(metric_f64(j, "gaze", "nope"), None);
+    }
+
+    #[test]
+    fn dir_env_override() {
+        // (can't set env safely in parallel tests; just check default)
+        assert!(dir().to_string_lossy().contains("artifacts"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Frame-request batching with deadline flush.
+//!
+//! XR perception is latency-critical: the batcher accumulates requests
+//! only up to `max_batch` or `deadline_cycles` (whichever first), so a
+//! lone request never waits for company longer than the deadline. This
+//! is the standard dynamic-batching policy of serving routers (vLLM-style)
+//! restricted to XR's real-time regime.
+
+use std::collections::VecDeque;
+
+/// One queued request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub aux: Vec<f32>,
+    /// Arrival time in coordinator cycles.
+    pub arrived: u64,
+}
+
+/// A flushed batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    /// Cycle at which the batch was released.
+    pub released: u64,
+}
+
+/// Batching policy + queue.
+#[derive(Debug)]
+pub struct FrameBatcher {
+    pub max_batch: usize,
+    pub deadline_cycles: u64,
+    queue: VecDeque<Request>,
+    next_id: u64,
+}
+
+impl FrameBatcher {
+    pub fn new(max_batch: usize, deadline_cycles: u64) -> FrameBatcher {
+        assert!(max_batch >= 1);
+        FrameBatcher { max_batch, deadline_cycles, queue: VecDeque::new(), next_id: 0 }
+    }
+
+    /// Enqueue a request at `now`; returns its id.
+    pub fn push(&mut self, input: Vec<f32>, aux: Vec<f32>, now: u64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Request { id, input, aux, arrived: now });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Release a batch if policy allows at `now`.
+    pub fn poll(&mut self, now: u64) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest = self.queue.front().unwrap().arrived;
+        if self.queue.len() >= self.max_batch || now.saturating_sub(oldest) >= self.deadline_cycles
+        {
+            let take = self.queue.len().min(self.max_batch);
+            let requests: Vec<Request> = self.queue.drain(..take).collect();
+            return Some(Batch { requests, released: now });
+        }
+        None
+    }
+
+    /// Force-release everything (pipeline shutdown).
+    pub fn flush(&mut self, now: u64) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let requests: Vec<Request> = self.queue.drain(..).collect();
+        Some(Batch { requests, released: now })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self, Draw};
+
+    #[test]
+    fn full_batch_releases_immediately() {
+        let mut b = FrameBatcher::new(2, 1000);
+        b.push(vec![1.0], vec![], 0);
+        assert!(b.poll(1).is_none());
+        b.push(vec![2.0], vec![], 1);
+        let batch = b.poll(1).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_releases_partial_batch() {
+        let mut b = FrameBatcher::new(8, 100);
+        b.push(vec![1.0], vec![], 0);
+        assert!(b.poll(50).is_none());
+        let batch = b.poll(100).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_and_unique_ids() {
+        let mut b = FrameBatcher::new(4, 10);
+        let i0 = b.push(vec![], vec![], 0);
+        let i1 = b.push(vec![], vec![], 1);
+        let i2 = b.push(vec![], vec![], 2);
+        b.push(vec![], vec![], 3);
+        let batch = b.poll(3).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![i0, i1, i2, ids[3]]);
+    }
+
+    #[test]
+    fn property_batch_never_exceeds_max_and_conserves_requests() {
+        proptest::check(|rng, _| {
+            let max_batch = rng.usize_in(1, 8);
+            let deadline = rng.usize_in(1, 50) as u64;
+            let mut b = FrameBatcher::new(max_batch, deadline);
+            let mut pushed = 0u64;
+            let mut released = 0u64;
+            let mut now = 0u64;
+            for _ in 0..rng.usize_in(1, 60) {
+                now += rng.usize_in(0, 20) as u64;
+                if rng.coin(0.7) {
+                    b.push(vec![], vec![], now);
+                    pushed += 1;
+                }
+                while let Some(batch) = b.poll(now) {
+                    assert!(batch.requests.len() <= max_batch);
+                    released += batch.requests.len() as u64;
+                    // no request waited longer than the deadline past a poll
+                    for r in &batch.requests {
+                        assert!(now >= r.arrived);
+                    }
+                }
+            }
+            if let Some(batch) = b.flush(now) {
+                released += batch.requests.len() as u64;
+            }
+            assert_eq!(pushed, released, "requests conserved");
+        });
+    }
+}

@@ -1,0 +1,98 @@
+//! Latency/throughput accounting for the serving layer.
+
+/// Online latency statistics over cycle counts.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> LatencyStats {
+        LatencyStats::default()
+    }
+
+    pub fn record(&mut self, cycles: u64) {
+        self.samples.push(cycles);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+    }
+
+    /// Percentile by nearest-rank (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Frames per second at a clock, if each sample is one frame's
+    /// latency and frames are processed back-to-back.
+    pub fn fps(&self, clock_hz: f64) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            0.0
+        } else {
+            clock_hz / m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), 0);
+        assert_eq!(s.fps(1e9), 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100 {
+            s.record(i);
+        }
+        assert!(s.p50() <= s.p95());
+        assert!(s.p95() <= s.p99());
+        assert_eq!(s.max(), 100);
+        assert_eq!(s.mean(), 50.5);
+    }
+
+    #[test]
+    fn fps_conversion() {
+        let mut s = LatencyStats::new();
+        s.record(1_000_000); // 1M cycles @ 250MHz = 4ms → 250 fps
+        assert!((s.fps(250e6) - 250.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,28 @@
+//! The L3 coordinator — the serving layer that turns XR perception
+//! requests into layer-adaptive work on the simulated co-processor(s).
+//!
+//! * [`scheduler`] — computes the per-layer [`crate::quant::PrecisionPlan`]
+//!   for a model (sensitivity analysis → budgeted assignment) and owns
+//!   the layer→GEMM lowering order.
+//! * [`batcher`] — frame-request batching with deadline flush (XR is
+//!   latency-critical; batching is bounded, never unbounded-throughput
+//!   greedy).
+//! * [`router`] — routes {VIO, gaze, classification} requests to model
+//!   instances and their SoCs; round-robins across replicas.
+//! * [`pipeline`] — the end-to-end perception pipeline of Fig. 1:
+//!   camera/IMU frames → VIO + gaze + classification per frame, with the
+//!   non-perception stages (visual/audio/runtime) modeled by calibrated
+//!   host budgets; reports the application-runtime breakdown.
+//! * [`metrics`] — latency/throughput accounting.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod router;
+pub mod scheduler;
+
+pub use batcher::{Batch, FrameBatcher};
+pub use metrics::LatencyStats;
+pub use pipeline::{PerceptionPipeline, PipelineConfig, RuntimeBreakdown};
+pub use router::{Router, WorkloadKind};
+pub use scheduler::ModelInstance;

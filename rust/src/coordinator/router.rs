@@ -1,0 +1,189 @@
+//! Workload routing: {VIO, gaze, classification} → model instances on
+//! co-processor replicas.
+//!
+//! Each workload kind owns one [`ModelInstance`]; SoC replicas are shared
+//! round-robin. The router is the only component that touches both the
+//! serving queue and the hardware handles — the paper's "scheduling and
+//! control mechanisms as per workload configurations".
+
+use super::scheduler::ModelInstance;
+use crate::models::ExecReport;
+use crate::soc::{Soc, SocConfig};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Perception workload kinds (paper Fig. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WorkloadKind {
+    Vio,
+    Gaze,
+    Classify,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 3] =
+        [WorkloadKind::Vio, WorkloadKind::Gaze, WorkloadKind::Classify];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Vio => "vio",
+            WorkloadKind::Gaze => "gaze",
+            WorkloadKind::Classify => "classify",
+        }
+    }
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct RoutedResult {
+    pub kind: WorkloadKind,
+    pub output: Vec<f32>,
+    pub report: ExecReport,
+    /// Which replica served it.
+    pub replica: usize,
+}
+
+/// The router.
+pub struct Router {
+    models: HashMap<WorkloadKind, ModelInstance>,
+    replicas: Vec<Soc>,
+    next_replica: usize,
+    /// Per-kind request counters.
+    pub served: HashMap<WorkloadKind, u64>,
+}
+
+impl Router {
+    /// `n_replicas` co-processors with the given config.
+    pub fn new(n_replicas: usize, cfg: SocConfig) -> Router {
+        assert!(n_replicas >= 1);
+        Router {
+            models: HashMap::new(),
+            replicas: (0..n_replicas).map(|_| Soc::new(cfg)).collect(),
+            next_replica: 0,
+            served: HashMap::new(),
+        }
+    }
+
+    /// Register the model for a workload kind.
+    pub fn register(&mut self, kind: WorkloadKind, inst: ModelInstance) {
+        self.models.insert(kind, inst);
+    }
+
+    pub fn has(&self, kind: WorkloadKind) -> bool {
+        self.models.contains_key(&kind)
+    }
+
+    pub fn model(&self, kind: WorkloadKind) -> Option<&ModelInstance> {
+        self.models.get(&kind)
+    }
+
+    /// Route one request; returns output + execution report.
+    pub fn route(&mut self, kind: WorkloadKind, input: &[f32], aux: &[f32]) -> Result<RoutedResult> {
+        let Some(inst) = self.models.get(&kind) else {
+            bail!("no model registered for {:?}", kind);
+        };
+        let replica = self.next_replica;
+        self.next_replica = (self.next_replica + 1) % self.replicas.len();
+        let (output, report) = inst.infer(&mut self.replicas[replica], input, aux)?;
+        *self.served.entry(kind).or_insert(0) += 1;
+        Ok(RoutedResult { kind, output, report, replica })
+    }
+
+    /// Total requests served.
+    pub fn total_served(&self) -> u64 {
+        self.served.values().sum()
+    }
+
+    /// Lifetime job report per replica.
+    pub fn replica_lifetime(&self, i: usize) -> &crate::soc::JobReport {
+        &self.replicas[i].lifetime
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{effnet, gaze};
+    use crate::npe::PrecSel;
+    use crate::util::io::{Tensor, TensorMap};
+    use crate::util::Rng;
+
+    fn weights_for(graph: &crate::models::ModelGraph, seed: u64) -> TensorMap {
+        // shared helper duplicated from scheduler tests (kept local to
+        // avoid exposing test-only code in the public API)
+        let mut rng = Rng::new(seed);
+        let mut m = TensorMap::new();
+        for layer in &graph.layers {
+            match &layer.kind {
+                crate::models::LayerKind::Conv2d { in_c, out_c, k, .. } => {
+                    let n = in_c * out_c * k * k;
+                    let mut w = vec![0f32; n];
+                    rng.fill_normal(&mut w, 0.2);
+                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*k, *k, *in_c, *out_c], w));
+                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_c], vec![0.0; *out_c]));
+                }
+                crate::models::LayerKind::Fc { in_f, out_f } => {
+                    let mut w = vec![0f32; in_f * out_f];
+                    rng.fill_normal(&mut w, 0.2);
+                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*in_f, *out_f], w));
+                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_f], vec![0.0; *out_f]));
+                }
+                crate::models::LayerKind::Act(crate::models::ActKind::Pact) => {
+                    m.insert(format!("{}.alpha", layer.name), Tensor::new(vec![1], vec![4.0]));
+                }
+                _ => {}
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn routes_to_registered_model() {
+        let mut r = Router::new(1, SocConfig::default());
+        let g = gaze::build();
+        let w = weights_for(&g, 1);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2));
+        let out = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
+        assert_eq!(out.output.len(), 2);
+        assert_eq!(r.total_served(), 1);
+    }
+
+    #[test]
+    fn unregistered_kind_errors() {
+        let mut r = Router::new(1, SocConfig::default());
+        assert!(r.route(WorkloadKind::Vio, &[], &[]).is_err());
+    }
+
+    #[test]
+    fn round_robin_across_replicas() {
+        let mut r = Router::new(3, SocConfig::default());
+        let g = gaze::build();
+        let w = weights_for(&g, 2);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4));
+        let mut hits = vec![0u32; 3];
+        for _ in 0..9 {
+            let res = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
+            hits[res.replica] += 1;
+        }
+        assert_eq!(hits, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn mixed_workloads_share_replicas() {
+        let mut r = Router::new(2, SocConfig::default());
+        let gg = gaze::build();
+        let wg = weights_for(&gg, 3);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(gg, wg, PrecSel::Posit8x2));
+        let gc = effnet::build();
+        let wc = weights_for(&gc, 4);
+        r.register(WorkloadKind::Classify, ModelInstance::uniform(gc, wc, PrecSel::Fp4x4));
+        r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
+        r.route(WorkloadKind::Classify, &vec![0.1; 256], &[]).unwrap();
+        assert_eq!(r.total_served(), 2);
+        assert_eq!(r.served[&WorkloadKind::Gaze], 1);
+    }
+}

@@ -1,0 +1,186 @@
+//! Model scheduling: sensitivity-driven precision planning + execution
+//! of a model instance on a SoC.
+//!
+//! A [`ModelInstance`] bundles graph + weights + the computed plan. The
+//! plan comes from the paper's flow: per-layer sensitivity (eqs. 1–2,
+//! using the gradient tensors the QAT trainer exports as `<layer>.g`;
+//! falling back to unit gradients when absent) → budgeted promotion
+//! (`quant::policy::plan`). The output head of a regression model can be
+//! pinned high — the UL-VIO configuration pins `fc2`.
+
+use crate::models::{Executor, ExecReport, ModelGraph};
+use crate::npe::PrecSel;
+use crate::quant::policy::{self, PlanBudget};
+use crate::quant::sensitivity::{analyze_layers, LayerSensitivity};
+use crate::quant::PrecisionPlan;
+use crate::soc::Soc;
+use crate::util::io::TensorMap;
+use anyhow::Result;
+
+/// A servable model with its precision plan.
+pub struct ModelInstance {
+    pub graph: ModelGraph,
+    pub weights: TensorMap,
+    pub plan: PrecisionPlan,
+    pub sensitivities: Vec<LayerSensitivity>,
+}
+
+impl ModelInstance {
+    /// Build with the layer-adaptive MxP plan.
+    ///
+    /// * `budget` — target average bits/weight.
+    /// * `base4` — the 4-bit mode for robust layers (FP4 in the headline
+    ///   config).
+    /// * `pin_high_last` — pin the final compute layer to Posit(16,1)
+    ///   (regression heads).
+    pub fn planned(
+        graph: ModelGraph,
+        weights: TensorMap,
+        budget: PlanBudget,
+        base4: PrecSel,
+        pin_high_last: bool,
+    ) -> ModelInstance {
+        let (ws, gs) = layer_tensors(&graph, &weights);
+        let sens = analyze_layers(&ws, &gs);
+        let params = graph.compute_layer_params();
+        let pins: Vec<usize> =
+            if pin_high_last && !params.is_empty() { vec![params.len() - 1] } else { vec![] };
+        let plan = policy::plan(&sens, &params, budget, base4, &pins);
+        ModelInstance { graph, weights, plan, sensitivities: sens }
+    }
+
+    /// Build with a uniform plan (precision sweeps).
+    pub fn uniform(graph: ModelGraph, weights: TensorMap, sel: PrecSel) -> ModelInstance {
+        let params = graph.compute_layer_params();
+        let (ws, gs) = layer_tensors(&graph, &weights);
+        let sens = analyze_layers(&ws, &gs);
+        ModelInstance { graph, weights, plan: PrecisionPlan::uniform(sel, &params), sensitivities: sens }
+    }
+
+    /// Run one request on the co-processor.
+    pub fn infer(
+        &self,
+        soc: &mut Soc,
+        input: &[f32],
+        aux: &[f32],
+    ) -> Result<(Vec<f32>, ExecReport)> {
+        Executor::new(&self.graph, &self.weights).forward_npe(input, aux, soc, &self.plan)
+    }
+
+    /// f32 reference output (accuracy baselines).
+    pub fn infer_ref(&self, input: &[f32], aux: &[f32]) -> Result<Vec<f32>> {
+        Executor::new(&self.graph, &self.weights).forward_ref(input, aux)
+    }
+
+    /// Model size under the plan, bytes.
+    pub fn model_bytes(&self) -> f64 {
+        self.plan.model_bytes()
+    }
+}
+
+/// Extract per-compute-layer weight and gradient tensors (gradients from
+/// `<layer>.g` when the trainer exported them, else unit vectors).
+fn layer_tensors(graph: &ModelGraph, weights: &TensorMap) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut ws = Vec::new();
+    let mut gs = Vec::new();
+    for layer in &graph.layers {
+        if !layer.kind.is_compute() {
+            continue;
+        }
+        let w = weights
+            .get(&format!("{}.w", layer.name))
+            .map(|t| t.data.clone())
+            .unwrap_or_default();
+        let g = weights
+            .get(&format!("{}.g", layer.name))
+            .map(|t| t.data.clone())
+            .unwrap_or_else(|| vec![1.0; w.len()]);
+        let g = if g.len() == w.len() { g } else { vec![1.0; w.len()] };
+        ws.push(w);
+        gs.push(g);
+    }
+    (ws, gs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::effnet;
+    use crate::soc::SocConfig;
+    use crate::util::io::Tensor;
+    use crate::util::Rng;
+
+    pub fn random_weights(graph: &ModelGraph, seed: u64) -> TensorMap {
+        let mut rng = Rng::new(seed);
+        let mut m = TensorMap::new();
+        for layer in &graph.layers {
+            match &layer.kind {
+                crate::models::LayerKind::Conv2d { in_c, out_c, k, .. } => {
+                    let n = in_c * out_c * k * k;
+                    let mut w = vec![0f32; n];
+                    rng.fill_normal(&mut w, (2.0 / (in_c * k * k) as f64).sqrt());
+                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*k, *k, *in_c, *out_c], w));
+                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_c], vec![0.0; *out_c]));
+                }
+                crate::models::LayerKind::Fc { in_f, out_f } => {
+                    let mut w = vec![0f32; in_f * out_f];
+                    rng.fill_normal(&mut w, (2.0 / *in_f as f64).sqrt());
+                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*in_f, *out_f], w));
+                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_f], vec![0.0; *out_f]));
+                }
+                crate::models::LayerKind::Act(crate::models::ActKind::Pact) => {
+                    m.insert(format!("{}.alpha", layer.name), Tensor::new(vec![1], vec![4.0]));
+                }
+                _ => {}
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn planned_instance_respects_budget_and_pin() {
+        let g = crate::models::ulvio::build();
+        let w = random_weights(&g, 1);
+        let inst = ModelInstance::planned(
+            g,
+            w,
+            PlanBudget { avg_bits: 6.0 },
+            PrecSel::Fp4x4,
+            true,
+        );
+        assert!(inst.plan.avg_bits() <= 6.0 + 1e-9);
+        assert_eq!(*inst.plan.per_layer.last().unwrap(), PrecSel::Posit16x1);
+    }
+
+    #[test]
+    fn inference_runs_end_to_end() {
+        let g = effnet::build();
+        let w = random_weights(&g, 2);
+        let inst = ModelInstance::uniform(g, w, PrecSel::Posit8x2);
+        let mut soc = Soc::new(SocConfig::default());
+        let input = vec![0.3f32; 256];
+        let (out, rep) = inst.infer(&mut soc, &input, &[]).unwrap();
+        assert_eq!(out.len(), 10);
+        assert!(rep.jobs.total_cycles > 0);
+        assert_eq!(rep.per_layer_cycles.len(), 5);
+    }
+
+    #[test]
+    fn plan_uses_exported_gradients() {
+        let g = crate::models::gaze::build();
+        let mut w = random_weights(&g, 3);
+        // huge gradient on fc3 → it should be promoted first
+        let n = 64 * 2;
+        w.insert("fc3.g".into(), Tensor::new(vec![n], vec![50.0; n]));
+        let inst = ModelInstance::planned(
+            g,
+            w,
+            PlanBudget { avg_bits: 4.6 },
+            PrecSel::Fp4x4,
+            false,
+        );
+        let bits: Vec<u32> =
+            inst.plan.per_layer.iter().map(|s| s.precision().bits()).collect();
+        assert!(bits[2] > 4, "fc3 (huge grad) should be promoted: {bits:?}");
+    }
+}

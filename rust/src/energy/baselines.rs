@@ -1,0 +1,162 @@
+//! Published state-of-the-art comparison rows, verbatim from the paper's
+//! Tables II, III and IV. These are *reported* numbers from the cited
+//! works — the benches print them next to our modeled/simulated rows so
+//! the comparisons regenerate exactly like the paper's tables.
+
+/// Table II row: SIMD MAC compute engines (ASIC).
+#[derive(Debug, Clone, Copy)]
+pub struct MacEngineRow {
+    pub design: &'static str,
+    pub tech_nm: u32,
+    pub voltage_v: f64,
+    pub freq_ghz: f64,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    /// "Arithmetic intensity" in the paper's usage: pJ per operation.
+    pub pj_per_op: f64,
+}
+
+/// Table II baselines (SoTA SIMD MAC compute engines).
+pub const TABLE2_BASELINES: &[MacEngineRow] = &[
+    MacEngineRow { design: "TCAS-AI'25 [23] (cfg A)", tech_nm: 65, voltage_v: 1.2, freq_ghz: 0.83, area_mm2: 0.036, power_mw: 29.68, pj_per_op: 142.5 },
+    MacEngineRow { design: "TCAS-AI'25 [23] (cfg B)", tech_nm: 65, voltage_v: 1.2, freq_ghz: 0.74, area_mm2: 0.0395, power_mw: 33.80, pj_per_op: 183.0 },
+    MacEngineRow { design: "TCAS-I'25 [24]", tech_nm: 28, voltage_v: 1.0, freq_ghz: 0.97, area_mm2: 0.0276, power_mw: 39.0, pj_per_op: 40.0 },
+    MacEngineRow { design: "TVLSI'25 [11] Flex-PE", tech_nm: 28, voltage_v: 0.9, freq_ghz: 1.36, area_mm2: 0.049, power_mw: 7.3, pj_per_op: 5.37 },
+    MacEngineRow { design: "TCAS-II'24 [14]", tech_nm: 28, voltage_v: 1.0, freq_ghz: 1.56, area_mm2: 0.022, power_mw: 72.3, pj_per_op: 46.35 },
+    MacEngineRow { design: "TCAD'24 [25]", tech_nm: 28, voltage_v: 1.0, freq_ghz: 1.47, area_mm2: 0.024, power_mw: 82.4, pj_per_op: 56.0 },
+    MacEngineRow { design: "TCAS-II'22 [26]", tech_nm: 28, voltage_v: 1.05, freq_ghz: 0.67, area_mm2: 0.052, power_mw: 99.0, pj_per_op: 148.0 },
+];
+
+/// The paper's reported design point for XR-NPE itself (Table II "This
+/// work") — the calibration target for [`super::asic::AsicModel`].
+pub const TABLE2_THIS_WORK: MacEngineRow = MacEngineRow {
+    design: "XR-NPE (paper)",
+    tech_nm: 28,
+    voltage_v: 0.9,
+    freq_ghz: 1.72,
+    area_mm2: 0.016,
+    power_mw: 24.1,
+    pj_per_op: 14.0,
+};
+
+/// Table III row: FPGA accelerator comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct FpgaAccelRow {
+    pub design: &'static str,
+    pub board: &'static str,
+    pub tech_nm: u32,
+    pub model: &'static str,
+    pub freq_mhz: f64,
+    pub bitwidths: &'static str,
+    pub luts_k: f64,
+    pub ffs_k: f64,
+    pub dsp: u32,
+    pub power_w: f64,
+    pub gops_per_w: f64,
+}
+
+/// Table III baselines.
+pub const TABLE3_BASELINES: &[FpgaAccelRow] = &[
+    FpgaAccelRow { design: "TVLSI'25 [11]", board: "XCVU29P", tech_nm: 16, model: "VGG-16", freq_mhz: 466.0, bitwidths: "4/8/16/32", luts_k: 36.5, ffs_k: 7.3, dsp: 62, power_w: 1.72, gops_per_w: 10.96 },
+    FpgaAccelRow { design: "TCAS-II'23 [27]", board: "XCVU9P", tech_nm: 14, model: "YOLOv3-Tiny", freq_mhz: 150.0, bitwidths: "8", luts_k: 132.0, ffs_k: 39.5, dsp: 96, power_w: 5.52, gops_per_w: 6.36 },
+    FpgaAccelRow { design: "ISCAS'25 [17] LPRE", board: "XC7Z020", tech_nm: 28, model: "YOLOv3-Tiny", freq_mhz: 50.0, bitwidths: "8/16", luts_k: 17.54, ffs_k: 14.8, dsp: 39, power_w: 0.93, gops_per_w: 2.14 },
+    FpgaAccelRow { design: "TCAS-I'24 [28]", board: "XC7A100T", tech_nm: 28, model: "YOLOv3-Tiny", freq_mhz: 100.0, bitwidths: "8", luts_k: 50.2, ffs_k: 58.1, dsp: 240, power_w: 2.2, gops_per_w: 43.0 },
+    FpgaAccelRow { design: "TCAS-I'24 [29]", board: "XAZU3EG", tech_nm: 16, model: "ResNet-50", freq_mhz: 150.0, bitwidths: "8", luts_k: 40.78, ffs_k: 45.25, dsp: 257, power_w: 1.4, gops_per_w: 45.0 },
+];
+
+/// The paper's reported FPGA design point (Table III "This work") —
+/// calibration target for [`super::fpga::FpgaModel`].
+pub const TABLE3_THIS_WORK: FpgaAccelRow = FpgaAccelRow {
+    design: "XR-NPE co-processor (paper)",
+    board: "XCZU7EV",
+    tech_nm: 16,
+    model: "VIO",
+    freq_mhz: 250.0,
+    bitwidths: "4/8/16",
+    luts_k: 28.94,
+    ffs_k: 25.6,
+    dsp: 0,
+    power_w: 1.2,
+    gops_per_w: 53.4,
+};
+
+/// Table IV row: AI co-processor comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct CoprocRow {
+    pub design: &'static str,
+    pub network: &'static str,
+    pub precision: &'static str,
+    pub accuracy_pct: f64,
+    pub tech_nm: u32,
+    pub freq_mhz: f64,
+    pub power_w: f64,
+    pub area_mm2: f64,
+    pub tops_per_w: f64,
+    /// TOPS/mm²; `None` where the paper reports "-".
+    pub tops_per_mm2: Option<f64>,
+}
+
+/// Table IV baselines.
+pub const TABLE4_BASELINES: &[CoprocRow] = &[
+    CoprocRow { design: "JSSC'25 [31] VSA", network: "Vector Systolic Array", precision: "FxP4/8", accuracy_pct: 71.68, tech_nm: 28, freq_mhz: 172.0, power_w: 0.6, area_mm2: 1.04, tops_per_w: 8.33, tops_per_mm2: Some(7.94) },
+    CoprocRow { design: "JSSC'25 [31] G-VSA", network: "G-VSA", precision: "FxP4/8", accuracy_pct: 67.2, tech_nm: 28, freq_mhz: 199.0, power_w: 0.3, area_mm2: 2.0, tops_per_w: 3.26, tops_per_mm2: Some(1.13) },
+    CoprocRow { design: "TVLSI'25 [32] (784-200-100-10)", network: "MLP", precision: "FxP8", accuracy_pct: 97.4, tech_nm: 45, freq_mhz: 588.0, power_w: 0.61, area_mm2: 6.13, tops_per_w: 1.48, tops_per_mm2: Some(0.144) },
+    CoprocRow { design: "TVLSI'25 [32] (784-256-10)", network: "MLP", precision: "FxP8", accuracy_pct: 96.73, tech_nm: 45, freq_mhz: 588.0, power_w: 0.64, area_mm2: 5.88, tops_per_w: 1.39, tops_per_mm2: Some(0.153) },
+    CoprocRow { design: "JSSC'24 [33] Marsellus", network: "ResNet-20", precision: "FP16/32, BF16", accuracy_pct: 92.2, tech_nm: 22, freq_mhz: 420.0, power_w: 0.123, area_mm2: 1.9, tops_per_w: 12.4, tops_per_mm2: None },
+    CoprocRow { design: "TCAS-I'22 [34] PL-NPU", network: "ResNet-18", precision: "Posit-8", accuracy_pct: 70.1, tech_nm: 28, freq_mhz: 1040.0, power_w: 0.343, area_mm2: 5.28, tops_per_w: 1.63, tops_per_mm2: Some(0.101) },
+    CoprocRow { design: "ISCAS'24 [35]", network: "ResNet-50", precision: "FxP4/FP16/32", accuracy_pct: 77.56, tech_nm: 28, freq_mhz: 160.0, power_w: 67.4, area_mm2: 1.84, tops_per_w: 2.19, tops_per_mm2: Some(0.085) },
+];
+
+/// The paper's reported co-processor point (Table IV "This work").
+pub const TABLE4_THIS_WORK: CoprocRow = CoprocRow {
+    design: "XR-NPE co-processor (paper)",
+    network: "EfficientNet",
+    precision: "FP4 / Posit-4/8/16",
+    accuracy_pct: 97.56,
+    tech_nm: 28,
+    freq_mhz: 250.0,
+    power_w: 4.2,
+    area_mm2: 1.95,
+    tops_per_w: 15.23,
+    tops_per_mm2: Some(8.2),
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_ratios_hold_in_the_data() {
+        // §III: "42% reduced area, 38% reduced power compared to [24]"
+        let r24 = TABLE2_BASELINES.iter().find(|r| r.design.contains("[24]")).unwrap();
+        let area_red = 1.0 - TABLE2_THIS_WORK.area_mm2 / r24.area_mm2;
+        let power_red = 1.0 - TABLE2_THIS_WORK.power_mw / r24.power_mw;
+        assert!((area_red - 0.42).abs() < 0.01, "area reduction {area_red}");
+        assert!((power_red - 0.38).abs() < 0.01, "power reduction {power_red}");
+    }
+
+    #[test]
+    fn fpga_headline_ratios_hold() {
+        // §III: 1.4× fewer LUTs, 1.77× fewer FFs, 1.2× energy eff vs [29]
+        let r29 = TABLE3_BASELINES.iter().find(|r| r.design.contains("[29]")).unwrap();
+        assert!((r29.luts_k / TABLE3_THIS_WORK.luts_k - 1.41).abs() < 0.02);
+        assert!((r29.ffs_k / TABLE3_THIS_WORK.ffs_k - 1.77).abs() < 0.01);
+        assert!((TABLE3_THIS_WORK.gops_per_w / r29.gops_per_w - 1.19).abs() < 0.02);
+    }
+
+    #[test]
+    fn coproc_headline_ratios_hold() {
+        // §III: 23% better energy efficiency, 4% better compute density
+        // than the best prior work.
+        let best_eff =
+            TABLE4_BASELINES.iter().map(|r| r.tops_per_w).fold(f64::MIN, f64::max);
+        let best_den = TABLE4_BASELINES
+            .iter()
+            .filter_map(|r| r.tops_per_mm2)
+            .fold(f64::MIN, f64::max);
+        let eff_gain = TABLE4_THIS_WORK.tops_per_w / best_eff - 1.0;
+        let den_gain = TABLE4_THIS_WORK.tops_per_mm2.unwrap() / best_den - 1.0;
+        assert!((eff_gain - 0.23).abs() < 0.01, "eff gain {eff_gain}");
+        assert!((den_gain - 0.033).abs() < 0.01, "density gain {den_gain}");
+    }
+}

@@ -1,0 +1,164 @@
+//! FPGA resource model of the AXI-enabled 64-MAC co-processor
+//! (Table III).
+//!
+//! LUT/FF costs are priced per component of the RTL structure the
+//! simulator executes. The paper's design uses **0 DSP blocks** — the
+//! RMMEC 2-bit blocks map to LUT fabric, which is exactly why the design
+//! wins the LUT/FF comparison against DSP-heavy 8-bit accelerators at
+//! iso-compute (64 units). Calibrated to the paper's XCZU7EV point
+//! (28.94 K LUTs, 25.6 K FFs) and verified in tests.
+
+use super::baselines::TABLE3_THIS_WORK;
+use crate::array::ArrayMorph;
+use crate::npe::rmmec::POOL_BLOCKS;
+
+/// Per-component FPGA costs (6-input LUT fabric).
+#[derive(Debug, Clone, Copy)]
+pub struct FpgaUnitCosts {
+    /// LUTs per 2-bit multiplier block (4-bit product ⇒ 4 LUTs incl.
+    /// compose adders' share).
+    pub luts_per_block: f64,
+    /// LUTs / FFs per quire bit (carry chain + register).
+    pub luts_per_quire_bit: f64,
+    pub ffs_per_quire_bit: f64,
+    /// Input decode (regime scan, exp extract) per engine.
+    pub luts_decode: f64,
+    pub ffs_decode: f64,
+    /// Output processing (LZD, shift, round) per engine.
+    pub luts_output: f64,
+    pub ffs_output: f64,
+    /// Control FSM + CSR + AXI + DMA, per co-processor (amortized).
+    pub luts_control: f64,
+    pub ffs_control: f64,
+    /// Operand feeders / skew registers per PE.
+    pub ffs_feeder: f64,
+}
+
+impl FpgaUnitCosts {
+    /// Calibrated to the paper's XCZU7EV synthesis (tests verify <3%).
+    pub fn calibrated() -> FpgaUnitCosts {
+        FpgaUnitCosts {
+            luts_per_block: 3.0,
+            luts_per_quire_bit: 1.1,
+            ffs_per_quire_bit: 1.55,
+            luts_decode: 70.0,
+            ffs_decode: 36.0,
+            luts_output: 80.0,
+            ffs_output: 58.0,
+            luts_control: 3400.0,
+            ffs_control: 2600.0,
+            ffs_feeder: 67.0,
+        }
+    }
+}
+
+/// Resource model for a co-processor configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FpgaModel {
+    pub morph: ArrayMorph,
+    pub costs: FpgaUnitCosts,
+    pub freq_mhz: f64,
+}
+
+impl FpgaModel {
+    /// The paper's evaluation point: 8×8 array @ 250 MHz.
+    pub fn xr_npe_8x8() -> FpgaModel {
+        FpgaModel {
+            morph: ArrayMorph::M8x8,
+            costs: FpgaUnitCosts::calibrated(),
+            freq_mhz: TABLE3_THIS_WORK.freq_mhz,
+        }
+    }
+
+    /// Scalability point: 16×16.
+    pub fn xr_npe_16x16() -> FpgaModel {
+        FpgaModel { morph: ArrayMorph::M16x16, ..Self::xr_npe_8x8() }
+    }
+
+    /// Total LUTs (thousands).
+    pub fn luts_k(&self) -> f64 {
+        let c = &self.costs;
+        let pes = self.morph.pes() as f64;
+        let per_pe = POOL_BLOCKS as f64 * c.luts_per_block
+            + 128.0 * c.luts_per_quire_bit
+            + c.luts_decode
+            + c.luts_output;
+        (pes * per_pe + c.luts_control) / 1000.0
+    }
+
+    /// Total FFs (thousands).
+    pub fn ffs_k(&self) -> f64 {
+        let c = &self.costs;
+        let pes = self.morph.pes() as f64;
+        let per_pe = 128.0 * c.ffs_per_quire_bit + c.ffs_decode + c.ffs_output + c.ffs_feeder;
+        (pes * per_pe + c.ffs_control) / 1000.0
+    }
+
+    /// DSP blocks: zero by construction (RMMEC is LUT-mapped).
+    pub fn dsps(&self) -> u32 {
+        0
+    }
+
+    /// Dynamic + static power estimate, W. FPGA power scales with LUT
+    /// toggle count; calibrated to the paper's 1.2 W at the mixed-precision
+    /// VIO workload (`avg_lanes` = mean SIMD lanes of the layer mix,
+    /// `activity` = mean toggle rate).
+    pub fn power_w(&self, activity: f64) -> f64 {
+        let static_w = 0.45; // ZU7EV fabric + PS share
+        let dyn_per_kluf_mhz = 1.885e-4; // W per kLUT per MHz at activity 1
+        static_w + self.luts_k() * self.freq_mhz * dyn_per_kluf_mhz * activity
+    }
+
+    /// GOPS at a given average SIMD lane count (2 ops per MAC).
+    pub fn gops(&self, avg_lanes: f64) -> f64 {
+        self.morph.pes() as f64 * self.freq_mhz * 1e6 * avg_lanes * 2.0 / 1e9
+    }
+
+    /// GOPS/W on a workload profile.
+    pub fn gops_per_w(&self, avg_lanes: f64, activity: f64) -> f64 {
+        self.gops(avg_lanes) / self.power_w(activity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_hits_paper_point() {
+        let m = FpgaModel::xr_npe_8x8();
+        let t = TABLE3_THIS_WORK;
+        let luts = m.luts_k();
+        let ffs = m.ffs_k();
+        assert!((luts - t.luts_k).abs() / t.luts_k < 0.03, "LUTs {luts:.2}k vs paper {}", t.luts_k);
+        assert!((ffs - t.ffs_k).abs() / t.ffs_k < 0.03, "FFs {ffs:.2}k vs paper {}", t.ffs_k);
+        assert_eq!(m.dsps(), t.dsp);
+    }
+
+    #[test]
+    fn power_near_paper_on_vio_mix() {
+        // VIO layer mix ≈ 4-bit-heavy → avg activity ~0.55
+        let m = FpgaModel::xr_npe_8x8();
+        let p = m.power_w(0.55);
+        assert!((p - TABLE3_THIS_WORK.power_w).abs() / TABLE3_THIS_WORK.power_w < 0.1, "power {p:.2}");
+    }
+
+    #[test]
+    fn gops_per_w_near_paper() {
+        // mixed-precision VIO: average ~2.0 lanes/word (FP4-heavy mix)
+        let m = FpgaModel::xr_npe_8x8();
+        let eff = m.gops_per_w(2.0, 0.55);
+        let t = TABLE3_THIS_WORK.gops_per_w;
+        assert!((eff - t).abs() / t < 0.12, "GOPS/W {eff:.1} vs paper {t}");
+    }
+
+    #[test]
+    fn array_scaling_superlinear_compute_sublinear_control() {
+        let s = FpgaModel::xr_npe_8x8();
+        let b = FpgaModel::xr_npe_16x16();
+        // 4× the PEs < 4× the LUTs (shared control amortizes)
+        assert!(b.luts_k() < 4.0 * s.luts_k());
+        assert!(b.luts_k() > 3.0 * s.luts_k());
+        assert!((b.gops(1.0) / s.gops(1.0) - 4.0).abs() < 1e-9);
+    }
+}

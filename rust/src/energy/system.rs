@@ -1,0 +1,193 @@
+//! System-level (co-processor) performance accounting — Table IV and the
+//! off-chip-movement analysis of §III.
+//!
+//! Combines the ASIC engine model, the array geometry and the DMA/AXI
+//! byte counters into the metrics the paper reports: TOPS, TOPS/W,
+//! TOPS/mm², and the energy breakdown showing off-chip data movement at
+//! ~60% of system energy.
+//!
+//! Note on Table IV absolutes: the paper's "This work" row (4.2 W,
+//! 15.23 TOPS/W at 250 MHz with 64 MACs) is not arithmetically
+//! self-consistent as raw silicon numbers — like most survey-style
+//! comparison tables it reports *normalized* throughput estimates. We
+//! therefore reproduce (a) the measured-activity energy efficiency of
+//! the simulated co-processor and (b) the paper's *ranking and ratio*
+//! claims (23% energy-efficiency, 4% compute-density lead), which the
+//! bench checks against the published competitor rows.
+
+use super::asic::AsicModel;
+use crate::array::ArrayMorph;
+use crate::npe::PrecSel;
+use crate::soc::JobReport;
+
+/// Off-chip (LPDDR-class) access energy, pJ/byte — the dominant term the
+/// paper attributes "almost 60% of energy consumption" to.
+pub const OFFCHIP_PJ_PER_BYTE: f64 = 42.0;
+
+/// On-chip SRAM access energy, pJ/byte at 28 nm.
+pub const SRAM_PJ_PER_BYTE: f64 = 1.1;
+
+/// System-level model for one co-processor configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemModel {
+    pub engine: AsicModel,
+    pub morph: ArrayMorph,
+    /// Co-processor clock (Hz). ASIC point: 1.72 GHz; FPGA point: 250 MHz.
+    pub clock_hz: f64,
+}
+
+/// Energy breakdown of a job/workload, joules.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub compute_j: f64,
+    pub sram_j: f64,
+    pub offchip_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.sram_j + self.offchip_j
+    }
+
+    /// Fraction of energy spent on off-chip movement.
+    pub fn offchip_fraction(&self) -> f64 {
+        let t = self.total_j();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.offchip_j / t
+        }
+    }
+}
+
+impl SystemModel {
+    /// The ASIC co-processor point (Table IV).
+    pub fn asic_coprocessor() -> SystemModel {
+        SystemModel {
+            engine: AsicModel::xr_npe(),
+            morph: ArrayMorph::M8x8,
+            clock_hz: 250e6, // co-processor system clock (paper Table IV)
+        }
+    }
+
+    /// Total co-processor area, mm²: engines + SPM + NoC/AXI/control.
+    /// Calibrated overheads: 256 KiB SPM ≈ 0.55 mm² at 28 nm, control +
+    /// AXI + host interface ≈ 0.25 mm², packaging margin to the paper's
+    /// 1.95 mm² envelope.
+    pub fn area_mm2(&self) -> f64 {
+        let engines = self.morph.pes() as f64 * self.engine.area_mm2();
+        let spm = 0.55;
+        let control = 0.25;
+        (engines + spm + control) * 1.10
+    }
+
+    /// Energy of a completed job from its measured counters.
+    pub fn job_energy(&self, sel: PrecSel, rep: &JobReport) -> EnergyBreakdown {
+        let compute_pj = self.engine.energy_from_stats_pj(sel, &rep.array.stats);
+        let moved = (rep.bytes_in + rep.bytes_out) as f64;
+        // SRAM traffic: operands re-read per tile from SPM (≈2× DMA'd
+        // bytes for output-stationary reuse) + writeback staging.
+        let sram_pj = moved * 2.0 * SRAM_PJ_PER_BYTE;
+        let offchip_pj = moved * OFFCHIP_PJ_PER_BYTE;
+        EnergyBreakdown {
+            compute_j: compute_pj * 1e-12,
+            sram_j: sram_pj * 1e-12,
+            offchip_j: offchip_pj * 1e-12,
+        }
+    }
+
+    /// Tera-ops (2 ops/MAC) achieved by a job.
+    pub fn job_tops(&self, rep: &JobReport) -> f64 {
+        let secs = rep.total_cycles as f64 / self.clock_hz;
+        if secs == 0.0 {
+            return 0.0;
+        }
+        2.0 * rep.array.macs as f64 / secs / 1e12
+    }
+
+    /// TOPS/W on a measured job (dynamic energy + leakage over runtime).
+    pub fn job_tops_per_w(&self, sel: PrecSel, rep: &JobReport) -> f64 {
+        let secs = rep.total_cycles as f64 / self.clock_hz;
+        let e = self.job_energy(sel, rep);
+        let leak = self.morph.pes() as f64 * self.engine.leakage_mw() * 1e-3 * secs;
+        let watts = (e.total_j() + leak) / secs;
+        self.job_tops(rep) / watts
+    }
+
+    /// TOPS/mm² on a measured job.
+    pub fn job_tops_per_mm2(&self, rep: &JobReport) -> f64 {
+        self.job_tops(rep) / self.area_mm2()
+    }
+
+    /// Peak TOPS in a mode (all PEs, all lanes, every cycle).
+    pub fn peak_tops(&self, sel: PrecSel) -> f64 {
+        2.0 * self.morph.pes() as f64 * sel.lanes() as f64 * self.clock_hz / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::{Soc, SocConfig};
+    use crate::util::{Matrix, Rng};
+
+    fn run_one(sel: PrecSel, m: usize, k: usize, n: usize) -> JobReport {
+        let mut soc = Soc::new(SocConfig::default());
+        let mut rng = Rng::new(9);
+        let a = Matrix::random(m, k, 1.0, &mut rng);
+        let b = Matrix::random(k, n, 1.0, &mut rng);
+        soc.gemm(&a, &b, sel, sel.precision()).unwrap().1
+    }
+
+    #[test]
+    fn offchip_dominates_energy() {
+        // §III: off-chip movement ≈ 60% of system energy for memory-bound
+        // layers (small K → low reuse).
+        let sys = SystemModel::asic_coprocessor();
+        let rep = run_one(PrecSel::Posit8x2, 32, 16, 32);
+        let e = sys.job_energy(PrecSel::Posit8x2, &rep);
+        let frac = e.offchip_fraction();
+        assert!((0.4..0.95).contains(&frac), "off-chip fraction {frac:.2}");
+    }
+
+    #[test]
+    fn compute_bound_layers_flip_the_breakdown() {
+        let sys = SystemModel::asic_coprocessor();
+        let rep = run_one(PrecSel::Posit16x1, 32, 512, 32);
+        let e = sys.job_energy(PrecSel::Posit16x1, &rep);
+        // large K amortizes movement
+        assert!(e.compute_j > e.offchip_j * 0.5, "{e:?}");
+    }
+
+    #[test]
+    fn low_precision_improves_tops_per_w() {
+        let sys = SystemModel::asic_coprocessor();
+        let r4 = run_one(PrecSel::Fp4x4, 32, 128, 32);
+        let r16 = run_one(PrecSel::Posit16x1, 32, 128, 32);
+        let e4 = sys.job_tops_per_w(PrecSel::Fp4x4, &r4);
+        let e16 = sys.job_tops_per_w(PrecSel::Posit16x1, &r16);
+        assert!(e4 > 1.5 * e16, "4-bit {e4:.2} vs 16-bit {e16:.2} TOPS/W");
+    }
+
+    #[test]
+    fn peak_tops_scaling() {
+        let sys = SystemModel::asic_coprocessor();
+        assert!((sys.peak_tops(PrecSel::Fp4x4) / sys.peak_tops(PrecSel::Posit16x1) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_within_paper_envelope() {
+        let sys = SystemModel::asic_coprocessor();
+        let a = sys.area_mm2();
+        // paper Table IV: 1.95 mm²
+        assert!((a - 1.95).abs() / 1.95 < 0.1, "area {a:.2}");
+    }
+
+    #[test]
+    fn utilization_tops_below_peak() {
+        let sys = SystemModel::asic_coprocessor();
+        let rep = run_one(PrecSel::Posit8x2, 64, 256, 64);
+        let t = sys.job_tops(&rep);
+        assert!(t > 0.0 && t < sys.peak_tops(PrecSel::Posit8x2));
+    }
+}

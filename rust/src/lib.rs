@@ -1,0 +1,51 @@
+//! # XR-NPE — Mixed-precision SIMD Neural Processing Engine
+//!
+//! A full-system reproduction of *"XR-NPE: High-Throughput Mixed-precision
+//! SIMD Neural Processing Engine for Extended Reality Perception Workloads"*
+//! (CS.AR 2025).
+//!
+//! The crate contains, bottom-up:
+//!
+//! * [`arith`] — bit-accurate scalar codecs for every number format the
+//!   engine touches: HFP4 (E2M1), Posit(4,1)/(8,0)/(16,1)/(32,2), FP8
+//!   (E4M3/E5M2), FP16/BF16/FP32 and fixed-point baselines, plus the
+//!   exact [`arith::quire::Quire`] accumulator.
+//! * [`npe`] — the paper's compute engine: RMMEC reconfigurable mantissa
+//!   multiplier, SIMD MAC lanes with `prec_sel` morphing
+//!   (4×4-bit / 2×8-bit / 1×16-bit), exception handling, zero power
+//!   gating, and dark-silicon/activity statistics.
+//! * [`array`] — the morphable 8×8 / 16×16 matrix-multiplication array
+//!   with an output-stationary cycle model and GEMM tiling.
+//! * [`soc`] — the co-processor substrate of Fig. 4: banked SRAM, AXI
+//!   burst transactions, DMA, CSR file, control FSM and a Cheshire-style
+//!   RISC-V host command interface.
+//! * [`quant`] — the layer-adaptive mixed-precision flow (sensitivity
+//!   metric, entropy-based clipping, PACT) mirrored on the Rust side for
+//!   scheduling decisions.
+//! * [`models`], [`vio`] — XR perception workloads: layer-graph IR,
+//!   EffNet-XR / GazeNet / UL-VIO-lite builders, synthetic KITTI-style
+//!   odometry with the standard translation/rotation RMSE metrics.
+//! * [`energy`] — calibrated 28 nm ASIC area/power/energy model
+//!   (Table II), FPGA LUT/FF/DSP model (Table III), and system-level
+//!   TOPS/W / TOPS/mm² accounting (Table IV).
+//! * [`coordinator`] — the L3 serving layer: layer-adaptive scheduler,
+//!   frame batcher, workload router and the full perception pipeline.
+//! * [`runtime`] — PJRT CPU client that loads the JAX/Pallas-authored
+//!   HLO artifacts and runs them from the Rust request path.
+//!
+//! Python (`python/compile`) exists only on the *build* path: it trains
+//! the QAT workload models, verifies the Pallas kernels against pure-jnp
+//! oracles, and exports HLO text + weights into `artifacts/`.
+
+pub mod arith;
+pub mod array;
+pub mod artifacts;
+pub mod coordinator;
+pub mod energy;
+pub mod models;
+pub mod npe;
+pub mod quant;
+pub mod runtime;
+pub mod soc;
+pub mod util;
+pub mod vio;

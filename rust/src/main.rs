@@ -1,0 +1,201 @@
+//! xr-npe — command-line driver for the XR-NPE simulator stack.
+//!
+//! Subcommands (hand-rolled parser: the offline build has no clap):
+//!
+//! ```text
+//! xr-npe info                         engine + model summary
+//! xr-npe gemm M K N [prec]            run one GEMM on the co-processor sim
+//! xr-npe pipeline [frames]            run the XR perception pipeline
+//! xr-npe artifacts [dir]              list compiled model artifacts
+//! ```
+//!
+//! The full evaluation drivers live in `examples/` and `rust/benches/`.
+
+use anyhow::{bail, Result};
+use xr_npe::coordinator::scheduler::ModelInstance;
+use xr_npe::coordinator::{PerceptionPipeline, PipelineConfig, Router, WorkloadKind};
+use xr_npe::energy::{AsicModel, FpgaModel};
+use xr_npe::models::{effnet, gaze, ulvio, LayerKind};
+use xr_npe::npe::PrecSel;
+use xr_npe::soc::{Soc, SocConfig};
+use xr_npe::util::io::{Tensor, TensorMap};
+use xr_npe::util::{Matrix, Rng};
+use xr_npe::vio::kitti::{SequenceConfig, TrajectoryGenerator};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("info") | None => info(),
+        Some("gemm") => gemm(&args[1..]),
+        Some("pipeline") => pipeline(&args[1..]),
+        Some("artifacts") => artifacts(&args[1..]),
+        Some(other) => bail!("unknown subcommand `{other}` (try: info, gemm, pipeline, artifacts)"),
+    }
+}
+
+fn info() -> Result<()> {
+    println!("XR-NPE — mixed-precision SIMD neural processing engine (simulator)");
+    println!();
+    let m = AsicModel::xr_npe();
+    let (area, power, pj) = m.table2_point();
+    println!("ASIC model (28nm, 0.9V, {:.2} GHz):", m.freq_ghz);
+    println!("  area  {area:.4} mm²   power {power:.1} mW   energy {pj:.1} pJ/op");
+    println!(
+        "  arithmetic-intensity gain vs dedicated baseline: {:.2}x",
+        AsicModel::arith_intensity_gain(0.15)
+    );
+    let f = FpgaModel::xr_npe_8x8();
+    println!(
+        "FPGA model (8x8 @ {} MHz): {:.2}k LUT  {:.2}k FF  {} DSP",
+        f.freq_mhz,
+        f.luts_k(),
+        f.ffs_k(),
+        f.dsps()
+    );
+    println!();
+    for (g, name) in [
+        (effnet::build(), "EffNet-XR"),
+        (gaze::build(), "GazeNet"),
+        (ulvio::build(), "UL-VIO-lite"),
+    ] {
+        println!(
+            "model {name:<12} params {:>7}  MACs/inference {:>8}",
+            g.total_params(),
+            g.total_macs()
+        );
+    }
+    Ok(())
+}
+
+fn gemm(args: &[String]) -> Result<()> {
+    if args.len() < 3 {
+        bail!("usage: xr-npe gemm M K N [fp4|posit4|posit8|posit16]");
+    }
+    let m: usize = args[0].parse()?;
+    let k: usize = args[1].parse()?;
+    let n: usize = args[2].parse()?;
+    let sel = match args.get(3).map(String::as_str) {
+        Some("fp4") => PrecSel::Fp4x4,
+        Some("posit4") => PrecSel::Posit4x4,
+        Some("posit8") | None => PrecSel::Posit8x2,
+        Some("posit16") => PrecSel::Posit16x1,
+        Some(p) => bail!("unknown precision `{p}`"),
+    };
+    let mut soc = Soc::new(SocConfig::default());
+    let mut rng = Rng::new(1);
+    let a = Matrix::random(m, k, 1.0, &mut rng);
+    let b = Matrix::random(k, n, 1.0, &mut rng);
+    let (_, rep) = soc.gemm(&a, &b, sel, sel.precision())?;
+    println!("GEMM {m}x{k}x{n} @ {sel:?}");
+    println!("  cycles        {:>10} (compute {})", rep.total_cycles, rep.compute_cycles);
+    println!(
+        "  MACs          {:>10}  ({:.1} MACs/cycle, util {:.1}%)",
+        rep.array.macs,
+        rep.array.macs_per_cycle,
+        100.0 * rep.array.utilization()
+    );
+    println!("  bytes in/out  {:>10} / {}", rep.bytes_in, rep.bytes_out);
+    println!("  zero-gated    {:>9.1}%", 100.0 * rep.array.stats.gating_ratio());
+    println!("  dark silicon  {:>9.1}%", 100.0 * rep.array.stats.dark_silicon_ratio());
+    let lat = rep.total_cycles as f64 / soc.cfg.clock_hz * 1e6;
+    println!("  latency       {lat:>10.1} µs @ {:.0} MHz", soc.cfg.clock_hz / 1e6);
+    Ok(())
+}
+
+/// Random He-init weights for CLI demos (the examples use the trained
+/// artifacts instead).
+fn random_weights(graph: &xr_npe::models::ModelGraph, seed: u64) -> TensorMap {
+    let mut rng = Rng::new(seed);
+    let mut m = TensorMap::new();
+    for layer in &graph.layers {
+        match &layer.kind {
+            LayerKind::Conv2d { in_c, out_c, k, .. } => {
+                let n = in_c * out_c * k * k;
+                let mut w = vec![0f32; n];
+                rng.fill_normal(&mut w, (2.0 / (in_c * k * k) as f64).sqrt());
+                m.insert(format!("{}.w", layer.name), Tensor::new(vec![*k, *k, *in_c, *out_c], w));
+                m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_c], vec![0.0; *out_c]));
+            }
+            LayerKind::Fc { in_f, out_f } => {
+                let mut w = vec![0f32; in_f * out_f];
+                rng.fill_normal(&mut w, (2.0 / *in_f as f64).sqrt());
+                m.insert(format!("{}.w", layer.name), Tensor::new(vec![*in_f, *out_f], w));
+                m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_f], vec![0.0; *out_f]));
+            }
+            LayerKind::Act(xr_npe::models::ActKind::Pact) => {
+                m.insert(format!("{}.alpha", layer.name), Tensor::new(vec![1], vec![4.0]));
+            }
+            _ => {}
+        }
+    }
+    m
+}
+
+fn build_router() -> Router {
+    let mut router = Router::new(1, SocConfig::default());
+    for (kind, graph, sel) in [
+        (WorkloadKind::Vio, ulvio::build(), PrecSel::Posit8x2),
+        (WorkloadKind::Gaze, gaze::build(), PrecSel::Fp4x4),
+        (WorkloadKind::Classify, effnet::build(), PrecSel::Fp4x4),
+    ] {
+        let w = random_weights(&graph, kind as u64 + 10);
+        router.register(kind, ModelInstance::uniform(graph, w, sel));
+    }
+    router
+}
+
+fn pipeline(args: &[String]) -> Result<()> {
+    let frames: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(30);
+    let seq =
+        TrajectoryGenerator::new(SequenceConfig { frames, ..Default::default() }).sequence();
+    let gaze_in: Vec<Vec<f32>> =
+        (0..frames).map(|i| vec![(i as f32 * 0.03).sin() * 0.5; 16]).collect();
+
+    // calibrate host budgets to the Aspen 60% point, then run
+    let mut probe_router = build_router();
+    let probe = PerceptionPipeline::new(PipelineConfig {
+        visual_cycles: 0,
+        audio_cycles: 0,
+        other_cycles: 0,
+        classify_every: 5,
+    });
+    let base = probe.run(&mut probe_router, &seq, &gaze_in)?;
+    let per_frame = base.breakdown.perception_cycles() / frames as u64;
+
+    let mut router = build_router();
+    let pipe = PerceptionPipeline::new(PipelineConfig::calibrated_to(per_frame));
+    let rep = pipe.run(&mut router, &seq, &gaze_in)?;
+
+    println!("XR perception pipeline — {frames} frames (random weights; run examples/xr_pipeline for trained artifacts)");
+    println!("{:<28} {:>12} {:>8}", "stage", "cycles", "share");
+    for (name, cyc, frac) in rep.breakdown.rows() {
+        println!("{name:<28} {cyc:>12} {:>7.1}%", frac * 100.0);
+    }
+    println!("perception share: {:.1}%", rep.breakdown.perception_fraction() * 100.0);
+    let clock = 250e6;
+    println!(
+        "frame latency: mean {:.2} ms  p99 {:.2} ms  ({:.0} fps)",
+        rep.frame_latency.mean() / clock * 1e3,
+        rep.frame_latency.p99() as f64 / clock * 1e3,
+        rep.frame_latency.fps(clock)
+    );
+    Ok(())
+}
+
+fn artifacts(args: &[String]) -> Result<()> {
+    let dir = args.first().map(String::as_str).unwrap_or("artifacts");
+    let mut reg = xr_npe::runtime::Registry::open(dir)?;
+    println!("artifacts in {dir}:");
+    for name in reg.names() {
+        let ok = reg.get(&name).map(|_| "compiles").unwrap_or("COMPILE ERROR");
+        println!("  {name:<28} {ok}");
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! EffNet-XR — the object-classification workload (paper Fig. 5 / 8,
+//! Table IV's EfficientNet row), scaled to the synthetic shapes-10
+//! dataset (16×16 grayscale, 10 classes).
+//!
+//! Architecture (compound-scaled conv stack in the EfficientNet spirit —
+//! stem → stages → head):
+//!
+//! ```text
+//! conv1 1→8  3×3 s1 p1 · PACT · maxpool2      (16×16 → 8×8)
+//! conv2 8→16 3×3 s1 p1 · PACT · maxpool2      (8×8 → 4×4)
+//! conv3 16→32 3×3 s1 p1 · PACT · maxpool2     (4×4 → 2×2)
+//! fc1 128→64 · PACT
+//! fc2 64→10
+//! ```
+//!
+//! Weight names match `python/compile/model.py::effnet_params`.
+
+use super::graph::{ActKind, Layer, LayerKind, ModelGraph, PoolKind, Shape};
+
+/// Number of classes in shapes-10.
+pub const NUM_CLASSES: usize = 10;
+
+/// Input shape.
+pub const INPUT: Shape = Shape { c: 1, h: 16, w: 16 };
+
+/// Build the graph.
+pub fn build() -> ModelGraph {
+    let l = |name: &str, kind: LayerKind| Layer { name: name.into(), kind };
+    ModelGraph {
+        name: "effnet_xr".into(),
+        input: INPUT,
+        layers: vec![
+            l("conv1", LayerKind::Conv2d { in_c: 1, out_c: 8, k: 3, stride: 1, pad: 1 }),
+            l("act1", LayerKind::Act(ActKind::Pact)),
+            l("pool1", LayerKind::Pool { kind: PoolKind::Max, size: 2 }),
+            l("conv2", LayerKind::Conv2d { in_c: 8, out_c: 16, k: 3, stride: 1, pad: 1 }),
+            l("act2", LayerKind::Act(ActKind::Pact)),
+            l("pool2", LayerKind::Pool { kind: PoolKind::Max, size: 2 }),
+            l("conv3", LayerKind::Conv2d { in_c: 16, out_c: 32, k: 3, stride: 1, pad: 1 }),
+            l("act3", LayerKind::Act(ActKind::Pact)),
+            l("pool3", LayerKind::Pool { kind: PoolKind::Max, size: 2 }),
+            l("flat", LayerKind::Flatten),
+            l("fc1", LayerKind::Fc { in_f: 128, out_f: 64 }),
+            l("act4", LayerKind::Act(ActKind::Pact)),
+            l("fc2", LayerKind::Fc { in_f: 64, out_f: NUM_CLASSES }),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_check_out() {
+        let g = build();
+        assert_eq!(g.out_shape(), Shape::vec(10));
+        // 5 compute layers
+        assert_eq!(g.compute_layers().len(), 5);
+    }
+
+    #[test]
+    fn parameter_count_reasonable() {
+        let g = build();
+        let p = g.total_params();
+        assert!((10_000..30_000).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn macs_per_inference() {
+        let g = build();
+        let m = g.total_macs();
+        assert!((100_000..400_000).contains(&m), "macs {m}");
+    }
+}

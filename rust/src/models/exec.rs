@@ -1,0 +1,497 @@
+//! Forward execution of a [`ModelGraph`] — the f32 reference path and the
+//! bit-accurate NPE path.
+//!
+//! The NPE path lowers every compute layer to an im2col GEMM on the
+//! simulated co-processor ([`crate::soc::Soc`]) under a per-layer
+//! [`PrecisionPlan`]: weights *and* activations are quantized to the
+//! layer's `prec_sel` on entry (the engine's input stage), accumulation
+//! is quire-exact, and the output is rounded once to the layer's format —
+//! precisely the paper's inference configuration ("activations are
+//! retained with particular precision across all layers"). Per-tensor
+//! power-of-two scales (eq. 3 restricted to 2^k — an exponent offset in
+//! hardware) normalize operands into each format's sweet spot; bias is
+//! preloaded into the accumulation at full scale and the output is
+//! requantized once.
+//!
+//! Weight layout (must match `python/compile/model.py`):
+//! * conv `<name>.w`: dims `[k, k, in_c, out_c]` (HWIO), `<name>.b`: `[out_c]`
+//! * fc `<name>.w`: dims `[in_f, out_f]`, `<name>.b`: `[out_f]`
+//! * pact `<name>.alpha`: `[1]`
+
+use super::graph::{ActKind, LayerKind, ModelGraph, PoolKind, Shape};
+use crate::arith::{tables, Precision};
+use crate::quant::PrecisionPlan;
+use crate::soc::{JobReport, Soc};
+use crate::util::io::TensorMap;
+use crate::util::Matrix;
+use anyhow::{bail, Context, Result};
+
+/// Execution statistics for one forward pass (NPE path).
+#[derive(Debug, Clone, Default)]
+pub struct ExecReport {
+    /// Merged co-processor job reports over all compute layers.
+    pub jobs: JobReport,
+    /// Vector-unit (pool/act) element operations, charged at `lanes`
+    /// elems/cycle on the output stage.
+    pub vector_cycles: u64,
+    /// Per-layer (layer index, cycles) breakdown.
+    pub per_layer_cycles: Vec<(usize, u64)>,
+}
+
+impl ExecReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.jobs.total_cycles + self.vector_cycles
+    }
+
+    pub fn merge(&mut self, o: &ExecReport) {
+        self.jobs.merge(&o.jobs);
+        self.vector_cycles += o.vector_cycles;
+    }
+}
+
+/// How to run the graph.
+pub enum Backend<'a> {
+    /// Pure f32 reference.
+    Ref,
+    /// Bit-accurate co-processor path under a plan.
+    Npe { soc: &'a mut Soc, plan: &'a PrecisionPlan },
+}
+
+/// The executor.
+pub struct Executor<'a> {
+    pub graph: &'a ModelGraph,
+    pub weights: &'a TensorMap,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(graph: &'a ModelGraph, weights: &'a TensorMap) -> Executor<'a> {
+        Executor { graph, weights }
+    }
+
+    fn tensor(&self, name: &str) -> Result<&crate::util::io::Tensor> {
+        self.weights
+            .get(name)
+            .with_context(|| format!("missing weight tensor `{name}` for {}", self.graph.name))
+    }
+
+    /// Forward pass. `aux` feeds `ConcatAux` layers (in order).
+    pub fn forward(
+        &self,
+        input: &[f32],
+        aux: &[f32],
+        backend: &mut Backend,
+    ) -> Result<(Vec<f32>, ExecReport)> {
+        let shapes = self.graph.shapes();
+        if input.len() != shapes[0].numel() {
+            bail!("input length {} != {}", input.len(), shapes[0].numel());
+        }
+        let mut act: Vec<f32> = input.to_vec();
+        let mut report = ExecReport::default();
+        let mut compute_idx = 0usize; // index among compute layers (plan granularity)
+
+        for (li, layer) in self.graph.layers.iter().enumerate() {
+            let in_shape = shapes[li];
+            match &layer.kind {
+                LayerKind::Conv2d { in_c, out_c, k, stride, pad } => {
+                    let a = im2col(&act, in_shape, *k, *stride, *pad);
+                    let wt = self.tensor(&format!("{}.w", layer.name))?;
+                    if wt.dims != vec![*k, *k, *in_c, *out_c] {
+                        bail!("{}.w dims {:?} unexpected", layer.name, wt.dims);
+                    }
+                    let b = Matrix::from_vec(in_c * k * k, *out_c, wt.data.clone());
+                    let bias = self.tensor(&format!("{}.b", layer.name))?;
+                    let out_shape = layer.kind.out_shape(in_shape);
+                    let out = self.run_gemm(
+                        li,
+                        compute_idx,
+                        &a,
+                        &b,
+                        &bias.data,
+                        backend,
+                        &mut report,
+                    )?;
+                    // out: (oh*ow) × out_c → CHW
+                    act = hwc_to_chw(&out, out_shape);
+                    compute_idx += 1;
+                }
+                LayerKind::Fc { in_f, out_f } => {
+                    let a = Matrix::from_vec(1, *in_f, act.clone());
+                    let wt = self.tensor(&format!("{}.w", layer.name))?;
+                    if wt.dims != vec![*in_f, *out_f] {
+                        bail!("{}.w dims {:?} unexpected", layer.name, wt.dims);
+                    }
+                    let b = Matrix::from_vec(*in_f, *out_f, wt.data.clone());
+                    let bias = self.tensor(&format!("{}.b", layer.name))?;
+                    let out =
+                        self.run_gemm(li, compute_idx, &a, &b, &bias.data, backend, &mut report)?;
+                    act = out.data;
+                    compute_idx += 1;
+                }
+                LayerKind::Pool { kind, size } => {
+                    act = pool(&act, in_shape, *kind, *size);
+                    report.vector_cycles += (in_shape.numel() / 2) as u64;
+                }
+                LayerKind::Act(kind) => {
+                    let alpha = match kind {
+                        ActKind::Pact => {
+                            self.tensor(&format!("{}.alpha", layer.name))?.data[0] as f64
+                        }
+                        _ => 0.0,
+                    };
+                    for v in act.iter_mut() {
+                        *v = activate(*v as f64, *kind, alpha) as f32;
+                    }
+                    report.vector_cycles += (act.len() / 4) as u64;
+                }
+                LayerKind::Flatten => { /* CHW storage is already flat */ }
+                LayerKind::ConcatAux { n } => {
+                    if aux.len() != *n {
+                        bail!("aux length {} != {}", aux.len(), n);
+                    }
+                    act.extend_from_slice(aux);
+                }
+            }
+        }
+        Ok((act, report))
+    }
+
+    /// GEMM + bias on the selected backend (bias via ones-column
+    /// augmentation so it lands in the quire).
+    #[allow(clippy::too_many_arguments)]
+    fn run_gemm(
+        &self,
+        layer_idx: usize,
+        compute_idx: usize,
+        a: &Matrix,
+        b: &Matrix,
+        bias: &[f32],
+        backend: &mut Backend,
+        report: &mut ExecReport,
+    ) -> Result<Matrix> {
+        match backend {
+            Backend::Ref => {
+                let out = a.matmul(b).add_row(bias);
+                Ok(out)
+            }
+            Backend::Npe { soc, plan } => {
+                let sel = plan.per_layer[compute_idx];
+                let prec = sel.precision();
+                let out_prec = plan.layer_precision(compute_idx);
+                // Per-tensor pow-2 scales (exponent-offset registers of
+                // the input stage — mirror of quantlib.scale_for /
+                // dyn_scale).
+                let s_a = scale_for(&a.data, prec);
+                let s_b = scale_for(&b.data, prec);
+                let a_s = a.map(|x| (x as f64 / s_a) as f32);
+                let b_s = b.map(|x| (x as f64 / s_b) as f32);
+                // GEMM with quire-exact accumulate; output processing
+                // folds the combined scale back in (f32 carrier, single
+                // requant below).
+                let (raw, rep) = soc.gemm(&a_s, &b_s, sel, Precision::Fp32)?;
+                report.per_layer_cycles.push((layer_idx, rep.total_cycles));
+                report.jobs.merge(&rep);
+                // bias preload (quire-side add at full scale) + output
+                // requantization to the layer's format at its own scale
+                let mut out = Matrix::zeros(a.rows, b.cols);
+                for r in 0..a.rows {
+                    for c in 0..b.cols {
+                        out.set(r, c, ((raw.at(r, c) as f64) * s_a * s_b) as f32 + bias[c]);
+                    }
+                }
+                let s_out = scale_for(&out.data, out_prec);
+                let out = out.map(|x| {
+                    (s_out * tables::quantize(out_prec, x as f64 / s_out)) as f32
+                });
+                Ok(out)
+            }
+        }
+    }
+
+    /// Convenience: f32 reference forward.
+    pub fn forward_ref(&self, input: &[f32], aux: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.forward(input, aux, &mut Backend::Ref)?.0)
+    }
+
+    /// Convenience: NPE forward under a plan.
+    pub fn forward_npe(
+        &self,
+        input: &[f32],
+        aux: &[f32],
+        soc: &mut Soc,
+        plan: &PrecisionPlan,
+    ) -> Result<(Vec<f32>, ExecReport)> {
+        self.forward(input, aux, &mut Backend::Npe { soc, plan })
+    }
+}
+
+/// Per-tensor power-of-two scale — mirror of
+/// `python/compile/quantlib.py::scale_for` (paper eq. 3 restricted to
+/// powers of two so hardware folds the scale into the exponent path).
+/// Range-fit for narrow formats; magnitude-centering for posits (their
+/// tapered precision peaks at 1.0); identity for wide formats.
+pub fn scale_for(xs: &[f32], prec: Precision) -> f64 {
+    use Precision::*;
+    match prec {
+        Fp32 | Fp16 | Bf16 => return 1.0,
+        _ => {}
+    }
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let range_fit = matches!(prec, Fp4 | Fxp4 | Fxp8 | Fxp16 | Fp8E4M3 | Fp8E5M2);
+    if range_fit {
+        let m = xs.iter().fold(0.0f64, |m, &x| m.max(x.abs() as f64));
+        if m == 0.0 {
+            return 1.0;
+        }
+        2f64.powi((m / prec.max_value()).log2().round() as i32)
+    } else {
+        let m = xs.iter().map(|&x| x.abs() as f64).sum::<f64>() / xs.len() as f64;
+        if m == 0.0 {
+            return 1.0;
+        }
+        2f64.powi(m.log2().round() as i32)
+    }
+}
+
+/// im2col: CHW input → (oh·ow) × (in_c·k·k) patch matrix with patch
+/// element order (ky, kx, ic) — matching the HWIO weight flattening.
+pub fn im2col(input: &[f32], s: Shape, k: usize, stride: usize, pad: usize) -> Matrix {
+    let oh = (s.h + 2 * pad - k) / stride + 1;
+    let ow = (s.w + 2 * pad - k) / stride + 1;
+    let mut m = Matrix::zeros(oh * ow, s.c * k * k);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            for ky in 0..k {
+                for kx in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    if iy < 0 || ix < 0 || iy >= s.h as isize || ix >= s.w as isize {
+                        continue; // zero pad
+                    }
+                    for ic in 0..s.c {
+                        let v = input[ic * s.h * s.w + iy as usize * s.w + ix as usize];
+                        m.set(row, (ky * k + kx) * s.c + ic, v);
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+/// (oh·ow)×out_c GEMM output → CHW.
+fn hwc_to_chw(out: &Matrix, s: Shape) -> Vec<f32> {
+    let mut v = vec![0.0f32; s.numel()];
+    for p in 0..s.h * s.w {
+        for c in 0..s.c {
+            v[c * s.h * s.w + p] = out.at(p, c);
+        }
+    }
+    v
+}
+
+fn pool(input: &[f32], s: Shape, kind: PoolKind, size: usize) -> Vec<f32> {
+    let oh = s.h / size;
+    let ow = s.w / size;
+    let mut out = vec![0.0f32; s.c * oh * ow];
+    for c in 0..s.c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = match kind {
+                    PoolKind::Max => f32::MIN,
+                    PoolKind::Avg => 0.0,
+                };
+                for dy in 0..size {
+                    for dx in 0..size {
+                        let v = input[c * s.h * s.w + (oy * size + dy) * s.w + (ox * size + dx)];
+                        match kind {
+                            PoolKind::Max => acc = acc.max(v),
+                            PoolKind::Avg => acc += v,
+                        }
+                    }
+                }
+                if kind == PoolKind::Avg {
+                    acc /= (size * size) as f32;
+                }
+                out[c * oh * ow + oy * ow + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+fn activate(x: f64, kind: ActKind, alpha: f64) -> f64 {
+    match kind {
+        ActKind::Relu => x.max(0.0),
+        // eqs. (6)+(7): clip AND quantize to the 8-bit PACT grid —
+        // matching python model.pact_act (n_bits = 8)
+        ActKind::Pact => crate::quant::pact::pact_quantize(x, alpha.max(1e-3), 8),
+        ActKind::Tanh => x.tanh(),
+        ActKind::Identity => x,
+    }
+}
+
+/// Quantize a weight map to a per-layer plan (for size accounting and
+/// sensitivity sweeps — the NPE path re-quantizes on entry anyway).
+pub fn quantize_weights(
+    graph: &ModelGraph,
+    weights: &TensorMap,
+    prec: Precision,
+) -> TensorMap {
+    let mut out = weights.clone();
+    for layer in &graph.layers {
+        for suffix in ["w", "b"] {
+            if let Some(t) = out.get_mut(&format!("{}.{}", layer.name, suffix)) {
+                for v in t.data.iter_mut() {
+                    *v = tables::quantize(prec, *v as f64) as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::graph::Layer;
+    use crate::npe::PrecSel;
+    use crate::soc::SocConfig;
+    use crate::util::io::Tensor;
+    use crate::util::Rng;
+
+    fn toy_graph() -> ModelGraph {
+        ModelGraph {
+            name: "toy".into(),
+            input: Shape { c: 2, h: 6, w: 6 },
+            layers: vec![
+                Layer {
+                    name: "conv1".into(),
+                    kind: LayerKind::Conv2d { in_c: 2, out_c: 4, k: 3, stride: 1, pad: 1 },
+                },
+                Layer { name: "act1".into(), kind: LayerKind::Act(ActKind::Relu) },
+                Layer { name: "pool1".into(), kind: LayerKind::Pool { kind: PoolKind::Max, size: 2 } },
+                Layer { name: "flat".into(), kind: LayerKind::Flatten },
+                Layer { name: "fc1".into(), kind: LayerKind::Fc { in_f: 36, out_f: 5 } },
+            ],
+        }
+    }
+
+    fn toy_weights(g: &ModelGraph, rng: &mut Rng) -> TensorMap {
+        let mut m = TensorMap::new();
+        m.insert("conv1.w".into(), Tensor::new(vec![3, 3, 2, 4], {
+            let mut v = vec![0f32; 72];
+            rng.fill_normal(&mut v, 0.4);
+            v
+        }));
+        m.insert("conv1.b".into(), Tensor::new(vec![4], vec![0.1, -0.1, 0.05, 0.0]));
+        m.insert("fc1.w".into(), Tensor::new(vec![36, 5], {
+            let mut v = vec![0f32; 180];
+            rng.fill_normal(&mut v, 0.3);
+            v
+        }));
+        m.insert("fc1.b".into(), Tensor::new(vec![5], vec![0.0; 5]));
+        let _ = g;
+        m
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // k=1 conv im2col is the identity permutation
+        let s = Shape { c: 2, h: 3, w: 3 };
+        let input: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let m = im2col(&input, s, 1, 1, 0);
+        assert_eq!(m.rows, 9);
+        assert_eq!(m.cols, 2);
+        // row p, col ic = input[ic*9 + p]
+        assert_eq!(m.at(4, 1), input[9 + 4]);
+    }
+
+    #[test]
+    fn im2col_padding_zeroes_border() {
+        let s = Shape { c: 1, h: 2, w: 2 };
+        let input = vec![1.0, 2.0, 3.0, 4.0];
+        let m = im2col(&input, s, 3, 1, 1);
+        // top-left output patch: corner elements padded
+        assert_eq!(m.at(0, 0), 0.0); // ky=0,kx=0 out of bounds
+        assert_eq!(m.at(0, 4), 1.0); // center = input(0,0)
+    }
+
+    #[test]
+    fn ref_forward_shapes() {
+        let g = toy_graph();
+        let mut rng = Rng::new(1);
+        let w = toy_weights(&g, &mut rng);
+        let ex = Executor::new(&g, &w);
+        let input: Vec<f32> = (0..72).map(|i| (i as f32 * 0.1).sin()).collect();
+        let out = ex.forward_ref(&input, &[]).unwrap();
+        assert_eq!(out.len(), 5);
+    }
+
+    #[test]
+    fn npe_at_posit16_close_to_ref() {
+        let g = toy_graph();
+        let mut rng = Rng::new(2);
+        let w = toy_weights(&g, &mut rng);
+        let ex = Executor::new(&g, &w);
+        let input: Vec<f32> = (0..72).map(|i| ((i as f32) * 0.13).cos() * 0.5).collect();
+        let ref_out = ex.forward_ref(&input, &[]).unwrap();
+        let mut soc = Soc::new(SocConfig::default());
+        let plan = PrecisionPlan::uniform(PrecSel::Posit16x1, &g.compute_layer_params());
+        let (npe_out, rep) = ex.forward_npe(&input, &[], &mut soc, &plan).unwrap();
+        for (a, b) in ref_out.iter().zip(&npe_out) {
+            assert!((a - b).abs() < 2e-2, "ref {a} npe {b}");
+        }
+        assert!(rep.jobs.total_cycles > 0);
+        assert_eq!(rep.per_layer_cycles.len(), 2);
+    }
+
+    #[test]
+    fn npe_fp4_degrades_gracefully() {
+        let g = toy_graph();
+        let mut rng = Rng::new(3);
+        let w = toy_weights(&g, &mut rng);
+        let ex = Executor::new(&g, &w);
+        let input: Vec<f32> = (0..72).map(|i| ((i as f32) * 0.07).sin()).collect();
+        let ref_out = ex.forward_ref(&input, &[]).unwrap();
+        let mut soc = Soc::new(SocConfig::default());
+        let plan = PrecisionPlan::uniform(PrecSel::Fp4x4, &g.compute_layer_params());
+        let (out4, _) = ex.forward_npe(&input, &[], &mut soc, &plan).unwrap();
+        // correlated but not equal
+        let err = crate::util::rmse(&ref_out, &out4);
+        assert!(err > 0.0, "fp4 must differ from fp32");
+        assert!(err < 2.0, "fp4 should stay in the ballpark (err {err})");
+    }
+
+    #[test]
+    fn bias_preload_is_exact() {
+        // FC layer: y = Wx + b must hold exactly in posit16 for exact
+        // representable values.
+        let g = ModelGraph {
+            name: "fc".into(),
+            input: Shape::vec(4),
+            layers: vec![Layer { name: "fc".into(), kind: LayerKind::Fc { in_f: 4, out_f: 2 } }],
+        };
+        let mut w = TensorMap::new();
+        w.insert("fc.w".into(), Tensor::new(vec![4, 2], vec![1.0, 0.5, -1.0, 2.0, 0.25, -0.5, 1.5, 1.0]));
+        w.insert("fc.b".into(), Tensor::new(vec![2], vec![0.5, -0.25]));
+        let ex = Executor::new(&g, &w);
+        let input = vec![1.0, -1.0, 0.5, 2.0];
+        let want = ex.forward_ref(&input, &[]).unwrap();
+        let mut soc = Soc::new(SocConfig::default());
+        let plan = PrecisionPlan::uniform(PrecSel::Posit16x1, &g.compute_layer_params());
+        let (got, _) = ex.forward_npe(&input, &[], &mut soc, &plan).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn missing_weight_is_clear_error() {
+        let g = toy_graph();
+        let w = TensorMap::new();
+        let ex = Executor::new(&g, &w);
+        let err = ex.forward_ref(&vec![0.0; 72], &[]).unwrap_err();
+        assert!(err.to_string().contains("conv1.w"));
+    }
+}

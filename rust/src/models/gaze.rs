@@ -1,0 +1,50 @@
+//! GazeNet — the eye-gaze extraction workload (paper Fig. 7: "eye-gaze
+//! LLE estimation" MSE vs precision).
+//!
+//! Input: 16 eye-landmark coordinates (8 points × (x, y)) from the
+//! synthetic eye model in `python/compile/datasets.py`; output: gaze
+//! direction (yaw, pitch). A compact MLP — gaze nets on XR SoCs are
+//! latency-critical and tiny.
+//!
+//! ```text
+//! fc1 16→64 · PACT
+//! fc2 64→64 · PACT
+//! fc3 64→2  (linear, radians)
+//! ```
+
+use super::graph::{ActKind, Layer, LayerKind, ModelGraph, Shape};
+
+/// Input landmark features.
+pub const INPUT_DIM: usize = 16;
+/// Output: (yaw, pitch).
+pub const OUTPUT_DIM: usize = 2;
+
+/// Build the graph.
+pub fn build() -> ModelGraph {
+    let l = |name: &str, kind: LayerKind| Layer { name: name.into(), kind };
+    ModelGraph {
+        name: "gazenet".into(),
+        input: Shape::vec(INPUT_DIM),
+        layers: vec![
+            l("fc1", LayerKind::Fc { in_f: INPUT_DIM, out_f: 64 }),
+            l("act1", LayerKind::Act(ActKind::Pact)),
+            l("fc2", LayerKind::Fc { in_f: 64, out_f: 64 }),
+            l("act2", LayerKind::Act(ActKind::Pact)),
+            l("fc3", LayerKind::Fc { in_f: 64, out_f: OUTPUT_DIM }),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let g = build();
+        assert_eq!(g.out_shape(), Shape::vec(2));
+        assert_eq!(g.compute_layers().len(), 3);
+        // ~5.5k params
+        assert!((5_000..7_000).contains(&g.total_params()));
+    }
+}

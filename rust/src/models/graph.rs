@@ -1,0 +1,248 @@
+//! The layer-graph IR.
+//!
+//! Shapes are CHW (channels, height, width); fully-connected layers work
+//! on flattened vectors (c = features, h = w = 1). Convolutions lower to
+//! im2col GEMMs of shape `M = out_h·out_w`, `K = in_c·k·k`, `N = out_c`
+//! — the mapping `exec` feeds the 8×8 array with.
+
+/// Activation kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActKind {
+    Relu,
+    /// Clipped ReLU with trained α (PACT, eq. 6). The α lives in the
+    /// weight map as `<layer>.alpha`.
+    Pact,
+    Tanh,
+    Identity,
+}
+
+/// Pooling kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Layer kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution, 'same'-style explicit padding.
+    Conv2d { in_c: usize, out_c: usize, k: usize, stride: usize, pad: usize },
+    /// Fully connected.
+    Fc { in_f: usize, out_f: usize },
+    /// Spatial pooling (square window, stride = window).
+    Pool { kind: PoolKind, size: usize },
+    /// Elementwise activation.
+    Act(ActKind),
+    /// Flatten CHW → vector.
+    Flatten,
+    /// Concatenate an auxiliary input vector (e.g. IMU features) onto a
+    /// flattened feature vector.
+    ConcatAux { n: usize },
+}
+
+/// A named layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+/// Shape in CHW.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Shape {
+    pub fn vec(n: usize) -> Shape {
+        Shape { c: n, h: 1, w: 1 }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+/// A whole model.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+}
+
+impl LayerKind {
+    /// Output shape given an input shape. Panics on shape mismatch (a
+    /// model-construction bug, not a runtime condition).
+    pub fn out_shape(&self, s: Shape) -> Shape {
+        match *self {
+            LayerKind::Conv2d { in_c, out_c, k, stride, pad } => {
+                assert_eq!(s.c, in_c, "conv in_c mismatch");
+                let oh = (s.h + 2 * pad - k) / stride + 1;
+                let ow = (s.w + 2 * pad - k) / stride + 1;
+                Shape { c: out_c, h: oh, w: ow }
+            }
+            LayerKind::Fc { in_f, out_f } => {
+                assert_eq!(s.numel(), in_f, "fc in_f mismatch");
+                Shape::vec(out_f)
+            }
+            LayerKind::Pool { size, .. } => {
+                Shape { c: s.c, h: s.h / size, w: s.w / size }
+            }
+            LayerKind::Act(_) => s,
+            LayerKind::Flatten => Shape::vec(s.numel()),
+            LayerKind::ConcatAux { n } => {
+                assert_eq!(s.h * s.w, 1, "concat requires flattened input");
+                Shape::vec(s.c + n)
+            }
+        }
+    }
+
+    /// Trainable parameter count (weights + bias).
+    pub fn params(&self) -> usize {
+        match *self {
+            LayerKind::Conv2d { in_c, out_c, k, .. } => in_c * out_c * k * k + out_c,
+            LayerKind::Fc { in_f, out_f } => in_f * out_f + out_f,
+            LayerKind::Act(ActKind::Pact) => 1, // the trained α
+            _ => 0,
+        }
+    }
+
+    /// MACs for one forward pass at the given input shape.
+    pub fn macs(&self, s: Shape) -> u64 {
+        match *self {
+            LayerKind::Conv2d { in_c, out_c, k, .. } => {
+                let o = self.out_shape(s);
+                (o.h * o.w * in_c * k * k * out_c) as u64
+            }
+            LayerKind::Fc { in_f, out_f } => (in_f * out_f) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Does this layer run on the MAC array?
+    pub fn is_compute(&self) -> bool {
+        matches!(self, LayerKind::Conv2d { .. } | LayerKind::Fc { .. })
+    }
+
+    /// im2col GEMM shape (M, K, N) for compute layers.
+    pub fn gemm_shape(&self, s: Shape) -> Option<(usize, usize, usize)> {
+        match *self {
+            LayerKind::Conv2d { in_c, out_c, k, .. } => {
+                let o = self.out_shape(s);
+                Some((o.h * o.w, in_c * k * k, out_c))
+            }
+            LayerKind::Fc { in_f, out_f } => Some((1, in_f, out_f)),
+            _ => None,
+        }
+    }
+}
+
+impl ModelGraph {
+    /// Shapes at every layer boundary (len = layers + 1, starting with
+    /// the input).
+    pub fn shapes(&self) -> Vec<Shape> {
+        let mut out = vec![self.input];
+        for l in &self.layers {
+            let next = l.kind.out_shape(*out.last().unwrap());
+            out.push(next);
+        }
+        out
+    }
+
+    pub fn out_shape(&self) -> Shape {
+        *self.shapes().last().unwrap()
+    }
+
+    /// Total trainable parameters.
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.kind.params()).sum()
+    }
+
+    /// Total MACs per forward pass.
+    pub fn total_macs(&self) -> u64 {
+        let shapes = self.shapes();
+        self.layers.iter().zip(&shapes).map(|(l, &s)| l.kind.macs(s)).sum()
+    }
+
+    /// Indices of compute (GEMM-lowered) layers.
+    pub fn compute_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind.is_compute())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Parameter count per *compute* layer (the precision planner's
+    /// granularity).
+    pub fn compute_layer_params(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter(|l| l.kind.is_compute())
+            .map(|l| l.kind.params())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ModelGraph {
+        ModelGraph {
+            name: "toy".into(),
+            input: Shape { c: 1, h: 16, w: 16 },
+            layers: vec![
+                Layer { name: "conv1".into(), kind: LayerKind::Conv2d { in_c: 1, out_c: 8, k: 3, stride: 1, pad: 1 } },
+                Layer { name: "act1".into(), kind: LayerKind::Act(ActKind::Relu) },
+                Layer { name: "pool1".into(), kind: LayerKind::Pool { kind: PoolKind::Max, size: 2 } },
+                Layer { name: "flat".into(), kind: LayerKind::Flatten },
+                Layer { name: "fc1".into(), kind: LayerKind::Fc { in_f: 512, out_f: 10 } },
+            ],
+        }
+    }
+
+    #[test]
+    fn shape_propagation() {
+        let g = toy();
+        let shapes = g.shapes();
+        assert_eq!(shapes[1], Shape { c: 8, h: 16, w: 16 });
+        assert_eq!(shapes[3], Shape { c: 8, h: 8, w: 8 });
+        assert_eq!(g.out_shape(), Shape::vec(10));
+    }
+
+    #[test]
+    fn param_and_mac_accounting() {
+        let g = toy();
+        // conv: 1*8*9+8 = 80; fc: 512*10+10 = 5130
+        assert_eq!(g.total_params(), 80 + 5130);
+        // conv macs: 16*16*9*8 = 18432; fc: 5120
+        assert_eq!(g.total_macs(), 18432 + 5120);
+    }
+
+    #[test]
+    fn gemm_shapes() {
+        let g = toy();
+        let s = g.shapes();
+        assert_eq!(g.layers[0].kind.gemm_shape(s[0]), Some((256, 9, 8)));
+        assert_eq!(g.layers[4].kind.gemm_shape(s[4]), Some((1, 512, 10)));
+    }
+
+    #[test]
+    #[should_panic(expected = "conv in_c mismatch")]
+    fn bad_shape_panics() {
+        let k = LayerKind::Conv2d { in_c: 3, out_c: 8, k: 3, stride: 1, pad: 1 };
+        k.out_shape(Shape { c: 1, h: 8, w: 8 });
+    }
+
+    #[test]
+    fn concat_aux_shape() {
+        let k = LayerKind::ConcatAux { n: 6 };
+        assert_eq!(k.out_shape(Shape::vec(256)), Shape::vec(262));
+    }
+}

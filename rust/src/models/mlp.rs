@@ -1,0 +1,48 @@
+//! MLP-XR — the Table-IV-style MLP workload (the comparison table's
+//! "784-200-100-10"-class baselines run MLPs; ours is a flattened
+//! shapes-10 classifier of the same structure).
+//!
+//! ```text
+//! fc1 256→128 · PACT
+//! fc2 128→64  · PACT
+//! fc3 64→10
+//! ```
+//!
+//! Weight names match `python/compile/model.py::mlp_params`.
+
+use super::graph::{ActKind, Layer, LayerKind, ModelGraph, Shape};
+
+/// Flattened 16×16 input.
+pub const INPUT_DIM: usize = 256;
+/// 10 classes.
+pub const NUM_CLASSES: usize = 10;
+
+/// Build the graph.
+pub fn build() -> ModelGraph {
+    let l = |name: &str, kind: LayerKind| Layer { name: name.into(), kind };
+    ModelGraph {
+        name: "mlp_xr".into(),
+        input: Shape::vec(INPUT_DIM),
+        layers: vec![
+            l("fc1", LayerKind::Fc { in_f: INPUT_DIM, out_f: 128 }),
+            l("act1", LayerKind::Act(ActKind::Pact)),
+            l("fc2", LayerKind::Fc { in_f: 128, out_f: 64 }),
+            l("act2", LayerKind::Act(ActKind::Pact)),
+            l("fc3", LayerKind::Fc { in_f: 64, out_f: NUM_CLASSES }),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let g = build();
+        assert_eq!(g.out_shape(), Shape::vec(10));
+        assert_eq!(g.compute_layers().len(), 3);
+        // 256·128 + 128 + 128·64 + 64 + 64·10 + 10 = 41802
+        assert_eq!(g.total_params(), 41802 + 2); // + two PACT alphas
+    }
+}

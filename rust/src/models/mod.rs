@@ -1,0 +1,23 @@
+//! XR perception workload models: a small layer-graph IR, builders for
+//! the three paper workloads, and a bit-accurate executor that lowers
+//! every layer to GEMMs on the simulated co-processor.
+//!
+//! * [`graph`] — the IR: conv / depthwise / fc / pool / activation /
+//!   concat, with shape, parameter and MAC accounting.
+//! * [`exec`] — forward execution: f32 reference path and the NPE path
+//!   (im2col → `soc::Soc::gemm` per layer under a
+//!   [`crate::quant::PrecisionPlan`], activations quantized per layer).
+//! * [`effnet`] / [`gaze`] / [`ulvio`] — the EfficientNet-style
+//!   classifier, the eye-gaze regressor and the UL-VIO-lite odometry
+//!   net. Weight layouts match `python/compile/model.py` exactly
+//!   (documented per builder).
+
+pub mod effnet;
+pub mod exec;
+pub mod gaze;
+pub mod graph;
+pub mod mlp;
+pub mod ulvio;
+
+pub use exec::{ExecReport, Executor};
+pub use graph::{ActKind, Layer, LayerKind, ModelGraph, PoolKind};

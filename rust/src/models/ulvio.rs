@@ -1,0 +1,70 @@
+//! UL-VIO-lite — the visual-inertial odometry workload (paper Fig. 6,
+//! Table III's VIO row), after UL-VIO [22] scaled to the synthetic
+//! KITTI-like generator in [`crate::vio::kitti`].
+//!
+//! Input: two stacked feature frames (2 × 16 × 16 — current + previous
+//! camera feature maps) plus a 6-D IMU vector (accel + gyro integrated
+//! over the frame interval), concatenated after the conv encoder.
+//! Output: 6-DoF relative pose (tx, ty, tz, roll, pitch, yaw).
+//!
+//! ```text
+//! conv1 2→8  3×3 s2 p1 · PACT      (16×16 → 8×8)
+//! conv2 8→16 3×3 s2 p1 · PACT      (8×8 → 4×4)
+//! flatten (256) · concat IMU (6)
+//! fc1 262→64 · PACT
+//! fc2 64→6   (linear)
+//! ```
+//!
+//! The output head (`fc2`) is the precision-critical layer — the
+//! sensitivity analysis discovers this and the planner pins it high in
+//! the MxP config, reproducing the paper's finding that MxP (Posit-8 /
+//! FP4) trades best.
+
+use super::graph::{ActKind, Layer, LayerKind, ModelGraph, Shape};
+
+/// Camera input: 2 stacked 16×16 feature frames.
+pub const INPUT: Shape = Shape { c: 2, h: 16, w: 16 };
+/// IMU features concatenated after the encoder.
+pub const IMU_DIM: usize = 6;
+/// 6-DoF relative pose output.
+pub const POSE_DIM: usize = 6;
+
+/// Build the graph.
+pub fn build() -> ModelGraph {
+    let l = |name: &str, kind: LayerKind| Layer { name: name.into(), kind };
+    ModelGraph {
+        name: "ulvio_lite".into(),
+        input: INPUT,
+        layers: vec![
+            l("conv1", LayerKind::Conv2d { in_c: 2, out_c: 8, k: 3, stride: 2, pad: 1 }),
+            l("act1", LayerKind::Act(ActKind::Pact)),
+            l("conv2", LayerKind::Conv2d { in_c: 8, out_c: 16, k: 3, stride: 2, pad: 1 }),
+            l("act2", LayerKind::Act(ActKind::Pact)),
+            l("flat", LayerKind::Flatten),
+            l("imu", LayerKind::ConcatAux { n: IMU_DIM }),
+            l("fc1", LayerKind::Fc { in_f: 16 * 4 * 4 + IMU_DIM, out_f: 64 }),
+            l("act3", LayerKind::Act(ActKind::Pact)),
+            l("fc2", LayerKind::Fc { in_f: 64, out_f: POSE_DIM }),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let g = build();
+        assert_eq!(g.out_shape(), Shape::vec(POSE_DIM));
+        assert_eq!(g.compute_layers().len(), 4);
+    }
+
+    #[test]
+    fn stride2_convs_shrink() {
+        let g = build();
+        let shapes = g.shapes();
+        assert_eq!(shapes[1], Shape { c: 8, h: 8, w: 8 });
+        assert_eq!(shapes[3], Shape { c: 16, h: 4, w: 4 });
+    }
+}

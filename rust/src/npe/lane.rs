@@ -1,0 +1,385 @@
+//! The SIMD MAC engine proper: input processing → multiplication →
+//! quire accumulate → output processing (paper Fig. 3, left to right).
+//!
+//! [`Engine`] is one XR-NPE processing element. It holds one quire per
+//! potential lane (4) and morphs its datapath by `prec_sel`. The
+//! functional contract, verified exhaustively in tests:
+//!
+//! > For every lane, the value read out equals the *exactly accumulated*
+//! > sum of lane products, rounded once to the output format — i.e. a
+//! > fused dot product with a single final rounding.
+//!
+//! Exception handling (paper §II "NaN, or normal-subnormal FP/posit,
+//! infinity, and zero check"): NaR/NaN operands poison the lane's quire
+//! (result NaR); zero operands power-gate the lane's multiplier and feed
+//! zero to the accumulator; subnormal FP inputs are normalized by the
+//! input stage (our [`crate::arith::Decoded`] is always normalized).
+
+use super::rmmec;
+use super::simd::PrecSel;
+use super::stats::EngineStats;
+use crate::arith::tables::PrecTable;
+use crate::arith::{tables, Class, Precision, Quire};
+
+/// One XR-NPE SIMD MAC processing element.
+#[derive(Clone)]
+pub struct Engine {
+    sel: PrecSel,
+    /// Cached decode table for the current mode (§Perf: avoids the
+    /// table-cache lock in the per-word hot loop).
+    table: &'static PrecTable,
+    quires: [Quire; 4],
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    pub fn new(sel: PrecSel) -> Self {
+        Engine {
+            sel,
+            table: tables::table(sel.precision()),
+            quires: [Quire::new(); 4],
+            stats: EngineStats::new(),
+        }
+    }
+
+    /// Current `prec_sel` mode.
+    pub fn prec_sel(&self) -> PrecSel {
+        self.sel
+    }
+
+    /// Morph to a different precision mode. Clears accumulator state
+    /// (hardware requires drain-before-morph; the array's control FSM
+    /// enforces it — see `soc::control`).
+    pub fn morph(&mut self, sel: PrecSel) {
+        self.table = tables::table(sel.precision());
+        self.sel = sel;
+        self.clear();
+    }
+
+    /// Clear all lane quires (start of a new output tile).
+    pub fn clear(&mut self) {
+        self.quires = [Quire::new(); 4];
+    }
+
+    /// One engine-word MAC cycle: multiply-accumulate each lane of `a`
+    /// against the matching lane of `b`.
+    pub fn mac_word(&mut self, a: u16, b: u16) {
+        self.stats.word_ops += 1;
+        let prec = self.sel.precision();
+        let t = self.table;
+        let lanes = self.sel.lanes();
+        let lb = self.sel.lane_bits();
+        let mask = ((1u32 << lb) - 1) as u16;
+        let width = prec.mant_mult_bits();
+        for i in 0..lanes {
+            let ea = ((a >> (i as u32 * lb)) & mask) as u32;
+            let eb = ((b >> (i as u32 * lb)) & mask) as u32;
+            self.mac_lane(i, t.decode(ea), t.decode(eb), width);
+        }
+    }
+
+    /// MAC a single lane with already-decoded operands.
+    #[inline]
+    fn mac_lane(
+        &mut self,
+        lane: usize,
+        da: crate::arith::Decoded,
+        db: crate::arith::Decoded,
+        width: u32,
+    ) {
+        match (da.class, db.class) {
+            (Class::Nan, _) | (_, Class::Nan) | (Class::Inf, _) | (_, Class::Inf) => {
+                // Exception unit: poison the accumulator (NaR-dominant).
+                self.stats.record_exception();
+                self.quires[lane].add_product(da, db);
+            }
+            (Class::Zero, _) | (_, Class::Zero) => {
+                // Whole-lane power gating: multiplier off, accumulator
+                // unchanged (zero added).
+                self.stats.record_gated();
+            }
+            (Class::Normal, Class::Normal) => {
+                // Sign XOR + scaling-factor add happen in the exponent
+                // path; the fraction product goes through the RMMEC block
+                // pool (hidden-bit cross terms are adder work — see
+                // `rmmec::multiply_sig`). The quire addend is
+                // (sign, sig product, scale sum).
+                debug_assert!(da.frac_bits <= width && db.frac_bits <= width);
+                let (prod, act) = rmmec::multiply_sig(da.sig, db.sig, width);
+                self.stats.record_mac(act);
+                let e = (da.scale - da.frac_bits as i32) + (db.scale - db.frac_bits as i32);
+                self.quires[lane].add_sig_product(prod as u128, e, da.sign ^ db.sign);
+            }
+        }
+    }
+
+    /// Accumulate full element streams (the array's K-loop): `a[k]·b[k]`
+    /// for each lane-sized chunk. Convenience over repeated `mac_word`.
+    pub fn dot_words(&mut self, a: &[u16], b: &[u16]) {
+        assert_eq!(a.len(), b.len(), "dot_words length mismatch");
+        for (&wa, &wb) in a.iter().zip(b) {
+            self.mac_word(wa, wb);
+        }
+    }
+
+    /// One engine-word MAC cycle in **fused (K-dimension) SIMD** form:
+    /// all lane products are reduced into quire 0 through the paper's
+    /// "SIMD ADD/SUB block based on precision-adaptive rearrangement".
+    /// This is the output-stationary GEMM mapping: one engine = one
+    /// output element, `lanes` K-elements consumed per cycle. Quire
+    /// addition is exact and associative, so the reduction order is
+    /// irrelevant to the result.
+    pub fn mac_word_fused(&mut self, a: u16, b: u16) {
+        self.stats.word_ops += 1;
+        let prec = self.sel.precision();
+        let t = self.table;
+        let lanes = self.sel.lanes();
+        let lb = self.sel.lane_bits();
+        let mask = ((1u32 << lb) - 1) as u16;
+        let width = prec.mant_mult_bits();
+        for i in 0..lanes {
+            let ea = ((a >> (i as u32 * lb)) & mask) as u32;
+            let eb = ((b >> (i as u32 * lb)) & mask) as u32;
+            self.mac_lane(0, t.decode(ea), t.decode(eb), width);
+        }
+    }
+
+    /// Fused dot product over packed word streams (lane 0 holds the
+    /// result).
+    pub fn dot_words_fused(&mut self, a: &[u16], b: &[u16]) {
+        assert_eq!(a.len(), b.len(), "dot_words_fused length mismatch");
+        for (&wa, &wb) in a.iter().zip(b) {
+            self.mac_word_fused(wa, wb);
+        }
+    }
+
+    /// Add a bias value (already in engine precision) into a lane's quire
+    /// — the output-stage residual/bias add.
+    pub fn add_bias(&mut self, lane: usize, bias_bits: u32) {
+        self.quires[lane].add_value(self.table.decode(bias_bits));
+    }
+
+    /// Output processing: round a lane's quire to `out_prec` and return
+    /// the encoding. Marks the round in stats.
+    pub fn read_lane(&mut self, lane: usize, out_prec: Precision) -> u32 {
+        self.stats.rounds += 1;
+        let v = self.quires[lane].to_f64();
+        out_prec.encode(v)
+    }
+
+    /// Output processing as a value (f64) — used by the array simulator,
+    /// which rounds at tile granularity.
+    pub fn read_lane_f64(&self, lane: usize) -> f64 {
+        self.quires[lane].to_f64()
+    }
+
+    /// Lane quire overflow/NaR flags (sticky status bits in CSR terms).
+    pub fn lane_flags(&self, lane: usize) -> (bool, bool) {
+        (self.quires[lane].overflow, self.quires[lane].nar)
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("sel", &self.sel)
+            .field("stats", &self.stats)
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::tables::table;
+    use crate::util::proptest::{self, Draw};
+
+    /// Scalar oracle: decode, multiply in f64 (exact for these widths),
+    /// accumulate in a reference quire.
+    fn oracle_dot(prec: Precision, a: &[u32], b: &[u32]) -> f64 {
+        let t = table(prec);
+        let mut q = Quire::new();
+        for (&ea, &eb) in a.iter().zip(b) {
+            q.add_product(t.decode(ea), t.decode(eb));
+        }
+        q.to_f64()
+    }
+
+    #[test]
+    fn exhaustive_single_mac_4bit_modes() {
+        for sel in [PrecSel::Fp4x4, PrecSel::Posit4x4] {
+            let prec = sel.precision();
+            let t = table(prec);
+            for ea in 0..16u32 {
+                for eb in 0..16u32 {
+                    let mut eng = Engine::new(sel);
+                    // put the pair in every lane simultaneously
+                    let wa = sel.pack(&[ea, ea, ea, ea]);
+                    let wb = sel.pack(&[eb, eb, eb, eb]);
+                    eng.mac_word(wa, wb);
+                    let va = t.value(ea) as f64;
+                    let vb = t.value(eb) as f64;
+                    for lane in 0..4 {
+                        let got = eng.read_lane_f64(lane);
+                        if va.is_nan() || vb.is_nan() {
+                            assert!(got.is_nan(), "{sel:?} {ea:#x}·{eb:#x}");
+                        } else {
+                            assert_eq!(got, va * vb, "{sel:?} {ea:#x}·{eb:#x} lane {lane}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_single_mac_posit8() {
+        let sel = PrecSel::Posit8x2;
+        let t = table(Precision::Posit8);
+        for ea in 0..256u32 {
+            for eb in 0..256u32 {
+                let mut eng = Engine::new(sel);
+                eng.mac_word(sel.pack(&[ea, eb]), sel.pack(&[eb, ea]));
+                let va = t.value(ea) as f64;
+                let vb = t.value(eb) as f64;
+                let got0 = eng.read_lane_f64(0);
+                let got1 = eng.read_lane_f64(1);
+                if va.is_nan() || vb.is_nan() {
+                    assert!(got0.is_nan() && got1.is_nan());
+                } else {
+                    assert_eq!(got0, va * vb, "{ea:#x}·{eb:#x}");
+                    assert_eq!(got1, vb * va);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_mac_posit16_matches_oracle() {
+        proptest::check(|rng, _| {
+            let k = rng.usize_in(1, 128);
+            let a: Vec<u32> = (0..k).map(|_| (rng.next_u64() & 0xFFFF) as u32).collect();
+            let b: Vec<u32> = (0..k).map(|_| (rng.next_u64() & 0xFFFF) as u32).collect();
+            let sel = PrecSel::Posit16x1;
+            let mut eng = Engine::new(sel);
+            for i in 0..k {
+                eng.mac_word(a[i] as u16, b[i] as u16);
+            }
+            let want = oracle_dot(Precision::Posit16, &a, &b);
+            let got = eng.read_lane_f64(0);
+            if want.is_nan() {
+                assert!(got.is_nan());
+            } else {
+                assert_eq!(got, want);
+            }
+        });
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let sel = PrecSel::Posit8x2;
+        let t = table(Precision::Posit8);
+        let mut eng = Engine::new(sel);
+        // lane0: 1.0 * 2.0, lane1: NaR * x → lane1 NaR, lane0 fine
+        let one = Precision::Posit8.encode(1.0);
+        let two = Precision::Posit8.encode(2.0);
+        let nar = 0x80u32;
+        eng.mac_word(sel.pack(&[one, nar]), sel.pack(&[two, two]));
+        assert_eq!(eng.read_lane_f64(0), 2.0);
+        assert!(eng.read_lane_f64(1).is_nan());
+        let _ = t;
+    }
+
+    #[test]
+    fn zero_gating_feeds_zero_and_counts() {
+        let sel = PrecSel::Posit16x1;
+        let mut eng = Engine::new(sel);
+        let one = Precision::Posit16.encode(1.0) as u16;
+        eng.mac_word(0, one); // zero operand → gated
+        eng.mac_word(one, one);
+        assert_eq!(eng.read_lane_f64(0), 1.0);
+        assert_eq!(eng.stats.gated_macs, 1);
+        assert_eq!(eng.stats.macs, 2);
+    }
+
+    #[test]
+    fn fused_rounding_single_round() {
+        // Products whose exact sum is representable but whose partial
+        // rounded sums are not: engine must produce the exact sum.
+        let sel = PrecSel::Posit8x2;
+        let p = Precision::Posit8;
+        // 1/64 * 1/64 is below posit8 resolution products… instead use
+        // cancellation: 64·64 − 64·64 + 1·1 = 1 exactly.
+        let e64 = p.encode(64.0);
+        let em64 = p.encode(-64.0);
+        let e1 = p.encode(1.0);
+        let mut eng = Engine::new(sel);
+        eng.mac_word(sel.pack(&[e64, 0]), sel.pack(&[e64, 0])); // +4096
+        eng.mac_word(sel.pack(&[em64, 0]), sel.pack(&[e64, 0])); // −4096
+        eng.mac_word(sel.pack(&[e1, 0]), sel.pack(&[e1, 0])); // +1
+        assert_eq!(eng.read_lane_f64(0), 1.0);
+        let bits = eng.read_lane(0, p);
+        assert_eq!(bits, e1);
+    }
+
+    #[test]
+    fn morph_clears_state_and_changes_geometry() {
+        let mut eng = Engine::new(PrecSel::Posit16x1);
+        let one = Precision::Posit16.encode(1.0) as u16;
+        eng.mac_word(one, one);
+        assert_eq!(eng.read_lane_f64(0), 1.0);
+        eng.morph(PrecSel::Fp4x4);
+        assert_eq!(eng.read_lane_f64(0), 0.0); // cleared
+        assert_eq!(eng.prec_sel().lanes(), 4);
+    }
+
+    #[test]
+    fn bias_add_lands_in_quire() {
+        let sel = PrecSel::Posit8x2;
+        let p = Precision::Posit8;
+        let mut eng = Engine::new(sel);
+        eng.add_bias(0, p.encode(0.5));
+        let one = p.encode(1.0);
+        eng.mac_word(sel.pack(&[one, 0]), sel.pack(&[one, 0]));
+        assert_eq!(eng.read_lane_f64(0), 1.5);
+    }
+
+    #[test]
+    fn output_rounding_matches_format_encode() {
+        proptest::check(|rng, _| {
+            let sel = PrecSel::Posit8x2;
+            let p = Precision::Posit8;
+            let k = rng.usize_in(1, 32);
+            let mut eng = Engine::new(sel);
+            let mut vals = Vec::new();
+            for _ in 0..k {
+                let a = (rng.next_u64() & 0xFF) as u32;
+                let b = (rng.next_u64() & 0xFF) as u32;
+                if a == 0x80 || b == 0x80 {
+                    continue; // keep this property on the numeric path
+                }
+                vals.push((a, b));
+            }
+            for &(a, b) in &vals {
+                eng.mac_word(sel.pack(&[a, 0]), sel.pack(&[b, 0]));
+            }
+            let exact = oracle_dot(p,
+                &vals.iter().map(|v| v.0).collect::<Vec<_>>(),
+                &vals.iter().map(|v| v.1).collect::<Vec<_>>());
+            let got_bits = eng.read_lane(0, p);
+            assert_eq!(got_bits, p.encode(exact));
+        });
+    }
+
+    #[test]
+    fn stats_block_accounting_posit16() {
+        let sel = PrecSel::Posit16x1;
+        let p = Precision::Posit16;
+        let mut eng = Engine::new(sel);
+        let a = p.encode(1.5) as u16;
+        eng.mac_word(a, a);
+        // one live MAC in 12-bit mode → 36 blocks configured
+        assert_eq!(eng.stats.blocks_configured, 36);
+        assert_eq!(eng.stats.macs, 1);
+    }
+}

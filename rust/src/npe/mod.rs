@@ -1,0 +1,34 @@
+//! The XR-NPE SIMD MAC compute engine (paper Fig. 3).
+//!
+//! One engine is a 16-bit-word SIMD MAC datapath that morphs, per the
+//! `prec_sel` mode signal, into:
+//!
+//! * 4 × FP4 or 4 × Posit(4,1) lanes,
+//! * 2 × Posit(8,0) lanes, or
+//! * 1 × Posit(16,1) lane.
+//!
+//! Pipeline stages (modeled functionally + with activity statistics):
+//!
+//! 1. **Input processing** — FP/posit field extraction, NaR/NaN/Inf/zero/
+//!    subnormal classification ([`lane`]).
+//! 2. **Multiplication** — sign XOR, scaling-factor (regime/exponent) add,
+//!    and the [`rmmec`] reconfigurable mantissa multiplier built from
+//!    2-bit blocks (1 block per 4-bit lane, 9 per 8-bit lane, 36 for the
+//!    16-bit lane). Zero operands power-gate the multiplier.
+//! 3. **Quire scale-accumulate** — exact fixed-point accumulation
+//!    ([`crate::arith::Quire`]).
+//! 4. **Output processing** — sign/scaling-factor restructuring and
+//!    mantissa rounding back to the selected format.
+//!
+//! The engine is *bit-accurate*: every result equals what the RTL would
+//! produce, and every activity counter ([`stats`]) feeds the calibrated
+//! energy model in [`crate::energy`].
+
+pub mod lane;
+pub mod rmmec;
+pub mod simd;
+pub mod stats;
+
+pub use lane::Engine;
+pub use simd::PrecSel;
+pub use stats::EngineStats;

@@ -1,0 +1,173 @@
+//! SIMD word packing — the `prec_sel` mode signal and the 16-bit engine
+//! word layout (paper Fig. 3: "4x FP4/Posit(4,1) or 2x Posit(8,0) or 1x
+//! Posit(16,1) precision based on prec_sel").
+
+use crate::arith::Precision;
+
+/// The engine's run-time precision mode (`prec_sel`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PrecSel {
+    /// 4 lanes of HFP4 (E2M1).
+    Fp4x4,
+    /// 4 lanes of Posit(4,1).
+    Posit4x4,
+    /// 2 lanes of Posit(8,0).
+    Posit8x2,
+    /// 1 lane of Posit(16,1).
+    Posit16x1,
+}
+
+impl PrecSel {
+    pub const ALL: [PrecSel; 4] =
+        [PrecSel::Fp4x4, PrecSel::Posit4x4, PrecSel::Posit8x2, PrecSel::Posit16x1];
+
+    /// Element format of each lane.
+    pub fn precision(self) -> Precision {
+        match self {
+            PrecSel::Fp4x4 => Precision::Fp4,
+            PrecSel::Posit4x4 => Precision::Posit4,
+            PrecSel::Posit8x2 => Precision::Posit8,
+            PrecSel::Posit16x1 => Precision::Posit16,
+        }
+    }
+
+    /// Lanes per 16-bit word.
+    pub fn lanes(self) -> usize {
+        match self {
+            PrecSel::Fp4x4 | PrecSel::Posit4x4 => 4,
+            PrecSel::Posit8x2 => 2,
+            PrecSel::Posit16x1 => 1,
+        }
+    }
+
+    /// Bits per lane.
+    pub fn lane_bits(self) -> u32 {
+        16 / self.lanes() as u32
+    }
+
+    /// Mode for a given precision (None if not a native hardware mode).
+    pub fn for_precision(p: Precision) -> Option<PrecSel> {
+        match p {
+            Precision::Fp4 => Some(PrecSel::Fp4x4),
+            Precision::Posit4 => Some(PrecSel::Posit4x4),
+            Precision::Posit8 => Some(PrecSel::Posit8x2),
+            Precision::Posit16 => Some(PrecSel::Posit16x1),
+            _ => None,
+        }
+    }
+
+    /// MACs delivered per engine-word operation (= lanes).
+    pub fn macs_per_word(self) -> u64 {
+        self.lanes() as u64
+    }
+
+    /// Unpack a 16-bit word into lane encodings (lane 0 = low bits,
+    /// matching the hardware's little-endian lane order).
+    pub fn unpack(self, word: u16) -> LaneIter {
+        LaneIter { word, lane_bits: self.lane_bits(), lanes: self.lanes() as u32, i: 0 }
+    }
+
+    /// Pack lane encodings into a word. Panics if a value exceeds the lane
+    /// width or too many/few lanes are given.
+    pub fn pack(self, lanes: &[u32]) -> u16 {
+        assert_eq!(lanes.len(), self.lanes(), "pack: wrong lane count");
+        let lb = self.lane_bits();
+        let mask = (1u32 << lb) - 1;
+        let mut w: u32 = 0;
+        for (i, &v) in lanes.iter().enumerate() {
+            assert!(v <= mask, "pack: lane value {v:#x} exceeds {lb}-bit lane");
+            w |= v << (i as u32 * lb);
+        }
+        w as u16
+    }
+
+    /// Pack a slice of already-encoded element values into engine words
+    /// (zero-padding the tail).
+    pub fn pack_slice(self, elems: &[u32]) -> Vec<u16> {
+        let lanes = self.lanes();
+        let mut out = Vec::with_capacity(elems.len().div_ceil(lanes));
+        for chunk in elems.chunks(lanes) {
+            let mut buf = [0u32; 4];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            out.push(self.pack(&buf[..lanes]));
+        }
+        out
+    }
+}
+
+/// Iterator over the lane encodings of one word.
+pub struct LaneIter {
+    word: u16,
+    lane_bits: u32,
+    lanes: u32,
+    i: u32,
+}
+
+impl Iterator for LaneIter {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        if self.i >= self.lanes {
+            return None;
+        }
+        let mask = ((1u32 << self.lane_bits) - 1) as u16;
+        let v = (self.word >> (self.i * self.lane_bits)) & mask;
+        self.i += 1;
+        Some(v as u32)
+    }
+}
+
+impl ExactSizeIterator for LaneIter {
+    fn len(&self) -> usize {
+        (self.lanes - self.i) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_geometry() {
+        assert_eq!(PrecSel::Fp4x4.lanes(), 4);
+        assert_eq!(PrecSel::Posit8x2.lanes(), 2);
+        assert_eq!(PrecSel::Posit16x1.lanes(), 1);
+        assert_eq!(PrecSel::Fp4x4.lane_bits(), 4);
+        assert_eq!(PrecSel::Posit8x2.lane_bits(), 8);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_modes() {
+        let mut rng = crate::util::Rng::new(8);
+        for sel in PrecSel::ALL {
+            for _ in 0..1000 {
+                let word = rng.next_u64() as u16;
+                let lanes: Vec<u32> = sel.unpack(word).collect();
+                assert_eq!(lanes.len(), sel.lanes());
+                assert_eq!(sel.pack(&lanes), word);
+            }
+        }
+    }
+
+    #[test]
+    fn lane_order_is_little_endian() {
+        // word 0xABCD in 4-bit lanes: lane0=0xD, lane1=0xC, lane2=0xB, lane3=0xA
+        let lanes: Vec<u32> = PrecSel::Fp4x4.unpack(0xABCD).collect();
+        assert_eq!(lanes, vec![0xD, 0xC, 0xB, 0xA]);
+        // 8-bit lanes: lane0=0xCD, lane1=0xAB
+        let lanes: Vec<u32> = PrecSel::Posit8x2.unpack(0xABCD).collect();
+        assert_eq!(lanes, vec![0xCD, 0xAB]);
+    }
+
+    #[test]
+    fn pack_slice_pads_tail() {
+        let words = PrecSel::Posit8x2.pack_slice(&[0x11, 0x22, 0x33]);
+        assert_eq!(words, vec![0x2211, 0x0033]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn pack_rejects_oversized_lane() {
+        PrecSel::Fp4x4.pack(&[0x1F, 0, 0, 0]);
+    }
+}

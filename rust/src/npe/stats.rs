@@ -1,0 +1,157 @@
+//! Engine activity statistics — the bridge between the bit-accurate
+//! functional model and the calibrated energy model.
+//!
+//! Hardware power is dominated by switching activity; the simulator
+//! therefore counts, per engine:
+//!
+//! * MAC operations issued / power-gated (whole-lane zero gating),
+//! * RMMEC 2-bit blocks configured / switched / chunk-gated,
+//! * exceptions raised,
+//! * engine-word cycles (the cycle model's atom).
+//!
+//! `energy::asic` converts these into pJ; `npe::rmmec` documents the
+//! dark-silicon math they support.
+
+use super::rmmec::MultActivity;
+
+/// Cumulative activity counters for one engine (or an array of engines —
+/// counters are additive, see [`EngineStats::merge`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Engine-word operations (one per lane-group per cycle).
+    pub word_ops: u64,
+    /// Individual lane MACs issued (incl. gated).
+    pub macs: u64,
+    /// Lane MACs skipped entirely because an operand was zero
+    /// (the paper's "during zero input operands, the particular multiplier
+    /// is power-gated and zero is fed to the accumulator").
+    pub gated_macs: u64,
+    /// RMMEC blocks configured in the active mode, summed over MACs.
+    pub blocks_configured: u64,
+    /// RMMEC blocks that actually switched.
+    pub blocks_switched: u64,
+    /// RMMEC blocks gated by zero input chunks.
+    pub blocks_gated: u64,
+    /// Exceptions (NaR/NaN/Inf operands) routed to the exception unit.
+    pub exceptions: u64,
+    /// Output-processing rounds performed (quire → format).
+    pub rounds: u64,
+}
+
+impl EngineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one lane MAC that was fully power-gated (zero operand).
+    #[inline]
+    pub fn record_gated(&mut self) {
+        self.macs += 1;
+        self.gated_macs += 1;
+    }
+
+    /// Record one live lane MAC with its multiplier activity.
+    #[inline]
+    pub fn record_mac(&mut self, act: MultActivity) {
+        self.macs += 1;
+        self.blocks_configured += act.configured as u64;
+        self.blocks_switched += act.switched as u64;
+        self.blocks_gated += act.gated as u64;
+    }
+
+    /// Record an exception-path MAC.
+    #[inline]
+    pub fn record_exception(&mut self) {
+        self.macs += 1;
+        self.exceptions += 1;
+    }
+
+    /// Fraction of lane MACs that were zero-gated.
+    pub fn gating_ratio(&self) -> f64 {
+        if self.macs == 0 {
+            0.0
+        } else {
+            self.gated_macs as f64 / self.macs as f64
+        }
+    }
+
+    /// Fraction of the *physical* block pool left dark in the current
+    /// mode, averaged over the run: 1 − configured/(macs · POOL).
+    pub fn dark_silicon_ratio(&self) -> f64 {
+        let live = self.macs - self.gated_macs - self.exceptions;
+        if live == 0 {
+            return 0.0;
+        }
+        let possible = live * super::rmmec::POOL_BLOCKS as u64;
+        1.0 - self.blocks_configured as f64 / possible as f64
+    }
+
+    /// Fraction of configured blocks that actually switched (operand
+    /// sparsity exploitation inside live MACs).
+    pub fn block_activity(&self) -> f64 {
+        if self.blocks_configured == 0 {
+            0.0
+        } else {
+            self.blocks_switched as f64 / self.blocks_configured as f64
+        }
+    }
+
+    /// Additive merge (array-level aggregation).
+    pub fn merge(&mut self, o: &EngineStats) {
+        self.word_ops += o.word_ops;
+        self.macs += o.macs;
+        self.gated_macs += o.gated_macs;
+        self.blocks_configured += o.blocks_configured;
+        self.blocks_switched += o.blocks_switched;
+        self.blocks_gated += o.blocks_gated;
+        self.exceptions += o.exceptions;
+        self.rounds += o.rounds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_empty_are_zero() {
+        let s = EngineStats::new();
+        assert_eq!(s.gating_ratio(), 0.0);
+        assert_eq!(s.dark_silicon_ratio(), 0.0);
+        assert_eq!(s.block_activity(), 0.0);
+    }
+
+    #[test]
+    fn gating_ratio_counts() {
+        let mut s = EngineStats::new();
+        s.record_gated();
+        s.record_mac(MultActivity { configured: 9, switched: 9, gated: 0 });
+        assert_eq!(s.macs, 2);
+        assert_eq!(s.gating_ratio(), 0.5);
+    }
+
+    #[test]
+    fn dark_silicon_for_4bit_mode() {
+        // 4-bit lanes configure 1 of 36 blocks per MAC
+        let mut s = EngineStats::new();
+        for _ in 0..100 {
+            s.record_mac(MultActivity { configured: 1, switched: 1, gated: 0 });
+        }
+        assert!((s.dark_silicon_ratio() - (1.0 - 1.0 / 36.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_additive() {
+        let mut a = EngineStats::new();
+        a.record_mac(MultActivity { configured: 36, switched: 30, gated: 6 });
+        let mut b = EngineStats::new();
+        b.record_gated();
+        b.record_exception();
+        let mut m = a;
+        m.merge(&b);
+        assert_eq!(m.macs, 3);
+        assert_eq!(m.gated_macs, 1);
+        assert_eq!(m.exceptions, 1);
+        assert_eq!(m.blocks_switched, 30);
+    }
+}

@@ -1,0 +1,198 @@
+//! Entropy-based uniform quantization with learned saturation thresholds
+//! — paper eqs. (3)–(5), after [20].
+//!
+//! Unlike a conventional fixed [−1, 1] clip, the scheme adapts the lower
+//! and upper saturation thresholds `[W_l, W_h]` to the layer's learned
+//! weight distribution, and scales by the mean magnitude:
+//!
+//! ```text
+//! scale k = mean(|W|) · (2^n − 1)/2^(n−1)                    (3)
+//! Ŵ  = round((clip(W/k, W_l, W_h) − W_l) · (2^n − 1)/(W_h − W_l))   (4)
+//! Q(W) = Ŵ · (W_h − W_l)/(2^n − 1) + W_l                     (5)
+//! ```
+//!
+//! (Values in eq. (4)/(5) are in the k-normalized domain; the caller
+//! multiplies back by `k` to return to weight space.) The thresholds are
+//! chosen to maximize the entropy of the bin histogram — saturating rare
+//! outliers buys resolution where the mass is.
+
+/// Parameters of the entropy quantizer for one tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct EntropyQuant {
+    pub n_bits: u32,
+    /// eq. (3) scale.
+    pub k: f64,
+    /// Lower/upper saturation thresholds in the k-normalized domain.
+    pub w_l: f64,
+    pub w_h: f64,
+}
+
+/// eq. (3).
+pub fn scale_k(w: &[f32], n_bits: u32) -> f64 {
+    if w.is_empty() {
+        return 1.0;
+    }
+    let mean_abs = w.iter().map(|&x| x.abs() as f64).sum::<f64>() / w.len() as f64;
+    let n = n_bits as i32;
+    (mean_abs * (2f64.powi(n) - 1.0) / 2f64.powi(n - 1)).max(1e-12)
+}
+
+/// Shannon entropy (bits) of the bin occupancy a threshold pair induces.
+fn bin_entropy(w_norm: &[f64], w_l: f64, w_h: f64, n_bits: u32) -> f64 {
+    let bins = 1usize << n_bits;
+    let mut hist = vec![0u64; bins];
+    let span = (w_h - w_l).max(1e-12);
+    for &x in w_norm {
+        let c = x.clamp(w_l, w_h);
+        let b = (((c - w_l) / span) * (bins as f64 - 1.0)).round() as usize;
+        hist[b.min(bins - 1)] += 1;
+    }
+    let total = w_norm.len() as f64;
+    hist.iter()
+        .filter(|&&h| h > 0)
+        .map(|&h| {
+            let p = h as f64 / total;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+impl EntropyQuant {
+    /// Fit thresholds by scanning symmetric percentile candidates for the
+    /// entropy-maximizing clip (the "dynamically adjusting lower [W_l]
+    /// and upper [W_h] saturation thresholds" of §III).
+    pub fn fit(w: &[f32], n_bits: u32) -> EntropyQuant {
+        let k = scale_k(w, n_bits);
+        if w.is_empty() {
+            return EntropyQuant { n_bits, k, w_l: -1.0, w_h: 1.0 };
+        }
+        let w_norm: Vec<f64> = w.iter().map(|&x| x as f64 / k).collect();
+        let mut sorted = w_norm.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let i = ((sorted.len() - 1) as f64 * p).round() as usize;
+            sorted[i]
+        };
+        let mut best = (f64::MIN, sorted[0], sorted[sorted.len() - 1]);
+        for &tail in &[0.0, 0.001, 0.005, 0.01, 0.025, 0.05] {
+            let (lo, hi) = (pct(tail), pct(1.0 - tail));
+            if hi - lo < 1e-9 {
+                continue;
+            }
+            let h = bin_entropy(&w_norm, lo, hi, n_bits);
+            if h > best.0 {
+                best = (h, lo, hi);
+            }
+        }
+        EntropyQuant { n_bits, k, w_l: best.1, w_h: best.2 }
+    }
+
+    /// eqs. (4)+(5): quantize one value (returns to weight space).
+    pub fn quantize(&self, x: f64) -> f64 {
+        let levels = (1u64 << self.n_bits) as f64 - 1.0;
+        let span = (self.w_h - self.w_l).max(1e-12);
+        let c = (x / self.k).clamp(self.w_l, self.w_h);
+        let w_hat = ((c - self.w_l) * levels / span).round();
+        (w_hat * span / levels + self.w_l) * self.k
+    }
+
+    /// Quantize a slice.
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.quantize(x as f64) as f32).collect()
+    }
+
+    /// RMS quantization error on a tensor.
+    pub fn rms_error(&self, xs: &[f32]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = xs
+            .iter()
+            .map(|&x| {
+                let d = self.quantize(x as f64) - x as f64;
+                d * d
+            })
+            .sum();
+        (s / xs.len() as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gaussian(n: usize, std: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.normal() * std) as f32).collect()
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let w = gaussian(2048, 0.5, 1);
+        let q = EntropyQuant::fit(&w, 4);
+        for &x in w.iter().take(200) {
+            let once = q.quantize(x as f64);
+            let twice = q.quantize(once);
+            assert!((once - twice).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w = gaussian(4096, 0.8, 2);
+        let e4 = EntropyQuant::fit(&w, 4).rms_error(&w);
+        let e8 = EntropyQuant::fit(&w, 8).rms_error(&w);
+        // (entropy-chosen thresholds differ per bit-width, so the gain is
+        // not the naive 16×, but more bits must still clearly win)
+        assert!(e8 < e4 / 1.5, "e8 {e8} e4 {e4}");
+    }
+
+    #[test]
+    fn adaptive_thresholds_beat_minmax_with_outliers() {
+        // heavy outliers: adaptive clipping must beat full-range min/max
+        let mut w = gaussian(4096, 0.2, 3);
+        w[0] = 50.0;
+        w[1] = -50.0;
+        let fitted = EntropyQuant::fit(&w, 4);
+        // min/max quantizer on the same scale
+        let k = scale_k(&w, 4);
+        let (lo, hi) = w.iter().fold((f64::MAX, f64::MIN), |(l, h), &x| {
+            ((x as f64 / k).min(l), (x as f64 / k).max(h))
+        });
+        let minmax = EntropyQuant { n_bits: 4, k, w_l: lo, w_h: hi };
+        let bulk = &w[2..];
+        assert!(
+            fitted.rms_error(bulk) < 0.5 * minmax.rms_error(bulk),
+            "fitted {} vs minmax {}",
+            fitted.rms_error(bulk),
+            minmax.rms_error(bulk)
+        );
+    }
+
+    #[test]
+    fn values_land_on_grid() {
+        let w = gaussian(1024, 1.0, 4);
+        let q = EntropyQuant::fit(&w, 4);
+        let levels = 15.0;
+        let span = q.w_h - q.w_l;
+        for &x in w.iter().take(100) {
+            let v = q.quantize(x as f64) / q.k;
+            let idx = (v - q.w_l) * levels / span;
+            assert!((idx - idx.round()).abs() < 1e-9, "off-grid {v}");
+        }
+    }
+
+    #[test]
+    fn scale_eq3_formula() {
+        let w = vec![1.0f32, -1.0, 1.0, -1.0];
+        // mean|W| = 1, n=4: k = 15/8
+        assert!((scale_k(&w, 4) - 15.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_tensor_safe() {
+        let q = EntropyQuant::fit(&[], 4);
+        assert_eq!(q.quantize(0.3), q.quantize(0.3)); // no panic, deterministic
+    }
+}

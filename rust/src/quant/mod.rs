@@ -1,0 +1,23 @@
+//! Layer-adaptive mixed-precision quantization (paper §III, eqs. 1–7) —
+//! the Rust-side mirror of `python/compile/quantlib.py`.
+//!
+//! The Python side uses these primitives inside QAT training; the Rust
+//! side uses the *same math* for scheduling: the coordinator computes
+//! per-layer sensitivities and assigns each layer a `prec_sel` mode under
+//! a model-size/accuracy budget, exactly the "layer adaptive
+//! hybrid-algorithmic implementation" the abstract describes.
+//!
+//! * [`sensitivity`] — the first-order Taylor sensitivity metric
+//!   (eqs. 1–2, after [20][21]).
+//! * [`entropy`] — entropy-based uniform quantization with learned
+//!   saturation thresholds (eqs. 3–5, after [20]).
+//! * [`pact`] — parameterized clipping activation (eqs. 6–7).
+//! * [`policy`] — the budgeted layer→precision assignment.
+
+pub mod entropy;
+pub mod pact;
+pub mod policy;
+pub mod sensitivity;
+
+pub use policy::{PlanBudget, PrecisionPlan};
+pub use sensitivity::LayerSensitivity;

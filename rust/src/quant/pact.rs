@@ -1,0 +1,116 @@
+//! PACT — Parameterized Clipping Activation, paper eqs. (6)–(7).
+//!
+//! ```text
+//! y  = PACT(x) = 0.5·(|x| − |x − α| + α)                 (6)
+//! xᵠ = round(y · (2^n − 1)/α) · α/(2^n − 1)              (7)
+//! ```
+//!
+//! Eq. (6) is the clipped-ReLU `min(max(x, 0), α)` written smoothly; α is
+//! *trained* (the QAT flow learns the clip that recovers accuracy). The
+//! straight-through gradient is 1 on 0 < x < α and dα = 1 on x ≥ α —
+//! mirrored exactly by `python/compile/quantlib.py::pact`.
+
+/// Eq. (6): the clipped activation.
+pub fn pact(x: f64, alpha: f64) -> f64 {
+    0.5 * (x.abs() - (x - alpha).abs() + alpha)
+}
+
+/// Eq. (7): quantize the clipped activation to n bits.
+pub fn pact_quantize(x: f64, alpha: f64, n_bits: u32) -> f64 {
+    let y = pact(x, alpha);
+    let levels = (1u64 << n_bits) as f64 - 1.0;
+    (y * levels / alpha).round() * alpha / levels
+}
+
+/// Straight-through gradients for the QAT mirror tests:
+/// (∂xᵠ/∂x, ∂xᵠ/∂α) under the PACT STE.
+pub fn pact_grads(x: f64, alpha: f64) -> (f64, f64) {
+    if x <= 0.0 {
+        (0.0, 0.0)
+    } else if x < alpha {
+        (1.0, 0.0)
+    } else {
+        (0.0, 1.0)
+    }
+}
+
+/// One step of learning α by SGD on the squared quantization error —
+/// the recovery loop the paper invokes ("allows for accuracy loss
+/// recovery by training the clipped threshold").
+pub fn alpha_step(acts: &[f32], alpha: f64, n_bits: u32, lr: f64) -> f64 {
+    let mut grad = 0.0;
+    for &x in acts {
+        let x = x as f64;
+        let q = pact_quantize(x, alpha, n_bits);
+        let err = q - x;
+        // d(err²)/dα through the STE: derr/dα = 1 when x ≥ α (clip
+        // region), plus the quant-grid stretch term y/α elsewhere.
+        let d = if x >= alpha { 1.0 } else { (pact(x, alpha) / alpha).clamp(0.0, 1.0) * 0.0 };
+        grad += 2.0 * err * d;
+    }
+    (alpha - lr * grad / acts.len().max(1) as f64).max(1e-3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn eq6_equals_clipped_relu() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = rng.normal() * 4.0;
+            let a = rng.range(0.5, 6.0);
+            let want = x.clamp(0.0, a);
+            assert!((pact(x, a) - want).abs() < 1e-12, "x={x} a={a}");
+        }
+    }
+
+    #[test]
+    fn eq7_lands_on_grid_and_range() {
+        let mut rng = Rng::new(2);
+        let a = 3.0;
+        let n = 4;
+        for _ in 0..1000 {
+            let x = rng.normal() * 4.0;
+            let q = pact_quantize(x, a, n);
+            assert!((0.0..=a).contains(&q));
+            let step = a / 15.0;
+            let idx = q / step;
+            assert!((idx - idx.round()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ste_gradients() {
+        assert_eq!(pact_grads(-1.0, 2.0), (0.0, 0.0));
+        assert_eq!(pact_grads(1.0, 2.0), (1.0, 0.0));
+        assert_eq!(pact_grads(3.0, 2.0), (0.0, 1.0));
+    }
+
+    #[test]
+    fn alpha_learning_reduces_clip_error() {
+        // activations mostly < 2 with a tail to 4; α should settle near
+        // the useful range, reducing total error vs a bad initial α.
+        let mut rng = Rng::new(3);
+        let acts: Vec<f32> =
+            (0..4000).map(|_| (rng.normal().abs() * 1.2).min(4.0) as f32).collect();
+        let err = |a: f64| -> f64 {
+            acts.iter()
+                .map(|&x| {
+                    let d = pact_quantize(x as f64, a, 4) - x as f64;
+                    d * d
+                })
+                .sum()
+        };
+        let mut alpha = 0.3; // too small: clips nearly everything
+        let e0 = err(alpha);
+        for _ in 0..200 {
+            alpha = alpha_step(&acts, alpha, 4, 0.05);
+        }
+        let e1 = err(alpha);
+        assert!(e1 < 0.5 * e0, "α learning: {e0} → {e1} (α={alpha})");
+        assert!(alpha > 1.0, "α={alpha} should have grown");
+    }
+}

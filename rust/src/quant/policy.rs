@@ -1,0 +1,223 @@
+//! Layer-adaptive precision assignment — the "hybrid layer-adaptive
+//! quantized acceleration" policy.
+//!
+//! Given per-layer sensitivities (eqs. 1–2) and a budget, assign each
+//! layer one of the hardware modes (FP4 / Posit(4,1) / Posit(8,0) /
+//! Posit(16,1)). The paper's finding (§III) is that MxP — FP4 for robust
+//! layers, Posit-8 for sensitive ones, Posit-16 for the critical few —
+//! hits the accuracy/size sweet spot (UL-VIO: 2.42 MB vs 13.5 MB FP32).
+//!
+//! Algorithm: start every layer at the cheapest 4-bit mode, then promote
+//! layers in decreasing sensitivity order (4→8→16 bits) while the model
+//! size stays within budget. First/last layers are conventionally
+//! fragile; the sensitivity metric discovers this on real nets, and a
+//! `pin` list lets callers enforce it.
+
+use super::sensitivity::LayerSensitivity;
+use crate::arith::Precision;
+use crate::npe::PrecSel;
+
+/// Budget for the planner.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanBudget {
+    /// Target average bits per weight (e.g. 5.0 for a P8/FP4 mix).
+    pub avg_bits: f64,
+}
+
+/// The resulting per-layer plan.
+#[derive(Debug, Clone)]
+pub struct PrecisionPlan {
+    /// Engine mode per layer.
+    pub per_layer: Vec<PrecSel>,
+    /// Parameter count per layer (for size accounting).
+    pub params: Vec<usize>,
+}
+
+impl PrecisionPlan {
+    /// Uniform plan at one mode.
+    pub fn uniform(sel: PrecSel, params: &[usize]) -> PrecisionPlan {
+        PrecisionPlan { per_layer: vec![sel; params.len()], params: params.to_vec() }
+    }
+
+    /// Model size in bytes under this plan.
+    pub fn model_bytes(&self) -> f64 {
+        self.per_layer
+            .iter()
+            .zip(&self.params)
+            .map(|(sel, &n)| n as f64 * sel.precision().bits() as f64 / 8.0)
+            .sum()
+    }
+
+    /// Average bits per weight.
+    pub fn avg_bits(&self) -> f64 {
+        let total: usize = self.params.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        8.0 * self.model_bytes() / total as f64
+    }
+
+    /// Precision of a layer as a `Precision`.
+    pub fn layer_precision(&self, layer: usize) -> Precision {
+        self.per_layer[layer].precision()
+    }
+}
+
+/// Promotion ladder (4-bit → 8 → 16).
+fn promote(sel: PrecSel) -> Option<PrecSel> {
+    match sel {
+        PrecSel::Fp4x4 | PrecSel::Posit4x4 => Some(PrecSel::Posit8x2),
+        PrecSel::Posit8x2 => Some(PrecSel::Posit16x1),
+        PrecSel::Posit16x1 => None,
+    }
+}
+
+/// Build the layer-adaptive plan.
+///
+/// * `sens` — per-layer sensitivities from `sensitivity::analyze_layers`.
+/// * `params` — parameter count per layer.
+/// * `base4` — which 4-bit mode robust layers use (FP4 in the paper's
+///   headline config; Posit(4,1) is the alternative of Fig. 6).
+/// * `pin_high` — layer indices forced to Posit(16,1) (e.g. the output
+///   head of a VIO regressor).
+pub fn plan(
+    sens: &[LayerSensitivity],
+    params: &[usize],
+    budget: PlanBudget,
+    base4: PrecSel,
+    pin_high: &[usize],
+) -> PrecisionPlan {
+    assert_eq!(sens.len(), params.len(), "sensitivity/params length mismatch");
+    let mut plan = PrecisionPlan::uniform(base4, params);
+    for &l in pin_high {
+        plan.per_layer[l] = PrecSel::Posit16x1;
+    }
+    // promotion order: highest cost_low first
+    let mut order: Vec<usize> = (0..sens.len()).collect();
+    order.sort_by(|&a, &b| sens[b].cost_low.partial_cmp(&sens[a].cost_low).unwrap());
+    // repeatedly promote the most sensitive promotable layer while the
+    // average stays within budget
+    loop {
+        let mut promoted = false;
+        for &l in &order {
+            if pin_high.contains(&l) {
+                continue;
+            }
+            if let Some(next) = promote(plan.per_layer[l]) {
+                let old = plan.per_layer[l];
+                plan.per_layer[l] = next;
+                if plan.avg_bits() > budget.avg_bits {
+                    plan.per_layer[l] = old; // revert: over budget
+                } else {
+                    promoted = true;
+                    break; // re-rank from the top (greedy, most fragile first)
+                }
+            }
+        }
+        if !promoted {
+            break;
+        }
+    }
+    plan
+}
+
+/// The paper's model-size comparison (§I): bytes for UL-VIO-class
+/// parameter counts under each scheme.
+pub fn size_report(params: &[usize]) -> Vec<(&'static str, f64)> {
+    let total: usize = params.iter().sum();
+    let mb = |bits: f64| total as f64 * bits / 8.0 / 1e6;
+    vec![
+        ("FP32", mb(32.0)),
+        ("FP8/INT8", mb(8.0)),
+        ("Posit-8/16 mix", mb(8.5)),
+        ("HFP4/Posit-4/Posit-8 MxP", mb(5.7)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sensitivity::analyze_layers;
+    use crate::util::Rng;
+
+    fn fake_net(seed: u64) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let sizes = [512usize, 2048, 2048, 1024, 64];
+        let mut ws = Vec::new();
+        let mut gs = Vec::new();
+        for (i, &n) in sizes.iter().enumerate() {
+            let std = if i == 0 || i == sizes.len() - 1 { 1.5 } else { 0.3 };
+            let gstd = if i == 0 || i == sizes.len() - 1 { 0.5 } else { 0.05 };
+            ws.push((0..n).map(|_| (rng.normal() * std) as f32).collect());
+            gs.push((0..n).map(|_| (rng.normal() * gstd) as f32).collect());
+        }
+        (ws, gs, sizes.to_vec())
+    }
+
+    #[test]
+    fn plan_respects_budget() {
+        let (ws, gs, params) = fake_net(1);
+        let sens = analyze_layers(&ws, &gs);
+        let p = plan(&sens, &params, PlanBudget { avg_bits: 6.0 }, PrecSel::Fp4x4, &[]);
+        assert!(p.avg_bits() <= 6.0 + 1e-9, "avg bits {}", p.avg_bits());
+    }
+
+    #[test]
+    fn fragile_layers_promoted_first() {
+        let (ws, gs, params) = fake_net(2);
+        let sens = analyze_layers(&ws, &gs);
+        let p = plan(&sens, &params, PlanBudget { avg_bits: 5.5 }, PrecSel::Fp4x4, &[]);
+        // layers 0 and 4 were built fragile (wide weights, big grads)
+        let b = |l: usize| p.per_layer[l].precision().bits();
+        assert!(b(0) > 4 || b(4) > 4, "a fragile layer should be promoted: {:?}", p.per_layer);
+        // the big robust middle layers should stay cheap
+        assert_eq!(b(1), 4);
+        assert_eq!(b(2), 4);
+    }
+
+    #[test]
+    fn pinned_layers_stay_high() {
+        let (ws, gs, params) = fake_net(3);
+        let sens = analyze_layers(&ws, &gs);
+        let p = plan(&sens, &params, PlanBudget { avg_bits: 4.5 }, PrecSel::Fp4x4, &[4]);
+        assert_eq!(p.per_layer[4], PrecSel::Posit16x1);
+    }
+
+    #[test]
+    fn tight_budget_keeps_everything_4bit() {
+        let (ws, gs, params) = fake_net(4);
+        let sens = analyze_layers(&ws, &gs);
+        let p = plan(&sens, &params, PlanBudget { avg_bits: 4.0 }, PrecSel::Posit4x4, &[]);
+        assert!(p.per_layer.iter().all(|&s| s == PrecSel::Posit4x4));
+        assert!((p.avg_bits() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loose_budget_promotes_everything() {
+        let (ws, gs, params) = fake_net(5);
+        let sens = analyze_layers(&ws, &gs);
+        let p = plan(&sens, &params, PlanBudget { avg_bits: 16.0 }, PrecSel::Fp4x4, &[]);
+        assert!(p.per_layer.iter().all(|&s| s == PrecSel::Posit16x1));
+    }
+
+    #[test]
+    fn size_report_matches_paper_shape() {
+        // UL-VIO: 13.5 MB FP32 → ~3.4 FP8 → 2.42 MxP
+        let params = vec![13_500_000 / 4];
+        let rep = size_report(&params);
+        let get = |name: &str| rep.iter().find(|r| r.0.contains(name)).unwrap().1;
+        assert!((get("FP32") - 13.5).abs() < 0.1);
+        assert!((get("FP8") - 3.375).abs() < 0.05);
+        assert!((get("MxP") - 2.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn model_bytes_accounting() {
+        let p = PrecisionPlan {
+            per_layer: vec![PrecSel::Fp4x4, PrecSel::Posit8x2],
+            params: vec![1000, 1000],
+        };
+        assert_eq!(p.model_bytes(), 500.0 + 1000.0);
+        assert_eq!(p.avg_bits(), 6.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Layer sensitivity metric — paper eqs. (1)–(2).
+//!
+//! For layer *l* with weights `w_l` (n_l parameters) and loss gradient
+//! `∇L_{w_l}`, the sensitivity of switching the layer's quantizer from
+//! the current mixed-precision config `Q^MxP` to candidate `Q^MxP'_{sc,k}`
+//! (scale candidate at bit-width k) is
+//!
+//! ```text
+//! s_{l,sc,k} = (‖Q^MxP(w_l) − w_l‖ − ‖Q'^MxP_{sc,k}(w_l) − w_l‖) · ‖∇L_{w_l}‖ / n_l   (1)
+//! s_l        = max(s_{l,sc,8}, s_{l,sc,4})                                            (2)
+//! ```
+//!
+//! A *positive* `s_{l,sc,k}` means the candidate has lower weight
+//! distortion than the current config (weighted by how much the loss
+//! cares, per the first-order Taylor argument of [20][21]); the max over
+//! the 8- and 4-bit scale candidates (2) is the layer's headroom for
+//! bit-width reduction. [`rank_layers`] orders layers by how *costly*
+//! low-precision is for them — the input to `policy`.
+
+use crate::arith::{tables, Precision};
+
+/// L2 norm.
+pub fn l2(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Quantization distortion ‖Q(w) − w‖ for a precision.
+pub fn distortion(w: &[f32], prec: Precision) -> f64 {
+    w.iter()
+        .map(|&x| {
+            let d = tables::quantize(prec, x as f64) - x as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Eq. (1) for one candidate precision against a current config.
+pub fn sensitivity_candidate(
+    w: &[f32],
+    grad: &[f32],
+    current: Precision,
+    candidate: Precision,
+) -> f64 {
+    assert_eq!(w.len(), grad.len(), "weight/grad length mismatch");
+    if w.is_empty() {
+        return 0.0;
+    }
+    let d_cur = distortion(w, current);
+    let d_cand = distortion(w, candidate);
+    (d_cur - d_cand) * l2(grad) / w.len() as f64
+}
+
+/// Per-layer sensitivity summary (eq. 2 plus the raw per-candidate
+/// values for diagnostics).
+#[derive(Debug, Clone)]
+pub struct LayerSensitivity {
+    pub layer: usize,
+    /// eq. (2): max over the 8-bit and 4-bit scale candidates.
+    pub s: f64,
+    /// Distortion *increase* of quantizing this layer to 4 bits from the
+    /// FP32 reference, gradient-weighted — the "cost of going low". This
+    /// is what the policy ranks by (high ⇒ keep precision).
+    pub cost_low: f64,
+    pub s_sc8: f64,
+    pub s_sc4: f64,
+}
+
+/// Compute eq. (1)–(2) for every layer, with the paper's protocol: the
+/// current config is FP32 (the baseline), candidates are the 8-bit and
+/// 4-bit hardware formats.
+pub fn analyze_layers(weights: &[Vec<f32>], grads: &[Vec<f32>]) -> Vec<LayerSensitivity> {
+    assert_eq!(weights.len(), grads.len());
+    weights
+        .iter()
+        .zip(grads)
+        .enumerate()
+        .map(|(layer, (w, g))| {
+            let s8 = sensitivity_candidate(w, g, Precision::Fp32, Precision::Posit8);
+            let s4 = sensitivity_candidate(w, g, Precision::Fp32, Precision::Fp4);
+            // cost of 4-bit: gradient-weighted distortion added by FP4
+            let cost_low = if w.is_empty() {
+                0.0
+            } else {
+                distortion(w, Precision::Fp4) * l2(g) / w.len() as f64
+            };
+            LayerSensitivity { layer, s: s8.max(s4), cost_low, s_sc8: s8, s_sc4: s4 }
+        })
+        .collect()
+}
+
+/// Layers ordered most-precision-hungry first.
+pub fn rank_layers(sens: &[LayerSensitivity]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..sens.len()).collect();
+    idx.sort_by(|&a, &b| sens[b].cost_low.partial_cmp(&sens[a].cost_low).unwrap());
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn distortion_zero_on_representable() {
+        let w = [0.5f32, 1.0, -2.0, 6.0];
+        assert_eq!(distortion(&w, Precision::Fp4), 0.0);
+    }
+
+    #[test]
+    fn distortion_grows_as_bits_shrink() {
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..512).map(|_| (rng.normal() * 0.8) as f32).collect();
+        let d16 = distortion(&w, Precision::Posit16);
+        let d8 = distortion(&w, Precision::Posit8);
+        let d4 = distortion(&w, Precision::Posit4);
+        assert!(d16 < d8 && d8 < d4, "{d16} {d8} {d4}");
+    }
+
+    #[test]
+    fn sensitivity_sign_semantics() {
+        let mut rng = Rng::new(4);
+        let w: Vec<f32> = (0..256).map(|_| (rng.normal() * 0.5) as f32).collect();
+        let g: Vec<f32> = (0..256).map(|_| (rng.normal() * 0.1) as f32).collect();
+        // moving FROM a worse config TO a better one is positive
+        let s = sensitivity_candidate(&w, &g, Precision::Fp4, Precision::Posit16);
+        assert!(s > 0.0);
+        let s_rev = sensitivity_candidate(&w, &g, Precision::Posit16, Precision::Fp4);
+        assert!(s_rev < 0.0);
+    }
+
+    #[test]
+    fn gradient_scales_sensitivity() {
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..256).map(|_| (rng.normal() * 0.5) as f32).collect();
+        let g1: Vec<f32> = (0..256).map(|_| 0.1f32).collect();
+        let g2: Vec<f32> = (0..256).map(|_| 0.2f32).collect();
+        let s1 = sensitivity_candidate(&w, &g1, Precision::Fp32, Precision::Fp4).abs();
+        let s2 = sensitivity_candidate(&w, &g2, Precision::Fp32, Precision::Fp4).abs();
+        assert!((s2 / s1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_layers_puts_fragile_first() {
+        // layer 0: wide distribution + big grads (fragile);
+        // layer 1: tiny weights, small grads (robust)
+        let mut rng = Rng::new(6);
+        let w0: Vec<f32> = (0..256).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let w1: Vec<f32> = (0..256).map(|_| (rng.normal() * 0.05) as f32).collect();
+        let g0: Vec<f32> = (0..256).map(|_| 1.0f32).collect();
+        let g1: Vec<f32> = (0..256).map(|_| 0.01f32).collect();
+        let sens = analyze_layers(&[w0, w1], &[g0, g1]);
+        let order = rank_layers(&sens);
+        assert_eq!(order[0], 0);
+    }
+
+    #[test]
+    fn empty_layer_is_harmless() {
+        let sens = analyze_layers(&[vec![]], &[vec![]]);
+        assert_eq!(sens[0].s, 0.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! PJRT runtime: loads the JAX/Pallas-authored HLO-text artifacts and
+//! executes them from the Rust request path.
+//!
+//! This is the AOT bridge of the three-layer architecture: Python lowers
+//! each inference graph once (`python/compile/aot.py`, HLO *text* — the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id serialized
+//! protos), and this module compiles + runs them on the PJRT CPU client
+//! via the `xla` crate. Python never runs at serving time.
+//!
+//! The [`Registry`] discovers every `*.hlo.txt` under `artifacts/` and
+//! compiles on first use; one [`Executable`] per model variant.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text file.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("model")
+            .trim_end_matches(".hlo")
+            .to_string();
+        Ok(Executable { exe, name })
+    }
+}
+
+/// One compiled model variant.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Run with f32 inputs (`(data, dims)` per argument); returns the
+    /// flattened f32 outputs (the lowered functions return a tuple —
+    /// see `aot.py`, `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let numel: usize = dims.iter().product();
+            if numel != data.len() {
+                bail!("input length {} != shape {:?}", data.len(), dims);
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| anyhow!("reshape: {e}"))?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for p in parts {
+            vecs.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?);
+        }
+        Ok(vecs)
+    }
+}
+
+/// Artifact registry: lazily-compiled model variants by name.
+pub struct Registry {
+    runtime: Runtime,
+    paths: HashMap<String, PathBuf>,
+    compiled: HashMap<String, Executable>,
+}
+
+impl Registry {
+    /// Discover `*.hlo.txt` files under `dir`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref();
+        let runtime = Runtime::new()?;
+        let mut paths = HashMap::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?;
+        for e in entries {
+            let p = e?.path();
+            if p.to_string_lossy().ends_with(".hlo.txt") {
+                let name = p
+                    .file_name()
+                    .unwrap()
+                    .to_string_lossy()
+                    .trim_end_matches(".hlo.txt")
+                    .to_string();
+                paths.insert(name, p);
+            }
+        }
+        if paths.is_empty() {
+            bail!("no *.hlo.txt artifacts in {} — run `make artifacts`", dir.display());
+        }
+        Ok(Registry { runtime, paths, compiled: HashMap::new() })
+    }
+
+    /// Names available.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.paths.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Get (compiling on first use) a model by name.
+    pub fn get(&mut self, name: &str) -> Result<&Executable> {
+        if !self.compiled.contains_key(name) {
+            let path = self
+                .paths
+                .get(name)
+                .with_context(|| format!("unknown model `{name}`; have {:?}", self.names()))?;
+            let exe = self.runtime.load_hlo(path)?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Minimal HLO module (f32[2,2] matmul + 2, as a 1-tuple) — written
+    /// inline so runtime tests don't depend on `make artifacts`.
+    const TEST_HLO: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.7 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.4 = f32[] constant(2)
+  broadcast.5 = f32[2,2]{1,0} broadcast(constant.4), dimensions={}
+  add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)
+  ROOT tuple.7 = (f32[2,2]{1,0}) tuple(add.6)
+}
+"#;
+
+    fn write_test_hlo(dir: &std::path::Path) -> PathBuf {
+        std::fs::create_dir_all(dir).unwrap();
+        let p = dir.join("testmm.hlo.txt");
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(TEST_HLO.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn load_and_execute_hlo_text() {
+        let dir = std::env::temp_dir().join("xr_npe_rt_test");
+        let p = write_test_hlo(&dir);
+        let rt = Runtime::new().unwrap();
+        let exe = rt.load_hlo(&p).unwrap();
+        let a = [1f32, 2.0, 3.0, 4.0];
+        let b = [1f32, 1.0, 1.0, 1.0];
+        let out = exe.run_f32(&[(&a, &[2, 2]), (&b, &[2, 2])]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn registry_discovery_and_cache() {
+        let dir = std::env::temp_dir().join("xr_npe_rt_test2");
+        write_test_hlo(&dir);
+        let mut reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["testmm".to_string()]);
+        let a = [0f32; 4];
+        let out = reg.get("testmm").unwrap().run_f32(&[(&a, &[2, 2]), (&a, &[2, 2])]).unwrap();
+        assert_eq!(out[0], vec![2.0; 4]);
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let dir = std::env::temp_dir().join("xr_npe_rt_test3");
+        let p = write_test_hlo(&dir);
+        let rt = Runtime::new().unwrap();
+        let exe = rt.load_hlo(&p).unwrap();
+        let a = [1f32; 3];
+        assert!(exe.run_f32(&[(&a, &[2, 2]), (&a, &[2, 2])]).is_err());
+    }
+}

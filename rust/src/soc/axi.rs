@@ -1,0 +1,177 @@
+//! AXI4 burst transaction cost model and the external (DRAM) memory
+//! behind it.
+//!
+//! The co-processor is a memory-mapped AXI slave for CSRs and an AXI
+//! master (through the DMA) for data. We model a 64-bit data bus with
+//! fixed channel latency and 256-beat bursts — the Cheshire/VCU-class
+//! configuration the paper's FPGA numbers assume. The energy model
+//! (`energy::system`) charges off-chip access per byte; the paper notes
+//! off-chip movement is ~60% of system energy, which Table IV's bench
+//! reproduces from these counters.
+
+use anyhow::{ensure, Result};
+
+/// AXI bus parameters + counters.
+#[derive(Debug, Clone)]
+pub struct AxiBus {
+    /// Data lane width in bytes (8 = AXI-64).
+    pub data_bytes: usize,
+    /// Read channel latency (AR→first R beat), cycles.
+    pub read_latency: u64,
+    /// Write channel latency (AW→B response), cycles.
+    pub write_latency: u64,
+    /// Maximum beats per burst (AXI4: 256).
+    pub max_beats: usize,
+    pub stats: AxiStats,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AxiStats {
+    pub read_txns: u64,
+    pub write_txns: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub cycles: u64,
+}
+
+impl Default for AxiBus {
+    fn default() -> Self {
+        AxiBus {
+            data_bytes: 8,
+            read_latency: 20,
+            write_latency: 12,
+            max_beats: 256,
+            stats: AxiStats::default(),
+        }
+    }
+}
+
+impl AxiBus {
+    /// Cycles to read `bytes` (possibly split over bursts).
+    pub fn read_cost(&mut self, bytes: usize) -> u64 {
+        let mut cycles = 0;
+        let mut remaining = bytes.div_ceil(self.data_bytes);
+        while remaining > 0 {
+            let beats = remaining.min(self.max_beats);
+            cycles += self.read_latency + beats as u64;
+            remaining -= beats;
+            self.stats.read_txns += 1;
+        }
+        self.stats.bytes_read += bytes as u64;
+        self.stats.cycles += cycles;
+        cycles
+    }
+
+    /// Cycles to write `bytes`.
+    pub fn write_cost(&mut self, bytes: usize) -> u64 {
+        let mut cycles = 0;
+        let mut remaining = bytes.div_ceil(self.data_bytes);
+        while remaining > 0 {
+            let beats = remaining.min(self.max_beats);
+            cycles += self.write_latency + beats as u64;
+            remaining -= beats;
+            self.stats.write_txns += 1;
+        }
+        self.stats.bytes_written += bytes as u64;
+        self.stats.cycles += cycles;
+        cycles
+    }
+}
+
+/// External memory (DRAM) — functional byte storage addressed by the DMA.
+pub struct ExternalMem {
+    data: Vec<u8>,
+}
+
+impl ExternalMem {
+    pub fn new(capacity: usize) -> ExternalMem {
+        ExternalMem { data: vec![0; capacity] }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn write(&mut self, addr: u64, bytes: &[u8]) -> Result<()> {
+        let end = addr.checked_add(bytes.len() as u64);
+        ensure!(
+            matches!(end, Some(e) if e <= self.data.len() as u64),
+            "DRAM write OOB at {addr:#x}"
+        );
+        let a = addr as usize;
+        self.data[a..a + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    pub fn read(&self, addr: u64, len: usize) -> Result<&[u8]> {
+        let end = addr.checked_add(len as u64);
+        ensure!(
+            matches!(end, Some(e) if e <= self.data.len() as u64),
+            "DRAM read OOB at {addr:#x}"
+        );
+        let a = addr as usize;
+        Ok(&self.data[a..a + len])
+    }
+
+    /// Store an f32 slice little-endian.
+    pub fn write_f32(&mut self, addr: u64, xs: &[f32]) -> Result<()> {
+        let mut buf = Vec::with_capacity(xs.len() * 4);
+        for &x in xs {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.write(addr, &buf)
+    }
+
+    /// Load an f32 slice.
+    pub fn read_f32(&self, addr: u64, count: usize) -> Result<Vec<f32>> {
+        let bytes = self.read(addr, count * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_cost_single_burst() {
+        let mut bus = AxiBus::default();
+        // 64 bytes = 8 beats → 20 + 8
+        assert_eq!(bus.read_cost(64), 28);
+        assert_eq!(bus.stats.read_txns, 1);
+    }
+
+    #[test]
+    fn read_cost_multi_burst() {
+        let mut bus = AxiBus::default();
+        // 4096 bytes = 512 beats → two bursts: 2·20 + 512
+        assert_eq!(bus.read_cost(4096), 2 * 20 + 512);
+        assert_eq!(bus.stats.read_txns, 2);
+    }
+
+    #[test]
+    fn write_counters_accumulate() {
+        let mut bus = AxiBus::default();
+        bus.write_cost(100);
+        bus.write_cost(100);
+        assert_eq!(bus.stats.bytes_written, 200);
+        assert_eq!(bus.stats.write_txns, 2);
+    }
+
+    #[test]
+    fn dram_f32_roundtrip() {
+        let mut m = ExternalMem::new(1 << 16);
+        m.write_f32(128, &[1.5, -2.25, 3.0]).unwrap();
+        assert_eq!(m.read_f32(128, 3).unwrap(), vec![1.5, -2.25, 3.0]);
+    }
+
+    #[test]
+    fn dram_oob() {
+        let mut m = ExternalMem::new(64);
+        assert!(m.write(60, &[0; 8]).is_err());
+        assert!(m.read(65, 1).is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! Configuration/Status Register file — the host's memory-mapped window
+//! into the co-processor ("the control units hold the details with
+//! Configuration/Status Registers, FSM Logic/Flags", §II).
+//!
+//! Register map (32-bit registers, word-addressed):
+//!
+//! | offset | name      | meaning |
+//! |--------|-----------|---------|
+//! | 0x00   | CTRL      | bit0 START, bit1 ABORT, bit2 IRQ_EN |
+//! | 0x04   | STATUS    | bit0 BUSY, bit1 DONE, bit2 ERR_OVF, bit3 ERR_NAR, bit4 CMDQ_FULL |
+//! | 0x08   | PREC_SEL  | 0=FP4×4, 1=Posit4×4, 2=Posit8×2, 3=Posit16×1 |
+//! | 0x0C   | MORPH     | 0=8×8, 1=16×16 |
+//! | 0x10   | DIM_M     | GEMM M |
+//! | 0x14   | DIM_K     | GEMM K |
+//! | 0x18   | DIM_N     | GEMM N |
+//! | 0x1C   | ADDR_A    | DRAM base of A (bytes) |
+//! | 0x20   | ADDR_B    | DRAM base of B |
+//! | 0x24   | ADDR_C    | DRAM base of C |
+//! | 0x28   | OUT_PREC  | output format code (same coding as PREC_SEL) |
+//! | 0x2C   | CYCLES_LO | completed-job cycle count, low word (RO) |
+//! | 0x30   | CYCLES_HI | high word (RO) |
+//! | 0x34   | MACS_LO   | completed-job MAC count, low word (RO) |
+//! | 0x38   | MACS_HI   | high word (RO) |
+
+use crate::array::ArrayMorph;
+use crate::npe::PrecSel;
+use anyhow::{bail, Result};
+
+pub const CTRL: u32 = 0x00;
+pub const STATUS: u32 = 0x04;
+pub const PREC_SEL: u32 = 0x08;
+pub const MORPH: u32 = 0x0C;
+pub const DIM_M: u32 = 0x10;
+pub const DIM_K: u32 = 0x14;
+pub const DIM_N: u32 = 0x18;
+pub const ADDR_A: u32 = 0x1C;
+pub const ADDR_B: u32 = 0x20;
+pub const ADDR_C: u32 = 0x24;
+pub const OUT_PREC: u32 = 0x28;
+pub const CYCLES_LO: u32 = 0x2C;
+pub const CYCLES_HI: u32 = 0x30;
+pub const MACS_LO: u32 = 0x34;
+pub const MACS_HI: u32 = 0x38;
+
+pub const STATUS_BUSY: u32 = 1 << 0;
+pub const STATUS_DONE: u32 = 1 << 1;
+pub const STATUS_ERR_OVF: u32 = 1 << 2;
+pub const STATUS_ERR_NAR: u32 = 1 << 3;
+
+const NUM_REGS: usize = 15;
+
+/// The register file.
+#[derive(Debug, Clone)]
+pub struct CsrFile {
+    regs: [u32; NUM_REGS],
+}
+
+impl Default for CsrFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CsrFile {
+    pub fn new() -> CsrFile {
+        CsrFile { regs: [0; NUM_REGS] }
+    }
+
+    fn idx(offset: u32) -> Result<usize> {
+        if offset % 4 != 0 || (offset / 4) as usize >= NUM_REGS {
+            bail!("CSR offset {offset:#x} out of range");
+        }
+        Ok((offset / 4) as usize)
+    }
+
+    pub fn read(&self, offset: u32) -> Result<u32> {
+        Ok(self.regs[Self::idx(offset)?])
+    }
+
+    /// Host write. Read-only registers are rejected (hardware would
+    /// silently ignore; we fail loudly to catch driver bugs).
+    pub fn write(&mut self, offset: u32, value: u32) -> Result<()> {
+        if matches!(offset, CYCLES_LO | CYCLES_HI | MACS_LO | MACS_HI) {
+            bail!("CSR {offset:#x} is read-only");
+        }
+        // STATUS write-1-to-clear for error bits; BUSY/DONE are HW-owned.
+        if offset == STATUS {
+            let clear = value & (STATUS_ERR_OVF | STATUS_ERR_NAR | STATUS_DONE);
+            self.regs[Self::idx(STATUS)?] &= !clear;
+            return Ok(());
+        }
+        self.regs[Self::idx(offset)?] = value;
+        Ok(())
+    }
+
+    /// Hardware-side register update (FSM).
+    pub fn hw_set(&mut self, offset: u32, value: u32) {
+        self.regs[(offset / 4) as usize] = value;
+    }
+
+    pub fn hw_or(&mut self, offset: u32, bits: u32) {
+        self.regs[(offset / 4) as usize] |= bits;
+    }
+
+    pub fn hw_clear(&mut self, offset: u32, bits: u32) {
+        self.regs[(offset / 4) as usize] &= !bits;
+    }
+
+    /// Record a completed job's 64-bit counters.
+    pub fn hw_record_job(&mut self, cycles: u64, macs: u64) {
+        self.hw_set(CYCLES_LO, cycles as u32);
+        self.hw_set(CYCLES_HI, (cycles >> 32) as u32);
+        self.hw_set(MACS_LO, macs as u32);
+        self.hw_set(MACS_HI, (macs >> 32) as u32);
+    }
+
+    /// Decode the PREC_SEL register.
+    pub fn prec_sel(&self) -> Result<PrecSel> {
+        match self.regs[(PREC_SEL / 4) as usize] {
+            0 => Ok(PrecSel::Fp4x4),
+            1 => Ok(PrecSel::Posit4x4),
+            2 => Ok(PrecSel::Posit8x2),
+            3 => Ok(PrecSel::Posit16x1),
+            v => bail!("invalid PREC_SEL value {v}"),
+        }
+    }
+
+    /// Decode the MORPH register.
+    pub fn morph(&self) -> Result<ArrayMorph> {
+        match self.regs[(MORPH / 4) as usize] {
+            0 => Ok(ArrayMorph::M8x8),
+            1 => Ok(ArrayMorph::M16x16),
+            v => bail!("invalid MORPH value {v}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_basic() {
+        let mut c = CsrFile::new();
+        c.write(DIM_M, 128).unwrap();
+        assert_eq!(c.read(DIM_M).unwrap(), 128);
+    }
+
+    #[test]
+    fn read_only_rejected() {
+        let mut c = CsrFile::new();
+        assert!(c.write(CYCLES_LO, 1).is_err());
+        assert!(c.write(MACS_HI, 1).is_err());
+    }
+
+    #[test]
+    fn status_w1c_semantics() {
+        let mut c = CsrFile::new();
+        c.hw_or(STATUS, STATUS_DONE | STATUS_ERR_OVF | STATUS_BUSY);
+        // clearing DONE leaves BUSY (hw-owned) and other bits
+        c.write(STATUS, STATUS_DONE).unwrap();
+        let s = c.read(STATUS).unwrap();
+        assert_eq!(s & STATUS_DONE, 0);
+        assert_ne!(s & STATUS_ERR_OVF, 0);
+        assert_ne!(s & STATUS_BUSY, 0);
+        // host cannot SET status bits by writing them
+        c.write(STATUS, 0xFFFF_FFFF).unwrap();
+        assert_eq!(c.read(STATUS).unwrap() & STATUS_DONE, 0);
+    }
+
+    #[test]
+    fn prec_sel_decoding() {
+        let mut c = CsrFile::new();
+        c.write(PREC_SEL, 2).unwrap();
+        assert_eq!(c.prec_sel().unwrap(), PrecSel::Posit8x2);
+        c.write(PREC_SEL, 9).unwrap();
+        assert!(c.prec_sel().is_err());
+    }
+
+    #[test]
+    fn job_counters_64bit() {
+        let mut c = CsrFile::new();
+        c.hw_record_job(0x1_0000_0002, 0x2_0000_0003);
+        assert_eq!(c.read(CYCLES_LO).unwrap(), 2);
+        assert_eq!(c.read(CYCLES_HI).unwrap(), 1);
+        assert_eq!(c.read(MACS_LO).unwrap(), 3);
+        assert_eq!(c.read(MACS_HI).unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_offset() {
+        let c = CsrFile::new();
+        assert!(c.read(0x3C + 4).is_err());
+        assert!(c.read(2).is_err());
+    }
+}

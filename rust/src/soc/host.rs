@@ -1,0 +1,259 @@
+//! Cheshire-style RISC-V host interface: a command queue + doorbell over
+//! the CSR window, and the [`Soc`] bundle that owns every component of
+//! Fig. 4.
+//!
+//! The host driver (in real life: the p-type SIMD ISA API of [11]/[19])
+//! programs dimension/address/precision CSRs and rings the doorbell; the
+//! control FSM executes and posts a completion. We expose the same flow
+//! as a typed [`Command`] queue — the coordinator (L3) sits on top of
+//! this interface and nothing else, mirroring how userspace would drive
+//! the accelerator.
+
+use super::axi::{AxiBus, ExternalMem};
+use super::control::{ControlFsm, GemmJob, JobReport};
+use super::csr::CsrFile;
+use super::dma::DmaEngine;
+use super::memory::Scratchpad;
+use crate::array::{ArrayMorph, MatrixArray};
+use crate::npe::PrecSel;
+use crate::util::Matrix;
+use anyhow::{ensure, Result};
+use std::collections::VecDeque;
+
+/// Host → co-processor commands.
+#[derive(Debug, Clone, Copy)]
+pub enum Command {
+    /// Run a GEMM with the current array configuration.
+    Gemm(GemmJob),
+    /// Reconfigure array geometry (drains quires).
+    Morph(ArrayMorph),
+    /// Barrier: all prior commands must complete (models the host
+    /// spinning on STATUS.DONE).
+    Fence,
+}
+
+/// Completion record for one command.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub seq: u64,
+    pub report: Option<JobReport>,
+}
+
+/// SoC configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SocConfig {
+    pub morph: ArrayMorph,
+    pub sel: PrecSel,
+    pub spm_bytes: usize,
+    pub spm_banks: usize,
+    pub dram_bytes: usize,
+    /// Array clock, Hz (paper: 250 MHz FPGA, 1.72 GHz ASIC).
+    pub clock_hz: f64,
+}
+
+impl Default for SocConfig {
+    fn default() -> Self {
+        SocConfig {
+            morph: ArrayMorph::M8x8,
+            sel: PrecSel::Posit8x2,
+            spm_bytes: 1 << 18, // 256 KiB
+            spm_banks: 8,
+            dram_bytes: 1 << 26, // 64 MiB
+            clock_hz: 250e6,
+        }
+    }
+}
+
+/// The whole co-processor.
+pub struct Soc {
+    pub cfg: SocConfig,
+    pub array: MatrixArray,
+    pub fsm: ControlFsm,
+    pub dma: DmaEngine,
+    pub bus: AxiBus,
+    pub spm: Scratchpad,
+    pub ext: ExternalMem,
+    pub csrs: CsrFile,
+    queue: VecDeque<(u64, Command)>,
+    next_seq: u64,
+    /// Running total over all completed jobs.
+    pub lifetime: JobReport,
+}
+
+impl Soc {
+    pub fn new(cfg: SocConfig) -> Soc {
+        Soc {
+            cfg,
+            array: MatrixArray::new(cfg.morph, cfg.sel),
+            fsm: ControlFsm::new(),
+            dma: DmaEngine::default(),
+            bus: AxiBus::default(),
+            spm: Scratchpad::new(cfg.spm_bytes, cfg.spm_banks),
+            ext: ExternalMem::new(cfg.dram_bytes),
+            csrs: CsrFile::new(),
+            queue: VecDeque::new(),
+            next_seq: 0,
+            lifetime: JobReport::default(),
+        }
+    }
+
+    /// Enqueue a command; returns its sequence number.
+    pub fn submit(&mut self, cmd: Command) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back((seq, cmd));
+        seq
+    }
+
+    /// Number of pending commands.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Process every queued command in order; returns completions.
+    pub fn process_all(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        while let Some((seq, cmd)) = self.queue.pop_front() {
+            let report = match cmd {
+                Command::Gemm(job) => {
+                    let rep = self.fsm.run(
+                        job,
+                        &mut self.array,
+                        &mut self.dma,
+                        &mut self.bus,
+                        &mut self.spm,
+                        &mut self.ext,
+                        &mut self.csrs,
+                    )?;
+                    self.lifetime.merge(&rep);
+                    Some(rep)
+                }
+                Command::Morph(morph) => {
+                    let sel = self.array.prec_sel();
+                    self.array.reconfigure(morph, sel);
+                    None
+                }
+                Command::Fence => None,
+            };
+            out.push(Completion { seq, report });
+        }
+        Ok(out)
+    }
+
+    /// Convenience: place f32 matrices in DRAM, run one GEMM, read back
+    /// the result. This is the path `coordinator` uses per layer.
+    pub fn gemm(
+        &mut self,
+        a: &Matrix,
+        b: &Matrix,
+        sel: PrecSel,
+        out_prec: crate::arith::Precision,
+    ) -> Result<(Matrix, JobReport)> {
+        ensure!(a.cols == b.rows, "gemm shape mismatch");
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let a_addr = 0u64;
+        let b_addr = (m * k * 4).next_multiple_of(64) as u64;
+        let c_addr = b_addr + ((k * n * 4).next_multiple_of(64) as u64);
+        ensure!(
+            (c_addr as usize) + m * n * 4 + (a.data.len() + b.data.len()) * 2
+                < self.ext.capacity(),
+            "operands exceed DRAM model"
+        );
+        self.ext.write_f32(a_addr, &a.data)?;
+        self.ext.write_f32(b_addr, &b.data)?;
+        let job = GemmJob { m, k, n, sel, out_prec, a_addr, b_addr, c_addr };
+        self.submit(Command::Gemm(job));
+        let mut comps = self.process_all()?;
+        let rep = comps.pop().unwrap().report.unwrap();
+        let c = Matrix::from_vec(m, n, self.ext.read_f32(c_addr, m * n)?);
+        Ok((c, rep))
+    }
+
+    /// Seconds for a cycle count at the configured clock.
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.cfg.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{tables, Precision};
+    use crate::util::Rng;
+
+    #[test]
+    fn soc_gemm_end_to_end() {
+        let mut soc = Soc::new(SocConfig::default());
+        let mut rng = Rng::new(5);
+        let a = Matrix::random(10, 20, 1.0, &mut rng);
+        let b = Matrix::random(20, 6, 1.0, &mut rng);
+        let (c, rep) = soc.gemm(&a, &b, PrecSel::Posit8x2, Precision::Posit8).unwrap();
+        let p = Precision::Posit8;
+        let qa = a.map(|x| tables::quantize(p, x as f64) as f32);
+        let qb = b.map(|x| tables::quantize(p, x as f64) as f32);
+        let want = qa.matmul(&qb).map(|x| tables::quantize(p, x as f64) as f32);
+        assert_eq!(c.data, want.data);
+        assert_eq!(rep.array.macs, 10 * 20 * 6);
+    }
+
+    #[test]
+    fn command_queue_in_order() {
+        let mut soc = Soc::new(SocConfig::default());
+        let mut rng = Rng::new(6);
+        let a = Matrix::random(8, 8, 1.0, &mut rng);
+        soc.ext.write_f32(0, &a.data).unwrap();
+        soc.ext.write_f32(1024, &a.data).unwrap();
+        let job = GemmJob {
+            m: 8,
+            k: 8,
+            n: 8,
+            sel: PrecSel::Posit8x2,
+            out_prec: Precision::Posit8,
+            a_addr: 0,
+            b_addr: 1024,
+            c_addr: 2048,
+        };
+        let s0 = soc.submit(Command::Gemm(job));
+        let s1 = soc.submit(Command::Fence);
+        let s2 = soc.submit(Command::Morph(ArrayMorph::M16x16));
+        let comps = soc.process_all().unwrap();
+        assert_eq!(comps.len(), 3);
+        assert_eq!((comps[0].seq, comps[1].seq, comps[2].seq), (s0, s1, s2));
+        assert!(comps[0].report.is_some());
+        assert!(comps[1].report.is_none());
+        assert_eq!(soc.array.morph(), ArrayMorph::M16x16);
+        assert_eq!(soc.pending(), 0);
+    }
+
+    #[test]
+    fn lifetime_accumulates() {
+        let mut soc = Soc::new(SocConfig::default());
+        let mut rng = Rng::new(7);
+        let a = Matrix::random(8, 16, 1.0, &mut rng);
+        let b = Matrix::random(16, 8, 1.0, &mut rng);
+        soc.gemm(&a, &b, PrecSel::Fp4x4, Precision::Fp4).unwrap();
+        soc.gemm(&a, &b, PrecSel::Posit16x1, Precision::Posit16).unwrap();
+        assert_eq!(soc.lifetime.array.macs, 2 * 8 * 16 * 8);
+        assert!(soc.lifetime.total_cycles > 0);
+    }
+
+    #[test]
+    fn clock_conversion() {
+        let soc = Soc::new(SocConfig { clock_hz: 1e9, ..Default::default() });
+        assert_eq!(soc.cycles_to_seconds(1_000_000_000), 1.0);
+    }
+
+    #[test]
+    fn per_layer_precision_switch_works() {
+        // the layer-adaptive flow: consecutive jobs at different prec_sel
+        let mut soc = Soc::new(SocConfig::default());
+        let mut rng = Rng::new(8);
+        let a = Matrix::random(9, 12, 1.0, &mut rng);
+        let b = Matrix::random(12, 7, 1.0, &mut rng);
+        for sel in PrecSel::ALL {
+            let (c, _) = soc.gemm(&a, &b, sel, sel.precision()).unwrap();
+            assert_eq!(c.rows, 9);
+            assert_eq!(c.cols, 7);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! The co-processor SoC substrate of paper Fig. 4: "AXI-enabled
+//! mixed-precision morphable matrix-multiplication array, memory banks to
+//! feed input/output data, RISC-V interface, and control engine."
+//!
+//! Transaction-level simulation: functional state is exact (bytes move,
+//! GEMMs are bit-accurate through [`crate::array`]), timing is modeled at
+//! burst/tile granularity with double-buffered overlap, and every
+//! component keeps the activity counters the energy/resource models need.
+//!
+//! * [`memory`] — banked scratchpad SRAM (the "memory banks").
+//! * [`axi`] — AXI4 burst cost model + external DRAM.
+//! * [`dma`] — descriptor-driven data mover between DRAM and scratchpad.
+//! * [`csr`] — configuration/status register file (the host's window).
+//! * [`control`] — the FSM sequencing fetch → compute → writeback.
+//! * [`host`] — Cheshire-style RISC-V command interface (command queue +
+//!   doorbell + completion records).
+
+pub mod axi;
+pub mod control;
+pub mod csr;
+pub mod dma;
+pub mod host;
+pub mod memory;
+
+pub use control::{ControlFsm, FsmState, GemmJob, JobReport};
+pub use host::{Command, Completion, Soc, SocConfig};

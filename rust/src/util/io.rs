@@ -1,0 +1,166 @@
+//! Flat tensor container IO — the interchange format between the Python
+//! build path and the Rust runtime.
+//!
+//! `python/compile/aot.py` writes weights and evaluation datasets as a
+//! simple tagged binary ("XRT1"): a little-endian container of named f32
+//! tensors. We avoid `.npz` so the Rust side needs no zip/np parsing and
+//! the format is trivially auditable.
+//!
+//! Layout:
+//! ```text
+//! magic  b"XRT1"
+//! u32    n_tensors
+//! repeat n_tensors:
+//!   u32      name_len,  name (utf-8)
+//!   u32      ndim,      u32 dims[ndim]
+//!   f32      data[prod(dims)]
+//! ```
+
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A named f32 tensor with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "Tensor shape mismatch");
+        Tensor { dims, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// View as a 2-D matrix (requires ndim ≤ 2; 1-D becomes a row).
+    pub fn as_matrix(&self) -> crate::util::Matrix {
+        match self.dims.len() {
+            1 => crate::util::Matrix::from_vec(1, self.dims[0], self.data.clone()),
+            2 => crate::util::Matrix::from_vec(self.dims[0], self.dims[1], self.data.clone()),
+            n => panic!("as_matrix on {n}-D tensor"),
+        }
+    }
+}
+
+/// Ordered map of named tensors (BTreeMap so iteration order is stable).
+pub type TensorMap = BTreeMap<String, Tensor>;
+
+const MAGIC: &[u8; 4] = b"XRT1";
+
+/// Write a tensor container to `path`.
+pub fn save_tensors(path: impl AsRef<Path>, tensors: &TensorMap) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+        for &d in &t.dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a tensor container from `path`.
+pub fn load_tensors(path: impl AsRef<Path>) -> Result<TensorMap> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e} (did you run `make artifacts`?)", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "bad magic in {}", path.display());
+    let n = read_u32(&mut f)? as usize;
+    ensure!(n < 1_000_000, "implausible tensor count {n}");
+    let mut out = TensorMap::new();
+    for _ in 0..n {
+        let name_len = read_u32(&mut f)? as usize;
+        ensure!(name_len < 4096, "implausible name length");
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let ndim = read_u32(&mut f)? as usize;
+        ensure!(ndim <= 8, "implausible ndim {ndim}");
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut f)? as usize);
+        }
+        let total: usize = dims.iter().product();
+        ensure!(total < 256 * 1024 * 1024, "implausible tensor size");
+        let mut data = vec![0f32; total];
+        let mut buf = vec![0u8; total * 4];
+        f.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        if out.insert(name.clone(), Tensor::new(dims, data)).is_some() {
+            bail!("duplicate tensor name {name}");
+        }
+    }
+    Ok(out)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("xr_npe_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let mut m = TensorMap::new();
+        m.insert("w1".into(), Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        m.insert("b".into(), Tensor::new(vec![3], vec![-1.0, 0.5, 0.25]));
+        m.insert("scalarish".into(), Tensor::new(vec![1], vec![42.0]));
+        save_tensors(&path, &m).unwrap();
+        let back = load_tensors(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn missing_file_is_friendly_error() {
+        let err = load_tensors("/nonexistent/nope.bin").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("xr_npe_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(load_tensors(&path).is_err());
+    }
+
+    #[test]
+    fn tensor_as_matrix() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let m = t.as_matrix();
+        assert_eq!(m.at(1, 0), 3.0);
+        let v = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(v.as_matrix().rows, 1);
+    }
+}

@@ -1,0 +1,84 @@
+//! Small shared utilities: deterministic RNG, dense matrices, tensor IO.
+//!
+//! Everything in the repo that needs randomness goes through [`Rng`] so
+//! runs are reproducible and the Python build path can mirror the same
+//! streams (same algorithm, same seeds — see `python/compile/datasets.py`).
+
+pub mod io;
+pub mod matrix;
+pub mod proptest;
+pub mod rng;
+
+pub use matrix::Matrix;
+pub use rng::Rng;
+
+/// Root-mean-square error between two equal-length slices.
+pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rmse: length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum();
+    (s / a.len() as f64).sqrt()
+}
+
+/// Mean absolute error.
+pub fn mae(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "mae: length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a.iter().zip(b).map(|(&x, &y)| (x as f64 - y as f64).abs()).sum();
+    s / a.len() as f64
+}
+
+/// argmax index of a slice (first max wins). Panics on empty input.
+pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty(), "argmax of empty slice");
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_zero_for_identical() {
+        let a = [1.0f32, -2.0, 3.5];
+        assert_eq!(rmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let a = [0.0f32, 0.0];
+        let b = [3.0f32, 4.0];
+        // sqrt((9+16)/2) = sqrt(12.5)
+        assert!((rmse(&a, &b) - 12.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mae_known_value() {
+        let a = [1.0f32, -1.0];
+        let b = [2.0f32, 1.0];
+        assert!((mae(&a, &b) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

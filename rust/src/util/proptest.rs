@@ -1,0 +1,115 @@
+//! Minimal property-testing helper (the proptest crate is unavailable in
+//! this offline build environment).
+//!
+//! [`run`] drives a property over `cases` seeded random inputs; on failure
+//! it reports the failing case index and the seed so the case is exactly
+//! reproducible with `Rng::new(seed)` + `case` draws.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(case_rng, case_index)`; the property panics (e.g. via
+/// assert!) to signal failure. Each case gets an independent RNG derived
+/// from the base seed so failures minimize to a single reproducible case.
+pub fn run(cfg: Config, mut prop: impl FnMut(&mut Rng, u32)) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed ^ ((case as u64) << 32) ^ 0x9E37);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Run with the default config.
+pub fn check(prop: impl FnMut(&mut Rng, u32)) {
+    run(Config::default(), prop);
+}
+
+/// Draw helpers commonly needed by properties.
+pub trait Draw {
+    /// Uniform usize in [lo, hi].
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize;
+    /// Random f32 vector with entries N(0, std).
+    fn vec_normal(&mut self, len: usize, std: f64) -> Vec<f32>;
+    /// Random finite "nasty" float: mixes normals, exact powers of two,
+    /// tiny, huge, and zero.
+    fn nasty_f64(&mut self) -> f64;
+}
+
+impl Draw for Rng {
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    fn vec_normal(&mut self, len: usize, std: f64) -> Vec<f32> {
+        (0..len).map(|_| (self.normal() * std) as f32).collect()
+    }
+
+    fn nasty_f64(&mut self) -> f64 {
+        match self.below(6) {
+            0 => 0.0,
+            1 => {
+                let e = self.usize_in(0, 60) as i32 - 30;
+                let s = if self.coin(0.5) { -1.0 } else { 1.0 };
+                s * 2f64.powi(e)
+            }
+            2 => self.normal() * 1e-6,
+            3 => self.normal() * 1e6,
+            4 => self.normal(),
+            _ => self.normal() * 16.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(|rng, _| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_reports_case() {
+        run(Config { cases: 16, seed: 1 }, |rng, _| {
+            assert!(rng.uniform() < 0.5, "coin flip lost");
+        });
+    }
+
+    #[test]
+    fn draw_usize_in_bounds() {
+        check(|rng, _| {
+            let v = rng.usize_in(3, 17);
+            assert!((3..=17).contains(&v));
+        });
+    }
+}

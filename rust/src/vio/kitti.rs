@@ -1,0 +1,231 @@
+//! Synthetic KITTI-like sequence generator.
+//!
+//! A vehicle drives a smooth 2-D-dominant (but fully 6-DoF) trajectory:
+//! forward velocity with slow variation, yaw-rate segments (straights and
+//! curves), small pitch/roll and vertical disturbance. Per camera frame
+//! (10 Hz KITTI-style):
+//!
+//! * the **feature frame**: a fixed random 3-D landmark cloud is
+//!   projected through the current pose into a 16×16 intensity map
+//!   (what a learned VIO frontend's feature encoder consumes);
+//! * the **IMU vector**: body-frame accelerations + angular rates
+//!   integrated over the frame interval, with bias + white noise;
+//! * the **ground-truth relative pose** (tx, ty, tz, roll, pitch, yaw)
+//!   between consecutive frames — the regression target.
+//!
+//! `python/compile/datasets.py::kitti_like` implements the same
+//! generator for training; eval accuracy figures use python-exported
+//! sets, while this Rust generator drives the streaming pipeline and
+//! throughput benches.
+
+use crate::util::Rng;
+
+/// One frame of the sequence.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// 2×16×16 stacked feature maps (current, previous), CHW.
+    pub image: Vec<f32>,
+    /// 6-D IMU features (ax, ay, az, wx, wy, wz), normalized.
+    pub imu: Vec<f32>,
+    /// Ground-truth relative pose (tx, ty, tz, roll, pitch, yaw).
+    pub rel_pose: [f32; 6],
+}
+
+/// Sequence parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SequenceConfig {
+    pub frames: usize,
+    pub seed: u64,
+    /// Mean forward speed, m/frame.
+    pub speed: f64,
+    /// IMU noise std.
+    pub imu_noise: f64,
+    /// Landmarks in the cloud.
+    pub landmarks: usize,
+}
+
+impl Default for SequenceConfig {
+    fn default() -> Self {
+        SequenceConfig { frames: 200, seed: 2024, speed: 0.8, imu_noise: 0.02, landmarks: 96 }
+    }
+}
+
+/// Generator state.
+pub struct TrajectoryGenerator {
+    cfg: SequenceConfig,
+    rng: Rng,
+    cloud: Vec<[f64; 3]>,
+    // pose state
+    pos: [f64; 3],
+    yaw: f64,
+    pitch: f64,
+    roll: f64,
+    // dynamics state
+    v: f64,
+    yaw_rate: f64,
+    prev_feat: Vec<f32>,
+    frame_idx: usize,
+}
+
+impl TrajectoryGenerator {
+    pub fn new(cfg: SequenceConfig) -> TrajectoryGenerator {
+        let mut rng = Rng::new(cfg.seed);
+        let cloud = (0..cfg.landmarks)
+            .map(|_| {
+                [rng.range(-40.0, 40.0), rng.range(-4.0, 8.0), rng.range(-40.0, 40.0)]
+            })
+            .collect();
+        TrajectoryGenerator {
+            cfg,
+            rng,
+            cloud,
+            pos: [0.0; 3],
+            yaw: 0.0,
+            pitch: 0.0,
+            roll: 0.0,
+            v: cfg.speed,
+            yaw_rate: 0.0,
+            prev_feat: vec![0.0; 256],
+            frame_idx: 0,
+        }
+    }
+
+    /// Render the landmark cloud from the current pose into a 16×16 map.
+    fn render(&self) -> Vec<f32> {
+        let mut img = vec![0.0f32; 256];
+        let (sy, cy) = self.yaw.sin_cos();
+        for lm in &self.cloud {
+            // world → body (yaw-dominant rotation)
+            let dx = lm[0] - self.pos[0];
+            let dy = lm[1] - self.pos[1];
+            let dz = lm[2] - self.pos[2];
+            let bx = cy * dx + sy * dz; // right
+            let bz = -sy * dx + cy * dz; // forward
+            let by = dy - self.pitch * bz; // small-angle pitch coupling
+            if bz < 1.0 || bz > 60.0 {
+                continue; // behind or too far
+            }
+            // pinhole projection to the 16×16 plane
+            let u = 8.0 + 8.0 * bx / bz;
+            let v = 8.0 + 8.0 * by / bz;
+            if !(0.0..16.0).contains(&u) || !(0.0..16.0).contains(&v) {
+                continue;
+            }
+            let (ui, vi) = (u as usize, v as usize);
+            // splat with inverse-depth intensity
+            let inten = (8.0 / bz).min(1.0) as f32;
+            img[vi * 16 + ui] = (img[vi * 16 + ui] + inten).min(1.0);
+        }
+        img
+    }
+
+    /// Advance one frame.
+    pub fn next_frame(&mut self) -> Frame {
+        // --- dynamics: segments of straights and curves ---
+        if self.frame_idx % 40 == 0 {
+            self.yaw_rate = self.rng.range(-0.06, 0.06);
+        }
+        self.v = (self.v + self.rng.normal() * 0.02 * self.cfg.speed)
+            .clamp(0.3 * self.cfg.speed, 1.8 * self.cfg.speed);
+        let dyaw = self.yaw_rate + self.rng.normal() * 0.002;
+        let dpitch = -self.pitch * 0.2 + self.rng.normal() * 0.004;
+        let droll = -self.roll * 0.2 + self.rng.normal() * 0.003;
+
+        // --- ground-truth relative pose (body frame) ---
+        let dz_fwd = self.v;
+        let dx_lat = self.rng.normal() * 0.01;
+        let dy_up = self.rng.normal() * 0.008;
+        let rel = [
+            dx_lat as f32,
+            dy_up as f32,
+            dz_fwd as f32,
+            droll as f32,
+            dpitch as f32,
+            dyaw as f32,
+        ];
+
+        // --- integrate world pose ---
+        let (sy, cy) = self.yaw.sin_cos();
+        self.pos[0] += cy * dx_lat + sy * dz_fwd;
+        self.pos[1] += dy_up;
+        self.pos[2] += -sy * dx_lat + cy * dz_fwd;
+        self.yaw += dyaw;
+        self.pitch += dpitch;
+        self.roll += droll;
+
+        // --- sensors ---
+        let feat = self.render();
+        let mut image = Vec::with_capacity(512);
+        image.extend_from_slice(&feat);
+        image.extend_from_slice(&self.prev_feat);
+        self.prev_feat = feat;
+        let n = self.cfg.imu_noise;
+        let imu = vec![
+            (dx_lat + self.rng.normal() * n) as f32,
+            (dy_up + self.rng.normal() * n) as f32,
+            (dz_fwd + self.rng.normal() * n) as f32,
+            (droll + self.rng.normal() * n * 0.3) as f32,
+            (dpitch + self.rng.normal() * n * 0.3) as f32,
+            (dyaw + self.rng.normal() * n * 0.3) as f32,
+        ];
+
+        self.frame_idx += 1;
+        Frame { image, imu, rel_pose: rel }
+    }
+
+    /// Generate the whole sequence.
+    pub fn sequence(mut self) -> Vec<Frame> {
+        (0..self.cfg.frames).map(|_| self.next_frame()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = TrajectoryGenerator::new(SequenceConfig::default()).sequence();
+        let b = TrajectoryGenerator::new(SequenceConfig::default()).sequence();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.image, y.image);
+            assert_eq!(x.rel_pose, y.rel_pose);
+        }
+    }
+
+    #[test]
+    fn frames_have_structure() {
+        let frames = TrajectoryGenerator::new(SequenceConfig { frames: 50, ..Default::default() })
+            .sequence();
+        // images must not be empty or constant
+        let nonzero = frames
+            .iter()
+            .map(|f| f.image.iter().filter(|&&v| v > 0.0).count())
+            .sum::<usize>();
+        assert!(nonzero > 50, "feature maps too sparse: {nonzero}");
+        // forward motion dominates
+        let fwd: f64 = frames.iter().map(|f| f.rel_pose[2] as f64).sum();
+        let lat: f64 = frames.iter().map(|f| f.rel_pose[0].abs() as f64).sum();
+        assert!(fwd > 5.0 * lat, "fwd {fwd} lat {lat}");
+    }
+
+    #[test]
+    fn imu_correlates_with_ground_truth() {
+        let frames = TrajectoryGenerator::new(SequenceConfig::default()).sequence();
+        let mut err = 0.0;
+        for f in &frames {
+            err += (f.imu[2] as f64 - f.rel_pose[2] as f64).abs();
+        }
+        let mean_err = err / frames.len() as f64;
+        assert!(mean_err < 0.1, "IMU forward channel too noisy: {mean_err}");
+    }
+
+    #[test]
+    fn stacked_frames_shift() {
+        let frames = TrajectoryGenerator::new(SequenceConfig { frames: 3, ..Default::default() })
+            .sequence();
+        // frame 1's previous half == frame 0's current half
+        assert_eq!(&frames[1].image[256..], &frames[0].image[..256]);
+    }
+}

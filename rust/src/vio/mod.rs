@@ -1,0 +1,18 @@
+//! Visual-inertial odometry substrate: the synthetic KITTI-like workload
+//! generator and the standard odometry error metrics.
+//!
+//! The paper evaluates UL-VIO on KITTI odometry (1241×376 RGB). We have
+//! neither the dataset nor the authors' checkpoints, so [`kitti`]
+//! procedurally generates 6-DoF trajectories with camera feature frames
+//! and IMU streams of the same *structure* (smooth vehicle dynamics,
+//! frame-rate sensors, noisy inertial integration), and [`odometry`]
+//! implements the translation/rotation RMSE metrics the paper quotes
+//! (Fig. 6: FP4 costs +0.72 pp translation, +0.13 pp rotation vs FP32).
+//! What must reproduce is the *relative* accuracy across precisions —
+//! a property of the model + quantizer, not of the specific imagery.
+
+pub mod kitti;
+pub mod odometry;
+
+pub use kitti::{Frame, SequenceConfig, TrajectoryGenerator};
+pub use odometry::{integrate_poses, rmse_rotation_deg, rmse_translation, RelPose};

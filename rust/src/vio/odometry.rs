@@ -1,0 +1,149 @@
+//! Odometry error metrics (KITTI-style) and pose integration.
+//!
+//! The paper quotes translation RMSE in percent (relative translation
+//! error per distance traveled) and rotation RMSE in degrees — Fig. 6's
+//! "FP4 enhances translation and rotation RMSE by just 0.72 pp and
+//! 0.13 pp vs FP32". We implement:
+//!
+//! * per-frame relative-pose errors (what the regression net is scored
+//!   on),
+//! * trajectory integration + absolute trajectory error (ATE) for the
+//!   example drivers.
+
+/// Relative pose (tx, ty, tz, roll, pitch, yaw) per frame.
+pub type RelPose = [f32; 6];
+
+/// Translation RMSE as a percentage of distance traveled (KITTI t_rel).
+pub fn rmse_translation(pred: &[RelPose], gt: &[RelPose]) -> f64 {
+    assert_eq!(pred.len(), gt.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mut se = 0.0;
+    let mut dist = 0.0;
+    for (p, g) in pred.iter().zip(gt) {
+        for i in 0..3 {
+            let d = (p[i] - g[i]) as f64;
+            se += d * d;
+        }
+        dist += (g[0] as f64).hypot(g[1] as f64).hypot(g[2] as f64);
+    }
+    let rmse = (se / pred.len() as f64).sqrt();
+    let mean_step = dist / pred.len() as f64;
+    100.0 * rmse / mean_step.max(1e-9)
+}
+
+/// Rotation RMSE in degrees per frame.
+pub fn rmse_rotation_deg(pred: &[RelPose], gt: &[RelPose]) -> f64 {
+    assert_eq!(pred.len(), gt.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mut se = 0.0;
+    for (p, g) in pred.iter().zip(gt) {
+        for i in 3..6 {
+            let d = (p[i] - g[i]) as f64;
+            se += d * d;
+        }
+    }
+    ((se / pred.len() as f64).sqrt()).to_degrees()
+}
+
+/// Integrate relative poses into world positions (yaw-dominant model,
+/// matching the generator's kinematics).
+pub fn integrate_poses(rels: &[RelPose]) -> Vec<[f64; 3]> {
+    let mut out = Vec::with_capacity(rels.len() + 1);
+    let mut pos = [0.0f64; 3];
+    let mut yaw = 0.0f64;
+    out.push(pos);
+    for r in rels {
+        let (s, c) = yaw.sin_cos();
+        pos[0] += c * r[0] as f64 + s * r[2] as f64;
+        pos[1] += r[1] as f64;
+        pos[2] += -s * r[0] as f64 + c * r[2] as f64;
+        yaw += r[5] as f64;
+        out.push(pos);
+    }
+    out
+}
+
+/// Absolute trajectory error (RMSE over integrated positions).
+pub fn ate(pred: &[RelPose], gt: &[RelPose]) -> f64 {
+    let tp = integrate_poses(pred);
+    let tg = integrate_poses(gt);
+    let n = tp.len().min(tg.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let mut se = 0.0;
+    for i in 0..n {
+        for k in 0..3 {
+            let d = tp[i][k] - tg[i][k];
+            se += d * d;
+        }
+    }
+    (se / n as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_error_on_identical() {
+        let poses: Vec<RelPose> = (0..50)
+            .map(|i| [0.0, 0.0, 1.0, 0.0, 0.0, (i as f32) * 0.001])
+            .collect();
+        assert_eq!(rmse_translation(&poses, &poses), 0.0);
+        assert_eq!(rmse_rotation_deg(&poses, &poses), 0.0);
+        assert_eq!(ate(&poses, &poses), 0.0);
+    }
+
+    #[test]
+    fn translation_rmse_percent_semantics() {
+        // constant forward 1 m/frame, constant error 0.1 m → 10%
+        let gt: Vec<RelPose> = (0..100).map(|_| [0.0, 0.0, 1.0, 0.0, 0.0, 0.0]).collect();
+        let pred: Vec<RelPose> = (0..100).map(|_| [0.0, 0.0, 1.1, 0.0, 0.0, 0.0]).collect();
+        let t = rmse_translation(&pred, &gt);
+        assert!((t - 10.0).abs() < 1e-4, "t_rel {t}");
+    }
+
+    #[test]
+    fn rotation_rmse_degrees() {
+        let gt: Vec<RelPose> = (0..10).map(|_| [0.0; 6]).collect();
+        let pred: Vec<RelPose> =
+            (0..10).map(|_| [0.0, 0.0, 0.0, 0.0, 0.0, 0.01]).collect();
+        let r = rmse_rotation_deg(&pred, &gt);
+        assert!((r - 0.01f64.to_degrees()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn integration_straight_line() {
+        let rels: Vec<RelPose> = (0..10).map(|_| [0.0, 0.0, 1.0, 0.0, 0.0, 0.0]).collect();
+        let traj = integrate_poses(&rels);
+        assert_eq!(traj.len(), 11);
+        assert!((traj[10][2] - 10.0).abs() < 1e-9);
+        assert!(traj[10][0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn integration_quarter_turn() {
+        // 90° total yaw over 90 frames of 1 m steps ≈ quarter circle
+        let rels: Vec<RelPose> = (0..90)
+            .map(|_| [0.0, 0.0, 1.0, 0.0, 0.0, std::f32::consts::PI / 180.0])
+            .collect();
+        let traj = integrate_poses(&rels);
+        let end = traj.last().unwrap();
+        // radius = L/θ = 90/(π/2) ≈ 57.3; end ≈ (r, 0, r)
+        assert!((end[0] - 57.0).abs() < 2.0, "x {end:?}");
+        assert!((end[2] - 57.0).abs() < 2.0, "z {end:?}");
+    }
+
+    #[test]
+    fn ate_grows_with_drift() {
+        let gt: Vec<RelPose> = (0..100).map(|_| [0.0, 0.0, 1.0, 0.0, 0.0, 0.0]).collect();
+        let small: Vec<RelPose> = (0..100).map(|_| [0.0, 0.0, 1.001, 0.0, 0.0, 0.0]).collect();
+        let big: Vec<RelPose> = (0..100).map(|_| [0.0, 0.0, 1.05, 0.0, 0.0, 0.0]).collect();
+        assert!(ate(&big, &gt) > ate(&small, &gt));
+    }
+}

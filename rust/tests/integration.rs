@@ -1,0 +1,168 @@
+//! Cross-layer integration tests (require `make artifacts`).
+//!
+//! The central contract: the same trained model, run (a) through the
+//! JAX-lowered HLO on PJRT and (b) through the bit-accurate NPE
+//! simulator, must agree — exactly-ish at FP32, and within the coarsest
+//! format's quantization step under the MxP plan.
+
+use xr_npe::artifacts;
+use xr_npe::coordinator::scheduler::ModelInstance;
+use xr_npe::models::{effnet, gaze, ulvio};
+use xr_npe::npe::PrecSel;
+use xr_npe::runtime::Registry;
+use xr_npe::soc::{Soc, SocConfig};
+
+fn have_artifacts() -> bool {
+    artifacts::dir().join("manifest.json").exists()
+}
+
+macro_rules! need_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn fp32_rust_executor_matches_jax_hlo_gaze() {
+    need_artifacts!();
+    let mut reg = Registry::open(artifacts::dir()).unwrap();
+    let inst = ModelInstance::uniform(
+        gaze::build(),
+        artifacts::weights("gaze").unwrap(),
+        PrecSel::Posit16x1,
+    );
+    let eval = artifacts::eval_gaze().unwrap();
+    for i in 0..10 {
+        let x = &eval.landmarks[i];
+        let jax = reg.get("gaze_fp32").unwrap().run_f32(&[(x, &[1, 16])]).unwrap();
+        let rust = inst.infer_ref(x, &[]).unwrap();
+        for (a, b) in jax[0].iter().zip(&rust) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "frame {i}: jax {a} vs rust {b} (full: {:?} vs {:?})",
+                jax[0],
+                rust
+            );
+        }
+    }
+}
+
+#[test]
+fn fp32_rust_executor_matches_jax_hlo_effnet() {
+    need_artifacts!();
+    let mut reg = Registry::open(artifacts::dir()).unwrap();
+    let inst = ModelInstance::uniform(
+        effnet::build(),
+        artifacts::weights("effnet").unwrap(),
+        PrecSel::Posit16x1,
+    );
+    let eval = artifacts::eval_shapes().unwrap();
+    for i in 0..5 {
+        let x = &eval.images[i];
+        let jax = reg.get("effnet_fp32").unwrap().run_f32(&[(x, &[1, 1, 16, 16])]).unwrap();
+        let rust = inst.infer_ref(x, &[]).unwrap();
+        for (a, b) in jax[0].iter().zip(&rust) {
+            assert!((a - b).abs() < 1e-3, "sample {i}: jax {a} vs rust {b}");
+        }
+    }
+}
+
+#[test]
+fn fp32_rust_executor_matches_jax_hlo_ulvio() {
+    need_artifacts!();
+    let mut reg = Registry::open(artifacts::dir()).unwrap();
+    let inst = ModelInstance::uniform(
+        ulvio::build(),
+        artifacts::weights("ulvio").unwrap(),
+        PrecSel::Posit16x1,
+    );
+    let eval = artifacts::eval_vio().unwrap();
+    for i in 0..5 {
+        let (img, imu) = (&eval.images[i], &eval.imu[i]);
+        let jax = reg
+            .get("ulvio_fp32")
+            .unwrap()
+            .run_f32(&[(img, &[1, 2, 16, 16]), (imu, &[1, 6])])
+            .unwrap();
+        let rust = inst.infer_ref(img, imu).unwrap();
+        for (a, b) in jax[0].iter().zip(&rust) {
+            assert!((a - b).abs() < 1e-4, "frame {i}: jax {a} vs rust {b}");
+        }
+    }
+}
+
+#[test]
+fn mxp_npe_close_to_jax_mxp_gaze() {
+    need_artifacts!();
+    let mut reg = Registry::open(artifacts::dir()).unwrap();
+    // python plan for gaze (plan.json): [posit8, fp4, posit16] — build
+    // the identical plan on the rust side.
+    let plan_txt = std::fs::read_to_string(artifacts::dir().join("plan.json")).unwrap();
+    assert!(plan_txt.contains("posit8"), "plan.json: {plan_txt}");
+    let inst = ModelInstance::planned(
+        gaze::build(),
+        artifacts::weights("gaze").unwrap(),
+        xr_npe::quant::PlanBudget { avg_bits: 6.0 },
+        PrecSel::Fp4x4,
+        false,
+    );
+    let mut soc = Soc::new(SocConfig::default());
+    let eval = artifacts::eval_gaze().unwrap();
+    let mut worst = 0f32;
+    for i in 0..20 {
+        let x = &eval.landmarks[i];
+        let jax = reg.get("gaze_mxp").unwrap().run_f32(&[(x, &[1, 16])]).unwrap();
+        let (rust, _) = inst.infer(&mut soc, x, &[]).unwrap();
+        for (a, b) in jax[0].iter().zip(&rust) {
+            worst = worst.max((a - b).abs());
+        }
+    }
+    // FP4 mid-layer step at gaze activation scale bounds the divergence;
+    // outputs are radians in (-0.7, 0.7)
+    assert!(worst < 0.15, "MxP divergence {worst} rad too large");
+}
+
+#[test]
+fn pallas_kernel_artifact_runs() {
+    need_artifacts!();
+    let mut reg = Registry::open(artifacts::dir()).unwrap();
+    let a = vec![0.5f32; 16 * 32];
+    let b = vec![0.25f32; 32 * 16];
+    let out = reg
+        .get("mpmatmul_posit8")
+        .unwrap()
+        .run_f32(&[(&a, &[16, 32]), (&b, &[32, 16])])
+        .unwrap();
+    // 0.5·0.25·32 = 4.0 per element (all values posit8-exact)
+    assert_eq!(out[0].len(), 256);
+    for &v in &out[0] {
+        assert!((v - 4.0).abs() < 1e-5, "got {v}");
+    }
+}
+
+#[test]
+fn qat_weights_improve_low_precision_accuracy() {
+    need_artifacts!();
+    let eval = artifacts::eval_shapes().unwrap();
+    let n = 100.min(eval.images.len());
+    let mut soc = Soc::new(SocConfig::default());
+    let run = |w, soc: &mut Soc| {
+        let inst = ModelInstance::uniform(effnet::build(), w, PrecSel::Fp4x4);
+        let mut ok = 0;
+        for i in 0..n {
+            let (out, _) = inst.infer(soc, &eval.images[i], &[]).unwrap();
+            ok += (xr_npe::util::argmax(&out) == eval.labels[i]) as usize;
+        }
+        ok as f64 / n as f64
+    };
+    let ptq = run(artifacts::weights("effnet").unwrap(), &mut soc);
+    let qat = run(artifacts::weights_qat("effnet", "fp4").unwrap(), &mut soc);
+    assert!(
+        qat >= ptq - 0.02,
+        "QAT ({qat:.2}) should not be worse than PTQ ({ptq:.2}) at FP4"
+    );
+    assert!(qat > 0.8, "QAT FP4 accuracy {qat:.2} should be high");
+}

@@ -1,0 +1,176 @@
+//! Cross-module property tests (seeded in-repo harness, no artifacts
+//! needed).
+
+use xr_npe::arith::{tables, Class, Precision, Quire};
+use xr_npe::array::{ArrayMorph, MatrixArray};
+use xr_npe::npe::PrecSel;
+use xr_npe::quant::policy::{self, PlanBudget};
+use xr_npe::quant::sensitivity::analyze_layers;
+use xr_npe::soc::control::{pack_matrix, packed_bytes};
+use xr_npe::util::proptest::{self, Config, Draw};
+use xr_npe::util::Matrix;
+
+#[test]
+fn array_results_invariant_under_morph() {
+    // the SAME gemm on 8x8 vs 16x16 must produce identical values
+    // (geometry affects cycles, never numerics)
+    proptest::run(Config { cases: 16, seed: 0xBEEF }, |rng, _| {
+        let m = rng.usize_in(1, 20);
+        let k = rng.usize_in(1, 30);
+        let n = rng.usize_in(1, 20);
+        let sel = PrecSel::ALL[rng.usize_in(0, 3)];
+        let a = Matrix::random(m, k, 1.0, rng);
+        let b = Matrix::random(k, n, 1.0, rng);
+        let (small, _) = MatrixArray::new(ArrayMorph::M8x8, sel).gemm(&a, &b, sel.precision());
+        let (big, _) = MatrixArray::new(ArrayMorph::M16x16, sel).gemm(&a, &b, sel.precision());
+        assert_eq!(small.data, big.data);
+    });
+}
+
+#[test]
+fn quire_dot_matches_f64_for_short_posit8_dots() {
+    // posit8 products are exact in f64 and short sums stay exact, so the
+    // quire and f64 must agree perfectly
+    proptest::check(|rng, _| {
+        let t = tables::table(Precision::Posit8);
+        let k = rng.usize_in(1, 64);
+        let mut q = Quire::new();
+        let mut f = 0f64;
+        for _ in 0..k {
+            let a = t.decode((rng.next_u64() & 0xFF) as u32);
+            let b = t.decode((rng.next_u64() & 0xFF) as u32);
+            if a.class != Class::Normal || b.class != Class::Normal {
+                continue;
+            }
+            q.add_product(a, b);
+            f += a.to_f64() * b.to_f64();
+        }
+        assert_eq!(q.to_f64(), f);
+    });
+}
+
+#[test]
+fn pack_matrix_length_and_roundtrip() {
+    proptest::check(|rng, _| {
+        let r = rng.usize_in(1, 12);
+        let c = rng.usize_in(1, 24);
+        let sel = PrecSel::ALL[rng.usize_in(0, 3)];
+        let m = Matrix::random(r, c, 1.0, rng);
+        let bytes = pack_matrix(&m, sel);
+        assert_eq!(bytes.len(), packed_bytes(r, c, sel));
+        // every packed word decodes to a quantized value of the source
+        let t = tables::table(sel.precision());
+        let words_per_row = c.div_ceil(sel.lanes());
+        for row in 0..r {
+            for (wi, chunk) in bytes[row * words_per_row * 2..(row + 1) * words_per_row * 2]
+                .chunks_exact(2)
+                .enumerate()
+            {
+                let word = u16::from_le_bytes([chunk[0], chunk[1]]);
+                for (li, enc) in sel.unpack(word).enumerate() {
+                    let idx = wi * sel.lanes() + li;
+                    if idx < c {
+                        let want = t.encode(m.at(row, idx) as f64);
+                        assert_eq!(enc, want);
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn planner_always_legal_and_monotone_in_budget() {
+    proptest::run(Config { cases: 64, seed: 7 }, |rng, _| {
+        let layers = rng.usize_in(1, 10);
+        let ws: Vec<Vec<f32>> = (0..layers)
+            .map(|_| {
+                let len = rng.usize_in(4, 512);
+                rng.vec_normal(len, 0.5)
+            })
+            .collect();
+        let gs: Vec<Vec<f32>> =
+            (0..layers).map(|i| rng.vec_normal(ws[i].len(), 0.1)).collect();
+        let params: Vec<usize> = ws.iter().map(Vec::len).collect();
+        let sens = analyze_layers(&ws, &gs);
+        let lo = policy::plan(&sens, &params, PlanBudget { avg_bits: 4.5 }, PrecSel::Fp4x4, &[]);
+        let hi = policy::plan(&sens, &params, PlanBudget { avg_bits: 9.0 }, PrecSel::Fp4x4, &[]);
+        assert_eq!(lo.per_layer.len(), layers);
+        assert!(lo.avg_bits() <= 4.5 + 1e-9);
+        assert!(hi.avg_bits() <= 9.0 + 1e-9);
+        // bigger budget never allocates FEWER bits in total (per-layer
+        // monotonicity does NOT hold for greedy knapsack promotion — a
+        // loose budget spends on big fragile layers a tight one can't
+        // afford, skipping the small ones it promoted instead)
+        assert!(
+            hi.avg_bits() >= lo.avg_bits() - 1e-9,
+            "total allocation must be monotone: {} vs {}",
+            hi.avg_bits(),
+            lo.avg_bits()
+        );
+    });
+}
+
+#[test]
+fn quantize_is_projection_and_monotone() {
+    // idempotent + order-preserving for every format
+    proptest::check(|rng, _| {
+        let p = [
+            Precision::Fp4,
+            Precision::Posit4,
+            Precision::Posit8,
+            Precision::Posit16,
+            Precision::Fp8E4M3,
+        ][rng.usize_in(0, 4)];
+        let x = rng.nasty_f64();
+        let y = rng.nasty_f64();
+        let qx = tables::quantize(p, x);
+        assert_eq!(tables::quantize(p, qx), qx, "{p:?} idempotent at {x}");
+        let qy = tables::quantize(p, y);
+        if x <= y {
+            assert!(qx <= qy, "{p:?} monotone: q({x})={qx} q({y})={qy}");
+        }
+    });
+}
+
+#[test]
+fn engine_stats_conserved_under_splitting() {
+    // running a dot in one engine vs split across two engines conserves
+    // total MAC/gating counts
+    proptest::check(|rng, _| {
+        use xr_npe::npe::Engine;
+        let sel = PrecSel::Posit8x2;
+        let k = rng.usize_in(2, 64) & !1;
+        let words: Vec<(u16, u16)> =
+            (0..k).map(|_| (rng.next_u64() as u16, rng.next_u64() as u16)).collect();
+        let mut one = Engine::new(sel);
+        for &(a, b) in &words {
+            one.mac_word_fused(a, b);
+        }
+        let mut e1 = Engine::new(sel);
+        let mut e2 = Engine::new(sel);
+        for (i, &(a, b)) in words.iter().enumerate() {
+            if i % 2 == 0 {
+                e1.mac_word_fused(a, b);
+            } else {
+                e2.mac_word_fused(a, b);
+            }
+        }
+        assert_eq!(one.stats.macs, e1.stats.macs + e2.stats.macs);
+        assert_eq!(one.stats.gated_macs, e1.stats.gated_macs + e2.stats.gated_macs);
+        assert_eq!(
+            one.stats.blocks_switched,
+            e1.stats.blocks_switched + e2.stats.blocks_switched
+        );
+        // and the split quires merge to the same value
+        let mut q1 = one.read_lane_f64(0);
+        let merged = e1.read_lane_f64(0) + e2.read_lane_f64(0);
+        if q1.is_nan() {
+            assert!(merged.is_nan());
+            q1 = 0.0;
+        } else {
+            assert!((q1 - merged).abs() < 1e-9, "{q1} vs {merged}");
+        }
+        let _ = q1;
+    });
+}

@@ -1,0 +1,106 @@
+//! System-level invariants that need no artifacts: multi-workload
+//! router sessions, morph sequences, failure injection.
+
+use xr_npe::arith::Precision;
+use xr_npe::array::ArrayMorph;
+use xr_npe::npe::PrecSel;
+use xr_npe::soc::{Command, GemmJob, Soc, SocConfig};
+use xr_npe::util::{Matrix, Rng};
+
+#[test]
+fn long_mixed_session_is_stable() {
+    // many jobs, random shapes/precisions/morphs — results always match
+    // the oracle, counters monotone, no state leaks between jobs.
+    let mut soc = Soc::new(SocConfig::default());
+    let mut rng = Rng::new(2024);
+    let mut last_macs = 0u64;
+    for i in 0..40 {
+        if i % 11 == 5 {
+            let m = if rng.coin(0.5) { ArrayMorph::M8x8 } else { ArrayMorph::M16x16 };
+            soc.submit(Command::Morph(m));
+            soc.process_all().unwrap();
+        }
+        let m = 1 + (rng.next_u64() % 24) as usize;
+        let k = 1 + (rng.next_u64() % 48) as usize;
+        let n = 1 + (rng.next_u64() % 24) as usize;
+        let sel = PrecSel::ALL[(rng.next_u64() % 4) as usize];
+        let a = Matrix::random(m, k, 1.0, &mut rng);
+        let b = Matrix::random(k, n, 1.0, &mut rng);
+        let (got, rep) = soc.gemm(&a, &b, sel, sel.precision()).unwrap();
+        // oracle with EXACT accumulation (an f64-summing oracle can
+        // differ from the quire by 1 ulp on posit16 dot products — the
+        // engine is the more exact one)
+        let p = sel.precision();
+        let t = xr_npe::arith::tables::table(p);
+        let mut want = Matrix::zeros(m, n);
+        for i2 in 0..m {
+            for j2 in 0..n {
+                let mut q = xr_npe::arith::Quire::new();
+                for k2 in 0..k {
+                    let da = t.decode(t.encode(a.at(i2, k2) as f64));
+                    let db = t.decode(t.encode(b.at(k2, j2) as f64));
+                    q.add_product(da, db);
+                }
+                want.set(i2, j2, xr_npe::arith::tables::quantize(p, q.to_f64()) as f32);
+            }
+        }
+        assert_eq!(got.data, want.data, "job {i} {sel:?} {m}x{k}x{n}");
+        assert!(soc.lifetime.array.macs > last_macs);
+        last_macs = soc.lifetime.array.macs;
+        assert_eq!(rep.array.macs, (m * k * n) as u64);
+    }
+}
+
+#[test]
+fn dram_oob_job_fails_cleanly_and_soc_survives() {
+    let mut soc = Soc::new(SocConfig::default());
+    let job = GemmJob {
+        m: 8, k: 8, n: 8,
+        sel: PrecSel::Posit8x2,
+        out_prec: Precision::Posit8,
+        a_addr: u64::MAX - 100, b_addr: 0, c_addr: 1024,
+    };
+    soc.submit(Command::Gemm(job));
+    assert!(soc.process_all().is_err());
+    // the SoC remains usable afterwards
+    let mut rng = Rng::new(1);
+    let a = Matrix::random(4, 4, 1.0, &mut rng);
+    let b = Matrix::random(4, 4, 1.0, &mut rng);
+    assert!(soc.gemm(&a, &b, PrecSel::Posit8x2, Precision::Posit8).is_ok());
+}
+
+#[test]
+fn degenerate_and_edge_shapes() {
+    let mut soc = Soc::new(SocConfig::default());
+    let mut rng = Rng::new(3);
+    // 1x1x1, single row/col, prime sizes crossing tile boundaries
+    for (m, k, n) in [(1, 1, 1), (1, 64, 1), (17, 1, 19), (9, 65, 7), (16, 16, 17)] {
+        let a = Matrix::random(m, k, 1.0, &mut rng);
+        let b = Matrix::random(k, n, 1.0, &mut rng);
+        let (c, rep) = soc.gemm(&a, &b, PrecSel::Fp4x4, Precision::Fp4).unwrap();
+        assert_eq!((c.rows, c.cols), (m, n));
+        assert_eq!(rep.array.macs, (m * k * n) as u64);
+    }
+}
+
+#[test]
+fn extreme_values_saturate_not_poison() {
+    // huge/tiny values: saturating formats must not produce NaN/Inf
+    let mut soc = Soc::new(SocConfig::default());
+    let a = Matrix::from_vec(2, 2, vec![1e30, -1e30, 1e-30, 0.0]);
+    let b = Matrix::from_vec(2, 2, vec![1e30, 1.0, -1.0, 1e-30]);
+    let (c, _) = soc.gemm(&a, &b, PrecSel::Fp4x4, Precision::Fp32).unwrap();
+    assert!(c.data.iter().all(|x| x.is_finite()), "{:?}", c.data);
+}
+
+#[test]
+fn nan_inputs_flag_nar_posit() {
+    use xr_npe::soc::csr;
+    let mut soc = Soc::new(SocConfig::default());
+    let mut a = Matrix::eye(4);
+    a.data[5] = f32::NAN;
+    let b = Matrix::eye(4);
+    let _ = soc.gemm(&a, &b, PrecSel::Posit16x1, Precision::Posit16).unwrap();
+    let status = soc.csrs.read(csr::STATUS).unwrap();
+    assert_ne!(status & csr::STATUS_ERR_NAR, 0, "NaR error bit must latch");
+}
