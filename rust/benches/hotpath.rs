@@ -81,6 +81,39 @@ fn main() {
         );
     }
 
+    // 4b. serial vs parallel tile executor on a serving-size GEMM —
+    // the parallel path must win on ≥256×256 while staying bit-identical
+    // (values, cycles, activity stats, flags)
+    println!("\n-- array GEMM 256x256x256: serial vs parallel tile executor --");
+    println!("   ({} worker threads)", xr_npe::array::morphable::worker_threads());
+    let big_a = Matrix::random(256, 256, 0.5, &mut rng);
+    let big_b = Matrix::random(256, 256, 0.5, &mut rng);
+    for sel in PrecSel::ALL {
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
+        let ns_serial = common::time_ns(3, || {
+            std::hint::black_box(arr.gemm_serial(&big_a, &big_b, sel.precision()));
+        });
+        let ns_par = common::time_ns(3, || {
+            std::hint::black_box(arr.gemm_parallel(&big_a, &big_b, sel.precision()));
+        });
+        let (cs, rs) = arr.gemm_serial(&big_a, &big_b, sel.precision());
+        let (cp, rp) = arr.gemm_parallel(&big_a, &big_b, sel.precision());
+        let identical = cs.data == cp.data
+            && rs.cycles == rp.cycles
+            && rs.stats == rp.stats
+            && rs.overflow == rp.overflow
+            && rs.nar == rp.nar;
+        println!(
+            "  {:<11} serial {:>8.2} ms  parallel {:>8.2} ms  speedup {:>5.2}x  bit-identical: {}",
+            format!("{sel:?}"),
+            ns_serial / 1e6,
+            ns_par / 1e6,
+            ns_serial / ns_par,
+            identical
+        );
+        assert!(identical, "parallel executor diverged from serial reference for {sel:?}");
+    }
+
     // 5. full model inference on the co-processor (if artifacts exist)
     if common::have_artifacts() {
         println!("\n-- EffNet-XR inference on the simulated co-processor --");

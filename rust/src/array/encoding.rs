@@ -1,0 +1,300 @@
+//! Operand encoding + the per-(matrix, `PrecSel`) encoding cache.
+//!
+//! The array's input-processing stage turns an f32 matrix into packed
+//! engine words: every element is encoded to the active precision
+//! ([`crate::arith::tables::PrecTable::encode`]) and the encodings are
+//! lane-packed along K ([`PrecSel::pack_slice`]). That work is O(M·K)
+//! per operand and used to happen **twice per GEMM job** (once for the
+//! DMA byte image, once inside the array) and **once per call** even for
+//! operands that never change — model weights served thousands of times.
+//!
+//! [`EncodedOperand`] is the packed form, shared by the DMA path (its
+//! byte image is exactly `soc::control::pack_matrix`'s output) and the
+//! compute path ([`super::MatrixArray::gemm_packed`]). [`OperandCache`]
+//! memoizes encodings per (content, shape, `PrecSel`, layout); hits are
+//! verified against the stored f32 bit pattern, so a cached encoding is
+//! bit-for-bit what a fresh encode would produce — never a hash gamble.
+
+use crate::arith::tables;
+use crate::npe::PrecSel;
+use crate::util::Matrix;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A matrix operand packed into engine words, one padded word-row per
+/// logical row. For the B operand of a GEMM the "rows" are the columns
+/// of B (the array feeds B column-wise), built by [`EncodedOperand::cols`]
+/// without materializing the transpose.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EncodedOperand {
+    /// Mode the operand is packed for.
+    pub sel: PrecSel,
+    /// Packed rows (M for an A operand, N for a B operand).
+    pub rows: usize,
+    /// Elements per row before packing (the K dimension).
+    pub elems: usize,
+    /// Engine words per packed row (`elems.div_ceil(lanes)`).
+    pub words_per_row: usize,
+    words: Vec<u16>,
+}
+
+impl EncodedOperand {
+    /// Encode + pack every row of `mat` (the A-operand layout).
+    pub fn rows(mat: &Matrix, sel: PrecSel) -> EncodedOperand {
+        let t = tables::table(sel.precision());
+        let words_per_row = mat.cols.div_ceil(sel.lanes());
+        let mut words = Vec::with_capacity(mat.rows * words_per_row);
+        let mut enc: Vec<u32> = Vec::with_capacity(mat.cols);
+        for r in 0..mat.rows {
+            enc.clear();
+            enc.extend(mat.row(r).iter().map(|&x| t.encode(x as f64)));
+            words.extend(sel.pack_slice(&enc));
+        }
+        EncodedOperand { sel, rows: mat.rows, elems: mat.cols, words_per_row, words }
+    }
+
+    /// Encode + pack every **column** of `mat` (the B-operand layout):
+    /// packed row `j` holds column `j` of `mat`. Identical to
+    /// `rows(&mat.transpose(), sel)` without building the transpose.
+    pub fn cols(mat: &Matrix, sel: PrecSel) -> EncodedOperand {
+        let t = tables::table(sel.precision());
+        let words_per_row = mat.rows.div_ceil(sel.lanes());
+        let mut words = Vec::with_capacity(mat.cols * words_per_row);
+        let mut enc: Vec<u32> = Vec::with_capacity(mat.rows);
+        for c in 0..mat.cols {
+            enc.clear();
+            enc.extend((0..mat.rows).map(|r| t.encode(mat.at(r, c) as f64)));
+            words.extend(sel.pack_slice(&enc));
+        }
+        EncodedOperand { sel, rows: mat.cols, elems: mat.rows, words_per_row, words }
+    }
+
+    /// Packed words of logical row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u16] {
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// All packed words, row-major.
+    pub fn words(&self) -> &[u16] {
+        &self.words
+    }
+
+    /// Total packed size in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.words.len() * 2
+    }
+
+    /// Little-endian byte image — exactly what the DMA moves, and
+    /// byte-identical to `soc::control::pack_matrix` of the same operand.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_len());
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+}
+
+/// Packed-row vs packed-column layout of a cached operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Layout {
+    Rows,
+    Cols,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    hash: u64,
+    rows: usize,
+    cols: usize,
+    sel: PrecSel,
+    layout: Layout,
+}
+
+struct Entry {
+    /// f32 bit pattern of the source matrix; hits are verified against
+    /// it so a 64-bit hash collision can only cause a miss, never a
+    /// wrong encoding.
+    src: Vec<u32>,
+    enc: Arc<EncodedOperand>,
+    stamp: u64,
+}
+
+/// Bounded memo of operand encodings, keyed by content + shape + mode +
+/// layout. Sized for serving: the entries that matter are model weights,
+/// which repeat every request; activations churn through and get evicted
+/// by the oldest-stamp policy.
+pub struct OperandCache {
+    cap: usize,
+    map: HashMap<Key, Entry>,
+    clock: u64,
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to encode.
+    pub misses: u64,
+}
+
+impl Default for OperandCache {
+    fn default() -> Self {
+        OperandCache::new(64)
+    }
+}
+
+impl OperandCache {
+    /// Cache holding at most `cap` encoded operands.
+    pub fn new(cap: usize) -> OperandCache {
+        assert!(cap >= 1);
+        OperandCache { cap, map: HashMap::new(), clock: 0, hits: 0, misses: 0 }
+    }
+
+    /// Cached [`EncodedOperand::rows`].
+    pub fn rows(&mut self, mat: &Matrix, sel: PrecSel) -> Arc<EncodedOperand> {
+        self.get(mat, sel, Layout::Rows)
+    }
+
+    /// Cached [`EncodedOperand::cols`].
+    pub fn cols(&mut self, mat: &Matrix, sel: PrecSel) -> Arc<EncodedOperand> {
+        self.get(mat, sel, Layout::Cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    fn get(&mut self, mat: &Matrix, sel: PrecSel, layout: Layout) -> Arc<EncodedOperand> {
+        // The hit path allocates nothing: hash streams over the f32 bits
+        // and verification compares in place; `src` is materialized only
+        // when inserting a new entry.
+        let hash = fnv1a(mat.data.iter().map(|x| x.to_bits()));
+        let key = Key { hash, rows: mat.rows, cols: mat.cols, sel, layout };
+        self.clock += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            let same = e.src.len() == mat.data.len()
+                && e.src.iter().zip(&mat.data).all(|(&s, x)| s == x.to_bits());
+            if same {
+                e.stamp = self.clock;
+                self.hits += 1;
+                return e.enc.clone();
+            }
+        }
+        self.misses += 1;
+        let enc = Arc::new(match layout {
+            Layout::Rows => EncodedOperand::rows(mat, sel),
+            Layout::Cols => EncodedOperand::cols(mat, sel),
+        });
+        let src: Vec<u32> = mat.data.iter().map(|x| x.to_bits()).collect();
+        self.map.insert(key, Entry { src, enc: Arc::clone(&enc), stamp: self.clock });
+        if self.map.len() > self.cap {
+            if let Some(oldest) = self.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| *k) {
+                self.map.remove(&oldest);
+            }
+        }
+        enc
+    }
+}
+
+fn fnv1a(words: impl Iterator<Item = u32>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in words {
+        for byte in w.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rows_matches_per_row_pack() {
+        let mut rng = Rng::new(3);
+        for sel in PrecSel::ALL {
+            let m = Matrix::random(5, 13, 1.0, &mut rng);
+            let enc = EncodedOperand::rows(&m, sel);
+            assert_eq!(enc.words_per_row, 13usize.div_ceil(sel.lanes()));
+            let t = tables::table(sel.precision());
+            for r in 0..5 {
+                let e: Vec<u32> = m.row(r).iter().map(|&x| t.encode(x as f64)).collect();
+                assert_eq!(enc.row(r), &sel.pack_slice(&e)[..], "{sel:?} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn cols_equals_rows_of_transpose() {
+        let mut rng = Rng::new(4);
+        for sel in PrecSel::ALL {
+            let m = Matrix::random(7, 9, 1.0, &mut rng);
+            let by_cols = EncodedOperand::cols(&m, sel);
+            let by_rows = EncodedOperand::rows(&m.transpose(), sel);
+            assert_eq!(by_cols, by_rows, "{sel:?}");
+        }
+    }
+
+    #[test]
+    fn cache_hits_on_identical_content() {
+        let mut rng = Rng::new(5);
+        let mut cache = OperandCache::new(8);
+        let m = Matrix::random(6, 10, 1.0, &mut rng);
+        let a = cache.rows(&m, PrecSel::Posit8x2);
+        assert_eq!((cache.hits, cache.misses), (0, 1));
+        // a clone with the same content hits and returns the same encoding
+        let b = cache.rows(&m.clone(), PrecSel::Posit8x2);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(*a, *b);
+        // different mode or layout is a distinct entry
+        cache.rows(&m, PrecSel::Fp4x4);
+        cache.cols(&m, PrecSel::Posit8x2);
+        assert_eq!(cache.misses, 3);
+    }
+
+    #[test]
+    fn cache_misses_on_changed_content() {
+        let mut rng = Rng::new(6);
+        let mut cache = OperandCache::new(8);
+        let m = Matrix::random(4, 4, 1.0, &mut rng);
+        cache.rows(&m, PrecSel::Posit16x1);
+        let mut m2 = m.clone();
+        m2.data[3] += 1.0;
+        let enc2 = cache.rows(&m2, PrecSel::Posit16x1);
+        assert_eq!(cache.hits, 0);
+        assert_eq!(cache.misses, 2);
+        assert_eq!(*enc2, EncodedOperand::rows(&m2, PrecSel::Posit16x1));
+    }
+
+    #[test]
+    fn cache_evicts_oldest_at_capacity() {
+        let mut rng = Rng::new(7);
+        let mut cache = OperandCache::new(2);
+        let m1 = Matrix::random(2, 2, 1.0, &mut rng);
+        let m2 = Matrix::random(2, 2, 1.0, &mut rng);
+        let m3 = Matrix::random(2, 2, 1.0, &mut rng);
+        cache.rows(&m1, PrecSel::Fp4x4);
+        cache.rows(&m2, PrecSel::Fp4x4);
+        cache.rows(&m3, PrecSel::Fp4x4); // evicts m1
+        assert_eq!(cache.len(), 2);
+        cache.rows(&m1, PrecSel::Fp4x4); // miss again
+        assert_eq!(cache.hits, 0);
+        assert_eq!(cache.misses, 4);
+    }
+
+    #[test]
+    fn byte_image_is_little_endian_words() {
+        let m = Matrix::from_vec(1, 3, vec![1.0, -1.0, 0.5]);
+        let enc = EncodedOperand::rows(&m, PrecSel::Posit8x2);
+        let bytes = enc.to_bytes();
+        assert_eq!(bytes.len(), enc.byte_len());
+        for (i, w) in enc.words().iter().enumerate() {
+            assert_eq!([bytes[2 * i], bytes[2 * i + 1]], w.to_le_bytes());
+        }
+    }
+}

@@ -13,9 +13,11 @@
 //! benches.
 
 pub mod dataflow;
+pub mod encoding;
 pub mod morphable;
 pub mod tiling;
 
 pub use dataflow::{cost as dataflow_cost, Dataflow, DataflowCost};
+pub use encoding::{EncodedOperand, OperandCache};
 pub use morphable::{ArrayMorph, ArrayReport, MatrixArray};
 pub use tiling::{Tile, TilePlan};

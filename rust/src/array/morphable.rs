@@ -16,17 +16,82 @@
 //!   drain = R                                  (row-parallel readout)
 //! ```
 //!
-//! The *functional* result is bit-accurate: every PE is a real
+//! The *functional* result is bit-accurate: every tile runs on a real
 //! [`Engine`] accumulating in a quire; the report carries the activity
 //! statistics the energy model consumes.
+//!
+//! ## Execution layers
+//!
+//! The GEMM is split into a **pure per-tile kernel** ([`tile_kernel`])
+//! and two executors over the tile schedule:
+//!
+//! * [`MatrixArray::gemm_serial`] — one host thread walks the tiles in
+//!   schedule order (the reference path).
+//! * [`MatrixArray::gemm_parallel`] — the serving hot path: tiles are
+//!   chunked across host worker threads (std scoped threads; see
+//!   [`worker_threads`]), each worker owning a private [`Engine`].
+//!   Output tiles are disjoint and every per-tile quantity is additive
+//!   (cycles, activity counters) or idempotent-OR (NaR/overflow flags),
+//!   so values, cycles, flags and [`EngineStats`] are **bit-identical**
+//!   to the serial path — only host wall time changes.
+//!
+//! [`MatrixArray::gemm`] picks the parallel executor automatically once
+//! the schedule is big enough to amortize thread spawn.
 
-use super::tiling::TilePlan;
+use super::encoding::EncodedOperand;
+use super::tiling::{Tile, TilePlan};
 use crate::arith::{tables, Precision};
 use crate::npe::{Engine, EngineStats, PrecSel};
 use crate::util::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// MAC pipeline depth (input proc, multiply, quire-acc, output proc).
 pub const PIPE_STAGES: u64 = 4;
+
+/// Tile-schedule size from which [`MatrixArray::gemm`] switches to the
+/// parallel executor (below this, thread spawn costs more than it buys).
+pub const PARALLEL_TILE_THRESHOLD: usize = 8;
+
+/// Host worker threads for the parallel tile executor. Defaults to the
+/// machine's available parallelism; override with `XR_NPE_THREADS`.
+pub fn worker_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        match std::env::var("XR_NPE_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) if n >= 1 => n,
+            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    })
+}
+
+/// Parallel GEMMs currently in flight (e.g. one per replica worker of
+/// `coordinator::Router::route_batch`). The thread budget is divided by
+/// this count so nested batch × tile parallelism can't oversubscribe the
+/// host; thread count never affects results, only wall time.
+static ACTIVE_PARALLEL_GEMMS: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII slot in the process-wide parallel-GEMM budget.
+struct ExecutorSlot {
+    concurrent: usize,
+}
+
+impl ExecutorSlot {
+    fn acquire() -> ExecutorSlot {
+        ExecutorSlot { concurrent: ACTIVE_PARALLEL_GEMMS.fetch_add(1, Ordering::Relaxed) + 1 }
+    }
+
+    /// This GEMM's fair share of the worker-thread budget.
+    fn thread_budget(&self) -> usize {
+        (worker_threads() / self.concurrent).max(1)
+    }
+}
+
+impl Drop for ExecutorSlot {
+    fn drop(&mut self) {
+        ACTIVE_PARALLEL_GEMMS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
 
 /// Array geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,18 +162,64 @@ impl ArrayReport {
     }
 }
 
+/// Pure per-tile kernel: compute output tile `tile` of `a @ b` on `eng`
+/// (the PE, time-multiplexed over the tile's output slots), writing the
+/// `mt × nt` row-major values into `out` and returning the tile's
+/// (overflow, NaR) flags. Activity accumulates in `eng.stats`; the
+/// engine's quire is cleared per output element, so the kernel is pure
+/// in everything except those counters.
+pub fn tile_kernel(
+    eng: &mut Engine,
+    tile: &Tile,
+    a: &EncodedOperand,
+    b: &EncodedOperand,
+    out_prec: Precision,
+    out: &mut [f32],
+) -> (bool, bool) {
+    debug_assert_eq!(out.len(), tile.mt * tile.nt);
+    let mut overflow = false;
+    let mut nar = false;
+    for ti in 0..tile.mt {
+        for tj in 0..tile.nt {
+            eng.clear();
+            eng.dot_words_fused(a.row(tile.m0 + ti), b.row(tile.n0 + tj));
+            let v = eng.read_lane(0, out_prec);
+            let (o, nr) = eng.lane_flags(0);
+            overflow |= o;
+            nar |= nr;
+            out[ti * tile.nt + tj] = tables::decode_value(out_prec, v) as f32;
+        }
+    }
+    (overflow, nar)
+}
+
+fn scatter_tile(out: &mut Matrix, tile: &Tile, buf: &[f32]) {
+    for ti in 0..tile.mt {
+        for tj in 0..tile.nt {
+            out.set(tile.m0 + ti, tile.n0 + tj, buf[ti * tile.nt + tj]);
+        }
+    }
+}
+
+/// Per-worker result of the parallel executor: the chunk's output tiles
+/// plus a partial [`ArrayReport`] (cycles/stats/flags for its tiles).
+struct ChunkOut {
+    outs: Vec<Vec<f32>>,
+    report: ArrayReport,
+}
+
 /// The morphable MAC array.
 pub struct MatrixArray {
     morph: ArrayMorph,
     sel: PrecSel,
-    /// One engine per PE (row-major R×C).
-    pes: Vec<Engine>,
+    /// The PE model (time-multiplexed over tiles on the serial path; the
+    /// parallel executor clones its configuration per worker).
+    engine: Engine,
 }
 
 impl MatrixArray {
     pub fn new(morph: ArrayMorph, sel: PrecSel) -> MatrixArray {
-        let n = morph.pes();
-        MatrixArray { morph, sel, pes: (0..n).map(|_| Engine::new(sel)).collect() }
+        MatrixArray { morph, sel, engine: Engine::new(sel) }
     }
 
     pub fn morph(&self) -> ArrayMorph {
@@ -124,8 +235,7 @@ impl MatrixArray {
     pub fn reconfigure(&mut self, morph: ArrayMorph, sel: PrecSel) {
         self.morph = morph;
         self.sel = sel;
-        let n = morph.pes();
-        self.pes = (0..n).map(|_| Engine::new(sel)).collect();
+        self.engine = Engine::new(sel);
     }
 
     /// Bit-accurate GEMM: quantizes `a` (M×K) and `b` (K×N) to the engine
@@ -136,60 +246,167 @@ impl MatrixArray {
     /// `out_prec` is the activation format the output-processing stage
     /// rounds to (usually the same as the engine mode; a higher-precision
     /// format models the "keep activations wide" option of §III).
+    ///
+    /// Dispatches to the parallel tile executor when the schedule is
+    /// large enough; both executors are bit-identical (see module docs).
     pub fn gemm(&mut self, a: &Matrix, b: &Matrix, out_prec: Precision) -> (Matrix, ArrayReport) {
+        let (a_enc, b_enc) = self.encode_operands(a, b);
+        self.gemm_packed(&a_enc, &b_enc, out_prec)
+    }
+
+    /// GEMM forced down the single-thread reference path.
+    pub fn gemm_serial(
+        &mut self,
+        a: &Matrix,
+        b: &Matrix,
+        out_prec: Precision,
+    ) -> (Matrix, ArrayReport) {
+        let (a_enc, b_enc) = self.encode_operands(a, b);
+        let plan = self.plan_for(&a_enc, &b_enc);
+        self.run_serial(&plan, &a_enc, &b_enc, out_prec)
+    }
+
+    /// GEMM forced down the parallel tile executor.
+    pub fn gemm_parallel(
+        &mut self,
+        a: &Matrix,
+        b: &Matrix,
+        out_prec: Precision,
+    ) -> (Matrix, ArrayReport) {
+        let (a_enc, b_enc) = self.encode_operands(a, b);
+        let plan = self.plan_for(&a_enc, &b_enc);
+        self.run_parallel(&plan, &a_enc, &b_enc, out_prec)
+    }
+
+    /// GEMM over pre-encoded operands (the SoC path: operands come from
+    /// the [`super::OperandCache`], so weights are packed once per
+    /// (matrix, mode) instead of once per call). `a` must be packed by
+    /// rows, `b` by columns, both in this array's current mode.
+    pub fn gemm_packed(
+        &mut self,
+        a: &EncodedOperand,
+        b: &EncodedOperand,
+        out_prec: Precision,
+    ) -> (Matrix, ArrayReport) {
+        let plan = self.plan_for(a, b);
+        if plan.tiles.len() >= PARALLEL_TILE_THRESHOLD && worker_threads() > 1 {
+            self.run_parallel(&plan, a, b, out_prec)
+        } else {
+            self.run_serial(&plan, a, b, out_prec)
+        }
+    }
+
+    fn encode_operands(&self, a: &Matrix, b: &Matrix) -> (EncodedOperand, EncodedOperand) {
         assert_eq!(a.cols, b.rows, "gemm inner-dim mismatch");
-        let (m, k, n) = (a.rows, a.cols, b.cols);
+        (EncodedOperand::rows(a, self.sel), EncodedOperand::cols(b, self.sel))
+    }
+
+    fn plan_for(&self, a: &EncodedOperand, b: &EncodedOperand) -> TilePlan {
+        assert_eq!(a.sel, self.sel, "A operand packed for a different mode");
+        assert_eq!(b.sel, self.sel, "B operand packed for a different mode");
+        assert_eq!(a.elems, b.elems, "gemm inner-dim mismatch");
         let (r, c) = self.morph.dims();
-        let prec = self.sel.precision();
-        let t = tables::table(prec);
-        let lanes = self.sel.lanes();
+        TilePlan::new(a.rows, a.elems, b.rows, r, c)
+    }
 
-        // Input processing: encode operands once (the SoC's load path).
-        let a_enc: Vec<u32> = a.data.iter().map(|&x| t.encode(x as f64)).collect();
-        let b_t = b.transpose(); // column access pattern
-        let b_enc: Vec<u32> = b_t.data.iter().map(|&x| t.encode(x as f64)).collect();
-
-        // Pack rows of A and cols of B into engine words along K.
-        let k_words = k.div_ceil(lanes);
-        let pack_row = |enc: &[u32]| -> Vec<u16> { self.sel.pack_slice(enc) };
-        let a_words: Vec<Vec<u16>> =
-            (0..m).map(|i| pack_row(&a_enc[i * k..(i + 1) * k])).collect();
-        let b_words: Vec<Vec<u16>> =
-            (0..n).map(|j| pack_row(&b_enc[j * k..(j + 1) * k])).collect();
-
-        let plan = TilePlan::new(m, k, n, r, c);
-        let mut out = Matrix::zeros(m, n);
-        let mut report = ArrayReport {
-            occupancy: plan.occupancy(),
-            peak_macs_per_cycle: (r * c * lanes) as f64,
-            ..Default::default()
-        };
-
+    /// Cycles of one tile at the current geometry/mode.
+    fn tile_cycles(&self, k_words: usize) -> u64 {
+        let (r, c) = self.morph.dims();
         let fill = (r as u64 - 1) + (c as u64 - 1) + PIPE_STAGES;
         let drain = r as u64;
+        fill + k_words as u64 + drain
+    }
 
+    fn base_report(&self, plan: &TilePlan) -> ArrayReport {
+        let (r, c) = self.morph.dims();
+        ArrayReport {
+            occupancy: plan.occupancy(),
+            peak_macs_per_cycle: (r * c * self.sel.lanes()) as f64,
+            ..Default::default()
+        }
+    }
+
+    fn run_serial(
+        &mut self,
+        plan: &TilePlan,
+        a: &EncodedOperand,
+        b: &EncodedOperand,
+        out_prec: Precision,
+    ) -> (Matrix, ArrayReport) {
+        let tile_cycles = self.tile_cycles(a.words_per_row);
+        let mut out = Matrix::zeros(plan.m, plan.n);
+        let mut report = self.base_report(plan);
+        let (r, c) = self.morph.dims();
+        let mut buf = vec![0f32; r * c];
         for tile in &plan.tiles {
-            // Each PE (i, j) fused-dots A row (m0+i) with B col (n0+j).
-            for ti in 0..tile.mt {
-                for tj in 0..tile.nt {
-                    let pe = &mut self.pes[ti * c + tj];
-                    pe.clear();
-                    pe.dot_words_fused(&a_words[tile.m0 + ti], &b_words[tile.n0 + tj]);
-                    let v = pe.read_lane(0, out_prec);
-                    let (ovf, nar) = pe.lane_flags(0);
-                    report.overflow |= ovf;
-                    report.nar |= nar;
-                    out.set(tile.m0 + ti, tile.n0 + tj, tables::decode_value(out_prec, v) as f32);
-                }
-            }
-            report.cycles += fill + k_words as u64 + drain;
+            let slots = tile.mt * tile.nt;
+            let (o, nr) = tile_kernel(&mut self.engine, tile, a, b, out_prec, &mut buf[..slots]);
+            report.overflow |= o;
+            report.nar |= nr;
+            scatter_tile(&mut out, tile, &buf[..slots]);
+            report.cycles += tile_cycles;
         }
-
         // Collect PE activity.
-        for pe in &mut self.pes {
-            report.stats.merge(&pe.stats);
-            pe.stats = EngineStats::new();
+        report.stats.merge(&self.engine.stats);
+        self.engine.stats = EngineStats::new();
+        report.macs = plan.macs();
+        report.macs_per_cycle = report.macs as f64 / report.cycles as f64;
+        (out, report)
+    }
+
+    fn run_parallel(
+        &mut self,
+        plan: &TilePlan,
+        a: &EncodedOperand,
+        b: &EncodedOperand,
+        out_prec: Precision,
+    ) -> (Matrix, ArrayReport) {
+        let sel = self.sel;
+        let tile_cycles = self.tile_cycles(a.words_per_row);
+        let n_tiles = plan.tiles.len();
+        let slot = ExecutorSlot::acquire();
+        let threads = slot.thread_budget().min(n_tiles).max(1);
+        let chunk = n_tiles.div_ceil(threads);
+
+        let chunk_results: Vec<ChunkOut> = std::thread::scope(|s| {
+            let handles: Vec<_> = plan
+                .tiles
+                .chunks(chunk)
+                .map(|tiles| {
+                    s.spawn(move || {
+                        let mut eng = Engine::new(sel);
+                        let mut outs = Vec::with_capacity(tiles.len());
+                        let mut report = ArrayReport::default();
+                        for tile in tiles {
+                            let mut buf = vec![0f32; tile.mt * tile.nt];
+                            let (o, nr) = tile_kernel(&mut eng, tile, a, b, out_prec, &mut buf);
+                            report.overflow |= o;
+                            report.nar |= nr;
+                            report.cycles += tile_cycles;
+                            outs.push(buf);
+                        }
+                        report.stats = eng.stats;
+                        ChunkOut { outs, report }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
+        });
+
+        // Deterministic merge in schedule order via ArrayReport::merge:
+        // every per-tile quantity is additive or OR-idempotent, so this
+        // reproduces the serial report bit for bit.
+        let mut out = Matrix::zeros(plan.m, plan.n);
+        let mut report = self.base_report(plan);
+        let mut tile_iter = plan.tiles.iter();
+        for ch in chunk_results {
+            report.merge(&ch.report);
+            for buf in &ch.outs {
+                let tile = tile_iter.next().expect("tile/result count mismatch");
+                scatter_tile(&mut out, tile, buf);
+            }
         }
+        debug_assert_eq!(report.cycles, n_tiles as u64 * tile_cycles);
         report.macs = plan.macs();
         report.macs_per_cycle = report.macs as f64 / report.cycles as f64;
         (out, report)
@@ -234,7 +451,63 @@ mod tests {
             assert_eq!(got.data, want.data, "{sel:?}");
             assert_eq!(rep.macs, 10 * 17 * 12);
             assert!(rep.cycles > 0);
+            // the parallel executor must be bit-identical to the serial
+            // reference: values, cycles, activity stats, sticky flags
+            let (got_s, rep_s) = arr.gemm_serial(&a, &b, prec);
+            let (got_p, rep_p) = arr.gemm_parallel(&a, &b, prec);
+            assert_eq!(got_s.data, got_p.data, "{sel:?} values");
+            assert_eq!(rep_s.cycles, rep_p.cycles, "{sel:?} cycles");
+            assert_eq!(rep_s.stats, rep_p.stats, "{sel:?} stats");
+            assert_eq!(rep_s.macs, rep_p.macs, "{sel:?} macs");
+            assert_eq!(
+                (rep_s.overflow, rep_s.nar),
+                (rep_p.overflow, rep_p.nar),
+                "{sel:?} flags"
+            );
+            assert_eq!(got_s.data, got.data, "{sel:?} auto path");
         }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_identical_nonsquare() {
+        // big enough to spread over many tiles and several worker chunks
+        let mut rng = Rng::new(77);
+        for sel in PrecSel::ALL {
+            let prec = sel.precision();
+            let a = Matrix::random(33, 70, 1.0, &mut rng);
+            let b = Matrix::random(70, 19, 1.0, &mut rng);
+            for morph in [ArrayMorph::M8x8, ArrayMorph::M16x16] {
+                let mut arr = MatrixArray::new(morph, sel);
+                let (cs, rs) = arr.gemm_serial(&a, &b, prec);
+                let (cp, rp) = arr.gemm_parallel(&a, &b, prec);
+                assert_eq!(cs.data, cp.data, "{sel:?} {morph:?} values");
+                assert_eq!(rs.cycles, rp.cycles, "{sel:?} {morph:?} cycles");
+                assert_eq!(rs.stats, rp.stats, "{sel:?} {morph:?} stats");
+                assert_eq!(rs.macs, rp.macs);
+                assert_eq!(rs.overflow, rp.overflow);
+                assert_eq!(rs.nar, rp.nar);
+                assert_eq!(rs.occupancy, rp.occupancy);
+                assert_eq!(rs.peak_macs_per_cycle, rp.peak_macs_per_cycle);
+                assert_eq!(rs.macs_per_cycle, rp.macs_per_cycle);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_packed_reuses_encodings() {
+        // pre-encoded operands produce the same result as the f32 entry
+        let mut rng = Rng::new(55);
+        let sel = PrecSel::Posit8x2;
+        let a = Matrix::random(12, 20, 1.0, &mut rng);
+        let b = Matrix::random(20, 9, 1.0, &mut rng);
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
+        let (want, wrep) = arr.gemm(&a, &b, sel.precision());
+        let a_enc = EncodedOperand::rows(&a, sel);
+        let b_enc = EncodedOperand::cols(&b, sel);
+        let (got, grep) = arr.gemm_packed(&a_enc, &b_enc, sel.precision());
+        assert_eq!(got.data, want.data);
+        assert_eq!(grep.cycles, wrep.cycles);
+        assert_eq!(grep.stats, wrep.stats);
     }
 
     #[test]
@@ -311,6 +584,37 @@ mod tests {
             let want = oracle_gemm(&a, &b, sel.precision(), out_prec);
             assert_eq!(got.data, want.data, "{m}x{k}x{n} {sel:?}");
         });
+    }
+
+    #[test]
+    fn property_parallel_equals_serial_random_shapes() {
+        proptest::run(proptest::Config { cases: 16, seed: 0xD15C }, |rng, _| {
+            let m = rng.usize_in(1, 40);
+            let k = rng.usize_in(1, 50);
+            let n = rng.usize_in(1, 40);
+            let sel = PrecSel::ALL[rng.usize_in(0, 3)];
+            let a = Matrix::random(m, k, 2.0, rng);
+            let b = Matrix::random(k, n, 2.0, rng);
+            let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
+            let (cs, rs) = arr.gemm_serial(&a, &b, sel.precision());
+            let (cp, rp) = arr.gemm_parallel(&a, &b, sel.precision());
+            assert_eq!(cs.data, cp.data, "{m}x{k}x{n} {sel:?}");
+            assert_eq!(rs.cycles, rp.cycles);
+            assert_eq!(rs.stats, rp.stats);
+        });
+    }
+
+    #[test]
+    fn nar_input_flags_in_parallel_path() {
+        let mut a = Matrix::eye(20);
+        a.data[0] = f32::NAN;
+        let b = Matrix::eye(20);
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, PrecSel::Posit8x2);
+        let (_, rs) = arr.gemm_serial(&a, &b, Precision::Posit8);
+        let (_, rp) = arr.gemm_parallel(&a, &b, Precision::Posit8);
+        assert!(rs.nar);
+        assert_eq!(rs.nar, rp.nar);
+        assert_eq!(rs.overflow, rp.overflow);
     }
 
     #[test]

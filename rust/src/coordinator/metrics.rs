@@ -65,6 +65,69 @@ impl LatencyStats {
     }
 }
 
+/// Per-request latency stamp from the batched serving path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestStamp {
+    /// Batcher-assigned request id.
+    pub id: u64,
+    /// Cycles spent queued in the batcher (batch release − arrival).
+    pub queue_cycles: u64,
+    /// Co-processor cycles until this request's result was ready: every
+    /// job its replica ran earlier in the batch, plus its own
+    /// (intra-batch serialization on one replica).
+    pub service_cycles: u64,
+}
+
+impl RequestStamp {
+    /// End-to-end latency in coordinator cycles.
+    pub fn total_cycles(&self) -> u64 {
+        self.queue_cycles + self.service_cycles
+    }
+}
+
+/// Aggregated metrics for the batched serving path: raw per-request
+/// stamps plus queue/service/total latency distributions.
+#[derive(Debug, Clone, Default)]
+pub struct BatchMetrics {
+    pub stamps: Vec<RequestStamp>,
+    pub queue: LatencyStats,
+    pub service: LatencyStats,
+    pub total: LatencyStats,
+    /// Batches executed.
+    pub batches: usize,
+}
+
+impl BatchMetrics {
+    pub fn new() -> BatchMetrics {
+        BatchMetrics::default()
+    }
+
+    /// Record one executed batch's stamps.
+    pub fn record_batch(&mut self, stamps: &[RequestStamp]) {
+        self.batches += 1;
+        for s in stamps {
+            self.queue.record(s.queue_cycles);
+            self.service.record(s.service_cycles);
+            self.total.record(s.total_cycles());
+            self.stamps.push(*s);
+        }
+    }
+
+    /// Requests recorded.
+    pub fn count(&self) -> usize {
+        self.stamps.len()
+    }
+
+    /// Mean requests per batch (0 if none).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.stamps.len() as f64 / self.batches as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +157,21 @@ mod tests {
         let mut s = LatencyStats::new();
         s.record(1_000_000); // 1M cycles @ 250MHz = 4ms → 250 fps
         assert!((s.fps(250e6) - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_metrics_accumulate() {
+        let mut m = BatchMetrics::new();
+        m.record_batch(&[
+            RequestStamp { id: 0, queue_cycles: 10, service_cycles: 100 },
+            RequestStamp { id: 1, queue_cycles: 5, service_cycles: 200 },
+        ]);
+        m.record_batch(&[RequestStamp { id: 2, queue_cycles: 0, service_cycles: 50 }]);
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.stamps[1].total_cycles(), 205);
+        assert_eq!(m.total.max(), 205);
+        assert_eq!(m.queue.max(), 10);
+        assert!((m.mean_batch_size() - 1.5).abs() < 1e-12);
     }
 }

@@ -22,7 +22,10 @@ pub mod router;
 pub mod scheduler;
 
 pub use batcher::{Batch, FrameBatcher};
-pub use metrics::LatencyStats;
-pub use pipeline::{PerceptionPipeline, PipelineConfig, RuntimeBreakdown};
-pub use router::{Router, WorkloadKind};
+pub use metrics::{BatchMetrics, LatencyStats, RequestStamp};
+pub use pipeline::{
+    execute_batch, serve_with_batcher, BatchServeReport, PerceptionPipeline, PipelineConfig,
+    RuntimeBreakdown,
+};
+pub use router::{RoutedResult, Router, WorkloadKind};
 pub use scheduler::ModelInstance;

@@ -9,8 +9,9 @@
 //! precision. The pipeline then *measures* how layer-adaptive
 //! mixed-precision shifts that breakdown.
 
-use super::metrics::LatencyStats;
-use super::router::{Router, WorkloadKind};
+use super::batcher::{Batch, FrameBatcher};
+use super::metrics::{BatchMetrics, LatencyStats, RequestStamp};
+use super::router::{RoutedResult, Router, WorkloadKind};
 use crate::vio::kitti::Frame;
 use crate::vio::RelPose;
 use anyhow::Result;
@@ -157,6 +158,79 @@ impl PerceptionPipeline {
     }
 }
 
+/// Result of serving a request stream through the batched parallel path.
+#[derive(Debug, Clone, Default)]
+pub struct BatchServeReport {
+    /// Outputs ordered by request id (= submission order).
+    pub outputs: Vec<Vec<f32>>,
+    /// Per-request latency stamps + distributions.
+    pub metrics: BatchMetrics,
+}
+
+/// Execute one released [`Batch`] through the parallel router path
+/// ([`Router::route_batch`]), stamping per-request latency into
+/// `metrics`: queue time from the batcher (release − arrival) plus
+/// intra-batch service serialization on the request's replica.
+pub fn execute_batch(
+    router: &mut Router,
+    kind: WorkloadKind,
+    batch: &Batch,
+    metrics: &mut BatchMetrics,
+) -> Result<Vec<RoutedResult>> {
+    let results = router.route_batch(kind, batch)?;
+    let mut replica_busy = vec![0u64; router.n_replicas()];
+    let mut stamps = Vec::with_capacity(results.len());
+    for (req, res) in batch.requests.iter().zip(&results) {
+        replica_busy[res.replica] += res.report.total_cycles();
+        stamps.push(RequestStamp {
+            id: req.id,
+            queue_cycles: batch.released.saturating_sub(req.arrived),
+            service_cycles: replica_busy[res.replica],
+        });
+    }
+    metrics.record_batch(&stamps);
+    Ok(results)
+}
+
+/// Drive a full arrival trace through a [`FrameBatcher`] and the
+/// parallel batch executor. `arrivals` is `(input, aux, arrival_cycle)`
+/// in non-decreasing arrival order; batches release per the batcher's
+/// max-size/deadline policy, with a final flush at the last arrival.
+pub fn serve_with_batcher(
+    router: &mut Router,
+    kind: WorkloadKind,
+    batcher: &mut FrameBatcher,
+    arrivals: Vec<(Vec<f32>, Vec<f32>, u64)>,
+) -> Result<BatchServeReport> {
+    let mut report = BatchServeReport::default();
+    let mut outputs: Vec<(u64, Vec<f32>)> = Vec::new();
+    let mut now = 0u64;
+    let mut run = |batch: Batch,
+                   router: &mut Router,
+                   metrics: &mut BatchMetrics,
+                   outputs: &mut Vec<(u64, Vec<f32>)>|
+     -> Result<()> {
+        let res = execute_batch(router, kind, &batch, metrics)?;
+        for (req, r) in batch.requests.iter().zip(res) {
+            outputs.push((req.id, r.output));
+        }
+        Ok(())
+    };
+    for (input, aux, at) in arrivals {
+        now = now.max(at);
+        batcher.push(input, aux, now);
+        while let Some(batch) = batcher.poll(now) {
+            run(batch, router, &mut report.metrics, &mut outputs)?;
+        }
+    }
+    if let Some(batch) = batcher.flush(now) {
+        run(batch, router, &mut report.metrics, &mut outputs)?;
+    }
+    outputs.sort_by_key(|(id, _)| *id);
+    report.outputs = outputs.into_iter().map(|(_, o)| o).collect();
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +302,67 @@ mod tests {
         assert!(rep.breakdown.vio_cycles > 0);
         assert!(rep.breakdown.perception_fraction() > 0.0);
         assert_eq!(rep.frame_latency.count(), 12);
+    }
+
+    #[test]
+    fn batched_serving_matches_serial_and_stamps_latency() {
+        let mut router = rigged_router();
+        let inputs: Vec<Vec<f32>> = (0..9).map(|i| vec![0.01 * i as f32; 16]).collect();
+        let mut batcher = FrameBatcher::new(4, 25);
+        let arrivals: Vec<(Vec<f32>, Vec<f32>, u64)> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| (x.clone(), vec![], (i as u64) * 10))
+            .collect();
+        let rep =
+            serve_with_batcher(&mut router, WorkloadKind::Gaze, &mut batcher, arrivals).unwrap();
+        assert_eq!(rep.outputs.len(), 9);
+        assert_eq!(rep.metrics.count(), 9);
+        assert_eq!(rep.metrics.batches, 3); // 4 + 4 + flush(1)
+        assert_eq!(batcher.pending(), 0);
+        // outputs are bit-identical to serial routing, in request order
+        let mut serial = rigged_router();
+        for (i, x) in inputs.iter().enumerate() {
+            let want = serial.route(WorkloadKind::Gaze, x, &[]).unwrap().output;
+            assert_eq!(rep.outputs[i], want, "request {i}");
+        }
+        // stamps: in-order ids, batcher-bounded queueing, non-zero service
+        let ids: Vec<u64> = rep.metrics.stamps.iter().map(|s| s.id).collect();
+        assert_eq!(ids, (0..9).collect::<Vec<u64>>());
+        for s in &rep.metrics.stamps {
+            assert!(s.queue_cycles <= 30, "queue {} exceeds batcher policy", s.queue_cycles);
+            assert!(s.service_cycles > 0);
+            assert_eq!(s.total_cycles(), s.queue_cycles + s.service_cycles);
+        }
+        assert!(rep.metrics.total.p99() >= rep.metrics.service.p50());
+    }
+
+    #[test]
+    fn execute_batch_spreads_service_across_replicas() {
+        use crate::coordinator::batcher::Request;
+        let mut r = Router::new(2, crate::soc::SocConfig::default());
+        let g = gaze::build();
+        let w = weights_for(&g, 9);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4));
+        let batch = Batch {
+            requests: (0..4)
+                .map(|i| Request {
+                    id: i,
+                    input: vec![0.1; 16],
+                    aux: vec![],
+                    arrived: 0,
+                })
+                .collect(),
+            released: 7,
+        };
+        let mut metrics = BatchMetrics::new();
+        let res = execute_batch(&mut r, WorkloadKind::Gaze, &batch, &mut metrics).unwrap();
+        assert_eq!(res.len(), 4);
+        // 2 replicas × 2 requests: the second request on a replica waits
+        // for the first, so its service stamp is strictly larger
+        assert!(metrics.stamps[2].service_cycles > metrics.stamps[0].service_cycles);
+        assert!(metrics.stamps[3].service_cycles > metrics.stamps[1].service_cycles);
+        assert!(metrics.stamps.iter().all(|s| s.queue_cycles == 7));
     }
 
     #[test]

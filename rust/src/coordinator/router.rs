@@ -6,6 +6,7 @@
 //! serving queue and the hardware handles — the paper's "scheduling and
 //! control mechanisms as per workload configurations".
 
+use super::batcher::Batch;
 use super::scheduler::ModelInstance;
 use crate::models::ExecReport;
 use crate::soc::{Soc, SocConfig};
@@ -89,6 +90,62 @@ impl Router {
         Ok(RoutedResult { kind, output, report, replica })
     }
 
+    /// Execute every request of a released [`Batch`], fanning the work
+    /// out across the SoC replicas with std scoped threads (each replica
+    /// is an independent co-processor; requests assigned to the same
+    /// replica serialize in batch order). Results come back in request
+    /// order. Outputs are bit-identical to routing each request through
+    /// [`Router::route`] — replica assignment never affects numerics.
+    pub fn route_batch(&mut self, kind: WorkloadKind, batch: &Batch) -> Result<Vec<RoutedResult>> {
+        let reqs = &batch.requests;
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let Some(inst) = self.models.get(&kind) else {
+            bail!("no model registered for {:?}", kind);
+        };
+        let n = self.replicas.len();
+        // Continue the round-robin where route() left off (and advance
+        // it), so a stream of small/flushed batches still spreads across
+        // replicas instead of always hammering replica 0.
+        let offset = self.next_replica;
+        self.next_replica = (self.next_replica + reqs.len()) % n;
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..reqs.len() {
+            buckets[(offset + i) % n].push(i);
+        }
+        let per_replica: Vec<Result<Vec<(usize, RoutedResult)>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .replicas
+                .iter_mut()
+                .zip(buckets)
+                .enumerate()
+                .map(|(ri, (soc, idxs))| {
+                    let inst = &*inst;
+                    s.spawn(move || {
+                        idxs.into_iter()
+                            .map(|i| {
+                                let r = &reqs[i];
+                                let (output, report) = inst.infer(soc, &r.input, &r.aux)?;
+                                Ok((i, RoutedResult { kind, output, report, replica: ri }))
+                            })
+                            .collect::<Result<Vec<_>>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("replica worker panicked")).collect()
+        });
+        let mut slots: Vec<Option<RoutedResult>> = Vec::new();
+        slots.resize_with(reqs.len(), || None);
+        for chunk in per_replica {
+            for (i, res) in chunk? {
+                slots[i] = Some(res);
+            }
+        }
+        *self.served.entry(kind).or_insert(0) += reqs.len() as u64;
+        Ok(slots.into_iter().map(|r| r.expect("missing batch result")).collect())
+    }
+
     /// Total requests served.
     pub fn total_served(&self) -> u64 {
         self.served.values().sum()
@@ -170,6 +227,79 @@ mod tests {
             hits[res.replica] += 1;
         }
         assert_eq!(hits, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn batch_route_matches_serial_route() {
+        use crate::coordinator::batcher::Request;
+        let mut r = Router::new(3, SocConfig::default());
+        let g = gaze::build();
+        let w = weights_for(&g, 5);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2));
+        let inputs: Vec<Vec<f32>> = (0..7).map(|i| vec![0.02 * i as f32; 16]).collect();
+        // serial reference outputs (numerics are replica-independent)
+        let mut want = Vec::new();
+        for x in &inputs {
+            want.push(r.route(WorkloadKind::Gaze, x, &[]).unwrap().output);
+        }
+        let batch = Batch {
+            requests: inputs
+                .iter()
+                .enumerate()
+                .map(|(i, x)| Request {
+                    id: i as u64,
+                    input: x.clone(),
+                    aux: vec![],
+                    arrived: i as u64,
+                })
+                .collect(),
+            released: 10,
+        };
+        let res = r.route_batch(WorkloadKind::Gaze, &batch).unwrap();
+        assert_eq!(res.len(), 7);
+        for (i, got) in res.iter().enumerate() {
+            assert_eq!(got.output, want[i], "request {i}");
+            // round-robin continues where the 7 serial route() calls left off
+            assert_eq!(got.replica, (7 + i) % 3);
+        }
+        assert_eq!(r.served[&WorkloadKind::Gaze], 14);
+    }
+
+    #[test]
+    fn consecutive_small_batches_rotate_replicas() {
+        use crate::coordinator::batcher::Request;
+        let mut r = Router::new(3, SocConfig::default());
+        let g = gaze::build();
+        let w = weights_for(&g, 6);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4));
+        let mut hits = vec![0u32; 3];
+        for b in 0..6 {
+            let batch = Batch {
+                requests: vec![Request {
+                    id: b,
+                    input: vec![0.1; 16],
+                    aux: vec![],
+                    arrived: b,
+                }],
+                released: b,
+            };
+            let res = r.route_batch(WorkloadKind::Gaze, &batch).unwrap();
+            hits[res[0].replica] += 1;
+        }
+        assert_eq!(hits, vec![2, 2, 2], "size-1 batches must still rotate replicas");
+    }
+
+    #[test]
+    fn batch_route_empty_and_unregistered() {
+        let mut r = Router::new(2, SocConfig::default());
+        let empty = Batch { requests: vec![], released: 0 };
+        assert!(r.route_batch(WorkloadKind::Vio, &empty).unwrap().is_empty());
+        use crate::coordinator::batcher::Request;
+        let one = Batch {
+            requests: vec![Request { id: 0, input: vec![], aux: vec![], arrived: 0 }],
+            released: 0,
+        };
+        assert!(r.route_batch(WorkloadKind::Vio, &one).is_err());
     }
 
     #[test]

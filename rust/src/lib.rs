@@ -15,7 +15,9 @@
 //!   (4×4-bit / 2×8-bit / 1×16-bit), exception handling, zero power
 //!   gating, and dark-silicon/activity statistics.
 //! * [`array`] — the morphable 8×8 / 16×16 matrix-multiplication array
-//!   with an output-stationary cycle model and GEMM tiling.
+//!   with an output-stationary cycle model, GEMM tiling, a pure per-tile
+//!   kernel with serial + parallel (scoped-thread) tile executors, and
+//!   the per-(matrix, `prec_sel`) operand-encoding cache.
 //! * [`soc`] — the co-processor substrate of Fig. 4: banked SRAM, AXI
 //!   burst transactions, DMA, CSR file, control FSM and a Cheshire-style
 //!   RISC-V host command interface.
@@ -29,9 +31,12 @@
 //!   (Table II), FPGA LUT/FF/DSP model (Table III), and system-level
 //!   TOPS/W / TOPS/mm² accounting (Table IV).
 //! * [`coordinator`] — the L3 serving layer: layer-adaptive scheduler,
-//!   frame batcher, workload router and the full perception pipeline.
+//!   frame batcher, workload router with parallel batch execution across
+//!   SoC replicas, per-request latency stamps, and the full perception
+//!   pipeline.
 //! * [`runtime`] — PJRT CPU client that loads the JAX/Pallas-authored
-//!   HLO artifacts and runs them from the Rust request path.
+//!   HLO artifacts and runs them from the Rust request path (behind the
+//!   `pjrt` feature; the offline build uses an API-compatible stub).
 //!
 //! Python (`python/compile`) exists only on the *build* path: it trains
 //! the QAT workload models, verifies the Pallas kernels against pure-jnp

@@ -67,16 +67,19 @@ impl PrecSel {
         LaneIter { word, lane_bits: self.lane_bits(), lanes: self.lanes() as u32, i: 0 }
     }
 
-    /// Pack lane encodings into a word. Panics if a value exceeds the lane
-    /// width or too many/few lanes are given.
+    /// Pack lane encodings into a word. Every lane value is masked to the
+    /// lane width before insertion, so an oversized value can never bleed
+    /// into its neighbours (hardware truncation semantics); feeding one is
+    /// a driver bug, flagged by `debug_assert!` in debug builds. Panics if
+    /// too many/few lanes are given.
     pub fn pack(self, lanes: &[u32]) -> u16 {
         assert_eq!(lanes.len(), self.lanes(), "pack: wrong lane count");
         let lb = self.lane_bits();
         let mask = (1u32 << lb) - 1;
         let mut w: u32 = 0;
         for (i, &v) in lanes.iter().enumerate() {
-            assert!(v <= mask, "pack: lane value {v:#x} exceeds {lb}-bit lane");
-            w |= v << (i as u32 * lb);
+            debug_assert!(v <= mask, "pack: lane value {v:#x} exceeds {lb}-bit lane");
+            w |= (v & mask) << (i as u32 * lb);
         }
         w as u16
     }
@@ -165,9 +168,36 @@ mod tests {
         assert_eq!(words, vec![0x2211, 0x0033]);
     }
 
+    #[cfg(debug_assertions)]
     #[test]
     #[should_panic(expected = "exceeds")]
-    fn pack_rejects_oversized_lane() {
+    fn pack_rejects_oversized_lane_in_debug() {
         PrecSel::Fp4x4.pack(&[0x1F, 0, 0, 0]);
+    }
+
+    #[test]
+    fn pack_masks_oversized_lane_without_cross_lane_bleed() {
+        // Regression: a lane value wider than `lane_bits` used to be a
+        // hard assert; the masked form must never corrupt neighbouring
+        // lanes. Debug builds flag the overflow via debug_assert; release
+        // builds truncate to the lane width.
+        for (sel, lanes, want) in [
+            (PrecSel::Fp4x4, vec![0xF5u32, 0x1, 0x2, 0x3], 0x3215u16),
+            (PrecSel::Posit8x2, vec![0x1CD, 0xAB], 0xABCD),
+            (PrecSel::Posit16x1, vec![0x1_BEEF], 0xBEEF),
+        ] {
+            let sel2 = sel;
+            let lanes2 = lanes.clone();
+            let r = std::panic::catch_unwind(move || sel2.pack(&lanes2));
+            if cfg!(debug_assertions) {
+                assert!(r.is_err(), "{sel:?}: debug build must flag lane overflow");
+            } else {
+                assert_eq!(r.unwrap(), want, "{sel:?}: masked pack");
+            }
+            // in-range lanes are packed identically in both build modes
+            let masked: Vec<u32> =
+                lanes.iter().map(|&v| v & ((1u32 << sel.lane_bits()) - 1)).collect();
+            assert_eq!(sel.pack(&masked), want, "{sel:?}: masked reference");
+        }
     }
 }

@@ -9,146 +9,228 @@
 //!
 //! The [`Registry`] discovers every `*.hlo.txt` under `artifacts/` and
 //! compiles on first use; one [`Executable`] per model variant.
+//!
+//! ## Offline builds
+//!
+//! The `xla` crate needs network + an XLA toolchain, neither of which
+//! exists in the offline build image, so the real client is gated behind
+//! the `pjrt` cargo feature (add the `xla` dependency and build with
+//! `--features pjrt` to enable it). Without the feature this module is an
+//! API-compatible stub whose constructors return a descriptive error —
+//! everything artifact-driven (integration tests, `xr-npe artifacts`,
+//! example step 3) skips gracefully.
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt_client {
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-/// Wrapper over the PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create the CPU PJRT client.
-    pub fn new() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
-        Ok(Runtime { client })
+    /// Wrapper over the PJRT CPU client.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl Runtime {
+        /// Create the CPU PJRT client.
+        pub fn new() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one HLO text file.
+        pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+            let name = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("model")
+                .trim_end_matches(".hlo")
+                .to_string();
+            Ok(Executable { exe, name })
+        }
     }
 
-    /// Load + compile one HLO text file.
-    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
-        let name = path
-            .file_stem()
-            .and_then(|s| s.to_str())
-            .unwrap_or("model")
-            .trim_end_matches(".hlo")
-            .to_string();
-        Ok(Executable { exe, name })
+    /// One compiled model variant.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
     }
-}
 
-/// One compiled model variant.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Executable {
-    /// Run with f32 inputs (`(data, dims)` per argument); returns the
-    /// flattened f32 outputs (the lowered functions return a tuple —
-    /// see `aot.py`, `return_tuple=True`).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let numel: usize = dims.iter().product();
-            if numel != data.len() {
-                bail!("input length {} != shape {:?}", data.len(), dims);
+    impl Executable {
+        /// Run with f32 inputs (`(data, dims)` per argument); returns the
+        /// flattened f32 outputs (the lowered functions return a tuple —
+        /// see `aot.py`, `return_tuple=True`).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let numel: usize = dims.iter().product();
+                if numel != data.len() {
+                    bail!("input length {} != shape {:?}", data.len(), dims);
+                }
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| anyhow!("reshape: {e}"))?;
+                lits.push(lit);
             }
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims_i64)
-                .map_err(|e| anyhow!("reshape: {e}"))?;
-            lits.push(lit);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e}"))?;
-        let parts = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))?;
-        let mut vecs = Vec::with_capacity(parts.len());
-        for p in parts {
-            vecs.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?);
-        }
-        Ok(vecs)
-    }
-}
-
-/// Artifact registry: lazily-compiled model variants by name.
-pub struct Registry {
-    runtime: Runtime,
-    paths: HashMap<String, PathBuf>,
-    compiled: HashMap<String, Executable>,
-}
-
-impl Registry {
-    /// Discover `*.hlo.txt` files under `dir`.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
-        let dir = dir.as_ref();
-        let runtime = Runtime::new()?;
-        let mut paths = HashMap::new();
-        let entries = std::fs::read_dir(dir)
-            .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?;
-        for e in entries {
-            let p = e?.path();
-            if p.to_string_lossy().ends_with(".hlo.txt") {
-                let name = p
-                    .file_name()
-                    .unwrap()
-                    .to_string_lossy()
-                    .trim_end_matches(".hlo.txt")
-                    .to_string();
-                paths.insert(name, p);
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e}"))?;
+            let parts = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))?;
+            let mut vecs = Vec::with_capacity(parts.len());
+            for p in parts {
+                vecs.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?);
             }
+            Ok(vecs)
         }
-        if paths.is_empty() {
-            bail!("no *.hlo.txt artifacts in {} — run `make artifacts`", dir.display());
-        }
-        Ok(Registry { runtime, paths, compiled: HashMap::new() })
     }
 
-    /// Names available.
-    pub fn names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.paths.keys().cloned().collect();
-        v.sort();
-        v
+    /// Artifact registry: lazily-compiled model variants by name.
+    pub struct Registry {
+        runtime: Runtime,
+        paths: HashMap<String, PathBuf>,
+        compiled: HashMap<String, Executable>,
     }
 
-    /// Get (compiling on first use) a model by name.
-    pub fn get(&mut self, name: &str) -> Result<&Executable> {
-        if !self.compiled.contains_key(name) {
-            let path = self
-                .paths
-                .get(name)
-                .with_context(|| format!("unknown model `{name}`; have {:?}", self.names()))?;
-            let exe = self.runtime.load_hlo(path)?;
-            self.compiled.insert(name.to_string(), exe);
+    impl Registry {
+        /// Discover `*.hlo.txt` files under `dir`.
+        pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+            let dir = dir.as_ref();
+            let runtime = Runtime::new()?;
+            let mut paths = HashMap::new();
+            let entries = std::fs::read_dir(dir)
+                .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?;
+            for e in entries {
+                let p = e?.path();
+                if p.to_string_lossy().ends_with(".hlo.txt") {
+                    let name = p
+                        .file_name()
+                        .unwrap()
+                        .to_string_lossy()
+                        .trim_end_matches(".hlo.txt")
+                        .to_string();
+                    paths.insert(name, p);
+                }
+            }
+            if paths.is_empty() {
+                bail!("no *.hlo.txt artifacts in {} — run `make artifacts`", dir.display());
+            }
+            Ok(Registry { runtime, paths, compiled: HashMap::new() })
         }
-        Ok(&self.compiled[name])
+
+        /// Names available.
+        pub fn names(&self) -> Vec<String> {
+            let mut v: Vec<String> = self.paths.keys().cloned().collect();
+            v.sort();
+            v
+        }
+
+        /// Get (compiling on first use) a model by name.
+        pub fn get(&mut self, name: &str) -> Result<&Executable> {
+            if !self.compiled.contains_key(name) {
+                let path = self
+                    .paths
+                    .get(name)
+                    .with_context(|| format!("unknown model `{name}`; have {:?}", self.names()))?;
+                let exe = self.runtime.load_hlo(path)?;
+                self.compiled.insert(name.to_string(), exe);
+            }
+            Ok(&self.compiled[name])
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(feature = "pjrt")]
+pub use pjrt_client::{Executable, Registry, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` feature (offline image has no `xla` crate)";
+
+    /// Stub PJRT client (build with `--features pjrt` for the real one).
+    #[derive(Debug)]
+    pub struct Runtime {
+        _priv: (),
+    }
+
+    impl Runtime {
+        pub fn new() -> Result<Runtime> {
+            bail!("{}", UNAVAILABLE);
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn load_hlo(&self, _path: impl AsRef<Path>) -> Result<Executable> {
+            bail!("{}", UNAVAILABLE);
+        }
+    }
+
+    /// Stub compiled model.
+    #[derive(Debug)]
+    pub struct Executable {
+        pub name: String,
+    }
+
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            bail!("{} (model `{}`)", UNAVAILABLE, self.name);
+        }
+    }
+
+    /// Stub registry: `open` always reports the missing feature, so
+    /// artifact-gated callers skip gracefully.
+    #[derive(Debug)]
+    pub struct Registry {
+        _priv: (),
+    }
+
+    impl Registry {
+        pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+            bail!("{}: cannot open {}", UNAVAILABLE, dir.as_ref().display());
+        }
+
+        pub fn names(&self) -> Vec<String> {
+            Vec::new()
+        }
+
+        pub fn get(&mut self, name: &str) -> Result<&Executable> {
+            bail!("{} (model `{name}`)", UNAVAILABLE);
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::{Executable, Registry, Runtime};
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use std::io::Write;
+    use std::path::PathBuf;
 
     /// Minimal HLO module (f32[2,2] matmul + 2, as a 1-tuple) — written
     /// inline so runtime tests don't depend on `make artifacts`.
@@ -206,5 +288,18 @@ ENTRY main.7 {
         let exe = rt.load_hlo(&p).unwrap();
         let a = [1f32; 3];
         assert!(exe.run_f32(&[(&a, &[2, 2]), (&a, &[2, 2])]).is_err());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = Runtime::new().unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+        let err = Registry::open("artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
     }
 }

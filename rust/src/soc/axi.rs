@@ -9,7 +9,7 @@
 //! off-chip movement is ~60% of system energy, which Table IV's bench
 //! reproduces from these counters.
 
-use anyhow::{ensure, Result};
+use super::error::SocError;
 
 /// AXI bus parameters + counters.
 #[derive(Debug, Clone)]
@@ -92,29 +92,37 @@ impl ExternalMem {
         self.data.len()
     }
 
-    pub fn write(&mut self, addr: u64, bytes: &[u8]) -> Result<()> {
+    pub fn write(&mut self, addr: u64, bytes: &[u8]) -> Result<(), SocError> {
         let end = addr.checked_add(bytes.len() as u64);
-        ensure!(
-            matches!(end, Some(e) if e <= self.data.len() as u64),
-            "DRAM write OOB at {addr:#x}"
-        );
+        if !matches!(end, Some(e) if e <= self.data.len() as u64) {
+            return Err(SocError::DramOutOfBounds {
+                write: true,
+                addr,
+                len: bytes.len(),
+                capacity: self.data.len(),
+            });
+        }
         let a = addr as usize;
         self.data[a..a + bytes.len()].copy_from_slice(bytes);
         Ok(())
     }
 
-    pub fn read(&self, addr: u64, len: usize) -> Result<&[u8]> {
+    pub fn read(&self, addr: u64, len: usize) -> Result<&[u8], SocError> {
         let end = addr.checked_add(len as u64);
-        ensure!(
-            matches!(end, Some(e) if e <= self.data.len() as u64),
-            "DRAM read OOB at {addr:#x}"
-        );
+        if !matches!(end, Some(e) if e <= self.data.len() as u64) {
+            return Err(SocError::DramOutOfBounds {
+                write: false,
+                addr,
+                len,
+                capacity: self.data.len(),
+            });
+        }
         let a = addr as usize;
         Ok(&self.data[a..a + len])
     }
 
     /// Store an f32 slice little-endian.
-    pub fn write_f32(&mut self, addr: u64, xs: &[f32]) -> Result<()> {
+    pub fn write_f32(&mut self, addr: u64, xs: &[f32]) -> Result<(), SocError> {
         let mut buf = Vec::with_capacity(xs.len() * 4);
         for &x in xs {
             buf.extend_from_slice(&x.to_le_bytes());
@@ -123,7 +131,7 @@ impl ExternalMem {
     }
 
     /// Load an f32 slice.
-    pub fn read_f32(&self, addr: u64, count: usize) -> Result<Vec<f32>> {
+    pub fn read_f32(&self, addr: u64, count: usize) -> Result<Vec<f32>, SocError> {
         let bytes = self.read(addr, count * 4)?;
         Ok(bytes
             .chunks_exact(4)

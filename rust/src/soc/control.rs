@@ -28,12 +28,12 @@
 use super::axi::{AxiBus, ExternalMem};
 use super::csr::{self, CsrFile};
 use super::dma::{Descriptor, Dir, DmaEngine};
+use super::error::SocError;
 use super::memory::Scratchpad;
-use crate::arith::{tables, Precision};
-use crate::array::{ArrayReport, MatrixArray, TilePlan};
+use crate::arith::Precision;
+use crate::array::{ArrayReport, EncodedOperand, MatrixArray, OperandCache, TilePlan};
 use crate::npe::PrecSel;
 use crate::util::Matrix;
-use anyhow::{ensure, Result};
 
 /// Fixed FSM sequencing overhead per job (decode, start, irq).
 pub const FSM_OVERHEAD: u64 = 16;
@@ -91,15 +91,7 @@ impl JobReport {
 /// Pack a matrix into the byte stream the DMA moves (row-major, lane
 /// packing of the precision, rows padded to whole engine words).
 pub fn pack_matrix(mat: &Matrix, sel: PrecSel) -> Vec<u8> {
-    let t = tables::table(sel.precision());
-    let mut out = Vec::new();
-    for r in 0..mat.rows {
-        let enc: Vec<u32> = mat.row(r).iter().map(|&x| t.encode(x as f64)).collect();
-        for w in sel.pack_slice(&enc) {
-            out.extend_from_slice(&w.to_le_bytes());
-        }
-    }
-    out
+    EncodedOperand::rows(mat, sel).to_bytes()
 }
 
 /// Packed byte size of an m×k operand at the given mode.
@@ -130,7 +122,9 @@ impl ControlFsm {
         self.trace.push(s);
     }
 
-    /// Execute one GEMM job end to end.
+    /// Execute one GEMM job end to end. Operand encodings come from (and
+    /// go into) `cache`, so a weight matrix served repeatedly is encoded
+    /// once per (content, mode) instead of once per job.
     #[allow(clippy::too_many_arguments)]
     pub fn run(
         &mut self,
@@ -141,8 +135,11 @@ impl ControlFsm {
         spm: &mut Scratchpad,
         ext: &mut ExternalMem,
         csrs: &mut CsrFile,
-    ) -> Result<JobReport> {
-        ensure!(job.m > 0 && job.k > 0 && job.n > 0, "degenerate job");
+        cache: &mut OperandCache,
+    ) -> Result<JobReport, SocError> {
+        if job.m == 0 || job.k == 0 || job.n == 0 {
+            return Err(SocError::DegenerateJob { m: job.m, k: job.k, n: job.n });
+        }
         self.trace.clear();
         self.goto(FsmState::Idle);
         csrs.hw_or(csr::STATUS, csr::STATUS_BUSY);
@@ -154,17 +151,29 @@ impl ControlFsm {
         let (r, c) = array.morph().dims();
         let plan = TilePlan::new(job.m, job.k, job.n, r, c);
 
-        // ---- Fetch phase (functional): move packed operands via DMA. ----
+        // ---- Fetch phase (functional): move packed operands via DMA.
+        // Encoding (input processing) is memoized per (matrix, mode);
+        // both the DMA byte image and the array consume the same packed
+        // words, so the work happens at most once per operand. ----
         self.goto(FsmState::Fetch);
         let a = Matrix::from_vec(job.m, job.k, ext.read_f32(job.a_addr, job.m * job.k)?);
         let b = Matrix::from_vec(job.k, job.n, ext.read_f32(job.b_addr, job.k * job.n)?);
-        let a_packed = pack_matrix(&a, job.sel);
-        let b_packed = pack_matrix(&b.transpose(), job.sel);
+        let a_enc = cache.rows(&a, job.sel);
+        let b_enc = cache.cols(&b, job.sel);
+        let a_packed = a_enc.to_bytes();
+        let b_packed = b_enc.to_bytes();
 
         // Stage packed operands in DRAM scratch (models the runtime's
         // packed operand buffers) then DMA into SPM regions, chunked to
         // capacity. Region A = lower half, region B = upper half.
-        let stage = ext.capacity() as u64 - (a_packed.len() + b_packed.len()) as u64;
+        let packed_total = a_packed.len() + b_packed.len();
+        if packed_total > ext.capacity() {
+            return Err(SocError::OperandsExceedDram {
+                required: packed_total,
+                capacity: ext.capacity(),
+            });
+        }
+        let stage = (ext.capacity() - packed_total) as u64;
         ext.write(stage, &a_packed)?;
         ext.write(stage + a_packed.len() as u64, &b_packed)?;
         let half = spm.capacity() / 2;
@@ -190,9 +199,9 @@ impl ControlFsm {
             }
         }
 
-        // ---- Compute phase (bit-accurate). ----
+        // ---- Compute phase (bit-accurate, parallel tile executor). ----
         self.goto(FsmState::Compute);
-        let (out, areport) = array.gemm(&a, &b, job.out_prec);
+        let (out, areport) = array.gemm_packed(&a_enc, &b_enc, job.out_prec);
 
         // ---- Writeback phase: result f32 for chaining + packed bytes
         // for bandwidth accounting. ----
@@ -277,10 +286,21 @@ impl ControlFsm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arith::tables;
     use crate::array::ArrayMorph;
     use crate::util::Rng;
 
-    fn rig() -> (ControlFsm, MatrixArray, DmaEngine, AxiBus, Scratchpad, ExternalMem, CsrFile) {
+    #[allow(clippy::type_complexity)]
+    fn rig() -> (
+        ControlFsm,
+        MatrixArray,
+        DmaEngine,
+        AxiBus,
+        Scratchpad,
+        ExternalMem,
+        CsrFile,
+        OperandCache,
+    ) {
         (
             ControlFsm::new(),
             MatrixArray::new(ArrayMorph::M8x8, PrecSel::Posit8x2),
@@ -289,6 +309,7 @@ mod tests {
             Scratchpad::new(1 << 18, 8),
             ExternalMem::new(1 << 22),
             CsrFile::new(),
+            OperandCache::default(),
         )
     }
 
@@ -298,7 +319,7 @@ mod tests {
         n: usize,
         sel: PrecSel,
     ) -> (JobReport, Matrix, Matrix, Matrix, CsrFile) {
-        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs) = rig();
+        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) = rig();
         let mut rng = Rng::new(11);
         let a = Matrix::random(m, k, 1.0, &mut rng);
         let b = Matrix::random(k, n, 1.0, &mut rng);
@@ -314,7 +335,9 @@ mod tests {
             b_addr: 0x10_0000,
             c_addr: 0x20_0000,
         };
-        let rep = fsm.run(job, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs).unwrap();
+        let rep = fsm
+            .run(job, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs, &mut cache)
+            .unwrap();
         let cmat = Matrix::from_vec(m, n, ext.read_f32(0x20_0000, m * n).unwrap());
         (rep, a, b, cmat, csrs)
     }
@@ -343,7 +366,7 @@ mod tests {
 
     #[test]
     fn fsm_trace_order() {
-        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs) = rig();
+        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) = rig();
         let a = Matrix::eye(8);
         ext.write_f32(0, &a.data).unwrap();
         ext.write_f32(4096, &a.data).unwrap();
@@ -357,7 +380,8 @@ mod tests {
             b_addr: 4096,
             c_addr: 8192,
         };
-        fsm.run(job, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs).unwrap();
+        fsm.run(job, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs, &mut cache)
+            .unwrap();
         assert_eq!(
             fsm.trace,
             vec![FsmState::Idle, FsmState::Fetch, FsmState::Compute, FsmState::Writeback, FsmState::Done]
@@ -383,7 +407,7 @@ mod tests {
 
     #[test]
     fn nar_input_sets_error_bit() {
-        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs) = rig();
+        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) = rig();
         let mut a = Matrix::eye(4);
         a.data[0] = f32::NAN; // posit encode → NaR
         ext.write_f32(0, &a.data).unwrap();
@@ -398,7 +422,54 @@ mod tests {
             b_addr: 4096,
             c_addr: 8192,
         };
-        fsm.run(job, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs).unwrap();
+        fsm.run(job, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs, &mut cache)
+            .unwrap();
         assert_ne!(csrs.read(csr::STATUS).unwrap() & csr::STATUS_ERR_NAR, 0);
+    }
+
+    #[test]
+    fn repeated_weight_operand_hits_encoding_cache() {
+        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) = rig();
+        let mut rng = Rng::new(9);
+        let a = Matrix::random(8, 16, 1.0, &mut rng);
+        let b = Matrix::random(16, 8, 1.0, &mut rng);
+        ext.write_f32(0, &a.data).unwrap();
+        ext.write_f32(4096, &b.data).unwrap();
+        let job = GemmJob {
+            m: 8,
+            k: 16,
+            n: 8,
+            sel: PrecSel::Posit8x2,
+            out_prec: Precision::Posit8,
+            a_addr: 0,
+            b_addr: 4096,
+            c_addr: 8192,
+        };
+        for _ in 0..3 {
+            fsm.run(job, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs, &mut cache)
+                .unwrap();
+        }
+        // first job encodes A and B (2 misses); the next two hit both
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.hits, 4);
+    }
+
+    #[test]
+    fn degenerate_job_is_typed_error() {
+        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) = rig();
+        let job = GemmJob {
+            m: 0,
+            k: 4,
+            n: 4,
+            sel: PrecSel::Posit8x2,
+            out_prec: Precision::Posit8,
+            a_addr: 0,
+            b_addr: 0,
+            c_addr: 0,
+        };
+        let err = fsm
+            .run(job, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs, &mut cache)
+            .unwrap_err();
+        assert_eq!(err, SocError::DegenerateJob { m: 0, k: 4, n: 4 });
     }
 }

@@ -22,9 +22,9 @@
 //! | 0x34   | MACS_LO   | completed-job MAC count, low word (RO) |
 //! | 0x38   | MACS_HI   | high word (RO) |
 
+use super::error::SocError;
 use crate::array::ArrayMorph;
 use crate::npe::PrecSel;
-use anyhow::{bail, Result};
 
 pub const CTRL: u32 = 0x00;
 pub const STATUS: u32 = 0x04;
@@ -66,22 +66,22 @@ impl CsrFile {
         CsrFile { regs: [0; NUM_REGS] }
     }
 
-    fn idx(offset: u32) -> Result<usize> {
+    fn idx(offset: u32) -> Result<usize, SocError> {
         if offset % 4 != 0 || (offset / 4) as usize >= NUM_REGS {
-            bail!("CSR offset {offset:#x} out of range");
+            return Err(SocError::CsrOffsetOutOfRange { offset });
         }
         Ok((offset / 4) as usize)
     }
 
-    pub fn read(&self, offset: u32) -> Result<u32> {
+    pub fn read(&self, offset: u32) -> Result<u32, SocError> {
         Ok(self.regs[Self::idx(offset)?])
     }
 
     /// Host write. Read-only registers are rejected (hardware would
     /// silently ignore; we fail loudly to catch driver bugs).
-    pub fn write(&mut self, offset: u32, value: u32) -> Result<()> {
+    pub fn write(&mut self, offset: u32, value: u32) -> Result<(), SocError> {
         if matches!(offset, CYCLES_LO | CYCLES_HI | MACS_LO | MACS_HI) {
-            bail!("CSR {offset:#x} is read-only");
+            return Err(SocError::CsrReadOnly { offset });
         }
         // STATUS write-1-to-clear for error bits; BUSY/DONE are HW-owned.
         if offset == STATUS {
@@ -115,22 +115,22 @@ impl CsrFile {
     }
 
     /// Decode the PREC_SEL register.
-    pub fn prec_sel(&self) -> Result<PrecSel> {
+    pub fn prec_sel(&self) -> Result<PrecSel, SocError> {
         match self.regs[(PREC_SEL / 4) as usize] {
             0 => Ok(PrecSel::Fp4x4),
             1 => Ok(PrecSel::Posit4x4),
             2 => Ok(PrecSel::Posit8x2),
             3 => Ok(PrecSel::Posit16x1),
-            v => bail!("invalid PREC_SEL value {v}"),
+            v => Err(SocError::BadPrecSel { value: v }),
         }
     }
 
     /// Decode the MORPH register.
-    pub fn morph(&self) -> Result<ArrayMorph> {
+    pub fn morph(&self) -> Result<ArrayMorph, SocError> {
         match self.regs[(MORPH / 4) as usize] {
             0 => Ok(ArrayMorph::M8x8),
             1 => Ok(ArrayMorph::M16x16),
-            v => bail!("invalid MORPH value {v}"),
+            v => Err(SocError::BadMorph { value: v }),
         }
     }
 }

@@ -7,8 +7,8 @@
 //! pipeline against each other, so the slower side dominates.
 
 use super::axi::{AxiBus, ExternalMem};
+use super::error::SocError;
 use super::memory::Scratchpad;
-use anyhow::Result;
 
 /// Transfer direction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,14 +50,17 @@ impl Default for DmaEngine {
 }
 
 impl DmaEngine {
-    /// Execute one descriptor; returns the cycle cost.
+    /// Execute one descriptor; returns the cycle cost. A malformed
+    /// descriptor (out-of-bounds on either side) comes back as a typed
+    /// [`SocError`] so the serving process can reject the command and
+    /// keep going.
     pub fn execute(
         &mut self,
         d: Descriptor,
         bus: &mut AxiBus,
         spm: &mut Scratchpad,
         ext: &mut ExternalMem,
-    ) -> Result<u64> {
+    ) -> Result<u64, SocError> {
         let cycles = match d.dir {
             Dir::ToSpm => {
                 let data = ext.read(d.ext_addr, d.bytes)?.to_vec();
@@ -85,7 +88,7 @@ impl DmaEngine {
         bus: &mut AxiBus,
         spm: &mut Scratchpad,
         ext: &mut ExternalMem,
-    ) -> Result<u64> {
+    ) -> Result<u64, SocError> {
         let mut total = 0;
         for &d in chain {
             total += self.execute(d, bus, spm, ext)?;

@@ -1,0 +1,88 @@
+//! Typed errors for the SoC substrate.
+//!
+//! The serving path must survive malformed host programming: a bad CSR
+//! offset, an out-of-range DMA descriptor or a degenerate GEMM job comes
+//! back as a [`SocError`] through `Result` instead of aborting the
+//! process with `unwrap`/`panic!`. `SocError` implements
+//! `std::error::Error`, so it flows into the coordinator's
+//! `anyhow::Result` plumbing via `?` without any glue.
+
+use std::fmt;
+
+/// Everything the co-processor model can reject at run time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SocError {
+    /// CSR offset not word-aligned or beyond the register file.
+    CsrOffsetOutOfRange { offset: u32 },
+    /// Host write to a read-only CSR.
+    CsrReadOnly { offset: u32 },
+    /// `PREC_SEL` register holds an undefined mode code.
+    BadPrecSel { value: u32 },
+    /// `MORPH` register holds an undefined geometry code.
+    BadMorph { value: u32 },
+    /// DRAM access past the end of external memory.
+    DramOutOfBounds { write: bool, addr: u64, len: usize, capacity: usize },
+    /// Scratchpad access past the end of the SPM.
+    SpmOutOfBounds { write: bool, addr: usize, len: usize, capacity: usize },
+    /// GEMM job with a zero dimension.
+    DegenerateJob { m: usize, k: usize, n: usize },
+    /// GEMM operand shapes don't agree (A is M×K, B must be K×N).
+    ShapeMismatch { a_cols: usize, b_rows: usize },
+    /// Packed operand/result buffers don't fit the DRAM model.
+    OperandsExceedDram { required: usize, capacity: usize },
+}
+
+impl fmt::Display for SocError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            SocError::CsrOffsetOutOfRange { offset } => {
+                write!(f, "CSR offset {offset:#x} out of range")
+            }
+            SocError::CsrReadOnly { offset } => write!(f, "CSR {offset:#x} is read-only"),
+            SocError::BadPrecSel { value } => write!(f, "invalid PREC_SEL value {value}"),
+            SocError::BadMorph { value } => write!(f, "invalid MORPH value {value}"),
+            SocError::DramOutOfBounds { write, addr, len, capacity } => {
+                let op = if write { "write" } else { "read" };
+                write!(f, "DRAM {op} OOB at {addr:#x} (+{len} bytes, capacity {capacity})")
+            }
+            SocError::SpmOutOfBounds { write, addr, len, capacity } => {
+                let op = if write { "write" } else { "read" };
+                write!(f, "scratchpad {op} OOB: {addr}+{len} > {capacity}")
+            }
+            SocError::DegenerateJob { m, k, n } => {
+                write!(f, "degenerate GEMM job {m}x{k}x{n}")
+            }
+            SocError::ShapeMismatch { a_cols, b_rows } => {
+                write!(f, "gemm shape mismatch: A has {a_cols} cols, B has {b_rows} rows")
+            }
+            SocError::OperandsExceedDram { required, capacity } => {
+                write!(f, "operands exceed DRAM model: need {required} bytes of {capacity}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SocError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = SocError::DramOutOfBounds { write: true, addr: 0x40, len: 8, capacity: 64 };
+        let s = e.to_string();
+        assert!(s.contains("DRAM write OOB"));
+        assert!(s.contains("0x40"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn f() -> anyhow::Result<()> {
+            Err(SocError::CsrReadOnly { offset: 0x2C })?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("read-only"));
+    }
+}

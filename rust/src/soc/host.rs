@@ -13,11 +13,11 @@ use super::axi::{AxiBus, ExternalMem};
 use super::control::{ControlFsm, GemmJob, JobReport};
 use super::csr::CsrFile;
 use super::dma::DmaEngine;
+use super::error::SocError;
 use super::memory::Scratchpad;
-use crate::array::{ArrayMorph, MatrixArray};
+use crate::array::{ArrayMorph, MatrixArray, OperandCache};
 use crate::npe::PrecSel;
 use crate::util::Matrix;
-use anyhow::{ensure, Result};
 use std::collections::VecDeque;
 
 /// Host → co-processor commands.
@@ -74,6 +74,9 @@ pub struct Soc {
     pub spm: Scratchpad,
     pub ext: ExternalMem,
     pub csrs: CsrFile,
+    /// Operand-encoding cache shared across jobs: weight matrices served
+    /// repeatedly are encoded/packed once per (content, mode).
+    pub enc_cache: OperandCache,
     queue: VecDeque<(u64, Command)>,
     next_seq: u64,
     /// Running total over all completed jobs.
@@ -91,6 +94,7 @@ impl Soc {
             spm: Scratchpad::new(cfg.spm_bytes, cfg.spm_banks),
             ext: ExternalMem::new(cfg.dram_bytes),
             csrs: CsrFile::new(),
+            enc_cache: OperandCache::default(),
             queue: VecDeque::new(),
             next_seq: 0,
             lifetime: JobReport::default(),
@@ -110,8 +114,10 @@ impl Soc {
         self.queue.len()
     }
 
-    /// Process every queued command in order; returns completions.
-    pub fn process_all(&mut self) -> Result<Vec<Completion>> {
+    /// Process every queued command in order; returns completions. A
+    /// malformed command comes back as a typed [`SocError`]; the SoC
+    /// stays usable afterwards.
+    pub fn process_all(&mut self) -> Result<Vec<Completion>, SocError> {
         let mut out = Vec::new();
         while let Some((seq, cmd)) = self.queue.pop_front() {
             let report = match cmd {
@@ -124,6 +130,7 @@ impl Soc {
                         &mut self.spm,
                         &mut self.ext,
                         &mut self.csrs,
+                        &mut self.enc_cache,
                     )?;
                     self.lifetime.merge(&rep);
                     Some(rep)
@@ -148,17 +155,21 @@ impl Soc {
         b: &Matrix,
         sel: PrecSel,
         out_prec: crate::arith::Precision,
-    ) -> Result<(Matrix, JobReport)> {
-        ensure!(a.cols == b.rows, "gemm shape mismatch");
+    ) -> Result<(Matrix, JobReport), SocError> {
+        if a.cols != b.rows {
+            return Err(SocError::ShapeMismatch { a_cols: a.cols, b_rows: b.rows });
+        }
         let (m, k, n) = (a.rows, a.cols, b.cols);
         let a_addr = 0u64;
         let b_addr = (m * k * 4).next_multiple_of(64) as u64;
         let c_addr = b_addr + ((k * n * 4).next_multiple_of(64) as u64);
-        ensure!(
-            (c_addr as usize) + m * n * 4 + (a.data.len() + b.data.len()) * 2
-                < self.ext.capacity(),
-            "operands exceed DRAM model"
-        );
+        let required = (c_addr as usize) + m * n * 4 + (a.data.len() + b.data.len()) * 2;
+        if required >= self.ext.capacity() {
+            return Err(SocError::OperandsExceedDram {
+                required,
+                capacity: self.ext.capacity(),
+            });
+        }
         self.ext.write_f32(a_addr, &a.data)?;
         self.ext.write_f32(b_addr, &b.data)?;
         let job = GemmJob { m, k, n, sel, out_prec, a_addr, b_addr, c_addr };

@@ -8,7 +8,7 @@
 //! exposes the conflict model the array's feeders avoid by construction
 //! (operands are laid out bank-aligned by the DMA).
 
-use anyhow::{ensure, Result};
+use super::error::SocError;
 
 /// Activity counters.
 #[derive(Debug, Clone, Copy, Default)]
@@ -86,14 +86,15 @@ impl Scratchpad {
     }
 
     /// Functional write (also accrues burst timing).
-    pub fn write(&mut self, addr: usize, bytes: &[u8]) -> Result<u64> {
-        ensure!(
-            addr + bytes.len() <= self.data.len(),
-            "scratchpad write OOB: {}+{} > {}",
-            addr,
-            bytes.len(),
-            self.data.len()
-        );
+    pub fn write(&mut self, addr: usize, bytes: &[u8]) -> Result<u64, SocError> {
+        if addr.checked_add(bytes.len()).map_or(true, |e| e > self.data.len()) {
+            return Err(SocError::SpmOutOfBounds {
+                write: true,
+                addr,
+                len: bytes.len(),
+                capacity: self.data.len(),
+            });
+        }
         self.data[addr..addr + bytes.len()].copy_from_slice(bytes);
         let c = self.burst_cost(bytes.len());
         self.stats.writes += 1;
@@ -103,14 +104,15 @@ impl Scratchpad {
     }
 
     /// Functional read (also accrues burst timing).
-    pub fn read(&mut self, addr: usize, len: usize) -> Result<(Vec<u8>, u64)> {
-        ensure!(
-            addr + len <= self.data.len(),
-            "scratchpad read OOB: {}+{} > {}",
-            addr,
-            len,
-            self.data.len()
-        );
+    pub fn read(&mut self, addr: usize, len: usize) -> Result<(Vec<u8>, u64), SocError> {
+        if addr.checked_add(len).map_or(true, |e| e > self.data.len()) {
+            return Err(SocError::SpmOutOfBounds {
+                write: false,
+                addr,
+                len,
+                capacity: self.data.len(),
+            });
+        }
         let out = self.data[addr..addr + len].to_vec();
         let c = self.burst_cost(len);
         self.stats.reads += 1;

@@ -19,8 +19,10 @@ pub mod axi;
 pub mod control;
 pub mod csr;
 pub mod dma;
+pub mod error;
 pub mod host;
 pub mod memory;
 
 pub use control::{ControlFsm, FsmState, GemmJob, JobReport};
+pub use error::SocError;
 pub use host::{Command, Completion, Soc, SocConfig};

@@ -25,9 +25,21 @@ macro_rules! need_artifacts {
     };
 }
 
+/// The JAX-comparison tests additionally need the real PJRT runtime;
+/// the default offline build stubs it behind the `pjrt` feature.
+macro_rules! need_pjrt {
+    () => {
+        if !cfg!(feature = "pjrt") {
+            eprintln!("skipping: built without the `pjrt` feature (PJRT runtime stubbed)");
+            return;
+        }
+    };
+}
+
 #[test]
 fn fp32_rust_executor_matches_jax_hlo_gaze() {
     need_artifacts!();
+    need_pjrt!();
     let mut reg = Registry::open(artifacts::dir()).unwrap();
     let inst = ModelInstance::uniform(
         gaze::build(),
@@ -53,6 +65,7 @@ fn fp32_rust_executor_matches_jax_hlo_gaze() {
 #[test]
 fn fp32_rust_executor_matches_jax_hlo_effnet() {
     need_artifacts!();
+    need_pjrt!();
     let mut reg = Registry::open(artifacts::dir()).unwrap();
     let inst = ModelInstance::uniform(
         effnet::build(),
@@ -73,6 +86,7 @@ fn fp32_rust_executor_matches_jax_hlo_effnet() {
 #[test]
 fn fp32_rust_executor_matches_jax_hlo_ulvio() {
     need_artifacts!();
+    need_pjrt!();
     let mut reg = Registry::open(artifacts::dir()).unwrap();
     let inst = ModelInstance::uniform(
         ulvio::build(),
@@ -97,6 +111,7 @@ fn fp32_rust_executor_matches_jax_hlo_ulvio() {
 #[test]
 fn mxp_npe_close_to_jax_mxp_gaze() {
     need_artifacts!();
+    need_pjrt!();
     let mut reg = Registry::open(artifacts::dir()).unwrap();
     // python plan for gaze (plan.json): [posit8, fp4, posit16] — build
     // the identical plan on the rust side.
@@ -128,6 +143,7 @@ fn mxp_npe_close_to_jax_mxp_gaze() {
 #[test]
 fn pallas_kernel_artifact_runs() {
     need_artifacts!();
+    need_pjrt!();
     let mut reg = Registry::open(artifacts::dir()).unwrap();
     let a = vec![0.5f32; 16 * 32];
     let b = vec![0.25f32; 32 * 16];

@@ -1,0 +1,208 @@
+//! Minimal, dependency-free drop-in for the `anyhow` error crate.
+//!
+//! The build image has no crates.io registry access, so the workspace
+//! vendors the small subset of `anyhow` the simulator actually uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Semantics match the real crate
+//! where it matters here:
+//!
+//! * `Display` shows the outermost message; `{:#}` shows the whole
+//!   context chain joined with `": "`.
+//! * `Debug` shows the message plus a `Caused by:` chain (what a
+//!   `main() -> anyhow::Result<()>` prints on error).
+//! * Any `std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` specialized to [`Error`] (same default type parameter trick
+/// as the real crate, so `anyhow::Result<T>` and `Result<T, E>` both
+/// work).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error chain. Outermost message first.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Messages from outermost to innermost.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut v = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            v.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        v
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            f.write_str("\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        fn build(e: &dyn StdError) -> Error {
+            Error { msg: e.to_string(), source: e.source().map(|s| Box::new(build(s))) }
+        }
+        build(&e)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fallible(ok: bool) -> Result<u32> {
+        ensure!(ok, "flag was {}", ok);
+        Ok(7)
+    }
+
+    #[test]
+    fn ensure_and_bail_flow() {
+        assert_eq!(fallible(true).unwrap(), 7);
+        let e = fallible(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+    }
+
+    #[test]
+    fn context_chain_display() {
+        let inner: Result<()> = Err(anyhow!("root cause"));
+        let outer = inner.map_err(|e| e.context("while serving")).unwrap_err();
+        assert_eq!(outer.to_string(), "while serving");
+        assert_eq!(format!("{outer:#}"), "while serving: root cause");
+        assert_eq!(outer.root_cause(), "root cause");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing thing").unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn std_error_converts_with_source_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk on fire");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("disk on fire"));
+        let parse: Result<i32> = "x".parse::<i32>().map_err(Error::from);
+        assert!(parse.is_err());
+    }
+
+    #[test]
+    fn debug_shows_caused_by() {
+        let e = Error::msg("root").context("mid").context("top");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("top"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root"));
+    }
+}
