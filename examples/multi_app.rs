@@ -35,8 +35,8 @@ fn build_router(replicas: usize) -> Result<Router> {
             budget,
             PrecSel::Fp4x4,
             true,
-        ),
-    );
+        )?,
+    )?;
     router.register(
         WorkloadKind::Gaze,
         ModelInstance::planned(
@@ -45,8 +45,8 @@ fn build_router(replicas: usize) -> Result<Router> {
             budget,
             PrecSel::Fp4x4,
             false,
-        ),
-    );
+        )?,
+    )?;
     Ok(router)
 }
 

@@ -27,8 +27,8 @@ fn main() -> Result<()> {
         "mode", "bits", "cls acc%", "gaze MSE", "pJ/MAC", "MACs/cyc/PE");
     // FP32 reference row
     {
-        let cls = ModelInstance::uniform(effnet::build(), artifacts::weights("effnet")?, PrecSel::Posit16x1);
-        let gz = ModelInstance::uniform(gaze::build(), artifacts::weights("gaze")?, PrecSel::Posit16x1);
+        let cls = ModelInstance::uniform(effnet::build(), artifacts::weights("effnet")?, PrecSel::Posit16x1)?;
+        let gz = ModelInstance::uniform(gaze::build(), artifacts::weights("gaze")?, PrecSel::Posit16x1)?;
         let mut ok = 0;
         for i in 0..n_cls {
             ok += (argmax(&cls.infer_ref(&shapes.images[i], &[])?) == shapes.labels[i]) as usize;
@@ -55,8 +55,8 @@ fn main() -> Result<()> {
         let w_cls = artifacts::weights_qat("effnet", fmt)
             .unwrap_or(artifacts::weights("effnet")?);
         let w_gz = artifacts::weights_qat("gaze", fmt).unwrap_or(artifacts::weights("gaze")?);
-        let cls = ModelInstance::uniform(effnet::build(), w_cls, sel);
-        let gz = ModelInstance::uniform(gaze::build(), w_gz, sel);
+        let cls = ModelInstance::uniform(effnet::build(), w_cls, sel)?;
+        let gz = ModelInstance::uniform(gaze::build(), w_gz, sel)?;
 
         let mut soc = Soc::new(SocConfig::default());
         let mut ok = 0;

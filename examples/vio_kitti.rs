@@ -34,29 +34,29 @@ fn main() -> Result<()> {
         let w32 = artifacts::weights("ulvio")?;
         v.push((
             "Posit(16,1)".into(),
-            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "posit16").unwrap_or_else(|_| w32.clone()), PrecSel::Posit16x1),
+            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "posit16").unwrap_or_else(|_| w32.clone()), PrecSel::Posit16x1)?,
         ));
         v.push((
             "Posit(8,0)".into(),
-            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "posit8").unwrap_or_else(|_| w32.clone()), PrecSel::Posit8x2),
+            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "posit8").unwrap_or_else(|_| w32.clone()), PrecSel::Posit8x2)?,
         ));
         v.push((
             "FP4 (QAT)".into(),
-            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "fp4").unwrap_or_else(|_| w32.clone()), PrecSel::Fp4x4),
+            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "fp4").unwrap_or_else(|_| w32.clone()), PrecSel::Fp4x4)?,
         ));
         v.push((
             "Posit(4,1) (QAT)".into(),
-            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "posit4").unwrap_or_else(|_| w32.clone()), PrecSel::Posit4x4),
+            ModelInstance::uniform(ulvio::build(), artifacts::weights_qat("ulvio", "posit4").unwrap_or_else(|_| w32.clone()), PrecSel::Posit4x4)?,
         ));
         v.push((
             "MxP plan".into(),
-            ModelInstance::planned(ulvio::build(), w32, PlanBudget { avg_bits: 6.0 }, PrecSel::Fp4x4, true),
+            ModelInstance::planned(ulvio::build(), w32, PlanBudget { avg_bits: 6.0 }, PrecSel::Fp4x4, true)?,
         ));
         v
     };
 
     // FP32 reference trajectory
-    let ref_inst = ModelInstance::uniform(ulvio::build(), artifacts::weights("ulvio")?, PrecSel::Posit16x1);
+    let ref_inst = ModelInstance::uniform(ulvio::build(), artifacts::weights("ulvio")?, PrecSel::Posit16x1)?;
     let mut fp32_pred = Vec::with_capacity(frames);
     for f in &seq {
         let out = ref_inst.infer_ref(&f.image, &f.imu)?;

@@ -38,16 +38,16 @@ fn build_router() -> Result<Router> {
     let budget = PlanBudget { avg_bits: 6.0 };
     router.register(
         WorkloadKind::Vio,
-        ModelInstance::planned(ulvio::build(), artifacts::weights("ulvio")?, budget, PrecSel::Fp4x4, true),
-    );
+        ModelInstance::planned(ulvio::build(), artifacts::weights("ulvio")?, budget, PrecSel::Fp4x4, true)?,
+    )?;
     router.register(
         WorkloadKind::Gaze,
-        ModelInstance::planned(gaze::build(), artifacts::weights("gaze")?, budget, PrecSel::Fp4x4, false),
-    );
+        ModelInstance::planned(gaze::build(), artifacts::weights("gaze")?, budget, PrecSel::Fp4x4, false)?,
+    )?;
     router.register(
         WorkloadKind::Classify,
-        ModelInstance::planned(effnet::build(), artifacts::weights("effnet")?, budget, PrecSel::Fp4x4, false),
-    );
+        ModelInstance::planned(effnet::build(), artifacts::weights("effnet")?, budget, PrecSel::Fp4x4, false)?,
+    )?;
     Ok(router)
 }
 

@@ -40,7 +40,7 @@ fn main() {
             common::graph_of("effnet"),
             xr_npe::artifacts::weights("effnet").unwrap(),
             PrecSel::Fp4x4,
-        );
+        ).unwrap();
         let eval = xr_npe::artifacts::eval_shapes().unwrap();
         let mut soc = xr_npe::soc::Soc::new(xr_npe::soc::SocConfig::default());
         for img in eval.images.iter().take(10) {

@@ -12,6 +12,11 @@ use xr_npe::util::argmax;
 use xr_npe::util::io::TensorMap;
 use xr_npe::vio::odometry::{self, RelPose};
 
+/// He-init random weights for benches that exercise the serving
+/// machinery without trained artifacts (re-exported from the library so
+/// there is exactly one weight-layout builder to maintain).
+pub use xr_npe::models::random_weights;
+
 /// Measure wall time of `f` over `iters` runs; returns ns/iter.
 pub fn time_ns(iters: u32, mut f: impl FnMut()) -> f64 {
     // warmup

@@ -28,14 +28,14 @@ fn router_with(sel_vio: PrecSel, sel_gaze: PrecSel, sel_cls: PrecSel, mxp: bool)
                 PlanBudget { avg_bits: 6.0 },
                 PrecSel::Fp4x4,
                 model == "ulvio",
-            )
+            ).unwrap()
         } else {
-            ModelInstance::uniform(common::graph_of(model), common::weights_for(model, sel), sel)
+            ModelInstance::uniform(common::graph_of(model), common::weights_for(model, sel), sel).unwrap()
         }
     };
-    r.register(WorkloadKind::Vio, mk("ulvio", sel_vio));
-    r.register(WorkloadKind::Gaze, mk("gaze", sel_gaze));
-    r.register(WorkloadKind::Classify, mk("effnet", sel_cls));
+    r.register(WorkloadKind::Vio, mk("ulvio", sel_vio)).unwrap();
+    r.register(WorkloadKind::Gaze, mk("gaze", sel_gaze)).unwrap();
+    r.register(WorkloadKind::Classify, mk("effnet", sel_cls)).unwrap();
     r
 }
 

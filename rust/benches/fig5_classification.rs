@@ -26,7 +26,7 @@ fn main() {
         common::graph_of("effnet"),
         xr_npe::artifacts::weights("effnet").unwrap(),
         PrecSel::Posit16x1,
-    );
+    ).unwrap();
     let fp32 = common::cls_accuracy_ref(&base, EVAL_N);
     println!("{:<22} {:>6} {:>10.1} {:<28}", "FP32 (baseline)", 32, 100.0 * fp32, "rust f32 reference");
 
@@ -53,7 +53,7 @@ fn main() {
             common::graph_of("effnet"),
             common::weights_for("effnet", sel),
             sel,
-        );
+        ).unwrap();
         let acc = common::cls_accuracy_npe(&inst, EVAL_N);
         println!(
             "{:<22} {:>6} {:>10.1} {:<28}",
@@ -71,7 +71,7 @@ fn main() {
             common::graph_of("effnet"),
             xr_npe::artifacts::weights("effnet").unwrap(),
             sel,
-        );
+        ).unwrap();
         let acc = common::cls_accuracy_npe(&inst, EVAL_N);
         println!(
             "{:<22} {:>6} {:>10.1} {:<28}",

@@ -21,7 +21,7 @@ fn main() {
 
     let w32 = xr_npe::artifacts::weights("ulvio").unwrap();
     let ref_inst =
-        ModelInstance::uniform(common::graph_of("ulvio"), w32.clone(), PrecSel::Posit16x1);
+        ModelInstance::uniform(common::graph_of("ulvio"), w32.clone(), PrecSel::Posit16x1).unwrap();
     let (t32, r32) = common::vio_rmse_ref(&ref_inst, FRAMES);
     println!(
         "{:<22} {:>9.2} {:>12.4} {:>8} {:>8} {:>9.1}",
@@ -38,7 +38,7 @@ fn main() {
             common::graph_of("ulvio"),
             common::weights_for("ulvio", sel),
             sel,
-        );
+        ).unwrap();
         let (t, r) = common::vio_rmse_npe(&inst, FRAMES);
         println!(
             "{:<22} {:>9.2} {:>12.4} {:>+8.2} {:>+8.4} {:>9.1}",
@@ -58,7 +58,7 @@ fn main() {
         PlanBudget { avg_bits: 6.0 },
         PrecSel::Fp4x4,
         true,
-    );
+    ).unwrap();
     let (t, r) = common::vio_rmse_npe(&mxp, FRAMES);
     println!(
         "{:<22} {:>9.2} {:>12.4} {:>+8.2} {:>+8.4} {:>9.1}",

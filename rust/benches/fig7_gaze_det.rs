@@ -27,12 +27,12 @@ fn main() {
         common::graph_of("gaze"),
         xr_npe::artifacts::weights("gaze").unwrap(),
         PrecSel::Posit16x1,
-    );
+    ).unwrap();
     let cls32 = ModelInstance::uniform(
         common::graph_of("effnet"),
         xr_npe::artifacts::weights("effnet").unwrap(),
         PrecSel::Posit16x1,
-    );
+    ).unwrap();
     println!(
         "{:<22} {:>6} {:>13.6} {:>14.1}",
         "FP32 (baseline)",
@@ -61,12 +61,12 @@ fn main() {
             common::graph_of("gaze"),
             common::weights_for("gaze", sel),
             sel,
-        );
+        ).unwrap();
         let cls = ModelInstance::uniform(
             common::graph_of("effnet"),
             common::weights_for("effnet", sel),
             sel,
-        );
+        ).unwrap();
         println!(
             "{:<22} {:>6} {:>13.6} {:>14.1}   (NPE sim, QAT)",
             sel.precision().name(),

@@ -21,22 +21,22 @@ fn main() {
         common::graph_of("effnet"),
         xr_npe::artifacts::weights("effnet").unwrap(),
         PrecSel::Posit16x1,
-    );
+    ).unwrap();
     let gz32 = ModelInstance::uniform(
         common::graph_of("gaze"),
         xr_npe::artifacts::weights("gaze").unwrap(),
         PrecSel::Posit16x1,
-    );
+    ).unwrap();
     let vio32 = ModelInstance::uniform(
         common::graph_of("ulvio"),
         xr_npe::artifacts::weights("ulvio").unwrap(),
         PrecSel::Posit16x1,
-    );
+    ).unwrap();
     let mlp32 = ModelInstance::uniform(
         common::graph_of("mlp"),
         xr_npe::artifacts::weights("mlp").unwrap(),
         PrecSel::Posit16x1,
-    );
+    ).unwrap();
     let acc32 = common::cls_accuracy_ref(&eff32, 120);
     let mse32 = common::gaze_mse_ref(&gz32, 200);
     let (t32, _) = common::vio_rmse_ref(&vio32, 200);
@@ -56,22 +56,22 @@ fn main() {
             common::graph_of("effnet"),
             common::weights_for("effnet", sel),
             sel,
-        );
+        ).unwrap();
         let gz = ModelInstance::uniform(
             common::graph_of("gaze"),
             common::weights_for("gaze", sel),
             sel,
-        );
+        ).unwrap();
         let vio = ModelInstance::uniform(
             common::graph_of("ulvio"),
             common::weights_for("ulvio", sel),
             sel,
-        );
+        ).unwrap();
         let mlp = ModelInstance::uniform(
             common::graph_of("mlp"),
             common::weights_for("mlp", sel),
             sel,
-        );
+        ).unwrap();
         let acc = common::cls_accuracy_npe(&eff, 120);
         let mse = common::gaze_mse_npe(&gz, 200);
         let (t, _) = common::vio_rmse_npe(&vio, 200);

@@ -62,7 +62,7 @@ fn main() {
         PlanBudget { avg_bits: 6.0 },
         PrecSel::Fp4x4,
         false,
-    );
+    ).unwrap();
     let acc = common::cls_accuracy_npe(&inst, 150);
     let sys = SystemModel::asic_coprocessor();
     let mut soc = Soc::new(SocConfig::default());

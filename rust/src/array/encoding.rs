@@ -119,6 +119,10 @@ struct Entry {
     src: Vec<u32>,
     enc: Arc<EncodedOperand>,
     stamp: u64,
+    /// Pin refcount. Non-zero = preloaded compiled-model weight, exempt
+    /// from eviction; counted so two models sharing identical weight
+    /// content keep the entry alive until *both* are evicted.
+    pins: u32,
 }
 
 /// Bounded memo of operand encodings, keyed by content + shape + mode +
@@ -133,6 +137,9 @@ pub struct OperandCache {
     pub hits: u64,
     /// Lookups that had to encode.
     pub misses: u64,
+    /// Entries inserted pre-encoded via [`OperandCache::preload_rows`] /
+    /// [`OperandCache::preload_cols`] (no encode work, not a miss).
+    pub preloads: u64,
 }
 
 impl Default for OperandCache {
@@ -145,7 +152,7 @@ impl OperandCache {
     /// Cache holding at most `cap` encoded operands.
     pub fn new(cap: usize) -> OperandCache {
         assert!(cap >= 1);
-        OperandCache { cap, map: HashMap::new(), clock: 0, hits: 0, misses: 0 }
+        OperandCache { cap, map: HashMap::new(), clock: 0, hits: 0, misses: 0, preloads: 0 }
     }
 
     /// Cached [`EncodedOperand::rows`].
@@ -156,6 +163,75 @@ impl OperandCache {
     /// Cached [`EncodedOperand::cols`].
     pub fn cols(&mut self, mat: &Matrix, sel: PrecSel) -> Arc<EncodedOperand> {
         self.get(mat, sel, Layout::Cols)
+    }
+
+    /// Insert a pre-computed row-layout encoding as a pinned entry.
+    pub fn preload_rows(&mut self, mat: &Matrix, enc: Arc<EncodedOperand>) {
+        self.preload(mat, enc, Layout::Rows)
+    }
+
+    /// Insert a pre-computed column-layout encoding as a pinned entry.
+    ///
+    /// This is the compiled-model weight-preload path: the encoding was
+    /// built exactly once at compile time ([`EncodedOperand::cols`] of
+    /// the scaled weight matrix) and is shared by every replica via
+    /// `Arc`, so subsequent [`OperandCache::cols`] lookups of the same
+    /// content hit without ever encoding. Pinned entries are exempt from
+    /// eviction.
+    pub fn preload_cols(&mut self, mat: &Matrix, enc: Arc<EncodedOperand>) {
+        self.preload(mat, enc, Layout::Cols)
+    }
+
+    fn preload(&mut self, mat: &Matrix, enc: Arc<EncodedOperand>, layout: Layout) {
+        let hash = fnv1a(mat.data.iter().map(|x| x.to_bits()));
+        let key = Key { hash, rows: mat.rows, cols: mat.cols, sel: enc.sel, layout };
+        self.clock += 1;
+        self.preloads += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            let same = e.src.len() == mat.data.len()
+                && e.src.iter().zip(&mat.data).all(|(&s, x)| s == x.to_bits());
+            if same {
+                // another model preloaded identical content — share the
+                // entry and count the pin
+                e.pins += 1;
+                e.stamp = self.clock;
+                return;
+            }
+        }
+        let src: Vec<u32> = mat.data.iter().map(|x| x.to_bits()).collect();
+        self.map.insert(key, Entry { src, enc, stamp: self.clock, pins: 1 });
+        self.evict_if_over_cap();
+    }
+
+    /// Number of pinned (preloaded) entries currently resident.
+    pub fn pinned_len(&self) -> usize {
+        self.map.values().filter(|e| e.pins > 0).count()
+    }
+
+    /// Drop one pin on the column-layout entry for `mat` at `sel`,
+    /// removing the entry when its pin count reaches zero. Returns
+    /// whether a pin was released. This is the compiled-model eviction
+    /// path: without it, re-registering a model would pin its replaced
+    /// weights forever — and the refcount keeps an entry shared by two
+    /// models alive until both are evicted.
+    pub fn unpin_cols(&mut self, mat: &Matrix, sel: PrecSel) -> bool {
+        let hash = fnv1a(mat.data.iter().map(|x| x.to_bits()));
+        let key = Key { hash, rows: mat.rows, cols: mat.cols, sel, layout: Layout::Cols };
+        match self.map.get_mut(&key) {
+            Some(e) if e.pins > 0 => {
+                let same = e.src.len() == mat.data.len()
+                    && e.src.iter().zip(&mat.data).all(|(&s, x)| s == x.to_bits());
+                if !same {
+                    return false; // hash collision with someone else's entry
+                }
+                e.pins -= 1;
+                if e.pins == 0 {
+                    self.map.remove(&key);
+                }
+                true
+            }
+            _ => false,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -188,13 +264,26 @@ impl OperandCache {
             Layout::Cols => EncodedOperand::cols(mat, sel),
         });
         let src: Vec<u32> = mat.data.iter().map(|x| x.to_bits()).collect();
-        self.map.insert(key, Entry { src, enc: Arc::clone(&enc), stamp: self.clock });
+        self.map.insert(key, Entry { src, enc: Arc::clone(&enc), stamp: self.clock, pins: 0 });
+        self.evict_if_over_cap();
+        enc
+    }
+
+    /// Drop the oldest *unpinned* entry when over capacity. If every
+    /// entry is pinned the cache is allowed to exceed `cap` — preloaded
+    /// model weights must never silently disappear.
+    fn evict_if_over_cap(&mut self) {
         if self.map.len() > self.cap {
-            if let Some(oldest) = self.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| *k) {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k)
+            {
                 self.map.remove(&oldest);
             }
         }
-        enc
     }
 }
 
@@ -285,6 +374,58 @@ mod tests {
         cache.rows(&m1, PrecSel::Fp4x4); // miss again
         assert_eq!(cache.hits, 0);
         assert_eq!(cache.misses, 4);
+    }
+
+    #[test]
+    fn preloaded_entry_hits_without_encoding() {
+        let mut rng = Rng::new(8);
+        let mut cache = OperandCache::new(8);
+        let w = Matrix::random(6, 4, 1.0, &mut rng);
+        let enc = Arc::new(EncodedOperand::cols(&w, PrecSel::Posit8x2));
+        cache.preload_cols(&w, Arc::clone(&enc));
+        assert_eq!((cache.hits, cache.misses, cache.preloads), (0, 0, 1));
+        assert_eq!(cache.pinned_len(), 1);
+        let got = cache.cols(&w, PrecSel::Posit8x2);
+        assert_eq!((cache.hits, cache.misses), (1, 0));
+        assert!(Arc::ptr_eq(&got, &enc), "lookup must return the preloaded encoding");
+    }
+
+    #[test]
+    fn shared_content_pin_is_refcounted() {
+        let mut rng = Rng::new(10);
+        let mut cache = OperandCache::new(8);
+        let w = Matrix::random(4, 4, 1.0, &mut rng);
+        let enc = Arc::new(EncodedOperand::cols(&w, PrecSel::Posit8x2));
+        // two models preload identical content
+        cache.preload_cols(&w, Arc::clone(&enc));
+        cache.preload_cols(&w, Arc::clone(&enc));
+        assert_eq!(cache.pinned_len(), 1);
+        // first eviction keeps the shared entry alive and pinned
+        assert!(cache.unpin_cols(&w, PrecSel::Posit8x2));
+        assert_eq!(cache.pinned_len(), 1);
+        cache.cols(&w, PrecSel::Posit8x2);
+        assert_eq!((cache.hits, cache.misses), (1, 0));
+        // second eviction removes it
+        assert!(cache.unpin_cols(&w, PrecSel::Posit8x2));
+        assert_eq!(cache.pinned_len(), 0);
+        assert!(!cache.unpin_cols(&w, PrecSel::Posit8x2));
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction_pressure() {
+        let mut rng = Rng::new(9);
+        let mut cache = OperandCache::new(2);
+        let w = Matrix::random(3, 3, 1.0, &mut rng);
+        let enc = Arc::new(EncodedOperand::cols(&w, PrecSel::Fp4x4));
+        cache.preload_cols(&w, enc);
+        // churn far more activation operands than the cache holds
+        for _ in 0..6 {
+            let a = Matrix::random(3, 3, 1.0, &mut rng);
+            cache.rows(&a, PrecSel::Fp4x4);
+        }
+        assert_eq!(cache.pinned_len(), 1, "preloaded weight must never be evicted");
+        cache.cols(&w, PrecSel::Fp4x4);
+        assert_eq!(cache.hits, 1);
     }
 
     #[test]

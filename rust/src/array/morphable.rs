@@ -117,7 +117,7 @@ impl ArrayMorph {
 }
 
 /// Execution report for one GEMM.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ArrayReport {
     /// Compute cycles (array clock).
     pub cycles: u64,

@@ -235,51 +235,23 @@ pub fn serve_with_batcher(
 mod tests {
     use super::*;
     use crate::coordinator::scheduler::ModelInstance;
-    use crate::models::{effnet, gaze, ulvio, LayerKind};
+    use crate::models::random_weights as weights_for;
+    use crate::models::{effnet, gaze, ulvio};
     use crate::npe::PrecSel;
     use crate::soc::SocConfig;
-    use crate::util::io::{Tensor, TensorMap};
-    use crate::util::Rng;
     use crate::vio::kitti::{SequenceConfig, TrajectoryGenerator};
-
-    fn weights_for(graph: &crate::models::ModelGraph, seed: u64) -> TensorMap {
-        let mut rng = Rng::new(seed);
-        let mut m = TensorMap::new();
-        for layer in &graph.layers {
-            match &layer.kind {
-                LayerKind::Conv2d { in_c, out_c, k, .. } => {
-                    let n = in_c * out_c * k * k;
-                    let mut w = vec![0f32; n];
-                    rng.fill_normal(&mut w, 0.2);
-                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*k, *k, *in_c, *out_c], w));
-                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_c], vec![0.0; *out_c]));
-                }
-                LayerKind::Fc { in_f, out_f } => {
-                    let mut w = vec![0f32; in_f * out_f];
-                    rng.fill_normal(&mut w, 0.2);
-                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*in_f, *out_f], w));
-                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_f], vec![0.0; *out_f]));
-                }
-                LayerKind::Act(crate::models::ActKind::Pact) => {
-                    m.insert(format!("{}.alpha", layer.name), Tensor::new(vec![1], vec![4.0]));
-                }
-                _ => {}
-            }
-        }
-        m
-    }
 
     fn rigged_router() -> Router {
         let mut r = Router::new(1, SocConfig::default());
         let gv = ulvio::build();
         let wv = weights_for(&gv, 1);
-        r.register(WorkloadKind::Vio, ModelInstance::uniform(gv, wv, PrecSel::Posit8x2));
+        r.register(WorkloadKind::Vio, ModelInstance::uniform(gv, wv, PrecSel::Posit8x2).unwrap()).unwrap();
         let gg = gaze::build();
         let wg = weights_for(&gg, 2);
-        r.register(WorkloadKind::Gaze, ModelInstance::uniform(gg, wg, PrecSel::Fp4x4));
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(gg, wg, PrecSel::Fp4x4).unwrap()).unwrap();
         let gc = effnet::build();
         let wc = weights_for(&gc, 3);
-        r.register(WorkloadKind::Classify, ModelInstance::uniform(gc, wc, PrecSel::Fp4x4));
+        r.register(WorkloadKind::Classify, ModelInstance::uniform(gc, wc, PrecSel::Fp4x4).unwrap()).unwrap();
         r
     }
 
@@ -343,7 +315,7 @@ mod tests {
         let mut r = Router::new(2, crate::soc::SocConfig::default());
         let g = gaze::build();
         let w = weights_for(&g, 9);
-        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4));
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4).unwrap()).unwrap();
         let batch = Batch {
             requests: (0..4)
                 .map(|i| Request {

@@ -5,6 +5,12 @@
 //! round-robin. The router is the only component that touches both the
 //! serving queue and the hardware handles — the paper's "scheduling and
 //! control mechanisms as per workload configurations".
+//!
+//! Registration **warms every replica**: the instance's compiled program
+//! uploads its resident weight images and preloads their pinned operand
+//! encodings on each SoC, so [`Router::route`] / [`Router::route_batch`]
+//! always serve from warm state — no request ever pays weight scaling or
+//! encoding costs.
 
 use super::batcher::Batch;
 use super::scheduler::ModelInstance;
@@ -65,9 +71,36 @@ impl Router {
         }
     }
 
-    /// Register the model for a workload kind.
-    pub fn register(&mut self, kind: WorkloadKind, inst: ModelInstance) {
+    /// Register the model for a workload kind, warming its compiled
+    /// program on every replica (resident weights + pinned encodings +
+    /// run arena), so the first request is as fast as the thousandth.
+    ///
+    /// The new model warms on *every* replica before the replaced one is
+    /// evicted or the registry updated, and a failed warm rolls back the
+    /// replicas already warmed — so an error leaves the router exactly
+    /// as it was (the previous model, if any, keeps serving).
+    pub fn register(&mut self, kind: WorkloadKind, inst: ModelInstance) -> Result<()> {
+        let marks: Vec<u64> = self.replicas.iter().map(|s| s.resident_mark()).collect();
+        for i in 0..self.replicas.len() {
+            if let Err(e) = inst.warm(&mut self.replicas[i]) {
+                // replica i cleaned up after itself inside warm; roll
+                // back the replicas that fully warmed before it,
+                // including their resident-DRAM bumps (this register
+                // call held &mut self, so those bumps are top-of-stack)
+                for (j, soc) in self.replicas[..i].iter_mut().enumerate() {
+                    inst.compiled.evict(soc);
+                    soc.resident_rollback(marks[j]);
+                }
+                return Err(e);
+            }
+        }
+        if let Some(old) = self.models.remove(&kind) {
+            for soc in &mut self.replicas {
+                old.compiled.evict(soc);
+            }
+        }
         self.models.insert(kind, inst);
+        Ok(())
     }
 
     pub fn has(&self, kind: WorkloadKind) -> bool {
@@ -156,6 +189,19 @@ impl Router {
         &self.replicas[i].lifetime
     }
 
+    /// (hits, misses, preloads) of replica `i`'s operand-encoding cache
+    /// — the observable proof that registered weights encode zero times
+    /// on the serving path.
+    pub fn replica_cache_stats(&self, i: usize) -> (u64, u64, u64) {
+        let c = &self.replicas[i].enc_cache;
+        (c.hits, c.misses, c.preloads)
+    }
+
+    /// Pinned (weight-preload) entries resident in replica `i`'s cache.
+    pub fn replica_pinned_len(&self, i: usize) -> usize {
+        self.replicas[i].enc_cache.pinned_len()
+    }
+
     pub fn n_replicas(&self) -> usize {
         self.replicas.len()
     }
@@ -164,46 +210,16 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::random_weights as weights_for;
     use crate::models::{effnet, gaze};
     use crate::npe::PrecSel;
-    use crate::util::io::{Tensor, TensorMap};
-    use crate::util::Rng;
-
-    fn weights_for(graph: &crate::models::ModelGraph, seed: u64) -> TensorMap {
-        // shared helper duplicated from scheduler tests (kept local to
-        // avoid exposing test-only code in the public API)
-        let mut rng = Rng::new(seed);
-        let mut m = TensorMap::new();
-        for layer in &graph.layers {
-            match &layer.kind {
-                crate::models::LayerKind::Conv2d { in_c, out_c, k, .. } => {
-                    let n = in_c * out_c * k * k;
-                    let mut w = vec![0f32; n];
-                    rng.fill_normal(&mut w, 0.2);
-                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*k, *k, *in_c, *out_c], w));
-                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_c], vec![0.0; *out_c]));
-                }
-                crate::models::LayerKind::Fc { in_f, out_f } => {
-                    let mut w = vec![0f32; in_f * out_f];
-                    rng.fill_normal(&mut w, 0.2);
-                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*in_f, *out_f], w));
-                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_f], vec![0.0; *out_f]));
-                }
-                crate::models::LayerKind::Act(crate::models::ActKind::Pact) => {
-                    m.insert(format!("{}.alpha", layer.name), Tensor::new(vec![1], vec![4.0]));
-                }
-                _ => {}
-            }
-        }
-        m
-    }
 
     #[test]
     fn routes_to_registered_model() {
         let mut r = Router::new(1, SocConfig::default());
         let g = gaze::build();
         let w = weights_for(&g, 1);
-        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2));
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap()).unwrap();
         let out = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
         assert_eq!(out.output.len(), 2);
         assert_eq!(r.total_served(), 1);
@@ -220,7 +236,7 @@ mod tests {
         let mut r = Router::new(3, SocConfig::default());
         let g = gaze::build();
         let w = weights_for(&g, 2);
-        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4));
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4).unwrap()).unwrap();
         let mut hits = vec![0u32; 3];
         for _ in 0..9 {
             let res = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
@@ -235,7 +251,7 @@ mod tests {
         let mut r = Router::new(3, SocConfig::default());
         let g = gaze::build();
         let w = weights_for(&g, 5);
-        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2));
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap()).unwrap();
         let inputs: Vec<Vec<f32>> = (0..7).map(|i| vec![0.02 * i as f32; 16]).collect();
         // serial reference outputs (numerics are replica-independent)
         let mut want = Vec::new();
@@ -271,7 +287,7 @@ mod tests {
         let mut r = Router::new(3, SocConfig::default());
         let g = gaze::build();
         let w = weights_for(&g, 6);
-        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4));
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4).unwrap()).unwrap();
         let mut hits = vec![0u32; 3];
         for b in 0..6 {
             let batch = Batch {
@@ -303,14 +319,59 @@ mod tests {
     }
 
     #[test]
+    fn registration_warms_every_replica() {
+        let mut r = Router::new(3, SocConfig::default());
+        let g = gaze::build();
+        let n_gemm = g.compute_layers().len() as u64;
+        let w = weights_for(&g, 7);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        for i in 0..3 {
+            let (hits, misses, preloads) = r.replica_cache_stats(i);
+            assert_eq!((hits, misses, preloads), (0, 0, n_gemm), "replica {i}");
+        }
+        // 6 distinct requests round-robin over 3 replicas: every weight
+        // lookup hits the preloaded encoding; only activations encode
+        for q in 0..6 {
+            r.route(WorkloadKind::Gaze, &vec![0.01 * q as f32; 16], &[]).unwrap();
+        }
+        for i in 0..3 {
+            let (hits, misses, preloads) = r.replica_cache_stats(i);
+            assert_eq!(preloads, n_gemm);
+            assert_eq!(hits, 2 * n_gemm, "replica {i}: weights must hit");
+            assert_eq!(misses, 2 * n_gemm, "replica {i}: only activations encode");
+        }
+    }
+
+    #[test]
+    fn reregistering_a_kind_evicts_the_old_warm_state() {
+        let mut r = Router::new(2, SocConfig::default());
+        let g = gaze::build();
+        let n_gemm = g.compute_layers().len();
+        let w1 = weights_for(&g, 30);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g.clone(), w1, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        let w2 = weights_for(&g, 31);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g.clone(), w2, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        for i in 0..2 {
+            // the replaced model's pinned encodings are gone — only the
+            // live model's weights stay pinned
+            assert_eq!(r.replica_pinned_len(i), n_gemm, "replica {i}");
+        }
+        let out = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
+        assert_eq!(out.output.len(), 2);
+    }
+
+    #[test]
     fn mixed_workloads_share_replicas() {
         let mut r = Router::new(2, SocConfig::default());
         let gg = gaze::build();
         let wg = weights_for(&gg, 3);
-        r.register(WorkloadKind::Gaze, ModelInstance::uniform(gg, wg, PrecSel::Posit8x2));
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(gg, wg, PrecSel::Posit8x2).unwrap()).unwrap();
         let gc = effnet::build();
         let wc = weights_for(&gc, 4);
-        r.register(WorkloadKind::Classify, ModelInstance::uniform(gc, wc, PrecSel::Fp4x4));
+        r.register(WorkloadKind::Classify, ModelInstance::uniform(gc, wc, PrecSel::Fp4x4).unwrap()).unwrap();
         r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
         r.route(WorkloadKind::Classify, &vec![0.1; 256], &[]).unwrap();
         assert_eq!(r.total_served(), 2);

@@ -1,14 +1,19 @@
-//! Model scheduling: sensitivity-driven precision planning + execution
-//! of a model instance on a SoC.
+//! Model scheduling: sensitivity-driven precision planning + compiled
+//! execution of a model instance on a SoC.
 //!
-//! A [`ModelInstance`] bundles graph + weights + the computed plan. The
-//! plan comes from the paper's flow: per-layer sensitivity (eqs. 1–2,
-//! using the gradient tensors the QAT trainer exports as `<layer>.g`;
-//! falling back to unit gradients when absent) → budgeted promotion
-//! (`quant::policy::plan`). The output head of a regression model can be
-//! pinned high — the UL-VIO configuration pins `fc2`.
+//! A [`ModelInstance`] bundles graph + weights + the computed plan +
+//! the **compiled program** ([`CompiledModel`]) lowered from them at
+//! construction time: weights are scaled and encoded exactly once here,
+//! then every replica the instance is registered on serves requests by
+//! replaying the program from warm state. The plan comes from the
+//! paper's flow: per-layer sensitivity (eqs. 1–2, using the gradient
+//! tensors the QAT trainer exports as `<layer>.g`; falling back to unit
+//! gradients when absent) → budgeted promotion (`quant::policy::plan`).
+//! The output head of a regression model can be pinned high — the
+//! UL-VIO configuration pins `fc2`.
 
-use crate::models::{Executor, ExecReport, ModelGraph};
+use crate::models::compile::{compile, CompiledModel};
+use crate::models::{ExecReport, Executor, ModelGraph};
 use crate::npe::PrecSel;
 use crate::quant::policy::{self, PlanBudget};
 use crate::quant::sensitivity::{analyze_layers, LayerSensitivity};
@@ -16,17 +21,21 @@ use crate::quant::PrecisionPlan;
 use crate::soc::Soc;
 use crate::util::io::TensorMap;
 use anyhow::Result;
+use std::sync::Arc;
 
-/// A servable model with its precision plan.
+/// A servable model: its precision plan plus the compiled program.
 pub struct ModelInstance {
     pub graph: ModelGraph,
     pub weights: TensorMap,
     pub plan: PrecisionPlan,
     pub sensitivities: Vec<LayerSensitivity>,
+    /// The program compiled from (graph, weights, plan) — shared across
+    /// replicas; each replica's warm state references these encodings.
+    pub compiled: Arc<CompiledModel>,
 }
 
 impl ModelInstance {
-    /// Build with the layer-adaptive MxP plan.
+    /// Build with the layer-adaptive MxP plan and compile.
     ///
     /// * `budget` — target average bits/weight.
     /// * `base4` — the 4-bit mode for robust layers (FP4 in the headline
@@ -39,37 +48,81 @@ impl ModelInstance {
         budget: PlanBudget,
         base4: PrecSel,
         pin_high_last: bool,
-    ) -> ModelInstance {
+    ) -> Result<ModelInstance> {
         let (ws, gs) = layer_tensors(&graph, &weights);
         let sens = analyze_layers(&ws, &gs);
         let params = graph.compute_layer_params();
         let pins: Vec<usize> =
             if pin_high_last && !params.is_empty() { vec![params.len() - 1] } else { vec![] };
         let plan = policy::plan(&sens, &params, budget, base4, &pins);
-        ModelInstance { graph, weights, plan, sensitivities: sens }
+        Self::build(graph, weights, plan, sens)
     }
 
-    /// Build with a uniform plan (precision sweeps).
-    pub fn uniform(graph: ModelGraph, weights: TensorMap, sel: PrecSel) -> ModelInstance {
+    /// Build with a uniform plan (precision sweeps) and compile.
+    pub fn uniform(graph: ModelGraph, weights: TensorMap, sel: PrecSel) -> Result<ModelInstance> {
         let params = graph.compute_layer_params();
+        let plan = PrecisionPlan::uniform(sel, &params);
+        Self::with_plan(graph, weights, plan)
+    }
+
+    /// Build from an explicit plan. Validates the plan against the graph
+    /// and the weight map against the layers (typed
+    /// [`crate::models::CompileError`]s — a mismatched plan is rejected
+    /// here, at registration time, instead of panicking mid-inference).
+    pub fn with_plan(
+        graph: ModelGraph,
+        weights: TensorMap,
+        plan: PrecisionPlan,
+    ) -> Result<ModelInstance> {
         let (ws, gs) = layer_tensors(&graph, &weights);
         let sens = analyze_layers(&ws, &gs);
-        ModelInstance { graph, weights, plan: PrecisionPlan::uniform(sel, &params), sensitivities: sens }
+        Self::build(graph, weights, plan, sens)
     }
 
-    /// Run one request on the co-processor.
+    fn build(
+        graph: ModelGraph,
+        weights: TensorMap,
+        plan: PrecisionPlan,
+        sensitivities: Vec<LayerSensitivity>,
+    ) -> Result<ModelInstance> {
+        let compiled = Arc::new(compile(&graph, &weights, &plan)?);
+        Ok(ModelInstance { graph, weights, plan, sensitivities, compiled })
+    }
+
+    /// Run one request on the co-processor by replaying the compiled
+    /// program (warming the SoC on first use).
     pub fn infer(
         &self,
         soc: &mut Soc,
         input: &[f32],
         aux: &[f32],
     ) -> Result<(Vec<f32>, ExecReport)> {
-        Executor::new(&self.graph, &self.weights).forward_npe(input, aux, soc, &self.plan)
+        self.compiled.replay(soc, input, aux)
+    }
+
+    /// Run one request through the per-request interpreted lowering —
+    /// the reference path the compiled program is differentially tested
+    /// against. Bit-identical to [`ModelInstance::infer`].
+    pub fn infer_interpret(
+        &self,
+        soc: &mut Soc,
+        input: &[f32],
+        aux: &[f32],
+    ) -> Result<(Vec<f32>, ExecReport)> {
+        Executor::new(&self.graph, &self.weights).forward_interpret(input, aux, soc, &self.plan)
     }
 
     /// f32 reference output (accuracy baselines).
     pub fn infer_ref(&self, input: &[f32], aux: &[f32]) -> Result<Vec<f32>> {
         Executor::new(&self.graph, &self.weights).forward_ref(input, aux)
+    }
+
+    /// Pre-warm this instance's compiled program on a SoC (resident
+    /// weights + pinned encodings + run arena). [`ModelInstance::infer`]
+    /// does this lazily; the router does it eagerly per replica.
+    pub fn warm(&self, soc: &mut Soc) -> Result<()> {
+        self.compiled.ensure_warm(soc)?;
+        Ok(())
     }
 
     /// Model size under the plan, bytes.
@@ -106,36 +159,9 @@ fn layer_tensors(graph: &ModelGraph, weights: &TensorMap) -> (Vec<Vec<f32>>, Vec
 mod tests {
     use super::*;
     use crate::models::effnet;
+    use crate::models::random_weights;
     use crate::soc::SocConfig;
     use crate::util::io::Tensor;
-    use crate::util::Rng;
-
-    pub fn random_weights(graph: &ModelGraph, seed: u64) -> TensorMap {
-        let mut rng = Rng::new(seed);
-        let mut m = TensorMap::new();
-        for layer in &graph.layers {
-            match &layer.kind {
-                crate::models::LayerKind::Conv2d { in_c, out_c, k, .. } => {
-                    let n = in_c * out_c * k * k;
-                    let mut w = vec![0f32; n];
-                    rng.fill_normal(&mut w, (2.0 / (in_c * k * k) as f64).sqrt());
-                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*k, *k, *in_c, *out_c], w));
-                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_c], vec![0.0; *out_c]));
-                }
-                crate::models::LayerKind::Fc { in_f, out_f } => {
-                    let mut w = vec![0f32; in_f * out_f];
-                    rng.fill_normal(&mut w, (2.0 / *in_f as f64).sqrt());
-                    m.insert(format!("{}.w", layer.name), Tensor::new(vec![*in_f, *out_f], w));
-                    m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_f], vec![0.0; *out_f]));
-                }
-                crate::models::LayerKind::Act(crate::models::ActKind::Pact) => {
-                    m.insert(format!("{}.alpha", layer.name), Tensor::new(vec![1], vec![4.0]));
-                }
-                _ => {}
-            }
-        }
-        m
-    }
 
     #[test]
     fn planned_instance_respects_budget_and_pin() {
@@ -147,7 +173,8 @@ mod tests {
             PlanBudget { avg_bits: 6.0 },
             PrecSel::Fp4x4,
             true,
-        );
+        )
+        .unwrap();
         assert!(inst.plan.avg_bits() <= 6.0 + 1e-9);
         assert_eq!(*inst.plan.per_layer.last().unwrap(), PrecSel::Posit16x1);
     }
@@ -156,13 +183,46 @@ mod tests {
     fn inference_runs_end_to_end() {
         let g = effnet::build();
         let w = random_weights(&g, 2);
-        let inst = ModelInstance::uniform(g, w, PrecSel::Posit8x2);
+        let inst = ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap();
         let mut soc = Soc::new(SocConfig::default());
         let input = vec![0.3f32; 256];
         let (out, rep) = inst.infer(&mut soc, &input, &[]).unwrap();
         assert_eq!(out.len(), 10);
         assert!(rep.jobs.total_cycles > 0);
         assert_eq!(rep.per_layer_cycles.len(), 5);
+    }
+
+    #[test]
+    fn compiled_infer_matches_interpreted_infer() {
+        let g = crate::models::ulvio::build();
+        let w = random_weights(&g, 7);
+        let inst = ModelInstance::planned(
+            g,
+            w,
+            PlanBudget { avg_bits: 6.0 },
+            PrecSel::Fp4x4,
+            true,
+        )
+        .unwrap();
+        let input: Vec<f32> = (0..inst.graph.input.numel())
+            .map(|i| ((i as f32) * 0.17).sin() * 0.4)
+            .collect();
+        let aux = vec![0.05f32; 6];
+        let mut soc_c = Soc::new(SocConfig::default());
+        let mut soc_i = Soc::new(SocConfig::default());
+        let (oc, rc) = inst.infer(&mut soc_c, &input, &aux).unwrap();
+        let (oi, ri) = inst.infer_interpret(&mut soc_i, &input, &aux).unwrap();
+        assert_eq!(oc, oi);
+        assert_eq!(rc, ri);
+    }
+
+    #[test]
+    fn mismatched_plan_is_rejected_at_registration() {
+        let g = crate::models::gaze::build();
+        let w = random_weights(&g, 8);
+        let bad = crate::quant::PrecisionPlan::uniform(PrecSel::Fp4x4, &[1]);
+        let err = ModelInstance::with_plan(g, w, bad).unwrap_err();
+        assert!(err.to_string().contains("precision plan"), "{err}");
     }
 
     #[test]
@@ -178,7 +238,8 @@ mod tests {
             PlanBudget { avg_bits: 4.6 },
             PrecSel::Fp4x4,
             false,
-        );
+        )
+        .unwrap();
         let bits: Vec<u32> =
             inst.plan.per_layer.iter().map(|s| s.precision().bits()).collect();
         assert!(bits[2] > 4, "fc3 (huge grad) should be promoted: {bits:?}");

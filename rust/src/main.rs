@@ -15,10 +15,9 @@ use anyhow::{bail, Result};
 use xr_npe::coordinator::scheduler::ModelInstance;
 use xr_npe::coordinator::{PerceptionPipeline, PipelineConfig, Router, WorkloadKind};
 use xr_npe::energy::{AsicModel, FpgaModel};
-use xr_npe::models::{effnet, gaze, ulvio, LayerKind};
+use xr_npe::models::{effnet, gaze, random_weights, ulvio};
 use xr_npe::npe::PrecSel;
 use xr_npe::soc::{Soc, SocConfig};
-use xr_npe::util::io::{Tensor, TensorMap};
 use xr_npe::util::{Matrix, Rng};
 use xr_npe::vio::kitti::{SequenceConfig, TrajectoryGenerator};
 
@@ -109,36 +108,7 @@ fn gemm(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Random He-init weights for CLI demos (the examples use the trained
-/// artifacts instead).
-fn random_weights(graph: &xr_npe::models::ModelGraph, seed: u64) -> TensorMap {
-    let mut rng = Rng::new(seed);
-    let mut m = TensorMap::new();
-    for layer in &graph.layers {
-        match &layer.kind {
-            LayerKind::Conv2d { in_c, out_c, k, .. } => {
-                let n = in_c * out_c * k * k;
-                let mut w = vec![0f32; n];
-                rng.fill_normal(&mut w, (2.0 / (in_c * k * k) as f64).sqrt());
-                m.insert(format!("{}.w", layer.name), Tensor::new(vec![*k, *k, *in_c, *out_c], w));
-                m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_c], vec![0.0; *out_c]));
-            }
-            LayerKind::Fc { in_f, out_f } => {
-                let mut w = vec![0f32; in_f * out_f];
-                rng.fill_normal(&mut w, (2.0 / *in_f as f64).sqrt());
-                m.insert(format!("{}.w", layer.name), Tensor::new(vec![*in_f, *out_f], w));
-                m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_f], vec![0.0; *out_f]));
-            }
-            LayerKind::Act(xr_npe::models::ActKind::Pact) => {
-                m.insert(format!("{}.alpha", layer.name), Tensor::new(vec![1], vec![4.0]));
-            }
-            _ => {}
-        }
-    }
-    m
-}
-
-fn build_router() -> Router {
+fn build_router() -> Result<Router> {
     let mut router = Router::new(1, SocConfig::default());
     for (kind, graph, sel) in [
         (WorkloadKind::Vio, ulvio::build(), PrecSel::Posit8x2),
@@ -146,9 +116,9 @@ fn build_router() -> Router {
         (WorkloadKind::Classify, effnet::build(), PrecSel::Fp4x4),
     ] {
         let w = random_weights(&graph, kind as u64 + 10);
-        router.register(kind, ModelInstance::uniform(graph, w, sel));
+        router.register(kind, ModelInstance::uniform(graph, w, sel)?)?;
     }
-    router
+    Ok(router)
 }
 
 fn pipeline(args: &[String]) -> Result<()> {
@@ -159,7 +129,7 @@ fn pipeline(args: &[String]) -> Result<()> {
         (0..frames).map(|i| vec![(i as f32 * 0.03).sin() * 0.5; 16]).collect();
 
     // calibrate host budgets to the Aspen 60% point, then run
-    let mut probe_router = build_router();
+    let mut probe_router = build_router()?;
     let probe = PerceptionPipeline::new(PipelineConfig {
         visual_cycles: 0,
         audio_cycles: 0,
@@ -169,7 +139,7 @@ fn pipeline(args: &[String]) -> Result<()> {
     let base = probe.run(&mut probe_router, &seq, &gaze_in)?;
     let per_frame = base.breakdown.perception_cycles() / frames as u64;
 
-    let mut router = build_router();
+    let mut router = build_router()?;
     let pipe = PerceptionPipeline::new(PipelineConfig::calibrated_to(per_frame));
     let rep = pipe.run(&mut router, &seq, &gaze_in)?;
 

@@ -1,7 +1,7 @@
 //! Forward execution of a [`ModelGraph`] — the f32 reference path and the
-//! bit-accurate NPE path.
+//! bit-accurate NPE paths.
 //!
-//! The NPE path lowers every compute layer to an im2col GEMM on the
+//! The NPE paths lower every compute layer to an im2col GEMM on the
 //! simulated co-processor ([`crate::soc::Soc`]) under a per-layer
 //! [`PrecisionPlan`]: weights *and* activations are quantized to the
 //! layer's `prec_sel` on entry (the engine's input stage), accumulation
@@ -13,11 +13,26 @@
 //! preloaded into the accumulation at full scale and the output is
 //! requantized once.
 //!
+//! There are two NPE backends with bit-identical results (values,
+//! cycles, engine stats — asserted by the differential tests in
+//! [`super::compile`]):
+//!
+//! * [`Backend::Npe`] **replays a compiled program**
+//!   ([`super::compile::CompiledModel`]): weights were scaled + encoded
+//!   once at compile time, im2col is a precomputed gather, activations
+//!   flow through a preallocated ping-pong arena. This is the serving
+//!   path.
+//! * [`Backend::NpeInterpret`] lowers the graph **per request** —
+//!   re-running im2col, weight scaling and operand materialization every
+//!   time. It is kept as the independent reference the compiled path is
+//!   differentially tested against.
+//!
 //! Weight layout (must match `python/compile/model.py`):
 //! * conv `<name>.w`: dims `[k, k, in_c, out_c]` (HWIO), `<name>.b`: `[out_c]`
 //! * fc `<name>.w`: dims `[in_f, out_f]`, `<name>.b`: `[out_f]`
 //! * pact `<name>.alpha`: `[1]`
 
+use super::compile::{CompileError, CompiledModel};
 use super::graph::{ActKind, LayerKind, ModelGraph, PoolKind, Shape};
 use crate::arith::{tables, Precision};
 use crate::quant::PrecisionPlan;
@@ -27,7 +42,7 @@ use crate::util::Matrix;
 use anyhow::{bail, Context, Result};
 
 /// Execution statistics for one forward pass (NPE path).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ExecReport {
     /// Merged co-processor job reports over all compute layers.
     pub jobs: JobReport,
@@ -53,8 +68,12 @@ impl ExecReport {
 pub enum Backend<'a> {
     /// Pure f32 reference.
     Ref,
-    /// Bit-accurate co-processor path under a plan.
-    Npe { soc: &'a mut Soc, plan: &'a PrecisionPlan },
+    /// Bit-accurate co-processor path replaying a compiled program
+    /// (weights encoded once per registration — the serving path).
+    Npe { soc: &'a mut Soc, model: &'a CompiledModel },
+    /// Bit-accurate co-processor path interpreted per request (reference
+    /// for differential testing of the compiled path).
+    NpeInterpret { soc: &'a mut Soc, plan: &'a PrecisionPlan },
 }
 
 /// The executor.
@@ -81,6 +100,39 @@ impl<'a> Executor<'a> {
         aux: &[f32],
         backend: &mut Backend,
     ) -> Result<(Vec<f32>, ExecReport)> {
+        match backend {
+            // The compiled backend replays its pre-lowered program; the
+            // graph walk below is the reference lowering.
+            // The replay uses the compiled model's own weights; the
+            // name check catches graph mix-ups, but pairing the model
+            // with the weights it was compiled from is the caller's
+            // responsibility (`ModelInstance` guarantees it).
+            Backend::Npe { soc, model } => {
+                if model.name != self.graph.name {
+                    bail!(
+                        "compiled model was built for graph `{}` but the executor holds `{}`",
+                        model.name,
+                        self.graph.name
+                    );
+                }
+                return model.replay(soc, input, aux);
+            }
+            // Validate the plan against the graph up front — a length
+            // mismatch is a registration bug and must surface as a typed
+            // error, not an index panic mid-inference.
+            Backend::NpeInterpret { plan, .. } => {
+                let compute = self.graph.compute_layers().len();
+                if plan.per_layer.len() != compute {
+                    return Err(CompileError::PlanLayerMismatch {
+                        model: self.graph.name.clone(),
+                        plan_layers: plan.per_layer.len(),
+                        compute_layers: compute,
+                    }
+                    .into());
+                }
+            }
+            Backend::Ref => {}
+        }
         let shapes = self.graph.shapes();
         if input.len() != shapes[0].numel() {
             bail!("input length {} != {}", input.len(), shapes[0].numel());
@@ -173,7 +225,7 @@ impl<'a> Executor<'a> {
                 let out = a.matmul(b).add_row(bias);
                 Ok(out)
             }
-            Backend::Npe { soc, plan } => {
+            Backend::NpeInterpret { soc, plan } => {
                 let sel = plan.per_layer[compute_idx];
                 let prec = sel.precision();
                 let out_prec = plan.layer_precision(compute_idx);
@@ -186,27 +238,17 @@ impl<'a> Executor<'a> {
                 let b_s = b.map(|x| (x as f64 / s_b) as f32);
                 // GEMM with quire-exact accumulate; output processing
                 // folds the combined scale back in (f32 carrier, single
-                // requant below). The scaled weight matrix is identical
-                // across requests (per-tensor scale depends only on the
-                // weights), so its packed encoding comes from the SoC's
-                // operand cache after the first inference.
+                // requant below). The compiled path precomputes the
+                // scaled weight matrix and its packed encoding instead
+                // of redoing this work per request.
                 let (raw, rep) = soc.gemm(&a_s, &b_s, sel, Precision::Fp32)?;
                 report.per_layer_cycles.push((layer_idx, rep.total_cycles));
                 report.jobs.merge(&rep);
-                // bias preload (quire-side add at full scale) + output
-                // requantization to the layer's format at its own scale
                 let mut out = Matrix::zeros(a.rows, b.cols);
-                for r in 0..a.rows {
-                    for c in 0..b.cols {
-                        out.set(r, c, ((raw.at(r, c) as f64) * s_a * s_b) as f32 + bias[c]);
-                    }
-                }
-                let s_out = scale_for(&out.data, out_prec);
-                let out = out.map(|x| {
-                    (s_out * tables::quantize(out_prec, x as f64 / s_out)) as f32
-                });
+                postprocess_gemm(&raw, s_a, s_b, bias, out_prec, &mut out);
                 Ok(out)
             }
+            Backend::Npe { .. } => unreachable!("compiled backend handled in forward()"),
         }
     }
 
@@ -215,15 +257,52 @@ impl<'a> Executor<'a> {
         Ok(self.forward(input, aux, &mut Backend::Ref)?.0)
     }
 
-    /// Convenience: NPE forward under a plan.
-    pub fn forward_npe(
+    /// Convenience: interpreted NPE forward under a plan (the reference
+    /// lowering the compiled path is differentially tested against).
+    pub fn forward_interpret(
         &self,
         input: &[f32],
         aux: &[f32],
         soc: &mut Soc,
         plan: &PrecisionPlan,
     ) -> Result<(Vec<f32>, ExecReport)> {
-        self.forward(input, aux, &mut Backend::Npe { soc, plan })
+        self.forward(input, aux, &mut Backend::NpeInterpret { soc, plan })
+    }
+
+    /// Convenience: NPE forward replaying a compiled program.
+    pub fn forward_compiled(
+        &self,
+        input: &[f32],
+        aux: &[f32],
+        soc: &mut Soc,
+        model: &CompiledModel,
+    ) -> Result<(Vec<f32>, ExecReport)> {
+        self.forward(input, aux, &mut Backend::Npe { soc, model })
+    }
+}
+
+/// Shared GEMM output processing: fold the operand scales back in, add
+/// the bias at full scale (quire-side preload), then requantize once to
+/// the layer's activation format at its own pow-2 scale. Both NPE
+/// backends call this with identical inputs, so the expression — and its
+/// f64 rounding — is shared rather than duplicated.
+pub(crate) fn postprocess_gemm(
+    raw: &Matrix,
+    s_a: f64,
+    s_b: f64,
+    bias: &[f32],
+    out_prec: Precision,
+    out: &mut Matrix,
+) {
+    debug_assert_eq!((out.rows, out.cols), (raw.rows, raw.cols));
+    for r in 0..raw.rows {
+        for c in 0..raw.cols {
+            out.set(r, c, ((raw.at(r, c) as f64) * s_a * s_b) as f32 + bias[c]);
+        }
+    }
+    let s_out = scale_for(&out.data, out_prec);
+    for v in out.data.iter_mut() {
+        *v = (s_out * tables::quantize(out_prec, *v as f64 / s_out)) as f32;
     }
 }
 
@@ -284,21 +363,29 @@ pub fn im2col(input: &[f32], s: Shape, k: usize, stride: usize, pad: usize) -> M
     m
 }
 
-/// (oh·ow)×out_c GEMM output → CHW.
-fn hwc_to_chw(out: &Matrix, s: Shape) -> Vec<f32> {
-    let mut v = vec![0.0f32; s.numel()];
+/// (oh·ow)×out_c GEMM output → CHW, into a preallocated slice (the
+/// compiled path's arena buffer).
+pub(crate) fn chw_into(out: &Matrix, s: Shape, v: &mut [f32]) {
+    debug_assert_eq!(v.len(), s.numel());
     for p in 0..s.h * s.w {
         for c in 0..s.c {
             v[c * s.h * s.w + p] = out.at(p, c);
         }
     }
+}
+
+/// (oh·ow)×out_c GEMM output → CHW.
+fn hwc_to_chw(out: &Matrix, s: Shape) -> Vec<f32> {
+    let mut v = vec![0.0f32; s.numel()];
+    chw_into(out, s, &mut v);
     v
 }
 
-fn pool(input: &[f32], s: Shape, kind: PoolKind, size: usize) -> Vec<f32> {
+/// Spatial pooling into a preallocated slice (compiled-path arena).
+pub(crate) fn pool_into(input: &[f32], s: Shape, kind: PoolKind, size: usize, out: &mut [f32]) {
     let oh = s.h / size;
     let ow = s.w / size;
-    let mut out = vec![0.0f32; s.c * oh * ow];
+    debug_assert_eq!(out.len(), s.c * oh * ow);
     for c in 0..s.c {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -322,10 +409,15 @@ fn pool(input: &[f32], s: Shape, kind: PoolKind, size: usize) -> Vec<f32> {
             }
         }
     }
+}
+
+fn pool(input: &[f32], s: Shape, kind: PoolKind, size: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; s.c * (s.h / size) * (s.w / size)];
+    pool_into(input, s, kind, size, &mut out);
     out
 }
 
-fn activate(x: f64, kind: ActKind, alpha: f64) -> f64 {
+pub(crate) fn activate(x: f64, kind: ActKind, alpha: f64) -> f64 {
     match kind {
         ActKind::Relu => x.max(0.0),
         // eqs. (6)+(7): clip AND quantize to the 8-bit PACT grid —
@@ -443,7 +535,7 @@ mod tests {
         let ref_out = ex.forward_ref(&input, &[]).unwrap();
         let mut soc = Soc::new(SocConfig::default());
         let plan = PrecisionPlan::uniform(PrecSel::Posit16x1, &g.compute_layer_params());
-        let (npe_out, rep) = ex.forward_npe(&input, &[], &mut soc, &plan).unwrap();
+        let (npe_out, rep) = ex.forward_interpret(&input, &[], &mut soc, &plan).unwrap();
         for (a, b) in ref_out.iter().zip(&npe_out) {
             assert!((a - b).abs() < 2e-2, "ref {a} npe {b}");
         }
@@ -461,7 +553,7 @@ mod tests {
         let ref_out = ex.forward_ref(&input, &[]).unwrap();
         let mut soc = Soc::new(SocConfig::default());
         let plan = PrecisionPlan::uniform(PrecSel::Fp4x4, &g.compute_layer_params());
-        let (out4, _) = ex.forward_npe(&input, &[], &mut soc, &plan).unwrap();
+        let (out4, _) = ex.forward_interpret(&input, &[], &mut soc, &plan).unwrap();
         // correlated but not equal
         let err = crate::util::rmse(&ref_out, &out4);
         assert!(err > 0.0, "fp4 must differ from fp32");
@@ -477,11 +569,11 @@ mod tests {
         let input: Vec<f32> = (0..72).map(|i| ((i as f32) * 0.11).sin()).collect();
         let mut soc = Soc::new(SocConfig::default());
         let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
-        let (out1, _) = ex.forward_npe(&input, &[], &mut soc, &plan).unwrap();
+        let (out1, _) = ex.forward_interpret(&input, &[], &mut soc, &plan).unwrap();
         let misses_after_first = soc.enc_cache.misses;
         assert_eq!(soc.enc_cache.hits, 0);
         assert!(misses_after_first > 0);
-        let (out2, _) = ex.forward_npe(&input, &[], &mut soc, &plan).unwrap();
+        let (out2, _) = ex.forward_interpret(&input, &[], &mut soc, &plan).unwrap();
         assert_eq!(out1, out2);
         // the second pass re-encodes nothing: every operand (im2col
         // activations and scaled weights) hits the encoding cache
@@ -506,8 +598,22 @@ mod tests {
         let want = ex.forward_ref(&input, &[]).unwrap();
         let mut soc = Soc::new(SocConfig::default());
         let plan = PrecisionPlan::uniform(PrecSel::Posit16x1, &g.compute_layer_params());
-        let (got, _) = ex.forward_npe(&input, &[], &mut soc, &plan).unwrap();
+        let (got, _) = ex.forward_interpret(&input, &[], &mut soc, &plan).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn plan_length_mismatch_is_typed_error_not_panic() {
+        let g = toy_graph(); // 2 compute layers
+        let mut rng = Rng::new(13);
+        let w = toy_weights(&g, &mut rng);
+        let ex = Executor::new(&g, &w);
+        let mut soc = Soc::new(SocConfig::default());
+        let bad = PrecisionPlan::uniform(PrecSel::Posit8x2, &[10]); // 1 layer
+        let err = ex.forward_interpret(&vec![0.1; 72], &[], &mut soc, &bad).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("precision plan"), "unexpected error: {msg}");
+        assert!(msg.contains('1') && msg.contains('2'), "unexpected error: {msg}");
     }
 
     #[test]

@@ -4,14 +4,20 @@
 //!
 //! * [`graph`] — the IR: conv / depthwise / fc / pool / activation /
 //!   concat, with shape, parameter and MAC accounting.
-//! * [`exec`] — forward execution: f32 reference path and the NPE path
-//!   (im2col → `soc::Soc::gemm` per layer under a
-//!   [`crate::quant::PrecisionPlan`], activations quantized per layer).
+//! * [`compile`] — the lowering pass: graph + weights + plan →
+//!   [`compile::CompiledModel`] (weights scaled/encoded once, im2col as
+//!   a precomputed gather, ping-pong activation arena) — the serving
+//!   path replays this program per request.
+//! * [`exec`] — forward execution: f32 reference path, compiled replay
+//!   ([`exec::Backend::Npe`]) and the per-request interpreted lowering
+//!   kept as the differential-testing reference
+//!   ([`exec::Backend::NpeInterpret`]).
 //! * [`effnet`] / [`gaze`] / [`ulvio`] — the EfficientNet-style
 //!   classifier, the eye-gaze regressor and the UL-VIO-lite odometry
 //!   net. Weight layouts match `python/compile/model.py` exactly
 //!   (documented per builder).
 
+pub mod compile;
 pub mod effnet;
 pub mod exec;
 pub mod gaze;
@@ -19,5 +25,38 @@ pub mod graph;
 pub mod mlp;
 pub mod ulvio;
 
-pub use exec::{ExecReport, Executor};
+pub use compile::{compile, CompileError, CompiledModel, GatherMap};
+pub use exec::{Backend, ExecReport, Executor};
 pub use graph::{ActKind, Layer, LayerKind, ModelGraph, PoolKind};
+
+/// He-initialized random weight map for a graph (bias zero, PACT α = 4)
+/// — the one init shared by CLI demos, benches and tests that exercise
+/// the stack without trained artifacts. Kept in the library so a new
+/// `LayerKind` has exactly one place to grow a weight layout.
+pub fn random_weights(graph: &ModelGraph, seed: u64) -> crate::util::io::TensorMap {
+    use crate::util::io::Tensor;
+    let mut rng = crate::util::Rng::new(seed);
+    let mut m = crate::util::io::TensorMap::new();
+    for layer in &graph.layers {
+        match &layer.kind {
+            LayerKind::Conv2d { in_c, out_c, k, .. } => {
+                let n = in_c * out_c * k * k;
+                let mut w = vec![0f32; n];
+                rng.fill_normal(&mut w, (2.0 / (in_c * k * k) as f64).sqrt());
+                m.insert(format!("{}.w", layer.name), Tensor::new(vec![*k, *k, *in_c, *out_c], w));
+                m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_c], vec![0.0; *out_c]));
+            }
+            LayerKind::Fc { in_f, out_f } => {
+                let mut w = vec![0f32; in_f * out_f];
+                rng.fill_normal(&mut w, (2.0 / *in_f as f64).sqrt());
+                m.insert(format!("{}.w", layer.name), Tensor::new(vec![*in_f, *out_f], w));
+                m.insert(format!("{}.b", layer.name), Tensor::new(vec![*out_f], vec![0.0; *out_f]));
+            }
+            LayerKind::Act(ActKind::Pact) => {
+                m.insert(format!("{}.alpha", layer.name), Tensor::new(vec![1], vec![4.0]));
+            }
+            _ => {}
+        }
+    }
+    m
+}

@@ -65,7 +65,7 @@ pub struct GemmJob {
 }
 
 /// Completion record.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct JobReport {
     pub total_cycles: u64,
     pub compute_cycles: u64,

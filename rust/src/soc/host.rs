@@ -18,7 +18,8 @@ use super::memory::Scratchpad;
 use crate::array::{ArrayMorph, MatrixArray, OperandCache};
 use crate::npe::PrecSel;
 use crate::util::Matrix;
-use std::collections::VecDeque;
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
 
 /// Host → co-processor commands.
 #[derive(Debug, Clone, Copy)]
@@ -81,6 +82,15 @@ pub struct Soc {
     next_seq: u64,
     /// Running total over all completed jobs.
     pub lifetime: JobReport,
+    /// Bump watermark of the resident-image region at the bottom of
+    /// DRAM: compiled-model weights live below it, per-request scratch
+    /// above it. Zero until a model is warmed, so ad-hoc [`Soc::gemm`]
+    /// callers see the historical address layout.
+    resident_top: u64,
+    /// Opaque per-compiled-model warm state (run arenas, resident
+    /// addresses) keyed by the model's uid. Owned by the hardware handle
+    /// — like device memory, the warm state travels with the replica.
+    model_state: HashMap<u64, Box<dyn Any + Send>>,
 }
 
 impl Soc {
@@ -98,7 +108,58 @@ impl Soc {
             queue: VecDeque::new(),
             next_seq: 0,
             lifetime: JobReport::default(),
+            resident_top: 0,
+            model_state: HashMap::new(),
         }
+    }
+
+    /// Reserve `bytes` of DRAM for a resident image (compiled-model
+    /// weights, per-model request scratch). Returns the 64-byte-aligned
+    /// base address. The top quarter of DRAM is kept free for the
+    /// control FSM's packed-operand staging and write-back regions.
+    pub fn alloc_resident(&mut self, bytes: usize) -> Result<u64, SocError> {
+        let addr = self.resident_top.next_multiple_of(64);
+        let end = addr + bytes as u64;
+        let limit = (self.ext.capacity() - self.ext.capacity() / 4) as u64;
+        if end > limit {
+            return Err(SocError::OperandsExceedDram {
+                required: end as usize,
+                capacity: limit as usize,
+            });
+        }
+        self.resident_top = end;
+        Ok(addr)
+    }
+
+    /// Current resident-region watermark. Take a mark before a
+    /// multi-step resident allocation so a failure can roll it back with
+    /// [`Soc::resident_rollback`].
+    pub fn resident_mark(&self) -> u64 {
+        self.resident_top
+    }
+
+    /// Roll the resident watermark back to `mark`. Only sound for the
+    /// caller that performed *every* allocation since the mark (it held
+    /// `&mut Soc` throughout, so nothing else can have allocated).
+    pub fn resident_rollback(&mut self, mark: u64) {
+        debug_assert!(mark <= self.resident_top);
+        self.resident_top = mark;
+    }
+
+    /// Is warm state registered for compiled model `uid`?
+    pub fn has_model_state(&self, uid: u64) -> bool {
+        self.model_state.contains_key(&uid)
+    }
+
+    /// Take ownership of the warm state for `uid` (put it back with
+    /// [`Soc::put_model_state`] when the request completes).
+    pub fn take_model_state(&mut self, uid: u64) -> Option<Box<dyn Any + Send>> {
+        self.model_state.remove(&uid)
+    }
+
+    /// Store warm state for `uid`.
+    pub fn put_model_state(&mut self, uid: u64, state: Box<dyn Any + Send>) {
+        self.model_state.insert(uid, state);
     }
 
     /// Enqueue a command; returns its sequence number.
@@ -160,8 +221,11 @@ impl Soc {
             return Err(SocError::ShapeMismatch { a_cols: a.cols, b_rows: b.rows });
         }
         let (m, k, n) = (a.rows, a.cols, b.cols);
-        let a_addr = 0u64;
-        let b_addr = (m * k * 4).next_multiple_of(64) as u64;
+        // Scratch sits above any resident compiled-model images so an
+        // ad-hoc GEMM never clobbers registered weights. With nothing
+        // resident this is the historical layout starting at 0.
+        let a_addr = self.resident_top.next_multiple_of(64);
+        let b_addr = a_addr + (m * k * 4).next_multiple_of(64) as u64;
         let c_addr = b_addr + ((k * n * 4).next_multiple_of(64) as u64);
         let required = (c_addr as usize) + m * n * 4 + (a.data.len() + b.data.len()) * 2;
         if required >= self.ext.capacity() {
@@ -177,6 +241,55 @@ impl Soc {
         let mut comps = self.process_all()?;
         let rep = comps.pop().unwrap().report.unwrap();
         let c = Matrix::from_vec(m, n, self.ext.read_f32(c_addr, m * n)?);
+        Ok((c, rep))
+    }
+
+    /// Run one GEMM whose **B operand is already resident** in DRAM at
+    /// `b_addr` (a compiled model's weight image): only the activation
+    /// operand moves per request. `a_addr`/`c_addr` are the caller's
+    /// stable per-model scratch addresses. The control-FSM flow — and
+    /// therefore every cycle/byte/engine statistic — is identical to
+    /// [`Soc::gemm`] for equal operand shapes; residency removes only
+    /// the host-side weight upload.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_resident(
+        &mut self,
+        a: &Matrix,
+        k: usize,
+        n: usize,
+        b_addr: u64,
+        a_addr: u64,
+        c_addr: u64,
+        sel: PrecSel,
+        out_prec: crate::arith::Precision,
+    ) -> Result<(Matrix, JobReport), SocError> {
+        if a.cols != k {
+            return Err(SocError::ShapeMismatch { a_cols: a.cols, b_rows: k });
+        }
+        // The FSM stages packed operands (and models packed write-back)
+        // at the top of DRAM; reject jobs whose staging would reach down
+        // into the resident-image region — otherwise a huge layer could
+        // silently overwrite registered weights.
+        let staging = super::control::packed_bytes(a.rows, k, sel)
+            + super::control::packed_bytes(n, k, sel)
+            + super::control::packed_bytes(
+                a.rows,
+                n,
+                PrecSel::for_precision(out_prec).unwrap_or(sel),
+            );
+        let required = self.resident_top as usize + staging;
+        if required >= self.ext.capacity() {
+            return Err(SocError::OperandsExceedDram {
+                required,
+                capacity: self.ext.capacity(),
+            });
+        }
+        self.ext.write_f32(a_addr, &a.data)?;
+        let job = GemmJob { m: a.rows, k, n, sel, out_prec, a_addr, b_addr, c_addr };
+        self.submit(Command::Gemm(job));
+        let mut comps = self.process_all()?;
+        let rep = comps.pop().unwrap().report.unwrap();
+        let c = Matrix::from_vec(a.rows, n, self.ext.read_f32(c_addr, a.rows * n)?);
         Ok((c, rep))
     }
 
@@ -246,6 +359,57 @@ mod tests {
         soc.gemm(&a, &b, PrecSel::Posit16x1, Precision::Posit16).unwrap();
         assert_eq!(soc.lifetime.array.macs, 2 * 8 * 16 * 8);
         assert!(soc.lifetime.total_cycles > 0);
+    }
+
+    #[test]
+    fn resident_gemm_matches_adhoc_gemm_exactly() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::random(9, 14, 1.0, &mut rng);
+        let b = Matrix::random(14, 6, 1.0, &mut rng);
+        let mut plain = Soc::new(SocConfig::default());
+        let (c0, r0) = plain.gemm(&a, &b, PrecSel::Posit8x2, Precision::Fp32).unwrap();
+        let mut res = Soc::new(SocConfig::default());
+        let b_addr = res.alloc_resident(b.data.len() * 4).unwrap();
+        res.ext.write_f32(b_addr, &b.data).unwrap();
+        let a_addr = res.alloc_resident(a.data.len() * 4).unwrap();
+        let c_addr = res.alloc_resident(9 * 6 * 4).unwrap();
+        let (c1, r1) = res
+            .gemm_resident(&a, 14, 6, b_addr, a_addr, c_addr, PrecSel::Posit8x2, Precision::Fp32)
+            .unwrap();
+        assert_eq!(c0.data, c1.data);
+        assert_eq!(r0, r1, "resident-B GEMM must be cycle/stat-identical");
+    }
+
+    #[test]
+    fn adhoc_gemm_scratch_avoids_resident_region() {
+        let mut soc = Soc::new(SocConfig::default());
+        let base = soc.alloc_resident(1000).unwrap();
+        soc.ext.write_f32(base, &[7.0; 250]).unwrap();
+        let mut rng = Rng::new(22);
+        let a = Matrix::random(8, 8, 1.0, &mut rng);
+        let b = Matrix::random(8, 8, 1.0, &mut rng);
+        soc.gemm(&a, &b, PrecSel::Posit16x1, Precision::Fp32).unwrap();
+        // resident image untouched by the ad-hoc GEMM's operand uploads
+        assert_eq!(soc.ext.read_f32(base, 250).unwrap(), vec![7.0; 250]);
+    }
+
+    #[test]
+    fn resident_alloc_keeps_staging_headroom() {
+        let mut soc = Soc::new(SocConfig::default());
+        let cap = soc.ext.capacity();
+        assert!(soc.alloc_resident(cap).is_err(), "must leave FSM staging room");
+        soc.alloc_resident(cap / 2).unwrap();
+    }
+
+    #[test]
+    fn model_state_round_trips() {
+        let mut soc = Soc::new(SocConfig::default());
+        assert!(!soc.has_model_state(3));
+        soc.put_model_state(3, Box::new(vec![1u8, 2, 3]));
+        assert!(soc.has_model_state(3));
+        let st = soc.take_model_state(3).unwrap().downcast::<Vec<u8>>().unwrap();
+        assert_eq!(*st, vec![1, 2, 3]);
+        assert!(!soc.has_model_state(3));
     }
 
     #[test]

@@ -45,7 +45,8 @@ fn fp32_rust_executor_matches_jax_hlo_gaze() {
         gaze::build(),
         artifacts::weights("gaze").unwrap(),
         PrecSel::Posit16x1,
-    );
+    )
+    .unwrap();
     let eval = artifacts::eval_gaze().unwrap();
     for i in 0..10 {
         let x = &eval.landmarks[i];
@@ -71,7 +72,8 @@ fn fp32_rust_executor_matches_jax_hlo_effnet() {
         effnet::build(),
         artifacts::weights("effnet").unwrap(),
         PrecSel::Posit16x1,
-    );
+    )
+    .unwrap();
     let eval = artifacts::eval_shapes().unwrap();
     for i in 0..5 {
         let x = &eval.images[i];
@@ -92,7 +94,8 @@ fn fp32_rust_executor_matches_jax_hlo_ulvio() {
         ulvio::build(),
         artifacts::weights("ulvio").unwrap(),
         PrecSel::Posit16x1,
-    );
+    )
+    .unwrap();
     let eval = artifacts::eval_vio().unwrap();
     for i in 0..5 {
         let (img, imu) = (&eval.images[i], &eval.imu[i]);
@@ -123,7 +126,8 @@ fn mxp_npe_close_to_jax_mxp_gaze() {
         xr_npe::quant::PlanBudget { avg_bits: 6.0 },
         PrecSel::Fp4x4,
         false,
-    );
+    )
+    .unwrap();
     let mut soc = Soc::new(SocConfig::default());
     let eval = artifacts::eval_gaze().unwrap();
     let mut worst = 0f32;
@@ -166,7 +170,7 @@ fn qat_weights_improve_low_precision_accuracy() {
     let n = 100.min(eval.images.len());
     let mut soc = Soc::new(SocConfig::default());
     let run = |w, soc: &mut Soc| {
-        let inst = ModelInstance::uniform(effnet::build(), w, PrecSel::Fp4x4);
+        let inst = ModelInstance::uniform(effnet::build(), w, PrecSel::Fp4x4).unwrap();
         let mut ok = 0;
         for i in 0..n {
             let (out, _) = inst.infer(soc, &eval.images[i], &[]).unwrap();
