@@ -150,10 +150,10 @@ fn main() -> Result<()> {
     let sel = PrecSel::Posit8x2; // representative mode of the mix
     println!("\n-- Table IV: co-processor metrics (measured workload) --");
     println!("  total MACs       {:>12}", life.array.macs);
-    println!("  achieved TOPS    {:>12.4}", sys.job_tops(life));
-    println!("  TOPS/W           {:>12.2}", sys.job_tops_per_w(sel, life));
-    println!("  TOPS/mm^2        {:>12.2}", sys.job_tops_per_mm2(life));
-    let e = sys.job_energy(sel, life);
+    println!("  achieved TOPS    {:>12.4}", sys.job_tops(&life));
+    println!("  TOPS/W           {:>12.2}", sys.job_tops_per_w(sel, &life));
+    println!("  TOPS/mm^2        {:>12.2}", sys.job_tops_per_mm2(&life));
+    let e = sys.job_energy(sel, &life);
     println!("  energy breakdown : compute {:.1}% | SRAM {:.1}% | off-chip {:.1}%",
         100.0 * e.compute_j / e.total_j(),
         100.0 * e.sram_j / e.total_j(),

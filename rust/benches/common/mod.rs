@@ -17,6 +17,14 @@ use xr_npe::vio::odometry::{self, RelPose};
 /// there is exactly one weight-layout builder to maintain).
 pub use xr_npe::models::random_weights;
 
+/// Bench smoke mode (`XR_NPE_BENCH_QUICK=1`, used by the CI smoke
+/// step): tiny iteration counts and no wall-clock comparative asserts —
+/// the run proves the bench executes end to end and still emits its
+/// `BENCH_*.json` trajectory artifacts.
+pub fn quick() -> bool {
+    std::env::var("XR_NPE_BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
 /// Measure wall time of `f` over `iters` runs; returns ns/iter.
 pub fn time_ns(iters: u32, mut f: impl FnMut()) -> f64 {
     // warmup

@@ -11,7 +11,13 @@ use xr_npe::npe::{Engine, PrecSel};
 use xr_npe::util::{Matrix, Rng};
 
 fn main() {
-    println!("== hot-path micro-benchmarks (host wall time) ==\n");
+    // XR_NPE_BENCH_QUICK=1 → CI smoke: tiny iteration counts, no
+    // wall-clock comparative asserts (bit-identity asserts always run)
+    let quick = common::quick();
+    let it = |n: u32| if quick { 1 } else { n };
+    let mut bench_json: Vec<String> = Vec::new();
+    println!("== hot-path micro-benchmarks (host wall time{}) ==\n",
+        if quick { ", QUICK smoke mode" } else { "" });
 
     // 1. engine word-MAC throughput per mode
     println!("-- engine mac_word_fused --");
@@ -19,7 +25,7 @@ fn main() {
     let words: Vec<u16> = (0..4096).map(|_| rng.next_u64() as u16).collect();
     for sel in PrecSel::ALL {
         let mut eng = Engine::new(sel);
-        let ns = common::time_ns(200, || {
+        let ns = common::time_ns(it(200), || {
             for i in 0..4096 {
                 eng.mac_word_fused(words[i], words[(i * 13 + 7) & 4095]);
             }
@@ -38,7 +44,7 @@ fn main() {
     for p in [Precision::Fp4, Precision::Posit8, Precision::Posit16, Precision::Bf16] {
         let t = tables::table(p);
         let mut acc = 0f64;
-        let ns = common::time_ns(2000, || {
+        let ns = common::time_ns(it(2000), || {
             for &x in &xs {
                 acc += t.quantize(x as f64);
             }
@@ -51,7 +57,7 @@ fn main() {
     println!("\n-- codec encode (1024 f32) --");
     for p in [Precision::Fp4, Precision::Posit8, Precision::Posit16] {
         let mut acc = 0u32;
-        let ns = common::time_ns(1000, || {
+        let ns = common::time_ns(it(1000), || {
             for &x in &xs {
                 acc = acc.wrapping_add(p.encode(x as f64));
             }
@@ -67,7 +73,7 @@ fn main() {
     for sel in PrecSel::ALL {
         let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
         let mut cycles = 0u64;
-        let ns = common::time_ns(10, || {
+        let ns = common::time_ns(it(10), || {
             let (_, rep) = arr.gemm(&a, &b, sel.precision());
             cycles = rep.cycles;
         });
@@ -90,10 +96,10 @@ fn main() {
     let big_b = Matrix::random(256, 256, 0.5, &mut rng);
     for sel in PrecSel::ALL {
         let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
-        let ns_serial = common::time_ns(3, || {
+        let ns_serial = common::time_ns(it(3), || {
             std::hint::black_box(arr.gemm_serial(&big_a, &big_b, sel.precision()));
         });
-        let ns_par = common::time_ns(3, || {
+        let ns_par = common::time_ns(it(3), || {
             std::hint::black_box(arr.gemm_parallel(&big_a, &big_b, sel.precision()));
         });
         let (cs, rs) = arr.gemm_serial(&big_a, &big_b, sel.precision());
@@ -137,11 +143,12 @@ fn main() {
         // best-of-5 timings: the min is robust to scheduler noise, and
         // the compiled path strictly does less work per request, so the
         // comparison below is meaningful even on a loaded host
+        let reps = if quick { 1 } else { 5 };
         let mut soc_i = Soc::new(SocConfig::default());
         let mut cycles_i = 0u64;
-        let ns_interp = (0..5)
+        let ns_interp = (0..reps)
             .map(|_| {
-                common::time_ns(2, || {
+                common::time_ns(it(2), || {
                     cycles_i = 0;
                     for x in &inputs {
                         let (_, rep) = inst.infer_interpret(&mut soc_i, x, &[]).unwrap();
@@ -154,9 +161,9 @@ fn main() {
         let mut soc_c = Soc::new(SocConfig::default());
         inst.warm(&mut soc_c).unwrap(); // registration-time work, off the request path
         let mut cycles_c = 0u64;
-        let ns_comp = (0..5)
+        let ns_comp = (0..reps)
             .map(|_| {
-                common::time_ns(2, || {
+                common::time_ns(it(2), || {
                     cycles_c = 0;
                     for x in &inputs {
                         let (_, rep) = inst.infer(&mut soc_c, x, &[]).unwrap();
@@ -184,22 +191,130 @@ fn main() {
             cycles_c / REQS as u64
         );
         assert!(
-            speedup > 1.0,
+            quick || speedup > 1.0,
             "compiled repeated inference must be strictly faster than interpreted \
              (interpreted {per_req_i:.0} ns/req vs compiled {per_req_c:.0} ns/req)"
         );
-        let json = format!(
+        bench_json.push(format!(
             "{{\"bench\":\"hotpath\",\"section\":\"compiled_vs_interpreted\",\"model\":\"gaze\",\
              \"requests\":{REQS},\"interpreted_ns_per_req\":{per_req_i:.1},\
              \"compiled_ns_per_req\":{per_req_c:.1},\"speedup\":{speedup:.3},\
-             \"sim_cycles_per_req\":{}}}\n",
+             \"sim_cycles_per_req\":{}}}",
             cycles_c / REQS as u64
-        );
-        if let Err(e) = std::fs::write("BENCH_hotpath.json", &json) {
-            eprintln!("  (could not write BENCH_hotpath.json: {e})");
-        } else {
-            println!("  wrote BENCH_hotpath.json");
+        ));
+    }
+
+    // 4d. serving runtime: the PR-2 synchronous scoped-thread fan-out
+    // (barrier per batch, thread spawns per batch) vs the PR-3 async
+    // runtime (long-lived per-replica workers, submit_batch returns
+    // completion handles, consecutive batches pipeline on the queues).
+    // Outputs and cycle reports are bit-identical; wall-clock throughput
+    // is where the runtime pays off.
+    println!("\n-- serving runtime: sync route_batch_fanout vs async submit_batch --");
+    {
+        use xr_npe::coordinator::batcher::{Batch, Request};
+        use xr_npe::coordinator::{ModelInstance, Router, WorkloadKind};
+        use xr_npe::soc::SocConfig;
+
+        const REPLICAS: usize = 4;
+        const BATCH: usize = 8;
+        let n_batches: usize = if quick { 4 } else { 16 };
+        let mk_router = || {
+            let mut r = Router::new(REPLICAS, SocConfig::default());
+            let g = xr_npe::models::gaze::build();
+            let w = common::random_weights(&g, 17);
+            r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+                .unwrap();
+            r
+        };
+        let batches: Vec<Batch> = (0..n_batches)
+            .map(|b| Batch {
+                requests: (0..BATCH)
+                    .map(|i| Request {
+                        id: (b * BATCH + i) as u64,
+                        input: (0..16)
+                            .map(|j| (((b * BATCH + i) * 16 + j) as f32 * 0.07).sin() * 0.5)
+                            .collect(),
+                        aux: vec![],
+                        arrived: 0,
+                    })
+                    .collect(),
+                released: 0,
+            })
+            .collect();
+        let mut r_sync = mk_router();
+        let mut r_async = mk_router();
+        // warm pass: every replica warms on demand (default floor is 1)
+        // so the timed loops measure steady-state serving
+        for r in [&mut r_sync, &mut r_async] {
+            for b in &batches {
+                r.route_batch(WorkloadKind::Gaze, b).unwrap();
+            }
         }
+        let reps = if quick { 1 } else { 5 };
+        let ns_sync = (0..reps)
+            .map(|_| {
+                common::time_ns(1, || {
+                    for b in &batches {
+                        std::hint::black_box(
+                            r_sync.route_batch_fanout(WorkloadKind::Gaze, b).unwrap(),
+                        );
+                    }
+                })
+            })
+            .fold(f64::MAX, f64::min);
+        let ns_async = (0..reps)
+            .map(|_| {
+                common::time_ns(1, || {
+                    let handles: Vec<_> = batches
+                        .iter()
+                        .map(|b| r_async.submit_batch(WorkloadKind::Gaze, b).unwrap())
+                        .collect();
+                    for comps in handles {
+                        for c in comps {
+                            std::hint::black_box(Router::resolve(c).unwrap());
+                        }
+                    }
+                })
+            })
+            .fold(f64::MAX, f64::min);
+        // bit-identity across the two paths (same inputs, same weights)
+        let want = r_sync.route_batch_fanout(WorkloadKind::Gaze, &batches[0]).unwrap();
+        let got = r_async.route_batch(WorkloadKind::Gaze, &batches[0]).unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.output, g.output, "async serving diverged from sync fan-out");
+            assert_eq!(w.report, g.report, "async cycle reports diverged from sync fan-out");
+        }
+        let reqs = (n_batches * BATCH) as f64;
+        let tput_sync = reqs / (ns_sync / 1e9);
+        let tput_async = reqs / (ns_async / 1e9);
+        println!(
+            "  sync fan-out  {:>9.0} req/s   async runtime {:>9.0} req/s   speedup {:>5.2}x   ({} batches x {BATCH} reqs, {REPLICAS} replicas, bit-identical)",
+            tput_sync,
+            tput_async,
+            tput_async / tput_sync,
+            n_batches
+        );
+        assert!(
+            quick || tput_async >= tput_sync,
+            "async submit_batch throughput ({tput_async:.0} req/s) must be >= the synchronous \
+             fan-out ({tput_sync:.0} req/s)"
+        );
+        bench_json.push(format!(
+            "{{\"bench\":\"hotpath\",\"section\":\"async_vs_sync_serving\",\"model\":\"gaze\",\
+             \"replicas\":{REPLICAS},\"batches\":{n_batches},\"batch_size\":{BATCH},\
+             \"sync_req_per_s\":{tput_sync:.1},\"async_req_per_s\":{tput_async:.1},\
+             \"speedup\":{:.3}}}",
+            tput_async / tput_sync
+        ));
+    }
+
+    // trajectory artifacts: one JSON object per line (JSONL)
+    let json = bench_json.join("\n") + "\n";
+    if let Err(e) = std::fs::write("BENCH_hotpath.json", &json) {
+        eprintln!("  (could not write BENCH_hotpath.json: {e})");
+    } else {
+        println!("\nwrote BENCH_hotpath.json ({} sections)", bench_json.len());
     }
 
     // 5. full model inference on the co-processor (if artifacts exist)

@@ -140,6 +140,12 @@ pub struct OperandCache {
     /// Entries inserted pre-encoded via [`OperandCache::preload_rows`] /
     /// [`OperandCache::preload_cols`] (no encode work, not a miss).
     pub preloads: u64,
+    /// Jobs whose B operand arrived as a **trusted pin** (the compiled
+    /// model's `Arc<EncodedOperand>` passed straight through the job),
+    /// bypassing the cache lookup — and the O(K·N) resident-image
+    /// readback + content hash-verify — entirely. Not a hit or a miss:
+    /// the cache was never consulted.
+    pub trusted: u64,
 }
 
 impl Default for OperandCache {
@@ -152,7 +158,7 @@ impl OperandCache {
     /// Cache holding at most `cap` encoded operands.
     pub fn new(cap: usize) -> OperandCache {
         assert!(cap >= 1);
-        OperandCache { cap, map: HashMap::new(), clock: 0, hits: 0, misses: 0, preloads: 0 }
+        OperandCache { cap, map: HashMap::new(), clock: 0, hits: 0, misses: 0, preloads: 0, trusted: 0 }
     }
 
     /// Cached [`EncodedOperand::rows`].

@@ -104,6 +104,40 @@ mod tests {
     }
 
     #[test]
+    fn poll_releases_exactly_at_the_deadline_tick() {
+        let mut b = FrameBatcher::new(8, 100);
+        b.push(vec![1.0], vec![], 5);
+        assert!(b.poll(104).is_none(), "one tick before the deadline holds");
+        let batch = b.poll(105).expect("age == deadline_cycles must release");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.released, 105);
+        // the deadline clock runs from the *oldest* pending request
+        b.push(vec![2.0], vec![], 200);
+        b.push(vec![3.0], vec![], 290);
+        assert!(b.poll(299).is_none());
+        let batch = b.poll(300).expect("oldest request's age drives the deadline");
+        assert_eq!(batch.requests.len(), 2, "a due deadline flushes everything pending");
+    }
+
+    #[test]
+    fn flush_releases_partial_batch_before_any_policy_fires() {
+        let mut b = FrameBatcher::new(4, 1000);
+        let i0 = b.push(vec![1.0], vec![], 0);
+        let i1 = b.push(vec![2.0], vec![], 1);
+        assert!(b.poll(2).is_none(), "neither size nor deadline is due");
+        let batch = b.flush(2).expect("flush must release the partial batch");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.released, 2);
+        assert_eq!(
+            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![i0, i1],
+            "flush preserves FIFO order"
+        );
+        assert_eq!(b.pending(), 0);
+        assert!(b.flush(3).is_none(), "empty batcher flushes nothing");
+    }
+
+    #[test]
     fn fifo_order_and_unique_ids() {
         let mut b = FrameBatcher::new(4, 10);
         let i0 = b.push(vec![], vec![], 0);

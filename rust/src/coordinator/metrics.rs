@@ -19,6 +19,12 @@ impl LatencyStats {
         self.samples.len()
     }
 
+    /// Raw samples in recording order (the serving runtime's autoscale
+    /// tick feeds the new tail to the policy).
+    pub fn samples(&self) -> &[u64] {
+        &self.samples
+    }
+
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -150,6 +156,40 @@ mod tests {
         assert!(s.p95() <= s.p99());
         assert_eq!(s.max(), 100);
         assert_eq!(s.mean(), 50.5);
+    }
+
+    #[test]
+    fn percentile_of_empty_stats_is_zero_for_all_p() {
+        let s = LatencyStats::new();
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), 0, "p={p}");
+        }
+        assert_eq!(s.max(), 0);
+        assert_eq!(s.count(), 0);
+        assert!(s.samples().is_empty());
+    }
+
+    #[test]
+    fn percentile_of_single_sample_is_that_sample() {
+        let mut s = LatencyStats::new();
+        s.record(42);
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), 42, "p={p}");
+        }
+        assert_eq!(s.mean(), 42.0);
+    }
+
+    #[test]
+    fn percentile_extremes_are_min_and_max() {
+        let mut s = LatencyStats::new();
+        // record out of order: percentile must sort, not trust insertion
+        for v in [70u64, 10, 90, 30, 50] {
+            s.record(v);
+        }
+        assert_eq!(s.percentile(0.0), 10, "p0 is the minimum");
+        assert_eq!(s.percentile(100.0), 90, "p100 is the maximum");
+        assert_eq!(s.percentile(50.0), 50);
+        assert_eq!(s.samples(), &[70, 10, 90, 30, 50], "samples keep recording order");
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //!   latency-critical; batching is bounded, never unbounded-throughput
 //!   greedy).
 //! * [`router`] — routes {VIO, gaze, classification} requests to model
-//!   instances and their SoCs; round-robins across replicas.
+//!   instances and their SoCs; round-robins across replicas. Built on
+//!   the [`crate::serve`] runtime: `submit`/`submit_batch` return
+//!   completion handles immediately, `route`/`route_batch` are blocking
+//!   wrappers, and an autoscaler grows/parks the active replica set
+//!   from queue-latency percentiles.
 //! * [`pipeline`] — the end-to-end perception pipeline of Fig. 1:
 //!   camera/IMU frames → VIO + gaze + classification per frame, with the
 //!   non-perception stages (visual/audio/runtime) modeled by calibrated
@@ -24,8 +28,8 @@ pub mod scheduler;
 pub use batcher::{Batch, FrameBatcher};
 pub use metrics::{BatchMetrics, LatencyStats, RequestStamp};
 pub use pipeline::{
-    execute_batch, serve_with_batcher, BatchServeReport, PerceptionPipeline, PipelineConfig,
-    RuntimeBreakdown,
+    execute_batch, serve_with_batcher, serve_with_batcher_async, BatchServeReport,
+    PerceptionPipeline, PipelineConfig, RuntimeBreakdown,
 };
-pub use router::{RoutedResult, Router, WorkloadKind};
+pub use router::{InferCompletion, RoutedResult, Router, RuntimeConfig, WorkloadKind};
 pub use scheduler::ModelInstance;

@@ -6,18 +6,28 @@
 //! serving queue and the hardware handles — the paper's "scheduling and
 //! control mechanisms as per workload configurations".
 //!
-//! Registration **warms every replica**: the instance's compiled program
-//! uploads its resident weight images and preloads their pinned operand
-//! encodings on each SoC, so [`Router::route`] / [`Router::route_batch`]
-//! always serve from warm state — no request ever pays weight scaling or
-//! encoding costs.
+//! Since PR 3 the router sits on the async serving runtime
+//! ([`crate::serve::ServeRuntime`]): every replica is drained by a
+//! long-lived worker thread through a bounded work queue, submission
+//! ([`Router::submit`] / [`Router::submit_batch`]) returns
+//! [`InferCompletion`] handles immediately, and the blocking
+//! [`Router::route`] / [`Router::route_batch`] are thin wrappers that
+//! submit and wait. Registration warms a configurable **floor** of
+//! replicas eagerly ([`RuntimeConfig::warm_floor`]); the rest warm on
+//! demand at their first request. An [`Autoscaler`] consuming the
+//! runtime's queue-latency percentiles grows and parks the **active**
+//! dispatch set between the floor and the fleet size
+//! ([`Router::autoscale_tick`]).
 
 use super::batcher::Batch;
 use super::scheduler::ModelInstance;
 use crate::models::ExecReport;
-use crate::soc::{Soc, SocConfig};
+use crate::serve::{AutoscaleConfig, Autoscaler, Completion, Job, RuntimeMetrics, ServeRuntime};
+use crate::soc::{JobReport, SocConfig};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Perception workload kinds (paper Fig. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -50,53 +60,96 @@ pub struct RoutedResult {
     pub replica: usize,
 }
 
+/// Handle for one submitted request: redeem with [`Router::resolve`]
+/// (or [`Completion::wait`] directly).
+pub type InferCompletion = Completion<Result<RoutedResult>>;
+
+/// Serving-runtime knobs for a router.
+#[derive(Debug, Clone, Copy)]
+pub struct RuntimeConfig {
+    /// Per-replica work-queue depth (bounded admission back-pressure).
+    pub queue_capacity: usize,
+    /// Replicas warmed eagerly at registration (clamped to `[1, n]`);
+    /// the rest warm on demand at their first request.
+    pub warm_floor: usize,
+    /// Autoscaling policy ([`Router::autoscale_tick`] applies it).
+    pub autoscale: AutoscaleConfig,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            queue_capacity: 64,
+            warm_floor: 1,
+            autoscale: AutoscaleConfig::default(),
+        }
+    }
+}
+
 /// The router.
 pub struct Router {
-    models: HashMap<WorkloadKind, ModelInstance>,
-    replicas: Vec<Soc>,
+    models: HashMap<WorkloadKind, Arc<ModelInstance>>,
+    runtime: ServeRuntime,
+    autoscaler: Autoscaler,
+    /// Replicas currently receiving dispatch (`1..=n_replicas`).
+    active: usize,
+    /// Total queue-latency samples already fed to the autoscaler
+    /// (checkpoint for [`ServeRuntime::queue_samples_since`]).
+    fed_samples: u64,
+    warm_floor: usize,
     next_replica: usize,
-    /// Per-kind request counters.
+    /// Per-kind request counters (admitted to the runtime).
     pub served: HashMap<WorkloadKind, u64>,
 }
 
 impl Router {
-    /// `n_replicas` co-processors with the given config.
+    /// `n_replicas` co-processors with the given config and default
+    /// runtime settings (warm floor 1, all replicas active).
     pub fn new(n_replicas: usize, cfg: SocConfig) -> Router {
+        Router::with_runtime(n_replicas, cfg, RuntimeConfig::default())
+    }
+
+    /// `n_replicas` co-processors with explicit runtime settings.
+    pub fn with_runtime(n_replicas: usize, cfg: SocConfig, rt: RuntimeConfig) -> Router {
         assert!(n_replicas >= 1);
         Router {
             models: HashMap::new(),
-            replicas: (0..n_replicas).map(|_| Soc::new(cfg)).collect(),
+            runtime: ServeRuntime::new(n_replicas, cfg, rt.queue_capacity),
+            autoscaler: Autoscaler::new(rt.autoscale),
+            active: n_replicas,
+            fed_samples: 0,
+            warm_floor: rt.warm_floor.clamp(1, n_replicas),
             next_replica: 0,
             served: HashMap::new(),
         }
     }
 
     /// Register the model for a workload kind, warming its compiled
-    /// program on every replica (resident weights + pinned encodings +
-    /// run arena), so the first request is as fast as the thousandth.
+    /// program (resident weights + pinned encodings + run arena) on the
+    /// first [`RuntimeConfig::warm_floor`] replicas; the remaining
+    /// replicas warm on demand when their worker first serves it.
     ///
-    /// The new model warms on *every* replica before the replaced one is
-    /// evicted or the registry updated, and a failed warm rolls back the
-    /// replicas already warmed — so an error leaves the router exactly
-    /// as it was (the previous model, if any, keeps serving).
+    /// A failed warm evicts the replicas already warmed — an error
+    /// leaves the router exactly as it was (the previous model, if any,
+    /// keeps serving). Replacing a model quiesces the runtime first so
+    /// in-flight requests against the old instance drain, then evicts
+    /// its warm state (resident DRAM returns to the free list) on every
+    /// replica.
     pub fn register(&mut self, kind: WorkloadKind, inst: ModelInstance) -> Result<()> {
-        let marks: Vec<u64> = self.replicas.iter().map(|s| s.resident_mark()).collect();
-        for i in 0..self.replicas.len() {
-            if let Err(e) = inst.warm(&mut self.replicas[i]) {
-                // replica i cleaned up after itself inside warm; roll
-                // back the replicas that fully warmed before it,
-                // including their resident-DRAM bumps (this register
-                // call held &mut self, so those bumps are top-of-stack)
-                for (j, soc) in self.replicas[..i].iter_mut().enumerate() {
-                    inst.compiled.evict(soc);
-                    soc.resident_rollback(marks[j]);
+        let inst = Arc::new(inst);
+        for i in 0..self.warm_floor {
+            let res = inst.warm(&mut self.runtime.soc(i).lock().unwrap());
+            if let Err(e) = res {
+                for j in 0..i {
+                    inst.compiled.evict(&mut self.runtime.soc(j).lock().unwrap());
                 }
                 return Err(e);
             }
         }
         if let Some(old) = self.models.remove(&kind) {
-            for soc in &mut self.replicas {
-                old.compiled.evict(soc);
+            self.runtime.quiesce();
+            for i in 0..self.runtime.n_replicas() {
+                old.compiled.evict(&mut self.runtime.soc(i).lock().unwrap());
             }
         }
         self.models.insert(kind, inst);
@@ -108,28 +161,49 @@ impl Router {
     }
 
     pub fn model(&self, kind: WorkloadKind) -> Option<&ModelInstance> {
-        self.models.get(&kind)
+        self.models.get(&kind).map(Arc::as_ref)
     }
 
-    /// Route one request; returns output + execution report.
-    pub fn route(&mut self, kind: WorkloadKind, input: &[f32], aux: &[f32]) -> Result<RoutedResult> {
+    /// Submit one request to the runtime; returns immediately with a
+    /// completion handle. Dispatch round-robins over the active replica
+    /// set; requests queued on the same replica serialize in FIFO order.
+    pub fn submit(
+        &mut self,
+        kind: WorkloadKind,
+        input: Vec<f32>,
+        aux: Vec<f32>,
+    ) -> Result<InferCompletion> {
         let Some(inst) = self.models.get(&kind) else {
             bail!("no model registered for {:?}", kind);
         };
-        let replica = self.next_replica;
-        self.next_replica = (self.next_replica + 1) % self.replicas.len();
-        let (output, report) = inst.infer(&mut self.replicas[replica], input, aux)?;
+        let replica = self.next_replica % self.active;
+        self.next_replica = (replica + 1) % self.active;
+        let (tx, rx) = crate::serve::completion();
+        let job = Job {
+            kind,
+            inst: Arc::clone(inst),
+            input,
+            aux,
+            enqueued: Instant::now(),
+            done: tx,
+        };
+        if self.runtime.dispatch(replica, job).is_err() {
+            bail!("serving runtime is shut down");
+        }
         *self.served.entry(kind).or_insert(0) += 1;
-        Ok(RoutedResult { kind, output, report, replica })
+        Ok(rx)
     }
 
-    /// Execute every request of a released [`Batch`], fanning the work
-    /// out across the SoC replicas with std scoped threads (each replica
-    /// is an independent co-processor; requests assigned to the same
-    /// replica serialize in batch order). Results come back in request
-    /// order. Outputs are bit-identical to routing each request through
-    /// [`Router::route`] — replica assignment never affects numerics.
-    pub fn route_batch(&mut self, kind: WorkloadKind, batch: &Batch) -> Result<Vec<RoutedResult>> {
+    /// Submit every request of a released [`Batch`]; returns completion
+    /// handles in request order. Requests spread round-robin over the
+    /// active replicas, continuing where [`Router::submit`] left off;
+    /// the per-replica queues preserve batch order, so results are
+    /// bit-identical to routing each request through [`Router::route`].
+    pub fn submit_batch(
+        &mut self,
+        kind: WorkloadKind,
+        batch: &Batch,
+    ) -> Result<Vec<InferCompletion>> {
         let reqs = &batch.requests;
         if reqs.is_empty() {
             return Ok(Vec::new());
@@ -137,29 +211,86 @@ impl Router {
         let Some(inst) = self.models.get(&kind) else {
             bail!("no model registered for {:?}", kind);
         };
-        let n = self.replicas.len();
-        // Continue the round-robin where route() left off (and advance
-        // it), so a stream of small/flushed batches still spreads across
-        // replicas instead of always hammering replica 0.
-        let offset = self.next_replica;
-        self.next_replica = (self.next_replica + reqs.len()) % n;
-        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let inst = Arc::clone(inst);
+        let offset = self.next_replica % self.active;
+        self.next_replica = (offset + reqs.len()) % self.active;
+        let mut handles = Vec::with_capacity(reqs.len());
+        for (i, r) in reqs.iter().enumerate() {
+            let (tx, rx) = crate::serve::completion();
+            let job = Job {
+                kind,
+                inst: Arc::clone(&inst),
+                input: r.input.clone(),
+                aux: r.aux.clone(),
+                enqueued: Instant::now(),
+                done: tx,
+            };
+            if self.runtime.dispatch((offset + i) % self.active, job).is_err() {
+                bail!("serving runtime is shut down");
+            }
+            handles.push(rx);
+        }
+        *self.served.entry(kind).or_insert(0) += reqs.len() as u64;
+        Ok(handles)
+    }
+
+    /// Redeem a completion handle (blocking).
+    pub fn resolve(c: InferCompletion) -> Result<RoutedResult> {
+        match c.wait() {
+            Ok(res) => res,
+            Err(canceled) => Err(canceled.into()),
+        }
+    }
+
+    /// Route one request and wait for it — a blocking wrapper over
+    /// [`Router::submit`].
+    pub fn route(&mut self, kind: WorkloadKind, input: &[f32], aux: &[f32]) -> Result<RoutedResult> {
+        Router::resolve(self.submit(kind, input.to_vec(), aux.to_vec())?)
+    }
+
+    /// Execute every request of a released [`Batch`] and wait for all of
+    /// them — a blocking wrapper over [`Router::submit_batch`]. Results
+    /// come back in request order.
+    pub fn route_batch(&mut self, kind: WorkloadKind, batch: &Batch) -> Result<Vec<RoutedResult>> {
+        self.submit_batch(kind, batch)?.into_iter().map(Router::resolve).collect()
+    }
+
+    /// The legacy PR 2 synchronous fan-out: scoped threads per batch,
+    /// blocking until the slowest replica drains. Kept as the reference
+    /// the runtime path is differentially tested against (identical
+    /// replica assignment, values, and cycle/stat reports) and as the
+    /// baseline of the `hotpath` bench's async-vs-sync section.
+    pub fn route_batch_fanout(
+        &mut self,
+        kind: WorkloadKind,
+        batch: &Batch,
+    ) -> Result<Vec<RoutedResult>> {
+        let reqs = &batch.requests;
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let Some(inst) = self.models.get(&kind) else {
+            bail!("no model registered for {:?}", kind);
+        };
+        let offset = self.next_replica % self.active;
+        self.next_replica = (offset + reqs.len()) % self.active;
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.active];
         for i in 0..reqs.len() {
-            buckets[(offset + i) % n].push(i);
+            buckets[(offset + i) % self.active].push(i);
         }
         let per_replica: Vec<Result<Vec<(usize, RoutedResult)>>> = std::thread::scope(|s| {
-            let handles: Vec<_> = self
-                .replicas
-                .iter_mut()
-                .zip(buckets)
+            let handles: Vec<_> = buckets
+                .into_iter()
                 .enumerate()
-                .map(|(ri, (soc, idxs))| {
-                    let inst = &*inst;
+                .map(|(ri, idxs)| {
+                    let soc = Arc::clone(self.runtime.soc(ri));
+                    let inst = Arc::clone(inst);
                     s.spawn(move || {
+                        let mut soc = soc.lock().unwrap();
                         idxs.into_iter()
                             .map(|i| {
                                 let r = &reqs[i];
-                                let (output, report) = inst.infer(soc, &r.input, &r.aux)?;
+                                let (output, report) = inst.infer(&mut soc, &r.input, &r.aux)?;
                                 Ok((i, RoutedResult { kind, output, report, replica: ri }))
                             })
                             .collect::<Result<Vec<_>>>()
@@ -179,31 +310,81 @@ impl Router {
         Ok(slots.into_iter().map(|r| r.expect("missing batch result")).collect())
     }
 
+    /// One autoscaling tick: feed the queue-latency samples recorded
+    /// since the last tick to the policy and apply its decision to the
+    /// active dispatch set (in-flight load gates idle parking — a
+    /// backlogged fleet is never parked). Returns the new active count.
+    pub fn autoscale_tick(&mut self) -> usize {
+        let (fresh, total) = self.runtime.queue_samples_since(self.fed_samples);
+        self.fed_samples = total;
+        self.autoscaler.observe_samples(&fresh);
+        let target = self.autoscaler.decide(self.active, self.runtime.in_flight());
+        self.active = target.clamp(1, self.runtime.n_replicas());
+        self.active
+    }
+
+    /// Replicas currently receiving dispatch.
+    pub fn active_replicas(&self) -> usize {
+        self.active
+    }
+
+    /// Force the active dispatch set (clamped to `[1, n_replicas]`) —
+    /// load-shaping for tests/benches; the autoscaler adjusts from here.
+    pub fn set_active(&mut self, n: usize) {
+        self.active = n.clamp(1, self.runtime.n_replicas());
+        self.next_replica %= self.active;
+    }
+
+    /// Block until every submitted request has completed.
+    pub fn quiesce(&self) {
+        self.runtime.quiesce();
+    }
+
+    /// Host-side queue/service latency metrics from the runtime.
+    pub fn runtime_metrics(&self) -> RuntimeMetrics {
+        self.runtime.metrics()
+    }
+
+    /// Jobs queued (not yet picked up) on replica `i`.
+    pub fn replica_queue_len(&self, i: usize) -> usize {
+        self.runtime.queue_len(i)
+    }
+
     /// Total requests served.
     pub fn total_served(&self) -> u64 {
         self.served.values().sum()
     }
 
-    /// Lifetime job report per replica.
-    pub fn replica_lifetime(&self, i: usize) -> &crate::soc::JobReport {
-        &self.replicas[i].lifetime
+    /// Lifetime job report of replica `i` (snapshot).
+    pub fn replica_lifetime(&self, i: usize) -> JobReport {
+        self.runtime.soc(i).lock().unwrap().lifetime.clone()
     }
 
-    /// (hits, misses, preloads) of replica `i`'s operand-encoding cache
-    /// — the observable proof that registered weights encode zero times
-    /// on the serving path.
-    pub fn replica_cache_stats(&self, i: usize) -> (u64, u64, u64) {
-        let c = &self.replicas[i].enc_cache;
-        (c.hits, c.misses, c.preloads)
+    /// (hits, misses, preloads, trusted) of replica `i`'s
+    /// operand-encoding cache — the observable proof that registered
+    /// weights encode zero times on the serving path: weight operands
+    /// ride their trusted pins past the cache entirely (`trusted`),
+    /// only per-request activations encode (`misses`).
+    pub fn replica_cache_stats(&self, i: usize) -> (u64, u64, u64, u64) {
+        let soc = self.runtime.soc(i).lock().unwrap();
+        let c = &soc.enc_cache;
+        (c.hits, c.misses, c.preloads, c.trusted)
     }
 
     /// Pinned (weight-preload) entries resident in replica `i`'s cache.
     pub fn replica_pinned_len(&self, i: usize) -> usize {
-        self.replicas[i].enc_cache.pinned_len()
+        self.runtime.soc(i).lock().unwrap().enc_cache.pinned_len()
+    }
+
+    /// Resident-DRAM accounting of replica `i`: `(bump watermark bytes,
+    /// reclaimed-but-buried free-list bytes)`.
+    pub fn replica_resident(&self, i: usize) -> (u64, u64) {
+        let soc = self.runtime.soc(i).lock().unwrap();
+        (soc.resident_mark(), soc.resident_free_bytes())
     }
 
     pub fn n_replicas(&self) -> usize {
-        self.replicas.len()
+        self.runtime.n_replicas()
     }
 }
 
@@ -229,6 +410,7 @@ mod tests {
     fn unregistered_kind_errors() {
         let mut r = Router::new(1, SocConfig::default());
         assert!(r.route(WorkloadKind::Vio, &[], &[]).is_err());
+        assert!(r.submit(WorkloadKind::Vio, vec![], vec![]).is_err());
     }
 
     #[test]
@@ -310,6 +492,7 @@ mod tests {
         let mut r = Router::new(2, SocConfig::default());
         let empty = Batch { requests: vec![], released: 0 };
         assert!(r.route_batch(WorkloadKind::Vio, &empty).unwrap().is_empty());
+        assert!(r.submit_batch(WorkloadKind::Vio, &empty).unwrap().is_empty());
         use crate::coordinator::batcher::Request;
         let one = Batch {
             requests: vec![Request { id: 0, input: vec![], aux: vec![], arrived: 0 }],
@@ -319,33 +502,71 @@ mod tests {
     }
 
     #[test]
-    fn registration_warms_every_replica() {
+    fn registration_warms_floor_then_serving_warms_on_demand() {
+        // default runtime: warm floor 1 — replica 0 is warm at
+        // registration, the others warm at their first request
         let mut r = Router::new(3, SocConfig::default());
         let g = gaze::build();
         let n_gemm = g.compute_layers().len() as u64;
         let w = weights_for(&g, 7);
         r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
             .unwrap();
-        for i in 0..3 {
-            let (hits, misses, preloads) = r.replica_cache_stats(i);
-            assert_eq!((hits, misses, preloads), (0, 0, n_gemm), "replica {i}");
-        }
-        // 6 distinct requests round-robin over 3 replicas: every weight
-        // lookup hits the preloaded encoding; only activations encode
+        let stats: Vec<_> = (0..3).map(|i| r.replica_cache_stats(i)).collect();
+        assert_eq!(stats[0], (0, 0, n_gemm, 0), "floor replica is warm");
+        assert_eq!(stats[1], (0, 0, 0, 0), "replica 1 not warmed yet");
+        assert_eq!(stats[2], (0, 0, 0, 0), "replica 2 not warmed yet");
+        // 6 distinct requests round-robin over 3 replicas: each replica
+        // warms at its first request, weights ride trusted pins past the
+        // cache, only activations encode
         for q in 0..6 {
             r.route(WorkloadKind::Gaze, &vec![0.01 * q as f32; 16], &[]).unwrap();
         }
         for i in 0..3 {
-            let (hits, misses, preloads) = r.replica_cache_stats(i);
-            assert_eq!(preloads, n_gemm);
-            assert_eq!(hits, 2 * n_gemm, "replica {i}: weights must hit");
+            let (hits, misses, preloads, trusted) = r.replica_cache_stats(i);
+            assert_eq!(preloads, n_gemm, "replica {i} warmed (eagerly or on demand)");
+            assert_eq!(hits, 0, "replica {i}: weights never consult the cache");
             assert_eq!(misses, 2 * n_gemm, "replica {i}: only activations encode");
+            assert_eq!(trusted, 2 * n_gemm, "replica {i}: weights ride trusted pins");
         }
     }
 
     #[test]
+    fn warm_floor_covers_all_replicas_when_configured() {
+        let rt = RuntimeConfig { warm_floor: 3, ..Default::default() };
+        let mut r = Router::with_runtime(3, SocConfig::default(), rt);
+        let g = gaze::build();
+        let n_gemm = g.compute_layers().len() as u64;
+        let w = weights_for(&g, 8);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        for i in 0..3 {
+            let (hits, misses, preloads, trusted) = r.replica_cache_stats(i);
+            assert_eq!((hits, misses, preloads, trusted), (0, 0, n_gemm, 0), "replica {i}");
+        }
+    }
+
+    #[test]
+    fn failed_registration_leaves_router_usable() {
+        // 16 KiB DRAM: the effnet fc image does not fit, gaze does
+        let cfg = SocConfig { dram_bytes: 1 << 14, ..Default::default() };
+        let mut r = Router::new(2, cfg);
+        let ge = effnet::build();
+        let we = weights_for(&ge, 20);
+        assert!(r
+            .register(WorkloadKind::Classify, ModelInstance::uniform(ge, we, PrecSel::Posit8x2).unwrap())
+            .is_err());
+        let gg = gaze::build();
+        let wg = weights_for(&gg, 21);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(gg, wg, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        let out = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
+        assert_eq!(out.output.len(), 2);
+    }
+
+    #[test]
     fn reregistering_a_kind_evicts_the_old_warm_state() {
-        let mut r = Router::new(2, SocConfig::default());
+        let rt = RuntimeConfig { warm_floor: 2, ..Default::default() };
+        let mut r = Router::with_runtime(2, SocConfig::default(), rt);
         let g = gaze::build();
         let n_gemm = g.compute_layers().len();
         let w1 = weights_for(&g, 30);
@@ -364,6 +585,40 @@ mod tests {
     }
 
     #[test]
+    fn reregister_refresh_loop_keeps_resident_watermark_flat() {
+        // the PR-2 leak: Router::register warms the new model *above*
+        // the old one, so the evicted old image is always buried and —
+        // without the free list — every refresh grew resident DRAM by a
+        // full model. Now the freed spans are reused first-fit.
+        let mut r = Router::new(1, SocConfig::default());
+        let g = gaze::build();
+        let w0 = weights_for(&g, 50);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g.clone(), w0, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        let w1 = weights_for(&g, 51);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g.clone(), w1, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        // peak: the moment both old and new coexist during the handover
+        let (peak, _) = r.replica_resident(0);
+        for seed in 52..57 {
+            let w = weights_for(&g, seed);
+            r.register(
+                WorkloadKind::Gaze,
+                ModelInstance::uniform(g.clone(), w, PrecSel::Posit8x2).unwrap(),
+            )
+            .unwrap();
+            let (mark, _) = r.replica_resident(0);
+            assert!(
+                mark <= peak,
+                "seed {seed}: resident watermark {mark} grew past the two-model peak {peak}"
+            );
+            // the refreshed model still serves
+            let out = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
+            assert_eq!(out.output.len(), 2);
+        }
+    }
+
+    #[test]
     fn mixed_workloads_share_replicas() {
         let mut r = Router::new(2, SocConfig::default());
         let gg = gaze::build();
@@ -376,5 +631,75 @@ mod tests {
         r.route(WorkloadKind::Classify, &vec![0.1; 256], &[]).unwrap();
         assert_eq!(r.total_served(), 2);
         assert_eq!(r.served[&WorkloadKind::Gaze], 1);
+    }
+
+    #[test]
+    fn set_active_confines_dispatch_and_parked_replicas_idle() {
+        let mut r = Router::new(3, SocConfig::default());
+        let g = gaze::build();
+        let w = weights_for(&g, 40);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4).unwrap()).unwrap();
+        r.set_active(1);
+        for q in 0..4 {
+            let res = r.route(WorkloadKind::Gaze, &vec![0.05 * q as f32; 16], &[]).unwrap();
+            assert_eq!(res.replica, 0, "parked replicas must not receive dispatch");
+        }
+        assert_eq!(r.replica_lifetime(1).total_cycles, 0);
+        assert_eq!(r.replica_lifetime(2).total_cycles, 0);
+        // unpark: dispatch spreads again
+        r.set_active(3);
+        let mut hits = vec![0u32; 3];
+        for _ in 0..6 {
+            hits[r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap().replica] += 1;
+        }
+        assert_eq!(hits, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn autoscale_grows_under_queue_pressure_and_parks_when_idle() {
+        use crate::coordinator::batcher::Request;
+        let rt = RuntimeConfig {
+            autoscale: AutoscaleConfig {
+                floor: 1,
+                max: 4,
+                scale_up_p95: 1, // any measurable queueing is pressure
+                scale_down_p95: 0,
+                window: 64,
+                step: 1,
+                idle_patience: 2,
+            },
+            ..Default::default()
+        };
+        let mut r = Router::with_runtime(4, SocConfig::default(), rt);
+        let g = gaze::build();
+        let w = weights_for(&g, 41);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        r.set_active(1);
+        // sustained pressure: batches serialize on the single active
+        // replica, so queue latency accumulates; each tick scales up
+        let mut rounds = 0;
+        while r.active_replicas() < 4 {
+            let batch = Batch {
+                requests: (0..12)
+                    .map(|i| Request {
+                        id: rounds * 12 + i,
+                        input: vec![0.01 * i as f32; 16],
+                        aux: vec![],
+                        arrived: 0,
+                    })
+                    .collect(),
+                released: 0,
+            };
+            r.route_batch(WorkloadKind::Gaze, &batch).unwrap();
+            r.autoscale_tick();
+            rounds += 1;
+            assert!(rounds < 20, "autoscaler failed to scale up under sustained pressure");
+        }
+        assert_eq!(r.active_replicas(), 4);
+        // idle: no traffic between ticks → parks back to the floor
+        r.autoscale_tick();
+        let after_idle = r.autoscale_tick();
+        assert_eq!(after_idle, 1, "idle runtime must park to the floor");
     }
 }

@@ -30,10 +30,15 @@
 //! * [`energy`] — calibrated 28 nm ASIC area/power/energy model
 //!   (Table II), FPGA LUT/FF/DSP model (Table III), and system-level
 //!   TOPS/W / TOPS/mm² accounting (Table IV).
+//! * [`serve`] — the async serving runtime between the coordinator and
+//!   the SoC replicas: bounded per-replica work queues drained by
+//!   long-lived worker threads, one-shot completion handles, host-side
+//!   queue/service latency metrics, and the metrics-driven replica
+//!   autoscaler (warm-on-demand + configurable floor).
 //! * [`coordinator`] — the L3 serving layer: layer-adaptive scheduler,
-//!   frame batcher, workload router with parallel batch execution across
-//!   SoC replicas, per-request latency stamps, and the full perception
-//!   pipeline.
+//!   frame batcher, workload router with async submission and parallel
+//!   batch execution across SoC replicas, per-request latency stamps,
+//!   and the full perception pipeline.
 //! * [`runtime`] — PJRT CPU client that loads the JAX/Pallas-authored
 //!   HLO artifacts and runs them from the Rust request path (behind the
 //!   `pjrt` feature; the offline build uses an API-compatible stub).
@@ -51,6 +56,7 @@ pub mod models;
 pub mod npe;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod soc;
 pub mod util;
 pub mod vio;

@@ -6,6 +6,7 @@
 //! xr-npe info                         engine + model summary
 //! xr-npe gemm M K N [prec]            run one GEMM on the co-processor sim
 //! xr-npe pipeline [frames]            run the XR perception pipeline
+//! xr-npe serve [requests] [replicas]  drive the async serving runtime
 //! xr-npe artifacts [dir]              list compiled model artifacts
 //! ```
 //!
@@ -34,8 +35,11 @@ fn run() -> Result<()> {
         Some("info") | None => info(),
         Some("gemm") => gemm(&args[1..]),
         Some("pipeline") => pipeline(&args[1..]),
+        Some("serve") => serve(&args[1..]),
         Some("artifacts") => artifacts(&args[1..]),
-        Some(other) => bail!("unknown subcommand `{other}` (try: info, gemm, pipeline, artifacts)"),
+        Some(other) => {
+            bail!("unknown subcommand `{other}` (try: info, gemm, pipeline, serve, artifacts)")
+        }
     }
 }
 
@@ -156,6 +160,77 @@ fn pipeline(args: &[String]) -> Result<()> {
         rep.frame_latency.p99() as f64 / clock * 1e3,
         rep.frame_latency.fps(clock)
     );
+    Ok(())
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    use xr_npe::coordinator::{serve_with_batcher_async, FrameBatcher};
+    let requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let replicas: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let clock = 250e6;
+
+    let mut router = Router::new(replicas, SocConfig::default());
+    let g = gaze::build();
+    let w = random_weights(&g, 11);
+    router.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2)?)?;
+
+    // 90 Hz-class gaze stream with a little jitter
+    let mut rng = Rng::new(3);
+    let arrivals: Vec<(Vec<f32>, Vec<f32>, u64)> = (0..requests)
+        .map(|i| {
+            let input: Vec<f32> =
+                (0..16).map(|j| ((i * 16 + j) as f32 * 0.05).sin() * 0.5).collect();
+            let at = (i as f64 * clock / 90.0) as u64 + rng.below(500);
+            (input, vec![], at)
+        })
+        .collect();
+
+    println!("== async serving runtime — {requests} gaze requests over {replicas} replicas ==");
+    println!("   (warm floor 1: replicas beyond the floor warm on demand at first dispatch)");
+    let mut batcher = FrameBatcher::new(8, (clock / 90.0 / 2.0) as u64);
+    let t0 = std::time::Instant::now();
+    let rep = serve_with_batcher_async(&mut router, WorkloadKind::Gaze, &mut batcher, arrivals)?;
+    let wall = t0.elapsed();
+    router.quiesce();
+
+    let m = &rep.metrics;
+    println!("\nsimulated latency (coordinator cycles @ {:.0} MHz):", clock / 1e6);
+    println!(
+        "  queue   p50 {:>8}  p95 {:>8}  p99 {:>8}",
+        m.queue.p50(),
+        m.queue.p95(),
+        m.queue.p99()
+    );
+    println!(
+        "  total   p50 {:>8}  p95 {:>8}  p99 {:>8}  ({:.2} ms p99)",
+        m.total.p50(),
+        m.total.p95(),
+        m.total.p99(),
+        m.total.p99() as f64 / clock * 1e3
+    );
+    println!("  batches {}  mean batch size {:.2}", m.batches, m.mean_batch_size());
+
+    let rt = router.runtime_metrics();
+    println!("\nhost-side runtime (wall clock):");
+    println!(
+        "  completed {}  queue p95 {:.1} µs  service p95 {:.1} µs  wall {:.1} ms",
+        rt.completed,
+        rt.queue.p95() as f64 / 1e3,
+        rt.service.p95() as f64 / 1e3,
+        wall.as_secs_f64() * 1e3
+    );
+    let active = router.autoscale_tick();
+    println!(
+        "  autoscaler: active {active}/{replicas} after one tick (queue-latency p95 driven)"
+    );
+    for i in 0..replicas {
+        let life = router.replica_lifetime(i);
+        let (mark, free) = router.replica_resident(i);
+        println!(
+            "  replica {i}: {:>12} lifetime cycles  resident {:>7} B (+{free} B free-list)",
+            life.total_cycles, mark
+        );
+    }
     Ok(())
 }
 

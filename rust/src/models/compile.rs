@@ -213,6 +213,23 @@ struct Arena {
     /// Stable per-request A-operand / result scratch addresses.
     a_addr: u64,
     c_addr: u64,
+    /// Every resident span this arena owns (`(start, end)` byte ranges,
+    /// alignment padding included), handed back to
+    /// [`Soc::free_resident`] on eviction.
+    allocs: Vec<(u64, u64)>,
+}
+
+/// Allocate `bytes` of resident DRAM and record the span (including the
+/// bump path's alignment padding, so freeing the spans in order unwinds
+/// the watermark exactly).
+fn alloc_span(soc: &mut Soc, bytes: usize, allocs: &mut Vec<(u64, u64)>) -> Result<u64, SocError> {
+    let pre = soc.resident_mark();
+    let addr = soc.alloc_resident(bytes)?;
+    let end = addr + bytes as u64;
+    // a free-list hit sits below the pre-alloc watermark; its padding
+    // fragment (if any) went back to the free list inside the allocator
+    allocs.push((if addr >= pre { pre } else { addr }, end));
+    Ok(addr)
 }
 
 static NEXT_UID: AtomicU64 = AtomicU64::new(1);
@@ -428,42 +445,37 @@ impl CompiledModel {
     /// Warm on `soc`, cleaning up after itself on failure: exactly the
     /// pins it placed are released (never more — over-unpinning would
     /// steal pins from another live model sharing identical weight
-    /// content) and the resident-DRAM watermark is rolled back, so a
+    /// content) and every resident span it allocated is freed, so a
     /// rejected model leaves the SoC exactly as it found it.
     fn warm_inner(&self, soc: &mut Soc) -> Result<Arena, SocError> {
-        let mark = soc.resident_mark();
         let gemms = self.gemm_steps();
+        let mut allocs: Vec<(u64, u64)> = Vec::with_capacity(gemms.len() + 2);
         let mut w_addrs = Vec::with_capacity(gemms.len());
+        let fail = |me: &Self, soc: &mut Soc, pins: usize, allocs: &[(u64, u64)], e: SocError| {
+            me.unpin_first(soc, pins);
+            for &(s, end) in allocs {
+                soc.free_resident(s, end);
+            }
+            e
+        };
         for (i, g) in gemms.iter().enumerate() {
-            let step = (|| -> Result<u64, SocError> {
-                let addr = soc.alloc_resident(g.weight.data.len() * 4)?;
-                soc.ext.write_f32(addr, &g.weight.data)?;
-                Ok(addr)
-            })();
-            match step {
-                Ok(addr) => {
-                    soc.enc_cache.preload_cols(&g.weight, Arc::clone(&g.w_enc));
-                    w_addrs.push(addr);
-                }
-                Err(e) => {
-                    self.unpin_first(soc, i);
-                    soc.resident_rollback(mark);
-                    return Err(e);
-                }
+            let addr = match alloc_span(soc, g.weight.data.len() * 4, &mut allocs) {
+                Ok(a) => a,
+                Err(e) => return Err(fail(self, soc, i, &allocs, e)),
+            };
+            if let Err(e) = soc.ext.write_f32(addr, &g.weight.data) {
+                return Err(fail(self, soc, i, &allocs, e));
             }
+            soc.enc_cache.preload_cols(&g.weight, Arc::clone(&g.w_enc));
+            w_addrs.push(addr);
         }
-        let scratch = (|| -> Result<(u64, u64), SocError> {
-            let a_addr = soc.alloc_resident(self.a_len * 4)?;
-            let c_addr = soc.alloc_resident(self.c_len * 4)?;
-            Ok((a_addr, c_addr))
-        })();
-        let (a_addr, c_addr) = match scratch {
-            Ok(pair) => pair,
-            Err(e) => {
-                self.unpin_first(soc, gemms.len());
-                soc.resident_rollback(mark);
-                return Err(e);
-            }
+        let a_addr = match alloc_span(soc, self.a_len * 4, &mut allocs) {
+            Ok(a) => a,
+            Err(e) => return Err(fail(self, soc, gemms.len(), &allocs, e)),
+        };
+        let c_addr = match alloc_span(soc, self.c_len * 4, &mut allocs) {
+            Ok(a) => a,
+            Err(e) => return Err(fail(self, soc, gemms.len(), &allocs, e)),
         };
         Ok(Arena {
             bufs: [vec![0.0; self.buf_len], vec![0.0; self.buf_len]],
@@ -472,6 +484,7 @@ impl CompiledModel {
             w_addrs,
             a_addr,
             c_addr,
+            allocs,
         })
     }
 
@@ -489,22 +502,26 @@ impl CompiledModel {
         }
     }
 
-    /// Tear down this model's warm state on `soc`: drop the run arena
-    /// and unpin its weight encodings from the operand cache. Resident
-    /// DRAM is reclaimed when this model's image is the top of the bump
-    /// stack (the common rollback / last-registered case); a model
-    /// buried under later allocations leaves its addresses orphaned
-    /// until then (compaction is the multi-model-residency item on the
-    /// roadmap).
+    /// Tear down this model's warm state on `soc`: drop the run arena,
+    /// unpin its weight encodings from the operand cache, and hand every
+    /// resident span back to the allocator. A top-of-stack model unwinds
+    /// the watermark directly; a model buried under later registrations
+    /// goes onto the free list, where [`Soc::alloc_resident`] reuses it
+    /// first-fit — so a register→evict→register refresh loop no longer
+    /// leaks the buried image (regression-tested in the router).
+    ///
+    /// A no-op on a SoC this model was never warmed on: in the
+    /// warm-on-demand world a replica may never have seen the model, and
+    /// unpinning there could steal cache pins from a *different* live
+    /// model that preloaded identical weight content.
     pub fn evict(&self, soc: &mut Soc) {
-        let arena = soc.take_model_state(self.uid).and_then(|b| b.downcast::<Arena>().ok());
+        let Some(arena) = soc.take_model_state(self.uid).and_then(|b| b.downcast::<Arena>().ok())
+        else {
+            return;
+        };
         self.unpin(soc);
-        if let Some(a) = arena {
-            let end = a.c_addr + (self.c_len * 4) as u64;
-            if soc.resident_mark() == end {
-                let start = a.w_addrs.first().copied().unwrap_or(a.a_addr);
-                soc.resident_rollback(start);
-            }
+        for &(s, e) in &arena.allocs {
+            soc.free_resident(s, e);
         }
     }
 
@@ -569,11 +586,16 @@ impl CompiledModel {
                     for v in arena.a_mat.data.iter_mut() {
                         *v = (*v as f64 / s_a) as f32;
                     }
-                    let (raw, rep) = soc.gemm_resident(
+                    // trusted pin: the compiled weight encoding rides the
+                    // job, so warm serving never re-reads or hash-verifies
+                    // the resident image (cycle/byte stats identical to
+                    // `gemm_resident`)
+                    let (raw, rep) = soc.gemm_trusted(
                         &arena.a_mat,
                         g.k,
                         g.n,
                         arena.w_addrs[g.gemm_idx],
+                        &g.w_enc,
                         arena.a_addr,
                         arena.c_addr,
                         g.sel,
@@ -766,9 +788,10 @@ mod tests {
             let input = test_input(g.input.numel(), r as f32);
             compiled.replay(&mut soc, &input, &[]).unwrap();
         }
-        // every weight lookup is a hit; only the per-request activation
-        // operands are encoded
-        assert_eq!(soc.enc_cache.hits, reqs * n as u64, "weights must never re-encode");
+        // weights ride their trusted pins past the cache entirely; only
+        // the per-request activation operands are encoded
+        assert_eq!(soc.enc_cache.trusted, reqs * n as u64, "weights must ride trusted pins");
+        assert_eq!(soc.enc_cache.hits, 0, "weights must never consult the cache");
         assert_eq!(soc.enc_cache.misses, reqs * n as u64, "one A-operand encode per gemm");
     }
 
@@ -883,8 +906,44 @@ mod tests {
         let mark = soc.resident_mark();
         assert!(compiled.ensure_warm(&mut soc).is_err());
         assert_eq!(soc.resident_mark(), mark, "failed warm must roll back resident DRAM");
+        assert_eq!(soc.resident_free_bytes(), 0, "failed warm must not strand free blocks");
         assert_eq!(soc.enc_cache.pinned_len(), 0, "failed warm must release its pins");
         assert!(!soc.has_model_state(compiled.uid()));
+    }
+
+    #[test]
+    fn evicting_a_buried_model_reclaims_dram_via_free_list() {
+        // gaze warms first (bottom of the stack), effnet on top of it:
+        // evicting gaze cannot move the watermark, but its spans must
+        // land on the free list and be reused by the next same-shape
+        // model — the refresh-loop leak fixed in this PR
+        let gg = gaze::build();
+        let pg = PrecisionPlan::uniform(PrecSel::Posit8x2, &gg.compute_layer_params());
+        let c1 = compile(&gg, &random_weights(&gg, 90), &pg).unwrap();
+        let ge = effnet::build();
+        let pe = PrecisionPlan::uniform(PrecSel::Fp4x4, &ge.compute_layer_params());
+        let ce = compile(&ge, &random_weights(&ge, 91), &pe).unwrap();
+        let mut soc = Soc::new(SocConfig::default());
+        c1.ensure_warm(&mut soc).unwrap();
+        ce.ensure_warm(&mut soc).unwrap();
+        let peak = soc.resident_mark();
+        c1.evict(&mut soc);
+        assert_eq!(soc.resident_mark(), peak, "buried eviction cannot move the watermark");
+        assert!(soc.resident_free_bytes() > 0, "buried spans must reach the free list");
+        // a same-shape model slots into the freed region: watermark flat
+        let c2 = compile(&gg, &random_weights(&gg, 92), &pg).unwrap();
+        c2.ensure_warm(&mut soc).unwrap();
+        assert_eq!(soc.resident_mark(), peak, "free-list reuse must keep the watermark flat");
+        assert_eq!(soc.resident_free_bytes(), 0);
+        // both resident models still serve correctly from reused DRAM
+        let in_g = test_input(gg.input.numel(), 0.4);
+        let in_e = test_input(ge.input.numel(), 0.5);
+        let (g1, _) = c2.replay(&mut soc, &in_g, &[]).unwrap();
+        let (e1, _) = ce.replay(&mut soc, &in_e, &[]).unwrap();
+        let (g2, _) = c2.replay(&mut soc, &in_g, &[]).unwrap();
+        let (e2, _) = ce.replay(&mut soc, &in_e, &[]).unwrap();
+        assert_eq!(g1, g2);
+        assert_eq!(e1, e2);
     }
 
     #[test]

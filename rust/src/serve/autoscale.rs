@@ -1,0 +1,239 @@
+//! Metrics-driven replica autoscaling policy.
+//!
+//! The policy consumes the serving runtime's **queue-latency** samples
+//! (time a request sat in a replica's work queue before a worker picked
+//! it up — the purest congestion signal: service latency reflects model
+//! cost, queue latency reflects under-provisioning) and decides how many
+//! replicas should actively receive dispatch:
+//!
+//! * sustained pressure — windowed p95 at or above
+//!   [`AutoscaleConfig::scale_up_p95`] — grows the active set by
+//!   [`AutoscaleConfig::step`], up to `max`;
+//! * a relaxed queue — p95 at or below [`AutoscaleConfig::scale_down_p95`]
+//!   — shrinks it by one, down to `floor`;
+//! * an **idle** runtime (no new samples for
+//!   [`AutoscaleConfig::idle_patience`] consecutive ticks *and* nothing
+//!   in flight — samples only arrive at job completion, so a backlogged
+//!   fleet is not idle) parks everything above the floor at once.
+//!
+//! The autoscaler is pure policy: it never touches threads or queues.
+//! [`crate::coordinator::Router::autoscale_tick`] feeds it and applies
+//! the decision to the dispatch set; parked replicas keep their threads
+//! (blocked on an empty queue) and their warm state, so unparking is
+//! free, and a replica activated for the first time warms on demand at
+//! its first request ([`crate::models::CompiledModel::ensure_warm`]).
+
+use super::worker::WindowedStats;
+
+/// Policy knobs. Latency units are whatever the caller feeds
+/// ([`crate::serve::RuntimeMetrics`] records host nanoseconds).
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscaleConfig {
+    /// Never park below this many active replicas.
+    pub floor: usize,
+    /// Never activate more than this many (callers clamp to the fleet).
+    pub max: usize,
+    /// Windowed queue-latency p95 at/above this scales up.
+    pub scale_up_p95: u64,
+    /// Windowed queue-latency p95 at/below this scales down by one.
+    pub scale_down_p95: u64,
+    /// Sliding-window length in samples.
+    pub window: usize,
+    /// Replicas added per scale-up decision.
+    pub step: usize,
+    /// Ticks with no fresh samples before parking to the floor.
+    pub idle_patience: u32,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            floor: 1,
+            max: usize::MAX,
+            scale_up_p95: 200_000,   // 200 µs queued: dispatcher outruns the fleet
+            scale_down_p95: 20_000,  // 20 µs: fleet is loafing
+            window: 256,
+            step: 1,
+            idle_patience: 2,
+        }
+    }
+}
+
+/// The scaling policy + its sliding sample window (a
+/// [`WindowedStats`], sized by [`AutoscaleConfig::window`]).
+#[derive(Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    stats: WindowedStats,
+    seen_at_last_decide: u64,
+    idle_ticks: u32,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        assert!(cfg.floor >= 1, "autoscale floor must be >= 1");
+        assert!(cfg.max >= cfg.floor, "autoscale max must be >= floor");
+        assert!(cfg.window >= 1 && cfg.step >= 1);
+        Autoscaler {
+            cfg,
+            stats: WindowedStats::with_window(cfg.window),
+            seen_at_last_decide: 0,
+            idle_ticks: 0,
+        }
+    }
+
+    /// Feed one queue-latency sample.
+    pub fn observe(&mut self, queue_latency: u64) {
+        self.stats.record(queue_latency);
+    }
+
+    /// Feed a batch of samples (e.g. the new tail of
+    /// [`crate::coordinator::BatchMetrics`]'s `queue` distribution).
+    pub fn observe_samples(&mut self, samples: &[u64]) {
+        for &s in samples {
+            self.observe(s);
+        }
+    }
+
+    /// Windowed queue-latency percentile (nearest-rank, see
+    /// [`WindowedStats::percentile`]).
+    pub fn queue_percentile(&self, p: f64) -> u64 {
+        self.stats.percentile(p)
+    }
+
+    /// Samples observed in total (fresh-traffic detector for idle ticks).
+    pub fn observed(&self) -> u64 {
+        self.stats.recorded()
+    }
+
+    /// One policy tick: given the current active-replica count and the
+    /// runtime's current load (`in_flight` = jobs queued or executing),
+    /// return the new target in `[floor, max]`.
+    ///
+    /// Queue-latency samples arrive only when jobs *complete*, so "no
+    /// fresh samples" alone does not mean idle — a fleet backlogged
+    /// with slow jobs completes nothing between ticks. Idle parking
+    /// therefore requires both: no fresh samples **and** `in_flight`
+    /// of zero.
+    pub fn decide(&mut self, active: usize, in_flight: usize) -> usize {
+        let active = active.clamp(self.cfg.floor, self.cfg.max);
+        let fresh = self.stats.recorded() > self.seen_at_last_decide;
+        self.seen_at_last_decide = self.stats.recorded();
+        if !fresh {
+            if in_flight > 0 {
+                // backlogged, not idle: hold until completions report in
+                self.idle_ticks = 0;
+                return active;
+            }
+            self.idle_ticks += 1;
+            if self.idle_ticks >= self.cfg.idle_patience {
+                return self.cfg.floor;
+            }
+            return active;
+        }
+        self.idle_ticks = 0;
+        let p95 = self.queue_percentile(95.0);
+        if p95 >= self.cfg.scale_up_p95 {
+            active.saturating_add(self.cfg.step).min(self.cfg.max)
+        } else if p95 <= self.cfg.scale_down_p95 {
+            active.saturating_sub(1).max(self.cfg.floor)
+        } else {
+            active
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            floor: 1,
+            max: 4,
+            scale_up_p95: 1_000,
+            scale_down_p95: 100,
+            window: 16,
+            step: 1,
+            idle_patience: 2,
+        }
+    }
+
+    #[test]
+    fn sustained_pressure_scales_up_to_max() {
+        let mut a = Autoscaler::new(cfg());
+        let mut active = 1;
+        for round in 0..5 {
+            a.observe_samples(&[5_000; 8]);
+            let next = a.decide(active, 0);
+            assert!(
+                next > active || next == a.cfg.max,
+                "round {round}: active {active} -> {next} must rise toward max"
+            );
+            active = next;
+        }
+        assert_eq!(active, 4, "sustained queue pressure must reach max");
+    }
+
+    #[test]
+    fn relaxed_queue_steps_down_and_idle_parks_to_floor() {
+        let mut a = Autoscaler::new(cfg());
+        // pressure up to max first
+        let mut active = 1;
+        for _ in 0..5 {
+            a.observe_samples(&[5_000; 16]);
+            active = a.decide(active, 0);
+        }
+        assert_eq!(active, 4);
+        // fresh-but-relaxed traffic steps down one at a time
+        a.observe_samples(&[10; 16]); // flushes the window of hot samples
+        active = a.decide(active, 0);
+        assert_eq!(active, 3, "relaxed p95 steps down by one");
+        // idle: no fresh samples → after patience ticks, park to floor
+        let after_one_idle = a.decide(active, 0);
+        assert_eq!(after_one_idle, 3, "one idle tick is within patience");
+        let after_two_idle = a.decide(after_one_idle, 0);
+        assert_eq!(after_two_idle, 1, "sustained idle falls back to the floor");
+        // floor holds while idle
+        assert_eq!(a.decide(after_two_idle, 0), 1);
+    }
+
+    #[test]
+    fn backlog_without_completions_is_not_idle() {
+        // slow jobs: nothing completes between ticks, so no fresh
+        // samples — but work is in flight, so the fleet must hold, not
+        // park (parking here would funnel a deep backlog to one queue)
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide(3, 5), 3, "tick 1: backlogged fleet holds");
+        assert_eq!(a.decide(3, 5), 3, "tick 2: still holds past idle_patience");
+        assert_eq!(a.decide(3, 5), 3, "tick 3: holds as long as jobs are in flight");
+        // backlog drains with no new traffic: now it really is idle
+        assert_eq!(a.decide(3, 0), 3, "first truly idle tick is within patience");
+        assert_eq!(a.decide(3, 0), 1, "second idle tick parks to the floor");
+    }
+
+    #[test]
+    fn mid_band_pressure_holds_steady() {
+        let mut a = Autoscaler::new(cfg());
+        a.observe_samples(&[500; 16]); // between the two thresholds
+        assert_eq!(a.decide(2, 0), 2);
+    }
+
+    #[test]
+    fn decisions_respect_floor_and_max_bounds() {
+        let mut a = Autoscaler::new(AutoscaleConfig { floor: 2, max: 3, ..cfg() });
+        a.observe_samples(&[1_000_000; 4]);
+        assert_eq!(a.decide(3, 0), 3, "never exceeds max");
+        a.observe_samples(&[1; 16]);
+        assert_eq!(a.decide(2, 0), 2, "never shrinks below floor");
+    }
+
+    #[test]
+    fn window_is_sliding() {
+        let mut a = Autoscaler::new(cfg());
+        a.observe_samples(&[1_000_000; 16]);
+        a.observe_samples(&[10; 16]); // fully displaces the hot samples
+        assert!(a.queue_percentile(95.0) <= 10);
+        assert_eq!(a.observed(), 32);
+    }
+}

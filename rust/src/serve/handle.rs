@@ -1,0 +1,162 @@
+//! Completion handles: the submission side of the async serving API.
+//!
+//! [`completion`] makes a one-shot channel out of a `Mutex` + `Condvar`
+//! (std only — no futures executor in the offline image): the runtime
+//! keeps the [`CompletionSender`] inside the queued job and the caller
+//! keeps the [`Completion`]. The caller can poll ([`Completion::is_ready`])
+//! or block ([`Completion::wait`]); if the job is dropped unfulfilled
+//! (runtime shutdown, worker death) the waiter gets [`Canceled`] instead
+//! of hanging.
+
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The job backing this completion was dropped without producing a
+/// value (runtime shut down before the job ran).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Canceled;
+
+impl fmt::Display for Canceled {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "request canceled before completion")
+    }
+}
+
+impl std::error::Error for Canceled {}
+
+enum Slot<T> {
+    Pending,
+    Ready(T),
+    Taken,
+    Canceled,
+}
+
+struct Inner<T> {
+    slot: Mutex<Slot<T>>,
+    cv: Condvar,
+}
+
+/// Producer half: fulfilled exactly once by the worker that ran the job.
+pub struct CompletionSender<T> {
+    inner: Option<Arc<Inner<T>>>,
+}
+
+/// Consumer half: redeemed by the submitter.
+pub struct Completion<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Create a linked sender/handle pair.
+pub fn completion<T>() -> (CompletionSender<T>, Completion<T>) {
+    let inner = Arc::new(Inner { slot: Mutex::new(Slot::Pending), cv: Condvar::new() });
+    (CompletionSender { inner: Some(Arc::clone(&inner)) }, Completion { inner })
+}
+
+impl<T> CompletionSender<T> {
+    /// Deliver the value and wake the waiter.
+    pub fn fulfill(mut self, value: T) {
+        if let Some(inner) = self.inner.take() {
+            *inner.slot.lock().unwrap() = Slot::Ready(value);
+            inner.cv.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for CompletionSender<T> {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            let mut slot = inner.slot.lock().unwrap();
+            if matches!(*slot, Slot::Pending) {
+                *slot = Slot::Canceled;
+                inner.cv.notify_all();
+            }
+        }
+    }
+}
+
+impl<T> Completion<T> {
+    /// Has the value (or a cancellation) arrived? Non-blocking.
+    pub fn is_ready(&self) -> bool {
+        !matches!(*self.inner.slot.lock().unwrap(), Slot::Pending)
+    }
+
+    /// Take the value if it already arrived; `Ok(None)` while pending
+    /// — and also after the value was already taken, so a poll loop
+    /// that revisits redeemed handles stays safe.
+    pub fn try_take(&self) -> Result<Option<T>, Canceled> {
+        let mut slot = self.inner.slot.lock().unwrap();
+        match std::mem::replace(&mut *slot, Slot::Taken) {
+            Slot::Ready(v) => Ok(Some(v)),
+            Slot::Pending => {
+                *slot = Slot::Pending;
+                Ok(None)
+            }
+            Slot::Canceled => {
+                *slot = Slot::Canceled;
+                Err(Canceled)
+            }
+            Slot::Taken => Ok(None),
+        }
+    }
+
+    /// Block until the value arrives and take it. A handle whose value
+    /// was already removed by [`Completion::try_take`] reports
+    /// [`Canceled`] — the value is gone and will never arrive here.
+    pub fn wait(self) -> Result<T, Canceled> {
+        let mut slot = self.inner.slot.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Taken) {
+                Slot::Ready(v) => return Ok(v),
+                Slot::Canceled | Slot::Taken => return Err(Canceled),
+                Slot::Pending => {
+                    *slot = Slot::Pending;
+                    slot = self.inner.cv.wait(slot).unwrap();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fulfill_then_wait() {
+        let (tx, rx) = completion();
+        tx.fulfill(41);
+        assert!(rx.is_ready());
+        assert_eq!(rx.wait(), Ok(41));
+    }
+
+    #[test]
+    fn wait_blocks_until_fulfilled_cross_thread() {
+        let (tx, rx) = completion();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            tx.fulfill("done");
+        });
+        assert_eq!(rx.wait(), Ok("done"));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_sender_cancels() {
+        let (tx, rx) = completion::<u32>();
+        drop(tx);
+        assert!(rx.is_ready());
+        assert_eq!(rx.wait(), Err(Canceled));
+    }
+
+    #[test]
+    fn try_take_polls_without_blocking() {
+        let (tx, rx) = completion();
+        assert_eq!(rx.try_take(), Ok(None));
+        assert!(!rx.is_ready());
+        tx.fulfill(7u8);
+        assert_eq!(rx.try_take(), Ok(Some(7)));
+        // re-polling a redeemed handle is safe, not a panic
+        assert_eq!(rx.try_take(), Ok(None));
+        assert_eq!(rx.wait(), Err(Canceled), "the value is gone for good");
+    }
+}

@@ -1,0 +1,142 @@
+//! The async serving runtime — the layer between the coordinator and
+//! the SoC replicas.
+//!
+//! PR 2's serving path was a synchronous fan-out: `Router::route_batch`
+//! spawned scoped threads per batch and blocked until the slowest
+//! replica drained, and the replica count was fixed at construction.
+//! This subsystem replaces that with long-lived infrastructure:
+//!
+//! * [`queue`] — a bounded MPSC work queue (std `Mutex`/`Condvar`; the
+//!   image is offline, so no channel crates). Bounded admission is the
+//!   back-pressure mechanism.
+//! * [`worker`] — one long-lived thread per replica draining its own
+//!   queue; the replica's `Soc` lives behind an `Arc<Mutex<_>>` device
+//!   lock so the coordinator can still warm/evict/inspect it directly.
+//!   [`ServeRuntime`] owns the fleet and the shared [`RuntimeMetrics`].
+//! * [`handle`] — one-shot [`Completion`] handles: submission returns
+//!   immediately, the caller redeems the handle whenever it likes, so
+//!   the batcher keeps admitting while replicas drain and consecutive
+//!   requests pipeline gather → GEMM → postprocess across batches.
+//! * [`autoscale`] — the policy that consumes queue-latency percentiles
+//!   ([`crate::coordinator::LatencyStats`] p95 over a sliding window)
+//!   and grows/parks the active replica set between a configurable
+//!   floor and the fleet size.
+//!
+//! [`crate::coordinator::Router`] builds its `submit`/`submit_batch`
+//! entry points on this runtime; its `route`/`route_batch` are thin
+//! blocking wrappers over them, differentially tested bit-identical
+//! (values, cycles, `ExecReport`/`JobReport` stats) to the legacy
+//! synchronous fan-out which survives as `route_batch_fanout`.
+
+pub mod autoscale;
+pub mod handle;
+pub mod queue;
+pub mod worker;
+
+pub use autoscale::{AutoscaleConfig, Autoscaler};
+pub use handle::{completion, Canceled, Completion, CompletionSender};
+pub use queue::{Closed, WorkQueue};
+pub use worker::{Job, ReplicaWorker, RuntimeMetrics, ServeRuntime, WindowedStats};
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::batcher::{Batch, Request};
+    use crate::coordinator::{ModelInstance, Router, WorkloadKind};
+    use crate::models::{gaze, random_weights};
+    use crate::npe::PrecSel;
+    use crate::soc::SocConfig;
+
+    fn gaze_router(n_replicas: usize, sel: PrecSel, seed: u64) -> Router {
+        let mut r = Router::new(n_replicas, SocConfig::default());
+        let g = gaze::build();
+        let w = random_weights(&g, seed);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, sel).unwrap()).unwrap();
+        r
+    }
+
+    fn batch_of(n: usize, id0: u64) -> Batch {
+        Batch {
+            requests: (0..n)
+                .map(|i| Request {
+                    id: id0 + i as u64,
+                    input: (0..16).map(|j| ((i * 16 + j) as f32 * 0.11).sin() * 0.4).collect(),
+                    aux: vec![],
+                    arrived: i as u64,
+                })
+                .collect(),
+            released: n as u64,
+        }
+    }
+
+    /// The acceptance-criteria differential: for every hardware mode,
+    /// the async runtime path (`route_batch` = `submit_batch` + wait)
+    /// must be bit-identical to the legacy synchronous scoped-thread
+    /// fan-out — values, per-request `ExecReport`s (cycles + engine
+    /// stats), replica assignment, and the per-replica lifetime
+    /// `JobReport`s.
+    #[test]
+    fn async_runtime_bit_identical_to_sync_fanout_all_modes() {
+        for (i, sel) in PrecSel::ALL.into_iter().enumerate() {
+            let seed = 90 + i as u64;
+            let mut sync = gaze_router(3, sel, seed);
+            let mut async_ = gaze_router(3, sel, seed);
+            for round in 0..3 {
+                let batch = batch_of(7, round * 7);
+                let want = sync.route_batch_fanout(WorkloadKind::Gaze, &batch).unwrap();
+                let got = async_.route_batch(WorkloadKind::Gaze, &batch).unwrap();
+                assert_eq!(want.len(), got.len());
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(w.output, g.output, "{sel:?} round {round}: values diverged");
+                    assert_eq!(w.report, g.report, "{sel:?} round {round}: reports diverged");
+                    assert_eq!(w.replica, g.replica, "{sel:?} round {round}: assignment diverged");
+                }
+            }
+            for r in 0..3 {
+                assert_eq!(
+                    sync.replica_lifetime(r),
+                    async_.replica_lifetime(r),
+                    "{sel:?}: replica {r} lifetime stats diverged"
+                );
+            }
+            assert_eq!(sync.total_served(), async_.total_served());
+        }
+    }
+
+    /// Pipelining: several batches submitted before any completion is
+    /// redeemed still produce exactly the serial-route results.
+    #[test]
+    fn pipelined_submit_batches_match_serial_route() {
+        let mut serial = gaze_router(2, PrecSel::Posit8x2, 97);
+        let mut pipelined = gaze_router(2, PrecSel::Posit8x2, 97);
+        let batches: Vec<Batch> = (0..4).map(|b| batch_of(5, b * 5)).collect();
+        let mut want = Vec::new();
+        for batch in &batches {
+            for req in &batch.requests {
+                want.push(serial.route(WorkloadKind::Gaze, &req.input, &req.aux).unwrap().output);
+            }
+        }
+        // submit everything first — the queues pipeline across batches —
+        // then redeem the completions
+        let handles: Vec<_> = batches
+            .iter()
+            .map(|b| pipelined.submit_batch(WorkloadKind::Gaze, b).unwrap())
+            .collect();
+        let mut got = Vec::new();
+        for comps in handles {
+            for c in comps {
+                got.push(Router::resolve(c).unwrap().output);
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn submit_single_request_roundtrips() {
+        let mut r = gaze_router(1, PrecSel::Fp4x4, 98);
+        let c = r.submit(WorkloadKind::Gaze, vec![0.1; 16], vec![]).unwrap();
+        let res = Router::resolve(c).unwrap();
+        assert_eq!(res.output.len(), 2);
+        assert_eq!(res.replica, 0);
+        assert_eq!(r.total_served(), 1);
+    }
+}

@@ -1,0 +1,216 @@
+//! Bounded MPSC work queue for the per-replica serving workers.
+//!
+//! Built on `std::sync::{Mutex, Condvar}` only — the image is offline,
+//! so no crossbeam/flume. One queue feeds one [`super::ReplicaWorker`];
+//! any number of producers (the router thread, tests) may push.
+//! `push` blocks when the queue is full (bounded admission is the
+//! back-pressure mechanism: a saturated replica slows the dispatcher
+//! instead of buffering unbounded work), `pop` blocks when it is empty,
+//! and `close` wakes everyone: blocked producers get [`Closed`] back,
+//! the consumer drains what is queued and then sees `None`.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Condvar, Mutex};
+
+/// Error returned by [`WorkQueue::push`] after [`WorkQueue::close`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Closed;
+
+impl fmt::Display for Closed {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "work queue is closed")
+    }
+}
+
+impl std::error::Error for Closed {}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer single-consumer queue. Share it via `Arc`.
+pub struct WorkQueue<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> WorkQueue<T> {
+    /// Queue admitting at most `cap` items (cap >= 1).
+    pub fn bounded(cap: usize) -> WorkQueue<T> {
+        assert!(cap >= 1);
+        WorkQueue {
+            cap,
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Enqueue, blocking while the queue is full. Fails only after
+    /// [`WorkQueue::close`].
+    pub fn push(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.state.lock().unwrap();
+        while st.items.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(Closed);
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue without blocking; hands the item back when full/closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.items.len() >= self.cap {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking while empty. `None` means the queue is closed
+    /// *and* fully drained — the worker's signal to exit.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail fast, the consumer drains and
+    /// exits. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Items currently queued (racy by nature; for metrics/backlog
+    /// inspection only).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = WorkQueue::bounded(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn try_push_bounces_when_full() {
+        let q = WorkQueue::bounded(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = WorkQueue::bounded(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.push(8), Err(Closed));
+        assert_eq!(q.pop(), Some(7), "queued items drain after close");
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None, "idempotent");
+    }
+
+    #[test]
+    fn blocked_push_unblocks_on_pop() {
+        let q = Arc::new(WorkQueue::bounded(1));
+        q.push(0u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || q2.push(1).unwrap());
+        // the producer is blocked on the full queue until we pop
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(q.pop(), Some(0));
+        producer.join().unwrap();
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn blocked_pop_unblocks_on_close() {
+        let q = Arc::new(WorkQueue::<u32>::bounded(1));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn mpsc_conserves_items() {
+        let q = Arc::new(WorkQueue::bounded(4));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..25u32 {
+                        q.push(p * 100 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let qc = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(x) = qc.pop() {
+                got.push(x);
+            }
+            got
+        });
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut got = consumer.join().unwrap();
+        got.sort_unstable();
+        let mut want: Vec<u32> = (0..4).flat_map(|p| (0..25).map(move |i| p * 100 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,474 @@
+//! Long-lived per-replica worker threads + the [`ServeRuntime`] that
+//! owns them.
+//!
+//! Each worker owns the *serving loop* of one SoC replica: it drains a
+//! bounded [`WorkQueue`] of [`Job`]s, runs each through the compiled
+//! model's replay path while holding the replica lock, fulfills the
+//! job's [`CompletionSender`], and stamps host queue/service latency
+//! into the shared [`RuntimeMetrics`]. The replica's `Soc` lives in an
+//! `Arc<Mutex<_>>` rather than inside the thread so the coordinator can
+//! still reach it directly — registration warms models, eviction frees
+//! resident DRAM, and stats readers snapshot lifetime counters — without
+//! a control-message protocol; the per-replica mutex serializes those
+//! against in-flight inference exactly like a device lock would.
+//!
+//! Jobs carry an `Arc<ModelInstance>` resolved at submission time, so a
+//! worker needs no registry access, and a replica that was never warmed
+//! eagerly warms **on demand** at its first job
+//! ([`crate::models::CompiledModel::ensure_warm`] inside `replay`).
+
+use super::handle::CompletionSender;
+use super::queue::{Closed, WorkQueue};
+use crate::coordinator::metrics::LatencyStats;
+use crate::coordinator::router::{RoutedResult, WorkloadKind};
+use crate::coordinator::scheduler::ModelInstance;
+use crate::soc::{Soc, SocConfig};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One unit of work for a replica worker.
+pub struct Job {
+    pub kind: WorkloadKind,
+    pub inst: Arc<ModelInstance>,
+    pub input: Vec<f32>,
+    pub aux: Vec<f32>,
+    /// Submission timestamp (host clock) — queue latency is measured
+    /// from here to worker pickup.
+    pub enqueued: Instant,
+    /// Fulfilled with the inference result (or its error).
+    pub done: CompletionSender<Result<RoutedResult>>,
+}
+
+/// Latency samples over a bounded sliding window. The serving runtime
+/// is long-lived (continuous XR traffic), so an unbounded sample vector
+/// would grow forever; the window keeps the last `cap` samples
+/// ([`WindowedStats::DEFAULT_WINDOW`] by default) for percentiles while
+/// a monotone `recorded` counter preserves "how many ever" for
+/// incremental consumers (the autoscale tick). Also the sample window
+/// behind [`crate::serve::Autoscaler`] — one copy of the window logic.
+#[derive(Debug, Clone)]
+pub struct WindowedStats {
+    cap: usize,
+    window: VecDeque<u64>,
+    recorded: u64,
+}
+
+impl Default for WindowedStats {
+    fn default() -> Self {
+        WindowedStats::with_window(WindowedStats::DEFAULT_WINDOW)
+    }
+}
+
+impl WindowedStats {
+    /// Samples retained for percentile queries unless configured.
+    pub const DEFAULT_WINDOW: usize = 4096;
+
+    /// Stats retaining the last `cap` samples (cap >= 1).
+    pub fn with_window(cap: usize) -> WindowedStats {
+        assert!(cap >= 1);
+        WindowedStats { cap, window: VecDeque::new(), recorded: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        if self.window.len() == self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(v);
+        self.recorded += 1;
+    }
+
+    /// Samples currently in the window.
+    pub fn count(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Samples ever recorded (monotone).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// The newest `n` samples, oldest first (clamped to the window).
+    pub fn tail(&self, n: usize) -> Vec<u64> {
+        let skip = self.window.len().saturating_sub(n);
+        self.window.iter().skip(skip).copied().collect()
+    }
+
+    /// Nearest-rank percentile over the window (see
+    /// [`LatencyStats::percentile`]).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let mut stats = LatencyStats::new();
+        for &s in &self.window {
+            stats.record(s);
+        }
+        stats.percentile(p)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// Window maximum.
+    pub fn max(&self) -> u64 {
+        self.window.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Window mean.
+    pub fn mean(&self) -> f64 {
+        if self.window.is_empty() {
+            return 0.0;
+        }
+        self.window.iter().sum::<u64>() as f64 / self.window.len() as f64
+    }
+}
+
+/// Host-side latency accounting for the async serving path, in
+/// **nanoseconds** (wall clock — this is the signal the autoscaler
+/// reacts to; simulated-cycle latency lives in
+/// [`crate::coordinator::BatchMetrics`]).
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeMetrics {
+    /// Time each job sat queued before a worker picked it up.
+    pub queue: WindowedStats,
+    /// Time each job spent executing (replica lock + replay).
+    pub service: WindowedStats,
+    /// Jobs completed (fulfilled, whether Ok or Err).
+    pub completed: u64,
+}
+
+struct SharedState {
+    metrics: RuntimeMetrics,
+    /// Jobs dispatched but not yet fulfilled (queued + executing).
+    busy: usize,
+}
+
+/// State shared between the dispatcher and every worker.
+struct Shared {
+    state: Mutex<SharedState>,
+    idle: Condvar,
+}
+
+/// One spawned worker: its queue plus the thread draining it.
+pub struct ReplicaWorker {
+    pub id: usize,
+    queue: Arc<WorkQueue<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ReplicaWorker {
+    fn spawn(
+        id: usize,
+        soc: Arc<Mutex<Soc>>,
+        shared: Arc<Shared>,
+        queue_capacity: usize,
+    ) -> ReplicaWorker {
+        let queue = Arc::new(WorkQueue::bounded(queue_capacity));
+        let q = Arc::clone(&queue);
+        let handle = std::thread::Builder::new()
+            .name(format!("xr-npe-replica-{id}"))
+            .spawn(move || {
+                while let Some(job) = q.pop() {
+                    let waited = job.enqueued.elapsed().as_nanos() as u64;
+                    let t0 = Instant::now();
+                    let res = {
+                        let mut soc = soc.lock().unwrap();
+                        job.inst.infer(&mut soc, &job.input, &job.aux)
+                    };
+                    let service = t0.elapsed().as_nanos() as u64;
+                    // account *before* fulfilling: a caller that redeems
+                    // the completion is then guaranteed to observe this
+                    // job in RuntimeMetrics and out of in_flight()
+                    {
+                        let mut st = shared.state.lock().unwrap();
+                        st.metrics.queue.record(waited);
+                        st.metrics.service.record(service);
+                        st.metrics.completed += 1;
+                        st.busy -= 1;
+                        shared.idle.notify_all();
+                    }
+                    job.done.fulfill(res.map(|(output, report)| RoutedResult {
+                        kind: job.kind,
+                        output,
+                        report,
+                        replica: id,
+                    }));
+                }
+            })
+            .expect("spawn replica worker");
+        ReplicaWorker { id, queue, handle: Some(handle) }
+    }
+}
+
+/// The serving runtime: `n` replicas, each an `Arc<Mutex<Soc>>` drained
+/// by its own worker thread through its own bounded queue. Dropping the
+/// runtime closes every queue (pending jobs still drain) and joins the
+/// workers.
+pub struct ServeRuntime {
+    socs: Vec<Arc<Mutex<Soc>>>,
+    workers: Vec<ReplicaWorker>,
+    shared: Arc<Shared>,
+}
+
+impl ServeRuntime {
+    /// Spawn `n` replica workers over fresh SoCs.
+    pub fn new(n: usize, cfg: SocConfig, queue_capacity: usize) -> ServeRuntime {
+        assert!(n >= 1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(SharedState { metrics: RuntimeMetrics::default(), busy: 0 }),
+            idle: Condvar::new(),
+        });
+        let socs: Vec<Arc<Mutex<Soc>>> =
+            (0..n).map(|_| Arc::new(Mutex::new(Soc::new(cfg)))).collect();
+        let workers = socs
+            .iter()
+            .enumerate()
+            .map(|(i, soc)| {
+                ReplicaWorker::spawn(i, Arc::clone(soc), Arc::clone(&shared), queue_capacity)
+            })
+            .collect();
+        ServeRuntime { socs, workers, shared }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.socs.len()
+    }
+
+    /// Direct handle to replica `i`'s SoC (registration, stats). Lock
+    /// order: never hold two replica locks at once.
+    pub fn soc(&self, i: usize) -> &Arc<Mutex<Soc>> {
+        &self.socs[i]
+    }
+
+    /// Enqueue a job on replica `replica`'s queue, blocking if that
+    /// queue is full (bounded admission = back-pressure).
+    pub fn dispatch(&self, replica: usize, job: Job) -> Result<(), Closed> {
+        self.shared.state.lock().unwrap().busy += 1;
+        match self.workers[replica].queue.push(job) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let mut st = self.shared.state.lock().unwrap();
+                st.busy -= 1;
+                self.shared.idle.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// Jobs queued (not yet picked up) on replica `i`.
+    pub fn queue_len(&self, i: usize) -> usize {
+        self.workers[i].queue.len()
+    }
+
+    /// Jobs dispatched but not yet fulfilled, runtime-wide.
+    pub fn in_flight(&self) -> usize {
+        self.shared.state.lock().unwrap().busy
+    }
+
+    /// Block until every dispatched job has finished executing and been
+    /// accounted (its completion may be a fulfillment away — `wait` on
+    /// the handle still blocks until it lands). Used by registration to
+    /// let in-flight requests against a replaced model drain off the
+    /// hardware before its warm state is evicted.
+    pub fn quiesce(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.busy > 0 {
+            st = self.shared.idle.wait(st).unwrap();
+        }
+    }
+
+    /// Snapshot of the host-side latency metrics.
+    pub fn metrics(&self) -> RuntimeMetrics {
+        self.shared.state.lock().unwrap().metrics.clone()
+    }
+
+    /// Queue-latency samples recorded after the caller's last
+    /// checkpoint (the autoscale tick's incremental feed). `seen` is
+    /// the total returned by the previous call (0 initially); returns
+    /// the new samples still retained in the window (oldest first) and
+    /// the new checkpoint.
+    pub fn queue_samples_since(&self, seen: u64) -> (Vec<u64>, u64) {
+        let st = self.shared.state.lock().unwrap();
+        let q = &st.metrics.queue;
+        let total = q.recorded();
+        let missed = total.saturating_sub(seen) as usize;
+        (q.tail(missed), total)
+    }
+}
+
+impl Drop for ServeRuntime {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            w.queue.close();
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::random_weights;
+    use crate::models::{effnet, gaze};
+    use crate::npe::PrecSel;
+    use crate::serve::handle::completion;
+
+    fn gaze_inst(seed: u64) -> Arc<ModelInstance> {
+        let g = gaze::build();
+        let w = random_weights(&g, seed);
+        Arc::new(ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+    }
+
+    fn job(
+        inst: &Arc<ModelInstance>,
+        input: Vec<f32>,
+    ) -> (Job, crate::serve::handle::Completion<Result<RoutedResult>>) {
+        let (tx, rx) = completion();
+        (
+            Job {
+                kind: WorkloadKind::Gaze,
+                inst: Arc::clone(inst),
+                input,
+                aux: vec![],
+                enqueued: Instant::now(),
+                done: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn worker_serves_jobs_and_records_metrics() {
+        let rt = ServeRuntime::new(2, SocConfig::default(), 8);
+        let inst = gaze_inst(1);
+        let mut handles = Vec::new();
+        for i in 0..6 {
+            let (j, rx) = job(&inst, vec![0.01 * i as f32; 16]);
+            rt.dispatch(i % 2, j).unwrap();
+            handles.push(rx);
+        }
+        for (i, rx) in handles.into_iter().enumerate() {
+            let res = rx.wait().unwrap().unwrap();
+            assert_eq!(res.output.len(), 2, "job {i}");
+            assert_eq!(res.replica, i % 2);
+        }
+        rt.quiesce();
+        let m = rt.metrics();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.queue.count(), 6);
+        assert_eq!(m.service.count(), 6);
+        assert!(m.service.max() > 0, "service time must be recorded");
+        assert_eq!(rt.in_flight(), 0);
+    }
+
+    #[test]
+    fn worker_warms_replica_on_demand() {
+        let rt = ServeRuntime::new(1, SocConfig::default(), 4);
+        let inst = gaze_inst(2);
+        let n_gemm = inst.compiled.n_gemm() as u64;
+        // nothing warmed the replica — the first job does it in-loop
+        assert_eq!(rt.soc(0).lock().unwrap().enc_cache.preloads, 0);
+        let (j, rx) = job(&inst, vec![0.1; 16]);
+        rt.dispatch(0, j).unwrap();
+        rx.wait().unwrap().unwrap();
+        assert_eq!(rt.soc(0).lock().unwrap().enc_cache.preloads, n_gemm);
+    }
+
+    #[test]
+    fn same_replica_jobs_serialize_in_fifo_order() {
+        // two models' jobs interleaved on one replica stay coherent and
+        // the lifetime stats accumulate every job
+        let rt = ServeRuntime::new(1, SocConfig::default(), 16);
+        let gi = gaze_inst(3);
+        let ge = effnet::build();
+        let we = random_weights(&ge, 4);
+        let ei = Arc::new(ModelInstance::uniform(ge, we, PrecSel::Fp4x4).unwrap());
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (j, rx) = job(&gi, vec![0.02 * i as f32; 16]);
+            rt.dispatch(0, j).unwrap();
+            rxs.push(rx.wait().unwrap().unwrap().output);
+            let (tx, rx) = completion();
+            rt.dispatch(
+                0,
+                Job {
+                    kind: WorkloadKind::Classify,
+                    inst: Arc::clone(&ei),
+                    input: vec![0.1; 256],
+                    aux: vec![],
+                    enqueued: Instant::now(),
+                    done: tx,
+                },
+            )
+            .unwrap();
+            assert_eq!(rx.wait().unwrap().unwrap().output.len(), 10);
+        }
+        // identical inputs replayed later give identical outputs (no
+        // cross-model clobbering of warm state)
+        let (j, rx) = job(&gi, vec![0.0; 16]);
+        rt.dispatch(0, j).unwrap();
+        let again = rx.wait().unwrap().unwrap().output;
+        assert_eq!(again, rxs[0]);
+        rt.quiesce();
+        assert_eq!(rt.metrics().completed, 9);
+    }
+
+    #[test]
+    fn windowed_stats_bound_retention_but_count_everything() {
+        let mut s = WindowedStats::default();
+        for v in 0..(WindowedStats::DEFAULT_WINDOW as u64 + 100) {
+            s.record(v);
+        }
+        assert_eq!(s.count(), WindowedStats::DEFAULT_WINDOW, "window must stay bounded");
+        assert_eq!(s.recorded(), WindowedStats::DEFAULT_WINDOW as u64 + 100, "recorded is monotone");
+        // the oldest 100 samples were displaced
+        assert_eq!(s.percentile(0.0), 100);
+        assert_eq!(s.max(), WindowedStats::DEFAULT_WINDOW as u64 + 99);
+        assert_eq!(s.tail(3), vec![
+            WindowedStats::DEFAULT_WINDOW as u64 + 97,
+            WindowedStats::DEFAULT_WINDOW as u64 + 98,
+            WindowedStats::DEFAULT_WINDOW as u64 + 99,
+        ]);
+        assert_eq!(s.tail(usize::MAX).len(), WindowedStats::DEFAULT_WINDOW, "tail clamps to the window");
+    }
+
+    #[test]
+    fn infer_error_comes_back_through_the_completion() {
+        let rt = ServeRuntime::new(1, SocConfig::default(), 4);
+        let inst = gaze_inst(5);
+        let (j, rx) = job(&inst, vec![0.1; 3]); // wrong input length
+        rt.dispatch(0, j).unwrap();
+        assert!(rx.wait().unwrap().is_err());
+        rt.quiesce();
+        assert_eq!(rt.metrics().completed, 1, "errors still complete and count");
+    }
+
+    #[test]
+    fn drop_drains_pending_jobs() {
+        let rt = ServeRuntime::new(1, SocConfig::default(), 8);
+        let inst = gaze_inst(6);
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (j, rx) = job(&inst, vec![0.03 * i as f32; 16]);
+            rt.dispatch(0, j).unwrap();
+            rxs.push(rx);
+        }
+        drop(rt); // closes the queue; the worker drains before exiting
+        for rx in rxs {
+            assert!(rx.wait().unwrap().is_ok(), "queued jobs complete during shutdown");
+        }
+    }
+}

@@ -34,6 +34,7 @@ use crate::arith::Precision;
 use crate::array::{ArrayReport, EncodedOperand, MatrixArray, OperandCache, TilePlan};
 use crate::npe::PrecSel;
 use crate::util::Matrix;
+use std::sync::Arc;
 
 /// Fixed FSM sequencing overhead per job (decode, start, irq).
 pub const FSM_OVERHEAD: u64 = 16;
@@ -137,6 +138,30 @@ impl ControlFsm {
         csrs: &mut CsrFile,
         cache: &mut OperandCache,
     ) -> Result<JobReport, SocError> {
+        self.run_pinned(job, None, array, dma, bus, spm, ext, csrs, cache)
+    }
+
+    /// [`ControlFsm::run`] with an optional **trusted pinned B operand**:
+    /// when `pinned_b` is supplied (a compiled model's weight encoding,
+    /// built once at compile time), the FSM skips the O(K·N) host-side
+    /// resident-image readback and the cache's content hash-verify — the
+    /// pin token *is* the proof of residency. The DMA still moves the
+    /// same packed bytes and the timing model sees the same operands, so
+    /// every cycle/byte/engine statistic is identical to the untrusted
+    /// path (asserted in `soc::host` tests); only host time changes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_pinned(
+        &mut self,
+        job: GemmJob,
+        pinned_b: Option<&Arc<EncodedOperand>>,
+        array: &mut MatrixArray,
+        dma: &mut DmaEngine,
+        bus: &mut AxiBus,
+        spm: &mut Scratchpad,
+        ext: &mut ExternalMem,
+        csrs: &mut CsrFile,
+        cache: &mut OperandCache,
+    ) -> Result<JobReport, SocError> {
         if job.m == 0 || job.k == 0 || job.n == 0 {
             return Err(SocError::DegenerateJob { m: job.m, k: job.k, n: job.n });
         }
@@ -157,9 +182,25 @@ impl ControlFsm {
         // words, so the work happens at most once per operand. ----
         self.goto(FsmState::Fetch);
         let a = Matrix::from_vec(job.m, job.k, ext.read_f32(job.a_addr, job.m * job.k)?);
-        let b = Matrix::from_vec(job.k, job.n, ext.read_f32(job.b_addr, job.k * job.n)?);
         let a_enc = cache.rows(&a, job.sel);
-        let b_enc = cache.cols(&b, job.sel);
+        let b_enc = match pinned_b {
+            Some(enc) => {
+                if enc.sel != job.sel || enc.elems != job.k || enc.rows != job.n {
+                    return Err(SocError::PinnedOperandMismatch {
+                        want_k: job.k,
+                        want_n: job.n,
+                        got_elems: enc.elems,
+                        got_rows: enc.rows,
+                    });
+                }
+                cache.trusted += 1;
+                Arc::clone(enc)
+            }
+            None => {
+                let b = Matrix::from_vec(job.k, job.n, ext.read_f32(job.b_addr, job.k * job.n)?);
+                cache.cols(&b, job.sel)
+            }
+        };
         let a_packed = a_enc.to_bytes();
         let b_packed = b_enc.to_bytes();
 
@@ -452,6 +493,99 @@ mod tests {
         // first job encodes A and B (2 misses); the next two hit both
         assert_eq!(cache.misses, 2);
         assert_eq!(cache.hits, 4);
+    }
+
+    #[test]
+    fn trusted_pinned_b_matches_untrusted_path_exactly() {
+        let mut rng = Rng::new(14);
+        for sel in PrecSel::ALL {
+            let a = Matrix::random(9, 24, 1.0, &mut rng);
+            let b = Matrix::random(24, 7, 1.0, &mut rng);
+            let job = GemmJob {
+                m: 9,
+                k: 24,
+                n: 7,
+                sel,
+                out_prec: Precision::Fp32,
+                a_addr: 0,
+                b_addr: 4096,
+                c_addr: 8192,
+            };
+            let run = |pinned: bool| {
+                let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) =
+                    rig();
+                ext.write_f32(0, &a.data).unwrap();
+                ext.write_f32(4096, &b.data).unwrap();
+                let enc = Arc::new(EncodedOperand::cols(&b, sel));
+                let pin = if pinned { Some(&enc) } else { None };
+                let rep = fsm
+                    .run_pinned(
+                        job, pin, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs,
+                        &mut cache,
+                    )
+                    .unwrap();
+                let c = ext.read_f32(8192, 9 * 7).unwrap();
+                (rep, c, cache.misses, cache.trusted)
+            };
+            let (rep_u, c_u, miss_u, trust_u) = run(false);
+            let (rep_p, c_p, miss_p, trust_p) = run(true);
+            assert_eq!(c_u, c_p, "{sel:?}: values diverged");
+            assert_eq!(rep_u, rep_p, "{sel:?}: cycle/byte accounting must be unchanged");
+            assert_eq!((miss_u, trust_u), (2, 0), "{sel:?}: untrusted encodes A and B");
+            assert_eq!((miss_p, trust_p), (1, 1), "{sel:?}: pinned encodes only A");
+        }
+    }
+
+    #[test]
+    fn mismatched_pin_is_typed_error() {
+        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) = rig();
+        let mut rng = Rng::new(15);
+        let a = Matrix::random(4, 8, 1.0, &mut rng);
+        let b = Matrix::random(8, 4, 1.0, &mut rng);
+        ext.write_f32(0, &a.data).unwrap();
+        ext.write_f32(4096, &b.data).unwrap();
+        let job = GemmJob {
+            m: 4,
+            k: 8,
+            n: 4,
+            sel: PrecSel::Posit8x2,
+            out_prec: Precision::Posit8,
+            a_addr: 0,
+            b_addr: 4096,
+            c_addr: 8192,
+        };
+        // wrong dims
+        let bad = Arc::new(EncodedOperand::cols(&Matrix::eye(5), PrecSel::Posit8x2));
+        let err = fsm
+            .run_pinned(
+                job,
+                Some(&bad),
+                &mut array,
+                &mut dma,
+                &mut bus,
+                &mut spm,
+                &mut ext,
+                &mut csrs,
+                &mut cache,
+            )
+            .unwrap_err();
+        assert!(matches!(err, SocError::PinnedOperandMismatch { .. }), "{err:?}");
+        // wrong mode
+        let bad_sel = Arc::new(EncodedOperand::cols(&b, PrecSel::Fp4x4));
+        let err = fsm
+            .run_pinned(
+                job,
+                Some(&bad_sel),
+                &mut array,
+                &mut dma,
+                &mut bus,
+                &mut spm,
+                &mut ext,
+                &mut csrs,
+                &mut cache,
+            )
+            .unwrap_err();
+        assert!(matches!(err, SocError::PinnedOperandMismatch { .. }), "{err:?}");
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub enum SocError {
     ShapeMismatch { a_cols: usize, b_rows: usize },
     /// Packed operand/result buffers don't fit the DRAM model.
     OperandsExceedDram { required: usize, capacity: usize },
+    /// A trusted pinned B-operand encoding disagrees with the job's
+    /// mode or dimensions (mis-plumbed warm state).
+    PinnedOperandMismatch { want_k: usize, want_n: usize, got_elems: usize, got_rows: usize },
 }
 
 impl fmt::Display for SocError {
@@ -58,6 +61,10 @@ impl fmt::Display for SocError {
             SocError::OperandsExceedDram { required, capacity } => {
                 write!(f, "operands exceed DRAM model: need {required} bytes of {capacity}")
             }
+            SocError::PinnedOperandMismatch { want_k, want_n, got_elems, got_rows } => write!(
+                f,
+                "pinned B operand is {got_elems}x{got_rows} (K x N), job wants {want_k}x{want_n}"
+            ),
         }
     }
 }

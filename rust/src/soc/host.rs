@@ -15,17 +15,23 @@ use super::csr::CsrFile;
 use super::dma::DmaEngine;
 use super::error::SocError;
 use super::memory::Scratchpad;
-use crate::array::{ArrayMorph, MatrixArray, OperandCache};
+use crate::array::{ArrayMorph, EncodedOperand, MatrixArray, OperandCache};
 use crate::npe::PrecSel;
 use crate::util::Matrix;
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 /// Host → co-processor commands.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub enum Command {
     /// Run a GEMM with the current array configuration.
     Gemm(GemmJob),
+    /// A GEMM whose B operand rides a **trusted pin**: the packed
+    /// encoding of the resident weight image, built once at model
+    /// compile time. The FSM skips the per-job resident readback +
+    /// hash-verify; cycle/byte accounting is unchanged.
+    GemmPinned(GemmJob, Arc<EncodedOperand>),
     /// Reconfigure array geometry (drains quires).
     Morph(ArrayMorph),
     /// Barrier: all prior commands must complete (models the host
@@ -87,6 +93,12 @@ pub struct Soc {
     /// above it. Zero until a model is warmed, so ad-hoc [`Soc::gemm`]
     /// callers see the historical address layout.
     resident_top: u64,
+    /// Free list of reclaimed resident regions below the watermark
+    /// (`(start, end)` byte ranges, sorted by start, maximally
+    /// coalesced). [`Soc::alloc_resident`] reuses these first-fit, so
+    /// evicting a model buried under later registrations no longer
+    /// leaks its DRAM until the whole stack unwinds.
+    resident_free: Vec<(u64, u64)>,
     /// Opaque per-compiled-model warm state (run arenas, resident
     /// addresses) keyed by the model's uid. Owned by the hardware handle
     /// — like device memory, the warm state travels with the replica.
@@ -109,15 +121,38 @@ impl Soc {
             next_seq: 0,
             lifetime: JobReport::default(),
             resident_top: 0,
+            resident_free: Vec::new(),
             model_state: HashMap::new(),
         }
     }
 
     /// Reserve `bytes` of DRAM for a resident image (compiled-model
     /// weights, per-model request scratch). Returns the 64-byte-aligned
-    /// base address. The top quarter of DRAM is kept free for the
-    /// control FSM's packed-operand staging and write-back regions.
+    /// base address. Reclaimed regions on the free list are reused
+    /// first-fit before the bump watermark grows. The top quarter of
+    /// DRAM is kept free for the control FSM's packed-operand staging
+    /// and write-back regions.
     pub fn alloc_resident(&mut self, bytes: usize) -> Result<u64, SocError> {
+        if bytes > 0 {
+            let fit = self
+                .resident_free
+                .iter()
+                .position(|&(s, e)| s.next_multiple_of(64) + bytes as u64 <= e);
+            if let Some(i) = fit {
+                let (s, e) = self.resident_free.remove(i);
+                let addr = s.next_multiple_of(64);
+                let end = addr + bytes as u64;
+                let mut at = i;
+                if addr > s {
+                    self.resident_free.insert(at, (s, addr));
+                    at += 1;
+                }
+                if end < e {
+                    self.resident_free.insert(at, (end, e));
+                }
+                return Ok(addr);
+            }
+        }
         let addr = self.resident_top.next_multiple_of(64);
         let end = addr + bytes as u64;
         let limit = (self.ext.capacity() - self.ext.capacity() / 4) as u64;
@@ -131,6 +166,42 @@ impl Soc {
         Ok(addr)
     }
 
+    /// Return the resident region `[start, end)` to the allocator,
+    /// coalescing with adjacent free blocks. A region that (after
+    /// coalescing) reaches the watermark shrinks it; anything buried
+    /// under live allocations goes on the free list for
+    /// [`Soc::alloc_resident`] to reuse.
+    pub fn free_resident(&mut self, start: u64, end: u64) {
+        debug_assert!(start <= end && end <= self.resident_top);
+        if start >= end {
+            return;
+        }
+        let (mut start, mut end) = (start, end);
+        self.resident_free.retain(|&(s, e)| {
+            if e == start {
+                start = s;
+                false
+            } else if s == end {
+                end = e;
+                false
+            } else {
+                true
+            }
+        });
+        if end == self.resident_top {
+            self.resident_top = start;
+        } else {
+            let pos = self.resident_free.partition_point(|&(s, _)| s < start);
+            self.resident_free.insert(pos, (start, end));
+        }
+    }
+
+    /// Bytes currently sitting on the resident free list (reclaimed but
+    /// buried under live allocations).
+    pub fn resident_free_bytes(&self) -> u64 {
+        self.resident_free.iter().map(|(s, e)| e - s).sum()
+    }
+
     /// Current resident-region watermark. Take a mark before a
     /// multi-step resident allocation so a failure can roll it back with
     /// [`Soc::resident_rollback`].
@@ -140,10 +211,24 @@ impl Soc {
 
     /// Roll the resident watermark back to `mark`. Only sound for the
     /// caller that performed *every* allocation since the mark (it held
-    /// `&mut Soc` throughout, so nothing else can have allocated).
+    /// `&mut Soc` throughout, so nothing else can have allocated). Free
+    /// blocks at or above the mark are dropped with it, and a free
+    /// block left touching the new watermark is unwound into it — free
+    /// blocks always live strictly below the watermark.
     pub fn resident_rollback(&mut self, mark: u64) {
         debug_assert!(mark <= self.resident_top);
         self.resident_top = mark;
+        self.resident_free.retain(|&(s, _)| s < mark);
+        if let Some(last) = self.resident_free.last_mut() {
+            last.1 = last.1.min(mark);
+        }
+        while let Some(&(s, e)) = self.resident_free.last() {
+            if e != self.resident_top {
+                break;
+            }
+            self.resident_free.pop();
+            self.resident_top = s;
+        }
     }
 
     /// Is warm state registered for compiled model `uid`?
@@ -185,6 +270,21 @@ impl Soc {
                 Command::Gemm(job) => {
                     let rep = self.fsm.run(
                         job,
+                        &mut self.array,
+                        &mut self.dma,
+                        &mut self.bus,
+                        &mut self.spm,
+                        &mut self.ext,
+                        &mut self.csrs,
+                        &mut self.enc_cache,
+                    )?;
+                    self.lifetime.merge(&rep);
+                    Some(rep)
+                }
+                Command::GemmPinned(job, w_enc) => {
+                    let rep = self.fsm.run_pinned(
+                        job,
+                        Some(&w_enc),
                         &mut self.array,
                         &mut self.dma,
                         &mut self.bus,
@@ -263,6 +363,47 @@ impl Soc {
         sel: PrecSel,
         out_prec: crate::arith::Precision,
     ) -> Result<(Matrix, JobReport), SocError> {
+        self.gemm_warm(a, k, n, b_addr, None, a_addr, c_addr, sel, out_prec)
+    }
+
+    /// [`Soc::gemm_resident`] with a **trusted pinned B encoding**: the
+    /// compiled model's `Arc<EncodedOperand>` travels with the job, so
+    /// the FSM never reads the resident f32 image back or hash-verifies
+    /// it against the operand cache — the O(K·N) host work that used to
+    /// run per layer per request. Cycle/byte/engine accounting is
+    /// identical to [`Soc::gemm_resident`] (asserted in tests).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_trusted(
+        &mut self,
+        a: &Matrix,
+        k: usize,
+        n: usize,
+        b_addr: u64,
+        w_enc: &Arc<EncodedOperand>,
+        a_addr: u64,
+        c_addr: u64,
+        sel: PrecSel,
+        out_prec: crate::arith::Precision,
+    ) -> Result<(Matrix, JobReport), SocError> {
+        self.gemm_warm(a, k, n, b_addr, Some(w_enc), a_addr, c_addr, sel, out_prec)
+    }
+
+    /// Shared body of [`Soc::gemm_resident`] / [`Soc::gemm_trusted`] —
+    /// one place for the staging-headroom guard and the submit flow, so
+    /// a hardening fix can never apply to one path and miss the other.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_warm(
+        &mut self,
+        a: &Matrix,
+        k: usize,
+        n: usize,
+        b_addr: u64,
+        pinned_b: Option<&Arc<EncodedOperand>>,
+        a_addr: u64,
+        c_addr: u64,
+        sel: PrecSel,
+        out_prec: crate::arith::Precision,
+    ) -> Result<(Matrix, JobReport), SocError> {
         if a.cols != k {
             return Err(SocError::ShapeMismatch { a_cols: a.cols, b_rows: k });
         }
@@ -286,7 +427,10 @@ impl Soc {
         }
         self.ext.write_f32(a_addr, &a.data)?;
         let job = GemmJob { m: a.rows, k, n, sel, out_prec, a_addr, b_addr, c_addr };
-        self.submit(Command::Gemm(job));
+        match pinned_b {
+            Some(enc) => self.submit(Command::GemmPinned(job, Arc::clone(enc))),
+            None => self.submit(Command::Gemm(job)),
+        };
         let mut comps = self.process_all()?;
         let rep = comps.pop().unwrap().report.unwrap();
         let c = Matrix::from_vec(a.rows, n, self.ext.read_f32(c_addr, a.rows * n)?);
@@ -378,6 +522,99 @@ mod tests {
             .unwrap();
         assert_eq!(c0.data, c1.data);
         assert_eq!(r0, r1, "resident-B GEMM must be cycle/stat-identical");
+    }
+
+    #[test]
+    fn trusted_gemm_matches_resident_gemm_exactly() {
+        let mut rng = Rng::new(23);
+        let a = Matrix::random(7, 18, 1.0, &mut rng);
+        let b = Matrix::random(18, 5, 1.0, &mut rng);
+        let place = |soc: &mut Soc| {
+            let b_addr = soc.alloc_resident(b.data.len() * 4).unwrap();
+            soc.ext.write_f32(b_addr, &b.data).unwrap();
+            let a_addr = soc.alloc_resident(a.data.len() * 4).unwrap();
+            let c_addr = soc.alloc_resident(7 * 5 * 4).unwrap();
+            (b_addr, a_addr, c_addr)
+        };
+        for sel in PrecSel::ALL {
+            let mut res = Soc::new(SocConfig::default());
+            let (b_addr, a_addr, c_addr) = place(&mut res);
+            let (c0, r0) = res
+                .gemm_resident(&a, 18, 5, b_addr, a_addr, c_addr, sel, crate::arith::Precision::Fp32)
+                .unwrap();
+            let mut tru = Soc::new(SocConfig::default());
+            let (b_addr, a_addr, c_addr) = place(&mut tru);
+            let w_enc = Arc::new(crate::array::EncodedOperand::cols(&b, sel));
+            let (c1, r1) = tru
+                .gemm_trusted(
+                    &a, 18, 5, b_addr, &w_enc, a_addr, c_addr, sel,
+                    crate::arith::Precision::Fp32,
+                )
+                .unwrap();
+            assert_eq!(c0.data, c1.data, "{sel:?}");
+            assert_eq!(r0, r1, "{sel:?}: trusted-pin GEMM must be cycle/stat-identical");
+            // the trusted path never consulted the cache for B
+            assert_eq!(tru.enc_cache.trusted, 1, "{sel:?}");
+            assert_eq!(res.enc_cache.trusted, 0, "{sel:?}");
+            assert_eq!(tru.enc_cache.misses + 1, res.enc_cache.misses, "{sel:?}");
+        }
+    }
+
+    #[test]
+    fn freed_buried_region_is_reused_first_fit() {
+        let mut soc = Soc::new(SocConfig::default());
+        let a = soc.alloc_resident(1000).unwrap();
+        let b = soc.alloc_resident(500).unwrap();
+        let top = soc.resident_mark();
+        // free the buried block: watermark cannot move, free list grows
+        soc.free_resident(a, a + 1000);
+        assert_eq!(soc.resident_mark(), top);
+        assert_eq!(soc.resident_free_bytes(), 1000);
+        // a same-size allocation reuses it exactly — watermark flat
+        let a2 = soc.alloc_resident(1000).unwrap();
+        assert_eq!(a2, a);
+        assert_eq!(soc.resident_mark(), top);
+        assert_eq!(soc.resident_free_bytes(), 0);
+        // freeing the top block shrinks the watermark
+        soc.free_resident(b, top);
+        assert!(soc.resident_mark() < top);
+    }
+
+    #[test]
+    fn free_blocks_coalesce_and_unwind_the_watermark() {
+        let mut soc = Soc::new(SocConfig::default());
+        let a = soc.alloc_resident(256).unwrap();
+        let b = soc.alloc_resident(256).unwrap();
+        let c = soc.alloc_resident(256).unwrap();
+        let top = soc.resident_mark();
+        soc.free_resident(a, b); // [a, b)
+        soc.free_resident(b, c); // coalesces to [a, c)
+        assert_eq!(soc.resident_free_bytes(), (c - a), "adjacent blocks must merge");
+        // freeing the top region absorbs the merged block and unwinds
+        soc.free_resident(c, top);
+        assert_eq!(soc.resident_mark(), a);
+        assert_eq!(soc.resident_free_bytes(), 0);
+    }
+
+    #[test]
+    fn rollback_discards_free_blocks_above_the_mark() {
+        let mut soc = Soc::new(SocConfig::default());
+        let mark = soc.resident_mark();
+        let a = soc.alloc_resident(128).unwrap();
+        let _b = soc.alloc_resident(128).unwrap();
+        soc.free_resident(a, a + 128);
+        soc.resident_rollback(mark);
+        assert_eq!(soc.resident_mark(), mark);
+        assert_eq!(soc.resident_free_bytes(), 0);
+        // a free block left touching the rolled-back watermark unwinds
+        // into it instead of stranding on the list
+        let a = soc.alloc_resident(128).unwrap();
+        let b = soc.alloc_resident(128).unwrap();
+        let c = soc.alloc_resident(128).unwrap();
+        soc.free_resident(b, c);
+        soc.resident_rollback(c);
+        assert_eq!(soc.resident_mark(), a + 128, "trailing free block must unwind");
+        assert_eq!(soc.resident_free_bytes(), 0);
     }
 
     #[test]

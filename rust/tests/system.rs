@@ -1,5 +1,6 @@
 //! System-level invariants that need no artifacts: multi-workload
-//! router sessions, morph sequences, failure injection.
+//! router sessions, morph sequences, failure injection, and the async
+//! serving runtime under mixed load.
 
 use xr_npe::arith::Precision;
 use xr_npe::array::ArrayMorph;
@@ -91,6 +92,69 @@ fn extreme_values_saturate_not_poison() {
     let b = Matrix::from_vec(2, 2, vec![1e30, 1.0, -1.0, 1e-30]);
     let (c, _) = soc.gemm(&a, &b, PrecSel::Fp4x4, Precision::Fp32).unwrap();
     assert!(c.data.iter().all(|x| x.is_finite()), "{:?}", c.data);
+}
+
+#[test]
+fn async_runtime_serves_mixed_workloads_bit_identically() {
+    // interleave every workload kind through the async submission API
+    // (handles redeemed out of submission order) and check each result
+    // against a fresh serial router — values must match exactly, and
+    // the runtime must account every job.
+    use xr_npe::coordinator::{ModelInstance, Router, WorkloadKind};
+    use xr_npe::models::{effnet, gaze, random_weights, ulvio};
+
+    let build = || {
+        let mut r = Router::new(2, SocConfig::default());
+        for (kind, graph, sel, seed) in [
+            (WorkloadKind::Vio, ulvio::build(), PrecSel::Posit8x2, 70u64),
+            (WorkloadKind::Gaze, gaze::build(), PrecSel::Fp4x4, 71),
+            (WorkloadKind::Classify, effnet::build(), PrecSel::Posit16x1, 72),
+        ] {
+            let w = random_weights(&graph, seed);
+            r.register(kind, ModelInstance::uniform(graph, w, sel).unwrap()).unwrap();
+        }
+        r
+    };
+    let mut async_r = build();
+    let mut serial_r = build();
+    let in_len = |kind| match kind {
+        WorkloadKind::Vio => 512,
+        WorkloadKind::Gaze => 16,
+        WorkloadKind::Classify => 256,
+    };
+    let aux_len = |kind| if kind == WorkloadKind::Vio { 6 } else { 0 };
+    let reqs: Vec<(WorkloadKind, Vec<f32>, Vec<f32>)> = (0..12)
+        .map(|i| {
+            let kind = WorkloadKind::ALL[i % 3];
+            let input: Vec<f32> =
+                (0..in_len(kind)).map(|j| ((i * 31 + j) as f32 * 0.017).sin() * 0.4).collect();
+            let aux: Vec<f32> = (0..aux_len(kind)).map(|j| 0.05 * (j as f32 + i as f32)).collect();
+            (kind, input, aux)
+        })
+        .collect();
+    // submit everything before redeeming anything — the queues pipeline
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|(kind, input, aux)| async_r.submit(*kind, input.clone(), aux.clone()).unwrap())
+        .collect();
+    for ((kind, input, aux), h) in reqs.iter().zip(handles) {
+        let got = Router::resolve(h).unwrap();
+        let want = serial_r.route(*kind, input, aux).unwrap();
+        assert_eq!(got.output, want.output, "{kind:?}: async diverged from serial");
+        assert_eq!(got.report, want.report, "{kind:?}: reports diverged");
+        assert_eq!(got.replica, want.replica, "{kind:?}: assignment diverged");
+    }
+    async_r.quiesce();
+    let m = async_r.runtime_metrics();
+    assert_eq!(m.completed, 12);
+    assert_eq!(async_r.total_served(), 12);
+    for i in 0..2 {
+        assert_eq!(
+            async_r.replica_lifetime(i),
+            serial_r.replica_lifetime(i),
+            "replica {i} lifetime stats diverged"
+        );
+    }
 }
 
 #[test]
