@@ -309,6 +309,89 @@ fn main() {
         ));
     }
 
+    // 4e. sharded vs whole-model serving — the same MLP on the same
+    // 2-replica fleet, once whole-resident (round-robin) and once
+    // K-split across both replicas (scatter → partial quires → exact
+    // reduce at the coordinator). On a model that fits either way the
+    // whole path wins wall-clock (no reduction hop); sharding is the
+    // capacity lever for models no replica could host alone — so the
+    // assert here is bit-identity, and the JSON records the cost of the
+    // reduction hop.
+    println!("\n-- serving: whole-resident vs 2-way sharded (32 mlp_xr inferences) --");
+    {
+        use xr_npe::coordinator::{ModelInstance, Router, WorkloadKind};
+        use xr_npe::soc::SocConfig;
+
+        const REQS: usize = 32;
+        let g = xr_npe::models::mlp::build();
+        let w = common::random_weights(&g, 19);
+        let inputs: Vec<Vec<f32>> = (0..REQS)
+            .map(|i| (0..256).map(|j| ((i * 256 + j) as f32 * 0.011).sin() * 0.5).collect())
+            .collect();
+        let mut r_whole = Router::new(2, SocConfig::default());
+        r_whole
+            .register(
+                WorkloadKind::Classify,
+                ModelInstance::uniform(g.clone(), w.clone(), PrecSel::Posit8x2).unwrap(),
+            )
+            .unwrap();
+        let mut r_shard = Router::new(2, SocConfig::default());
+        r_shard
+            .register_sharded(
+                WorkloadKind::Classify,
+                ModelInstance::uniform(g.clone(), w.clone(), PrecSel::Posit8x2).unwrap(),
+                2,
+            )
+            .unwrap();
+        // warm pass + bit-identity: every request must match exactly,
+        // and the sharded reports must carry the documented reduction
+        // term on top of conserved MAC work
+        let mut reduce_cycles = 0u64;
+        for x in &inputs {
+            let a = r_whole.route(WorkloadKind::Classify, x, &[]).unwrap();
+            let b = r_shard.route(WorkloadKind::Classify, x, &[]).unwrap();
+            assert_eq!(a.output, b.output, "sharded serving diverged from whole-model");
+            assert_eq!(a.report.jobs.array.macs, b.report.jobs.array.macs);
+            reduce_cycles = b.report.reduce_cycles;
+        }
+        let reps = if quick { 1 } else { 5 };
+        let mut bench = |r: &mut Router| {
+            (0..reps)
+                .map(|_| {
+                    common::time_ns(1, || {
+                        let handles: Vec<_> = inputs
+                            .iter()
+                            .map(|x| {
+                                r.submit(WorkloadKind::Classify, x.clone(), vec![]).unwrap()
+                            })
+                            .collect();
+                        for h in handles {
+                            std::hint::black_box(Router::resolve(h).unwrap());
+                        }
+                    })
+                })
+                .fold(f64::MAX, f64::min)
+        };
+        let ns_whole = bench(&mut r_whole);
+        let ns_shard = bench(&mut r_shard);
+        let tput_whole = REQS as f64 / (ns_whole / 1e9);
+        let tput_shard = REQS as f64 / (ns_shard / 1e9);
+        println!(
+            "  whole-resident {:>9.0} req/s   2-way sharded {:>9.0} req/s   ratio {:>5.2}x   ({} reduce-cycles/req, bit-identical)",
+            tput_whole,
+            tput_shard,
+            tput_shard / tput_whole,
+            reduce_cycles
+        );
+        bench_json.push(format!(
+            "{{\"bench\":\"hotpath\",\"section\":\"sharded_vs_whole_serving\",\"model\":\"mlp_xr\",\
+             \"replicas\":2,\"shards\":2,\"requests\":{REQS},\
+             \"whole_req_per_s\":{tput_whole:.1},\"sharded_req_per_s\":{tput_shard:.1},\
+             \"sharded_over_whole\":{:.3},\"reduce_cycles_per_req\":{reduce_cycles}}}",
+            tput_shard / tput_whole
+        ));
+    }
+
     // trajectory artifacts: one JSON object per line (JSONL)
     let json = bench_json.join("\n") + "\n";
     if let Err(e) = std::fs::write("BENCH_hotpath.json", &json) {

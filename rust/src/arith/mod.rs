@@ -21,7 +21,7 @@ pub mod posit;
 pub mod quire;
 pub mod tables;
 
-pub use quire::Quire;
+pub use quire::{Quire, QuireMatrix, QUIRE_SPILL_BYTES};
 
 /// Classification of a decoded value.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -16,10 +16,15 @@
 //! This matches the sizing rationale of the posit-standard quire
 //! (16·n bits for n = 16).
 
-use super::{Class, Decoded};
+use super::{tables, Class, Decoded, Precision};
 
 /// Fraction bits of the quire fixed-point representation.
 pub const QUIRE_FRAC: u32 = 56;
+
+/// Bytes of one quire spilled to DRAM for cross-shard reduction: the
+/// 128-bit accumulator little-endian plus one sticky-flag byte
+/// (bit 0 = overflow, bit 1 = inexact, bit 2 = NaR).
+pub const QUIRE_SPILL_BYTES: usize = 17;
 
 /// Exact fixed-point accumulator.
 #[derive(Debug, Clone, Copy)]
@@ -139,6 +144,13 @@ impl Quire {
     }
 
     /// Merge another quire (adder-tree reduction of partial quires).
+    ///
+    /// The accumulator addition is plain i128 arithmetic, so merging
+    /// shard-partial quires in any order reproduces the single-quire
+    /// accumulation of the same products **bit-exactly** (integer
+    /// addition is associative and commutative); the sticky flags OR.
+    /// This is the exactness guarantee cross-replica sharded GEMM
+    /// reduction rests on, property-tested below.
     pub fn merge(&mut self, other: &Quire) {
         self.nar |= other.nar;
         self.inexact |= other.inexact;
@@ -147,6 +159,94 @@ impl Quire {
             None => self.overflow = true,
         }
         self.overflow |= other.overflow;
+    }
+
+    /// Rebuild a quire from its raw accumulator + sticky flags (the
+    /// receive side of a cross-shard partial-quire transfer).
+    pub fn from_raw(acc: i128, overflow: bool, inexact: bool, nar: bool) -> Quire {
+        Quire { acc, overflow, inexact, nar }
+    }
+
+    /// Serialize for the DRAM spill the partial-GEMM writeback models
+    /// ([`QUIRE_SPILL_BYTES`] bytes).
+    pub fn to_spill_bytes(&self) -> [u8; QUIRE_SPILL_BYTES] {
+        let mut out = [0u8; QUIRE_SPILL_BYTES];
+        out[..16].copy_from_slice(&self.acc.to_le_bytes());
+        out[16] = self.overflow as u8 | (self.inexact as u8) << 1 | (self.nar as u8) << 2;
+        out
+    }
+
+    /// Inverse of [`Quire::to_spill_bytes`]. Panics on a short slice —
+    /// the spill image is sized by the caller.
+    pub fn from_spill_bytes(b: &[u8]) -> Quire {
+        let acc = i128::from_le_bytes(b[..16].try_into().expect("quire spill: short slice"));
+        let f = b[16];
+        Quire::from_raw(acc, f & 1 != 0, f & 2 != 0, f & 4 != 0)
+    }
+
+    /// Round to `prec` exactly as the engine's output-processing stage
+    /// does (`Engine::read_lane` + table decode): encode the quire value
+    /// once to the format, decode back to the f32 carrier. Sharded
+    /// serving rounds the *merged* quire through this expression, so the
+    /// result is bit-identical to the unsharded single-quire path.
+    pub fn round_to(&self, prec: Precision) -> f32 {
+        tables::decode_value(prec, prec.encode(self.to_f64())) as f32
+    }
+}
+
+/// A rows×cols grid of partial quires — the payload of one sharded
+/// GEMM's writeback, merged at the coordinator before the single final
+/// rounding.
+#[derive(Debug, Clone)]
+pub struct QuireMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<Quire>,
+}
+
+impl QuireMatrix {
+    /// All-zero quires (the merge identity).
+    pub fn zeros(rows: usize, cols: usize) -> QuireMatrix {
+        QuireMatrix { rows, cols, data: vec![Quire::new(); rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<Quire>) -> QuireMatrix {
+        assert_eq!(data.len(), rows * cols);
+        QuireMatrix { rows, cols, data }
+    }
+
+    /// Merge `other` into the column block starting at `c0` (rows must
+    /// match). A K-split shard merges at `c0 = 0` over the full width; an
+    /// N-split shard merges its disjoint column slice into zero quires.
+    pub fn merge_block(&mut self, c0: usize, other: &QuireMatrix) {
+        assert_eq!(self.rows, other.rows, "quire merge: row mismatch");
+        assert!(c0 + other.cols <= self.cols, "quire merge: column block out of range");
+        for r in 0..other.rows {
+            for c in 0..other.cols {
+                self.data[r * self.cols + c0 + c].merge(&other.data[r * other.cols + c]);
+            }
+        }
+    }
+
+    /// Round every quire once to `prec` (see [`Quire::round_to`]).
+    pub fn round_to(&self, prec: Precision) -> Vec<f32> {
+        self.data.iter().map(|q| q.round_to(prec)).collect()
+    }
+
+    /// Serialize row-major to the DRAM spill image.
+    pub fn to_spill_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * QUIRE_SPILL_BYTES);
+        for q in &self.data {
+            out.extend_from_slice(&q.to_spill_bytes());
+        }
+        out
+    }
+
+    /// Parse a spill image back into quires.
+    pub fn from_spill_bytes(rows: usize, cols: usize, bytes: &[u8]) -> QuireMatrix {
+        assert_eq!(bytes.len(), rows * cols * QUIRE_SPILL_BYTES, "quire spill: size mismatch");
+        let data = bytes.chunks_exact(QUIRE_SPILL_BYTES).map(Quire::from_spill_bytes).collect();
+        QuireMatrix { rows, cols, data }
     }
 }
 
@@ -265,5 +365,148 @@ mod tests {
         }
         q_a.merge(&q_b);
         assert_eq!(q_a.raw(), q_all.raw());
+    }
+
+    /// Build a posit8-quantized product list plus its single-quire
+    /// accumulation (the unsharded reference).
+    fn random_products(rng: &mut crate::util::Rng, k: usize) -> (Vec<(f64, f64)>, Quire) {
+        let p = Precision::Posit8;
+        let prods: Vec<(f64, f64)> =
+            (0..k).map(|_| (p.quantize(rng.normal()), p.quantize(rng.normal()))).collect();
+        let mut whole = Quire::new();
+        for &(x, y) in &prods {
+            whole.add_product(dec(x), dec(y));
+        }
+        (prods, whole)
+    }
+
+    #[test]
+    fn merge_matches_single_quire_over_random_partitions() {
+        // The sharding invariant: partition the K dimension into any
+        // number of contiguous shards, accumulate each shard in its own
+        // quire, merge — the raw accumulator must equal the single-quire
+        // accumulation bit for bit, for every partition.
+        let mut rng = crate::util::Rng::new(41);
+        for trial in 0..20 {
+            let k = 1 + (rng.next_u64() % 96) as usize;
+            let (prods, whole) = random_products(&mut rng, k);
+            let n_shards = 1 + (rng.next_u64() % 5) as usize;
+            // random cut points (may produce empty shards — merge of an
+            // untouched quire is the identity, so they must be harmless)
+            let mut cuts: Vec<usize> =
+                (0..n_shards - 1).map(|_| (rng.next_u64() % (k as u64 + 1)) as usize).collect();
+            cuts.sort_unstable();
+            cuts.insert(0, 0);
+            cuts.push(k);
+            let mut merged = Quire::new();
+            for w in cuts.windows(2) {
+                let mut part = Quire::new();
+                for &(x, y) in &prods[w[0]..w[1]] {
+                    part.add_product(dec(x), dec(y));
+                }
+                merged.merge(&part);
+            }
+            assert_eq!(merged.raw(), whole.raw(), "trial {trial}: k={k} cuts={cuts:?}");
+            assert_eq!(merged.to_f64(), whole.to_f64());
+            assert_eq!(
+                (merged.overflow, merged.inexact, merged.nar),
+                (whole.overflow, whole.inexact, whole.nar)
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mut rng = crate::util::Rng::new(43);
+        for _ in 0..20 {
+            let parts: Vec<Quire> = (0..3)
+                .map(|_| {
+                    let (_, q) = random_products(&mut rng, 1 + (rng.next_u64() % 32) as usize);
+                    q
+                })
+                .collect();
+            let [a, b, c] = [parts[0], parts[1], parts[2]];
+            // (a ⊕ b) ⊕ c
+            let mut ab = a;
+            ab.merge(&b);
+            ab.merge(&c);
+            // a ⊕ (b ⊕ c)
+            let mut bc = b;
+            bc.merge(&c);
+            let mut a_bc = a;
+            a_bc.merge(&bc);
+            assert_eq!(ab.raw(), a_bc.raw(), "merge must be associative");
+            // c ⊕ b ⊕ a
+            let mut rev = c;
+            rev.merge(&b);
+            rev.merge(&a);
+            assert_eq!(ab.raw(), rev.raw(), "merge must be commutative");
+        }
+    }
+
+    #[test]
+    fn single_shard_merge_is_identity() {
+        let mut rng = crate::util::Rng::new(47);
+        let (_, whole) = random_products(&mut rng, 40);
+        let mut acc = Quire::new();
+        acc.merge(&whole);
+        assert_eq!(acc.raw(), whole.raw());
+        assert_eq!(acc.round_to(Precision::Fp32), whole.round_to(Precision::Fp32));
+    }
+
+    #[test]
+    fn spill_bytes_round_trip() {
+        let mut rng = crate::util::Rng::new(53);
+        for _ in 0..50 {
+            let (_, mut q) = random_products(&mut rng, 1 + (rng.next_u64() % 64) as usize);
+            q.overflow = rng.coin(0.3);
+            q.inexact = rng.coin(0.3);
+            q.nar = rng.coin(0.2);
+            let back = Quire::from_spill_bytes(&q.to_spill_bytes());
+            assert_eq!(back.raw(), q.raw());
+            assert_eq!(
+                (back.overflow, back.inexact, back.nar),
+                (q.overflow, q.inexact, q.nar)
+            );
+        }
+        // negative accumulators survive the i128 round trip
+        let mut q = Quire::new();
+        q.add_product(dec(-3.0), dec(5.0));
+        assert!(q.raw() < 0);
+        assert_eq!(Quire::from_spill_bytes(&q.to_spill_bytes()).raw(), q.raw());
+    }
+
+    #[test]
+    fn quire_matrix_merge_blocks_and_round() {
+        // a 2×4 output reduced from one K-split shard pair (full-width
+        // merges) plus an N-split pair (disjoint column blocks)
+        let mut rng = crate::util::Rng::new(59);
+        let mk = |rng: &mut crate::util::Rng| {
+            let (_, q) = random_products(rng, 8);
+            q
+        };
+        let parts: Vec<Quire> = (0..16).map(|_| mk(&mut rng)).collect();
+        let a = QuireMatrix::from_vec(2, 4, parts[..8].to_vec());
+        let b = QuireMatrix::from_vec(2, 4, parts[8..].to_vec());
+        let mut k_merged = QuireMatrix::zeros(2, 4);
+        k_merged.merge_block(0, &a);
+        k_merged.merge_block(0, &b);
+        for i in 0..8 {
+            let mut want = parts[i];
+            want.merge(&parts[8 + i]);
+            assert_eq!(k_merged.data[i].raw(), want.raw());
+        }
+        // N-split: left/right column halves land disjoint
+        let left = QuireMatrix::from_vec(2, 2, vec![parts[0], parts[1], parts[4], parts[5]]);
+        let right = QuireMatrix::from_vec(2, 2, vec![parts[2], parts[3], parts[6], parts[7]]);
+        let mut n_merged = QuireMatrix::zeros(2, 4);
+        n_merged.merge_block(0, &left);
+        n_merged.merge_block(2, &right);
+        for i in 0..8 {
+            assert_eq!(n_merged.data[i].raw(), parts[i].raw(), "slot {i}");
+        }
+        // spill round trip + single final rounding
+        let back = QuireMatrix::from_spill_bytes(2, 4, &n_merged.to_spill_bytes());
+        assert_eq!(back.round_to(Precision::Fp32), n_merged.round_to(Precision::Fp32));
     }
 }

@@ -40,7 +40,7 @@
 
 use super::encoding::EncodedOperand;
 use super::tiling::{Tile, TilePlan};
-use crate::arith::{tables, Precision};
+use crate::arith::{tables, Precision, Quire, QuireMatrix};
 use crate::npe::{Engine, EngineStats, PrecSel};
 use crate::util::Matrix;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -193,10 +193,45 @@ pub fn tile_kernel(
     (overflow, nar)
 }
 
+/// [`tile_kernel`] without the output-processing round: each output
+/// slot's **raw quire** leaves the array (the partial-GEMM path — the
+/// coordinator merges shard partials and rounds exactly once). Same
+/// accumulation, same flags, no `read_lane` rounds in the stats.
+pub fn tile_kernel_quires(
+    eng: &mut Engine,
+    tile: &Tile,
+    a: &EncodedOperand,
+    b: &EncodedOperand,
+    out: &mut [Quire],
+) -> (bool, bool) {
+    debug_assert_eq!(out.len(), tile.mt * tile.nt);
+    let mut overflow = false;
+    let mut nar = false;
+    for ti in 0..tile.mt {
+        for tj in 0..tile.nt {
+            eng.clear();
+            eng.dot_words_fused(a.row(tile.m0 + ti), b.row(tile.n0 + tj));
+            let (o, nr) = eng.lane_flags(0);
+            overflow |= o;
+            nar |= nr;
+            out[ti * tile.nt + tj] = eng.lane_quire(0);
+        }
+    }
+    (overflow, nar)
+}
+
 fn scatter_tile(out: &mut Matrix, tile: &Tile, buf: &[f32]) {
     for ti in 0..tile.mt {
         for tj in 0..tile.nt {
             out.set(tile.m0 + ti, tile.n0 + tj, buf[ti * tile.nt + tj]);
+        }
+    }
+}
+
+fn scatter_tile_quires(out: &mut QuireMatrix, tile: &Tile, buf: &[Quire]) {
+    for ti in 0..tile.mt {
+        for tj in 0..tile.nt {
+            out.data[(tile.m0 + ti) * out.cols + tile.n0 + tj] = buf[ti * tile.nt + tj];
         }
     }
 }
@@ -293,6 +328,26 @@ impl MatrixArray {
             self.run_parallel(&plan, a, b, out_prec)
         } else {
             self.run_serial(&plan, a, b, out_prec)
+        }
+    }
+
+    /// **Partial GEMM** over pre-encoded operands: every output slot
+    /// comes back as its raw [`Quire`] instead of a rounded value, so a
+    /// cross-shard reduction can merge partials exactly and round once
+    /// ([`QuireMatrix::merge_block`] + [`Quire::round_to`]). Cycle and
+    /// activity accounting follow the rounded path (same tile schedule,
+    /// same MAC stream); the output-processing stage is skipped, so
+    /// `stats.rounds` stays zero — rounding happens at the reducer.
+    pub fn gemm_packed_quires(
+        &mut self,
+        a: &EncodedOperand,
+        b: &EncodedOperand,
+    ) -> (QuireMatrix, ArrayReport) {
+        let plan = self.plan_for(a, b);
+        if plan.tiles.len() >= PARALLEL_TILE_THRESHOLD && worker_threads() > 1 {
+            self.run_parallel_quires(&plan, a, b)
+        } else {
+            self.run_serial_quires(&plan, a, b)
         }
     }
 
@@ -411,6 +466,90 @@ impl MatrixArray {
         report.macs_per_cycle = report.macs as f64 / report.cycles as f64;
         (out, report)
     }
+
+    fn run_serial_quires(
+        &mut self,
+        plan: &TilePlan,
+        a: &EncodedOperand,
+        b: &EncodedOperand,
+    ) -> (QuireMatrix, ArrayReport) {
+        let tile_cycles = self.tile_cycles(a.words_per_row);
+        let mut out = QuireMatrix::zeros(plan.m, plan.n);
+        let mut report = self.base_report(plan);
+        let (r, c) = self.morph.dims();
+        let mut buf = vec![Quire::new(); r * c];
+        for tile in &plan.tiles {
+            let slots = tile.mt * tile.nt;
+            let (o, nr) = tile_kernel_quires(&mut self.engine, tile, a, b, &mut buf[..slots]);
+            report.overflow |= o;
+            report.nar |= nr;
+            scatter_tile_quires(&mut out, tile, &buf[..slots]);
+            report.cycles += tile_cycles;
+        }
+        report.stats.merge(&self.engine.stats);
+        self.engine.stats = EngineStats::new();
+        report.macs = plan.macs();
+        report.macs_per_cycle = report.macs as f64 / report.cycles as f64;
+        (out, report)
+    }
+
+    fn run_parallel_quires(
+        &mut self,
+        plan: &TilePlan,
+        a: &EncodedOperand,
+        b: &EncodedOperand,
+    ) -> (QuireMatrix, ArrayReport) {
+        let sel = self.sel;
+        let tile_cycles = self.tile_cycles(a.words_per_row);
+        let n_tiles = plan.tiles.len();
+        let slot = ExecutorSlot::acquire();
+        let threads = slot.thread_budget().min(n_tiles).max(1);
+        let chunk = n_tiles.div_ceil(threads);
+
+        struct ChunkQuires {
+            outs: Vec<Vec<Quire>>,
+            report: ArrayReport,
+        }
+        let chunk_results: Vec<ChunkQuires> = std::thread::scope(|s| {
+            let handles: Vec<_> = plan
+                .tiles
+                .chunks(chunk)
+                .map(|tiles| {
+                    s.spawn(move || {
+                        let mut eng = Engine::new(sel);
+                        let mut outs = Vec::with_capacity(tiles.len());
+                        let mut report = ArrayReport::default();
+                        for tile in tiles {
+                            let mut buf = vec![Quire::new(); tile.mt * tile.nt];
+                            let (o, nr) = tile_kernel_quires(&mut eng, tile, a, b, &mut buf);
+                            report.overflow |= o;
+                            report.nar |= nr;
+                            report.cycles += tile_cycles;
+                            outs.push(buf);
+                        }
+                        report.stats = eng.stats;
+                        ChunkQuires { outs, report }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
+        });
+
+        let mut out = QuireMatrix::zeros(plan.m, plan.n);
+        let mut report = self.base_report(plan);
+        let mut tile_iter = plan.tiles.iter();
+        for ch in chunk_results {
+            report.merge(&ch.report);
+            for buf in &ch.outs {
+                let tile = tile_iter.next().expect("tile/result count mismatch");
+                scatter_tile_quires(&mut out, tile, buf);
+            }
+        }
+        debug_assert_eq!(report.cycles, n_tiles as u64 * tile_cycles);
+        report.macs = plan.macs();
+        report.macs_per_cycle = report.macs as f64 / report.cycles as f64;
+        (out, report)
+    }
 }
 
 #[cfg(test)]
@@ -508,6 +647,50 @@ mod tests {
         assert_eq!(got.data, want.data);
         assert_eq!(grep.cycles, wrep.cycles);
         assert_eq!(grep.stats, wrep.stats);
+    }
+
+    #[test]
+    fn quire_gemm_rounds_to_exactly_the_rounded_gemm() {
+        // The partial-GEMM invariant at the array level: rounding the
+        // raw-quire outputs once reproduces the rounded path bit for
+        // bit, and the cycle/MAC accounting is identical (only the
+        // output-stage `rounds` stat differs).
+        let mut rng = Rng::new(91);
+        for sel in PrecSel::ALL {
+            for (m, k, n) in [(5, 12, 7), (33, 70, 19)] {
+                let a = Matrix::random(m, k, 1.0, &mut rng);
+                let b = Matrix::random(k, n, 1.0, &mut rng);
+                let a_enc = EncodedOperand::rows(&a, sel);
+                let b_enc = EncodedOperand::cols(&b, sel);
+                let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
+                let (want, wrep) = arr.gemm_packed(&a_enc, &b_enc, Precision::Fp32);
+                let (qs, qrep) = arr.gemm_packed_quires(&a_enc, &b_enc);
+                assert_eq!(qs.round_to(Precision::Fp32), want.data, "{sel:?} {m}x{k}x{n}");
+                assert_eq!(qrep.cycles, wrep.cycles, "{sel:?}");
+                assert_eq!(qrep.macs, wrep.macs, "{sel:?}");
+                assert_eq!((qrep.overflow, qrep.nar), (wrep.overflow, wrep.nar));
+                assert_eq!(qrep.stats.rounds, 0, "quire path must not round");
+            }
+        }
+    }
+
+    #[test]
+    fn quire_gemm_parallel_matches_serial() {
+        let mut rng = Rng::new(93);
+        let sel = PrecSel::Posit8x2;
+        let a = Matrix::random(40, 64, 1.0, &mut rng);
+        let b = Matrix::random(64, 24, 1.0, &mut rng);
+        let a_enc = EncodedOperand::rows(&a, sel);
+        let b_enc = EncodedOperand::cols(&b, sel);
+        let mut arr = MatrixArray::new(ArrayMorph::M8x8, sel);
+        let plan = arr.plan_for(&a_enc, &b_enc);
+        let (qs, rs) = arr.run_serial_quires(&plan, &a_enc, &b_enc);
+        let (qp, rp) = arr.run_parallel_quires(&plan, &a_enc, &b_enc);
+        for (s, p) in qs.data.iter().zip(&qp.data) {
+            assert_eq!(s.raw(), p.raw());
+        }
+        assert_eq!(rs.cycles, rp.cycles);
+        assert_eq!(rs.stats, rp.stats);
     }
 
     #[test]

@@ -21,12 +21,15 @@
 
 use super::batcher::Batch;
 use super::scheduler::ModelInstance;
-use crate::models::ExecReport;
-use crate::serve::{AutoscaleConfig, Autoscaler, Completion, Job, RuntimeMetrics, ServeRuntime};
+use crate::models::{shard, ExecReport, ShardedModel};
+use crate::serve::{
+    device_lock, AutoscaleConfig, Autoscaler, Completion, CycleAutoscaler, Job, JobPayload,
+    RuntimeMetrics, ServeRuntime,
+};
 use crate::soc::{JobReport, SocConfig};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Perception workload kinds (paper Fig. 1).
@@ -86,18 +89,88 @@ impl Default for RuntimeConfig {
     }
 }
 
+/// How a workload's model lives on the fleet.
+enum ModelEntry {
+    /// The fast path: the whole compiled model is resident per replica.
+    Whole(Arc<ModelInstance>),
+    /// The model is split into per-replica weight shards; requests serve
+    /// through the coordinator's scatter → quire-reduce loop.
+    Sharded(Arc<ShardedEntry>),
+}
+
+/// A sharded registration: the shard views plus their placement.
+pub struct ShardedEntry {
+    kind: WorkloadKind,
+    /// The instance the shards were planned from (kept for metadata and
+    /// the graph/plan accessors).
+    inst: Arc<ModelInstance>,
+    shards: Vec<Arc<ShardedModel>>,
+    /// `replicas[i]` hosts shard `i`.
+    replicas: Vec<usize>,
+}
+
+impl ShardedEntry {
+    /// Serve one request: scatter each layer's partial GEMMs to the
+    /// shard replicas (they execute concurrently on the per-replica
+    /// workers), join the completions, reduce quires, feed the next
+    /// layer. Values are bit-identical to whole-model serving
+    /// ([`crate::models::CompiledModel::run_sharded`]); `replica` in the
+    /// result is the first shard's home (the reduction runs at the
+    /// coordinator).
+    fn serve(&self, rt: &ServeRuntime, input: Vec<f32>, aux: Vec<f32>) -> Result<RoutedResult> {
+        let (output, report) = self.inst.compiled.run_sharded(
+            &self.shards,
+            &input,
+            &aux,
+            |si, gemm_idx, a| {
+                let (tx, rx) = crate::serve::completion();
+                let job = Job {
+                    enqueued: Instant::now(),
+                    payload: JobPayload::Partial {
+                        shard: Arc::clone(&self.shards[si]),
+                        gemm_idx,
+                        a,
+                        done: tx,
+                    },
+                };
+                if rt.dispatch(self.replicas[si], job).is_err() {
+                    bail!("serving runtime is shut down");
+                }
+                Ok(rx)
+            },
+            |rx| match rx.wait() {
+                Ok(res) => res,
+                Err(canceled) => Err(canceled.into()),
+            },
+        )?;
+        Ok(RoutedResult { kind: self.kind, output, report, replica: self.replicas[0] })
+    }
+}
+
 /// The router.
 pub struct Router {
-    models: HashMap<WorkloadKind, Arc<ModelInstance>>,
-    runtime: ServeRuntime,
+    models: HashMap<WorkloadKind, ModelEntry>,
+    /// Shared with per-request sharded coordinator threads.
+    runtime: Arc<ServeRuntime>,
     autoscaler: Autoscaler,
     /// Replicas currently receiving dispatch (`1..=n_replicas`).
     active: usize,
     /// Total queue-latency samples already fed to the autoscaler
     /// (checkpoint for [`ServeRuntime::queue_samples_since`]).
     fed_samples: u64,
+    /// Checkpoint for [`ServeRuntime::service_cycle_samples_since`].
+    fed_cycle_samples: u64,
     warm_floor: usize,
+    /// Active count last steered explicitly (autoscaler tick or
+    /// [`Router::set_active`]); registration warms
+    /// `max(warm_floor, steered)` so a scaled-up fleet never pays
+    /// first-request warming after a model refresh, while an un-steered
+    /// fleet keeps the cheap floor-only registration.
+    steered_active: Option<usize>,
     next_replica: usize,
+    /// In-flight sharded coordinator requests (count + wakeup), so
+    /// [`Router::quiesce`] covers the scatter/reduce loops too.
+    sharded_inflight: Arc<(Mutex<usize>, Condvar)>,
     /// Per-kind request counters (admitted to the runtime).
     pub served: HashMap<WorkloadKind, u64>,
 }
@@ -114,46 +187,197 @@ impl Router {
         assert!(n_replicas >= 1);
         Router {
             models: HashMap::new(),
-            runtime: ServeRuntime::new(n_replicas, cfg, rt.queue_capacity),
+            runtime: Arc::new(ServeRuntime::new(n_replicas, cfg, rt.queue_capacity)),
             autoscaler: Autoscaler::new(rt.autoscale),
             active: n_replicas,
             fed_samples: 0,
+            fed_cycle_samples: 0,
             warm_floor: rt.warm_floor.clamp(1, n_replicas),
+            steered_active: None,
             next_replica: 0,
+            sharded_inflight: Arc::new((Mutex::new(0), Condvar::new())),
             served: HashMap::new(),
         }
     }
 
-    /// Register the model for a workload kind, warming its compiled
-    /// program (resident weights + pinned encodings + run arena) on the
-    /// first [`RuntimeConfig::warm_floor`] replicas; the remaining
-    /// replicas warm on demand when their worker first serves it.
+    /// Register the model for a workload kind with **whole-model
+    /// residency** (the fast path), warming its compiled program
+    /// (resident weights + pinned encodings + run arena) eagerly on the
+    /// first [`RuntimeConfig::warm_floor`] replicas — or on the whole
+    /// **steered active set** when the autoscaler (or
+    /// [`Router::set_active`]) has grown it past the floor, so a
+    /// scaled-up fleet does not pay first-request warming after a model
+    /// refresh. The remaining replicas warm on demand when their worker
+    /// first serves the model.
     ///
     /// A failed warm evicts the replicas already warmed — an error
     /// leaves the router exactly as it was (the previous model, if any,
     /// keeps serving). Replacing a model quiesces the runtime first so
     /// in-flight requests against the old instance drain, then evicts
     /// its warm state (resident DRAM returns to the free list) on every
-    /// replica.
+    /// replica. For a model larger than one replica's resident budget,
+    /// use [`Router::register_auto`] or [`Router::register_sharded`].
     pub fn register(&mut self, kind: WorkloadKind, inst: ModelInstance) -> Result<()> {
-        let inst = Arc::new(inst);
-        for i in 0..self.warm_floor {
-            let res = inst.warm(&mut self.runtime.soc(i).lock().unwrap());
+        self.register_whole(kind, Arc::new(inst))
+    }
+
+    fn register_whole(&mut self, kind: WorkloadKind, inst: Arc<ModelInstance>) -> Result<()> {
+        let warm_n = self
+            .warm_floor
+            .max(self.steered_active.unwrap_or(0))
+            .min(self.runtime.n_replicas());
+        for i in 0..warm_n {
+            let res = inst.warm(&mut device_lock(self.runtime.soc(i)));
             if let Err(e) = res {
                 for j in 0..i {
-                    inst.compiled.evict(&mut self.runtime.soc(j).lock().unwrap());
+                    inst.compiled.evict(&mut device_lock(self.runtime.soc(j)));
                 }
                 return Err(e);
             }
         }
-        if let Some(old) = self.models.remove(&kind) {
-            self.runtime.quiesce();
-            for i in 0..self.runtime.n_replicas() {
-                old.compiled.evict(&mut self.runtime.soc(i).lock().unwrap());
+        self.replace_entry(kind, ModelEntry::Whole(inst));
+        Ok(())
+    }
+
+    /// Register a model **sharded `n_shards` ways**: each per-layer GEMM
+    /// is K-split (N-split fallback) across `n_shards` replicas chosen
+    /// by free resident-DRAM budget, each shard's weight slices are
+    /// warmed eagerly on its home replica, and requests serve through
+    /// the scatter → partial-quire → exact-reduce loop — bit-identical
+    /// values to whole-model serving. `n_shards == 1` **is literally the
+    /// whole-model path** ([`Router::register`]). A failed warm or an
+    /// unsplittable plan rolls back fully.
+    pub fn register_sharded(
+        &mut self,
+        kind: WorkloadKind,
+        inst: ModelInstance,
+        n_shards: usize,
+    ) -> Result<()> {
+        if n_shards == 1 {
+            return self.register(kind, inst);
+        }
+        self.register_shards(kind, Arc::new(inst), n_shards)
+    }
+
+    /// Register with **automatic placement**: whole-model residency when
+    /// the compiled footprint fits every replica's free resident-DRAM
+    /// budget, otherwise the smallest shard count whose slices fit —
+    /// the fleet serves models no single replica could host.
+    pub fn register_auto(&mut self, kind: WorkloadKind, inst: ModelInstance) -> Result<()> {
+        let n_rep = self.runtime.n_replicas();
+        let budgets: Vec<u64> = (0..n_rep).map(|i| self.replica_free_budget(i)).collect();
+        let needed = inst.compiled.warm_footprint_bytes() as u64;
+        if budgets.iter().all(|&b| needed <= b) {
+            return self.register(kind, inst);
+        }
+        if n_rep < 2 {
+            bail!(
+                "model `{}` needs {} resident bytes but the single replica has only {} free \
+                 (sharding needs >= 2 replicas)",
+                inst.compiled.name,
+                needed,
+                budgets.first().copied().unwrap_or(0)
+            );
+        }
+        let max_free = budgets.iter().copied().max().unwrap_or(0).max(1);
+        let mut n = (needed.div_ceil(max_free) as usize).clamp(2, n_rep);
+        let inst = Arc::new(inst);
+        loop {
+            match self.register_shards(kind, Arc::clone(&inst), n) {
+                Ok(()) => return Ok(()),
+                Err(_) if n < n_rep => n += 1, // try a finer split
+                Err(e) => return Err(e),
             }
         }
-        self.models.insert(kind, inst);
+    }
+
+    fn register_shards(
+        &mut self,
+        kind: WorkloadKind,
+        inst: Arc<ModelInstance>,
+        n_shards: usize,
+    ) -> Result<()> {
+        let n_rep = self.runtime.n_replicas();
+        if n_shards > n_rep {
+            bail!("cannot place {n_shards} shards on a {n_rep}-replica fleet");
+        }
+        let shards: Vec<Arc<ShardedModel>> =
+            shard(&inst.compiled, n_shards)?.into_iter().map(Arc::new).collect();
+        // DRAM-budget placement: the heaviest shard goes to the replica
+        // with the most free resident budget, and so on down the ranks
+        // (the final K-shard absorbs the split remainder, so shard
+        // footprints are not uniform; pairing by rank avoids rejecting
+        // a placement whose swapped assignment would fit). Stable by
+        // index on ties.
+        let budgets: Vec<u64> = (0..n_rep).map(|i| self.replica_free_budget(i)).collect();
+        let mut order: Vec<usize> = (0..n_rep).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(budgets[i]));
+        let mut shard_order: Vec<usize> = (0..n_shards).collect();
+        shard_order.sort_by_key(|&s| std::cmp::Reverse(shards[s].warm_footprint_bytes()));
+        let mut replicas = vec![0usize; n_shards];
+        for (rank, &s) in shard_order.iter().enumerate() {
+            replicas[s] = order[rank];
+        }
+        for (sh, &ri) in shards.iter().zip(&replicas) {
+            let need = sh.warm_footprint_bytes() as u64;
+            if need > budgets[ri] {
+                bail!(
+                    "shard {} of `{}` needs {} resident bytes but replica {} has only {} free",
+                    sh.shard_idx,
+                    sh.name,
+                    need,
+                    ri,
+                    budgets[ri]
+                );
+            }
+        }
+        // warm every shard on its home replica; roll back on any failure
+        for (idx, (sh, &ri)) in shards.iter().zip(&replicas).enumerate() {
+            if let Err(e) = sh.ensure_warm(&mut device_lock(self.runtime.soc(ri))) {
+                for (sh2, &rj) in shards.iter().zip(&replicas).take(idx) {
+                    sh2.evict(&mut device_lock(self.runtime.soc(rj)));
+                }
+                return Err(e.into());
+            }
+        }
+        self.replace_entry(
+            kind,
+            ModelEntry::Sharded(Arc::new(ShardedEntry { kind, inst, shards, replicas })),
+        );
         Ok(())
+    }
+
+    /// Swap in a new registration, quiescing and evicting the replaced
+    /// model's warm state (whole or sharded) first.
+    fn replace_entry(&mut self, kind: WorkloadKind, entry: ModelEntry) {
+        if let Some(old) = self.models.remove(&kind) {
+            self.quiesce();
+            self.evict_entry(&old);
+        }
+        self.models.insert(kind, entry);
+    }
+
+    fn evict_entry(&self, entry: &ModelEntry) {
+        match entry {
+            ModelEntry::Whole(inst) => {
+                for i in 0..self.runtime.n_replicas() {
+                    inst.compiled.evict(&mut device_lock(self.runtime.soc(i)));
+                }
+            }
+            ModelEntry::Sharded(se) => {
+                for (sh, &ri) in se.shards.iter().zip(&se.replicas) {
+                    sh.evict(&mut device_lock(self.runtime.soc(ri)));
+                }
+            }
+        }
+    }
+
+    /// Free resident-DRAM budget of replica `i` in bytes: the allocator
+    /// limit (DRAM minus the FSM staging quarter) less live resident
+    /// allocations, plus reclaimed free-list bytes.
+    fn replica_free_budget(&self, i: usize) -> u64 {
+        let soc = device_lock(self.runtime.soc(i));
+        soc.resident_limit().saturating_sub(soc.resident_mark()) + soc.resident_free_bytes()
     }
 
     pub fn has(&self, kind: WorkloadKind) -> bool {
@@ -161,37 +385,92 @@ impl Router {
     }
 
     pub fn model(&self, kind: WorkloadKind) -> Option<&ModelInstance> {
-        self.models.get(&kind).map(Arc::as_ref)
+        self.models.get(&kind).map(|e| match e {
+            ModelEntry::Whole(inst) => inst.as_ref(),
+            ModelEntry::Sharded(se) => se.inst.as_ref(),
+        })
+    }
+
+    /// Shard placement of a kind: `Some(replicas)` (shard `i` on
+    /// `replicas[i]`) when the model is sharded, `None` when whole.
+    pub fn shard_placement(&self, kind: WorkloadKind) -> Option<&[usize]> {
+        match self.models.get(&kind)? {
+            ModelEntry::Whole(_) => None,
+            ModelEntry::Sharded(se) => Some(&se.replicas),
+        }
     }
 
     /// Submit one request to the runtime; returns immediately with a
-    /// completion handle. Dispatch round-robins over the active replica
-    /// set; requests queued on the same replica serialize in FIFO order.
+    /// completion handle. Whole-model kinds round-robin over the active
+    /// replica set (same-replica requests serialize in FIFO order); a
+    /// sharded kind serves through a per-request coordinator that
+    /// scatters each layer to the shard-holding replicas and reduces the
+    /// partial quires — shard replicas receive their partial jobs
+    /// directly, regardless of the active set.
     pub fn submit(
         &mut self,
         kind: WorkloadKind,
         input: Vec<f32>,
         aux: Vec<f32>,
     ) -> Result<InferCompletion> {
-        let Some(inst) = self.models.get(&kind) else {
+        let Some(entry) = self.models.get(&kind) else {
             bail!("no model registered for {:?}", kind);
         };
-        let replica = self.next_replica % self.active;
-        self.next_replica = (replica + 1) % self.active;
-        let (tx, rx) = crate::serve::completion();
-        let job = Job {
-            kind,
-            inst: Arc::clone(inst),
-            input,
-            aux,
-            enqueued: Instant::now(),
-            done: tx,
-        };
-        if self.runtime.dispatch(replica, job).is_err() {
-            bail!("serving runtime is shut down");
+        match entry {
+            ModelEntry::Whole(inst) => {
+                let replica = self.next_replica % self.active;
+                self.next_replica = (replica + 1) % self.active;
+                let (tx, rx) = crate::serve::completion();
+                let job = Job {
+                    enqueued: Instant::now(),
+                    payload: JobPayload::Infer {
+                        kind,
+                        inst: Arc::clone(inst),
+                        input,
+                        aux,
+                        done: tx,
+                    },
+                };
+                if self.runtime.dispatch(replica, job).is_err() {
+                    bail!("serving runtime is shut down");
+                }
+                *self.served.entry(kind).or_insert(0) += 1;
+                Ok(rx)
+            }
+            ModelEntry::Sharded(se) => {
+                let se = Arc::clone(se);
+                let rt = Arc::clone(&self.runtime);
+                let gate = Arc::clone(&self.sharded_inflight);
+                *gate.0.lock().unwrap() += 1;
+                let (tx, rx) = crate::serve::completion();
+                std::thread::spawn(move || {
+                    // panic-fenced like the replica workers: a dying
+                    // coordinator must still release the quiesce gate
+                    // and fail its waiter with a typed error, never
+                    // wedge the router
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        se.serve(&rt, input, aux)
+                    }));
+                    // account before fulfilling (the worker invariant)
+                    {
+                        let mut n = match gate.0.lock() {
+                            Ok(g) => g,
+                            Err(poisoned) => poisoned.into_inner(),
+                        };
+                        *n -= 1;
+                        gate.1.notify_all();
+                    }
+                    tx.fulfill(match res {
+                        Ok(r) => r,
+                        Err(p) => {
+                            Err(crate::serve::WorkerPanic::new(se.replicas[0], p).into())
+                        }
+                    });
+                });
+                *self.served.entry(kind).or_insert(0) += 1;
+                Ok(rx)
+            }
         }
-        *self.served.entry(kind).or_insert(0) += 1;
-        Ok(rx)
     }
 
     /// Submit every request of a released [`Batch`]; returns completion
@@ -208,22 +487,32 @@ impl Router {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        let Some(inst) = self.models.get(&kind) else {
-            bail!("no model registered for {:?}", kind);
+        if matches!(self.models.get(&kind), Some(ModelEntry::Sharded(_))) {
+            // sharded kinds pipeline through per-request coordinators
+            return reqs
+                .iter()
+                .map(|r| self.submit(kind, r.input.clone(), r.aux.clone()))
+                .collect();
+        }
+        let inst = match self.models.get(&kind) {
+            None => bail!("no model registered for {:?}", kind),
+            Some(ModelEntry::Sharded(_)) => unreachable!("handled above"),
+            Some(ModelEntry::Whole(inst)) => Arc::clone(inst),
         };
-        let inst = Arc::clone(inst);
         let offset = self.next_replica % self.active;
         self.next_replica = (offset + reqs.len()) % self.active;
         let mut handles = Vec::with_capacity(reqs.len());
         for (i, r) in reqs.iter().enumerate() {
             let (tx, rx) = crate::serve::completion();
             let job = Job {
-                kind,
-                inst: Arc::clone(&inst),
-                input: r.input.clone(),
-                aux: r.aux.clone(),
                 enqueued: Instant::now(),
-                done: tx,
+                payload: JobPayload::Infer {
+                    kind,
+                    inst: Arc::clone(&inst),
+                    input: r.input.clone(),
+                    aux: r.aux.clone(),
+                    done: tx,
+                },
             };
             if self.runtime.dispatch((offset + i) % self.active, job).is_err() {
                 bail!("serving runtime is shut down");
@@ -269,8 +558,12 @@ impl Router {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        let Some(inst) = self.models.get(&kind) else {
-            bail!("no model registered for {:?}", kind);
+        let inst = match self.models.get(&kind) {
+            None => bail!("no model registered for {:?}", kind),
+            Some(ModelEntry::Sharded(_)) => {
+                bail!("sharded models serve via submit/route (the runtime path), not the fan-out")
+            }
+            Some(ModelEntry::Whole(inst)) => inst,
         };
         let offset = self.next_replica % self.active;
         self.next_replica = (offset + reqs.len()) % self.active;
@@ -286,7 +579,7 @@ impl Router {
                     let soc = Arc::clone(self.runtime.soc(ri));
                     let inst = Arc::clone(inst);
                     s.spawn(move || {
-                        let mut soc = soc.lock().unwrap();
+                        let mut soc = device_lock(&soc);
                         idxs.into_iter()
                             .map(|i| {
                                 let r = &reqs[i];
@@ -320,6 +613,7 @@ impl Router {
         self.autoscaler.observe_samples(&fresh);
         let target = self.autoscaler.decide(self.active, self.runtime.in_flight());
         self.active = target.clamp(1, self.runtime.n_replicas());
+        self.steered_active = Some(self.active);
         self.active
     }
 
@@ -332,12 +626,40 @@ impl Router {
     /// load-shaping for tests/benches; the autoscaler adjusts from here.
     pub fn set_active(&mut self, n: usize) {
         self.active = n.clamp(1, self.runtime.n_replicas());
+        self.steered_active = Some(self.active);
         self.next_replica %= self.active;
     }
 
-    /// Block until every submitted request has completed.
+    /// Block until every submitted request has completed — including
+    /// in-flight sharded coordinator loops and the partial jobs they
+    /// scattered.
     pub fn quiesce(&self) {
+        let (lock, cv) = &*self.sharded_inflight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+        drop(n);
         self.runtime.quiesce();
+    }
+
+    /// One wall-clock-free autoscaling tick: feed the runtime's fresh
+    /// **simulated service-cycle** samples to the [`CycleAutoscaler`]
+    /// and apply its congestion decision (queue depth × mean service
+    /// cycles) to the active dispatch set. Fully reproducible — every
+    /// input is simulator output, so tests need no host-speed-tuned
+    /// thresholds (the alternative to the nanosecond-driven
+    /// [`Router::autoscale_tick`]).
+    pub fn autoscale_tick_cycles(&mut self, policy: &mut CycleAutoscaler) -> usize {
+        let (fresh, total) = self.runtime.service_cycle_samples_since(self.fed_cycle_samples);
+        self.fed_cycle_samples = total;
+        policy.observe_samples(&fresh);
+        let depth: usize =
+            (0..self.runtime.n_replicas()).map(|i| self.runtime.queue_len(i)).sum();
+        let target = policy.decide(self.active, self.runtime.in_flight(), depth);
+        self.active = target.clamp(1, self.runtime.n_replicas());
+        self.steered_active = Some(self.active);
+        self.active
     }
 
     /// Host-side queue/service latency metrics from the runtime.
@@ -357,7 +679,7 @@ impl Router {
 
     /// Lifetime job report of replica `i` (snapshot).
     pub fn replica_lifetime(&self, i: usize) -> JobReport {
-        self.runtime.soc(i).lock().unwrap().lifetime.clone()
+        device_lock(self.runtime.soc(i)).lifetime.clone()
     }
 
     /// (hits, misses, preloads, trusted) of replica `i`'s
@@ -366,20 +688,20 @@ impl Router {
     /// ride their trusted pins past the cache entirely (`trusted`),
     /// only per-request activations encode (`misses`).
     pub fn replica_cache_stats(&self, i: usize) -> (u64, u64, u64, u64) {
-        let soc = self.runtime.soc(i).lock().unwrap();
+        let soc = device_lock(self.runtime.soc(i));
         let c = &soc.enc_cache;
         (c.hits, c.misses, c.preloads, c.trusted)
     }
 
     /// Pinned (weight-preload) entries resident in replica `i`'s cache.
     pub fn replica_pinned_len(&self, i: usize) -> usize {
-        self.runtime.soc(i).lock().unwrap().enc_cache.pinned_len()
+        device_lock(self.runtime.soc(i)).enc_cache.pinned_len()
     }
 
     /// Resident-DRAM accounting of replica `i`: `(bump watermark bytes,
     /// reclaimed-but-buried free-list bytes)`.
     pub fn replica_resident(&self, i: usize) -> (u64, u64) {
-        let soc = self.runtime.soc(i).lock().unwrap();
+        let soc = device_lock(self.runtime.soc(i));
         (soc.resident_mark(), soc.resident_free_bytes())
     }
 
@@ -653,6 +975,204 @@ mod tests {
             hits[r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap().replica] += 1;
         }
         assert_eq!(hits, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn sharded_serving_bit_identical_to_whole_all_modes() {
+        // router-level acceptance differential: the same traffic through
+        // a whole-model fleet and a 2-shard fleet must produce
+        // bit-identical values in every mode; MAC work is conserved and
+        // the sharded reports carry the documented reduction term
+        let g = gaze::build();
+        for (i, sel) in PrecSel::ALL.into_iter().enumerate() {
+            let w = weights_for(&g, 60 + i as u64);
+            let mut whole = Router::new(1, SocConfig::default());
+            whole
+                .register(
+                    WorkloadKind::Gaze,
+                    ModelInstance::uniform(g.clone(), w.clone(), sel).unwrap(),
+                )
+                .unwrap();
+            let mut sharded = Router::new(2, SocConfig::default());
+            sharded
+                .register_sharded(
+                    WorkloadKind::Gaze,
+                    ModelInstance::uniform(g.clone(), w.clone(), sel).unwrap(),
+                    2,
+                )
+                .unwrap();
+            assert_eq!(sharded.shard_placement(WorkloadKind::Gaze).unwrap().len(), 2);
+            for q in 0..3 {
+                let input: Vec<f32> =
+                    (0..16).map(|j| ((q * 16 + j) as f32 * 0.11).sin() * 0.4).collect();
+                let want = whole.route(WorkloadKind::Gaze, &input, &[]).unwrap();
+                let got = sharded.route(WorkloadKind::Gaze, &input, &[]).unwrap();
+                assert_eq!(got.output, want.output, "{sel:?} req {q}: values diverged");
+                assert_eq!(
+                    got.report.jobs.array.macs, want.report.jobs.array.macs,
+                    "{sel:?} req {q}: MAC work must be conserved"
+                );
+                assert!(got.report.reduce_cycles > 0, "{sel:?}: reduction term must appear");
+                assert_eq!(want.report.reduce_cycles, 0, "{sel:?}: whole path has no reduction");
+            }
+            sharded.quiesce();
+        }
+    }
+
+    #[test]
+    fn register_auto_shards_an_oversized_model_and_serves_it() {
+        // a model whose compiled footprint exceeds one replica's
+        // resident budget: whole registration fails, register_auto
+        // splits it across the fleet and serves bit-identically to a
+        // big-DRAM whole-model reference
+        let g = crate::models::mlp::build();
+        let w = weights_for(&g, 61);
+        let small = SocConfig { dram_bytes: 1 << 17, ..Default::default() };
+        let mut r = Router::new(3, small);
+        assert!(
+            r.register(
+                WorkloadKind::Classify,
+                ModelInstance::uniform(g.clone(), w.clone(), PrecSel::Posit8x2).unwrap()
+            )
+            .is_err(),
+            "test premise: the whole model must not fit a small replica"
+        );
+        r.register_auto(
+            WorkloadKind::Classify,
+            ModelInstance::uniform(g.clone(), w.clone(), PrecSel::Posit8x2).unwrap(),
+        )
+        .unwrap();
+        let placement = r.shard_placement(WorkloadKind::Classify).expect("must be sharded");
+        assert!(placement.len() >= 2, "needs >= 2 shards, got {placement:?}");
+        let mut reference = Router::new(1, SocConfig::default());
+        reference
+            .register(WorkloadKind::Classify, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        for q in 0..2 {
+            let input: Vec<f32> =
+                (0..256).map(|j| ((q * 7 + j) as f32 * 0.013).sin() * 0.4).collect();
+            let want = reference.route(WorkloadKind::Classify, &input, &[]).unwrap();
+            let got = r.route(WorkloadKind::Classify, &input, &[]).unwrap();
+            assert_eq!(got.output, want.output, "req {q}: oversized sharded serving diverged");
+        }
+        r.quiesce();
+        assert_eq!(r.served[&WorkloadKind::Classify], 2);
+    }
+
+    #[test]
+    fn register_auto_keeps_whole_residency_when_the_model_fits() {
+        let mut r = Router::new(2, SocConfig::default());
+        let g = gaze::build();
+        let w = weights_for(&g, 62);
+        r.register_auto(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Fp4x4).unwrap())
+            .unwrap();
+        assert!(r.shard_placement(WorkloadKind::Gaze).is_none(), "fitting model stays whole");
+        assert_eq!(r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap().output.len(), 2);
+    }
+
+    #[test]
+    fn shard_count_one_is_literally_the_whole_path() {
+        let mut r = Router::new(2, SocConfig::default());
+        let g = gaze::build();
+        let w = weights_for(&g, 63);
+        r.register_sharded(
+            WorkloadKind::Gaze,
+            ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap(),
+            1,
+        )
+        .unwrap();
+        assert!(r.shard_placement(WorkloadKind::Gaze).is_none());
+        // round-robins like any whole registration
+        let a = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap().replica;
+        let b = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap().replica;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sharded_submissions_pipeline_and_reregistration_evicts_shards() {
+        let g = gaze::build();
+        let w = weights_for(&g, 64);
+        let mut r = Router::new(2, SocConfig::default());
+        r.register_sharded(
+            WorkloadKind::Gaze,
+            ModelInstance::uniform(g.clone(), w.clone(), PrecSel::Posit8x2).unwrap(),
+            2,
+        )
+        .unwrap();
+        let n_gemm = g.compute_layers().len();
+        for i in 0..2 {
+            assert_eq!(r.replica_pinned_len(i), n_gemm, "replica {i}: one slice pin per layer");
+        }
+        // several requests in flight before any is redeemed
+        let inputs: Vec<Vec<f32>> = (0..5).map(|i| vec![0.02 * i as f32; 16]).collect();
+        let handles: Vec<_> = inputs
+            .iter()
+            .map(|x| r.submit(WorkloadKind::Gaze, x.clone(), vec![]).unwrap())
+            .collect();
+        let got: Vec<Vec<f32>> =
+            handles.into_iter().map(|h| Router::resolve(h).unwrap().output).collect();
+        // identical inputs give identical outputs later (warm state intact)
+        let again = r.route(WorkloadKind::Gaze, &inputs[0], &[]).unwrap();
+        assert_eq!(again.output, got[0]);
+        // re-registering replaces the shard set and releases the old pins
+        let w2 = weights_for(&g, 65);
+        r.register_sharded(
+            WorkloadKind::Gaze,
+            ModelInstance::uniform(g.clone(), w2, PrecSel::Posit8x2).unwrap(),
+            2,
+        )
+        .unwrap();
+        for i in 0..2 {
+            assert_eq!(r.replica_pinned_len(i), n_gemm, "replica {i}: old shard pins released");
+        }
+        r.quiesce();
+        assert_eq!(r.served[&WorkloadKind::Gaze], 6);
+    }
+
+    #[test]
+    fn steered_registration_warms_the_active_set() {
+        // PR-3 follow-up: a fleet the operator/autoscaler has grown past
+        // the warm floor warms the whole active set at registration, so
+        // a model refresh pays no first-request warming
+        let mut r = Router::new(3, SocConfig::default());
+        let g = gaze::build();
+        let n_gemm = g.compute_layers().len() as u64;
+        r.set_active(3);
+        let w = weights_for(&g, 66);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        for i in 0..3 {
+            let (_, _, preloads, _) = r.replica_cache_stats(i);
+            assert_eq!(preloads, n_gemm, "replica {i} must be warm at registration");
+        }
+    }
+
+    #[test]
+    fn cycle_autoscaler_ticks_are_reproducible() {
+        use crate::serve::{CycleAutoscaleConfig, CycleAutoscaler};
+        let mut r = Router::new(3, SocConfig::default());
+        let g = gaze::build();
+        let w = weights_for(&g, 67);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        let mut policy = CycleAutoscaler::new(CycleAutoscaleConfig {
+            floor: 1,
+            max: 3,
+            scale_up: 1_000_000,
+            scale_down: 10,
+            window: 64,
+            step: 1,
+            idle_patience: 2,
+        });
+        for q in 0..4 {
+            r.route(WorkloadKind::Gaze, &vec![0.01 * q as f32; 16], &[]).unwrap();
+        }
+        // traffic has fully drained: fresh samples arrive, zero queue
+        // depth → congestion 0 <= scale_down → deterministic step-down
+        assert_eq!(r.autoscale_tick_cycles(&mut policy), 2);
+        // no fresh samples, nothing queued or in flight: idle patience
+        assert_eq!(r.autoscale_tick_cycles(&mut policy), 2);
+        assert_eq!(r.autoscale_tick_cycles(&mut policy), 1, "idle fleet parks to the floor");
     }
 
     #[test]

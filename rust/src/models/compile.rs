@@ -36,11 +36,11 @@
 
 use super::exec::{self, ExecReport};
 use super::graph::{ActKind, LayerKind, ModelGraph, PoolKind, Shape};
-use crate::arith::Precision;
+use crate::arith::{Precision, QuireMatrix, QUIRE_SPILL_BYTES};
 use crate::array::EncodedOperand;
 use crate::npe::PrecSel;
 use crate::quant::PrecisionPlan;
-use crate::soc::{Soc, SocError};
+use crate::soc::{JobReport, Soc, SocError};
 use crate::util::io::TensorMap;
 use crate::util::Matrix;
 use anyhow::{bail, Result};
@@ -428,6 +428,21 @@ impl CompiledModel {
             .sum()
     }
 
+    /// Conservative resident-DRAM footprint of one warm instance: every
+    /// span [`CompiledModel::ensure_warm`] allocates (weight images +
+    /// request scratch), each rounded up to the allocator's 64-byte
+    /// alignment. The router's DRAM-budget accounting compares this
+    /// against a replica's free resident budget to decide whether a
+    /// model needs sharding.
+    pub fn warm_footprint_bytes(&self) -> usize {
+        let spans = self
+            .steps
+            .iter()
+            .filter_map(|s| if let Step::Gemm(g) = s { Some(g.weight.data.len() * 4) } else { None })
+            .chain([self.a_len * 4, self.c_len * 4]);
+        spans.map(|b| b.next_multiple_of(64)).sum()
+    }
+
     /// Ensure this model is warm on `soc`: allocate the resident weight
     /// region, upload the scaled weight images, preload their packed
     /// encodings into the replica's [`crate::array::OperandCache`] (pinned — weights
@@ -549,9 +564,174 @@ impl CompiledModel {
             .expect("warmed above")
             .downcast::<Arena>()
             .expect("model-state uid collision");
-        let res = self.run(soc, &mut arena, input, aux);
+        // The arena is the only record of this model's resident spans
+        // and cache pins; it must go back on the SoC even if the run
+        // panics (the serving workers contain panics per job — dropping
+        // it here would leak the spans forever and strand stale pins,
+        // since `evict` has nothing to unwind without it). The buffers
+        // are overwritten from scratch on every request, so restoring a
+        // half-written arena is sound.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.run(soc, &mut arena, input, aux)
+        }));
         soc.put_model_state(self.uid, arena);
-        res
+        match res {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+
+    /// Serve one request with the per-layer GEMMs **scattered across
+    /// shard replicas**: the coordinator builds each layer's activation
+    /// operand (gather + the same dynamic per-request scale as
+    /// [`CompiledModel::replay`]), slices it per shard, dispatches every
+    /// shard's partial GEMM through `scatter` (all shards of a layer go
+    /// out before any is joined, so they run concurrently), joins the
+    /// handles with `join`, merges the partial quires exactly
+    /// ([`QuireMatrix::merge_block`]), rounds **once**, and feeds the
+    /// next layer. Values are bit-identical to the whole-model replay in
+    /// every mode (quire merge is exact); the returned [`ExecReport`]
+    /// sums every shard's job work and carries the documented
+    /// cross-shard reduction term ([`reduction_cost`]) in
+    /// `reduce_cycles`/`reduce_bytes`.
+    ///
+    /// `scatter(shard_idx, gemm_idx, a_slice)` returns a join handle;
+    /// `join` blocks on it. The router drives this with the async
+    /// serving runtime; tests drive it inline.
+    pub fn run_sharded<H>(
+        &self,
+        shards: &[Arc<ShardedModel>],
+        input: &[f32],
+        aux: &[f32],
+        mut scatter: impl FnMut(usize, usize, Matrix) -> Result<H>,
+        mut join: impl FnMut(H) -> Result<(QuireMatrix, JobReport)>,
+    ) -> Result<(Vec<f32>, ExecReport)> {
+        if shards.is_empty() {
+            bail!("no shards supplied for `{}`", self.name);
+        }
+        for sh in shards {
+            if sh.model_uid != self.uid {
+                bail!("shard of a different compilation supplied for `{}`", self.name);
+            }
+        }
+        if input.len() != self.input_len {
+            bail!("input length {} != {}", input.len(), self.input_len);
+        }
+        let mut report = ExecReport::default();
+        let mut bufs = [vec![0.0f32; self.buf_len], vec![0.0f32; self.buf_len]];
+        let mut a_mat = Matrix { rows: 0, cols: 0, data: Vec::with_capacity(self.a_len) };
+        let mut out_mat = Matrix { rows: 0, cols: 0, data: Vec::with_capacity(self.c_len) };
+        let mut cur = 0usize;
+        let mut cur_len = input.len();
+        bufs[0][..cur_len].copy_from_slice(input);
+        for step in &self.steps {
+            match step {
+                Step::Gemm(g) => {
+                    match &g.gather {
+                        Some(map) => map.gather(&bufs[cur][..cur_len], &mut a_mat),
+                        None => {
+                            a_mat.rows = 1;
+                            a_mat.cols = g.k;
+                            a_mat.data.clear();
+                            a_mat.data.extend_from_slice(&bufs[cur][..cur_len]);
+                        }
+                    }
+                    // the same dynamic scale as the whole-model path —
+                    // computed over the FULL operand, then sliced, so
+                    // every shard sees identical element values
+                    let s_a = exec::scale_for(&a_mat.data, g.sel.precision());
+                    for v in a_mat.data.iter_mut() {
+                        *v = (*v as f64 / s_a) as f32;
+                    }
+                    // scatter every shard before joining any
+                    let handles: Vec<(usize, H)> = shards
+                        .iter()
+                        .enumerate()
+                        .map(|(si, sh)| {
+                            let st = &sh.steps[g.gemm_idx];
+                            let a_part = match st.slice {
+                                ShardSlice::K { k0, k1 } => Matrix::from_vec(
+                                    a_mat.rows,
+                                    k1 - k0,
+                                    (0..a_mat.rows)
+                                        .flat_map(|r| a_mat.row(r)[k0..k1].iter().copied())
+                                        .collect(),
+                                ),
+                                ShardSlice::N { .. } => a_mat.clone(),
+                            };
+                            Ok((si, scatter(si, g.gemm_idx, a_part)?))
+                        })
+                        .collect::<Result<_>>()?;
+                    let mut quires = QuireMatrix::zeros(g.m, g.n);
+                    let mut layer_jobs = JobReport::default();
+                    for (si, h) in handles {
+                        let (part, rep) = join(h)?;
+                        let c0 = match shards[si].steps[g.gemm_idx].slice {
+                            ShardSlice::K { .. } => 0,
+                            ShardSlice::N { n0, .. } => n0,
+                        };
+                        quires.merge_block(c0, &part);
+                        layer_jobs.merge(&rep);
+                    }
+                    let (rc, rb) = layer_reduction_cost(shards, g);
+                    report.per_layer_cycles.push((g.layer_idx, layer_jobs.total_cycles + rc));
+                    report.jobs.merge(&layer_jobs);
+                    report.reduce_cycles += rc;
+                    report.reduce_bytes += rb;
+                    // exactly one rounding of the merged quires — the
+                    // same output-processing expression as the engine's
+                    let raw = Matrix::from_vec(g.m, g.n, quires.round_to(Precision::Fp32));
+                    out_mat.rows = g.m;
+                    out_mat.cols = g.n;
+                    out_mat.data.clear();
+                    out_mat.data.resize(g.m * g.n, 0.0);
+                    exec::postprocess_gemm(&raw, s_a, g.s_b, &g.bias, g.out_prec, &mut out_mat);
+                    let nxt = 1 - cur;
+                    match g.conv_out {
+                        Some(shape) => {
+                            exec::chw_into(&out_mat, shape, &mut bufs[nxt][..shape.numel()]);
+                            cur_len = shape.numel();
+                        }
+                        None => {
+                            bufs[nxt][..g.n].copy_from_slice(&out_mat.data);
+                            cur_len = g.n;
+                        }
+                    }
+                    cur = nxt;
+                }
+                Step::Pool { kind, size, in_shape, out_len } => {
+                    let nxt = 1 - cur;
+                    let (lo, hi) = bufs.split_at_mut(1);
+                    let (src, dst) =
+                        if cur == 0 { (&lo[0], &mut hi[0]) } else { (&hi[0], &mut lo[0]) };
+                    exec::pool_into(
+                        &src[..in_shape.numel()],
+                        *in_shape,
+                        *kind,
+                        *size,
+                        &mut dst[..*out_len],
+                    );
+                    report.vector_cycles += (in_shape.numel() / 2) as u64;
+                    cur = nxt;
+                    cur_len = *out_len;
+                }
+                Step::Act { kind, alpha, len } => {
+                    debug_assert_eq!(*len, cur_len);
+                    for v in bufs[cur][..cur_len].iter_mut() {
+                        *v = exec::activate(*v as f64, *kind, *alpha) as f32;
+                    }
+                    report.vector_cycles += (cur_len / 4) as u64;
+                }
+                Step::ConcatAux { n } => {
+                    if aux.len() != *n {
+                        bail!("aux length {} != {}", aux.len(), n);
+                    }
+                    bufs[cur][cur_len..cur_len + n].copy_from_slice(aux);
+                    cur_len += n;
+                }
+            }
+        }
+        Ok((bufs[cur][..cur_len].to_vec(), report))
     }
 
     fn run(
@@ -665,6 +845,365 @@ impl CompiledModel {
             }
         }
         Ok((arena.bufs[cur][..cur_len].to_vec(), report))
+    }
+}
+
+// --------------------------------------------------------------- sharding
+
+/// K-split boundaries snap to multiples of this (the lcm of every
+/// mode's lane count), so each non-final slice packs into whole engine
+/// words and the per-shard fetch byte accounting sums exactly to the
+/// whole-model job's. Values are split-exact regardless — padding lanes
+/// are zero and zero products are power-gated into the quire.
+pub const SHARD_K_ALIGN: usize = 4;
+
+/// Typed shard-planning errors: a plan the fleet cannot execute must be
+/// rejected when the shard plan is built, never mid-request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardError {
+    /// A plan with zero shards (an empty shard set) is meaningless.
+    ZeroShards { model: String },
+    /// A GEMM step too small to split `n_shards` ways in either
+    /// dimension (K < [`SHARD_K_ALIGN`]·n_shards and N < n_shards).
+    Unsplittable { model: String, gemm_idx: usize, k: usize, n: usize, n_shards: usize },
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::ZeroShards { model } => {
+                write!(f, "shard plan for `{model}` has zero shards")
+            }
+            ShardError::Unsplittable { model, gemm_idx, k, n, n_shards } => write!(
+                f,
+                "gemm step {gemm_idx} of `{model}` ({k}x{n} weight) cannot be split \
+                 {n_shards} ways (needs K >= {} or N >= {n_shards})",
+                SHARD_K_ALIGN * n_shards
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+/// Which slice of a GEMM step's weight a shard holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSlice {
+    /// Rows `k0..k1` of the K×N weight: the shard consumes the matching
+    /// column slice of A and produces **full-width partial quires** that
+    /// reduce across shards.
+    K { k0: usize, k1: usize },
+    /// Columns `n0..n1` of the weight (the fallback when K is too small
+    /// to split): the shard consumes the full A and produces a disjoint
+    /// output column block — partial quires merge into zero quires.
+    N { n0: usize, n1: usize },
+}
+
+/// One GEMM step's slice as held by one shard.
+#[derive(Debug, Clone)]
+pub struct ShardStep {
+    /// Index among the parent model's GEMM steps.
+    pub gemm_idx: usize,
+    pub sel: PrecSel,
+    /// Output rows of the layer (shared by every shard).
+    pub m: usize,
+    /// This slice's K extent.
+    pub k: usize,
+    /// This slice's N extent.
+    pub n: usize,
+    pub slice: ShardSlice,
+    /// The pre-scaled weight slice (resident DRAM image of this shard).
+    pub weight: Matrix,
+    /// Packed encoding of `weight`, built once at plan time — rides the
+    /// partial-GEMM job as a trusted pin exactly like the whole-model
+    /// path's weight encodings.
+    pub w_enc: Arc<EncodedOperand>,
+}
+
+/// One replica's view of a sharded [`CompiledModel`]: per-GEMM weight
+/// slices plus warm state sized for partial-quire serving. Reuses the
+/// compiled-model residency machinery — resident spans from
+/// [`Soc::alloc_resident`], pinned operand-cache entries, opaque warm
+/// state keyed by uid — so shard eviction and rollback behave exactly
+/// like whole-model eviction.
+#[derive(Debug)]
+pub struct ShardedModel {
+    /// Parent graph name (diagnostics).
+    pub name: String,
+    /// Uid of the [`CompiledModel`] this shard was planned from.
+    pub model_uid: u64,
+    pub shard_idx: usize,
+    pub n_shards: usize,
+    /// One slice per parent GEMM step, indexed by `gemm_idx`.
+    pub steps: Vec<ShardStep>,
+    /// Elements of A-slice scratch (max m·k over slices).
+    a_len: usize,
+    /// Quire-spill scratch slots (max m·n over slices).
+    q_len: usize,
+    /// This shard's own warm-state key.
+    uid: u64,
+}
+
+/// Warm state of one shard on one replica.
+struct ShardArena {
+    w_addrs: Vec<u64>,
+    a_addr: u64,
+    q_addr: u64,
+    allocs: Vec<(u64, u64)>,
+}
+
+/// Documented cross-shard reduction cost model for one **K-split** m×n
+/// GEMM layer reduced from `n_shards` overlapping partials: every
+/// shard's full-width partial-quire image moves to the reducer
+/// (`n_shards · m·n ·` [`QUIRE_SPILL_BYTES`] bytes) and the merge runs
+/// `(n_shards − 1) · m·n` exact quire adds through a 4-wide SIMD add
+/// block (the paper's precision-adaptive ADD/SUB stage), 4 adds per
+/// cycle. This is the term by which a sharded [`ExecReport`] exceeds
+/// the sum of its shard job reports — zero adds when `n_shards == 1`.
+/// N-split layers are cheaper ([`layer_reduction_cost`]): the partials
+/// tile the output, so only one image's worth of quires moves and
+/// nothing cross-merges.
+pub fn reduction_cost(n_shards: usize, m: usize, n: usize) -> (u64, u64) {
+    let outs = (m * n) as u64;
+    let bytes = n_shards as u64 * outs * QUIRE_SPILL_BYTES as u64;
+    let cycles = (n_shards.saturating_sub(1) as u64 * outs).div_ceil(4);
+    (cycles, bytes)
+}
+
+/// Reduction term for one layer given how it was actually sliced
+/// (every shard of a layer shares one slice kind, fixed by
+/// [`plan_slices`]): K-split partials overlap the full output and pay
+/// [`reduction_cost`]; N-split partials are disjoint column blocks —
+/// `m·n` quires of traffic in total and no cross-partial adds.
+fn layer_reduction_cost(shards: &[Arc<ShardedModel>], g: &GemmStep) -> (u64, u64) {
+    match shards[0].steps[g.gemm_idx].slice {
+        ShardSlice::K { .. } => reduction_cost(shards.len(), g.m, g.n),
+        ShardSlice::N { .. } => (0, (g.m * g.n * QUIRE_SPILL_BYTES) as u64),
+    }
+}
+
+/// Slice boundaries for one GEMM step. `None` = unsplittable.
+fn plan_slices(k: usize, n: usize, n_shards: usize) -> Option<Vec<ShardSlice>> {
+    if n_shards == 1 {
+        return Some(vec![ShardSlice::K { k0: 0, k1: k }]);
+    }
+    if k >= SHARD_K_ALIGN * n_shards {
+        // equal-ish K slices, boundaries snapped to the lane alignment;
+        // the final shard absorbs the remainder (possibly unaligned —
+        // only non-final boundaries need to land on whole words)
+        let chunk = (k / n_shards) / SHARD_K_ALIGN * SHARD_K_ALIGN;
+        Some(
+            (0..n_shards)
+                .map(|i| {
+                    let k0 = i * chunk;
+                    let k1 = if i == n_shards - 1 { k } else { k0 + chunk };
+                    ShardSlice::K { k0, k1 }
+                })
+                .collect(),
+        )
+    } else if n >= n_shards {
+        // N-split fallback: disjoint output column blocks, no cross-
+        // shard accumulation (columns pack independently, so byte
+        // accounting still sums exactly)
+        let chunk = n / n_shards;
+        Some(
+            (0..n_shards)
+                .map(|i| {
+                    let n0 = i * chunk;
+                    let n1 = if i == n_shards - 1 { n } else { n0 + chunk };
+                    ShardSlice::N { n0, n1 }
+                })
+                .collect(),
+        )
+    } else {
+        None
+    }
+}
+
+/// The shard planner: split every GEMM step of `model` across
+/// `n_shards` replica-sized views. K-splits by preference (weights and
+/// A slices shrink together), N-split fallback for K too small to
+/// split; a step too small for either is a typed plan-time error. Each
+/// slice's weight is sliced from the **pre-scaled** compiled weight
+/// image (the frozen `s_b` stays the whole-tensor scale) and encoded
+/// exactly once here.
+pub fn shard(model: &CompiledModel, n_shards: usize) -> Result<Vec<ShardedModel>, ShardError> {
+    if n_shards == 0 {
+        return Err(ShardError::ZeroShards { model: model.name.clone() });
+    }
+    let gemms = model.gemm_steps();
+    let mut per_shard: Vec<Vec<ShardStep>> = (0..n_shards).map(|_| Vec::new()).collect();
+    for g in &gemms {
+        let slices = plan_slices(g.k, g.n, n_shards).ok_or_else(|| ShardError::Unsplittable {
+            model: model.name.clone(),
+            gemm_idx: g.gemm_idx,
+            k: g.k,
+            n: g.n,
+            n_shards,
+        })?;
+        for (si, slice) in slices.into_iter().enumerate() {
+            let (weight, ks, ns) = match slice {
+                ShardSlice::K { k0, k1 } => (
+                    Matrix::from_vec(k1 - k0, g.n, g.weight.data[k0 * g.n..k1 * g.n].to_vec()),
+                    k1 - k0,
+                    g.n,
+                ),
+                ShardSlice::N { n0, n1 } => (
+                    Matrix::from_vec(
+                        g.k,
+                        n1 - n0,
+                        (0..g.k).flat_map(|r| g.weight.row(r)[n0..n1].iter().copied()).collect(),
+                    ),
+                    g.k,
+                    n1 - n0,
+                ),
+            };
+            let w_enc = Arc::new(EncodedOperand::cols(&weight, g.sel));
+            per_shard[si].push(ShardStep {
+                gemm_idx: g.gemm_idx,
+                sel: g.sel,
+                m: g.m,
+                k: ks,
+                n: ns,
+                slice,
+                weight,
+                w_enc,
+            });
+        }
+    }
+    Ok(per_shard
+        .into_iter()
+        .enumerate()
+        .map(|(shard_idx, steps)| {
+            let a_len = steps.iter().map(|s| s.m * s.k).max().unwrap_or(0);
+            let q_len = steps.iter().map(|s| s.m * s.n).max().unwrap_or(0);
+            ShardedModel {
+                name: model.name.clone(),
+                model_uid: model.uid,
+                shard_idx,
+                n_shards,
+                steps,
+                a_len,
+                q_len,
+                uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
+            }
+        })
+        .collect())
+}
+
+impl ShardedModel {
+    /// Stable identity of this shard's warm state on a `Soc`.
+    pub fn uid(&self) -> u64 {
+        self.uid
+    }
+
+    /// Resident f32 weight-slice footprint in bytes.
+    pub fn resident_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.weight.data.len() * 4).sum()
+    }
+
+    /// Conservative warm footprint (weight slices + A-slice scratch +
+    /// quire-spill scratch, 64-byte aligned) — the router's placement
+    /// budget, mirror of [`CompiledModel::warm_footprint_bytes`].
+    pub fn warm_footprint_bytes(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| s.weight.data.len() * 4)
+            .chain([self.a_len * 4, self.q_len * QUIRE_SPILL_BYTES])
+            .map(|b| b.next_multiple_of(64))
+            .sum()
+    }
+
+    /// Warm this shard on `soc`: upload the weight slices as resident
+    /// images, pin their encodings, allocate A/quire scratch. Idempotent
+    /// per (shard, soc); failure rolls back exactly like whole-model
+    /// warming.
+    pub fn ensure_warm(&self, soc: &mut Soc) -> Result<(), SocError> {
+        if soc.has_model_state(self.uid) {
+            return Ok(());
+        }
+        let arena = self.warm_inner(soc)?;
+        soc.put_model_state(self.uid, Box::new(arena));
+        Ok(())
+    }
+
+    fn warm_inner(&self, soc: &mut Soc) -> Result<ShardArena, SocError> {
+        let mut allocs: Vec<(u64, u64)> = Vec::with_capacity(self.steps.len() + 2);
+        let mut w_addrs = Vec::with_capacity(self.steps.len());
+        let fail = |me: &Self, soc: &mut Soc, pins: usize, allocs: &[(u64, u64)], e: SocError| {
+            for st in me.steps.iter().take(pins) {
+                soc.enc_cache.unpin_cols(&st.weight, st.sel);
+            }
+            for &(s, end) in allocs {
+                soc.free_resident(s, end);
+            }
+            e
+        };
+        for (i, st) in self.steps.iter().enumerate() {
+            let addr = match alloc_span(soc, st.weight.data.len() * 4, &mut allocs) {
+                Ok(a) => a,
+                Err(e) => return Err(fail(self, soc, i, &allocs, e)),
+            };
+            if let Err(e) = soc.ext.write_f32(addr, &st.weight.data) {
+                return Err(fail(self, soc, i, &allocs, e));
+            }
+            soc.enc_cache.preload_cols(&st.weight, Arc::clone(&st.w_enc));
+            w_addrs.push(addr);
+        }
+        let a_addr = match alloc_span(soc, self.a_len * 4, &mut allocs) {
+            Ok(a) => a,
+            Err(e) => return Err(fail(self, soc, self.steps.len(), &allocs, e)),
+        };
+        let q_addr = match alloc_span(soc, self.q_len * QUIRE_SPILL_BYTES, &mut allocs) {
+            Ok(a) => a,
+            Err(e) => return Err(fail(self, soc, self.steps.len(), &allocs, e)),
+        };
+        Ok(ShardArena { w_addrs, a_addr, q_addr, allocs })
+    }
+
+    /// Tear down this shard's warm state (mirror of
+    /// [`CompiledModel::evict`]; a no-op on a SoC never warmed).
+    pub fn evict(&self, soc: &mut Soc) {
+        let Some(arena) =
+            soc.take_model_state(self.uid).and_then(|b| b.downcast::<ShardArena>().ok())
+        else {
+            return;
+        };
+        for st in &self.steps {
+            soc.enc_cache.unpin_cols(&st.weight, st.sel);
+        }
+        for &(s, e) in &arena.allocs {
+            soc.free_resident(s, e);
+        }
+    }
+
+    /// Run this shard's partial GEMM for step `gemm_idx` on `soc`
+    /// (warming on demand): `a` is the coordinator-scaled A slice for
+    /// this shard; the raw partial quires come back for reduction.
+    pub fn run_gemm(
+        &self,
+        soc: &mut Soc,
+        gemm_idx: usize,
+        a: &Matrix,
+    ) -> Result<(QuireMatrix, JobReport)> {
+        self.ensure_warm(soc)?;
+        // Only the addresses are needed — copy them out and restore the
+        // warm state *before* any fallible/panicky work, so a contained
+        // worker panic can never drop the arena (the sole record of the
+        // resident spans and cache pins).
+        let (w_addr, a_addr, q_addr) = {
+            let state = soc.take_model_state(self.uid).expect("warmed above");
+            let arena =
+                state.downcast_ref::<ShardArena>().expect("shard-state uid collision");
+            let addrs = (arena.w_addrs[gemm_idx], arena.a_addr, arena.q_addr);
+            soc.put_model_state(self.uid, state);
+            addrs
+        };
+        let st = &self.steps[gemm_idx];
+        debug_assert_eq!(st.gemm_idx, gemm_idx);
+        let res =
+            soc.gemm_partial(a, st.k, st.n, w_addr, &st.w_enc, a_addr, q_addr, st.sel);
+        Ok(res?)
     }
 }
 
@@ -944,6 +1483,251 @@ mod tests {
         let (e2, _) = ce.replay(&mut soc, &in_e, &[]).unwrap();
         assert_eq!(g1, g2);
         assert_eq!(e1, e2);
+    }
+
+    /// Drive `run_sharded` inline: shard `n_shards` ways, one fresh SoC
+    /// per shard, synchronous scatter. Returns outputs + report.
+    fn run_sharded_inline(
+        compiled: &CompiledModel,
+        n_shards: usize,
+        socs: &mut [Soc],
+        input: &[f32],
+        aux: &[f32],
+    ) -> (Vec<f32>, ExecReport) {
+        let shards: Vec<Arc<ShardedModel>> =
+            shard(compiled, n_shards).expect("plan").into_iter().map(Arc::new).collect();
+        compiled
+            .run_sharded(
+                &shards,
+                input,
+                aux,
+                |si, gi, a| shards[si].run_gemm(&mut socs[si], gi, &a),
+                Ok,
+            )
+            .expect("sharded run")
+    }
+
+    #[test]
+    fn shard_plan_rejects_zero_and_unsplittable() {
+        let g = gaze::build();
+        let w = random_weights(&g, 100);
+        let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+        let compiled = compile(&g, &w, &plan).unwrap();
+        assert_eq!(
+            shard(&compiled, 0).unwrap_err(),
+            ShardError::ZeroShards { model: "gazenet".into() }
+        );
+        // 40 shards: fc3 (64×2) has K < 4·40 and N < 40 — rejected at
+        // plan time, never mid-request
+        match shard(&compiled, 40).unwrap_err() {
+            ShardError::Unsplittable { n_shards: 40, .. } => {}
+            other => panic!("unexpected error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shard_slices_cover_align_and_are_never_empty() {
+        // K not divisible by the shard count, K exactly divisible, and
+        // the N-split fallback — slices always cover the axis exactly,
+        // are non-empty, and non-final K boundaries land on whole words
+        for (k, n, shards) in [(22, 5, 2), (16, 64, 3), (64, 2, 4), (6, 9, 3), (12, 3, 3)] {
+            let slices = plan_slices(k, n, shards).unwrap_or_else(|| panic!("{k}x{n}/{shards}"));
+            assert_eq!(slices.len(), shards);
+            match slices[0] {
+                ShardSlice::K { .. } => {
+                    let mut next = 0;
+                    for (i, s) in slices.iter().enumerate() {
+                        let ShardSlice::K { k0, k1 } = *s else { panic!("mixed slice kinds") };
+                        assert_eq!(k0, next, "K slices must tile the axis");
+                        assert!(k1 > k0, "empty K slice");
+                        if i < shards - 1 {
+                            assert_eq!((k1 - k0) % SHARD_K_ALIGN, 0, "unaligned non-final slice");
+                        }
+                        next = k1;
+                    }
+                    assert_eq!(next, k);
+                }
+                ShardSlice::N { .. } => {
+                    assert!(k < SHARD_K_ALIGN * shards, "N-split only when K is too small");
+                    let mut next = 0;
+                    for s in &slices {
+                        let ShardSlice::N { n0, n1 } = *s else { panic!("mixed slice kinds") };
+                        assert_eq!(n0, next);
+                        assert!(n1 > n0, "empty N slice");
+                        next = n1;
+                    }
+                    assert_eq!(next, n);
+                }
+            }
+        }
+        assert!(plan_slices(7, 2, 3).is_none(), "too small in both axes");
+    }
+
+    #[test]
+    fn single_shard_degenerate_matches_whole_values() {
+        let g = gaze::build();
+        let w = random_weights(&g, 101);
+        let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+        let compiled = compile(&g, &w, &plan).unwrap();
+        let mut soc_w = Soc::new(SocConfig::default());
+        let mut socs = vec![Soc::new(SocConfig::default())];
+        let input = test_input(g.input.numel(), 0.3);
+        let (want, wrep) = compiled.replay(&mut soc_w, &input, &[]).unwrap();
+        let (got, grep) = run_sharded_inline(&compiled, 1, &mut socs, &input, &[]);
+        assert_eq!(got, want, "single-shard degenerate must match the whole path");
+        assert_eq!(grep.jobs.array.macs, wrep.jobs.array.macs);
+        assert_eq!(grep.reduce_cycles, 0, "one shard has nothing to reduce");
+    }
+
+    #[test]
+    fn sharded_matches_whole_bit_identically_all_modes() {
+        // THE sharding acceptance differential: for every hardware mode
+        // and 2- and 3-way shard plans, serving through scatter →
+        // partial quires → exact merge → single round is bit-identical
+        // in values to the whole-model replay; MAC work is conserved,
+        // fetch traffic sums exactly (aligned K splits), and the report
+        // carries exactly the documented reduction term.
+        let g = gaze::build();
+        for (mi, sel) in PrecSel::ALL.into_iter().enumerate() {
+            let w = random_weights(&g, 110 + mi as u64);
+            let plan = PrecisionPlan::uniform(sel, &g.compute_layer_params());
+            let compiled = compile(&g, &w, &plan).unwrap();
+            for n_shards in [2usize, 3] {
+                let mut soc_w = Soc::new(SocConfig::default());
+                let mut socs: Vec<Soc> =
+                    (0..n_shards).map(|_| Soc::new(SocConfig::default())).collect();
+                for req in 0..2 {
+                    let input = test_input(g.input.numel(), req as f32 + mi as f32);
+                    let (want, wrep) = compiled.replay(&mut soc_w, &input, &[]).unwrap();
+                    let (got, grep) =
+                        run_sharded_inline(&compiled, n_shards, &mut socs, &input, &[]);
+                    assert_eq!(got, want, "{sel:?} x{n_shards} req {req}: values diverged");
+                    assert_eq!(
+                        grep.jobs.array.macs, wrep.jobs.array.macs,
+                        "{sel:?} x{n_shards}: MAC work must be conserved"
+                    );
+                    assert_eq!(
+                        grep.jobs.bytes_in, wrep.jobs.bytes_in,
+                        "{sel:?} x{n_shards}: aligned K splits must sum fetch bytes exactly"
+                    );
+                    let (want_rc, want_rb) = compiled
+                        .steps
+                        .iter()
+                        .filter_map(|s| {
+                            if let Step::Gemm(g) = s {
+                                Some(reduction_cost(n_shards, g.m, g.n))
+                            } else {
+                                None
+                            }
+                        })
+                        .fold((0u64, 0u64), |(c, b), (rc, rb)| (c + rc, b + rb));
+                    assert_eq!((grep.reduce_cycles, grep.reduce_bytes), (want_rc, want_rb));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nsplit_fallback_matches_whole_and_charges_no_merge() {
+        // a K too small to split 3 ways forces the N-split fallback:
+        // values still bit-identical, and the reduction term reflects
+        // disjoint tiling — one output image of quire traffic, zero
+        // cross-partial merge adds
+        use crate::models::graph::Layer;
+        let g = ModelGraph {
+            name: "tiny_fc".into(),
+            input: Shape::vec(6),
+            layers: vec![Layer {
+                name: "fc".into(),
+                kind: LayerKind::Fc { in_f: 6, out_f: 9 },
+            }],
+        };
+        let w = random_weights(&g, 140);
+        let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+        let compiled = compile(&g, &w, &plan).unwrap();
+        let shards = shard(&compiled, 3).unwrap();
+        assert!(
+            shards.iter().all(|s| matches!(s.steps[0].slice, ShardSlice::N { .. })),
+            "k=6 < 4*3 must take the N-split fallback"
+        );
+        let mut soc_w = Soc::new(SocConfig::default());
+        let mut socs: Vec<Soc> = (0..3).map(|_| Soc::new(SocConfig::default())).collect();
+        let input = test_input(6, 0.2);
+        let (want, _) = compiled.replay(&mut soc_w, &input, &[]).unwrap();
+        let (got, grep) = run_sharded_inline(&compiled, 3, &mut socs, &input, &[]);
+        assert_eq!(got, want, "N-split sharded run diverged");
+        assert_eq!(grep.reduce_cycles, 0, "disjoint blocks have no cross-partial adds");
+        assert_eq!(
+            grep.reduce_bytes,
+            (9 * QUIRE_SPILL_BYTES) as u64,
+            "N-split moves exactly one output image of quires"
+        );
+    }
+
+    #[test]
+    fn sharded_matches_whole_conv_and_mixed_plans() {
+        // conv workloads (im2col gather at the coordinator) and a mixed
+        // per-layer morph schedule shard just as exactly
+        for (g, seed) in [(effnet::build(), 120u64), (ulvio::build(), 121)] {
+            let params = g.compute_layer_params();
+            let mut plan = PrecisionPlan::uniform(PrecSel::Fp4x4, &params);
+            for (i, sel) in plan.per_layer.iter_mut().enumerate() {
+                *sel = PrecSel::ALL[i % PrecSel::ALL.len()];
+            }
+            let w = random_weights(&g, seed);
+            let compiled = compile(&g, &w, &plan).unwrap();
+            let aux: Vec<f32> = test_input(aux_len(&g), 0.7);
+            let mut soc_w = Soc::new(SocConfig::default());
+            let mut socs = vec![Soc::new(SocConfig::default()), Soc::new(SocConfig::default())];
+            let input = test_input(g.input.numel(), 0.4);
+            let (want, _) = compiled.replay(&mut soc_w, &input, &aux).unwrap();
+            let (got, _) = run_sharded_inline(&compiled, 2, &mut socs, &input, &aux);
+            assert_eq!(got, want, "{}: sharded conv/mixed run diverged", g.name);
+        }
+    }
+
+    #[test]
+    fn oversized_model_serves_from_shards_none_could_host_whole() {
+        // the capacity win sharding exists for: a model whose resident
+        // image exceeds one replica's DRAM budget registers and serves
+        // across 2 shards, bit-identical to a big-DRAM whole-model run
+        let g = crate::models::mlp::build();
+        let w = random_weights(&g, 130);
+        let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+        let compiled = compile(&g, &w, &plan).unwrap();
+        let small = SocConfig { dram_bytes: 1 << 17, ..Default::default() };
+        // the whole model does not fit a small replica...
+        let mut probe = Soc::new(small);
+        assert!(
+            compiled.ensure_warm(&mut probe).is_err(),
+            "test premise: whole model must exceed one small replica"
+        );
+        // ...but each half-shard does
+        let mut socs = vec![Soc::new(small), Soc::new(small)];
+        let mut soc_big = Soc::new(SocConfig::default());
+        for req in 0..2 {
+            let input = test_input(g.input.numel(), req as f32);
+            let (want, _) = compiled.replay(&mut soc_big, &input, &[]).unwrap();
+            let (got, _) = run_sharded_inline(&compiled, 2, &mut socs, &input, &[]);
+            assert_eq!(got, want, "req {req}: oversized sharded serving diverged");
+        }
+    }
+
+    #[test]
+    fn shard_evict_releases_pins_and_dram() {
+        let g = gaze::build();
+        let w = random_weights(&g, 131);
+        let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+        let compiled = compile(&g, &w, &plan).unwrap();
+        let shards = shard(&compiled, 2).unwrap();
+        let mut soc = Soc::new(SocConfig::default());
+        let mark = soc.resident_mark();
+        shards[0].ensure_warm(&mut soc).unwrap();
+        assert_eq!(soc.enc_cache.pinned_len(), compiled.n_gemm());
+        shards[0].evict(&mut soc);
+        assert_eq!(soc.enc_cache.pinned_len(), 0, "shard evict must unpin");
+        assert_eq!(soc.resident_mark(), mark, "shard evict must return its DRAM");
+        assert_eq!(soc.resident_free_bytes(), 0);
     }
 
     #[test]

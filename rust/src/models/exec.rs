@@ -44,23 +44,33 @@ use anyhow::{bail, Context, Result};
 /// Execution statistics for one forward pass (NPE path).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ExecReport {
-    /// Merged co-processor job reports over all compute layers.
+    /// Merged co-processor job reports over all compute layers (for a
+    /// sharded request: summed over every shard's partial GEMMs).
     pub jobs: JobReport,
     /// Vector-unit (pool/act) element operations, charged at `lanes`
     /// elems/cycle on the output stage.
     pub vector_cycles: u64,
+    /// Cross-shard quire-reduction cycles (the **documented reduction
+    /// term**, [`crate::models::compile::reduction_cost`]); zero on the
+    /// whole-model path.
+    pub reduce_cycles: u64,
+    /// Cross-shard quire traffic in bytes (partial-quire images moved to
+    /// the reducer); zero on the whole-model path.
+    pub reduce_bytes: u64,
     /// Per-layer (layer index, cycles) breakdown.
     pub per_layer_cycles: Vec<(usize, u64)>,
 }
 
 impl ExecReport {
     pub fn total_cycles(&self) -> u64 {
-        self.jobs.total_cycles + self.vector_cycles
+        self.jobs.total_cycles + self.vector_cycles + self.reduce_cycles
     }
 
     pub fn merge(&mut self, o: &ExecReport) {
         self.jobs.merge(&o.jobs);
         self.vector_cycles += o.vector_cycles;
+        self.reduce_cycles += o.reduce_cycles;
+        self.reduce_bytes += o.reduce_bytes;
     }
 }
 

@@ -25,7 +25,10 @@ pub mod graph;
 pub mod mlp;
 pub mod ulvio;
 
-pub use compile::{compile, CompileError, CompiledModel, GatherMap};
+pub use compile::{
+    compile, reduction_cost, shard, CompileError, CompiledModel, GatherMap, ShardError,
+    ShardSlice, ShardedModel,
+};
 pub use exec::{Backend, ExecReport, Executor};
 pub use graph::{ActKind, Layer, LayerKind, ModelGraph, PoolKind};
 

@@ -177,6 +177,14 @@ impl Engine {
     pub fn lane_flags(&self, lane: usize) -> (bool, bool) {
         (self.quires[lane].overflow, self.quires[lane].nar)
     }
+
+    /// The lane's raw quire — the **partial-GEMM readout**: instead of
+    /// rounding through the output-processing stage, the exact
+    /// accumulator leaves the engine so a cross-shard reduction can
+    /// merge partials and round exactly once ([`Quire::merge`]).
+    pub fn lane_quire(&self, lane: usize) -> Quire {
+        self.quires[lane]
+    }
 }
 
 impl std::fmt::Debug for Engine {

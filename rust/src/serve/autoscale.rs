@@ -143,6 +143,131 @@ impl Autoscaler {
     }
 }
 
+/// Knobs for the **wall-clock-free** scaling policy. Thresholds are in
+/// units of *congestion* = queued jobs × windowed mean service cycles —
+/// "how many simulated cycles of work are waiting", a number that
+/// depends only on the workload and the engine model, never on host
+/// speed. Tests against it reproduce exactly on any machine.
+#[derive(Debug, Clone, Copy)]
+pub struct CycleAutoscaleConfig {
+    /// Never park below this many active replicas.
+    pub floor: usize,
+    /// Never activate more than this many.
+    pub max: usize,
+    /// Congestion at/above this scales up by `step`.
+    pub scale_up: u64,
+    /// Congestion at/below this scales down by one.
+    pub scale_down: u64,
+    /// Service-cycle sample window length.
+    pub window: usize,
+    /// Replicas added per scale-up decision.
+    pub step: usize,
+    /// Truly-idle ticks (no fresh samples, nothing queued or in flight)
+    /// before parking to the floor.
+    pub idle_patience: u32,
+}
+
+impl Default for CycleAutoscaleConfig {
+    fn default() -> Self {
+        CycleAutoscaleConfig {
+            floor: 1,
+            max: usize::MAX,
+            // one gaze-class inference is ~20-40k sim-cycles; a few
+            // requests' worth of queued work is congestion
+            scale_up: 100_000,
+            scale_down: 10_000,
+            window: 256,
+            step: 1,
+            idle_patience: 2,
+        }
+    }
+}
+
+/// The simulated-cycle congestion policy (ROADMAP follow-up from the
+/// async-serving PR): consumes **service cycles** from the runtime's
+/// [`crate::serve::RuntimeMetrics::service_cycles`] window plus the
+/// instantaneous queue depth, and scales on `depth × mean service
+/// cycles`. Unlike [`Autoscaler`]'s nanosecond thresholds, every input
+/// is simulator-deterministic, so scaling tests need no host-speed
+/// tuning. Fed by [`crate::coordinator::Router::autoscale_tick_cycles`].
+#[derive(Debug)]
+pub struct CycleAutoscaler {
+    pub cfg: CycleAutoscaleConfig,
+    service: WindowedStats,
+    seen_at_last_decide: u64,
+    idle_ticks: u32,
+}
+
+impl CycleAutoscaler {
+    pub fn new(cfg: CycleAutoscaleConfig) -> CycleAutoscaler {
+        assert!(cfg.floor >= 1, "autoscale floor must be >= 1");
+        assert!(cfg.max >= cfg.floor, "autoscale max must be >= floor");
+        assert!(cfg.window >= 1 && cfg.step >= 1);
+        CycleAutoscaler {
+            cfg,
+            service: WindowedStats::with_window(cfg.window),
+            seen_at_last_decide: 0,
+            idle_ticks: 0,
+        }
+    }
+
+    /// Feed one completed job's simulated service cost.
+    pub fn observe_service_cycles(&mut self, cycles: u64) {
+        self.service.record(cycles);
+    }
+
+    /// Feed a batch of samples (the runtime's incremental tail).
+    pub fn observe_samples(&mut self, samples: &[u64]) {
+        for &s in samples {
+            self.observe_service_cycles(s);
+        }
+    }
+
+    /// The congestion signal: `queue_depth ×` windowed mean service
+    /// cycles — the simulated work (in cycles) sitting in the queues.
+    pub fn congestion(&self, queue_depth: usize) -> u64 {
+        (queue_depth as f64 * self.service.mean()) as u64
+    }
+
+    /// One policy tick. `queue_depth` is the fleet-wide queued-job count
+    /// at tick time; `in_flight` counts dispatched-but-unfulfilled jobs.
+    /// Deep queues scale up even when nothing completed since the last
+    /// tick (a fully backlogged fleet produces no fresh samples — that
+    /// is exactly when scaling up matters most); parking requires a
+    /// truly idle runtime: no fresh samples, empty queues, nothing in
+    /// flight.
+    pub fn decide(&mut self, active: usize, in_flight: usize, queue_depth: usize) -> usize {
+        let active = active.clamp(self.cfg.floor, self.cfg.max);
+        let fresh = self.service.recorded() > self.seen_at_last_decide;
+        self.seen_at_last_decide = self.service.recorded();
+        if !fresh && queue_depth == 0 {
+            if in_flight > 0 {
+                self.idle_ticks = 0;
+                return active;
+            }
+            self.idle_ticks += 1;
+            if self.idle_ticks >= self.cfg.idle_patience {
+                return self.cfg.floor;
+            }
+            return active;
+        }
+        self.idle_ticks = 0;
+        if self.service.count() == 0 {
+            // queued work but no cost estimate yet (first requests still
+            // executing): hold until a sample arrives
+            return active;
+        }
+        let congestion = self.congestion(queue_depth);
+        if congestion >= self.cfg.scale_up {
+            active.saturating_add(self.cfg.step).min(self.cfg.max)
+        } else if congestion <= self.cfg.scale_down {
+            active.saturating_sub(1).max(self.cfg.floor)
+        } else {
+            active
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,5 +360,73 @@ mod tests {
         a.observe_samples(&[10; 16]); // fully displaces the hot samples
         assert!(a.queue_percentile(95.0) <= 10);
         assert_eq!(a.observed(), 32);
+    }
+
+    fn sim_cfg() -> CycleAutoscaleConfig {
+        CycleAutoscaleConfig {
+            floor: 1,
+            max: 4,
+            scale_up: 50_000,
+            scale_down: 5_000,
+            window: 16,
+            step: 1,
+            idle_patience: 2,
+        }
+    }
+
+    #[test]
+    fn cycle_policy_is_reproducible_from_simulated_numbers_alone() {
+        // the whole point of the satellite: every input is simulator
+        // output (service cycles, queue depth), so this exact decision
+        // sequence holds on any host at any load, no tuned thresholds
+        let mut a = CycleAutoscaler::new(sim_cfg());
+        a.observe_samples(&[20_000; 4]); // mean 20k cycles/request
+        assert_eq!(a.congestion(3), 60_000);
+        assert_eq!(a.decide(1, 3, 3), 2, "60k congestion >= 50k scales up");
+        a.observe_samples(&[20_000; 2]);
+        assert_eq!(a.decide(2, 0, 0), 1, "zero depth = zero congestion, steps down");
+        // mid-band holds
+        a.observe_samples(&[20_000; 2]);
+        assert_eq!(a.decide(2, 1, 1), 2, "20k congestion holds steady");
+    }
+
+    #[test]
+    fn cycle_policy_scales_up_on_deep_queue_without_fresh_samples() {
+        // a fully backlogged fleet completes nothing between ticks — the
+        // nanosecond policy holds (no samples), this one scales up from
+        // the queue depth and the last known mean cost
+        let mut a = CycleAutoscaler::new(sim_cfg());
+        a.observe_samples(&[30_000; 4]);
+        assert_eq!(a.decide(1, 4, 2), 2, "tick 1: 60k queued-cycles scales up");
+        assert_eq!(a.decide(2, 4, 2), 3, "tick 2: no fresh samples, queue still deep");
+    }
+
+    #[test]
+    fn cycle_policy_holds_until_first_cost_sample() {
+        let mut a = CycleAutoscaler::new(sim_cfg());
+        assert_eq!(a.decide(1, 3, 3), 1, "no cost estimate yet: hold");
+    }
+
+    #[test]
+    fn cycle_policy_parks_only_when_truly_idle() {
+        let mut a = CycleAutoscaler::new(sim_cfg());
+        a.observe_samples(&[30_000; 8]);
+        let up = a.decide(3, 8, 4);
+        assert_eq!(up, 4);
+        // draining: in flight but empty queues → hold, never park
+        assert_eq!(a.decide(4, 2, 0), 4);
+        assert_eq!(a.decide(4, 2, 0), 4, "in-flight work blocks idle parking");
+        // truly idle: patience, then floor
+        assert_eq!(a.decide(4, 0, 0), 4, "first idle tick within patience");
+        assert_eq!(a.decide(4, 0, 0), 1, "second idle tick parks to the floor");
+    }
+
+    #[test]
+    fn cycle_policy_respects_floor_and_max() {
+        let mut a = CycleAutoscaler::new(CycleAutoscaleConfig { floor: 2, max: 3, ..sim_cfg() });
+        a.observe_samples(&[1_000_000; 4]);
+        assert_eq!(a.decide(3, 9, 9), 3, "never exceeds max");
+        a.observe_samples(&[1; 4]);
+        assert_eq!(a.decide(2, 1, 1), 2, "never shrinks below floor");
     }
 }

@@ -33,10 +33,13 @@ pub mod handle;
 pub mod queue;
 pub mod worker;
 
-pub use autoscale::{AutoscaleConfig, Autoscaler};
+pub use autoscale::{AutoscaleConfig, Autoscaler, CycleAutoscaleConfig, CycleAutoscaler};
 pub use handle::{completion, Canceled, Completion, CompletionSender};
 pub use queue::{Closed, WorkQueue};
-pub use worker::{Job, ReplicaWorker, RuntimeMetrics, ServeRuntime, WindowedStats};
+pub use worker::{
+    device_lock, Job, JobPayload, ReplicaWorker, RuntimeMetrics, ServeRuntime, WindowedStats,
+    WorkerPanic,
+};
 
 #[cfg(test)]
 mod tests {

@@ -19,27 +19,101 @@
 
 use super::handle::CompletionSender;
 use super::queue::{Closed, WorkQueue};
+use crate::arith::QuireMatrix;
 use crate::coordinator::metrics::LatencyStats;
 use crate::coordinator::router::{RoutedResult, WorkloadKind};
 use crate::coordinator::scheduler::ModelInstance;
-use crate::soc::{Soc, SocConfig};
+use crate::models::ShardedModel;
+use crate::soc::{JobReport, Soc, SocConfig};
+use crate::util::Matrix;
 use anyhow::Result;
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// One unit of work for a replica worker.
 pub struct Job {
-    pub kind: WorkloadKind,
-    pub inst: Arc<ModelInstance>,
-    pub input: Vec<f32>,
-    pub aux: Vec<f32>,
     /// Submission timestamp (host clock) — queue latency is measured
     /// from here to worker pickup.
     pub enqueued: Instant,
-    /// Fulfilled with the inference result (or its error).
-    pub done: CompletionSender<Result<RoutedResult>>,
+    pub payload: JobPayload,
+}
+
+/// What the worker runs while holding the replica device lock.
+pub enum JobPayload {
+    /// A whole-model inference (the resident fast path).
+    Infer {
+        kind: WorkloadKind,
+        inst: Arc<ModelInstance>,
+        input: Vec<f32>,
+        aux: Vec<f32>,
+        /// Fulfilled with the inference result (or its error).
+        done: CompletionSender<Result<RoutedResult>>,
+    },
+    /// One **partial GEMM** of a sharded layer: the coordinator-scaled
+    /// A slice runs against this replica's resident weight shard and
+    /// the raw partial quires come back for cross-shard reduction.
+    Partial {
+        shard: Arc<ShardedModel>,
+        gemm_idx: usize,
+        a: Matrix,
+        done: CompletionSender<Result<(QuireMatrix, JobReport)>>,
+    },
+    /// Diagnostic escape hatch: run an arbitrary closure on the replica
+    /// (device checks, and the panic-containment regression tests).
+    Probe {
+        run: Box<dyn FnOnce(&mut Soc) -> Result<Vec<f32>> + Send>,
+        done: CompletionSender<Result<Vec<f32>>>,
+    },
+}
+
+/// Typed error a waiter receives when the replica worker **panicked**
+/// while executing its job: the panic is contained, the completion
+/// fails with this instead of a hang or an opaque cancellation, and the
+/// worker keeps draining its queue.
+#[derive(Debug, Clone)]
+pub struct WorkerPanic {
+    /// Replica whose worker panicked.
+    pub replica: usize,
+    /// The panic payload, when it was a string.
+    pub message: String,
+}
+
+impl WorkerPanic {
+    /// Build from a [`catch_unwind`] payload (also used by the router's
+    /// sharded-coordinator fence — same containment, same typed error).
+    pub(crate) fn new(replica: usize, payload: Box<dyn std::any::Any + Send>) -> WorkerPanic {
+        let message = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".into());
+        WorkerPanic { replica, message }
+    }
+}
+
+impl fmt::Display for WorkerPanic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "replica {} worker panicked: {}", self.replica, self.message)
+    }
+}
+
+impl std::error::Error for WorkerPanic {}
+
+/// Take a replica device lock, clearing poisoning: a contained worker
+/// panic poisons the mutex on unwind, but every job is fenced by
+/// [`catch_unwind`] and the SoC's warm-state handoff is per-request
+/// (worst case a later request re-warms), so the device stays usable —
+/// a poisoned-lock panic cascade would turn one bad request into a dead
+/// replica.
+pub fn device_lock(soc: &Mutex<Soc>) -> MutexGuard<'_, Soc> {
+    match soc.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
 }
 
 /// Latency samples over a bounded sliding window. The serving runtime
@@ -142,8 +216,19 @@ pub struct RuntimeMetrics {
     pub queue: WindowedStats,
     /// Time each job spent executing (replica lock + replay).
     pub service: WindowedStats,
+    /// **Simulated** service cost of each successful job in engine
+    /// cycles (`ExecReport`/`JobReport` totals) — the wall-clock-free
+    /// congestion signal [`super::CycleAutoscaler`] consumes, so scaling
+    /// decisions reproduce exactly regardless of host speed.
+    pub service_cycles: WindowedStats,
     /// Jobs completed (fulfilled, whether Ok or Err).
     pub completed: u64,
+    /// Jobs whose execution panicked (contained; the waiter got a typed
+    /// [`WorkerPanic`] error).
+    pub worker_panics: u64,
+    /// Times a worker's drain loop itself died and was respawned by the
+    /// supervisor.
+    pub worker_respawns: u64,
 }
 
 struct SharedState {
@@ -165,6 +250,33 @@ pub struct ReplicaWorker {
     handle: Option<JoinHandle<()>>,
 }
 
+/// Take the shared-state lock, clearing poisoning (see [`device_lock`]).
+fn shared_lock(shared: &Shared) -> MutexGuard<'_, SharedState> {
+    match shared.state.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Account one finished job *before* its completion is fulfilled: a
+/// caller that redeems the handle is then guaranteed to observe the job
+/// in [`RuntimeMetrics`] and out of `in_flight()`. Runs for panicked
+/// jobs too — a panic must never strand `busy` (quiesce would hang).
+fn account(shared: &Shared, waited: u64, service: u64, sim_cycles: Option<u64>, panicked: bool) {
+    let mut st = shared_lock(shared);
+    st.metrics.queue.record(waited);
+    st.metrics.service.record(service);
+    if let Some(c) = sim_cycles {
+        st.metrics.service_cycles.record(c);
+    }
+    st.metrics.completed += 1;
+    if panicked {
+        st.metrics.worker_panics += 1;
+    }
+    st.busy -= 1;
+    shared.idle.notify_all();
+}
+
 impl ReplicaWorker {
     fn spawn(
         id: usize,
@@ -177,35 +289,84 @@ impl ReplicaWorker {
         let handle = std::thread::Builder::new()
             .name(format!("xr-npe-replica-{id}"))
             .spawn(move || {
-                while let Some(job) = q.pop() {
-                    let waited = job.enqueued.elapsed().as_nanos() as u64;
-                    let t0 = Instant::now();
-                    let res = {
-                        let mut soc = soc.lock().unwrap();
-                        job.inst.infer(&mut soc, &job.input, &job.aux)
-                    };
-                    let service = t0.elapsed().as_nanos() as u64;
-                    // account *before* fulfilling: a caller that redeems
-                    // the completion is then guaranteed to observe this
-                    // job in RuntimeMetrics and out of in_flight()
-                    {
-                        let mut st = shared.state.lock().unwrap();
-                        st.metrics.queue.record(waited);
-                        st.metrics.service.record(service);
-                        st.metrics.completed += 1;
-                        st.busy -= 1;
-                        shared.idle.notify_all();
+                // Respawn-on-panic supervisor: each job is individually
+                // fenced below, so a drain-loop death means something
+                // outside a job fence panicked — restart the loop
+                // instead of stranding the queue (pending jobs would
+                // otherwise hang until shutdown).
+                loop {
+                    let run =
+                        catch_unwind(AssertUnwindSafe(|| Self::drain(id, &q, &soc, &shared)));
+                    match run {
+                        Ok(()) => break, // queue closed and drained
+                        Err(_) => shared_lock(&shared).metrics.worker_respawns += 1,
                     }
-                    job.done.fulfill(res.map(|(output, report)| RoutedResult {
-                        kind: job.kind,
-                        output,
-                        report,
-                        replica: id,
-                    }));
                 }
             })
             .expect("spawn replica worker");
         ReplicaWorker { id, queue, handle: Some(handle) }
+    }
+
+    /// The drain loop: pop → execute under the device lock (panic-
+    /// fenced) → account → fulfill. A job that panics fails its
+    /// completion with a typed [`WorkerPanic`] and the loop continues —
+    /// one poisoned request cannot strand the queued requests behind it.
+    fn drain(id: usize, q: &WorkQueue<Job>, soc: &Arc<Mutex<Soc>>, shared: &Shared) {
+        while let Some(job) = q.pop() {
+            let waited = job.enqueued.elapsed().as_nanos() as u64;
+            let t0 = Instant::now();
+            match job.payload {
+                JobPayload::Infer { kind, inst, input, aux, done } => {
+                    let res = catch_unwind(AssertUnwindSafe(|| {
+                        let mut dev = device_lock(soc);
+                        inst.infer(&mut dev, &input, &aux)
+                    }));
+                    let service = t0.elapsed().as_nanos() as u64;
+                    let cycles = match &res {
+                        Ok(Ok((_, rep))) => Some(rep.total_cycles()),
+                        _ => None,
+                    };
+                    account(shared, waited, service, cycles, res.is_err());
+                    match res {
+                        Ok(r) => done.fulfill(r.map(|(output, report)| RoutedResult {
+                            kind,
+                            output,
+                            report,
+                            replica: id,
+                        })),
+                        Err(p) => done.fulfill(Err(WorkerPanic::new(id, p).into())),
+                    }
+                }
+                JobPayload::Partial { shard, gemm_idx, a, done } => {
+                    let res = catch_unwind(AssertUnwindSafe(|| {
+                        let mut dev = device_lock(soc);
+                        shard.run_gemm(&mut dev, gemm_idx, &a)
+                    }));
+                    let service = t0.elapsed().as_nanos() as u64;
+                    let cycles = match &res {
+                        Ok(Ok((_, rep))) => Some(rep.total_cycles),
+                        _ => None,
+                    };
+                    account(shared, waited, service, cycles, res.is_err());
+                    match res {
+                        Ok(r) => done.fulfill(r),
+                        Err(p) => done.fulfill(Err(WorkerPanic::new(id, p).into())),
+                    }
+                }
+                JobPayload::Probe { run, done } => {
+                    let res = catch_unwind(AssertUnwindSafe(|| {
+                        let mut dev = device_lock(soc);
+                        run(&mut dev)
+                    }));
+                    let service = t0.elapsed().as_nanos() as u64;
+                    account(shared, waited, service, None, res.is_err());
+                    match res {
+                        Ok(r) => done.fulfill(r),
+                        Err(p) => done.fulfill(Err(WorkerPanic::new(id, p).into())),
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -252,11 +413,11 @@ impl ServeRuntime {
     /// Enqueue a job on replica `replica`'s queue, blocking if that
     /// queue is full (bounded admission = back-pressure).
     pub fn dispatch(&self, replica: usize, job: Job) -> Result<(), Closed> {
-        self.shared.state.lock().unwrap().busy += 1;
+        shared_lock(&self.shared).busy += 1;
         match self.workers[replica].queue.push(job) {
             Ok(()) => Ok(()),
             Err(e) => {
-                let mut st = self.shared.state.lock().unwrap();
+                let mut st = shared_lock(&self.shared);
                 st.busy -= 1;
                 self.shared.idle.notify_all();
                 Err(e)
@@ -271,7 +432,7 @@ impl ServeRuntime {
 
     /// Jobs dispatched but not yet fulfilled, runtime-wide.
     pub fn in_flight(&self) -> usize {
-        self.shared.state.lock().unwrap().busy
+        shared_lock(&self.shared).busy
     }
 
     /// Block until every dispatched job has finished executing and been
@@ -280,15 +441,18 @@ impl ServeRuntime {
     /// let in-flight requests against a replaced model drain off the
     /// hardware before its warm state is evicted.
     pub fn quiesce(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = shared_lock(&self.shared);
         while st.busy > 0 {
-            st = self.shared.idle.wait(st).unwrap();
+            st = match self.shared.idle.wait(st) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
     }
 
     /// Snapshot of the host-side latency metrics.
     pub fn metrics(&self) -> RuntimeMetrics {
-        self.shared.state.lock().unwrap().metrics.clone()
+        shared_lock(&self.shared).metrics.clone()
     }
 
     /// Queue-latency samples recorded after the caller's last
@@ -297,11 +461,22 @@ impl ServeRuntime {
     /// the new samples still retained in the window (oldest first) and
     /// the new checkpoint.
     pub fn queue_samples_since(&self, seen: u64) -> (Vec<u64>, u64) {
-        let st = self.shared.state.lock().unwrap();
+        let st = shared_lock(&self.shared);
         let q = &st.metrics.queue;
         let total = q.recorded();
         let missed = total.saturating_sub(seen) as usize;
         (q.tail(missed), total)
+    }
+
+    /// Simulated service-cycle samples recorded after the caller's last
+    /// checkpoint — the [`super::CycleAutoscaler`]'s incremental feed
+    /// (mirror of [`ServeRuntime::queue_samples_since`]).
+    pub fn service_cycle_samples_since(&self, seen: u64) -> (Vec<u64>, u64) {
+        let st = shared_lock(&self.shared);
+        let s = &st.metrics.service_cycles;
+        let total = s.recorded();
+        let missed = total.saturating_sub(seen) as usize;
+        (s.tail(missed), total)
     }
 }
 
@@ -339,12 +514,14 @@ mod tests {
         let (tx, rx) = completion();
         (
             Job {
-                kind: WorkloadKind::Gaze,
-                inst: Arc::clone(inst),
-                input,
-                aux: vec![],
                 enqueued: Instant::now(),
-                done: tx,
+                payload: JobPayload::Infer {
+                    kind: WorkloadKind::Gaze,
+                    inst: Arc::clone(inst),
+                    input,
+                    aux: vec![],
+                    done: tx,
+                },
             },
             rx,
         )
@@ -405,12 +582,14 @@ mod tests {
             rt.dispatch(
                 0,
                 Job {
-                    kind: WorkloadKind::Classify,
-                    inst: Arc::clone(&ei),
-                    input: vec![0.1; 256],
-                    aux: vec![],
                     enqueued: Instant::now(),
-                    done: tx,
+                    payload: JobPayload::Infer {
+                        kind: WorkloadKind::Classify,
+                        inst: Arc::clone(&ei),
+                        input: vec![0.1; 256],
+                        aux: vec![],
+                        done: tx,
+                    },
                 },
             )
             .unwrap();
@@ -443,6 +622,85 @@ mod tests {
             WindowedStats::DEFAULT_WINDOW as u64 + 99,
         ]);
         assert_eq!(s.tail(usize::MAX).len(), WindowedStats::DEFAULT_WINDOW, "tail clamps to the window");
+    }
+
+    fn probe_job(
+        f: impl FnOnce(&mut crate::soc::Soc) -> Result<Vec<f32>> + Send + 'static,
+    ) -> (Job, crate::serve::handle::Completion<Result<Vec<f32>>>) {
+        let (tx, rx) = completion();
+        (
+            Job {
+                enqueued: Instant::now(),
+                payload: JobPayload::Probe { run: Box::new(f), done: tx },
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn panicking_job_fails_typed_and_queue_keeps_draining() {
+        // the panic-containment regression: a deliberately panicking
+        // job must fail its own completion with a typed WorkerPanic —
+        // and the jobs queued behind it must still serve
+        let rt = ServeRuntime::new(1, SocConfig::default(), 8);
+        let inst = gaze_inst(7);
+        let (bomb, bomb_rx) = probe_job(|_| panic!("injected test panic"));
+        let (after, after_rx) = job(&inst, vec![0.1; 16]);
+        rt.dispatch(0, bomb).unwrap();
+        rt.dispatch(0, after).unwrap();
+        let err = bomb_rx.wait().unwrap().unwrap_err();
+        let wp = err.downcast_ref::<WorkerPanic>().expect("typed WorkerPanic");
+        assert_eq!(wp.replica, 0);
+        assert!(wp.message.contains("injected test panic"), "{}", wp.message);
+        // the queue behind the panicking job is NOT stranded
+        assert_eq!(after_rx.wait().unwrap().unwrap().output.len(), 2);
+        rt.quiesce();
+        let m = rt.metrics();
+        assert_eq!(m.completed, 2, "panicked jobs still complete and count");
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(rt.in_flight(), 0, "a panic must not strand busy accounting");
+    }
+
+    #[test]
+    fn replica_survives_repeated_panics_between_real_work() {
+        let rt = ServeRuntime::new(1, SocConfig::default(), 8);
+        let inst = gaze_inst(8);
+        let (j0, rx0) = job(&inst, vec![0.2; 16]);
+        rt.dispatch(0, j0).unwrap();
+        let first = rx0.wait().unwrap().unwrap().output;
+        for round in 0..3 {
+            let (bomb, bomb_rx) = probe_job(move |_| panic!("boom {round}"));
+            rt.dispatch(0, bomb).unwrap();
+            assert!(bomb_rx.wait().unwrap().is_err());
+            // identical input after each panic: identical output — the
+            // device lock recovered and warm state still serves
+            let (j, rx) = job(&inst, vec![0.2; 16]);
+            rt.dispatch(0, j).unwrap();
+            assert_eq!(rx.wait().unwrap().unwrap().output, first, "round {round}");
+        }
+        rt.quiesce();
+        assert_eq!(rt.metrics().worker_panics, 3);
+    }
+
+    #[test]
+    fn service_cycles_metric_records_simulated_cost() {
+        let rt = ServeRuntime::new(1, SocConfig::default(), 8);
+        let inst = gaze_inst(9);
+        let mut want = Vec::new();
+        for i in 0..4 {
+            let (j, rx) = job(&inst, vec![0.01 * i as f32; 16]);
+            rt.dispatch(0, j).unwrap();
+            want.push(rx.wait().unwrap().unwrap().report.total_cycles());
+        }
+        rt.quiesce();
+        let m = rt.metrics();
+        assert_eq!(m.service_cycles.count(), 4);
+        // incremental feed returns exactly the recorded sim-cycle totals
+        let (samples, total) = rt.service_cycle_samples_since(0);
+        assert_eq!(total, 4);
+        assert_eq!(samples, want, "sim-cycle samples must match the job reports exactly");
+        let (fresh, _) = rt.service_cycle_samples_since(total);
+        assert!(fresh.is_empty());
     }
 
     #[test]

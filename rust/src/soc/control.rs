@@ -30,7 +30,7 @@ use super::csr::{self, CsrFile};
 use super::dma::{Descriptor, Dir, DmaEngine};
 use super::error::SocError;
 use super::memory::Scratchpad;
-use crate::arith::Precision;
+use crate::arith::{Precision, QUIRE_SPILL_BYTES};
 use crate::array::{ArrayReport, EncodedOperand, MatrixArray, OperandCache, TilePlan};
 use crate::npe::PrecSel;
 use crate::util::Matrix;
@@ -100,6 +100,17 @@ pub fn packed_bytes(m: usize, k: usize, sel: PrecSel) -> usize {
     m * k.div_ceil(sel.lanes()) * 2
 }
 
+/// What the writeback stage emits for one GEMM job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum GemmOutput {
+    /// Round every output once through the output-processing stage and
+    /// write the f32 carrier (the whole-model path).
+    Rounded,
+    /// Skip output processing: spill every output's raw quire to DRAM
+    /// for a cross-shard reduction (the sharded partial-GEMM path).
+    PartialQuires,
+}
+
 /// The control engine.
 pub struct ControlFsm {
     pub state: FsmState,
@@ -154,6 +165,62 @@ impl ControlFsm {
         &mut self,
         job: GemmJob,
         pinned_b: Option<&Arc<EncodedOperand>>,
+        array: &mut MatrixArray,
+        dma: &mut DmaEngine,
+        bus: &mut AxiBus,
+        spm: &mut Scratchpad,
+        ext: &mut ExternalMem,
+        csrs: &mut CsrFile,
+        cache: &mut OperandCache,
+    ) -> Result<JobReport, SocError> {
+        self.run_job(job, pinned_b, GemmOutput::Rounded, array, dma, bus, spm, ext, csrs, cache)
+    }
+
+    /// **Partial-GEMM command**: like [`ControlFsm::run_pinned`], but the
+    /// writeback spills every output's **raw quire**
+    /// ([`QUIRE_SPILL_BYTES`] bytes each, little-endian accumulator +
+    /// sticky flags) to `job.c_addr` instead of rounding — the shard-side
+    /// half of a cross-replica reduction. The fetch/compute flow, tile
+    /// schedule and MAC stream are identical to the rounded path; only
+    /// the output-processing stage is skipped (no `rounds` in the stats)
+    /// and `bytes_out` accounts the wider quire image. `job.out_prec` is
+    /// ignored — rounding belongs to the reducer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_partial(
+        &mut self,
+        job: GemmJob,
+        pinned_b: Option<&Arc<EncodedOperand>>,
+        array: &mut MatrixArray,
+        dma: &mut DmaEngine,
+        bus: &mut AxiBus,
+        spm: &mut Scratchpad,
+        ext: &mut ExternalMem,
+        csrs: &mut CsrFile,
+        cache: &mut OperandCache,
+    ) -> Result<JobReport, SocError> {
+        self.run_job(
+            job,
+            pinned_b,
+            GemmOutput::PartialQuires,
+            array,
+            dma,
+            bus,
+            spm,
+            ext,
+            csrs,
+            cache,
+        )
+    }
+
+    /// Shared body of the rounded and partial-quire GEMM commands — one
+    /// place for the fetch/compute/writeback sequencing and the overlap
+    /// timing model, so the two output modes can never drift.
+    #[allow(clippy::too_many_arguments)]
+    fn run_job(
+        &mut self,
+        job: GemmJob,
+        pinned_b: Option<&Arc<EncodedOperand>>,
+        output: GemmOutput,
         array: &mut MatrixArray,
         dma: &mut DmaEngine,
         bus: &mut AxiBus,
@@ -240,18 +307,36 @@ impl ControlFsm {
             }
         }
 
-        // ---- Compute phase (bit-accurate, parallel tile executor). ----
+        // ---- Compute phase (bit-accurate, parallel tile executor),
+        // then writeback: rounded f32 carrier + packed bytes for the
+        // whole-model path, or the raw quire spill for a shard's
+        // partial GEMM. ----
         self.goto(FsmState::Compute);
-        let (out, areport) = array.gemm_packed(&a_enc, &b_enc, job.out_prec);
-
-        // ---- Writeback phase: result f32 for chaining + packed bytes
-        // for bandwidth accounting. ----
-        self.goto(FsmState::Writeback);
-        ext.write_f32(job.c_addr, &out.data)?;
         let out_sel = PrecSel::for_precision(job.out_prec).unwrap_or(job.sel);
-        let c_packed_len = packed_bytes(job.m, job.n, out_sel);
-        // model the packed writeback through the DMA (content: packed C)
-        let c_packed = pack_matrix(&out, out_sel);
+        // bytes one output slot contributes to the writeback stream
+        let wb_slot_bytes = match output {
+            GemmOutput::Rounded => out_sel.lane_bits() as usize / 8,
+            GemmOutput::PartialQuires => QUIRE_SPILL_BYTES,
+        };
+        let (c_packed, c_packed_len, areport) = match output {
+            GemmOutput::Rounded => {
+                let (out, areport) = array.gemm_packed(&a_enc, &b_enc, job.out_prec);
+                self.goto(FsmState::Writeback);
+                ext.write_f32(job.c_addr, &out.data)?;
+                let len = packed_bytes(job.m, job.n, out_sel);
+                (pack_matrix(&out, out_sel), len, areport)
+            }
+            GemmOutput::PartialQuires => {
+                let (quires, areport) = array.gemm_packed_quires(&a_enc, &b_enc);
+                self.goto(FsmState::Writeback);
+                let spill = quires.to_spill_bytes();
+                ext.write(job.c_addr, &spill)?;
+                let len = spill.len();
+                (spill, len, areport)
+            }
+        };
+        // model the writeback through the DMA (content: packed C /
+        // quire spill)
         spm.write(0, &c_packed[..c_packed.len().min(half)])?;
         let wb_chunk = c_packed_len.min(half.max(1));
         let mut dma_out_cycles = 0u64;
@@ -289,7 +374,7 @@ impl ControlFsm {
             }
             fetch += dma.setup_cycles
                 + cost_bus.read_cost(t.nt * bpe_words(job.k)).max(spm.burst_cost(t.nt * bpe_words(job.k)));
-            let wb_bytes = t.mt * t.nt * out_sel.lane_bits() as usize / 8;
+            let wb_bytes = t.mt * t.nt * wb_slot_bytes;
             let wb = dma.setup_cycles + cost_bus.write_cost(wb_bytes.max(1));
             sum_dma += fetch + wb;
             if i == 0 {
@@ -327,7 +412,7 @@ impl ControlFsm {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arith::tables;
+    use crate::arith::{tables, QuireMatrix};
     use crate::array::ArrayMorph;
     use crate::util::Rng;
 
@@ -533,6 +618,68 @@ mod tests {
             assert_eq!(rep_u, rep_p, "{sel:?}: cycle/byte accounting must be unchanged");
             assert_eq!((miss_u, trust_u), (2, 0), "{sel:?}: untrusted encodes A and B");
             assert_eq!((miss_p, trust_p), (1, 1), "{sel:?}: pinned encodes only A");
+        }
+    }
+
+    #[test]
+    fn partial_quire_spill_rounds_to_the_rounded_path() {
+        // the shard-side half of the reduction: run_partial's DRAM spill,
+        // parsed and rounded once, must reproduce run_pinned's outputs
+        // bit for bit in every mode; fetch-side byte accounting is
+        // unchanged, the writeback carries the wider quire image
+        let mut rng = Rng::new(31);
+        for sel in PrecSel::ALL {
+            let a = Matrix::random(6, 20, 1.0, &mut rng);
+            let b = Matrix::random(20, 9, 1.0, &mut rng);
+            let job = GemmJob {
+                m: 6,
+                k: 20,
+                n: 9,
+                sel,
+                out_prec: Precision::Fp32,
+                a_addr: 0,
+                b_addr: 4096,
+                c_addr: 8192,
+            };
+            let enc = Arc::new(EncodedOperand::cols(&b, sel));
+            let run = |partial: bool| {
+                let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) =
+                    rig();
+                ext.write_f32(0, &a.data).unwrap();
+                ext.write_f32(4096, &b.data).unwrap();
+                let rep = if partial {
+                    fsm.run_partial(
+                        job, Some(&enc), &mut array, &mut dma, &mut bus, &mut spm, &mut ext,
+                        &mut csrs, &mut cache,
+                    )
+                    .unwrap()
+                } else {
+                    fsm.run_pinned(
+                        job, Some(&enc), &mut array, &mut dma, &mut bus, &mut spm, &mut ext,
+                        &mut csrs, &mut cache,
+                    )
+                    .unwrap()
+                };
+                let c = if partial {
+                    let spill = ext.read(8192, 6 * 9 * QUIRE_SPILL_BYTES).unwrap();
+                    QuireMatrix::from_spill_bytes(6, 9, spill).round_to(Precision::Fp32)
+                } else {
+                    ext.read_f32(8192, 6 * 9).unwrap()
+                };
+                (rep, c)
+            };
+            let (rep_r, c_r) = run(false);
+            let (rep_p, c_p) = run(true);
+            assert_eq!(c_r, c_p, "{sel:?}: rounded partial quires diverged");
+            assert_eq!(rep_r.array.macs, rep_p.array.macs, "{sel:?}");
+            assert_eq!(rep_r.compute_cycles, rep_p.compute_cycles, "{sel:?}");
+            assert_eq!(rep_r.bytes_in, rep_p.bytes_in, "{sel:?}: fetch traffic must match");
+            assert_eq!(
+                rep_p.bytes_out,
+                (6 * 9 * QUIRE_SPILL_BYTES) as u64,
+                "{sel:?}: partial writeback carries the quire image"
+            );
+            assert_eq!(rep_p.array.stats.rounds, 0, "{sel:?}: shard side must not round");
         }
     }
 

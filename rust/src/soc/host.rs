@@ -15,6 +15,7 @@ use super::csr::CsrFile;
 use super::dma::DmaEngine;
 use super::error::SocError;
 use super::memory::Scratchpad;
+use crate::arith::{QuireMatrix, QUIRE_SPILL_BYTES};
 use crate::array::{ArrayMorph, EncodedOperand, MatrixArray, OperandCache};
 use crate::npe::PrecSel;
 use crate::util::Matrix;
@@ -32,6 +33,13 @@ pub enum Command {
     /// compile time. The FSM skips the per-job resident readback +
     /// hash-verify; cycle/byte accounting is unchanged.
     GemmPinned(GemmJob, Arc<EncodedOperand>),
+    /// A **partial GEMM** over a trusted-pinned weight shard: the FSM
+    /// spills every output's raw quire to `c_addr`
+    /// ([`crate::arith::QUIRE_SPILL_BYTES`] each) instead of rounding,
+    /// so the coordinator can merge shard partials exactly and round
+    /// once ([`crate::arith::Quire::merge`]). `out_prec` is ignored —
+    /// rounding belongs to the reducer.
+    GemmPartial(GemmJob, Arc<EncodedOperand>),
     /// Reconfigure array geometry (drains quires).
     Morph(ArrayMorph),
     /// Barrier: all prior commands must complete (models the host
@@ -155,7 +163,7 @@ impl Soc {
         }
         let addr = self.resident_top.next_multiple_of(64);
         let end = addr + bytes as u64;
-        let limit = (self.ext.capacity() - self.ext.capacity() / 4) as u64;
+        let limit = self.resident_limit();
         if end > limit {
             return Err(SocError::OperandsExceedDram {
                 required: end as usize,
@@ -200,6 +208,15 @@ impl Soc {
     /// buried under live allocations).
     pub fn resident_free_bytes(&self) -> u64 {
         self.resident_free.iter().map(|(s, e)| e - s).sum()
+    }
+
+    /// Ceiling of the resident-image region: the top quarter of DRAM is
+    /// reserved for the control FSM's packed-operand staging.
+    /// [`Soc::alloc_resident`] enforces this limit; the router's
+    /// DRAM-budget placement reads the same number here so the two can
+    /// never drift.
+    pub fn resident_limit(&self) -> u64 {
+        (self.ext.capacity() - self.ext.capacity() / 4) as u64
     }
 
     /// Current resident-region watermark. Take a mark before a
@@ -283,6 +300,21 @@ impl Soc {
                 }
                 Command::GemmPinned(job, w_enc) => {
                     let rep = self.fsm.run_pinned(
+                        job,
+                        Some(&w_enc),
+                        &mut self.array,
+                        &mut self.dma,
+                        &mut self.bus,
+                        &mut self.spm,
+                        &mut self.ext,
+                        &mut self.csrs,
+                        &mut self.enc_cache,
+                    )?;
+                    self.lifetime.merge(&rep);
+                    Some(rep)
+                }
+                Command::GemmPartial(job, w_enc) => {
+                    let rep = self.fsm.run_partial(
                         job,
                         Some(&w_enc),
                         &mut self.array,
@@ -386,6 +418,58 @@ impl Soc {
         out_prec: crate::arith::Precision,
     ) -> Result<(Matrix, JobReport), SocError> {
         self.gemm_warm(a, k, n, b_addr, Some(w_enc), a_addr, c_addr, sel, out_prec)
+    }
+
+    /// Run one **partial GEMM** against a resident, trusted-pinned
+    /// weight shard: the raw per-output [`crate::arith::Quire`]
+    /// accumulators come back
+    /// (spilled through DRAM at `q_addr`, [`QUIRE_SPILL_BYTES`] each)
+    /// instead of rounded values, so the coordinator can merge partials
+    /// from every shard exactly and round once — bit-identical to the
+    /// single-quire accumulation of the unsharded GEMM. The fetch flow
+    /// and staging-headroom guard mirror [`Soc::gemm_trusted`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_partial(
+        &mut self,
+        a: &Matrix,
+        k: usize,
+        n: usize,
+        b_addr: u64,
+        w_enc: &Arc<EncodedOperand>,
+        a_addr: u64,
+        q_addr: u64,
+        sel: PrecSel,
+    ) -> Result<(QuireMatrix, JobReport), SocError> {
+        if a.cols != k {
+            return Err(SocError::ShapeMismatch { a_cols: a.cols, b_rows: k });
+        }
+        let staging = super::control::packed_bytes(a.rows, k, sel)
+            + super::control::packed_bytes(n, k, sel)
+            + a.rows * n * QUIRE_SPILL_BYTES;
+        let required = self.resident_top as usize + staging;
+        if required >= self.ext.capacity() {
+            return Err(SocError::OperandsExceedDram {
+                required,
+                capacity: self.ext.capacity(),
+            });
+        }
+        self.ext.write_f32(a_addr, &a.data)?;
+        let job = GemmJob {
+            m: a.rows,
+            k,
+            n,
+            sel,
+            out_prec: sel.precision(),
+            a_addr,
+            b_addr,
+            c_addr: q_addr,
+        };
+        self.submit(Command::GemmPartial(job, Arc::clone(w_enc)));
+        let mut comps = self.process_all()?;
+        let rep = comps.pop().unwrap().report.unwrap();
+        let spill = self.ext.read(q_addr, a.rows * n * QUIRE_SPILL_BYTES)?;
+        let quires = QuireMatrix::from_spill_bytes(a.rows, n, spill);
+        Ok((quires, rep))
     }
 
     /// Shared body of [`Soc::gemm_resident`] / [`Soc::gemm_trusted`] —
@@ -557,6 +641,54 @@ mod tests {
             assert_eq!(tru.enc_cache.trusted, 1, "{sel:?}");
             assert_eq!(res.enc_cache.trusted, 0, "{sel:?}");
             assert_eq!(tru.enc_cache.misses + 1, res.enc_cache.misses, "{sel:?}");
+        }
+    }
+
+    #[test]
+    fn ksplit_partial_gemms_merge_to_the_whole_gemm_exactly() {
+        // two replicas each hold half the K dimension; merging their
+        // partial quires and rounding once must equal the single-device
+        // trusted GEMM bit for bit, in every mode
+        let mut rng = Rng::new(29);
+        for sel in PrecSel::ALL {
+            let (m, k, n) = (5, 24, 7);
+            let a = Matrix::random(m, k, 1.0, &mut rng);
+            let b = Matrix::random(k, n, 1.0, &mut rng);
+            // whole reference
+            let mut whole = Soc::new(SocConfig::default());
+            let b_addr = whole.alloc_resident(b.data.len() * 4).unwrap();
+            whole.ext.write_f32(b_addr, &b.data).unwrap();
+            let a_addr = whole.alloc_resident(m * k * 4).unwrap();
+            let c_addr = whole.alloc_resident(m * n * 4).unwrap();
+            let w_enc = Arc::new(EncodedOperand::cols(&b, sel));
+            let (want, _) = whole
+                .gemm_trusted(&a, k, n, b_addr, &w_enc, a_addr, c_addr, sel, Precision::Fp32)
+                .unwrap();
+            // sharded: K split at 12 across two SoCs
+            let mut merged = crate::arith::QuireMatrix::zeros(m, n);
+            for (k0, k1) in [(0usize, 12usize), (12, 24)] {
+                let ks = k1 - k0;
+                let a_sl = Matrix::from_vec(
+                    m,
+                    ks,
+                    (0..m).flat_map(|r| a.row(r)[k0..k1].to_vec()).collect(),
+                );
+                let b_sl =
+                    Matrix::from_vec(ks, n, b.data[k0 * n..k1 * n].to_vec());
+                let mut soc = Soc::new(SocConfig::default());
+                let b_addr = soc.alloc_resident(b_sl.data.len() * 4).unwrap();
+                soc.ext.write_f32(b_addr, &b_sl.data).unwrap();
+                let a_addr = soc.alloc_resident(m * ks * 4).unwrap();
+                let q_addr = soc.alloc_resident(m * n * QUIRE_SPILL_BYTES).unwrap();
+                let enc = Arc::new(EncodedOperand::cols(&b_sl, sel));
+                let (part, rep) = soc
+                    .gemm_partial(&a_sl, ks, n, b_addr, &enc, a_addr, q_addr, sel)
+                    .unwrap();
+                assert_eq!(rep.array.macs, (m * ks * n) as u64);
+                merged.merge_block(0, &part);
+            }
+            let got = merged.round_to(Precision::Fp32);
+            assert_eq!(got, want.data, "{sel:?}: sharded reduction diverged");
         }
     }
 

@@ -158,6 +158,75 @@ fn async_runtime_serves_mixed_workloads_bit_identically() {
 }
 
 #[test]
+fn sharded_and_whole_models_share_a_fleet_bit_identically() {
+    // a sharded model (scatter → partial quires → exact reduce) and a
+    // whole-resident model serve interleaved traffic from the same
+    // 2-replica fleet; every result matches a whole-model reference
+    // router bit for bit, and the runtime accounts all the work
+    use xr_npe::coordinator::{ModelInstance, Router, WorkloadKind};
+    use xr_npe::models::{gaze, mlp, random_weights};
+
+    let gg = gaze::build();
+    let wg = random_weights(&gg, 80);
+    let gm = mlp::build();
+    let wm = random_weights(&gm, 81);
+    let mut fleet = Router::new(2, SocConfig::default());
+    fleet
+        .register(
+            WorkloadKind::Gaze,
+            ModelInstance::uniform(gg.clone(), wg.clone(), PrecSel::Fp4x4).unwrap(),
+        )
+        .unwrap();
+    fleet
+        .register_sharded(
+            WorkloadKind::Classify,
+            ModelInstance::uniform(gm.clone(), wm.clone(), PrecSel::Posit8x2).unwrap(),
+            2,
+        )
+        .unwrap();
+    let mut reference = Router::new(1, SocConfig::default());
+    reference
+        .register(WorkloadKind::Gaze, ModelInstance::uniform(gg, wg, PrecSel::Fp4x4).unwrap())
+        .unwrap();
+    reference
+        .register(WorkloadKind::Classify, ModelInstance::uniform(gm, wm, PrecSel::Posit8x2).unwrap())
+        .unwrap();
+    let input_of = |kind: WorkloadKind, i: usize| -> Vec<f32> {
+        let len = if kind == WorkloadKind::Gaze { 16 } else { 256 };
+        (0..len).map(|j| ((i * 31 + j) as f32 * 0.017).sin() * 0.4).collect()
+    };
+    // interleave, submitting everything before redeeming anything —
+    // sharded coordinators and whole-model jobs pipeline together
+    let reqs: Vec<(WorkloadKind, Vec<f32>)> = (0..8)
+        .map(|i| {
+            let kind = if i % 2 == 0 { WorkloadKind::Gaze } else { WorkloadKind::Classify };
+            (kind, input_of(kind, i))
+        })
+        .collect();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|(kind, input)| fleet.submit(*kind, input.clone(), vec![]).unwrap())
+        .collect();
+    for ((kind, input), h) in reqs.iter().zip(handles) {
+        let got = Router::resolve(h).unwrap();
+        let want = reference.route(*kind, input, &[]).unwrap();
+        assert_eq!(got.output, want.output, "{kind:?}: sharded fleet diverged");
+        if *kind == WorkloadKind::Classify {
+            assert!(got.report.reduce_cycles > 0, "sharded report must carry the reduction term");
+            assert_eq!(
+                got.report.jobs.array.macs, want.report.jobs.array.macs,
+                "sharded MAC work must be conserved"
+            );
+        }
+    }
+    fleet.quiesce();
+    assert_eq!(fleet.total_served(), 8);
+    // every partial GEMM ran through the runtime workers: 3 layers x 4
+    // classify requests x 2 shards = 24 partial jobs + 4 gaze infers
+    assert_eq!(fleet.runtime_metrics().completed as usize, 24 + 4);
+}
+
+#[test]
 fn nan_inputs_flag_nar_posit() {
     use xr_npe::soc::csr;
     let mut soc = Soc::new(SocConfig::default());
