@@ -210,5 +210,45 @@ fn main() -> Result<()> {
     println!("  8 requests served from shards: bit-identical to whole-model = {identical}");
     println!("  per-request reduction term: {reduce_cycles} cycles (exact quire merge)");
     println!("(the fleet serves a model none of its replicas could host alone.)");
+
+    // ---- model catalog under a DRAM budget: three workloads whose
+    // combined warm footprint exceeds the replica's resident budget
+    // rotate through it — dispatch to a cold model LRU-evicts and
+    // re-warms, with live compaction when the free list fragments ----
+    println!("\n== model catalog & residency budget (3 models, 96 KiB budget, 1 replica) ==\n");
+    use xr_npe::coordinator::RuntimeConfig;
+    let rt = RuntimeConfig { resident_budget: Some(96 * 1024), ..Default::default() };
+    let mut catalog = Router::with_runtime(1, SocConfig::default(), rt);
+    let kinds = [WorkloadKind::Classify, WorkloadKind::Vio, WorkloadKind::Gaze];
+    let graphs = [
+        xr_npe::models::effnet::build(),
+        xr_npe::models::ulvio::build(),
+        xr_npe::models::gaze::build(),
+    ];
+    for (kind, g) in kinds.iter().zip(&graphs) {
+        let w = xr_npe::models::random_weights(g, 11);
+        catalog.register(*kind, ModelInstance::uniform(g.clone(), w, PrecSel::Posit8x2)?)?;
+    }
+    for round in 0..4 {
+        for (kind, g) in kinds.iter().zip(&graphs) {
+            let input: Vec<f32> = (0..g.input.numel())
+                .map(|j| ((round * 61 + j) as f32 * 0.017).sin() * 0.4)
+                .collect();
+            let aux: Vec<f32> = if *kind == WorkloadKind::Vio { vec![0.05; 6] } else { vec![] };
+            catalog.route(*kind, &input, &aux)?;
+        }
+    }
+    let m = catalog.runtime_metrics();
+    println!("  served {} rotating requests from one replica", catalog.total_served());
+    println!(
+        "  evictions {} | cold warms {} | compactions {} | resident high water {} B (budget {} B)",
+        m.evictions,
+        m.cold_warms,
+        m.compactions,
+        m.resident_high_water,
+        96 * 1024
+    );
+    println!("(the catalog exceeds the replica's DRAM budget; the LRU policy rotates");
+    println!(" models through it and in-flight/sharded models are never evicted.)");
     Ok(())
 }

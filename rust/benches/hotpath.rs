@@ -392,6 +392,88 @@ fn main() {
         ));
     }
 
+    // 4f. multi-model residency: a 3-model catalog (~187 KiB combined
+    // warm footprint) rotating through one replica under a 96 KiB
+    // resident-DRAM budget — every dispatch to a cold model LRU-evicts
+    // and re-warms. The assert is bit-identity vs fresh single-model
+    // routers; the JSONL records the simulated rotation counters and
+    // cycle cost (host-independent, gated by tools/bench_gate.rs) plus
+    // informational wall-clock throughput. The gated fields are
+    // per-round, so quick and full runs agree.
+    println!("\n-- serving: DRAM-budgeted catalog rotation (3 models, 1 replica, 96 KiB) --");
+    {
+        use xr_npe::coordinator::{ModelInstance, Router, RuntimeConfig, WorkloadKind};
+        use xr_npe::soc::SocConfig;
+
+        const BUDGET: usize = 96 * 1024;
+        let kinds = [WorkloadKind::Classify, WorkloadKind::Vio, WorkloadKind::Gaze];
+        let graphs = [
+            xr_npe::models::effnet::build(),
+            xr_npe::models::ulvio::build(),
+            xr_npe::models::gaze::build(),
+        ];
+        let weights: Vec<_> =
+            graphs.iter().enumerate().map(|(i, g)| common::random_weights(g, 23 + i as u64)).collect();
+        let rt = RuntimeConfig { resident_budget: Some(BUDGET), ..Default::default() };
+        let mut catalog = Router::with_runtime(1, SocConfig::default(), rt);
+        let mut refs: Vec<Router> = Vec::new();
+        for ((kind, g), w) in kinds.iter().zip(&graphs).zip(&weights) {
+            catalog
+                .register(*kind, ModelInstance::uniform(g.clone(), w.clone(), PrecSel::Posit8x2).unwrap())
+                .unwrap();
+            let mut r = Router::new(1, SocConfig::default());
+            r.register(*kind, ModelInstance::uniform(g.clone(), w.clone(), PrecSel::Posit8x2).unwrap())
+                .unwrap();
+            refs.push(r);
+        }
+        let m0 = catalog.runtime_metrics();
+        let rounds: usize = if quick { 2 } else { 6 };
+        let mut sim_cycles_total = 0u64;
+        let t0 = std::time::Instant::now();
+        for round in 0..rounds {
+            for (ki, kind) in kinds.iter().enumerate() {
+                let g = &graphs[ki];
+                let input: Vec<f32> = (0..g.input.numel())
+                    .map(|j| ((round * 131 + j) as f32 * 0.017).sin() * 0.4)
+                    .collect();
+                let aux: Vec<f32> = if *kind == WorkloadKind::Vio { vec![0.05; 6] } else { vec![] };
+                let got = catalog.route(*kind, &input, &aux).unwrap();
+                let want = refs[ki].route(*kind, &input, &aux).unwrap();
+                assert_eq!(
+                    got.output, want.output,
+                    "catalog rotation diverged from a fresh single-model fleet ({kind:?})"
+                );
+                sim_cycles_total += got.report.total_cycles();
+            }
+        }
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        let m = catalog.runtime_metrics();
+        let evictions = m.evictions - m0.evictions;
+        let cold_warms = m.cold_warms - m0.cold_warms;
+        assert!(evictions > 0, "a catalog over budget must rotate");
+        assert!(m.resident_high_water <= BUDGET as u64, "budget must hold");
+        let reqs = (rounds * kinds.len()) as f64;
+        println!(
+            "  {} rounds x 3 kinds: {:>7.0} req/s host   {} evictions, {} cold warms, high water {} B (budget {} B, bit-identical)",
+            rounds,
+            reqs / (wall_ns / 1e9),
+            evictions,
+            cold_warms,
+            m.resident_high_water,
+            BUDGET
+        );
+        bench_json.push(format!(
+            "{{\"bench\":\"hotpath\",\"section\":\"catalog_rotation\",\"models\":3,\
+             \"replicas\":1,\"resident_budget\":{BUDGET},\"rounds\":{rounds},\
+             \"sim_cycles_per_round\":{},\"sim_evictions_per_round\":{},\
+             \"sim_resident_high_water\":{},\"req_per_s\":{:.1}}}",
+            sim_cycles_total / rounds as u64,
+            evictions / rounds as u64,
+            m.resident_high_water,
+            reqs / (wall_ns / 1e9)
+        ));
+    }
+
     // trajectory artifacts: one JSON object per line (JSONL)
     let json = bench_json.join("\n") + "\n";
     if let Err(e) = std::fs::write("BENCH_hotpath.json", &json) {

@@ -21,15 +21,17 @@
 
 use super::batcher::Batch;
 use super::scheduler::ModelInstance;
+use crate::models::residency::{residency_lock, ResidencyManager, ResidencyStats, ResidentImage};
 use crate::models::{shard, ExecReport, ShardedModel};
 use crate::serve::{
     device_lock, AutoscaleConfig, Autoscaler, Completion, CycleAutoscaler, Job, JobPayload,
-    RuntimeMetrics, ServeRuntime,
+    RuntimeMetrics, ServeRuntime, WorkQueue,
 };
 use crate::soc::{JobReport, SocConfig};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Perception workload kinds (paper Fig. 1).
@@ -77,6 +79,13 @@ pub struct RuntimeConfig {
     pub warm_floor: usize,
     /// Autoscaling policy ([`Router::autoscale_tick`] applies it).
     pub autoscale: AutoscaleConfig,
+    /// Per-replica resident-DRAM budget in bytes for the model catalog
+    /// (`None` = the replica's full [`crate::soc::Soc::resident_limit`];
+    /// always clamped to it). A catalog whose combined footprint
+    /// exceeds the budget rotates: dispatch to a cold model evicts the
+    /// least recently dispatched unpinned model(s) and re-warms, with
+    /// live compaction when the free list fragments.
+    pub resident_budget: Option<usize>,
 }
 
 impl Default for RuntimeConfig {
@@ -85,6 +94,7 @@ impl Default for RuntimeConfig {
             queue_capacity: 64,
             warm_floor: 1,
             autoscale: AutoscaleConfig::default(),
+            resident_budget: None,
         }
     }
 }
@@ -147,11 +157,65 @@ impl ShardedEntry {
     }
 }
 
+/// A small reusable thread pool for the per-request sharded
+/// coordinators (the ROADMAP "coordinator thread pool" follow-up):
+/// [`Router::submit`] used to spawn a throwaway thread per sharded
+/// request; now a fixed set of long-lived threads drains a bounded task
+/// queue — a full queue back-pressures submission exactly like the
+/// replica work queues. [`Router::route`] doesn't need the pool at all:
+/// it runs the coordinator loop inline on the submitting thread.
+struct CoordinatorPool {
+    queue: Arc<WorkQueue<Box<dyn FnOnce() + Send>>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl CoordinatorPool {
+    fn new(workers: usize, capacity: usize) -> CoordinatorPool {
+        let queue: Arc<WorkQueue<Box<dyn FnOnce() + Send>>> =
+            Arc::new(WorkQueue::bounded(capacity.max(workers)));
+        let threads = (0..workers)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("xr-npe-coord-{i}"))
+                    .spawn(move || {
+                        // tasks are panic-fenced by the submitter (the
+                        // same catch_unwind fence the spawned path had)
+                        while let Some(task) = q.pop() {
+                            task();
+                        }
+                    })
+                    .expect("spawn coordinator pool thread")
+            })
+            .collect();
+        CoordinatorPool { queue, threads }
+    }
+}
+
+impl Drop for CoordinatorPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
 /// The router.
 pub struct Router {
     models: HashMap<WorkloadKind, ModelEntry>,
+    /// Reused coordinator threads for sharded `submit`s (lazily created
+    /// at the first sharded submission). Declared before `runtime` so
+    /// its drop joins the coordinators while the fleet is still up.
+    coordinator_pool: Option<CoordinatorPool>,
     /// Shared with per-request sharded coordinator threads.
     runtime: Arc<ServeRuntime>,
+    /// Per-replica DRAM-budget catalogs: every resident allocation on a
+    /// replica goes through its manager (dispatch admits, registration
+    /// floor-warms, replacement removes). Lock order: device lock
+    /// first, then the manager — never the reverse.
+    residency: Vec<Arc<Mutex<ResidencyManager>>>,
+    queue_capacity: usize,
     autoscaler: Autoscaler,
     /// Replicas currently receiving dispatch (`1..=n_replicas`).
     active: usize,
@@ -185,9 +249,20 @@ impl Router {
     /// `n_replicas` co-processors with explicit runtime settings.
     pub fn with_runtime(n_replicas: usize, cfg: SocConfig, rt: RuntimeConfig) -> Router {
         assert!(n_replicas >= 1);
+        let runtime = Arc::new(ServeRuntime::new(n_replicas, cfg, rt.queue_capacity));
+        let residency = (0..n_replicas)
+            .map(|i| {
+                let limit = device_lock(runtime.soc(i)).resident_limit();
+                let budget = rt.resident_budget.map(|b| b as u64).unwrap_or(limit).min(limit);
+                Arc::new(Mutex::new(ResidencyManager::lru(budget)))
+            })
+            .collect();
         Router {
             models: HashMap::new(),
-            runtime: Arc::new(ServeRuntime::new(n_replicas, cfg, rt.queue_capacity)),
+            coordinator_pool: None,
+            runtime,
+            residency,
+            queue_capacity: rt.queue_capacity,
             autoscaler: Autoscaler::new(rt.autoscale),
             active: n_replicas,
             fed_samples: 0,
@@ -201,39 +276,57 @@ impl Router {
     }
 
     /// Register the model for a workload kind with **whole-model
-    /// residency** (the fast path), warming its compiled program
-    /// (resident weights + pinned encodings + run arena) eagerly on the
-    /// first [`RuntimeConfig::warm_floor`] replicas — or on the whole
-    /// **steered active set** when the autoscaler (or
-    /// [`Router::set_active`]) has grown it past the floor, so a
-    /// scaled-up fleet does not pay first-request warming after a model
-    /// refresh. The remaining replicas warm on demand when their worker
-    /// first serves the model.
+    /// residency** (the fast path): the compiled program joins every
+    /// replica's DRAM-budget catalog, and the first
+    /// [`RuntimeConfig::warm_floor`] replicas — or the whole **steered
+    /// active set** when the autoscaler (or [`Router::set_active`]) has
+    /// grown it past the floor — warm it eagerly through their
+    /// [`ResidencyManager`] (which may evict colder models to make
+    /// room). A full replica no longer fails the registration: the
+    /// model simply **queues cold** in the catalog, and its first
+    /// dispatch performs the policy-driven evict → warm.
     ///
-    /// A failed warm evicts the replicas already warmed — an error
-    /// leaves the router exactly as it was (the previous model, if any,
-    /// keeps serving). Replacing a model quiesces the runtime first so
-    /// in-flight requests against the old instance drain, then evicts
-    /// its warm state (resident DRAM returns to the free list) on every
-    /// replica. For a model larger than one replica's resident budget,
-    /// use [`Router::register_auto`] or [`Router::register_sharded`].
+    /// The only registration error left is a model whose footprint
+    /// exceeds the replica budget outright — it could never serve whole
+    /// here; use [`Router::register_auto`] /
+    /// [`Router::register_sharded`] to split it across the fleet.
+    /// Replacing a model quiesces the runtime first so in-flight
+    /// requests against the old instance drain, then drops it from
+    /// every catalog (resident DRAM returns to the allocator).
     pub fn register(&mut self, kind: WorkloadKind, inst: ModelInstance) -> Result<()> {
         self.register_whole(kind, Arc::new(inst))
     }
 
     fn register_whole(&mut self, kind: WorkloadKind, inst: Arc<ModelInstance>) -> Result<()> {
-        let warm_n = self
-            .warm_floor
-            .max(self.steered_active.unwrap_or(0))
-            .min(self.runtime.n_replicas());
+        let image: Arc<dyn ResidentImage> = Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
+        let needed = image.warm_footprint_bytes() as u64;
+        let n_rep = self.runtime.n_replicas();
+        let min_budget = (0..n_rep)
+            .map(|i| residency_lock(&self.residency[i]).budget())
+            .min()
+            .unwrap_or(0);
+        if needed > min_budget {
+            bail!(
+                "model `{}` needs {} resident bytes but the replica budget is {} — \
+                 register_auto/register_sharded can split it across the fleet",
+                inst.compiled.name,
+                needed,
+                min_budget
+            );
+        }
+        // catalog-join every replica; eager warm on the floor/steered
+        // set is best effort — a replica whose budget is hogged by
+        // pinned models leaves the model cold until demand (or a
+        // replacement) frees the space
+        let warm_n = self.warm_floor.max(self.steered_active.unwrap_or(0)).min(n_rep);
+        for i in 0..n_rep {
+            residency_lock(&self.residency[i]).insert(Arc::clone(&image));
+        }
         for i in 0..warm_n {
-            let res = inst.warm(&mut device_lock(self.runtime.soc(i)));
-            if let Err(e) = res {
-                for j in 0..i {
-                    inst.compiled.evict(&mut device_lock(self.runtime.soc(j)));
-                }
-                return Err(e);
-            }
+            let soc = Arc::clone(self.runtime.soc(i));
+            let mut dev = device_lock(&soc);
+            let mut mgr = residency_lock(&self.residency[i]);
+            let _ = mgr.admit(&mut dev, &image);
         }
         self.replace_entry(kind, ModelEntry::Whole(inst));
         Ok(())
@@ -259,13 +352,16 @@ impl Router {
         self.register_shards(kind, Arc::new(inst), n_shards)
     }
 
-    /// Register with **automatic placement**: whole-model residency when
-    /// the compiled footprint fits every replica's free resident-DRAM
-    /// budget, otherwise the smallest shard count whose slices fit —
-    /// the fleet serves models no single replica could host.
+    /// Register with **automatic placement**: whole-model residency
+    /// when the compiled footprint fits every replica's
+    /// **post-eviction** resident budget (what the replica could free
+    /// by evicting every unpinned model — the catalog rotates, so
+    /// currently-resident evictable models don't force sharding),
+    /// otherwise the smallest shard count whose slices fit — the fleet
+    /// serves models no single replica could host.
     pub fn register_auto(&mut self, kind: WorkloadKind, inst: ModelInstance) -> Result<()> {
         let n_rep = self.runtime.n_replicas();
-        let budgets: Vec<u64> = (0..n_rep).map(|i| self.replica_free_budget(i)).collect();
+        let budgets = self.post_eviction_budgets();
         let needed = inst.compiled.warm_footprint_bytes() as u64;
         if budgets.iter().all(|&b| needed <= b) {
             return self.register(kind, inst);
@@ -291,6 +387,19 @@ impl Router {
         }
     }
 
+    /// Per-replica resident budget a new model could claim after
+    /// evicting every unpinned resident model — shard planning and
+    /// placement work against these *post-eviction* numbers, not the
+    /// momentary free bytes.
+    fn post_eviction_budgets(&self) -> Vec<u64> {
+        (0..self.runtime.n_replicas())
+            .map(|i| {
+                let dev = device_lock(self.runtime.soc(i));
+                residency_lock(&self.residency[i]).available_after_eviction(&dev)
+            })
+            .collect()
+    }
+
     fn register_shards(
         &mut self,
         kind: WorkloadKind,
@@ -303,13 +412,13 @@ impl Router {
         }
         let shards: Vec<Arc<ShardedModel>> =
             shard(&inst.compiled, n_shards)?.into_iter().map(Arc::new).collect();
-        // DRAM-budget placement: the heaviest shard goes to the replica
-        // with the most free resident budget, and so on down the ranks
-        // (the final K-shard absorbs the split remainder, so shard
-        // footprints are not uniform; pairing by rank avoids rejecting
-        // a placement whose swapped assignment would fit). Stable by
-        // index on ties.
-        let budgets: Vec<u64> = (0..n_rep).map(|i| self.replica_free_budget(i)).collect();
+        // DRAM-budget placement against **post-eviction** budgets: the
+        // heaviest shard goes to the replica that could free the most
+        // resident budget, and so on down the ranks (the final K-shard
+        // absorbs the split remainder, so shard footprints are not
+        // uniform; pairing by rank avoids rejecting a placement whose
+        // swapped assignment would fit). Stable by index on ties.
+        let budgets = self.post_eviction_budgets();
         let mut order: Vec<usize> = (0..n_rep).collect();
         order.sort_by_key(|&i| std::cmp::Reverse(budgets[i]));
         let mut shard_order: Vec<usize> = (0..n_shards).collect();
@@ -322,7 +431,7 @@ impl Router {
             let need = sh.warm_footprint_bytes() as u64;
             if need > budgets[ri] {
                 bail!(
-                    "shard {} of `{}` needs {} resident bytes but replica {} has only {} free",
+                    "shard {} of `{}` needs {} resident bytes but replica {} can free only {}",
                     sh.shard_idx,
                     sh.name,
                     need,
@@ -331,12 +440,32 @@ impl Router {
                 );
             }
         }
-        // warm every shard on its home replica; roll back on any failure
+        // warm every shard on its home replica through the catalog,
+        // holding a **coordinator pin** for the registration's lifetime
+        // — a sharded layer must never lose a shard mid-rotation, so
+        // shards are not evictable (whole models evict around them).
+        // Roll back fully on any failure.
+        let unregister = |router: &Router, upto: usize| {
+            for (sh2, &rj) in shards.iter().zip(&replicas).take(upto) {
+                let soc = Arc::clone(router.runtime.soc(rj));
+                let mut dev = device_lock(&soc);
+                let mut mgr = residency_lock(&router.residency[rj]);
+                mgr.unpin(sh2.uid());
+                mgr.remove(&mut dev, sh2.uid());
+            }
+        };
         for (idx, (sh, &ri)) in shards.iter().zip(&replicas).enumerate() {
-            if let Err(e) = sh.ensure_warm(&mut device_lock(self.runtime.soc(ri))) {
-                for (sh2, &rj) in shards.iter().zip(&replicas).take(idx) {
-                    sh2.evict(&mut device_lock(self.runtime.soc(rj)));
-                }
+            let image: Arc<dyn ResidentImage> = Arc::clone(sh) as Arc<dyn ResidentImage>;
+            let soc = Arc::clone(self.runtime.soc(ri));
+            let mut dev = device_lock(&soc);
+            let mut mgr = residency_lock(&self.residency[ri]);
+            mgr.pin_image(&image);
+            if let Err(e) = mgr.admit(&mut dev, &image) {
+                mgr.unpin(image.uid());
+                mgr.remove(&mut dev, image.uid());
+                drop(mgr);
+                drop(dev);
+                unregister(self, idx);
                 return Err(e.into());
             }
         }
@@ -347,8 +476,10 @@ impl Router {
         Ok(())
     }
 
-    /// Swap in a new registration, quiescing and evicting the replaced
-    /// model's warm state (whole or sharded) first.
+    /// Swap in a new registration, quiescing and dropping the replaced
+    /// model (whole or sharded) from every replica catalog first — its
+    /// warm state is evicted and its resident DRAM returns to the
+    /// allocator.
     fn replace_entry(&mut self, kind: WorkloadKind, entry: ModelEntry) {
         if let Some(old) = self.models.remove(&kind) {
             self.quiesce();
@@ -361,23 +492,21 @@ impl Router {
         match entry {
             ModelEntry::Whole(inst) => {
                 for i in 0..self.runtime.n_replicas() {
-                    inst.compiled.evict(&mut device_lock(self.runtime.soc(i)));
+                    let soc = Arc::clone(self.runtime.soc(i));
+                    let mut dev = device_lock(&soc);
+                    residency_lock(&self.residency[i]).remove(&mut dev, inst.compiled.uid());
                 }
             }
             ModelEntry::Sharded(se) => {
                 for (sh, &ri) in se.shards.iter().zip(&se.replicas) {
-                    sh.evict(&mut device_lock(self.runtime.soc(ri)));
+                    let soc = Arc::clone(self.runtime.soc(ri));
+                    let mut dev = device_lock(&soc);
+                    let mut mgr = residency_lock(&self.residency[ri]);
+                    mgr.unpin(sh.uid());
+                    mgr.remove(&mut dev, sh.uid());
                 }
             }
         }
-    }
-
-    /// Free resident-DRAM budget of replica `i` in bytes: the allocator
-    /// limit (DRAM minus the FSM staging quarter) less live resident
-    /// allocations, plus reclaimed free-list bytes.
-    fn replica_free_budget(&self, i: usize) -> u64 {
-        let soc = device_lock(self.runtime.soc(i));
-        soc.resident_limit().saturating_sub(soc.resident_mark()) + soc.resident_free_bytes()
     }
 
     pub fn has(&self, kind: WorkloadKind) -> bool {
@@ -420,6 +549,11 @@ impl Router {
             ModelEntry::Whole(inst) => {
                 let replica = self.next_replica % self.active;
                 self.next_replica = (replica + 1) % self.active;
+                // in-flight pin: from dispatch to job completion the
+                // model cannot be an eviction victim on its replica
+                let image: Arc<dyn ResidentImage> =
+                    Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
+                residency_lock(&self.residency[replica]).pin_image(&image);
                 let (tx, rx) = crate::serve::completion();
                 let job = Job {
                     enqueued: Instant::now(),
@@ -428,10 +562,12 @@ impl Router {
                         inst: Arc::clone(inst),
                         input,
                         aux,
+                        residency: Some(Arc::clone(&self.residency[replica])),
                         done: tx,
                     },
                 };
                 if self.runtime.dispatch(replica, job).is_err() {
+                    residency_lock(&self.residency[replica]).unpin(image.uid());
                     bail!("serving runtime is shut down");
                 }
                 *self.served.entry(kind).or_insert(0) += 1;
@@ -443,7 +579,7 @@ impl Router {
                 let gate = Arc::clone(&self.sharded_inflight);
                 *gate.0.lock().unwrap() += 1;
                 let (tx, rx) = crate::serve::completion();
-                std::thread::spawn(move || {
+                let task: Box<dyn FnOnce() + Send> = Box::new(move || {
                     // panic-fenced like the replica workers: a dying
                     // coordinator must still release the quiesce gate
                     // and fail its waiter with a typed error, never
@@ -467,6 +603,24 @@ impl Router {
                         }
                     });
                 });
+                // the coordinator pool replaces the PR-4 per-request
+                // thread spawn; a full task queue back-pressures here
+                let n_rep = self.runtime.n_replicas();
+                let cap = self.queue_capacity;
+                let pool = self
+                    .coordinator_pool
+                    .get_or_insert_with(|| CoordinatorPool::new(n_rep.clamp(2, 8), cap));
+                if pool.queue.push(task).is_err() {
+                    let (lock, cv) = &*self.sharded_inflight;
+                    let mut n = match lock.lock() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    *n -= 1;
+                    cv.notify_all();
+                    drop(n);
+                    bail!("coordinator pool is shut down");
+                }
                 *self.served.entry(kind).or_insert(0) += 1;
                 Ok(rx)
             }
@@ -501,8 +655,11 @@ impl Router {
         };
         let offset = self.next_replica % self.active;
         self.next_replica = (offset + reqs.len()) % self.active;
+        let image: Arc<dyn ResidentImage> = Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
         let mut handles = Vec::with_capacity(reqs.len());
         for (i, r) in reqs.iter().enumerate() {
+            let replica = (offset + i) % self.active;
+            residency_lock(&self.residency[replica]).pin_image(&image);
             let (tx, rx) = crate::serve::completion();
             let job = Job {
                 enqueued: Instant::now(),
@@ -511,10 +668,12 @@ impl Router {
                     inst: Arc::clone(&inst),
                     input: r.input.clone(),
                     aux: r.aux.clone(),
+                    residency: Some(Arc::clone(&self.residency[replica])),
                     done: tx,
                 },
             };
-            if self.runtime.dispatch((offset + i) % self.active, job).is_err() {
+            if self.runtime.dispatch(replica, job).is_err() {
+                residency_lock(&self.residency[replica]).unpin(image.uid());
                 bail!("serving runtime is shut down");
             }
             handles.push(rx);
@@ -532,8 +691,18 @@ impl Router {
     }
 
     /// Route one request and wait for it — a blocking wrapper over
-    /// [`Router::submit`].
+    /// [`Router::submit`] for whole-model kinds. For a **sharded** kind
+    /// the coordinator loop runs **inline on the submitting thread**
+    /// (the ROADMAP follow-up): route is going to block for the result
+    /// anyway, so a handoff to a coordinator thread would buy nothing
+    /// but spawn/queue overhead — only the partial GEMMs hop to the
+    /// shard replicas' workers.
     pub fn route(&mut self, kind: WorkloadKind, input: &[f32], aux: &[f32]) -> Result<RoutedResult> {
+        if let Some(ModelEntry::Sharded(se)) = self.models.get(&kind) {
+            let se = Arc::clone(se);
+            *self.served.entry(kind).or_insert(0) += 1;
+            return se.serve(&self.runtime, input.to_vec(), aux.to_vec());
+        }
         Router::resolve(self.submit(kind, input.to_vec(), aux.to_vec())?)
     }
 
@@ -571,27 +740,72 @@ impl Router {
         for i in 0..reqs.len() {
             buckets[(offset + i) % self.active].push(i);
         }
-        let per_replica: Vec<Result<Vec<(usize, RoutedResult)>>> = std::thread::scope(|s| {
-            let handles: Vec<_> = buckets
-                .into_iter()
-                .enumerate()
-                .map(|(ri, idxs)| {
-                    let soc = Arc::clone(self.runtime.soc(ri));
-                    let inst = Arc::clone(inst);
-                    s.spawn(move || {
-                        let mut soc = device_lock(&soc);
-                        idxs.into_iter()
-                            .map(|i| {
-                                let r = &reqs[i];
-                                let (output, report) = inst.infer(&mut soc, &r.input, &r.aux)?;
-                                Ok((i, RoutedResult { kind, output, report, replica: ri }))
-                            })
-                            .collect::<Result<Vec<_>>>()
+        // budget admission, exactly like the runtime path: warm (and
+        // pin) the model on every replica that will serve a bucket
+        // through its catalog manager, so the legacy fan-out neither
+        // over-commits a rotating catalog's budget nor fails where
+        // `route` would evict-and-serve; only the serving itself stays
+        // synchronous (admission adds no device cycles — the
+        // fanout-vs-async differentials stay bit-identical)
+        let image: Arc<dyn ResidentImage> = Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
+        let mut pinned: Vec<usize> = Vec::new();
+        for (ri, idxs) in buckets.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let soc = Arc::clone(self.runtime.soc(ri));
+            let mut dev = device_lock(&soc);
+            let mut mgr = residency_lock(&self.residency[ri]);
+            mgr.pin_image(&image);
+            if let Err(e) = mgr.admit(&mut dev, &image) {
+                mgr.unpin(image.uid());
+                drop(mgr);
+                drop(dev);
+                for &rj in &pinned {
+                    residency_lock(&self.residency[rj]).unpin(image.uid());
+                }
+                return Err(e.into());
+            }
+            pinned.push(ri);
+        }
+        // panic-fenced so a dying serving thread cannot leak the batch
+        // pins past the unpin below (the worker path contains job
+        // panics the same way)
+        let fanned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = buckets
+                    .into_iter()
+                    .enumerate()
+                    .map(|(ri, idxs)| {
+                        let soc = Arc::clone(self.runtime.soc(ri));
+                        let inst = Arc::clone(inst);
+                        s.spawn(move || {
+                            let mut soc = device_lock(&soc);
+                            idxs.into_iter()
+                                .map(|i| {
+                                    let r = &reqs[i];
+                                    let (output, report) =
+                                        inst.infer(&mut soc, &r.input, &r.aux)?;
+                                    Ok((i, RoutedResult { kind, output, report, replica: ri }))
+                                })
+                                .collect::<Result<Vec<_>>>()
+                        })
                     })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("replica worker panicked")).collect()
-        });
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("replica worker panicked"))
+                    .collect::<Vec<Result<Vec<(usize, RoutedResult)>>>>()
+            })
+        }));
+        // release the batch pins before surfacing any error or panic
+        for &ri in &pinned {
+            residency_lock(&self.residency[ri]).unpin(image.uid());
+        }
+        let per_replica = match fanned {
+            Ok(v) => v,
+            Err(p) => std::panic::resume_unwind(p),
+        };
         let mut slots: Vec<Option<RoutedResult>> = Vec::new();
         slots.resize_with(reqs.len(), || None);
         for chunk in per_replica {
@@ -662,9 +876,25 @@ impl Router {
         self.active
     }
 
-    /// Host-side queue/service latency metrics from the runtime.
+    /// Host-side queue/service latency metrics from the runtime, with
+    /// the fleet's residency counters folded in: evictions /
+    /// compactions / cold-warms summed across replicas,
+    /// `resident_high_water` the maximum over them.
     pub fn runtime_metrics(&self) -> RuntimeMetrics {
-        self.runtime.metrics()
+        let mut m = self.runtime.metrics();
+        for mgr in &self.residency {
+            let s = residency_lock(mgr).stats();
+            m.evictions += s.evictions;
+            m.compactions += s.compactions;
+            m.cold_warms += s.cold_warms;
+            m.resident_high_water = m.resident_high_water.max(s.resident_high_water);
+        }
+        m
+    }
+
+    /// Residency counters of replica `i`'s catalog manager.
+    pub fn replica_residency_stats(&self, i: usize) -> ResidencyStats {
+        residency_lock(&self.residency[i]).stats()
     }
 
     /// Jobs queued (not yet picked up) on replica `i`.
@@ -869,8 +1099,9 @@ mod tests {
 
     #[test]
     fn failed_registration_leaves_router_usable() {
-        // 16 KiB DRAM: the effnet fc image does not fit, gaze does
-        let cfg = SocConfig { dram_bytes: 1 << 14, ..Default::default() };
+        // 32 KiB DRAM → 24 KiB resident budget: effnet (~83 KiB warm
+        // footprint) can never fit, gaze (~21 KiB) can
+        let cfg = SocConfig { dram_bytes: 1 << 15, ..Default::default() };
         let mut r = Router::new(2, cfg);
         let ge = effnet::build();
         let we = weights_for(&ge, 20);
@@ -1173,6 +1404,144 @@ mod tests {
         // no fresh samples, nothing queued or in flight: idle patience
         assert_eq!(r.autoscale_tick_cycles(&mut policy), 2);
         assert_eq!(r.autoscale_tick_cycles(&mut policy), 1, "idle fleet parks to the floor");
+    }
+
+    /// Single-fc model with a precisely controllable warm footprint:
+    /// align64(k·n·4) + align64(k·4) + align64(n·4).
+    fn fc_inst(name: &str, k: usize, n: usize, sel: PrecSel, seed: u64) -> ModelInstance {
+        use crate::models::graph::{Layer, LayerKind, ModelGraph, Shape};
+        let g = ModelGraph {
+            name: name.into(),
+            input: Shape::vec(k),
+            layers: vec![Layer { name: "fc".into(), kind: LayerKind::Fc { in_f: k, out_f: n } }],
+        };
+        let w = weights_for(&g, seed);
+        ModelInstance::uniform(g, w, sel).unwrap()
+    }
+
+    #[test]
+    fn catalog_rotation_serves_bit_identically_all_modes() {
+        // THE residency acceptance differential: a 3-model catalog whose
+        // combined warm footprint (~187 KiB) exceeds the replica's
+        // 96 KiB resident budget — every dispatch to a cold model evicts
+        // the LRU model and re-warms, and every response stays
+        // bit-identical (values AND ExecReports) to fresh single-model
+        // routers, in every hardware mode. Counters are exact: one model
+        // warm at a time, so each warm after the first evicts exactly
+        // one victim.
+        use crate::models::ulvio;
+        const BUDGET: usize = 96 * 1024;
+        let kinds = [WorkloadKind::Classify, WorkloadKind::Vio, WorkloadKind::Gaze];
+        for (mi, sel) in PrecSel::ALL.into_iter().enumerate() {
+            let graphs = [effnet::build(), ulvio::build(), gaze::build()];
+            let weights: Vec<_> =
+                graphs.iter().enumerate().map(|(i, g)| weights_for(g, 200 + (mi * 3 + i) as u64)).collect();
+            let rt = RuntimeConfig { resident_budget: Some(BUDGET), ..Default::default() };
+            let mut catalog = Router::with_runtime(1, SocConfig::default(), rt);
+            let mut refs: Vec<Router> = Vec::new();
+            for ((kind, g), w) in kinds.iter().zip(&graphs).zip(&weights) {
+                catalog
+                    .register(*kind, ModelInstance::uniform(g.clone(), w.clone(), sel).unwrap())
+                    .unwrap();
+                let mut r = Router::new(1, SocConfig::default());
+                r.register(*kind, ModelInstance::uniform(g.clone(), w.clone(), sel).unwrap())
+                    .unwrap();
+                refs.push(r);
+            }
+            let rounds = 2;
+            for round in 0..rounds {
+                for (ki, kind) in kinds.iter().enumerate() {
+                    let g = &graphs[ki];
+                    let input: Vec<f32> = (0..g.input.numel())
+                        .map(|j| ((round * 97 + j) as f32 * 0.013).sin() * 0.4)
+                        .collect();
+                    let aux: Vec<f32> =
+                        if *kind == WorkloadKind::Vio { vec![0.05; 6] } else { vec![] };
+                    let got = catalog.route(*kind, &input, &aux).unwrap();
+                    let want = refs[ki].route(*kind, &input, &aux).unwrap();
+                    assert_eq!(
+                        got.output, want.output,
+                        "{sel:?} {kind:?} round {round}: rotation diverged"
+                    );
+                    assert_eq!(
+                        got.report, want.report,
+                        "{sel:?} {kind:?} round {round}: reports diverged"
+                    );
+                }
+            }
+            let m = catalog.runtime_metrics();
+            // 3 registration warms + 3 per rotation round, each warm
+            // after the first evicting exactly one model
+            assert_eq!(m.cold_warms, 3 + 3 * rounds as u64, "{sel:?}");
+            assert_eq!(m.evictions, m.cold_warms - 1, "{sel:?}");
+            assert_eq!(m.compactions, 0, "{sel:?}: single-model stack never fragments");
+            assert!(m.resident_high_water <= BUDGET as u64, "{sel:?}: budget exceeded");
+            assert!(m.resident_high_water > 0, "{sel:?}");
+        }
+    }
+
+    #[test]
+    fn catalog_compaction_counters_surface_in_runtime_metrics() {
+        // induced fragmentation at the router level: 32 KiB DRAM
+        // (24576-byte budget), three fc models sized so admitting the
+        // third needs the evicted first model's space — which only
+        // compaction can make contiguous. Counters surface through
+        // RuntimeMetrics and serving stays bit-identical throughout.
+        let cfg = SocConfig { dram_bytes: 1 << 15, ..Default::default() };
+        let mut r = Router::new(1, cfg);
+        let specs = [
+            (WorkloadKind::Vio, 64usize, 32usize, 300u64), // 8576 B
+            (WorkloadKind::Gaze, 64, 48, 301),             // 12736 B
+            (WorkloadKind::Classify, 64, 40, 302),         // 10688 B
+        ];
+        for (kind, k, n, seed) in specs {
+            r.register(kind, fc_inst(kind.name(), k, n, PrecSel::Posit8x2, seed)).unwrap();
+        }
+        // registration alone forced evict(a) + compact(b) for c
+        let m0 = r.runtime_metrics();
+        assert_eq!(m0.evictions, 1);
+        assert_eq!(m0.compactions, 1, "fragmented admission must compact");
+        assert_eq!(m0.cold_warms, 3);
+        // every kind serves bit-identically to a fresh big-DRAM router
+        for (kind, k, n, seed) in specs {
+            let input: Vec<f32> = (0..k).map(|j| (j as f32 * 0.21).sin() * 0.4).collect();
+            let mut reference = Router::new(1, SocConfig::default());
+            reference.register(kind, fc_inst(kind.name(), k, n, PrecSel::Posit8x2, seed)).unwrap();
+            let want = reference.route(kind, &input, &[]).unwrap();
+            let got = r.route(kind, &input, &[]).unwrap();
+            assert_eq!(got.output, want.output, "{kind:?} diverged after rotation");
+            assert_eq!(got.output.len(), n);
+        }
+        let m = r.runtime_metrics();
+        assert!(m.evictions >= 3, "rotation keeps evicting: {}", m.evictions);
+        assert!(m.resident_high_water <= 24576);
+        assert_eq!(m.resident_high_water, r.replica_residency_stats(0).resident_high_water);
+    }
+
+    #[test]
+    fn register_queues_cold_and_serves_once_pins_release() {
+        // a fleet whose budget is hogged by a *pinned* sharded model:
+        // whole registration no longer fails — the model queues cold,
+        // dispatch fails with a typed pinned-budget error, and once the
+        // sharded kind is replaced the cold model warms and serves
+        let cfg = SocConfig { dram_bytes: 1 << 15, ..Default::default() };
+        let mut r = Router::new(2, cfg);
+        // 2-way K-split of a 64x150 fc: each shard ~21888 B of the
+        // 24576 B budget, pinned for the registration's lifetime
+        r.register_sharded(WorkloadKind::Vio, fc_inst("hog", 64, 150, PrecSel::Posit8x2, 310), 2)
+            .unwrap();
+        // 8576 B model: fits the budget, but not around the pinned shard
+        r.register(WorkloadKind::Gaze, fc_inst("small", 64, 32, PrecSel::Posit8x2, 311))
+            .unwrap();
+        let input: Vec<f32> = (0..64).map(|j| (j as f32 * 0.17).sin() * 0.4).collect();
+        let err = r.route(WorkloadKind::Gaze, &input, &[]).unwrap_err();
+        assert!(err.to_string().contains("pinned"), "want typed pinned error, got: {err}");
+        // replacing the sharded kind releases its pins and space
+        r.register(WorkloadKind::Vio, fc_inst("tiny", 64, 8, PrecSel::Posit8x2, 312)).unwrap();
+        let out = r.route(WorkloadKind::Gaze, &input, &[]).unwrap();
+        assert_eq!(out.output.len(), 32);
+        assert_eq!(r.route(WorkloadKind::Vio, &input, &[]).unwrap().output.len(), 8);
+        assert!(r.runtime_metrics().cold_warms >= 2);
     }
 
     #[test]

@@ -202,12 +202,10 @@ pub struct CompiledModel {
     uid: u64,
 }
 
-/// Per-(replica, model) warm state: ping-pong activation buffers,
-/// operand scratch, and the resident DRAM addresses.
+/// Per-(replica, model) warm state: the resident DRAM addresses. The
+/// host-side run buffers used to live here too; they are now the
+/// replica-wide [`ReplicaScratch`] shared across every resident model.
 struct Arena {
-    bufs: [Vec<f32>; 2],
-    a_mat: Matrix,
-    out_mat: Matrix,
     /// Resident weight base address per GEMM step.
     w_addrs: Vec<u64>,
     /// Stable per-request A-operand / result scratch addresses.
@@ -217,6 +215,50 @@ struct Arena {
     /// alignment padding included), handed back to
     /// [`Soc::free_resident`] on eviction.
     allocs: Vec<(u64, u64)>,
+}
+
+/// Replica-wide host run scratch shared by **all** resident compiled
+/// models: the ping-pong activation buffers plus the operand/result
+/// staging matrices, grown to the largest model ever replayed on the
+/// replica (the ROADMAP "arena reuse" item — one sized-to-max arena per
+/// replica instead of one per (model, replica)). Safe to share because
+/// every access in [`CompiledModel::run`] is length-bounded by the
+/// current layer (`[..cur_len]` etc.), so stale bytes from another
+/// model are never read — the differential tests stay bit-identical.
+struct ReplicaScratch {
+    bufs: [Vec<f32>; 2],
+    a_mat: Matrix,
+    out_mat: Matrix,
+}
+
+impl Default for ReplicaScratch {
+    fn default() -> Self {
+        ReplicaScratch {
+            bufs: [Vec::new(), Vec::new()],
+            a_mat: Matrix { rows: 0, cols: 0, data: Vec::new() },
+            out_mat: Matrix { rows: 0, cols: 0, data: Vec::new() },
+        }
+    }
+}
+
+impl ReplicaScratch {
+    /// Grow (never shrink) to fit `model`'s widest layer boundary.
+    fn fit(&mut self, model: &CompiledModel) {
+        if self.bufs[0].len() < model.buf_len {
+            self.bufs[0].resize(model.buf_len, 0.0);
+            self.bufs[1].resize(model.buf_len, 0.0);
+        }
+        // `reserve` is relative to len: request exactly what lifts the
+        // capacity to the model's operand sizes
+        if self.a_mat.data.capacity() < model.a_len {
+            let len = self.a_mat.data.len();
+            self.a_mat.data.reserve(model.a_len - len);
+        }
+        if self.out_mat.data.capacity() < model.c_len {
+            let len = self.out_mat.data.len();
+            self.out_mat.data.reserve(model.c_len - len);
+        }
+    }
 }
 
 /// Allocate `bytes` of resident DRAM and record the span (including the
@@ -492,15 +534,7 @@ impl CompiledModel {
             Ok(a) => a,
             Err(e) => return Err(fail(self, soc, gemms.len(), &allocs, e)),
         };
-        Ok(Arena {
-            bufs: [vec![0.0; self.buf_len], vec![0.0; self.buf_len]],
-            a_mat: Matrix { rows: 0, cols: 0, data: Vec::with_capacity(self.a_len) },
-            out_mat: Matrix { rows: 0, cols: 0, data: Vec::with_capacity(self.c_len) },
-            w_addrs,
-            a_addr,
-            c_addr,
-            allocs,
-        })
+        Ok(Arena { w_addrs, a_addr, c_addr, allocs })
     }
 
     fn gemm_steps(&self) -> Vec<&GemmStep> {
@@ -564,17 +598,24 @@ impl CompiledModel {
             .expect("warmed above")
             .downcast::<Arena>()
             .expect("model-state uid collision");
+        // the replica-wide shared run scratch, grown to this model
+        let mut scratch = soc
+            .take_scratch()
+            .and_then(|b| b.downcast::<ReplicaScratch>().ok())
+            .unwrap_or_default();
+        scratch.fit(self);
         // The arena is the only record of this model's resident spans
-        // and cache pins; it must go back on the SoC even if the run
-        // panics (the serving workers contain panics per job — dropping
-        // it here would leak the spans forever and strand stale pins,
-        // since `evict` has nothing to unwind without it). The buffers
-        // are overwritten from scratch on every request, so restoring a
-        // half-written arena is sound.
+        // and cache pins; it (and the shared scratch) must go back on
+        // the SoC even if the run panics (the serving workers contain
+        // panics per job — dropping it here would leak the spans
+        // forever and strand stale pins, since `evict` has nothing to
+        // unwind without it). The buffers are overwritten from scratch
+        // on every request, so restoring half-written state is sound.
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.run(soc, &mut arena, input, aux)
+            self.run(soc, &mut arena, &mut scratch, input, aux)
         }));
         soc.put_model_state(self.uid, arena);
+        soc.put_scratch(scratch);
         match res {
             Ok(r) => r,
             Err(p) => std::panic::resume_unwind(p),
@@ -738,6 +779,7 @@ impl CompiledModel {
         &self,
         soc: &mut Soc,
         arena: &mut Arena,
+        scratch: &mut ReplicaScratch,
         input: &[f32],
         aux: &[f32],
     ) -> Result<(Vec<f32>, ExecReport)> {
@@ -747,23 +789,23 @@ impl CompiledModel {
         let mut report = ExecReport::default();
         let mut cur = 0usize;
         let mut cur_len = input.len();
-        arena.bufs[0][..cur_len].copy_from_slice(input);
+        scratch.bufs[0][..cur_len].copy_from_slice(input);
         for step in &self.steps {
             match step {
                 Step::Gemm(g) => {
                     match &g.gather {
-                        Some(map) => map.gather(&arena.bufs[cur][..cur_len], &mut arena.a_mat),
+                        Some(map) => map.gather(&scratch.bufs[cur][..cur_len], &mut scratch.a_mat),
                         None => {
-                            arena.a_mat.rows = 1;
-                            arena.a_mat.cols = g.k;
-                            arena.a_mat.data.clear();
-                            arena.a_mat.data.extend_from_slice(&arena.bufs[cur][..cur_len]);
+                            scratch.a_mat.rows = 1;
+                            scratch.a_mat.cols = g.k;
+                            scratch.a_mat.data.clear();
+                            scratch.a_mat.data.extend_from_slice(&scratch.bufs[cur][..cur_len]);
                         }
                     }
                     // dynamic per-request activation scale — identical
                     // fold + element expression to the interpreted path
-                    let s_a = exec::scale_for(&arena.a_mat.data, g.sel.precision());
-                    for v in arena.a_mat.data.iter_mut() {
+                    let s_a = exec::scale_for(&scratch.a_mat.data, g.sel.precision());
+                    for v in scratch.a_mat.data.iter_mut() {
                         *v = (*v as f64 / s_a) as f32;
                     }
                     // trusted pin: the compiled weight encoding rides the
@@ -771,7 +813,7 @@ impl CompiledModel {
                     // the resident image (cycle/byte stats identical to
                     // `gemm_resident`)
                     let (raw, rep) = soc.gemm_trusted(
-                        &arena.a_mat,
+                        &scratch.a_mat,
                         g.k,
                         g.n,
                         arena.w_addrs[g.gemm_idx],
@@ -783,30 +825,30 @@ impl CompiledModel {
                     )?;
                     report.per_layer_cycles.push((g.layer_idx, rep.total_cycles));
                     report.jobs.merge(&rep);
-                    arena.out_mat.rows = g.m;
-                    arena.out_mat.cols = g.n;
-                    arena.out_mat.data.clear();
-                    arena.out_mat.data.resize(g.m * g.n, 0.0);
+                    scratch.out_mat.rows = g.m;
+                    scratch.out_mat.cols = g.n;
+                    scratch.out_mat.data.clear();
+                    scratch.out_mat.data.resize(g.m * g.n, 0.0);
                     exec::postprocess_gemm(
                         &raw,
                         s_a,
                         g.s_b,
                         &g.bias,
                         g.out_prec,
-                        &mut arena.out_mat,
+                        &mut scratch.out_mat,
                     );
                     let nxt = 1 - cur;
                     match g.conv_out {
                         Some(shape) => {
                             exec::chw_into(
-                                &arena.out_mat,
+                                &scratch.out_mat,
                                 shape,
-                                &mut arena.bufs[nxt][..shape.numel()],
+                                &mut scratch.bufs[nxt][..shape.numel()],
                             );
                             cur_len = shape.numel();
                         }
                         None => {
-                            arena.bufs[nxt][..g.n].copy_from_slice(&arena.out_mat.data);
+                            scratch.bufs[nxt][..g.n].copy_from_slice(&scratch.out_mat.data);
                             cur_len = g.n;
                         }
                     }
@@ -814,7 +856,7 @@ impl CompiledModel {
                 }
                 Step::Pool { kind, size, in_shape, out_len } => {
                     let nxt = 1 - cur;
-                    let (lo, hi) = arena.bufs.split_at_mut(1);
+                    let (lo, hi) = scratch.bufs.split_at_mut(1);
                     let (src, dst) =
                         if cur == 0 { (&lo[0], &mut hi[0]) } else { (&hi[0], &mut lo[0]) };
                     exec::pool_into(
@@ -830,7 +872,7 @@ impl CompiledModel {
                 }
                 Step::Act { kind, alpha, len } => {
                     debug_assert_eq!(*len, cur_len);
-                    for v in arena.bufs[cur][..cur_len].iter_mut() {
+                    for v in scratch.bufs[cur][..cur_len].iter_mut() {
                         *v = exec::activate(*v as f64, *kind, *alpha) as f32;
                     }
                     report.vector_cycles += (cur_len / 4) as u64;
@@ -839,12 +881,59 @@ impl CompiledModel {
                     if aux.len() != *n {
                         bail!("aux length {} != {}", aux.len(), n);
                     }
-                    arena.bufs[cur][cur_len..cur_len + n].copy_from_slice(aux);
+                    scratch.bufs[cur][cur_len..cur_len + n].copy_from_slice(aux);
                     cur_len += n;
                 }
             }
         }
-        Ok((arena.bufs[cur][..cur_len].to_vec(), report))
+        Ok((scratch.bufs[cur][..cur_len].to_vec(), report))
+    }
+
+    /// Live resident data blocks of this model's warm arena on `soc`
+    /// (`(addr, len_bytes)` in the fixed order: one block per GEMM
+    /// weight image, then A-operand scratch, then result scratch).
+    /// Empty when the model is not warm there. The compaction pass
+    /// relocates exactly these blocks and hands the new addresses back
+    /// through [`CompiledModel::rebase_on`].
+    pub(crate) fn live_blocks_on(&self, soc: &Soc) -> Vec<(u64, usize)> {
+        let Some(arena) = soc.model_state_ref(self.uid).and_then(|s| s.downcast_ref::<Arena>())
+        else {
+            return Vec::new();
+        };
+        let gemms = self.gemm_steps();
+        debug_assert_eq!(gemms.len(), arena.w_addrs.len());
+        let mut out = Vec::with_capacity(gemms.len() + 2);
+        for (g, &addr) in gemms.iter().zip(&arena.w_addrs) {
+            out.push((addr, g.weight.data.len() * 4));
+        }
+        out.push((arena.a_addr, self.a_len * 4));
+        out.push((arena.c_addr, self.c_len * 4));
+        out
+    }
+
+    /// Patch this model's warm arena after compaction moved its blocks:
+    /// `new_addrs[i]` is the relocated base of block `i` (same order as
+    /// [`CompiledModel::live_blocks_on`]). The recorded spans are
+    /// rebuilt tight around the blocks — the old spans' alignment
+    /// padding was reclaimed by the compaction itself.
+    pub(crate) fn rebase_on(&self, soc: &mut Soc, new_addrs: &[u64]) {
+        let Some(mut state) = soc.take_model_state(self.uid) else { return };
+        if let Some(arena) = state.downcast_mut::<Arena>() {
+            let n_w = arena.w_addrs.len();
+            debug_assert_eq!(new_addrs.len(), n_w + 2);
+            let sizes: Vec<usize> = self
+                .gemm_steps()
+                .iter()
+                .map(|g| g.weight.data.len() * 4)
+                .chain([self.a_len * 4, self.c_len * 4])
+                .collect();
+            arena.w_addrs.copy_from_slice(&new_addrs[..n_w]);
+            arena.a_addr = new_addrs[n_w];
+            arena.c_addr = new_addrs[n_w + 1];
+            arena.allocs =
+                new_addrs.iter().zip(&sizes).map(|(&a, &s)| (a, a + s as u64)).collect();
+        }
+        soc.put_model_state(self.uid, state);
     }
 }
 
@@ -1205,6 +1294,47 @@ impl ShardedModel {
             soc.gemm_partial(a, st.k, st.n, w_addr, &st.w_enc, a_addr, q_addr, st.sel);
         Ok(res?)
     }
+
+    /// Live resident blocks of this shard's warm arena (mirror of
+    /// [`CompiledModel::live_blocks_on`]: weight slices, then A-slice
+    /// scratch, then quire-spill scratch).
+    pub(crate) fn live_blocks_on(&self, soc: &Soc) -> Vec<(u64, usize)> {
+        let Some(arena) =
+            soc.model_state_ref(self.uid).and_then(|s| s.downcast_ref::<ShardArena>())
+        else {
+            return Vec::new();
+        };
+        debug_assert_eq!(self.steps.len(), arena.w_addrs.len());
+        let mut out = Vec::with_capacity(self.steps.len() + 2);
+        for (st, &addr) in self.steps.iter().zip(&arena.w_addrs) {
+            out.push((addr, st.weight.data.len() * 4));
+        }
+        out.push((arena.a_addr, self.a_len * 4));
+        out.push((arena.q_addr, self.q_len * QUIRE_SPILL_BYTES));
+        out
+    }
+
+    /// Patch this shard's warm arena after compaction (mirror of
+    /// [`CompiledModel::rebase_on`]).
+    pub(crate) fn rebase_on(&self, soc: &mut Soc, new_addrs: &[u64]) {
+        let Some(mut state) = soc.take_model_state(self.uid) else { return };
+        if let Some(arena) = state.downcast_mut::<ShardArena>() {
+            let n_w = arena.w_addrs.len();
+            debug_assert_eq!(new_addrs.len(), n_w + 2);
+            let sizes: Vec<usize> = self
+                .steps
+                .iter()
+                .map(|st| st.weight.data.len() * 4)
+                .chain([self.a_len * 4, self.q_len * QUIRE_SPILL_BYTES])
+                .collect();
+            arena.w_addrs.copy_from_slice(&new_addrs[..n_w]);
+            arena.a_addr = new_addrs[n_w];
+            arena.q_addr = new_addrs[n_w + 1];
+            arena.allocs =
+                new_addrs.iter().zip(&sizes).map(|(&a, &s)| (a, a + s as u64)).collect();
+        }
+        soc.put_model_state(self.uid, state);
+    }
 }
 
 #[cfg(test)]
@@ -1480,6 +1610,88 @@ mod tests {
         let (g1, _) = c2.replay(&mut soc, &in_g, &[]).unwrap();
         let (e1, _) = ce.replay(&mut soc, &in_e, &[]).unwrap();
         let (g2, _) = c2.replay(&mut soc, &in_g, &[]).unwrap();
+        let (e2, _) = ce.replay(&mut soc, &in_e, &[]).unwrap();
+        assert_eq!(g1, g2);
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn compaction_preserves_serving_bit_identically_all_modes() {
+        // the live-compaction acceptance differential: induce
+        // fragmentation (evict the middle of three resident models),
+        // mark-compact the survivors, and assert both values and
+        // ExecReports are unchanged after relocation — in all 4 modes
+        use crate::models::graph::Layer;
+        use crate::models::residency::{compact_resident, ResidentImage};
+        for (mi, sel) in PrecSel::ALL.into_iter().enumerate() {
+            let fc = |name: &str, k: usize, n: usize, seed: u64| {
+                let g = ModelGraph {
+                    name: name.into(),
+                    input: Shape::vec(k),
+                    layers: vec![Layer {
+                        name: "fc".into(),
+                        kind: LayerKind::Fc { in_f: k, out_f: n },
+                    }],
+                };
+                let w = random_weights(&g, seed);
+                let plan = PrecisionPlan::uniform(sel, &g.compute_layer_params());
+                Arc::new(compile(&g, &w, &plan).unwrap())
+            };
+            let a = fc("a", 64, 32, 400 + mi as u64);
+            let b = fc("b", 48, 40, 410 + mi as u64);
+            let c = fc("c", 32, 24, 420 + mi as u64);
+            let mut soc = Soc::new(SocConfig::default());
+            for m in [&a, &b, &c] {
+                m.ensure_warm(&mut soc).unwrap();
+            }
+            let xa = test_input(64, 0.1);
+            let xc = test_input(32, 0.2);
+            let (want_a, want_ra) = a.replay(&mut soc, &xa, &[]).unwrap();
+            let (want_c, want_rc) = c.replay(&mut soc, &xc, &[]).unwrap();
+            // fragment: the middle model leaves a buried hole
+            b.evict(&mut soc);
+            assert!(soc.resident_free_bytes() > 0, "{sel:?}: premise — fragmentation");
+            let mark = soc.resident_mark();
+            let live: Vec<Arc<dyn ResidentImage>> = vec![
+                Arc::clone(&a) as Arc<dyn ResidentImage>,
+                Arc::clone(&c) as Arc<dyn ResidentImage>,
+            ];
+            let new_top = compact_resident(&mut soc, &live);
+            assert!(new_top < mark, "{sel:?}: compaction must reclaim the hole");
+            assert_eq!(soc.resident_free_bytes(), 0, "{sel:?}");
+            let (got_a, got_ra) = a.replay(&mut soc, &xa, &[]).unwrap();
+            let (got_c, got_rc) = c.replay(&mut soc, &xc, &[]).unwrap();
+            assert_eq!(got_a, want_a, "{sel:?}: values diverged after relocation");
+            assert_eq!(got_c, want_c, "{sel:?}: values diverged after relocation");
+            assert_eq!(got_ra, want_ra, "{sel:?}: reports diverged after relocation");
+            assert_eq!(got_rc, want_rc, "{sel:?}: reports diverged after relocation");
+        }
+    }
+
+    #[test]
+    fn shared_scratch_installs_once_per_replica_and_survives_eviction() {
+        // the arena-reuse item: the ping-pong run scratch is replica-
+        // wide — installed at the first replay, shared by every model,
+        // and untouched by evictions (it holds no per-model state)
+        let gg = gaze::build();
+        let pg = PrecisionPlan::uniform(PrecSel::Posit8x2, &gg.compute_layer_params());
+        let cg = compile(&gg, &random_weights(&gg, 95), &pg).unwrap();
+        let ge = effnet::build();
+        let pe = PrecisionPlan::uniform(PrecSel::Fp4x4, &ge.compute_layer_params());
+        let ce = compile(&ge, &random_weights(&ge, 96), &pe).unwrap();
+        let mut soc = Soc::new(SocConfig::default());
+        assert!(!soc.has_scratch());
+        let in_g = test_input(gg.input.numel(), 0.1);
+        let in_e = test_input(ge.input.numel(), 0.2);
+        let (g1, _) = cg.replay(&mut soc, &in_g, &[]).unwrap();
+        assert!(soc.has_scratch(), "first replay installs the shared scratch");
+        let (e1, _) = ce.replay(&mut soc, &in_e, &[]).unwrap();
+        cg.evict(&mut soc);
+        ce.evict(&mut soc);
+        assert!(soc.has_scratch(), "eviction must not tear down the replica scratch");
+        // re-warmed models serve bit-identically through the reused
+        // (larger-than-needed for gaze) scratch
+        let (g2, _) = cg.replay(&mut soc, &in_g, &[]).unwrap();
         let (e2, _) = ce.replay(&mut soc, &in_e, &[]).unwrap();
         assert_eq!(g1, g2);
         assert_eq!(e1, e2);

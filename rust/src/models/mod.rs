@@ -12,6 +12,11 @@
 //!   ([`exec::Backend::Npe`]) and the per-request interpreted lowering
 //!   kept as the differential-testing reference
 //!   ([`exec::Backend::NpeInterpret`]).
+//! * [`residency`] — the DRAM-budgeted model catalog: every compiled /
+//!   shard arena is an evictable [`residency::ResidentImage`] tracked by
+//!   a per-replica [`residency::ResidencyManager`] (pluggable LRU
+//!   eviction, pin-aware, live compaction) so a replica rotates a large
+//!   catalog instead of growing resident memory monotonically.
 //! * [`effnet`] / [`gaze`] / [`ulvio`] — the EfficientNet-style
 //!   classifier, the eye-gaze regressor and the UL-VIO-lite odometry
 //!   net. Weight layouts match `python/compile/model.py` exactly
@@ -23,6 +28,7 @@ pub mod exec;
 pub mod gaze;
 pub mod graph;
 pub mod mlp;
+pub mod residency;
 pub mod ulvio;
 
 pub use compile::{
@@ -31,6 +37,10 @@ pub use compile::{
 };
 pub use exec::{Backend, ExecReport, Executor};
 pub use graph::{ActKind, Layer, LayerKind, ModelGraph, PoolKind};
+pub use residency::{
+    compact_resident, residency_lock, Candidate, EvictionPolicy, LruPolicy, ResidencyError,
+    ResidencyManager, ResidencyStats, ResidentImage,
+};
 
 /// He-initialized random weight map for a graph (bias zero, PACT α = 4)
 /// — the one init shared by CLI demos, benches and tests that exercise

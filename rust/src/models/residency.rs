@@ -1,0 +1,683 @@
+//! Budgeted multi-model residency: the catalog layer that turns a
+//! replica from a monotonically-growing set of warm models into a
+//! rotating, DRAM-budgeted cache of them.
+//!
+//! The paper's co-processor serves several XR perception workloads from
+//! one engine by keeping weights resident; before this module a replica
+//! simply accumulated every registered model's resident image until the
+//! allocator refused the next one. [`ResidencyManager`] makes residency
+//! a first-class, evictable resource:
+//!
+//! * every compiled/shard arena is tracked as a [`ResidentImage`]
+//!   against an explicit **DRAM budget** (at most the SoC's
+//!   [`Soc::resident_limit`]);
+//! * [`ResidencyManager::admit`] warms a cold model through a pluggable
+//!   [`EvictionPolicy`] — the default [`LruPolicy`] evicts the least
+//!   recently **dispatched** model first, and pinned entries (in-flight
+//!   requests pin at dispatch, sharded registrations pin for their
+//!   lifetime) are never victims;
+//! * when the budget math says a model fits but the free list is too
+//!   fragmented for the bump allocator, the manager performs **live
+//!   compaction** ([`compact_resident`]): live weight images slide down
+//!   over the holes via [`Soc::move_resident`] and the owning arenas'
+//!   addresses are patched — serving is bit-identical before and after
+//!   (differential-tested in every `PrecSel` mode).
+//!
+//! Eviction/compaction/cold-warm counters and the resident high-water
+//! mark surface through [`ResidencyStats`] into the router's
+//! `RuntimeMetrics`.
+//!
+//! Lock discipline: manager methods that touch the device take
+//! `&mut Soc` — callers acquire the replica device lock *first*, then
+//! the manager lock ([`residency_lock`]), and never the reverse.
+
+use super::compile::{CompiledModel, ShardedModel};
+use crate::soc::{Soc, SocError};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Anything whose warm state occupies resident DRAM on a replica and
+/// can be evicted, re-warmed and relocated: whole compiled models and
+/// per-replica shard views implement it.
+pub trait ResidentImage: Send + Sync {
+    /// Stable warm-state key on a [`Soc`].
+    fn uid(&self) -> u64;
+    /// Model name (diagnostics).
+    fn name(&self) -> &str;
+    /// Conservative resident footprint of one warm instance, bytes —
+    /// the budget accounting unit.
+    fn warm_footprint_bytes(&self) -> usize;
+    /// Is this image warm on `soc`? (Ground truth — the manager derives
+    /// its accounting from the device, so unmanaged warms never drift.)
+    fn is_warm(&self, soc: &Soc) -> bool;
+    /// Warm on `soc` (idempotent; rolls back fully on failure).
+    fn ensure_warm(&self, soc: &mut Soc) -> Result<(), SocError>;
+    /// Tear down the warm state on `soc` (no-op when not warm).
+    fn evict(&self, soc: &mut Soc);
+    /// Live resident data blocks `(addr, len_bytes)` on `soc`, in a
+    /// fixed per-image order; empty when not warm.
+    fn live_blocks(&self, soc: &Soc) -> Vec<(u64, usize)>;
+    /// Patch the warm arena after compaction relocated the blocks
+    /// (`new_addrs` parallel to [`ResidentImage::live_blocks`]).
+    fn rebase(&self, soc: &mut Soc, new_addrs: &[u64]);
+}
+
+impl ResidentImage for CompiledModel {
+    fn uid(&self) -> u64 {
+        CompiledModel::uid(self)
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn warm_footprint_bytes(&self) -> usize {
+        CompiledModel::warm_footprint_bytes(self)
+    }
+    fn is_warm(&self, soc: &Soc) -> bool {
+        soc.has_model_state(CompiledModel::uid(self))
+    }
+    fn ensure_warm(&self, soc: &mut Soc) -> Result<(), SocError> {
+        CompiledModel::ensure_warm(self, soc)
+    }
+    fn evict(&self, soc: &mut Soc) {
+        CompiledModel::evict(self, soc)
+    }
+    fn live_blocks(&self, soc: &Soc) -> Vec<(u64, usize)> {
+        self.live_blocks_on(soc)
+    }
+    fn rebase(&self, soc: &mut Soc, new_addrs: &[u64]) {
+        self.rebase_on(soc, new_addrs)
+    }
+}
+
+impl ResidentImage for ShardedModel {
+    fn uid(&self) -> u64 {
+        ShardedModel::uid(self)
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn warm_footprint_bytes(&self) -> usize {
+        ShardedModel::warm_footprint_bytes(self)
+    }
+    fn is_warm(&self, soc: &Soc) -> bool {
+        soc.has_model_state(ShardedModel::uid(self))
+    }
+    fn ensure_warm(&self, soc: &mut Soc) -> Result<(), SocError> {
+        ShardedModel::ensure_warm(self, soc)
+    }
+    fn evict(&self, soc: &mut Soc) {
+        ShardedModel::evict(self, soc)
+    }
+    fn live_blocks(&self, soc: &Soc) -> Vec<(u64, usize)> {
+        self.live_blocks_on(soc)
+    }
+    fn rebase(&self, soc: &mut Soc, new_addrs: &[u64]) {
+        self.rebase_on(soc, new_addrs)
+    }
+}
+
+/// Take a residency-manager lock, clearing poisoning (mirror of
+/// [`crate::serve::device_lock`] — a contained worker panic must not
+/// turn into a poisoned-lock cascade).
+pub fn residency_lock(m: &Mutex<ResidencyManager>) -> MutexGuard<'_, ResidencyManager> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// One eviction candidate as seen by the policy: a **warm, unpinned**
+/// catalog entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    pub uid: u64,
+    /// Logical dispatch clock of the entry's last admit/touch.
+    pub last_use: u64,
+    /// Budgeted footprint, bytes.
+    pub bytes: u64,
+}
+
+/// Pluggable victim selection. Candidates arrive sorted by `uid` for
+/// determinism; pinned and cold entries are filtered out before the
+/// policy ever sees them.
+pub trait EvictionPolicy: Send {
+    /// Pick the uid to evict next; `None` refuses (admission fails).
+    fn pick(&mut self, candidates: &[Candidate]) -> Option<u64>;
+}
+
+/// Least-recently-dispatched eviction (ties broken by uid).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LruPolicy;
+
+impl EvictionPolicy for LruPolicy {
+    fn pick(&mut self, candidates: &[Candidate]) -> Option<u64> {
+        candidates.iter().min_by_key(|c| (c.last_use, c.uid)).map(|c| c.uid)
+    }
+}
+
+/// Typed admission errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResidencyError {
+    /// The model's footprint exceeds the replica budget outright — it
+    /// can never be warm here (shard it across the fleet instead).
+    ExceedsBudget { model: String, need: u64, budget: u64 },
+    /// Every candidate the budget would need back is pinned (in-flight
+    /// or a coordinator-pinned shard) — the model stays cold.
+    Pinned { model: String, need: u64, budget: u64, pinned: u64 },
+    /// The device rejected the warm even after eviction + compaction.
+    Soc(SocError),
+}
+
+impl fmt::Display for ResidencyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ResidencyError::ExceedsBudget { model, need, budget } => write!(
+                f,
+                "model `{model}` needs {need} resident bytes but the replica budget is {budget}"
+            ),
+            ResidencyError::Pinned { model, need, budget, pinned } => write!(
+                f,
+                "cannot admit `{model}` ({need} bytes, budget {budget}): {pinned} bytes are \
+                 pinned by in-flight or sharded models"
+            ),
+            ResidencyError::Soc(e) => write!(f, "warm rejected by the device: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ResidencyError {}
+
+impl From<SocError> for ResidencyError {
+    fn from(e: SocError) -> Self {
+        ResidencyError::Soc(e)
+    }
+}
+
+/// Residency counters, surfaced through the router's `RuntimeMetrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Models evicted to make room for an admission.
+    pub evictions: u64,
+    /// Live compactions performed (fragmented free list defragmented).
+    pub compactions: u64,
+    /// Cold models made warm by an admission (registration floor warms
+    /// and dispatch-triggered warms alike).
+    pub cold_warms: u64,
+    /// Highest budgeted warm-set footprint ever reached, bytes.
+    pub resident_high_water: u64,
+}
+
+struct Entry {
+    image: Arc<dyn ResidentImage>,
+    /// Budgeted footprint, bytes (frozen at insert).
+    bytes: u64,
+    last_use: u64,
+    /// Eviction protection: in-flight dispatch pins + coordinator pins.
+    pins: u32,
+}
+
+/// Per-replica DRAM-budgeted model catalog with policy-driven eviction
+/// and live compaction. The manager must mediate **every** resident
+/// allocation on its replica (the router guarantees this); warmness
+/// itself is always read back from the device, so the accounting cannot
+/// drift from reality.
+pub struct ResidencyManager {
+    budget: u64,
+    entries: HashMap<u64, Entry>,
+    /// Logical dispatch clock driving LRU.
+    clock: u64,
+    policy: Box<dyn EvictionPolicy>,
+    stats: ResidencyStats,
+}
+
+impl ResidencyManager {
+    /// Manager with the default [`LruPolicy`]. `budget_bytes` should be
+    /// at most the replica's [`Soc::resident_limit`] — admissions the
+    /// budget approves are then guaranteed to warm (after compaction at
+    /// worst).
+    pub fn lru(budget_bytes: u64) -> ResidencyManager {
+        ResidencyManager::with_policy(budget_bytes, Box::new(LruPolicy))
+    }
+
+    /// Manager with an explicit eviction policy.
+    pub fn with_policy(budget_bytes: u64, policy: Box<dyn EvictionPolicy>) -> ResidencyManager {
+        ResidencyManager {
+            budget: budget_bytes,
+            entries: HashMap::new(),
+            clock: 0,
+            policy,
+            stats: ResidencyStats::default(),
+        }
+    }
+
+    /// The configured resident-DRAM budget, bytes.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Counters snapshot.
+    pub fn stats(&self) -> ResidencyStats {
+        self.stats
+    }
+
+    /// Catalog entries (warm or cold).
+    pub fn catalog_len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Budgeted footprint of the models currently warm on `soc`.
+    pub fn warm_bytes(&self, soc: &Soc) -> u64 {
+        self.entries.values().filter(|e| e.image.is_warm(soc)).map(|e| e.bytes).sum()
+    }
+
+    /// Budget a new model could claim after evicting every *unpinned*
+    /// resident model: `budget − pinned warm bytes`. The post-eviction
+    /// number `register_auto` plans shard counts against.
+    pub fn available_after_eviction(&self, soc: &Soc) -> u64 {
+        let pinned: u64 = self
+            .entries
+            .values()
+            .filter(|e| e.pins > 0 && e.image.is_warm(soc))
+            .map(|e| e.bytes)
+            .sum();
+        self.budget.saturating_sub(pinned)
+    }
+
+    /// Add `image` to the catalog (cold; idempotent by uid — an
+    /// existing entry keeps its pins and LRU position).
+    pub fn insert(&mut self, image: Arc<dyn ResidentImage>) {
+        let uid = image.uid();
+        self.entries.entry(uid).or_insert_with(|| Entry {
+            bytes: image.warm_footprint_bytes() as u64,
+            image,
+            last_use: 0,
+            pins: 0,
+        });
+    }
+
+    /// Pin `image` against eviction (inserting it if unknown). The
+    /// router pins at dispatch and unpins at job completion; sharded
+    /// registrations hold a pin for their whole lifetime.
+    pub fn pin_image(&mut self, image: &Arc<dyn ResidentImage>) {
+        self.insert(Arc::clone(image));
+        if let Some(e) = self.entries.get_mut(&image.uid()) {
+            e.pins += 1;
+        }
+    }
+
+    /// Release one pin of `uid`. Saturating and tolerant of unknown
+    /// entries: the worker unpins unconditionally after every managed
+    /// job, but only router-dispatched jobs pinned at submission —
+    /// direct runtime users may not have.
+    pub fn unpin(&mut self, uid: u64) {
+        if let Some(e) = self.entries.get_mut(&uid) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    /// Drop `uid` from the catalog, evicting its warm state. Ignores
+    /// pins — the caller (model replacement) must have quiesced first.
+    pub fn remove(&mut self, soc: &mut Soc, uid: u64) {
+        if let Some(e) = self.entries.remove(&uid) {
+            e.image.evict(soc);
+        }
+    }
+
+    /// Admit `image` for dispatch: bump its LRU clock and make sure it
+    /// is warm within the budget — evicting policy-chosen victims and
+    /// compacting a fragmented free list as needed. Errors leave the
+    /// device rolled back (the model simply stays cold).
+    pub fn admit(
+        &mut self,
+        soc: &mut Soc,
+        image: &Arc<dyn ResidentImage>,
+    ) -> Result<(), ResidencyError> {
+        let uid = image.uid();
+        self.clock += 1;
+        let clock = self.clock;
+        let need = self
+            .entries
+            .get(&uid)
+            .map(|e| e.bytes)
+            .unwrap_or_else(|| image.warm_footprint_bytes() as u64);
+        // an oversized model never joins the catalog here — it could
+        // never warm, and one dead Arc'd entry per probe would leak
+        // (explicit `insert`/`pin_image` callers can still hold one)
+        if need > self.budget && !image.is_warm(soc) {
+            return Err(ResidencyError::ExceedsBudget {
+                model: image.name().to_string(),
+                need,
+                budget: self.budget,
+            });
+        }
+        self.insert(Arc::clone(image));
+        self.entries.get_mut(&uid).expect("inserted above").last_use = clock;
+        if image.is_warm(soc) {
+            return Ok(());
+        }
+        // policy-driven eviction until the budgeted warm set fits
+        while self.warm_bytes(soc) + need > self.budget {
+            let mut candidates: Vec<Candidate> = self
+                .entries
+                .values()
+                .filter(|e| e.pins == 0 && e.image.is_warm(soc))
+                .map(|e| Candidate { uid: e.image.uid(), last_use: e.last_use, bytes: e.bytes })
+                .collect();
+            candidates.sort_by_key(|c| c.uid);
+            let pick = self.policy.pick(&candidates);
+            // containment for custom policies: a pick outside the
+            // candidate list (a pinned or cold uid) would either evict
+            // a pinned model or spin this loop forever — treat it as a
+            // refusal instead
+            let victim = match pick {
+                Some(v) if candidates.iter().any(|c| c.uid == v) => self.entries.get(&v),
+                _ => None,
+            };
+            let Some(victim) = victim else {
+                let pinned: u64 = self
+                    .entries
+                    .values()
+                    .filter(|e| e.pins > 0 && e.image.is_warm(soc))
+                    .map(|e| e.bytes)
+                    .sum();
+                return Err(ResidencyError::Pinned {
+                    model: image.name().to_string(),
+                    need,
+                    budget: self.budget,
+                    pinned,
+                });
+            };
+            victim.image.evict(soc);
+            self.stats.evictions += 1;
+        }
+        // warm; a fragmented free list — or the sub-64-byte alignment
+        // gaps a previous compaction's tight rebase leaves between
+        // blocks — can refuse a fit the budget math guarantees.
+        // Defragment once and retry unconditionally: compaction
+        // reclaims both, and when nothing is reclaimable the retry
+        // fails exactly like the first attempt did.
+        if image.ensure_warm(soc).is_err() {
+            self.compact(soc);
+            image.ensure_warm(soc)?;
+        }
+        self.stats.cold_warms += 1;
+        let now = self.warm_bytes(soc);
+        self.stats.resident_high_water = self.stats.resident_high_water.max(now);
+        Ok(())
+    }
+
+    /// Defragment the resident region: slide every warm catalog model's
+    /// live blocks down over the reclaimed holes and patch their
+    /// arenas. Serving is bit-identical afterwards.
+    pub fn compact(&mut self, soc: &mut Soc) {
+        let mut images: Vec<Arc<dyn ResidentImage>> = self
+            .entries
+            .values()
+            .filter(|e| e.image.is_warm(soc))
+            .map(|e| Arc::clone(&e.image))
+            .collect();
+        images.sort_by_key(|i| i.uid());
+        compact_resident(soc, &images);
+        self.stats.compactions += 1;
+    }
+}
+
+/// Mark-compact the resident region of `soc`: every live block of
+/// `images` slides down to the lowest 64-byte-aligned address (ascending
+/// source order, so moves never clobber unmoved data — each destination
+/// is provably at or below its source), the stale free list is dropped
+/// ([`Soc::resident_compacted`]) and every arena is patched
+/// ([`ResidentImage::rebase`]). `images` must cover **every** live
+/// resident allocation on the SoC. Returns the new watermark.
+pub fn compact_resident(soc: &mut Soc, images: &[Arc<dyn ResidentImage>]) -> u64 {
+    // (addr, len, image idx, block idx); zero-length blocks sort before
+    // a same-address live block so their relocation target stays <= src
+    let mut blocks: Vec<(u64, usize, usize, usize)> = Vec::new();
+    let mut new_addrs: Vec<Vec<u64>> = Vec::with_capacity(images.len());
+    for (ii, img) in images.iter().enumerate() {
+        let bs = img.live_blocks(soc);
+        new_addrs.push(vec![0; bs.len()]);
+        for (bi, (addr, len)) in bs.into_iter().enumerate() {
+            blocks.push((addr, len, ii, bi));
+        }
+    }
+    blocks.sort_unstable();
+    let mut top = 0u64;
+    for &(addr, len, ii, bi) in &blocks {
+        let dst = top.next_multiple_of(64);
+        debug_assert!(dst <= addr, "compaction must only move blocks down");
+        if dst != addr && len > 0 {
+            soc.move_resident(addr, dst, len).expect("compaction move stays in bounds");
+        }
+        new_addrs[ii][bi] = dst;
+        top = dst + len as u64;
+    }
+    soc.resident_compacted(top);
+    for (img, addrs) in images.iter().zip(&new_addrs) {
+        img.rebase(soc, addrs);
+    }
+    top
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::compile::compile;
+    use crate::models::graph::{Layer, LayerKind, ModelGraph, Shape};
+    use crate::models::random_weights;
+    use crate::npe::PrecSel;
+    use crate::quant::PrecisionPlan;
+    use crate::soc::SocConfig;
+
+    /// Single-fc model: footprint = align64(k·n·4) + align64(k·4) +
+    /// align64(n·4), precisely controllable from (k, n).
+    fn fc_model(name: &str, k: usize, n: usize, sel: PrecSel, seed: u64) -> Arc<CompiledModel> {
+        let g = ModelGraph {
+            name: name.into(),
+            input: Shape::vec(k),
+            layers: vec![Layer { name: "fc".into(), kind: LayerKind::Fc { in_f: k, out_f: n } }],
+        };
+        let w = random_weights(&g, seed);
+        let plan = PrecisionPlan::uniform(sel, &g.compute_layer_params());
+        Arc::new(compile(&g, &w, &plan).unwrap())
+    }
+
+    fn as_image(m: &Arc<CompiledModel>) -> Arc<dyn ResidentImage> {
+        Arc::clone(m) as Arc<dyn ResidentImage>
+    }
+
+    fn input_of(k: usize, phase: f32) -> Vec<f32> {
+        (0..k).map(|i| ((i as f32) * 0.19 + phase).sin() * 0.5).collect()
+    }
+
+    /// 32 KiB DRAM → resident limit (and budget) 24576 bytes.
+    fn small_soc() -> Soc {
+        Soc::new(SocConfig { dram_bytes: 1 << 15, ..Default::default() })
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_dispatched_and_counts() {
+        let mut soc = small_soc();
+        let budget = soc.resident_limit();
+        assert_eq!(budget, 24576);
+        let mut mgr = ResidencyManager::lru(budget);
+        let a = fc_model("a", 64, 32, PrecSel::Posit8x2, 1); // 8576
+        let b = fc_model("b", 64, 48, PrecSel::Posit8x2, 2); // 12736
+        let c = fc_model("c", 64, 40, PrecSel::Posit8x2, 3); // 10688
+        assert_eq!(a.warm_footprint_bytes(), 8576);
+        assert_eq!(b.warm_footprint_bytes(), 12736);
+        assert_eq!(c.warm_footprint_bytes(), 10688);
+        mgr.admit(&mut soc, &as_image(&a)).unwrap();
+        mgr.admit(&mut soc, &as_image(&b)).unwrap();
+        // touch a so b becomes the LRU victim
+        mgr.admit(&mut soc, &as_image(&a)).unwrap();
+        mgr.admit(&mut soc, &as_image(&c)).unwrap();
+        assert!(soc.has_model_state(a.uid()), "recently dispatched model must survive");
+        assert!(!soc.has_model_state(b.uid()), "LRU model must be evicted");
+        assert!(soc.has_model_state(c.uid()));
+        let s = mgr.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.cold_warms, 3);
+        assert!(s.resident_high_water <= mgr.budget());
+        assert_eq!(mgr.catalog_len(), 3, "evicted models stay in the catalog (cold)");
+    }
+
+    #[test]
+    fn pinned_entries_are_never_evicted() {
+        let mut soc = small_soc();
+        let mut mgr = ResidencyManager::lru(soc.resident_limit());
+        let a = fc_model("a", 64, 60, PrecSel::Fp4x4, 4); // 15360+256+256 = 15872
+        let b = fc_model("b", 64, 48, PrecSel::Fp4x4, 5); // 12736
+        let ia = as_image(&a);
+        mgr.admit(&mut soc, &ia).unwrap();
+        mgr.pin_image(&ia);
+        // b needs a's space, but a is pinned → typed Pinned error
+        match mgr.admit(&mut soc, &as_image(&b)) {
+            Err(ResidencyError::Pinned { pinned, .. }) => assert_eq!(pinned, 15872),
+            other => panic!("expected Pinned, got {other:?}"),
+        }
+        assert!(soc.has_model_state(a.uid()), "pinned model must survive");
+        assert!(!soc.has_model_state(b.uid()));
+        // unpin → the same admission now evicts a
+        mgr.unpin(a.uid());
+        mgr.admit(&mut soc, &as_image(&b)).unwrap();
+        assert!(!soc.has_model_state(a.uid()));
+        assert!(soc.has_model_state(b.uid()));
+    }
+
+    #[test]
+    fn oversized_model_is_a_typed_budget_error() {
+        let mut soc = small_soc();
+        let mut mgr = ResidencyManager::lru(soc.resident_limit());
+        let big = fc_model("big", 64, 200, PrecSel::Posit8x2, 6); // 51200 > 24576
+        match mgr.admit(&mut soc, &as_image(&big)) {
+            Err(ResidencyError::ExceedsBudget { need, budget, .. }) => {
+                assert!(need > budget);
+            }
+            other => panic!("expected ExceedsBudget, got {other:?}"),
+        }
+        assert_eq!(mgr.stats().cold_warms, 0);
+    }
+
+    #[test]
+    fn fragmented_admission_compacts_and_serves_bit_identically() {
+        // the compaction trace: warm a+b, evict a (hole at the bottom),
+        // admit c whose weight block fits neither the hole nor the bump
+        // headroom — only compaction makes the budgeted fit real
+        let mut soc = small_soc();
+        let mut mgr = ResidencyManager::lru(soc.resident_limit());
+        let a = fc_model("a", 64, 32, PrecSel::Posit8x2, 7);
+        let b = fc_model("b", 64, 48, PrecSel::Posit8x2, 8);
+        let c = fc_model("c", 64, 40, PrecSel::Posit8x2, 9);
+        mgr.admit(&mut soc, &as_image(&a)).unwrap();
+        mgr.admit(&mut soc, &as_image(&b)).unwrap();
+        // reference output for b before any compaction
+        let xb = input_of(64, 0.3);
+        let (want_b, want_rep_b) = b.replay(&mut soc, &xb, &[]).unwrap();
+        mgr.admit(&mut soc, &as_image(&c)).unwrap();
+        let s = mgr.stats();
+        assert_eq!(s.evictions, 1, "a must be evicted for c");
+        assert_eq!(s.compactions, 1, "the fragmented free list must be compacted");
+        assert!(soc.has_model_state(b.uid()) && soc.has_model_state(c.uid()));
+        assert_eq!(soc.resident_free_bytes(), 0, "compaction drains the free list");
+        // b was relocated live: values AND reports bit-identical
+        let (got_b, got_rep_b) = b.replay(&mut soc, &xb, &[]).unwrap();
+        assert_eq!(got_b, want_b, "relocated model diverged");
+        assert_eq!(got_rep_b, want_rep_b, "relocation must not change cost accounting");
+        // c serves identically to a fresh big-DRAM reference
+        let xc = input_of(64, 0.6);
+        let mut big = Soc::new(SocConfig::default());
+        let (want_c, _) = c.replay(&mut big, &xc, &[]).unwrap();
+        let (got_c, _) = c.replay(&mut soc, &xc, &[]).unwrap();
+        assert_eq!(got_c, want_c);
+        assert!(s.resident_high_water <= mgr.budget());
+    }
+
+    #[test]
+    fn compact_resident_round_trips_every_live_byte() {
+        // direct compaction: every weight image's bytes are bit-equal
+        // at the relocated addresses, in every hardware mode
+        for (mi, sel) in PrecSel::ALL.into_iter().enumerate() {
+            let mut soc = Soc::new(SocConfig::default());
+            let models: Vec<Arc<CompiledModel>> = [(64usize, 32usize), (48, 24), (32, 40)]
+                .iter()
+                .enumerate()
+                .map(|(i, &(k, n))| {
+                    fc_model(&format!("m{i}"), k, n, sel, 20 + (mi * 3 + i) as u64)
+                })
+                .collect();
+            for m in &models {
+                m.ensure_warm(&mut soc).unwrap();
+            }
+            // evict the middle model: a buried hole
+            models[1].evict(&mut soc);
+            assert!(soc.resident_free_bytes() > 0);
+            let live: Vec<Arc<dyn ResidentImage>> =
+                [&models[0], &models[2]].into_iter().map(as_image).collect();
+            let before: Vec<Vec<u8>> = live
+                .iter()
+                .map(|img| {
+                    img.live_blocks(&soc)
+                        .iter()
+                        .flat_map(|&(a, l)| soc.ext.read(a, l).unwrap().to_vec())
+                        .collect()
+                })
+                .collect();
+            let old_mark = soc.resident_mark();
+            let new_top = compact_resident(&mut soc, &live);
+            assert!(new_top < old_mark, "{sel:?}: compaction must reclaim the hole");
+            assert_eq!(soc.resident_free_bytes(), 0);
+            let after: Vec<Vec<u8>> = live
+                .iter()
+                .map(|img| {
+                    img.live_blocks(&soc)
+                        .iter()
+                        .flat_map(|&(a, l)| soc.ext.read(a, l).unwrap().to_vec())
+                        .collect()
+                })
+                .collect();
+            assert_eq!(before, after, "{sel:?}: live bytes must survive relocation");
+            // and the relocated models still serve
+            for (i, m) in [&models[0], &models[2]].iter().enumerate() {
+                let x = input_of(m.input_len, i as f32);
+                let mut fresh = Soc::new(SocConfig::default());
+                let (want, _) = m.replay(&mut fresh, &x, &[]).unwrap();
+                let (got, _) = m.replay(&mut soc, &x, &[]).unwrap();
+                assert_eq!(got, want, "{sel:?}: model {i} diverged after compaction");
+            }
+        }
+    }
+
+    #[test]
+    fn remove_evicts_and_drops_the_entry() {
+        let mut soc = small_soc();
+        let mut mgr = ResidencyManager::lru(soc.resident_limit());
+        let a = fc_model("a", 64, 32, PrecSel::Posit16x1, 30);
+        mgr.admit(&mut soc, &as_image(&a)).unwrap();
+        let mark = soc.resident_mark();
+        assert!(mark > 0);
+        mgr.remove(&mut soc, a.uid());
+        assert_eq!(mgr.catalog_len(), 0);
+        assert!(!soc.has_model_state(a.uid()));
+        assert_eq!(soc.resident_mark(), 0, "top-of-stack eviction unwinds the watermark");
+    }
+
+    #[test]
+    fn available_after_eviction_subtracts_only_pinned_warm_bytes() {
+        let mut soc = small_soc();
+        let mut mgr = ResidencyManager::lru(soc.resident_limit());
+        let a = fc_model("a", 64, 32, PrecSel::Posit8x2, 31); // 8576
+        let b = fc_model("b", 64, 48, PrecSel::Posit8x2, 32); // 12736
+        let ia = as_image(&a);
+        mgr.admit(&mut soc, &ia).unwrap();
+        mgr.admit(&mut soc, &as_image(&b)).unwrap();
+        assert_eq!(mgr.available_after_eviction(&soc), mgr.budget(), "nothing pinned");
+        mgr.pin_image(&ia);
+        assert_eq!(mgr.available_after_eviction(&soc), mgr.budget() - 8576);
+        // a pinned-but-cold entry reserves nothing
+        mgr.remove(&mut soc, b.uid());
+        a.evict(&mut soc);
+        assert_eq!(mgr.available_after_eviction(&soc), mgr.budget());
+    }
+}

@@ -23,6 +23,7 @@ use crate::arith::QuireMatrix;
 use crate::coordinator::metrics::LatencyStats;
 use crate::coordinator::router::{RoutedResult, WorkloadKind};
 use crate::coordinator::scheduler::ModelInstance;
+use crate::models::residency::{residency_lock, ResidencyManager, ResidentImage};
 use crate::models::ShardedModel;
 use crate::soc::{JobReport, Soc, SocConfig};
 use crate::util::Matrix;
@@ -50,6 +51,14 @@ pub enum JobPayload {
         inst: Arc<ModelInstance>,
         input: Vec<f32>,
         aux: Vec<f32>,
+        /// The replica's DRAM-budget catalog, when the dispatcher runs
+        /// one (the router always does): the worker **admits** the
+        /// model before inferring — a cold model triggers policy-driven
+        /// evict → warm under the device lock, and the dispatch pin the
+        /// router took is released after the job. `None` = unmanaged
+        /// legacy path (direct runtime users, tests): the model warms
+        /// on demand with no budget accounting.
+        residency: Option<Arc<Mutex<ResidencyManager>>>,
         /// Fulfilled with the inference result (or its error).
         done: CompletionSender<Result<RoutedResult>>,
     },
@@ -229,6 +238,19 @@ pub struct RuntimeMetrics {
     /// Times a worker's drain loop itself died and was respawned by the
     /// supervisor.
     pub worker_respawns: u64,
+    /// Models evicted by the DRAM-budget residency managers (filled in
+    /// by the router from the per-replica
+    /// [`crate::models::residency::ResidencyStats`]; zero on a bare
+    /// [`ServeRuntime`]).
+    pub evictions: u64,
+    /// Live compactions performed by the residency managers.
+    pub compactions: u64,
+    /// Cold models made warm by an admission (registration floor warms
+    /// and dispatch-triggered warms alike).
+    pub cold_warms: u64,
+    /// Highest per-replica budgeted warm-set footprint ever reached,
+    /// bytes (max across replicas).
+    pub resident_high_water: u64,
 }
 
 struct SharedState {
@@ -316,16 +338,33 @@ impl ReplicaWorker {
             let waited = job.enqueued.elapsed().as_nanos() as u64;
             let t0 = Instant::now();
             match job.payload {
-                JobPayload::Infer { kind, inst, input, aux, done } => {
-                    let res = catch_unwind(AssertUnwindSafe(|| {
+                JobPayload::Infer { kind, inst, input, aux, residency, done } => {
+                    let res = catch_unwind(AssertUnwindSafe(
+                        || -> Result<(Vec<f32>, crate::models::ExecReport)> {
                         let mut dev = device_lock(soc);
+                        if let Some(mgr) = &residency {
+                            // budget admission: a cold model evicts
+                            // policy-chosen victims (compacting a
+                            // fragmented free list) before warming —
+                            // all under the device lock, so a relocated
+                            // arena is never observed mid-move
+                            let image: Arc<dyn ResidentImage> = Arc::clone(&inst.compiled);
+                            residency_lock(mgr).admit(&mut dev, &image)?;
+                        }
                         inst.infer(&mut dev, &input, &aux)
-                    }));
+                    },
+                    ));
                     let service = t0.elapsed().as_nanos() as u64;
                     let cycles = match &res {
                         Ok(Ok((_, rep))) => Some(rep.total_cycles()),
                         _ => None,
                     };
+                    // release the dispatch pin before accounting: once
+                    // quiesce observes the job done, nothing can still
+                    // hold its eviction protection
+                    if let Some(mgr) = &residency {
+                        residency_lock(mgr).unpin(inst.compiled.uid());
+                    }
                     account(shared, waited, service, cycles, res.is_err());
                     match res {
                         Ok(r) => done.fulfill(r.map(|(output, report)| RoutedResult {
@@ -520,6 +559,7 @@ mod tests {
                     inst: Arc::clone(inst),
                     input,
                     aux: vec![],
+                    residency: None,
                     done: tx,
                 },
             },
@@ -588,6 +628,7 @@ mod tests {
                         inst: Arc::clone(&ei),
                         input: vec![0.1; 256],
                         aux: vec![],
+                        residency: None,
                         done: tx,
                     },
                 },
@@ -701,6 +742,59 @@ mod tests {
         assert_eq!(samples, want, "sim-cycle samples must match the job reports exactly");
         let (fresh, _) = rt.service_cycle_samples_since(total);
         assert!(fresh.is_empty());
+    }
+
+    #[test]
+    fn managed_jobs_admit_through_the_residency_manager() {
+        // jobs carrying a residency manager rotate two models through a
+        // budget that holds only one of them — evictions and cold warms
+        // are counted, and every job still serves correct outputs
+        let rt = ServeRuntime::new(1, SocConfig::default(), 8);
+        // budget = one gaze model (+ slack), far below the real limit
+        let budget = {
+            let gi = gaze_inst(20);
+            gi.compiled.warm_footprint_bytes() as u64 + 1024
+        };
+        let mgr = Arc::new(Mutex::new(ResidencyManager::lru(budget)));
+        let a = gaze_inst(21);
+        let b = gaze_inst(22);
+        let managed = |inst: &Arc<ModelInstance>, x: f32| {
+            let (tx, rx) = completion();
+            (
+                Job {
+                    enqueued: Instant::now(),
+                    payload: JobPayload::Infer {
+                        kind: WorkloadKind::Gaze,
+                        inst: Arc::clone(inst),
+                        input: vec![x; 16],
+                        aux: vec![],
+                        residency: Some(Arc::clone(&mgr)),
+                        done: tx,
+                    },
+                },
+                rx,
+            )
+        };
+        let mut first = Vec::new();
+        for round in 0..3 {
+            for inst in [&a, &b] {
+                let (j, rx) = managed(inst, 0.1);
+                rt.dispatch(0, j).unwrap();
+                let out = rx.wait().unwrap().unwrap().output;
+                if round == 0 {
+                    first.push(out);
+                } else {
+                    // re-warmed model serves bit-identically
+                    let want = &first[if Arc::ptr_eq(inst, &a) { 0 } else { 1 }];
+                    assert_eq!(&out, want, "round {round}");
+                }
+            }
+        }
+        rt.quiesce();
+        let s = residency_lock(&mgr).stats();
+        assert_eq!(s.cold_warms, 6, "every dispatch found its model cold");
+        assert_eq!(s.evictions, 5, "each admit after the first evicts the other model");
+        assert!(s.resident_high_water <= budget);
     }
 
     #[test]

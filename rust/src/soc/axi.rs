@@ -121,6 +121,34 @@ impl ExternalMem {
         Ok(&self.data[a..a + len])
     }
 
+    /// Relocate `len` bytes from `src` to `dst` inside DRAM (memmove
+    /// semantics — the ranges may overlap in either direction). The
+    /// primitive behind [`super::Soc::move_resident`], which live
+    /// compaction uses to slide resident weight images down over
+    /// reclaimed holes.
+    pub fn copy_within(&mut self, src: u64, dst: u64, len: usize) -> Result<(), SocError> {
+        let cap = self.data.len() as u64;
+        if src.checked_add(len as u64).map_or(true, |e| e > cap) {
+            return Err(SocError::DramOutOfBounds {
+                write: false,
+                addr: src,
+                len,
+                capacity: self.data.len(),
+            });
+        }
+        if dst.checked_add(len as u64).map_or(true, |e| e > cap) {
+            return Err(SocError::DramOutOfBounds {
+                write: true,
+                addr: dst,
+                len,
+                capacity: self.data.len(),
+            });
+        }
+        let (src, dst) = (src as usize, dst as usize);
+        self.data.copy_within(src..src + len, dst);
+        Ok(())
+    }
+
     /// Store an f32 slice little-endian.
     pub fn write_f32(&mut self, addr: u64, xs: &[f32]) -> Result<(), SocError> {
         let mut buf = Vec::with_capacity(xs.len() * 4);
@@ -181,5 +209,20 @@ mod tests {
         let mut m = ExternalMem::new(64);
         assert!(m.write(60, &[0; 8]).is_err());
         assert!(m.read(65, 1).is_err());
+    }
+
+    #[test]
+    fn copy_within_handles_overlap_both_directions() {
+        let mut m = ExternalMem::new(64);
+        m.write(8, &[1, 2, 3, 4, 5, 6]).unwrap();
+        // overlapping slide down (the compaction direction)
+        m.copy_within(8, 4, 6).unwrap();
+        assert_eq!(m.read(4, 6).unwrap(), &[1, 2, 3, 4, 5, 6]);
+        // overlapping slide up
+        m.copy_within(4, 6, 6).unwrap();
+        assert_eq!(m.read(6, 6).unwrap(), &[1, 2, 3, 4, 5, 6]);
+        // bounds respected
+        assert!(m.copy_within(60, 0, 8).is_err());
+        assert!(m.copy_within(0, 60, 8).is_err());
     }
 }

@@ -111,6 +111,12 @@ pub struct Soc {
     /// addresses) keyed by the model's uid. Owned by the hardware handle
     /// — like device memory, the warm state travels with the replica.
     model_state: HashMap<u64, Box<dyn Any + Send>>,
+    /// Replica-wide run scratch shared by **every** resident compiled
+    /// model (the sized-to-max ping-pong activation arena): one
+    /// allocation per replica instead of one per (model, replica). Like
+    /// `model_state`, the SoC only stores it — the compiled-model replay
+    /// path owns the concrete type.
+    scratch: Option<Box<dyn Any + Send>>,
 }
 
 impl Soc {
@@ -131,6 +137,7 @@ impl Soc {
             resident_top: 0,
             resident_free: Vec::new(),
             model_state: HashMap::new(),
+            scratch: None,
         }
     }
 
@@ -248,9 +255,55 @@ impl Soc {
         }
     }
 
+    /// Relocate `len` live resident bytes from `src` to `dst` (memmove
+    /// semantics — the ranges may overlap). The live-compaction
+    /// primitive: the residency manager slides resident weight images
+    /// down over reclaimed holes and then patches the owning arenas'
+    /// addresses. Functional only — compaction is a management
+    /// operation off the serving path, so it charges no cycles and the
+    /// replayed programs stay bit-identical afterwards (asserted by the
+    /// compaction differential tests).
+    pub fn move_resident(&mut self, src: u64, dst: u64, len: usize) -> Result<(), SocError> {
+        self.ext.copy_within(src, dst, len)
+    }
+
+    /// Install a compacted resident layout: the caller has relocated
+    /// every live span below `new_top` (via [`Soc::move_resident`]) and
+    /// patched the owning arenas, so the old free list describes stale
+    /// addresses — drop it and shrink the watermark. Only sound for a
+    /// caller that tracks **every** live resident allocation (the
+    /// residency manager's compaction pass).
+    pub fn resident_compacted(&mut self, new_top: u64) {
+        debug_assert!(new_top <= self.resident_top);
+        self.resident_top = new_top;
+        self.resident_free.clear();
+    }
+
     /// Is warm state registered for compiled model `uid`?
     pub fn has_model_state(&self, uid: u64) -> bool {
         self.model_state.contains_key(&uid)
+    }
+
+    /// Immutable view of the warm state for `uid` (address/span reads
+    /// that must not disturb the take/put ownership discipline).
+    pub fn model_state_ref(&self, uid: u64) -> Option<&(dyn Any + Send)> {
+        self.model_state.get(&uid).map(|b| &**b)
+    }
+
+    /// Take ownership of the replica-wide shared run scratch (put it
+    /// back with [`Soc::put_scratch`] when the request completes).
+    pub fn take_scratch(&mut self) -> Option<Box<dyn Any + Send>> {
+        self.scratch.take()
+    }
+
+    /// Store the replica-wide shared run scratch.
+    pub fn put_scratch(&mut self, s: Box<dyn Any + Send>) {
+        self.scratch = Some(s);
+    }
+
+    /// Is a shared run scratch installed on this replica?
+    pub fn has_scratch(&self) -> bool {
+        self.scratch.is_some()
     }
 
     /// Take ownership of the warm state for `uid` (put it back with
@@ -768,6 +821,37 @@ mod tests {
         let cap = soc.ext.capacity();
         assert!(soc.alloc_resident(cap).is_err(), "must leave FSM staging room");
         soc.alloc_resident(cap / 2).unwrap();
+    }
+
+    #[test]
+    fn move_resident_relocates_and_compacted_resets_the_allocator() {
+        let mut soc = Soc::new(SocConfig::default());
+        let a = soc.alloc_resident(256).unwrap();
+        let b = soc.alloc_resident(256).unwrap();
+        soc.ext.write_f32(b, &[9.0; 64]).unwrap();
+        // free the first block, slide the second down over the hole
+        soc.free_resident(a, a + 256);
+        assert_eq!(soc.resident_free_bytes(), 256);
+        soc.move_resident(b, a, 256).unwrap();
+        assert_eq!(soc.ext.read_f32(a, 64).unwrap(), vec![9.0; 64]);
+        soc.resident_compacted(a + 256);
+        assert_eq!(soc.resident_mark(), a + 256);
+        assert_eq!(soc.resident_free_bytes(), 0, "compaction drops the stale free list");
+        // the allocator continues from the compacted watermark
+        let c = soc.alloc_resident(64).unwrap();
+        assert_eq!(c, a + 256);
+    }
+
+    #[test]
+    fn scratch_slot_round_trips() {
+        let mut soc = Soc::new(SocConfig::default());
+        assert!(!soc.has_scratch());
+        assert!(soc.take_scratch().is_none());
+        soc.put_scratch(Box::new(vec![1.0f32, 2.0]));
+        assert!(soc.has_scratch());
+        let s = soc.take_scratch().unwrap().downcast::<Vec<f32>>().unwrap();
+        assert_eq!(*s, vec![1.0, 2.0]);
+        assert!(!soc.has_scratch());
     }
 
     #[test]

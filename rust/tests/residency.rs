@@ -1,0 +1,194 @@
+//! Residency invariants under churn: the DRAM-budgeted catalog never
+//! exceeds its budget, compaction round-trips every live byte, and
+//! register→evict→register loops keep the watermark flat (seeded
+//! in-repo property harness, no artifacts needed).
+
+use std::sync::Arc;
+use xr_npe::models::compile::compile;
+use xr_npe::models::graph::{Layer, LayerKind, ModelGraph, Shape};
+use xr_npe::models::{
+    compact_resident, random_weights, CompiledModel, ResidencyManager, ResidentImage,
+};
+use xr_npe::npe::PrecSel;
+use xr_npe::quant::PrecisionPlan;
+use xr_npe::soc::{Soc, SocConfig};
+use xr_npe::util::proptest::{self, Config, Draw};
+
+fn fc_model(name: &str, k: usize, n: usize, sel: PrecSel, seed: u64) -> Arc<CompiledModel> {
+    let g = ModelGraph {
+        name: name.into(),
+        input: Shape::vec(k),
+        layers: vec![Layer { name: "fc".into(), kind: LayerKind::Fc { in_f: k, out_f: n } }],
+    };
+    let w = random_weights(&g, seed);
+    let plan = PrecisionPlan::uniform(sel, &g.compute_layer_params());
+    Arc::new(compile(&g, &w, &plan).unwrap())
+}
+
+fn as_image(m: &Arc<CompiledModel>) -> Arc<dyn ResidentImage> {
+    Arc::clone(m) as Arc<dyn ResidentImage>
+}
+
+/// Occupied resident bytes: live spans below the watermark.
+fn occupancy(soc: &Soc) -> u64 {
+    soc.resident_mark() - soc.resident_free_bytes()
+}
+
+#[test]
+fn resident_usage_never_exceeds_budget_under_random_churn() {
+    // (a) random admit (dispatch) churn over a 5-model catalog on a
+    // budget that holds ~2 of them: accounting AND the device's actual
+    // occupancy stay under the budget after every operation, every
+    // admissible model admits successfully, and a warmed model always
+    // serves the same bits as a fresh big-DRAM reference.
+    proptest::run(Config { cases: 8, seed: 0xD0D0 }, |rng, case| {
+        let sel = PrecSel::ALL[rng.usize_in(0, 3)];
+        let mut soc = Soc::new(SocConfig { dram_bytes: 1 << 15, ..Default::default() });
+        let budget = soc.resident_limit(); // 24576
+        let mut mgr = ResidencyManager::lru(budget);
+        let shapes = [(64usize, 32usize), (48, 40), (32, 24), (64, 48), (16, 56)];
+        let models: Vec<Arc<CompiledModel>> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(k, n))| {
+                fc_model(&format!("m{i}"), k, n, sel, 1000 + case as u64 * 8 + i as u64)
+            })
+            .collect();
+        // reference outputs on an unconstrained device
+        let inputs: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|&(k, _)| (0..k).map(|j| ((j * 7 + case as usize) as f32 * 0.11).sin()).collect())
+            .collect();
+        let want: Vec<Vec<f32>> = models
+            .iter()
+            .zip(&inputs)
+            .map(|(m, x)| {
+                let mut big = Soc::new(SocConfig::default());
+                m.replay(&mut big, x, &[]).unwrap().0
+            })
+            .collect();
+        for _ in 0..40 {
+            let i = rng.usize_in(0, models.len() - 1);
+            match mgr.admit(&mut soc, &as_image(&models[i])) {
+                Ok(()) => {
+                    let (got, _) = models[i].replay(&mut soc, &inputs[i], &[]).unwrap();
+                    assert_eq!(got, want[i], "model {i} diverged under churn");
+                }
+                Err(e) => panic!("every model fits the budget alone, admit failed: {e}"),
+            }
+            assert!(
+                mgr.warm_bytes(&soc) <= budget,
+                "accounted warm bytes exceed the budget"
+            );
+            assert!(
+                occupancy(&soc) <= budget,
+                "device occupancy {} exceeds budget {}",
+                occupancy(&soc),
+                budget
+            );
+        }
+        let s = mgr.stats();
+        assert!(s.resident_high_water <= budget);
+        assert_eq!(s.cold_warms, s.evictions + mgr_warm_count(&mgr, &soc, &models));
+    });
+}
+
+/// Models currently warm (by device ground truth).
+fn mgr_warm_count(_mgr: &ResidencyManager, soc: &Soc, models: &[Arc<CompiledModel>]) -> u64 {
+    models.iter().filter(|m| soc.has_model_state(m.uid())).count() as u64
+}
+
+#[test]
+fn compaction_round_trips_every_live_image_hash() {
+    // (b) random evict subsets then compact: every surviving weight
+    // image's bytes hash identically at the relocated addresses, the
+    // free list drains, and serving stays bit-identical.
+    proptest::run(Config { cases: 8, seed: 0xFEED }, |rng, case| {
+        let sel = PrecSel::ALL[rng.usize_in(0, 3)];
+        let mut soc = Soc::new(SocConfig::default());
+        let models: Vec<Arc<CompiledModel>> = (0..4)
+            .map(|i| {
+                let k = 16 * (1 + rng.usize_in(0, 3));
+                let n = 8 * (1 + rng.usize_in(0, 5));
+                fc_model(&format!("m{i}"), k, n, sel, 2000 + case as u64 * 4 + i as u64)
+            })
+            .collect();
+        for m in &models {
+            m.ensure_warm(&mut soc).unwrap();
+        }
+        // evict a random (possibly empty) strict subset
+        let survivors: Vec<&Arc<CompiledModel>> =
+            models.iter().filter(|_| rng.coin(0.6)).collect();
+        for m in &models {
+            if !survivors.iter().any(|s| s.uid() == m.uid()) {
+                m.evict(&mut soc);
+            }
+        }
+        let live: Vec<Arc<dyn ResidentImage>> =
+            survivors.iter().copied().map(as_image).collect();
+        let hash = |soc: &Soc, img: &Arc<dyn ResidentImage>| -> u64 {
+            let mut h = 0xcbf29ce484222325u64; // FNV-1a
+            for &(a, l) in &img.live_blocks(soc) {
+                for &b in soc.ext.read(a, l).unwrap() {
+                    h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+                }
+            }
+            h
+        };
+        let before: Vec<u64> = live.iter().map(|img| hash(&soc, img)).collect();
+        compact_resident(&mut soc, &live);
+        assert_eq!(soc.resident_free_bytes(), 0, "compaction must drain the free list");
+        let after: Vec<u64> = live.iter().map(|img| hash(&soc, img)).collect();
+        assert_eq!(before, after, "live image bytes must survive relocation");
+        for m in &survivors {
+            let x: Vec<f32> = (0..m.input_len).map(|j| (j as f32 * 0.07).sin()).collect();
+            let mut fresh = Soc::new(SocConfig::default());
+            let (want, wrep) = m.replay(&mut fresh, &x, &[]).unwrap();
+            let (got, grep) = m.replay(&mut soc, &x, &[]).unwrap();
+            assert_eq!(got, want, "compacted model diverged");
+            assert_eq!(grep, wrep, "compaction must not change cost accounting");
+        }
+    });
+}
+
+#[test]
+fn register_evict_register_loops_keep_the_watermark_flat() {
+    // (c) refresh churn over >2 models: repeatedly replacing each
+    // catalog slot with a same-shape recompile never grows the
+    // watermark past the initial full-catalog peak (extends the PR-3
+    // single-model regression to a rotating multi-model catalog).
+    let mut soc = Soc::new(SocConfig::default());
+    let budget = soc.resident_limit();
+    let mut mgr = ResidencyManager::lru(budget);
+    let shapes = [(64usize, 32usize), (48, 40), (32, 24)];
+    let mut models: Vec<Arc<CompiledModel>> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(k, n))| fc_model(&format!("m{i}"), k, n, PrecSel::Posit8x2, 3000 + i as u64))
+        .collect();
+    for m in &models {
+        mgr.admit(&mut soc, &as_image(m)).unwrap();
+    }
+    let peak = soc.resident_mark();
+    for round in 0u64..6 {
+        for (i, &(k, n)) in shapes.iter().enumerate() {
+            // replace slot i: evict + drop the old, compile + admit new
+            mgr.remove(&mut soc, models[i].uid());
+            models[i] =
+                fc_model(&format!("m{i}"), k, n, PrecSel::Posit8x2, 4000 + round * 3 + i as u64);
+            mgr.admit(&mut soc, &as_image(&models[i])).unwrap();
+            assert!(
+                soc.resident_mark() <= peak,
+                "round {round} slot {i}: watermark {} grew past the peak {peak}",
+                soc.resident_mark()
+            );
+        }
+        // the whole refreshed catalog still serves
+        for m in &models {
+            let x: Vec<f32> = (0..m.input_len).map(|j| (j as f32 * 0.05).sin()).collect();
+            m.replay(&mut soc, &x, &[]).unwrap();
+        }
+    }
+    assert_eq!(mgr.catalog_len(), 3);
+    assert_eq!(mgr.stats().evictions, 0, "everything fits — churn must not force evictions");
+}

@@ -1,0 +1,430 @@
+//! Deterministic perf-trajectory gate for CI.
+//!
+//! The benches emit JSONL trajectory records (`BENCH_*.json`) mixing
+//! host wall-clock numbers (noisy, machine-dependent) with **simulated**
+//! cycle/byte fields that are exact functions of the code — the same on
+//! every host. This gate compares only the simulated fields of the
+//! current run against the committed `BENCH_baseline.json` ratchet and
+//! fails CI when any of them regress (more cycles / more bytes).
+//! Wall-clock fields stay informational.
+//!
+//! A *simulated* field is one whose key starts with `sim_` or contains
+//! `cycles`/`bytes`. Records pair up by their `section` field.
+//!
+//! Bootstrapping: a baseline value of `null` (or a missing key/section)
+//! means "ratchet not yet armed" — the gate adopts the observed value,
+//! writes the filled-in file to `BENCH_baseline.proposed.json` (uploaded
+//! as a CI artifact) and passes; committing that file over
+//! `BENCH_baseline.json` arms the gate. Improvements print a reminder to
+//! ratchet the baseline down the same way.
+//!
+//! ```bash
+//! cargo run --release --bin bench_gate -- BENCH_baseline.json BENCH_hotpath.json
+//! ```
+//!
+//! Exit codes: 0 = no regression, 1 = regression, 2 = usage/parse error.
+//! The gate only compares like-for-like runs: CI runs the benches in
+//! `XR_NPE_BENCH_QUICK=1` mode, so the committed baseline records
+//! quick-mode values (the gated fields are chosen to be identical in
+//! quick and full runs).
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Flat JSON scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+}
+
+/// One JSONL record, key order preserved for faithful re-serialization.
+pub type Record = Vec<(String, Value)>;
+
+fn get<'a>(r: &'a Record, key: &str) -> Option<&'a Value> {
+    r.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+fn set(r: &mut Record, key: &str, v: Value) {
+    match r.iter_mut().find(|(k, _)| k == key) {
+        Some(slot) => slot.1 = v,
+        None => r.push((key.to_string(), v)),
+    }
+}
+
+/// Parse one flat JSON object (strings, numbers, booleans, null).
+pub fn parse_record(line: &str) -> Result<Record, String> {
+    let mut cs = line.trim().chars().peekable();
+    let err = |m: &str| format!("{m} in: {line}");
+    if cs.next() != Some('{') {
+        return Err(err("expected '{'"));
+    }
+    let mut rec = Record::new();
+    loop {
+        while cs.peek().is_some_and(|c| c.is_whitespace()) {
+            cs.next();
+        }
+        match cs.peek() {
+            Some('}') => {
+                cs.next();
+                break;
+            }
+            Some('"') => {}
+            _ => return Err(err("expected key or '}'")),
+        }
+        let key = parse_string(&mut cs).ok_or_else(|| err("bad key string"))?;
+        while cs.peek().is_some_and(|c| c.is_whitespace()) {
+            cs.next();
+        }
+        if cs.next() != Some(':') {
+            return Err(err("expected ':'"));
+        }
+        while cs.peek().is_some_and(|c| c.is_whitespace()) {
+            cs.next();
+        }
+        let val = match cs.peek() {
+            Some('"') => Value::Str(parse_string(&mut cs).ok_or_else(|| err("bad string"))?),
+            Some('t') => {
+                for want in "true".chars() {
+                    if cs.next() != Some(want) {
+                        return Err(err("bad literal"));
+                    }
+                }
+                Value::Bool(true)
+            }
+            Some('f') => {
+                for want in "false".chars() {
+                    if cs.next() != Some(want) {
+                        return Err(err("bad literal"));
+                    }
+                }
+                Value::Bool(false)
+            }
+            Some('n') => {
+                for want in "null".chars() {
+                    if cs.next() != Some(want) {
+                        return Err(err("bad literal"));
+                    }
+                }
+                Value::Null
+            }
+            _ => {
+                let mut num = String::new();
+                while cs
+                    .peek()
+                    .is_some_and(|&c| c.is_ascii_digit() || "+-.eE".contains(c))
+                {
+                    num.push(cs.next().unwrap());
+                }
+                Value::Num(num.parse::<f64>().map_err(|_| err("bad number"))?)
+            }
+        };
+        rec.push((key, val));
+        while cs.peek().is_some_and(|c| c.is_whitespace()) {
+            cs.next();
+        }
+        match cs.next() {
+            Some(',') => continue,
+            Some('}') => break,
+            _ => return Err(err("expected ',' or '}'")),
+        }
+    }
+    Ok(rec)
+}
+
+fn parse_string(cs: &mut std::iter::Peekable<std::str::Chars>) -> Option<String> {
+    if cs.next() != Some('"') {
+        return None;
+    }
+    let mut out = String::new();
+    loop {
+        match cs.next()? {
+            '"' => return Some(out),
+            '\\' => match cs.next()? {
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                'u' => {
+                    let hex: String = (0..4).filter_map(|_| cs.next()).collect();
+                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    out.push(char::from_u32(code)?);
+                }
+                c => out.push(c),
+            },
+            c => out.push(c),
+        }
+    }
+}
+
+/// Parse a JSONL file (one flat object per non-empty line).
+pub fn parse_jsonl(text: &str) -> Result<Vec<Record>, String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(parse_record)
+        .collect()
+}
+
+/// Is `key` a host-independent simulated metric (gated) rather than a
+/// wall-clock one (informational)?
+pub fn is_sim_key(key: &str) -> bool {
+    key.starts_with("sim_") || key.contains("cycles") || key.contains("bytes")
+}
+
+/// Gate outcome.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    /// `section.key: baseline -> current` lines for every regression.
+    pub regressions: Vec<String>,
+    /// Improvements (current strictly better) — ratchet candidates.
+    pub improvements: Vec<String>,
+    /// Un-armed fields adopted from the current run.
+    pub pending: Vec<String>,
+    /// Baseline records with pending values filled in (commit to arm).
+    pub proposed: Vec<Record>,
+}
+
+/// Compare the simulated fields of `current` against `baseline`.
+pub fn gate(baseline: &[Record], current: &[Record]) -> GateReport {
+    let mut report = GateReport { proposed: baseline.to_vec(), ..Default::default() };
+    let mut index: HashMap<String, usize> = HashMap::new();
+    for (i, rec) in report.proposed.iter().enumerate() {
+        if let Some(Value::Str(s)) = get(rec, "section") {
+            index.insert(s.clone(), i);
+        }
+    }
+    for cur in current {
+        let Some(Value::Str(section)) = get(cur, "section") else { continue };
+        let slot = match index.get(section) {
+            Some(&i) => i,
+            None => {
+                // new bench section: adopt its sim fields wholesale
+                let mut rec = Record::new();
+                set(&mut rec, "section", Value::Str(section.clone()));
+                report.proposed.push(rec);
+                let i = report.proposed.len() - 1;
+                index.insert(section.clone(), i);
+                i
+            }
+        };
+        for (key, val) in cur {
+            if !is_sim_key(key) {
+                continue;
+            }
+            let Value::Num(c) = val else { continue };
+            match get(&report.proposed[slot], key) {
+                Some(Value::Num(b)) => {
+                    if *c > *b {
+                        report
+                            .regressions
+                            .push(format!("{section}.{key}: baseline {b} -> current {c}"));
+                    } else if *c < *b {
+                        report
+                            .improvements
+                            .push(format!("{section}.{key}: baseline {b} -> current {c}"));
+                    }
+                }
+                Some(Value::Null) | None => {
+                    report.pending.push(format!("{section}.{key} = {c}"));
+                    set(&mut report.proposed[slot], key, Value::Num(*c));
+                }
+                _ => {}
+            }
+        }
+    }
+    report
+}
+
+/// Serialize records back to JSONL.
+pub fn to_jsonl(records: &[Record]) -> String {
+    let mut out = String::new();
+    for rec in records {
+        out.push('{');
+        for (i, (k, v)) in rec.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{k}\":");
+            match v {
+                Value::Num(n) => {
+                    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                        let _ = write!(out, "{}", *n as i64);
+                    } else {
+                        let _ = write!(out, "{n}");
+                    }
+                }
+                Value::Str(s) => {
+                    let _ = write!(out, "\"{s}\"");
+                }
+                Value::Bool(b) => {
+                    let _ = write!(out, "{b}");
+                }
+                Value::Null => out.push_str("null"),
+            }
+        }
+        out.push_str("}\n");
+    }
+    out
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() < 2 {
+        eprintln!("usage: bench_gate <BENCH_baseline.json> <BENCH_current.json>...");
+        std::process::exit(2);
+    }
+    let read = |path: &str| -> String {
+        std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("bench_gate: cannot read {path}: {e}");
+            std::process::exit(2);
+        })
+    };
+    let parse = |path: &str| -> Vec<Record> {
+        parse_jsonl(&read(path)).unwrap_or_else(|e| {
+            eprintln!("bench_gate: {path}: {e}");
+            std::process::exit(2);
+        })
+    };
+    let baseline = parse(&args[0]);
+    let mut current = Vec::new();
+    for path in &args[1..] {
+        current.extend(parse(path));
+    }
+    let report = gate(&baseline, &current);
+    for line in &report.pending {
+        println!("PENDING  {line}   (ratchet not yet armed)");
+    }
+    for line in &report.improvements {
+        println!("IMPROVED {line}   (consider ratcheting the baseline)");
+    }
+    for line in &report.regressions {
+        println!("REGRESSED {line}");
+    }
+    if !report.pending.is_empty() {
+        let proposed = to_jsonl(&report.proposed);
+        match std::fs::write("BENCH_baseline.proposed.json", &proposed) {
+            Ok(()) => println!(
+                "wrote BENCH_baseline.proposed.json — commit it over BENCH_baseline.json \
+                 to arm the ratchet for {} field(s)",
+                report.pending.len()
+            ),
+            Err(e) => eprintln!("bench_gate: cannot write proposed baseline: {e}"),
+        }
+    }
+    if report.regressions.is_empty() {
+        println!(
+            "bench gate OK: {} section(s) checked, {} pending, {} improved",
+            current.len(),
+            report.pending.len(),
+            report.improvements.len()
+        );
+    } else {
+        eprintln!(
+            "bench gate FAILED: {} simulated metric(s) regressed vs BENCH_baseline.json",
+            report.regressions.len()
+        );
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(cycles: f64) -> Vec<Record> {
+        parse_jsonl(&format!(
+            "{{\"section\":\"compiled_vs_interpreted\",\"sim_cycles_per_req\":{cycles}}}\n\
+             {{\"section\":\"sharded_vs_whole_serving\",\"reduce_cycles_per_req\":500}}\n"
+        ))
+        .unwrap()
+    }
+
+    fn cur(cycles: f64) -> Vec<Record> {
+        parse_jsonl(&format!(
+            "{{\"bench\":\"hotpath\",\"section\":\"compiled_vs_interpreted\",\
+             \"interpreted_ns_per_req\":99.5,\"speedup\":3.1,\
+             \"sim_cycles_per_req\":{cycles}}}\n\
+             {{\"section\":\"sharded_vs_whole_serving\",\"reduce_cycles_per_req\":500}}\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_flat_jsonl() {
+        let recs = parse_jsonl(
+            "{\"a\":1,\"b\":\"x\",\"c\":true,\"d\":null,\"e\":-2.5e3}\n\n{\"f\":0}\n",
+        )
+        .unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(get(&recs[0], "a"), Some(&Value::Num(1.0)));
+        assert_eq!(get(&recs[0], "b"), Some(&Value::Str("x".into())));
+        assert_eq!(get(&recs[0], "c"), Some(&Value::Bool(true)));
+        assert_eq!(get(&recs[0], "d"), Some(&Value::Null));
+        assert_eq!(get(&recs[0], "e"), Some(&Value::Num(-2500.0)));
+        assert!(parse_jsonl("{\"unterminated\":").is_err());
+    }
+
+    #[test]
+    fn sim_key_predicate() {
+        assert!(is_sim_key("sim_cycles_per_req"));
+        assert!(is_sim_key("reduce_cycles_per_req"));
+        assert!(is_sim_key("sim_resident_high_water"));
+        assert!(is_sim_key("fetch_bytes"));
+        assert!(!is_sim_key("speedup"));
+        assert!(!is_sim_key("interpreted_ns_per_req"));
+        assert!(!is_sim_key("whole_req_per_s"));
+    }
+
+    #[test]
+    fn matching_run_passes() {
+        let r = gate(&base(1000.0), &cur(1000.0));
+        assert!(r.regressions.is_empty() && r.pending.is_empty() && r.improvements.is_empty());
+    }
+
+    #[test]
+    fn gate_fails_on_seeded_regression() {
+        // the acceptance check: perturb one baseline number below the
+        // observed value — the gate must flag exactly that field
+        let r = gate(&base(999.0), &cur(1000.0));
+        assert_eq!(r.regressions.len(), 1, "{:?}", r.regressions);
+        assert!(r.regressions[0].contains("sim_cycles_per_req"));
+        assert!(r.regressions[0].contains("999"));
+        // ...and reverting the perturbation passes again
+        assert!(gate(&base(1000.0), &cur(1000.0)).regressions.is_empty());
+    }
+
+    #[test]
+    fn improvement_passes_and_suggests_ratchet() {
+        let r = gate(&base(1001.0), &cur(1000.0));
+        assert!(r.regressions.is_empty());
+        assert_eq!(r.improvements.len(), 1);
+    }
+
+    #[test]
+    fn null_baseline_adopts_and_proposes() {
+        let baseline =
+            parse_jsonl("{\"section\":\"compiled_vs_interpreted\",\"sim_cycles_per_req\":null}\n")
+                .unwrap();
+        let r = gate(&baseline, &cur(1234.0));
+        assert!(r.regressions.is_empty());
+        // sim_cycles adopted from null; the sharded section (absent from
+        // the baseline) is adopted wholesale
+        assert_eq!(r.pending.len(), 2, "{:?}", r.pending);
+        let txt = to_jsonl(&r.proposed);
+        assert!(txt.contains("\"sim_cycles_per_req\":1234"), "{txt}");
+        assert!(txt.contains("\"reduce_cycles_per_req\":500"), "{txt}");
+        // the proposed file is a fully-armed baseline
+        let rearmed = parse_jsonl(&txt).unwrap();
+        assert!(gate(&rearmed, &cur(1234.0)).pending.is_empty());
+    }
+
+    #[test]
+    fn wall_clock_fields_are_ignored() {
+        // host-speed fields differ wildly between runs: never gated
+        let mut c = cur(1000.0);
+        set(&mut c[0], "interpreted_ns_per_req", Value::Num(1.0e9));
+        set(&mut c[0], "speedup", Value::Num(0.01));
+        assert!(gate(&base(1000.0), &c).regressions.is_empty());
+    }
+}
