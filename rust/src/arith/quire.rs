@@ -179,6 +179,7 @@ impl Quire {
     /// Inverse of [`Quire::to_spill_bytes`]. Panics on a short slice —
     /// the spill image is sized by the caller.
     pub fn from_spill_bytes(b: &[u8]) -> Quire {
+        // xr_lint: allow(no-panic) -- documented contract: the caller sizes the spill image (QUIRE_SPILL_BYTES)
         let acc = i128::from_le_bytes(b[..16].try_into().expect("quire spill: short slice"));
         let f = b[16];
         Quire::from_raw(acc, f & 1 != 0, f & 2 != 0, f & 4 != 0)

@@ -68,7 +68,8 @@ impl PrecTable {
                 pos_vals.push(v);
             }
         }
-        pos_vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: the candidate values are finite by construction
+        pos_vals.sort_by(|a, b| a.total_cmp(b));
         pos_vals.dedup();
         let pos_enc: Vec<u32> = pos_vals.iter().map(|&v| prec.encode(v)).collect();
         let neg = match prec {
@@ -180,7 +181,12 @@ static CACHE: OnceLock<Mutex<HashMap<Precision, &'static PrecTable>>> = OnceLock
 /// intentionally: one per precision per process, used for the entire run.
 pub fn table(prec: Precision) -> &'static PrecTable {
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut map = cache.lock().unwrap();
+    // clear poisoning: the map only ever grows with leaked statics, so
+    // it is consistent even if a panicking thread held the lock
+    let mut map = match cache.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
     if let Some(t) = map.get(&prec) {
         return t;
     }

@@ -445,6 +445,7 @@ impl MatrixArray {
                     })
                 })
                 .collect();
+            // xr_lint: allow(no-panic) -- a scoped gemm-worker panic is deliberately re-raised on the caller thread
             handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
         });
 
@@ -457,6 +458,7 @@ impl MatrixArray {
         for ch in chunk_results {
             report.merge(&ch.report);
             for buf in &ch.outs {
+                // xr_lint: allow(no-panic) -- the schedule produced exactly one result buffer per tile
                 let tile = tile_iter.next().expect("tile/result count mismatch");
                 scatter_tile(&mut out, tile, buf);
             }
@@ -532,6 +534,7 @@ impl MatrixArray {
                     })
                 })
                 .collect();
+            // xr_lint: allow(no-panic) -- a scoped gemm-worker panic is deliberately re-raised on the caller thread
             handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
         });
 
@@ -541,6 +544,7 @@ impl MatrixArray {
         for ch in chunk_results {
             report.merge(&ch.report);
             for buf in &ch.outs {
+                // xr_lint: allow(no-panic) -- the schedule produced exactly one result buffer per tile
                 let tile = tile_iter.next().expect("tile/result count mismatch");
                 scatter_tile_quires(&mut out, tile, buf);
             }

@@ -55,10 +55,7 @@ impl FrameBatcher {
 
     /// Release a batch if policy allows at `now`.
     pub fn poll(&mut self, now: u64) -> Option<Batch> {
-        if self.queue.is_empty() {
-            return None;
-        }
-        let oldest = self.queue.front().unwrap().arrived;
+        let oldest = self.queue.front()?.arrived;
         if self.queue.len() >= self.max_batch || now.saturating_sub(oldest) >= self.deadline_cycles
         {
             let take = self.queue.len().min(self.max_batch);

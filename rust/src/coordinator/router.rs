@@ -22,7 +22,7 @@
 use super::batcher::Batch;
 use super::scheduler::ModelInstance;
 use crate::models::residency::{residency_lock, ResidencyManager, ResidencyStats, ResidentImage};
-use crate::models::{shard, ExecReport, ShardedModel};
+use crate::models::{shard, verify_program, verify_shard_plan, ExecReport, ShardedModel};
 use crate::serve::{
     device_lock, AutoscaleConfig, Autoscaler, Completion, CycleAutoscaler, Job, JobPayload,
     RuntimeMetrics, ServeRuntime, WorkQueue,
@@ -86,6 +86,14 @@ pub struct RuntimeConfig {
     /// least recently dispatched unpinned model(s) and re-warms, with
     /// live compaction when the free list fragments.
     pub resident_budget: Option<usize>,
+    /// Warm-affinity dispatch for whole-model kinds (default on). Only
+    /// engages when the round-robin target's catalog **rotates**
+    /// (combined footprint over budget): the dispatch then prefers an
+    /// active replica whose manager believes the model is already warm,
+    /// saving the evict → re-warm churn of landing on a cold one. The
+    /// round-robin cursor still advances one step per request, and an
+    /// under-budget fleet keeps exact round-robin placement.
+    pub warm_affinity: bool,
 }
 
 impl Default for RuntimeConfig {
@@ -95,6 +103,7 @@ impl Default for RuntimeConfig {
             warm_floor: 1,
             autoscale: AutoscaleConfig::default(),
             resident_budget: None,
+            warm_affinity: true,
         }
     }
 }
@@ -135,6 +144,7 @@ impl ShardedEntry {
             |si, gemm_idx, a| {
                 let (tx, rx) = crate::serve::completion();
                 let job = Job {
+                    // xr_lint: allow(wall-clock) -- queue-latency metrics are explicitly host wall-clock; sim time lives in service_cycles
                     enqueued: Instant::now(),
                     payload: JobPayload::Partial {
                         shard: Arc::clone(&self.shards[si]),
@@ -178,6 +188,7 @@ impl CoordinatorPool {
                 let q = Arc::clone(&queue);
                 std::thread::Builder::new()
                     .name(format!("xr-npe-coord-{i}"))
+                    // xr_lint: allow(spawn-fence) -- every task is wrapped in catch_unwind by the submitter before enqueue
                     .spawn(move || {
                         // tasks are panic-fenced by the submitter (the
                         // same catch_unwind fence the spawned path had)
@@ -185,6 +196,7 @@ impl CoordinatorPool {
                             task();
                         }
                     })
+                    // xr_lint: allow(no-panic) -- thread-spawn failure at pool construction is unrecoverable by design
                     .expect("spawn coordinator pool thread")
             })
             .collect();
@@ -225,6 +237,8 @@ pub struct Router {
     /// Checkpoint for [`ServeRuntime::service_cycle_samples_since`].
     fed_cycle_samples: u64,
     warm_floor: usize,
+    /// Warm-affinity dispatch toggle ([`RuntimeConfig::warm_affinity`]).
+    warm_affinity: bool,
     /// Active count last steered explicitly (autoscaler tick or
     /// [`Router::set_active`]); registration warms
     /// `max(warm_floor, steered)` so a scaled-up fleet never pays
@@ -268,6 +282,7 @@ impl Router {
             fed_samples: 0,
             fed_cycle_samples: 0,
             warm_floor: rt.warm_floor.clamp(1, n_replicas),
+            warm_affinity: rt.warm_affinity,
             steered_active: None,
             next_replica: 0,
             sharded_inflight: Arc::new((Mutex::new(0), Condvar::new())),
@@ -298,6 +313,12 @@ impl Router {
     }
 
     fn register_whole(&mut self, kind: WorkloadKind, inst: Arc<ModelInstance>) -> Result<()> {
+        // tier-1 static verification: prove the compiled program's
+        // resident layout, gather bounds and activation chain are safe
+        // *before* it can touch any replica's catalog or DRAM. The
+        // typed `VerifyError` stays downcastable through anyhow.
+        let limit = device_lock(self.runtime.soc(0)).resident_limit();
+        verify_program(&inst.compiled, limit)?;
         let image: Arc<dyn ResidentImage> = Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
         let needed = image.warm_footprint_bytes() as u64;
         let n_rep = self.runtime.n_replicas();
@@ -412,6 +433,16 @@ impl Router {
         }
         let shards: Vec<Arc<ShardedModel>> =
             shard(&inst.compiled, n_shards)?.into_iter().map(Arc::new).collect();
+        // tier-1 static verification of the parent program AND the
+        // freshly planned shard set — K/N coverage, alignment, slice
+        // dims, reduction costs and per-shard layouts are all proven
+        // before any replica's catalog or DRAM changes. The parent is
+        // checked without a staging limit: a sharded model's whole
+        // program never warms on one replica (that's the point of
+        // sharding) — only the per-shard footprints face the limit.
+        let limit = device_lock(self.runtime.soc(0)).resident_limit();
+        verify_program(&inst.compiled, u64::MAX)?;
+        verify_shard_plan(&inst.compiled, &shards, limit)?;
         // DRAM-budget placement against **post-eviction** budgets: the
         // heaviest shard goes to the replica that could free the most
         // resident budget, and so on down the ranks (the final K-shard
@@ -529,9 +560,44 @@ impl Router {
         }
     }
 
+    /// Choose the serving replica for one whole-model dispatch. Strict
+    /// round-robin over the active set by default; when warm affinity
+    /// is enabled **and** the round-robin target's catalog rotates
+    /// (combined footprint over budget), the dispatch prefers an active
+    /// replica whose manager believes `uid` is already warm — a cold
+    /// landing on a rotating catalog costs an evict → re-warm cycle.
+    /// The cursor advances exactly one step per request either way, so
+    /// affinity never changes the placement of an under-budget fleet
+    /// (the round-robin differentials stay exact) and traffic keeps
+    /// probing forward when no warm home exists.
+    fn pick_replica(&mut self, uid: u64) -> usize {
+        let rr = self.next_replica % self.active;
+        self.next_replica = (rr + 1) % self.active;
+        if !self.warm_affinity {
+            return rr;
+        }
+        {
+            let mgr = residency_lock(&self.residency[rr]);
+            if mgr.catalog_bytes() <= mgr.budget() || mgr.warm_hint(uid) {
+                return rr;
+            }
+        }
+        // the round-robin target would have to rotate for this model —
+        // scan the rest of the active set for a believed-warm home
+        for off in 1..self.active {
+            let cand = (rr + off) % self.active;
+            if residency_lock(&self.residency[cand]).warm_hint(uid) {
+                return cand;
+            }
+        }
+        rr
+    }
+
     /// Submit one request to the runtime; returns immediately with a
     /// completion handle. Whole-model kinds round-robin over the active
-    /// replica set (same-replica requests serialize in FIFO order); a
+    /// replica set (same-replica requests serialize in FIFO order),
+    /// with warm-affinity refinement on rotating catalogs
+    /// ([`RuntimeConfig::warm_affinity`]); a
     /// sharded kind serves through a per-request coordinator that
     /// scatters each layer to the shard-holding replicas and reduces the
     /// partial quires — shard replicas receive their partial jobs
@@ -547,8 +613,8 @@ impl Router {
         };
         match entry {
             ModelEntry::Whole(inst) => {
-                let replica = self.next_replica % self.active;
-                self.next_replica = (replica + 1) % self.active;
+                let inst = Arc::clone(inst);
+                let replica = self.pick_replica(inst.compiled.uid());
                 // in-flight pin: from dispatch to job completion the
                 // model cannot be an eviction victim on its replica
                 let image: Arc<dyn ResidentImage> =
@@ -556,10 +622,11 @@ impl Router {
                 residency_lock(&self.residency[replica]).pin_image(&image);
                 let (tx, rx) = crate::serve::completion();
                 let job = Job {
+                    // xr_lint: allow(wall-clock) -- queue-latency metrics are explicitly host wall-clock; sim time lives in service_cycles
                     enqueued: Instant::now(),
                     payload: JobPayload::Infer {
                         kind,
-                        inst: Arc::clone(inst),
+                        inst,
                         input,
                         aux,
                         residency: Some(Arc::clone(&self.residency[replica])),
@@ -577,7 +644,13 @@ impl Router {
                 let se = Arc::clone(se);
                 let rt = Arc::clone(&self.runtime);
                 let gate = Arc::clone(&self.sharded_inflight);
-                *gate.0.lock().unwrap() += 1;
+                {
+                    let mut n = match gate.0.lock() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    *n += 1;
+                }
                 let (tx, rx) = crate::serve::completion();
                 let task: Box<dyn FnOnce() + Send> = Box::new(move || {
                     // panic-fenced like the replica workers: a dying
@@ -662,6 +735,7 @@ impl Router {
             residency_lock(&self.residency[replica]).pin_image(&image);
             let (tx, rx) = crate::serve::completion();
             let job = Job {
+                // xr_lint: allow(wall-clock) -- queue-latency metrics are explicitly host wall-clock; sim time lives in service_cycles
                 enqueued: Instant::now(),
                 payload: JobPayload::Infer {
                     kind,
@@ -794,6 +868,7 @@ impl Router {
                     .collect();
                 handles
                     .into_iter()
+                    // xr_lint: allow(no-panic) -- a scoped-thread panic is re-raised here on purpose; the outer catch_unwind fence contains it
                     .map(|h| h.join().expect("replica worker panicked"))
                     .collect::<Vec<Result<Vec<(usize, RoutedResult)>>>>()
             })
@@ -814,6 +889,7 @@ impl Router {
             }
         }
         *self.served.entry(kind).or_insert(0) += reqs.len() as u64;
+        // xr_lint: allow(no-panic) -- the buckets partition 0..reqs.len(), so every slot is filled
         Ok(slots.into_iter().map(|r| r.expect("missing batch result")).collect())
     }
 
@@ -849,9 +925,15 @@ impl Router {
     /// scattered.
     pub fn quiesce(&self) {
         let (lock, cv) = &*self.sharded_inflight;
-        let mut n = lock.lock().unwrap();
+        let mut n = match lock.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
         while *n > 0 {
-            n = cv.wait(n).unwrap();
+            n = match cv.wait(n) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
         }
         drop(n);
         self.runtime.quiesce();
@@ -1590,5 +1672,79 @@ mod tests {
         r.autoscale_tick();
         let after_idle = r.autoscale_tick();
         assert_eq!(after_idle, 1, "idle runtime must park to the floor");
+    }
+
+    #[test]
+    fn warm_affinity_evicts_less_than_round_robin_on_a_rotating_catalog() {
+        // the satellite regression: two replicas whose 24576-byte budget
+        // fits exactly ONE of two 21056-byte models, serving A,A,B,B
+        // traffic. Pure round-robin lands every second request on a
+        // replica holding the other model (evict + re-warm each time);
+        // warm affinity routes repeats to the replica that already holds
+        // the model and provably thrashes less. route() blocks per
+        // request, so both runs are deterministic.
+        let run = |affinity: bool| -> u64 {
+            let cfg = SocConfig { dram_bytes: 1 << 15, ..Default::default() };
+            let rt = RuntimeConfig { warm_affinity: affinity, ..Default::default() };
+            let mut r = Router::with_runtime(2, cfg, rt);
+            r.register(WorkloadKind::Gaze, fc_inst("a", 64, 80, PrecSel::Posit8x2, 400))
+                .unwrap();
+            r.register(WorkloadKind::Vio, fc_inst("b", 64, 80, PrecSel::Posit8x2, 401))
+                .unwrap();
+            let input: Vec<f32> = (0..64).map(|j| (j as f32 * 0.17).sin() * 0.4).collect();
+            for _ in 0..4 {
+                for kind in [
+                    WorkloadKind::Gaze,
+                    WorkloadKind::Gaze,
+                    WorkloadKind::Vio,
+                    WorkloadKind::Vio,
+                ] {
+                    r.route(kind, &input, &[]).unwrap();
+                }
+            }
+            r.runtime_metrics().evictions
+        };
+        let rr = run(false);
+        let affine = run(true);
+        assert!(
+            affine < rr,
+            "warm affinity must thrash less than round-robin: {affine} vs {rr} evictions"
+        );
+    }
+
+    #[test]
+    fn registration_statically_rejects_a_corrupt_program() {
+        use crate::models::VerifyError;
+        let mut r = Router::new(1, SocConfig::default());
+        let mut inst = fc_inst("corrupt", 64, 32, PrecSel::Posit8x2, 410);
+        // corrupt the compiled program after the fact: an undersized
+        // A-operand scratch span would let replay write past its span
+        Arc::get_mut(&mut inst.compiled).unwrap().a_len = 1;
+        let err = r.register(WorkloadKind::Gaze, inst).unwrap_err();
+        let v = err.downcast_ref::<VerifyError>().expect("typed VerifyError through anyhow");
+        assert!(matches!(v, VerifyError::SpanOverlap { .. }), "got {v:?}");
+        // rejected before any catalog or DRAM mutation
+        assert!(!r.has(WorkloadKind::Gaze));
+        assert_eq!(r.replica_resident(0), (0, 0), "no resident DRAM may be touched");
+        // the router stays fully usable
+        r.register(WorkloadKind::Gaze, fc_inst("good", 64, 32, PrecSel::Posit8x2, 411))
+            .unwrap();
+        assert_eq!(r.route(WorkloadKind::Gaze, &vec![0.1; 64], &[]).unwrap().output.len(), 32);
+    }
+
+    #[test]
+    fn sharded_registration_statically_verifies_the_shard_set() {
+        // the happy path exercises verify_shard_plan on every sharded
+        // registration; a corrupt parent *program* also fails the
+        // registration's verification before placement
+        use crate::models::VerifyError;
+        let mut r = Router::new(2, SocConfig::default());
+        let mut inst = fc_inst("corrupt", 64, 150, PrecSel::Posit8x2, 412);
+        Arc::get_mut(&mut inst.compiled).unwrap().c_len = 1;
+        let err = r.register_sharded(WorkloadKind::Vio, inst, 2).unwrap_err();
+        assert!(err.downcast_ref::<VerifyError>().is_some(), "typed VerifyError: {err}");
+        assert!(!r.has(WorkloadKind::Vio));
+        assert_eq!(r.replica_resident(0), (0, 0));
+        assert_eq!(r.replica_resident(1), (0, 0));
     }
 }

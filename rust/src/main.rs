@@ -188,6 +188,7 @@ fn serve(args: &[String]) -> Result<()> {
     println!("== async serving runtime — {requests} gaze requests over {replicas} replicas ==");
     println!("   (warm floor 1: replicas beyond the floor warm on demand at first dispatch)");
     let mut batcher = FrameBatcher::new(8, (clock / 90.0 / 2.0) as u64);
+    // xr_lint: allow(wall-clock) -- CLI demo prints host wall time on purpose
     let t0 = std::time::Instant::now();
     let rep = serve_with_batcher_async(&mut router, WorkloadKind::Gaze, &mut batcher, arrivals)?;
     let wall = t0.elapsed();

@@ -125,6 +125,18 @@ impl GatherMap {
         GatherMap { rows: oh * ow, cols, idx }
     }
 
+    /// The raw index table (verifier access: bounds are checked against
+    /// the live activation extent without copying the map).
+    pub(crate) fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// Build a map from raw parts — only for the verifier's seeded
+    /// corruption tests; `for_conv` is the one production constructor.
+    pub(crate) fn from_raw(rows: usize, cols: usize, idx: Vec<u32>) -> GatherMap {
+        GatherMap { rows, cols, idx }
+    }
+
     /// Fill `dst` (resized to rows×cols) with the gathered patch matrix.
     pub fn gather(&self, src: &[f32], dst: &mut Matrix) {
         dst.rows = self.rows;
@@ -592,11 +604,27 @@ impl CompiledModel {
         input: &[f32],
         aux: &[f32],
     ) -> Result<(Vec<f32>, ExecReport)> {
+        // the static verifier is the registration-time gate; re-assert it
+        // in debug builds on first warm so a program that dodged the
+        // router (tests, examples, direct replay) is still checked before
+        // its first DRAM write
+        #[cfg(debug_assertions)]
+        if !soc.has_model_state(self.uid) {
+            let checked = super::verify::verify_program(self, soc.resident_limit());
+            debug_assert!(
+                checked.is_ok(),
+                "replay of unverifiable program `{}`: {:?}",
+                self.name,
+                checked.err()
+            );
+        }
         self.ensure_warm(soc)?;
         let mut arena = soc
             .take_model_state(self.uid)
+            // xr_lint: allow(no-panic) -- ensure_warm installed the state two lines up
             .expect("warmed above")
             .downcast::<Arena>()
+            // xr_lint: allow(no-panic) -- uids are globally unique (NEXT_UID)
             .expect("model-state uid collision");
         // the replica-wide shared run scratch, grown to this model
         let mut scratch = soc
@@ -1186,6 +1214,12 @@ impl ShardedModel {
         self.uid
     }
 
+    /// Scratch extents `(a_len, q_len)` in elements/slots — the
+    /// verifier re-derives the warm layout from these.
+    pub(crate) fn scratch_lens(&self) -> (usize, usize) {
+        (self.a_len, self.q_len)
+    }
+
     /// Resident f32 weight-slice footprint in bytes.
     pub fn resident_bytes(&self) -> usize {
         self.steps.iter().map(|s| s.weight.data.len() * 4).sum()
@@ -1281,8 +1315,10 @@ impl ShardedModel {
         // worker panic can never drop the arena (the sole record of the
         // resident spans and cache pins).
         let (w_addr, a_addr, q_addr) = {
+            // xr_lint: allow(no-panic) -- ensure_warm installed the state above
             let state = soc.take_model_state(self.uid).expect("warmed above");
             let arena =
+                // xr_lint: allow(no-panic) -- uids are globally unique (NEXT_UID)
                 state.downcast_ref::<ShardArena>().expect("shard-state uid collision");
             let addrs = (arena.w_addrs[gemm_idx], arena.a_addr, arena.q_addr);
             soc.put_model_state(self.uid, state);

@@ -145,16 +145,18 @@ impl ModelGraph {
     /// Shapes at every layer boundary (len = layers + 1, starting with
     /// the input).
     pub fn shapes(&self) -> Vec<Shape> {
-        let mut out = vec![self.input];
+        let mut out = Vec::with_capacity(self.layers.len() + 1);
+        let mut cur = self.input;
+        out.push(cur);
         for l in &self.layers {
-            let next = l.kind.out_shape(*out.last().unwrap());
-            out.push(next);
+            cur = l.kind.out_shape(cur);
+            out.push(cur);
         }
         out
     }
 
     pub fn out_shape(&self) -> Shape {
-        *self.shapes().last().unwrap()
+        self.layers.iter().fold(self.input, |s, l| l.kind.out_shape(s))
     }
 
     /// Total trainable parameters.

@@ -17,6 +17,10 @@
 //!   a per-replica [`residency::ResidencyManager`] (pluggable LRU
 //!   eviction, pin-aware, live compaction) so a replica rotates a large
 //!   catalog instead of growing resident memory monotonically.
+//! * [`verify`] — tier-1 static verification: [`verify::verify_program`]
+//!   proves a compiled program's resident layout, gather bounds and
+//!   activation chain are safe before any DRAM write; the router calls
+//!   it on every registration path.
 //! * [`effnet`] / [`gaze`] / [`ulvio`] — the EfficientNet-style
 //!   classifier, the eye-gaze regressor and the UL-VIO-lite odometry
 //!   net. Weight layouts match `python/compile/model.py` exactly
@@ -30,6 +34,7 @@ pub mod graph;
 pub mod mlp;
 pub mod residency;
 pub mod ulvio;
+pub mod verify;
 
 pub use compile::{
     compile, reduction_cost, shard, CompileError, CompiledModel, GatherMap, ShardError,
@@ -41,6 +46,7 @@ pub use residency::{
     compact_resident, residency_lock, Candidate, EvictionPolicy, LruPolicy, ResidencyError,
     ResidencyManager, ResidencyStats, ResidentImage,
 };
+pub use verify::{verify_program, verify_shard_plan, ProgramProof, VerifyError};
 
 /// He-initialized random weight map for a graph (bias zero, PACT α = 4)
 /// — the one init shared by CLI demos, benches and tests that exercise

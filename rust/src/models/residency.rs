@@ -33,6 +33,7 @@
 
 use super::compile::{CompiledModel, ShardedModel};
 use crate::soc::{Soc, SocError};
+use crate::util::lockdep::{lock_tracked, LockClass, Tracked};
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -119,12 +120,11 @@ impl ResidentImage for ShardedModel {
 
 /// Take a residency-manager lock, clearing poisoning (mirror of
 /// [`crate::serve::device_lock`] — a contained worker panic must not
-/// turn into a poisoned-lock cascade).
-pub fn residency_lock(m: &Mutex<ResidencyManager>) -> MutexGuard<'_, ResidencyManager> {
-    match m.lock() {
-        Ok(g) => g,
-        Err(poisoned) => poisoned.into_inner(),
-    }
+/// turn into a poisoned-lock cascade). Tracked at
+/// [`LockClass::Residency`]: debug builds assert the replica device
+/// lock is never acquired *after* this guard on the same thread.
+pub fn residency_lock(m: &Mutex<ResidencyManager>) -> Tracked<MutexGuard<'_, ResidencyManager>> {
+    lock_tracked(m, LockClass::Residency)
 }
 
 /// One eviction candidate as seen by the policy: a **warm, unpinned**
@@ -215,6 +215,11 @@ struct Entry {
     last_use: u64,
     /// Eviction protection: in-flight dispatch pins + coordinator pins.
     pins: u32,
+    /// Manager's belief about warmness, maintained on admit/evict so the
+    /// router's warm-affinity dispatch can probe it **without** the
+    /// device lock. A hint only — warmness ground truth stays on the
+    /// device ([`ResidentImage::is_warm`]) and admission re-derives it.
+    warm_hint: bool,
 }
 
 /// Per-replica DRAM-budgeted model catalog with policy-driven eviction
@@ -266,6 +271,21 @@ impl ResidencyManager {
         self.entries.len()
     }
 
+    /// Total budgeted footprint of the catalog (warm **and** cold
+    /// entries) — the router's warm-affinity gate: when this exceeds
+    /// the budget, the replica is rotating models and placement starts
+    /// to matter.
+    pub fn catalog_bytes(&self) -> u64 {
+        self.entries.values().map(|e| e.bytes).sum()
+    }
+
+    /// Does the manager believe `uid` is warm here? Lock-free of the
+    /// device — see [`Entry::warm_hint`] for the (benign) ways this can
+    /// lag ground truth.
+    pub fn warm_hint(&self, uid: u64) -> bool {
+        self.entries.get(&uid).is_some_and(|e| e.warm_hint)
+    }
+
     /// Budgeted footprint of the models currently warm on `soc`.
     pub fn warm_bytes(&self, soc: &Soc) -> u64 {
         self.entries.values().filter(|e| e.image.is_warm(soc)).map(|e| e.bytes).sum()
@@ -293,6 +313,7 @@ impl ResidencyManager {
             image,
             last_use: 0,
             pins: 0,
+            warm_hint: false,
         });
     }
 
@@ -352,8 +373,12 @@ impl ResidencyManager {
             });
         }
         self.insert(Arc::clone(image));
-        self.entries.get_mut(&uid).expect("inserted above").last_use = clock;
-        if image.is_warm(soc) {
+        let warm = image.is_warm(soc);
+        if let Some(e) = self.entries.get_mut(&uid) {
+            e.last_use = clock;
+            e.warm_hint = warm;
+        }
+        if warm {
             return Ok(());
         }
         // policy-driven eviction until the budgeted warm set fits
@@ -370,11 +395,11 @@ impl ResidencyManager {
             // candidate list (a pinned or cold uid) would either evict
             // a pinned model or spin this loop forever — treat it as a
             // refusal instead
-            let victim = match pick {
-                Some(v) if candidates.iter().any(|c| c.uid == v) => self.entries.get(&v),
+            let victim_uid = match pick {
+                Some(v) if candidates.iter().any(|c| c.uid == v) => Some(v),
                 _ => None,
             };
-            let Some(victim) = victim else {
+            let Some(victim_uid) = victim_uid else {
                 let pinned: u64 = self
                     .entries
                     .values()
@@ -388,7 +413,11 @@ impl ResidencyManager {
                     pinned,
                 });
             };
-            victim.image.evict(soc);
+            // the candidate check above proves the entry exists
+            if let Some(victim) = self.entries.get_mut(&victim_uid) {
+                victim.image.evict(soc);
+                victim.warm_hint = false;
+            }
             self.stats.evictions += 1;
         }
         // warm; a fragmented free list — or the sub-64-byte alignment
@@ -400,6 +429,9 @@ impl ResidencyManager {
         if image.ensure_warm(soc).is_err() {
             self.compact(soc);
             image.ensure_warm(soc)?;
+        }
+        if let Some(e) = self.entries.get_mut(&uid) {
+            e.warm_hint = true;
         }
         self.stats.cold_warms += 1;
         let now = self.warm_bytes(soc);
@@ -448,6 +480,7 @@ pub fn compact_resident(soc: &mut Soc, images: &[Arc<dyn ResidentImage>]) -> u64
         let dst = top.next_multiple_of(64);
         debug_assert!(dst <= addr, "compaction must only move blocks down");
         if dst != addr && len > 0 {
+            // xr_lint: allow(no-panic) -- dst <= addr is proven by the ascending sort, so the move can only fail on a simulator bug
             soc.move_resident(addr, dst, len).expect("compaction move stays in bounds");
         }
         new_addrs[ii][bi] = dst;
@@ -647,6 +680,23 @@ mod tests {
                 assert_eq!(got, want, "{sel:?}: model {i} diverged after compaction");
             }
         }
+    }
+
+    #[test]
+    fn warm_hint_tracks_admissions_and_evictions() {
+        let mut soc = small_soc();
+        let mut mgr = ResidencyManager::lru(soc.resident_limit());
+        let a = fc_model("a", 64, 32, PrecSel::Posit8x2, 40); // 8576
+        let b = fc_model("b", 64, 80, PrecSel::Posit8x2, 41); // 21056
+        assert!(!mgr.warm_hint(a.uid()), "unknown uid is never hinted warm");
+        mgr.admit(&mut soc, &as_image(&a)).unwrap();
+        assert!(mgr.warm_hint(a.uid()));
+        assert_eq!(mgr.catalog_bytes(), 8576);
+        // 8576 + 21056 > 24576 → admitting b evicts a
+        mgr.admit(&mut soc, &as_image(&b)).unwrap();
+        assert!(!mgr.warm_hint(a.uid()), "evicted victim's hint must clear");
+        assert!(mgr.warm_hint(b.uid()));
+        assert_eq!(mgr.catalog_bytes(), 8576 + 21056, "cold entries still count");
     }
 
     #[test]

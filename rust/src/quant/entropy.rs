@@ -68,7 +68,7 @@ impl EntropyQuant {
         }
         let w_norm: Vec<f64> = w.iter().map(|&x| x as f64 / k).collect();
         let mut sorted = w_norm.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let pct = |p: f64| -> f64 {
             let i = ((sorted.len() - 1) as f64 * p).round() as usize;
             sorted[i]

@@ -94,7 +94,7 @@ pub fn plan(
     }
     // promotion order: highest cost_low first
     let mut order: Vec<usize> = (0..sens.len()).collect();
-    order.sort_by(|&a, &b| sens[b].cost_low.partial_cmp(&sens[a].cost_low).unwrap());
+    order.sort_by(|&a, &b| sens[b].cost_low.total_cmp(&sens[a].cost_low));
     // repeatedly promote the most sensitive promotable layer while the
     // average stays within budget
     loop {

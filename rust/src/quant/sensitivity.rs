@@ -92,7 +92,7 @@ pub fn analyze_layers(weights: &[Vec<f32>], grads: &[Vec<f32>]) -> Vec<LayerSens
 /// Layers ordered most-precision-hungry first.
 pub fn rank_layers(sens: &[LayerSensitivity]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..sens.len()).collect();
-    idx.sort_by(|&a, &b| sens[b].cost_low.partial_cmp(&sens[a].cost_low).unwrap());
+    idx.sort_by(|&a, &b| sens[b].cost_low.total_cmp(&sens[a].cost_low));
     idx
 }
 

@@ -120,13 +120,11 @@ mod pjrt_client {
                 .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?;
             for e in entries {
                 let p = e?.path();
+                // a path ending in ".hlo.txt" always has a file name,
+                // but stay total: skip anything else
+                let Some(fname) = p.file_name() else { continue };
+                let name = fname.to_string_lossy().trim_end_matches(".hlo.txt").to_string();
                 if p.to_string_lossy().ends_with(".hlo.txt") {
-                    let name = p
-                        .file_name()
-                        .unwrap()
-                        .to_string_lossy()
-                        .trim_end_matches(".hlo.txt")
-                        .to_string();
                     paths.insert(name, p);
                 }
             }

@@ -9,7 +9,7 @@
 //! of hanging.
 
 use std::fmt;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// The job backing this completion was dropped without producing a
 /// value (runtime shut down before the job ran).
@@ -36,6 +36,17 @@ struct Inner<T> {
     cv: Condvar,
 }
 
+/// Lock a completion slot, clearing poisoning: the slot is a single
+/// enum replaced atomically under the lock, so it is consistent even
+/// after a panicking holder — and a worker panic must surface as
+/// [`Canceled`] to the waiter, not as a poisoned-lock panic cascade.
+fn lock_slot<T>(m: &Mutex<Slot<T>>) -> MutexGuard<'_, Slot<T>> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 /// Producer half: fulfilled exactly once by the worker that ran the job.
 pub struct CompletionSender<T> {
     inner: Option<Arc<Inner<T>>>,
@@ -56,7 +67,7 @@ impl<T> CompletionSender<T> {
     /// Deliver the value and wake the waiter.
     pub fn fulfill(mut self, value: T) {
         if let Some(inner) = self.inner.take() {
-            *inner.slot.lock().unwrap() = Slot::Ready(value);
+            *lock_slot(&inner.slot) = Slot::Ready(value);
             inner.cv.notify_all();
         }
     }
@@ -65,7 +76,7 @@ impl<T> CompletionSender<T> {
 impl<T> Drop for CompletionSender<T> {
     fn drop(&mut self) {
         if let Some(inner) = self.inner.take() {
-            let mut slot = inner.slot.lock().unwrap();
+            let mut slot = lock_slot(&inner.slot);
             if matches!(*slot, Slot::Pending) {
                 *slot = Slot::Canceled;
                 inner.cv.notify_all();
@@ -77,14 +88,14 @@ impl<T> Drop for CompletionSender<T> {
 impl<T> Completion<T> {
     /// Has the value (or a cancellation) arrived? Non-blocking.
     pub fn is_ready(&self) -> bool {
-        !matches!(*self.inner.slot.lock().unwrap(), Slot::Pending)
+        !matches!(*lock_slot(&self.inner.slot), Slot::Pending)
     }
 
     /// Take the value if it already arrived; `Ok(None)` while pending
     /// — and also after the value was already taken, so a poll loop
     /// that revisits redeemed handles stays safe.
     pub fn try_take(&self) -> Result<Option<T>, Canceled> {
-        let mut slot = self.inner.slot.lock().unwrap();
+        let mut slot = lock_slot(&self.inner.slot);
         match std::mem::replace(&mut *slot, Slot::Taken) {
             Slot::Ready(v) => Ok(Some(v)),
             Slot::Pending => {
@@ -103,14 +114,17 @@ impl<T> Completion<T> {
     /// was already removed by [`Completion::try_take`] reports
     /// [`Canceled`] — the value is gone and will never arrive here.
     pub fn wait(self) -> Result<T, Canceled> {
-        let mut slot = self.inner.slot.lock().unwrap();
+        let mut slot = lock_slot(&self.inner.slot);
         loop {
             match std::mem::replace(&mut *slot, Slot::Taken) {
                 Slot::Ready(v) => return Ok(v),
                 Slot::Canceled | Slot::Taken => return Err(Canceled),
                 Slot::Pending => {
                     *slot = Slot::Pending;
-                    slot = self.inner.cv.wait(slot).unwrap();
+                    slot = match self.inner.cv.wait(slot) {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
                 }
             }
         }

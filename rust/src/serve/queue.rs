@@ -11,7 +11,7 @@
 
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 
 /// Error returned by [`WorkQueue::push`] after [`WorkQueue::close`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,6 +28,25 @@ impl std::error::Error for Closed {}
 struct State<T> {
     items: VecDeque<T>,
     closed: bool,
+}
+
+/// Lock the queue state, clearing poisoning: the state is kept
+/// consistent at every unlock point, and one panicking producer must
+/// not cascade a poisoned-lock panic into every other producer and the
+/// consumer.
+fn lock_state<T>(m: &Mutex<State<T>>) -> MutexGuard<'_, State<T>> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Condvar wait with the same poison-clearing policy as [`lock_state`].
+fn wait_state<'a, T>(cv: &Condvar, g: MutexGuard<'a, State<T>>) -> MutexGuard<'a, State<T>> {
+    match cv.wait(g) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
 }
 
 /// A bounded multi-producer single-consumer queue. Share it via `Arc`.
@@ -53,9 +72,9 @@ impl<T> WorkQueue<T> {
     /// Enqueue, blocking while the queue is full. Fails only after
     /// [`WorkQueue::close`].
     pub fn push(&self, item: T) -> Result<(), Closed> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_state(&self.state);
         while st.items.len() >= self.cap && !st.closed {
-            st = self.not_full.wait(st).unwrap();
+            st = wait_state(&self.not_full, st);
         }
         if st.closed {
             return Err(Closed);
@@ -67,7 +86,7 @@ impl<T> WorkQueue<T> {
 
     /// Enqueue without blocking; hands the item back when full/closed.
     pub fn try_push(&self, item: T) -> Result<(), T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_state(&self.state);
         if st.closed || st.items.len() >= self.cap {
             return Err(item);
         }
@@ -79,7 +98,7 @@ impl<T> WorkQueue<T> {
     /// Dequeue, blocking while empty. `None` means the queue is closed
     /// *and* fully drained — the worker's signal to exit.
     pub fn pop(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_state(&self.state);
         loop {
             if let Some(item) = st.items.pop_front() {
                 self.not_full.notify_one();
@@ -88,27 +107,27 @@ impl<T> WorkQueue<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = wait_state(&self.not_empty, st);
         }
     }
 
     /// Close the queue: producers fail fast, the consumer drains and
     /// exits. Idempotent.
     pub fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_state(&self.state);
         st.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        lock_state(&self.state).closed
     }
 
     /// Items currently queued (racy by nature; for metrics/backlog
     /// inspection only).
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        lock_state(&self.state).items.len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -26,6 +26,7 @@ use crate::coordinator::scheduler::ModelInstance;
 use crate::models::residency::{residency_lock, ResidencyManager, ResidentImage};
 use crate::models::ShardedModel;
 use crate::soc::{JobReport, Soc, SocConfig};
+use crate::util::lockdep::{lock_tracked, LockClass, Tracked};
 use crate::util::Matrix;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -117,12 +118,11 @@ impl std::error::Error for WorkerPanic {}
 /// [`catch_unwind`] and the SoC's warm-state handoff is per-request
 /// (worst case a later request re-warms), so the device stays usable —
 /// a poisoned-lock panic cascade would turn one bad request into a dead
-/// replica.
-pub fn device_lock(soc: &Mutex<Soc>) -> MutexGuard<'_, Soc> {
-    match soc.lock() {
-        Ok(g) => g,
-        Err(poisoned) => poisoned.into_inner(),
-    }
+/// replica. Order-tracked in debug builds ([`LockClass::Device`] is the
+/// outermost rank — never acquire it while holding a residency or
+/// shared lock on the same thread).
+pub fn device_lock(soc: &Mutex<Soc>) -> Tracked<MutexGuard<'_, Soc>> {
+    lock_tracked(soc, LockClass::Device)
 }
 
 /// Latency samples over a bounded sliding window. The serving runtime
@@ -273,11 +273,10 @@ pub struct ReplicaWorker {
 }
 
 /// Take the shared-state lock, clearing poisoning (see [`device_lock`]).
-fn shared_lock(shared: &Shared) -> MutexGuard<'_, SharedState> {
-    match shared.state.lock() {
-        Ok(g) => g,
-        Err(poisoned) => poisoned.into_inner(),
-    }
+/// [`LockClass::Shared`] is the leaf rank: this lock is never held
+/// across a device or residency acquisition.
+fn shared_lock(shared: &Shared) -> Tracked<MutexGuard<'_, SharedState>> {
+    lock_tracked(&shared.state, LockClass::Shared)
 }
 
 /// Account one finished job *before* its completion is fulfilled: a
@@ -325,6 +324,7 @@ impl ReplicaWorker {
                     }
                 }
             })
+            // xr_lint: allow(no-panic) -- thread-spawn failure at runtime construction is unrecoverable by design
             .expect("spawn replica worker");
         ReplicaWorker { id, queue, handle: Some(handle) }
     }
@@ -336,6 +336,7 @@ impl ReplicaWorker {
     fn drain(id: usize, q: &WorkQueue<Job>, soc: &Arc<Mutex<Soc>>, shared: &Shared) {
         while let Some(job) = q.pop() {
             let waited = job.enqueued.elapsed().as_nanos() as u64;
+            // xr_lint: allow(wall-clock) -- RuntimeMetrics is explicitly host wall-clock latency; sim-cycle metrics live in service_cycles
             let t0 = Instant::now();
             match job.payload {
                 JobPayload::Infer { kind, inst, input, aux, residency, done } => {
@@ -482,10 +483,7 @@ impl ServeRuntime {
     pub fn quiesce(&self) {
         let mut st = shared_lock(&self.shared);
         while st.busy > 0 {
-            st = match self.shared.idle.wait(st) {
-                Ok(g) => g,
-                Err(poisoned) => poisoned.into_inner(),
-            };
+            st = st.wait(&self.shared.idle);
         }
     }
 

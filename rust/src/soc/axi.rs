@@ -163,6 +163,7 @@ impl ExternalMem {
         let bytes = self.read(addr, count * 4)?;
         Ok(bytes
             .chunks_exact(4)
+            // xr_lint: allow(no-panic) -- chunks_exact(4) yields 4-byte slices; the conversion is infallible
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }

@@ -47,6 +47,7 @@ impl Tensor {
         match self.dims.len() {
             1 => crate::util::Matrix::from_vec(1, self.dims[0], self.data.clone()),
             2 => crate::util::Matrix::from_vec(self.dims[0], self.dims[1], self.data.clone()),
+            // xr_lint: allow(no-panic) -- documented contract: as_matrix is only defined for 1-D/2-D tensors
             n => panic!("as_matrix on {n}-D tensor"),
         }
     }
@@ -107,6 +108,7 @@ pub fn load_tensors(path: impl AsRef<Path>) -> Result<TensorMap> {
         let mut buf = vec![0u8; total * 4];
         f.read_exact(&mut buf)?;
         for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            // xr_lint: allow(no-panic) -- chunks_exact(4) yields 4-byte slices; the conversion is infallible
             data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
         }
         if out.insert(name.clone(), Tensor::new(dims, data)).is_some() {

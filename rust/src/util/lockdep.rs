@@ -1,0 +1,241 @@
+//! Debug-build lock-order tracking — the dynamic twin of `xr_lint`'s
+//! static `lock-order` rule.
+//!
+//! The serving stack has a strict lock hierarchy: a replica **device**
+//! lock is always taken before that replica's **residency**-manager
+//! lock, and the runtime's **shared**-state lock is only ever taken on
+//! its own (never while a device or residency lock is held on the same
+//! thread). The static lint can only see orderings within one function
+//! body; this tracker sees the real dynamic nesting across calls. Every
+//! tracked acquisition pushes onto a thread-local stack and asserts —
+//! *before* blocking, so an inversion reports at the attempt instead of
+//! deadlocking first — that no held lock outranks the one being taken.
+//!
+//! Release builds compile all of it away: [`acquire`] returns a
+//! zero-sized token and [`Tracked`] is a transparent newtype over the
+//! guard.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// The lock hierarchy, outermost first. The numeric rank is the rule:
+/// while a lock of rank `r` is held, only locks of rank ≥ `r` may be
+/// acquired on the same thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LockClass {
+    /// A replica's `Mutex<Soc>` (the device lock).
+    Device = 0,
+    /// A replica's `Mutex<ResidencyManager>` (always nested inside the
+    /// same replica's device lock on admission paths).
+    Residency = 1,
+    /// The serve runtime's shared metrics/busy state (leaf — never held
+    /// across a device or residency acquisition).
+    Shared = 2,
+}
+
+#[cfg(debug_assertions)]
+mod imp {
+    use super::LockClass;
+    use std::cell::RefCell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    thread_local! {
+        static HELD: RefCell<Vec<(u64, LockClass)>> = const { RefCell::new(Vec::new()) };
+    }
+
+    static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+    pub fn push(class: LockClass) -> u64 {
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        HELD.with(|held| {
+            let mut held = held.borrow_mut();
+            if let Some(&(_, worst)) = held.iter().max_by_key(|&&(_, c)| c) {
+                assert!(
+                    worst <= class,
+                    "lock-order inversion: acquiring {class:?} while holding {worst:?} \
+                     (hierarchy: Device < Residency < Shared)"
+                );
+            }
+            held.push((id, class));
+        });
+        id
+    }
+
+    pub fn pop(id: u64) {
+        HELD.with(|held| {
+            let mut held = held.borrow_mut();
+            // guards may drop out of acquisition order — remove by id
+            if let Some(at) = held.iter().rposition(|&(i, _)| i == id) {
+                held.remove(at);
+            }
+        });
+    }
+}
+
+/// Proof of a tracked acquisition; dropping it pops the thread-local
+/// stack. Hold it exactly as long as the guard it tracks (that is what
+/// [`Tracked`] does).
+#[derive(Debug)]
+pub struct LockToken {
+    #[cfg(debug_assertions)]
+    id: u64,
+}
+
+/// Record an acquisition of `class`, asserting (debug builds) that it
+/// respects the hierarchy. Call **before** blocking on the mutex so an
+/// inversion reports at the attempt, not as a deadlock.
+pub fn acquire(class: LockClass) -> LockToken {
+    #[cfg(debug_assertions)]
+    {
+        LockToken { id: imp::push(class) }
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        let _ = class;
+        LockToken {}
+    }
+}
+
+impl Drop for LockToken {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        imp::pop(self.id);
+    }
+}
+
+/// A guard paired with its [`LockToken`]. Derefs straight through to
+/// the guarded data, so call sites are unchanged (`&mut tracked`
+/// coerces to `&mut T` exactly like `&mut MutexGuard<T>` does).
+#[derive(Debug)]
+pub struct Tracked<G> {
+    // declaration order is drop order: release the lock, then pop the
+    // tracking stack
+    guard: G,
+    token: LockToken,
+}
+
+impl<G> Tracked<G> {
+    pub fn new(guard: G, token: LockToken) -> Tracked<G> {
+        Tracked { guard, token }
+    }
+}
+
+impl<G: Deref> Deref for Tracked<G> {
+    type Target = G::Target;
+
+    fn deref(&self) -> &G::Target {
+        &self.guard
+    }
+}
+
+impl<G: DerefMut> DerefMut for Tracked<G> {
+    fn deref_mut(&mut self) -> &mut G::Target {
+        &mut self.guard
+    }
+}
+
+impl<'a, T> Tracked<MutexGuard<'a, T>> {
+    /// Block on `cv`, preserving the tracking token across the wait.
+    /// The mutex is released while parked and re-acquired on wake; its
+    /// position in this thread's hierarchy does not change, so the
+    /// token stays valid. Poisoning is cleared like [`lock_tracked`].
+    pub fn wait(self, cv: &Condvar) -> Tracked<MutexGuard<'a, T>> {
+        let Tracked { guard, token } = self;
+        let guard = match cv.wait(guard) {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        Tracked { guard, token }
+    }
+}
+
+/// Acquire `mutex` at `class` with order tracking, clearing poisoning.
+/// One shared body for the repo's three lock helpers: a panic inside a
+/// critical section is always contained by a job fence and the guarded
+/// state is kept per-request consistent, so clearing the poison is the
+/// correct recovery everywhere (a poisoned-lock panic cascade would
+/// turn one bad request into a dead replica).
+pub fn lock_tracked<T>(mutex: &Mutex<T>, class: LockClass) -> Tracked<MutexGuard<'_, T>> {
+    let token = acquire(class);
+    let guard = match mutex.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    Tracked::new(guard, token)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_acquisition_passes() {
+        let dev = Mutex::new(0u32);
+        let res = Mutex::new(1u32);
+        let shr = Mutex::new(2u32);
+        let d = lock_tracked(&dev, LockClass::Device);
+        let r = lock_tracked(&res, LockClass::Residency);
+        assert_eq!(*d + *r, 1);
+        drop(r);
+        drop(d);
+        // a leaf lock on its own is fine at any point
+        let mut s = lock_tracked(&shr, LockClass::Shared);
+        *s += 1;
+        drop(s);
+        // re-descending after release is fine too
+        let d2 = lock_tracked(&dev, LockClass::Device);
+        assert_eq!(*d2, 0);
+    }
+
+    #[test]
+    fn out_of_order_drop_keeps_stack_consistent() {
+        let a = Mutex::new(0u32);
+        let b = Mutex::new(0u32);
+        let ga = lock_tracked(&a, LockClass::Device);
+        let gb = lock_tracked(&b, LockClass::Residency);
+        drop(ga); // dropped before gb — pop-by-id must handle this
+        drop(gb);
+        let _again = lock_tracked(&a, LockClass::Device);
+    }
+
+    #[test]
+    fn same_rank_reacquisition_is_allowed() {
+        // two different residency managers (distinct replicas) at the
+        // same rank — the hierarchy only forbids going *down* in rank
+        let r0 = Mutex::new(0u32);
+        let r1 = Mutex::new(0u32);
+        let g0 = lock_tracked(&r0, LockClass::Residency);
+        let g1 = lock_tracked(&r1, LockClass::Residency);
+        assert_eq!(*g0 + *g1, 0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock-order inversion")]
+    fn inversion_trips_in_debug_builds() {
+        let dev = Mutex::new(0u32);
+        let shr = Mutex::new(0u32);
+        let _s = lock_tracked(&shr, LockClass::Shared);
+        // taking a device lock while holding the shared leaf inverts
+        // the hierarchy — must assert before blocking
+        let _d = lock_tracked(&dev, LockClass::Device);
+    }
+
+    #[test]
+    fn wait_preserves_token() {
+        use std::sync::{Arc, Condvar};
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let waker = std::thread::spawn(move || {
+            let mut ready = lock_tracked(&p2.0, LockClass::Shared);
+            *ready = true;
+            p2.1.notify_all();
+        });
+        let mut g = lock_tracked(&pair.0, LockClass::Shared);
+        while !*g {
+            g = g.wait(&pair.1);
+        }
+        drop(g);
+        waker.join().expect("waker thread");
+    }
+}

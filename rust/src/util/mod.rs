@@ -1,10 +1,12 @@
-//! Small shared utilities: deterministic RNG, dense matrices, tensor IO.
+//! Small shared utilities: deterministic RNG, dense matrices, tensor IO,
+//! and debug-build lock-order tracking ([`lockdep`]).
 //!
 //! Everything in the repo that needs randomness goes through [`Rng`] so
 //! runs are reproducible and the Python build path can mirror the same
 //! streams (same algorithm, same seeds — see `python/compile/datasets.py`).
 
 pub mod io;
+pub mod lockdep;
 pub mod matrix;
 pub mod proptest;
 pub mod rng;

@@ -35,6 +35,7 @@ pub fn run(cfg: Config, mut prop: impl FnMut(&mut Rng, u32)) {
                 .cloned()
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
+            // xr_lint: allow(no-panic) -- a property-test harness reports failure by panicking, like #[test]
             panic!(
                 "property failed at case {case}/{} (seed {:#x}): {msg}",
                 cfg.cases, cfg.seed

@@ -172,6 +172,18 @@ pub fn is_sim_key(key: &str) -> bool {
     key.starts_with("sim_") || key.contains("cycles") || key.contains("bytes")
 }
 
+/// Is the ratchet armed at all? A baseline whose simulated fields are
+/// all `null` (or absent) gates nothing — every comparison falls into
+/// the bootstrap path and the run trivially passes. That state is easy
+/// to ship by accident (e.g. committing the template instead of the
+/// proposed file), so `main` warns about it loudly.
+pub fn baseline_armed(baseline: &[Record]) -> bool {
+    baseline
+        .iter()
+        .flat_map(|rec| rec.iter())
+        .any(|(k, v)| is_sim_key(k) && matches!(v, Value::Num(_)))
+}
+
 /// Gate outcome.
 #[derive(Debug, Default)]
 pub struct GateReport {
@@ -292,6 +304,13 @@ fn main() {
         current.extend(parse(path));
     }
     let report = gate(&baseline, &current);
+    if !baseline_armed(&baseline) {
+        println!(
+            "WARNING  ratchet un-armed (baseline null): {} gates no simulated metrics — \
+             commit BENCH_baseline.proposed.json to arm it",
+            args[0]
+        );
+    }
     for line in &report.pending {
         println!("PENDING  {line}   (ratchet not yet armed)");
     }
@@ -417,6 +436,29 @@ mod tests {
         // the proposed file is a fully-armed baseline
         let rearmed = parse_jsonl(&txt).unwrap();
         assert!(gate(&rearmed, &cur(1234.0)).pending.is_empty());
+    }
+
+    #[test]
+    fn armed_detection_tracks_sim_fields() {
+        // a fully-null baseline gates nothing: un-armed
+        let nulls = parse_jsonl(
+            "{\"section\":\"compiled_vs_interpreted\",\"sim_cycles_per_req\":null}\n\
+             {\"section\":\"sharded_vs_whole_serving\",\"reduce_cycles_per_req\":null}\n",
+        )
+        .unwrap();
+        assert!(!baseline_armed(&nulls));
+        // wall-clock numbers alone don't arm it either
+        let wall = parse_jsonl("{\"section\":\"s\",\"speedup\":3.1,\"sim_cycles_per_req\":null}\n")
+            .unwrap();
+        assert!(!baseline_armed(&wall));
+        // one concrete simulated number arms the gate
+        assert!(baseline_armed(&base(1000.0)));
+        let partial = parse_jsonl(
+            "{\"section\":\"a\",\"sim_cycles_per_req\":null}\n{\"section\":\"b\",\"fetch_bytes\":7}\n",
+        )
+        .unwrap();
+        assert!(baseline_armed(&partial));
+        assert!(!baseline_armed(&[]));
     }
 
     #[test]

@@ -1,0 +1,706 @@
+//! Repo-invariant lint for the XR-NPE source tree.
+//!
+//! A deliberately small, std-only token linter that enforces the
+//! invariants the simulator's determinism and the serving stack's
+//! robustness depend on — things `clippy` has no opinion about:
+//!
+//! * **wall-clock** — `Instant::now` / `SystemTime` must not appear in
+//!   library code. Simulated time lives in `service_cycles`; host time
+//!   sneaking into the model path breaks replay determinism.
+//! * **no-panic** — `.unwrap()` / `.expect(` / `panic!(` / `todo!(` /
+//!   `unimplemented!(` are banned in non-test library code. The serving
+//!   stack holds locks across calls; a stray panic poisons them.
+//!   (`unreachable!`, `assert!`/`debug_assert!` and `.unwrap_or*` are
+//!   fine: the first documents impossibility, the rest don't panic on
+//!   the data path.)
+//! * **spawn-fence** — in `serve/` and `coordinator/` files, every
+//!   thread `spawn(` must have a `catch_unwind` fence nearby (the task
+//!   body or the spawn site), so a worker panic surfaces as an error
+//!   instead of a deadlocked queue.
+//! * **lock-order** — within one function, the first `device_lock`
+//!   acquisition must precede the first `residency_lock`/`shared_lock`
+//!   when both appear. This is the static shadow of the runtime
+//!   lockdep in `util::lockdep` (Device < Residency < Shared).
+//!
+//! Sites where the invariant is deliberately broken carry an inline
+//! waiver on the same line or the line above:
+//!
+//! ```text
+//! // xr_lint: allow(no-panic) -- reason the panic is unreachable/intended
+//! ```
+//!
+//! The reason is mandatory; a bare `allow` is itself reported.
+//!
+//! Findings print as JSONL on stdout. Exit codes: 0 = clean,
+//! 1 = findings, 2 = usage/IO error.
+//!
+//! ```bash
+//! cargo run --release --bin xr_lint            # lints src/
+//! cargo run --release --bin xr_lint -- path/   # lints another tree
+//! ```
+
+use std::path::{Path, PathBuf};
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub file: String,
+    /// 1-indexed line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub token: String,
+    pub message: String,
+}
+
+/// Source text with literals and comments blanked out (newlines kept, so
+/// line/column arithmetic still works), plus the per-line comment text
+/// (where waivers live).
+struct Masked {
+    lines: Vec<String>,
+    comments: Vec<String>,
+}
+
+/// Strip string/char literals (including raw strings `r#"…"#` and byte
+/// strings) and comments (line + nested block) from `src`. Literal and
+/// comment bytes become spaces; everything else passes through.
+fn mask(src: &str) -> Masked {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(n);
+    let mut comments = vec![String::new()];
+    let mut line = 0usize;
+    let mut i = 0usize;
+
+    let mut newline = |out: &mut String, comments: &mut Vec<String>, line: &mut usize| {
+        out.push('\n');
+        comments.push(String::new());
+        *line += 1;
+    };
+
+    while i < n {
+        let c = chars[i];
+        let next = if i + 1 < n { Some(chars[i + 1]) } else { None };
+        // raw (byte) string start: r"…", r#"…"#, br#"…"# — only when the
+        // `r` is not the tail of an identifier
+        let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+        let raw_at = if !prev_ident && c == 'b' && next == Some('r') { Some(i + 1) }
+                     else if !prev_ident && c == 'r' { Some(i) }
+                     else { None };
+        if let Some(r_pos) = raw_at {
+            let mut j = r_pos + 1;
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && chars[j] == '"' {
+                // it is a raw string: blank from i through the closing "##…
+                j += 1;
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if chars[j] == '"'
+                        && j + hashes < n
+                        && chars[j + 1..j + 1 + hashes].iter().all(|&h| h == '#')
+                    {
+                        j += 1 + hashes;
+                        break;
+                    }
+                    j += 1;
+                }
+                for &ch in &chars[i..j.min(n)] {
+                    if ch == '\n' {
+                        newline(&mut out, &mut comments, &mut line);
+                    } else {
+                        out.push(' ');
+                    }
+                }
+                i = j;
+                continue;
+            }
+        }
+        match c {
+            '\n' => {
+                newline(&mut out, &mut comments, &mut line);
+                i += 1;
+            }
+            '/' if next == Some('/') => {
+                while i < n && chars[i] != '\n' {
+                    comments[line].push(chars[i]);
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            '/' if next == Some('*') => {
+                let mut depth = 1usize;
+                out.push_str("  ");
+                i += 2;
+                while i < n && depth > 0 {
+                    if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        depth += 1;
+                        out.push_str("  ");
+                        i += 2;
+                    } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                        depth -= 1;
+                        out.push_str("  ");
+                        i += 2;
+                    } else if chars[i] == '\n' {
+                        newline(&mut out, &mut comments, &mut line);
+                        i += 1;
+                    } else {
+                        comments[line].push(chars[i]);
+                        out.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                out.push(' ');
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' {
+                        out.push(' ');
+                        i += 1;
+                        if i < n {
+                            if chars[i] == '\n' {
+                                newline(&mut out, &mut comments, &mut line);
+                            } else {
+                                out.push(' ');
+                            }
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    if chars[i] == '"' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    }
+                    if chars[i] == '\n' {
+                        newline(&mut out, &mut comments, &mut line);
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // char literal vs lifetime: '\…' or 'x' are literals;
+                // anything else ('a in generics) is a lifetime
+                if next == Some('\\') {
+                    out.push_str("  ");
+                    i += 2;
+                    while i < n && chars[i] != '\'' {
+                        out.push(' ');
+                        i += 1;
+                    }
+                    if i < n {
+                        out.push(' ');
+                        i += 1;
+                    }
+                } else if i + 2 < n && chars[i + 2] == '\'' {
+                    out.push_str("   ");
+                    i += 3;
+                } else {
+                    out.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    Masked { lines: out.lines().map(str::to_string).collect(), comments }
+}
+
+/// Does `line` contain `word` with identifier boundaries on both sides?
+fn contains_word(line: &str, word: &str) -> bool {
+    find_word(line, word).is_some()
+}
+
+/// Byte offset of the first identifier-bounded occurrence of `word`.
+fn find_word(line: &str, word: &str) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut from = 0;
+    while let Some(rel) = line[from..].find(word) {
+        let at = from + rel;
+        let left_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + word.len();
+        let right_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if left_ok && right_ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+/// Waivers parsed from the comment text: `(line, rule)` pairs plus
+/// malformed-waiver findings.
+fn parse_waivers(file: &str, comments: &[String]) -> (Vec<(usize, String)>, Vec<Finding>) {
+    let mut waivers = Vec::new();
+    let mut bad = Vec::new();
+    for (ln, text) in comments.iter().enumerate() {
+        let Some(at) = text.find("xr_lint: allow(") else { continue };
+        let rest = &text[at + "xr_lint: allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            bad.push(Finding {
+                file: file.to_string(),
+                line: ln + 1,
+                rule: "waiver-syntax",
+                token: text.trim().to_string(),
+                message: "unterminated xr_lint: allow(rule)".to_string(),
+            });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let tail = &rest[close + 1..];
+        let reason_ok = tail
+            .find("--")
+            .map(|d| !tail[d + 2..].trim().is_empty())
+            .unwrap_or(false);
+        if !reason_ok {
+            bad.push(Finding {
+                file: file.to_string(),
+                line: ln + 1,
+                rule: "waiver-syntax",
+                token: text.trim().to_string(),
+                message: "waiver needs a reason: xr_lint: allow(rule) -- why".to_string(),
+            });
+            continue;
+        }
+        waivers.push((ln, rule));
+    }
+    (waivers, bad)
+}
+
+/// Per-line "inside a `#[cfg(test)] mod`" flags, via brace depth on the
+/// masked text.
+fn test_regions(lines: &[String]) -> Vec<bool> {
+    let mut skip = vec![false; lines.len()];
+    let mut depth = 0i64;
+    let mut skip_floor: Option<i64> = None;
+    let mut pending_attr = false;
+    for (ln, l) in lines.iter().enumerate() {
+        if skip_floor.is_some() {
+            skip[ln] = true;
+        }
+        let trimmed = l.trim();
+        let is_test_attr = trimmed.contains("#[cfg(") && contains_word(trimmed, "test");
+        if skip_floor.is_none() && is_test_attr {
+            pending_attr = true;
+            skip[ln] = true;
+        }
+        let starts_mod = pending_attr && contains_word(l, "mod");
+        for ch in l.chars() {
+            match ch {
+                '{' => {
+                    if starts_mod && skip_floor.is_none() {
+                        skip_floor = Some(depth);
+                        pending_attr = false;
+                        skip[ln] = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if skip_floor.is_some_and(|f| depth <= f) {
+                        skip_floor = None;
+                        skip[ln] = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        // the attr stuck to a non-mod item (e.g. a cfg-gated fn): treat
+        // the attr as consumed so a later unrelated `mod` isn't skipped
+        if pending_attr && !starts_mod && !trimmed.is_empty() && !trimmed.starts_with("#[") {
+            pending_attr = false;
+        }
+    }
+    skip
+}
+
+/// One acquired-lock event inside a function body.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum LockKind {
+    Device,
+    Other,
+}
+
+/// Lint one file's source text. `file` is the path reported in findings
+/// and also drives the path-scoped rules (spawn-fence).
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let masked = mask(src);
+    let (waivers, mut findings) = parse_waivers(file, &masked.comments);
+    let skip = test_regions(&masked.lines);
+    let waived = |line: usize, rule: &str| {
+        waivers
+            .iter()
+            .any(|(wl, wr)| wr == rule && (*wl == line || *wl + 1 == line))
+    };
+    let fenced_dir = {
+        let p = file.replace('\\', "/");
+        p.contains("/serve/") || p.contains("/coordinator/")
+            || p.starts_with("serve/") || p.starts_with("coordinator/")
+    };
+    let has_catch_unwind_near = |ln: usize| {
+        let lo = ln.saturating_sub(40);
+        let hi = (ln + 60).min(masked.lines.len().saturating_sub(1));
+        masked.lines[lo..=hi].iter().any(|l| contains_word(l, "catch_unwind"))
+    };
+
+    // lock-order state: stack of (fn base depth, first-event kinds seen)
+    let mut depth = 0i64;
+    let mut fn_stack: Vec<(i64, Vec<LockKind>)> = Vec::new();
+    let mut awaiting_body: Option<i64> = None;
+
+    const PANIC_TOKENS: [&str; 5] = [".unwrap()", ".expect(", "panic!(", "todo!(", "unimplemented!("];
+
+    for (ln, l) in masked.lines.iter().enumerate() {
+        if !skip[ln] {
+            // wall-clock
+            for tok in ["Instant::now", "SystemTime"] {
+                if l.contains(tok) && !waived(ln, "wall-clock") {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: ln + 1,
+                        rule: "wall-clock",
+                        token: tok.to_string(),
+                        message: "host wall-clock in library code; simulated time lives in service_cycles"
+                            .to_string(),
+                    });
+                }
+            }
+            // no-panic
+            for tok in PANIC_TOKENS {
+                if l.contains(tok) && !waived(ln, "no-panic") {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: ln + 1,
+                        rule: "no-panic",
+                        token: tok.to_string(),
+                        message: "panicking call in non-test library code".to_string(),
+                    });
+                }
+            }
+            // spawn-fence
+            if fenced_dir && find_word(l, "spawn").is_some_and(|at| l[at + "spawn".len()..].starts_with('('))
+                && !waived(ln, "spawn-fence")
+                && !has_catch_unwind_near(ln)
+            {
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: ln + 1,
+                    rule: "spawn-fence",
+                    token: "spawn(".to_string(),
+                    message: "thread spawn without a catch_unwind fence nearby".to_string(),
+                });
+            }
+            // lock-order events (record in declaration order on the line)
+            if let Some((_, events)) = fn_stack.last_mut() {
+                let mut hits: Vec<(usize, LockKind)> = Vec::new();
+                if let Some(at) = find_word(l, "device_lock") {
+                    hits.push((at, LockKind::Device));
+                }
+                for name in ["residency_lock", "shared_lock"] {
+                    if let Some(at) = find_word(l, name) {
+                        hits.push((at, LockKind::Other));
+                    }
+                }
+                hits.sort_by_key(|&(at, _)| at);
+                for (_, kind) in hits {
+                    events.push(kind);
+                }
+                if events.first() == Some(&LockKind::Other)
+                    && events.contains(&LockKind::Device)
+                    && !waived(ln, "lock-order")
+                {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: ln + 1,
+                        rule: "lock-order",
+                        token: "device_lock".to_string(),
+                        message: "device_lock acquired after residency/shared lock (Device < Residency < Shared)"
+                            .to_string(),
+                    });
+                    // report once per function
+                    events.clear();
+                }
+            }
+            if contains_word(l, "fn") && awaiting_body.is_none() {
+                awaiting_body = Some(depth);
+            }
+        }
+        // depth bookkeeping runs on every line, skipped or not, so the
+        // fn/test-region spans stay consistent
+        for ch in l.chars() {
+            match ch {
+                '{' => {
+                    if let Some(base) = awaiting_body.take() {
+                        fn_stack.push((base, Vec::new()));
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if fn_stack.last().is_some_and(|&(base, _)| depth <= base) {
+                        fn_stack.pop();
+                    }
+                }
+                ';' => {
+                    // trait method declaration: `fn f(...) -> T;` has no body
+                    if awaiting_body.is_some_and(|base| base == depth) {
+                        awaiting_body = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    findings
+}
+
+/// Recursively collect `*.rs` files under `root`, sorted for stable output.
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(root).map_err(|e| format!("read_dir {}: {e}", root.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", root.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(())
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn run(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let rel = path.to_string_lossy().replace('\\', "/");
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(findings)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let root = match args.first() {
+        Some(p) => PathBuf::from(p),
+        // default: the library tree, whether invoked from rust/ or the
+        // repo root
+        None if Path::new("src").is_dir() => PathBuf::from("src"),
+        None => PathBuf::from("rust/src"),
+    };
+    let findings = match run(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("xr_lint: {e}");
+            std::process::exit(2);
+        }
+    };
+    for f in &findings {
+        println!(
+            "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"token\":\"{}\",\"message\":\"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            f.rule,
+            json_escape(&f.token),
+            json_escape(&f.message)
+        );
+    }
+    if findings.is_empty() {
+        eprintln!("xr_lint: clean ({})", root.display());
+    } else {
+        eprintln!("xr_lint: {} finding(s) in {}", findings.len(), root.display());
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn no_panic_fires_on_each_token() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   \x20   let a = x.unwrap();\n\
+                   \x20   let b = x.expect(\"msg\");\n\
+                   \x20   if a == 0 { panic!(\"zero\"); }\n\
+                   \x20   todo!(\"later\");\n\
+                   }\n";
+        let f = lint_source("src/lib.rs", src);
+        assert_eq!(rules(&f), vec!["no-panic"; 4], "{f:?}");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn non_panicking_lookalikes_are_fine() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   \x20   let a = x.unwrap_or(3);\n\
+                   \x20   let b = x.unwrap_or_else(|| 4);\n\
+                   \x20   assert!(a + b > 0);\n\
+                   \x20   match a { 0..=7 => a, _ => unreachable!() }\n\
+                   }\n";
+        assert!(lint_source("src/lib.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_on_line_above_or_same_line_suppresses() {
+        let above = "fn f(x: Option<u32>) -> u32 {\n\
+                     \x20   // xr_lint: allow(no-panic) -- contract: caller checked\n\
+                     \x20   x.unwrap()\n\
+                     }\n";
+        assert!(lint_source("src/lib.rs", above).is_empty());
+        let inline = "fn f(x: Option<u32>) -> u32 {\n\
+                      \x20   x.unwrap() // xr_lint: allow(no-panic) -- contract: caller checked\n\
+                      }\n";
+        assert!(lint_source("src/lib.rs", inline).is_empty());
+    }
+
+    #[test]
+    fn waiver_without_reason_is_reported_and_does_not_suppress() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   \x20   // xr_lint: allow(no-panic)\n\
+                   \x20   x.unwrap()\n\
+                   }\n";
+        let f = lint_source("src/lib.rs", src);
+        assert!(f.iter().any(|x| x.rule == "waiver-syntax"), "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "no-panic"), "{f:?}");
+    }
+
+    #[test]
+    fn wall_clock_fires_outside_tests_only() {
+        let src = "fn f() {\n\
+                   \x20   let t = std::time::Instant::now();\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   fn g() { let t = std::time::Instant::now(); }\n\
+                   }\n";
+        let f = lint_source("src/lib.rs", src);
+        assert_eq!(rules(&f), vec!["wall-clock"]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn tokens_inside_strings_and_comments_are_masked() {
+        let src = "fn f() -> &'static str {\n\
+                   \x20   // this mentions .unwrap() and Instant::now in prose\n\
+                   \x20   \"a string with .unwrap() and panic!( inside\"\n\
+                   }\n";
+        assert!(lint_source("src/lib.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_string_braces_do_not_derail_region_tracking() {
+        // the TEST_HLO hazard: a raw string full of unbalanced braces and
+        // banned tokens, inside a test mod, followed by library code
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   const HLO: &str = r#\"ENTRY main { x.unwrap() } } } {\"#;\n\
+                   \x20   fn g(x: Option<u32>) { x.unwrap(); }\n\
+                   }\n\
+                   fn library(x: Option<u32>) -> u32 {\n\
+                   \x20   x.unwrap()\n\
+                   }\n";
+        let f = lint_source("src/lib.rs", src);
+        assert_eq!(rules(&f), vec!["no-panic"], "{f:?}");
+        assert_eq!(f[0].line, 7);
+    }
+
+    #[test]
+    fn cfg_all_test_regions_are_skipped() {
+        let src = "#[cfg(all(test, feature = \"pjrt\"))]\n\
+                   mod tests {\n\
+                   \x20   fn g(x: Option<u32>) { x.unwrap(); }\n\
+                   }\n";
+        assert!(lint_source("src/lib.rs", src).is_empty());
+    }
+
+    #[test]
+    fn spawn_fence_scoped_to_serving_dirs() {
+        let bare = "fn f() {\n\
+                    \x20   std::thread::spawn(|| {});\n\
+                    }\n";
+        let f = lint_source("src/serve/worker.rs", bare);
+        assert_eq!(rules(&f), vec!["spawn-fence"]);
+        // same code outside serve/ and coordinator/: no finding
+        assert!(lint_source("src/array/morphable.rs", bare).is_empty());
+        // a catch_unwind fence within the window satisfies the rule
+        let fenced = "fn f() {\n\
+                      \x20   let job = || { let _ = std::panic::catch_unwind(|| {}); };\n\
+                      \x20   std::thread::spawn(job);\n\
+                      }\n";
+        assert!(lint_source("src/coordinator/router.rs", fenced).is_empty());
+    }
+
+    #[test]
+    fn lock_order_inversion_is_flagged() {
+        let bad = "fn f(&self) {\n\
+                   \x20   let mgr = residency_lock(&self.residency[0]);\n\
+                   \x20   let soc = device_lock(self.runtime.soc(0));\n\
+                   }\n";
+        let f = lint_source("src/coordinator/router.rs", bad);
+        assert_eq!(rules(&f), vec!["lock-order"], "{f:?}");
+        let good = "fn f(&self) {\n\
+                    \x20   let soc = device_lock(self.runtime.soc(0));\n\
+                    \x20   let mgr = residency_lock(&self.residency[0]);\n\
+                    }\n";
+        assert!(lint_source("src/coordinator/router.rs", good).is_empty());
+        // single-class functions never trip the rule
+        let single = "fn f(&self) {\n\
+                      \x20   let mgr = shared_lock(&self.shared);\n\
+                      }\n";
+        assert!(lint_source("src/serve/worker.rs", single).is_empty());
+    }
+
+    #[test]
+    fn lock_order_is_per_function() {
+        // an Other-first function followed by a Device-using function
+        // must not cross-contaminate
+        let src = "fn a(&self) {\n\
+                   \x20   let mgr = residency_lock(&self.residency[0]);\n\
+                   }\n\
+                   fn b(&self) {\n\
+                   \x20   let soc = device_lock(self.runtime.soc(0));\n\
+                   }\n";
+        assert!(lint_source("src/coordinator/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn json_escape_controls() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}
