@@ -446,6 +446,86 @@ mod tests {
     }
 
     #[test]
+    fn streamed_merge_is_arrival_order_independent() {
+        // The streaming dataflow merges shard partials in completion-
+        // arrival order, not shard order: under ANY permutation of the
+        // partials the merged accumulator, sticky flags, spill image and
+        // final rounding must be bit-identical to the in-order barrier
+        // merge of the same set.
+        let mut rng = crate::util::Rng::new(61);
+        for trial in 0..20 {
+            let n_shards = 2 + (rng.next_u64() % 5) as usize;
+            let parts: Vec<Quire> = (0..n_shards)
+                .map(|_| {
+                    let (_, mut q) =
+                        random_products(&mut rng, 1 + (rng.next_u64() % 48) as usize);
+                    q.inexact = rng.coin(0.2);
+                    q
+                })
+                .collect();
+            let mut in_order = Quire::new();
+            for p in &parts {
+                in_order.merge(p);
+            }
+            // random arrival order (Fisher–Yates)
+            let mut perm: Vec<usize> = (0..n_shards).collect();
+            for i in (1..n_shards).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                perm.swap(i, j);
+            }
+            let mut streamed = Quire::new();
+            for &i in &perm {
+                streamed.merge(&parts[i]);
+            }
+            assert_eq!(streamed.raw(), in_order.raw(), "trial {trial} perm {perm:?}");
+            assert_eq!(
+                (streamed.overflow, streamed.inexact, streamed.nar),
+                (in_order.overflow, in_order.inexact, in_order.nar)
+            );
+            assert_eq!(streamed.to_spill_bytes(), in_order.to_spill_bytes());
+            assert_eq!(
+                streamed.round_to(Precision::Posit8),
+                in_order.round_to(Precision::Posit8)
+            );
+        }
+    }
+
+    #[test]
+    fn quire_matrix_streamed_block_merge_order_independent() {
+        // matrix-level version of the same invariant: K-split partial
+        // images merged full-width in any completion-arrival order
+        // produce the identical merged image and rounded output
+        let mut rng = crate::util::Rng::new(67);
+        let n_shards = 4usize;
+        let images: Vec<QuireMatrix> = (0..n_shards)
+            .map(|_| {
+                let data: Vec<Quire> = (0..6).map(|_| random_products(&mut rng, 8).1).collect();
+                QuireMatrix::from_vec(2, 3, data)
+            })
+            .collect();
+        let mut in_order = QuireMatrix::zeros(2, 3);
+        for im in &images {
+            in_order.merge_block(0, im);
+        }
+        for seed in [71u64, 73, 79] {
+            let mut rng2 = crate::util::Rng::new(seed);
+            let mut perm: Vec<usize> = (0..n_shards).collect();
+            for i in (1..n_shards).rev() {
+                let j = (rng2.next_u64() % (i as u64 + 1)) as usize;
+                perm.swap(i, j);
+            }
+            let mut streamed = QuireMatrix::zeros(2, 3);
+            for &i in &perm {
+                streamed.merge_block(0, &images[i]);
+            }
+            for (s, w) in streamed.data.iter().zip(&in_order.data) {
+                assert_eq!(s.raw(), w.raw(), "perm {perm:?}");
+            }
+            assert_eq!(streamed.round_to(Precision::Fp32), in_order.round_to(Precision::Fp32));
+        }
+    }
+
+    #[test]
     fn single_shard_merge_is_identity() {
         let mut rng = crate::util::Rng::new(47);
         let (_, whole) = random_products(&mut rng, 40);

@@ -22,12 +22,16 @@
 use super::batcher::Batch;
 use super::scheduler::ModelInstance;
 use crate::models::residency::{residency_lock, ResidencyManager, ResidencyStats, ResidentImage};
-use crate::models::{shard, verify_program, verify_shard_plan, ExecReport, ShardedModel};
+use crate::models::{
+    shard, verify_program, verify_shard_plan, ExecReport, PartialOut, ShardChannel, ShardFlow,
+    ShardedModel,
+};
 use crate::serve::{
-    device_lock, AutoscaleConfig, Autoscaler, Completion, CycleAutoscaler, Job, JobPayload,
-    RuntimeMetrics, ServeRuntime, WorkQueue,
+    device_lock, AutoscaleConfig, Autoscaler, Completion, CompletionSet, CycleAutoscaler, Job,
+    JobPayload, RuntimeMetrics, ServeRuntime, WorkQueue,
 };
 use crate::soc::{JobReport, SocConfig};
+use crate::util::Matrix;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -128,40 +132,64 @@ pub struct ShardedEntry {
     replicas: Vec<usize>,
 }
 
+/// The router's [`ShardChannel`]: `dispatch` enqueues a partial-GEMM
+/// job on the owning shard replica's bounded work queue (the workers
+/// execute concurrently), `wait_any` drains **whichever** outstanding
+/// partial completes first through a [`CompletionSet`] — the streaming
+/// engine merges in true completion-arrival order instead of joining
+/// shard 0 first.
+struct RuntimeShardChannel<'a> {
+    entry: &'a ShardedEntry,
+    rt: &'a ServeRuntime,
+    set: CompletionSet<Result<(PartialOut, JobReport)>>,
+}
+
+impl ShardChannel for RuntimeShardChannel<'_> {
+    fn dispatch(&mut self, si: usize, gemm_idx: usize, a: Matrix, s_a: f64) -> Result<()> {
+        let done = self.set.sender(si);
+        let job = Job {
+            // xr_lint: allow(wall-clock) -- queue-latency metrics are explicitly host wall-clock; sim time lives in service_cycles
+            enqueued: Instant::now(),
+            payload: JobPayload::Partial {
+                shard: Arc::clone(&self.entry.shards[si]),
+                gemm_idx,
+                a,
+                s_a,
+                done,
+            },
+        };
+        if self.rt.dispatch(self.entry.replicas[si], job).is_err() {
+            bail!("serving runtime is shut down");
+        }
+        Ok(())
+    }
+
+    fn wait_any(&mut self) -> Result<(usize, PartialOut, JobReport)> {
+        match self.set.wait_any() {
+            None => bail!("wait_any with no partial GEMM in flight"),
+            Some((si, Ok(Ok((part, rep))))) => Ok((si, part, rep)),
+            Some((_, Ok(Err(e)))) => Err(e),
+            Some((_, Err(canceled))) => Err(canceled.into()),
+        }
+    }
+}
+
 impl ShardedEntry {
-    /// Serve one request: scatter each layer's partial GEMMs to the
-    /// shard replicas (they execute concurrently on the per-replica
-    /// workers), join the completions, reduce quires, feed the next
-    /// layer. Values are bit-identical to whole-model serving
-    /// ([`crate::models::CompiledModel::run_sharded`]); `replica` in the
-    /// result is the first shard's home (the reduction runs at the
-    /// coordinator).
+    /// Serve one request through the streaming pipeline: each layer's
+    /// partial GEMMs stream out to the shard replicas within the
+    /// in-flight window and their partials merge in completion-arrival
+    /// order ([`crate::models::CompiledModel::run_sharded`] under
+    /// [`ShardFlow::Streaming`]). Values are bit-identical to
+    /// whole-model serving; `replica` in the result is the first
+    /// shard's home (the merge runs at the coordinator).
     fn serve(&self, rt: &ServeRuntime, input: Vec<f32>, aux: Vec<f32>) -> Result<RoutedResult> {
+        let mut ch = RuntimeShardChannel { entry: self, rt, set: CompletionSet::new() };
         let (output, report) = self.inst.compiled.run_sharded(
             &self.shards,
             &input,
             &aux,
-            |si, gemm_idx, a| {
-                let (tx, rx) = crate::serve::completion();
-                let job = Job {
-                    // xr_lint: allow(wall-clock) -- queue-latency metrics are explicitly host wall-clock; sim time lives in service_cycles
-                    enqueued: Instant::now(),
-                    payload: JobPayload::Partial {
-                        shard: Arc::clone(&self.shards[si]),
-                        gemm_idx,
-                        a,
-                        done: tx,
-                    },
-                };
-                if rt.dispatch(self.replicas[si], job).is_err() {
-                    bail!("serving runtime is shut down");
-                }
-                Ok(rx)
-            },
-            |rx| match rx.wait() {
-                Ok(res) => res,
-                Err(canceled) => Err(canceled.into()),
-            },
+            &mut ch,
+            ShardFlow::Streaming,
         )?;
         Ok(RoutedResult { kind: self.kind, output, report, replica: self.replicas[0] })
     }

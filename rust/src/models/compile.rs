@@ -81,6 +81,36 @@ impl fmt::Display for CompileError {
 
 impl std::error::Error for CompileError {}
 
+/// Typed warm-state access errors. The warm arena is installed by
+/// `ensure_warm` immediately before use, so these states are
+/// unreachable by construction — but the serving workers contain
+/// panics per job, and a request must surface an impossible state as
+/// an error the caller can route, not a panic that strands the
+/// replica (the repo-wide no-panic rule).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WarmStateError {
+    /// The model's warm state vanished between `ensure_warm` and use.
+    Missing { model: String },
+    /// The state stored under this model's uid is of a different type
+    /// (a uid collision — uids are globally unique by construction).
+    Mismatch { model: String },
+}
+
+impl fmt::Display for WarmStateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WarmStateError::Missing { model } => {
+                write!(f, "warm state for `{model}` vanished between ensure_warm and use")
+            }
+            WarmStateError::Mismatch { model } => {
+                write!(f, "warm state for `{model}` holds a different arena type (uid collision)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WarmStateError {}
+
 /// Precomputed im2col: for every (patch-row, patch-col) slot the source
 /// index into the CHW activation buffer, or [`GatherMap::PAD`] for a
 /// zero-padded slot. `gather` reproduces [`exec::im2col`] bit for bit.
@@ -619,13 +649,19 @@ impl CompiledModel {
             );
         }
         self.ensure_warm(soc)?;
-        let mut arena = soc
-            .take_model_state(self.uid)
-            // xr_lint: allow(no-panic) -- ensure_warm installed the state two lines up
-            .expect("warmed above")
-            .downcast::<Arena>()
-            // xr_lint: allow(no-panic) -- uids are globally unique (NEXT_UID)
-            .expect("model-state uid collision");
+        let state = match soc.take_model_state(self.uid) {
+            Some(s) => s,
+            None => return Err(WarmStateError::Missing { model: self.name.clone() }.into()),
+        };
+        let mut arena = match state.downcast::<Arena>() {
+            Ok(a) => a,
+            Err(state) => {
+                // put the foreign state back before erroring — it is
+                // some other owner's only record of its resident spans
+                soc.put_model_state(self.uid, state);
+                return Err(WarmStateError::Mismatch { model: self.name.clone() }.into());
+            }
+        };
         // the replica-wide shared run scratch, grown to this model
         let mut scratch = soc
             .take_scratch()
@@ -651,29 +687,46 @@ impl CompiledModel {
     }
 
     /// Serve one request with the per-layer GEMMs **scattered across
-    /// shard replicas**: the coordinator builds each layer's activation
-    /// operand (gather + the same dynamic per-request scale as
-    /// [`CompiledModel::replay`]), slices it per shard, dispatches every
-    /// shard's partial GEMM through `scatter` (all shards of a layer go
-    /// out before any is joined, so they run concurrently), joins the
-    /// handles with `join`, merges the partial quires exactly
-    /// ([`QuireMatrix::merge_block`]), rounds **once**, and feeds the
-    /// next layer. Values are bit-identical to the whole-model replay in
-    /// every mode (quire merge is exact); the returned [`ExecReport`]
-    /// sums every shard's job work and carries the documented
-    /// cross-shard reduction term ([`reduction_cost`]) in
-    /// `reduce_cycles`/`reduce_bytes`.
+    /// shard replicas** as a streaming pipeline. The coordinator builds
+    /// each layer's activation operand (gather + the same dynamic
+    /// per-request scale as [`CompiledModel::replay`]), slices it per
+    /// shard and dispatches the partial-GEMM jobs through `ch`; partials
+    /// are then drained in **completion-arrival order**
+    /// ([`ShardChannel::wait_any`]) and merged incrementally:
     ///
-    /// `scatter(shard_idx, gemm_idx, a_slice)` returns a join handle;
-    /// `join` blocks on it. The router drives this with the async
-    /// serving runtime; tests drive it inline.
-    pub fn run_sharded<H>(
+    /// * **K-split** layers merge each arriving full-width quire image
+    ///   into the accumulator as it lands ([`QuireMatrix::merge_block`]
+    ///   — exact, associative and commutative, so arrival order cannot
+    ///   change a bit), round **once**, and postprocess centrally.
+    /// * **N-split** layers arrive as rounded + scale/bias-folded f32
+    ///   column blocks (the shard-local tail, [`LocalTail`]) written
+    ///   straight into the output; only the global requantization
+    ///   ([`exec::requantize`] — its pow-2 scale spans the full tensor)
+    ///   runs at the coordinator, and the layer charges **zero**
+    ///   reduction traffic.
+    ///
+    /// Under [`ShardFlow::Streaming`] dispatch is bounded by
+    /// [`SHARD_INFLIGHT_WINDOW`] (back-pressure: one new dispatch per
+    /// drained completion) and the report's
+    /// `overlap_cycles_hidden` counter accrues the simulated straggler
+    /// cycles the pipeline hides; [`ShardFlow::Barrier`] dispatches the
+    /// whole layer upfront and keeps the counter at zero. The two flows
+    /// are bit-identical in values and in every other report field.
+    ///
+    /// Values are bit-identical to the whole-model replay in every mode;
+    /// the returned [`ExecReport`] sums every shard's job work and
+    /// carries the documented cross-shard reduction term
+    /// ([`reduction_cost`]) in `reduce_cycles`/`reduce_bytes`. The
+    /// router drives this with the async serving runtime (a
+    /// [`crate::serve::CompletionSet`] behind `ch`); tests drive it
+    /// inline with seeded arrival permutations.
+    pub fn run_sharded(
         &self,
         shards: &[Arc<ShardedModel>],
         input: &[f32],
         aux: &[f32],
-        mut scatter: impl FnMut(usize, usize, Matrix) -> Result<H>,
-        mut join: impl FnMut(H) -> Result<(QuireMatrix, JobReport)>,
+        ch: &mut dyn ShardChannel,
+        flow: ShardFlow,
     ) -> Result<(Vec<f32>, ExecReport)> {
         if shards.is_empty() {
             bail!("no shards supplied for `{}`", self.name);
@@ -683,13 +736,154 @@ impl CompiledModel {
                 bail!("shard of a different compilation supplied for `{}`", self.name);
             }
         }
+        let n_shards = shards.len();
+        let mut scratch = ReplicaScratch::default();
+        scratch.fit(self);
+        // streaming-overlap bookkeeping: the previous gemm layer's
+        // per-shard cycles + its streaming finish time, and the vector
+        // cycles charged at the coordinator since that layer — the
+        // window the next layer's weight DMA can hide behind
+        let mut prev_timing: Option<LayerTiming> = None;
+        let mut vec_mark = 0u64;
+        self.walk_steps(&mut scratch, input, aux, &mut |g, a_mat, s_a, out_mat, report| {
+            let kind = shards[0].steps[g.gemm_idx].slice;
+            let slice_a = |si: usize| -> Matrix {
+                match shards[si].steps[g.gemm_idx].slice {
+                    ShardSlice::K { k0, k1 } => Matrix::from_vec(
+                        a_mat.rows,
+                        k1 - k0,
+                        (0..a_mat.rows)
+                            .flat_map(|r| a_mat.row(r)[k0..k1].iter().copied())
+                            .collect(),
+                    ),
+                    // N-split consumes the full A (the weight is column-
+                    // sliced instead)
+                    ShardSlice::N { .. } => a_mat.clone(),
+                }
+            };
+            // windowed dispatch: Streaming keeps at most
+            // SHARD_INFLIGHT_WINDOW partials outstanding (back-pressure
+            // and clean quiesce); Barrier scatters the full layer
+            let window = match flow {
+                ShardFlow::Barrier => n_shards,
+                ShardFlow::Streaming => SHARD_INFLIGHT_WINDOW.min(n_shards),
+            };
+            for si in 0..window {
+                ch.dispatch(si, g.gemm_idx, slice_a(si), s_a)?;
+            }
+            let mut next_dispatch = window;
+            let mut quires = QuireMatrix::zeros(g.m, g.n);
+            let mut layer_jobs = JobReport::default();
+            let mut shard_cycles = vec![0u64; n_shards];
+            let mut shard_dma = vec![0u64; n_shards];
+            let mut shard_bytes_in = vec![0u64; n_shards];
+            // drain in completion-arrival order, refilling the window
+            for _ in 0..n_shards {
+                let (si, part, rep) = ch.wait_any()?;
+                if next_dispatch < n_shards {
+                    ch.dispatch(next_dispatch, g.gemm_idx, slice_a(next_dispatch), s_a)?;
+                    next_dispatch += 1;
+                }
+                match (part, shards[si].steps[g.gemm_idx].slice) {
+                    // incremental merge as each partial lands — exact,
+                    // so arrival order cannot change the result
+                    (PartialOut::Quires(p), ShardSlice::K { .. }) => quires.merge_block(0, &p),
+                    // local-tail block: already rounded + folded on the
+                    // shard, lands in its disjoint columns
+                    (PartialOut::Cols(block), ShardSlice::N { n0, n1 }) => {
+                        debug_assert_eq!((block.rows, block.cols), (g.m, n1 - n0));
+                        for r in 0..block.rows {
+                            for c in 0..block.cols {
+                                out_mat.set(r, n0 + c, block.at(r, c));
+                            }
+                        }
+                    }
+                    _ => bail!(
+                        "shard {si} of `{}` returned the wrong partial kind for gemm {}",
+                        self.name,
+                        g.gemm_idx
+                    ),
+                }
+                shard_cycles[si] = rep.total_cycles;
+                shard_dma[si] = rep.dma_cycles;
+                shard_bytes_in[si] = rep.bytes_in;
+                layer_jobs.merge(&rep);
+            }
+            let (rc, rb) = layer_reduction_cost(shards, g);
+            report.per_layer_cycles.push((g.layer_idx, layer_jobs.total_cycles + rc));
+            report.jobs.merge(&layer_jobs);
+            report.reduce_cycles += rc;
+            report.reduce_bytes += rb;
+            match kind {
+                ShardSlice::K { .. } => {
+                    // exactly one rounding of the merged quires — the
+                    // same output-processing expression as the engine's
+                    let raw = Matrix::from_vec(g.m, g.n, quires.round_to(Precision::Fp32));
+                    exec::postprocess_gemm(&raw, s_a, g.s_b, &g.bias, g.out_prec, out_mat);
+                }
+                ShardSlice::N { .. } => {
+                    // blocks are pre-folded; only the global requant
+                    // pass (full-tensor scale) remains
+                    exec::requantize(g.out_prec, out_mat);
+                }
+            }
+            // simulated-overlap accounting (Streaming only): derived
+            // from per-shard JobReport components and the documented
+            // cost model — deterministic, independent of the host
+            // arrival order that actually occurred
+            let finish = if flow == ShardFlow::Streaming {
+                let (finish, hidden_merge) =
+                    streamed_merge_timing(&shard_cycles, (g.m * g.n) as u64, rc);
+                let mut hidden = hidden_merge;
+                if let Some(prev) = &prev_timing {
+                    let v_coord = report.vector_cycles - vec_mark;
+                    hidden += prefetch_hidden(
+                        shards,
+                        g.gemm_idx,
+                        prev,
+                        v_coord,
+                        &shard_cycles,
+                        &shard_dma,
+                        &shard_bytes_in,
+                    );
+                }
+                report.overlap_cycles_hidden += hidden;
+                Some(LayerTiming { cycles: shard_cycles, finish })
+            } else {
+                None
+            };
+            prev_timing = finish;
+            vec_mark = report.vector_cycles;
+            Ok(())
+        })
+    }
+
+    /// The one step-walk shared by the whole-model and sharded paths
+    /// (closing the PR 4/5 mirror debt): input copy, gather / fc
+    /// operand build, the dynamic per-request activation scale, the
+    /// vector-unit steps and the ping-pong arena all live here once.
+    /// `gemm_exec` fills `out_mat` (pre-sized m×n, zeroed) with the
+    /// layer's postprocessed output and charges its own job/reduction
+    /// stats — `gemm_trusted` + postprocess for the whole path, the
+    /// streaming shard engine for the sharded path.
+    fn walk_steps(
+        &self,
+        scratch: &mut ReplicaScratch,
+        input: &[f32],
+        aux: &[f32],
+        gemm_exec: &mut dyn FnMut(
+            &GemmStep,
+            &Matrix,
+            f64,
+            &mut Matrix,
+            &mut ExecReport,
+        ) -> Result<()>,
+    ) -> Result<(Vec<f32>, ExecReport)> {
         if input.len() != self.input_len {
             bail!("input length {} != {}", input.len(), self.input_len);
         }
+        let ReplicaScratch { bufs, a_mat, out_mat } = scratch;
         let mut report = ExecReport::default();
-        let mut bufs = [vec![0.0f32; self.buf_len], vec![0.0f32; self.buf_len]];
-        let mut a_mat = Matrix { rows: 0, cols: 0, data: Vec::with_capacity(self.a_len) };
-        let mut out_mat = Matrix { rows: 0, cols: 0, data: Vec::with_capacity(self.c_len) };
         let mut cur = 0usize;
         let mut cur_len = input.len();
         bufs[0][..cur_len].copy_from_slice(input);
@@ -697,7 +891,7 @@ impl CompiledModel {
             match step {
                 Step::Gemm(g) => {
                     match &g.gather {
-                        Some(map) => map.gather(&bufs[cur][..cur_len], &mut a_mat),
+                        Some(map) => map.gather(&bufs[cur][..cur_len], a_mat),
                         None => {
                             a_mat.rows = 1;
                             a_mat.cols = g.k;
@@ -705,60 +899,23 @@ impl CompiledModel {
                             a_mat.data.extend_from_slice(&bufs[cur][..cur_len]);
                         }
                     }
-                    // the same dynamic scale as the whole-model path —
-                    // computed over the FULL operand, then sliced, so
-                    // every shard sees identical element values
+                    // dynamic per-request activation scale — identical
+                    // fold + element expression on every path (sharded
+                    // slicing happens after, so every shard sees the
+                    // same element values)
                     let s_a = exec::scale_for(&a_mat.data, g.sel.precision());
                     for v in a_mat.data.iter_mut() {
                         *v = (*v as f64 / s_a) as f32;
                     }
-                    // scatter every shard before joining any
-                    let handles: Vec<(usize, H)> = shards
-                        .iter()
-                        .enumerate()
-                        .map(|(si, sh)| {
-                            let st = &sh.steps[g.gemm_idx];
-                            let a_part = match st.slice {
-                                ShardSlice::K { k0, k1 } => Matrix::from_vec(
-                                    a_mat.rows,
-                                    k1 - k0,
-                                    (0..a_mat.rows)
-                                        .flat_map(|r| a_mat.row(r)[k0..k1].iter().copied())
-                                        .collect(),
-                                ),
-                                ShardSlice::N { .. } => a_mat.clone(),
-                            };
-                            Ok((si, scatter(si, g.gemm_idx, a_part)?))
-                        })
-                        .collect::<Result<_>>()?;
-                    let mut quires = QuireMatrix::zeros(g.m, g.n);
-                    let mut layer_jobs = JobReport::default();
-                    for (si, h) in handles {
-                        let (part, rep) = join(h)?;
-                        let c0 = match shards[si].steps[g.gemm_idx].slice {
-                            ShardSlice::K { .. } => 0,
-                            ShardSlice::N { n0, .. } => n0,
-                        };
-                        quires.merge_block(c0, &part);
-                        layer_jobs.merge(&rep);
-                    }
-                    let (rc, rb) = layer_reduction_cost(shards, g);
-                    report.per_layer_cycles.push((g.layer_idx, layer_jobs.total_cycles + rc));
-                    report.jobs.merge(&layer_jobs);
-                    report.reduce_cycles += rc;
-                    report.reduce_bytes += rb;
-                    // exactly one rounding of the merged quires — the
-                    // same output-processing expression as the engine's
-                    let raw = Matrix::from_vec(g.m, g.n, quires.round_to(Precision::Fp32));
                     out_mat.rows = g.m;
                     out_mat.cols = g.n;
                     out_mat.data.clear();
                     out_mat.data.resize(g.m * g.n, 0.0);
-                    exec::postprocess_gemm(&raw, s_a, g.s_b, &g.bias, g.out_prec, &mut out_mat);
+                    gemm_exec(g, a_mat, s_a, out_mat, &mut report)?;
                     let nxt = 1 - cur;
                     match g.conv_out {
                         Some(shape) => {
-                            exec::chw_into(&out_mat, shape, &mut bufs[nxt][..shape.numel()]);
+                            exec::chw_into(out_mat, shape, &mut bufs[nxt][..shape.numel()]);
                             cur_len = shape.numel();
                         }
                         None => {
@@ -811,115 +968,43 @@ impl CompiledModel {
         input: &[f32],
         aux: &[f32],
     ) -> Result<(Vec<f32>, ExecReport)> {
-        if input.len() != self.input_len {
-            bail!("input length {} != {}", input.len(), self.input_len);
-        }
-        let mut report = ExecReport::default();
-        let mut cur = 0usize;
-        let mut cur_len = input.len();
-        scratch.bufs[0][..cur_len].copy_from_slice(input);
-        for step in &self.steps {
-            match step {
-                Step::Gemm(g) => {
-                    match &g.gather {
-                        Some(map) => map.gather(&scratch.bufs[cur][..cur_len], &mut scratch.a_mat),
-                        None => {
-                            scratch.a_mat.rows = 1;
-                            scratch.a_mat.cols = g.k;
-                            scratch.a_mat.data.clear();
-                            scratch.a_mat.data.extend_from_slice(&scratch.bufs[cur][..cur_len]);
-                        }
-                    }
-                    // dynamic per-request activation scale — identical
-                    // fold + element expression to the interpreted path
-                    let s_a = exec::scale_for(&scratch.a_mat.data, g.sel.precision());
-                    for v in scratch.a_mat.data.iter_mut() {
-                        *v = (*v as f64 / s_a) as f32;
-                    }
-                    // trusted pin: the compiled weight encoding rides the
-                    // job, so warm serving never re-reads or hash-verifies
-                    // the resident image (cycle/byte stats identical to
-                    // `gemm_resident`)
-                    let (raw, rep) = soc.gemm_trusted(
-                        &scratch.a_mat,
-                        g.k,
-                        g.n,
-                        arena.w_addrs[g.gemm_idx],
-                        &g.w_enc,
-                        arena.a_addr,
-                        arena.c_addr,
-                        g.sel,
-                        Precision::Fp32,
-                    )?;
-                    report.per_layer_cycles.push((g.layer_idx, rep.total_cycles));
-                    report.jobs.merge(&rep);
-                    scratch.out_mat.rows = g.m;
-                    scratch.out_mat.cols = g.n;
-                    scratch.out_mat.data.clear();
-                    scratch.out_mat.data.resize(g.m * g.n, 0.0);
-                    exec::postprocess_gemm(
-                        &raw,
-                        s_a,
-                        g.s_b,
-                        &g.bias,
-                        g.out_prec,
-                        &mut scratch.out_mat,
-                    );
-                    let nxt = 1 - cur;
-                    match g.conv_out {
-                        Some(shape) => {
-                            exec::chw_into(
-                                &scratch.out_mat,
-                                shape,
-                                &mut scratch.bufs[nxt][..shape.numel()],
-                            );
-                            cur_len = shape.numel();
-                        }
-                        None => {
-                            scratch.bufs[nxt][..g.n].copy_from_slice(&scratch.out_mat.data);
-                            cur_len = g.n;
-                        }
-                    }
-                    cur = nxt;
-                }
-                Step::Pool { kind, size, in_shape, out_len } => {
-                    let nxt = 1 - cur;
-                    let (lo, hi) = scratch.bufs.split_at_mut(1);
-                    let (src, dst) =
-                        if cur == 0 { (&lo[0], &mut hi[0]) } else { (&hi[0], &mut lo[0]) };
-                    exec::pool_into(
-                        &src[..in_shape.numel()],
-                        *in_shape,
-                        *kind,
-                        *size,
-                        &mut dst[..*out_len],
-                    );
-                    report.vector_cycles += (in_shape.numel() / 2) as u64;
-                    cur = nxt;
-                    cur_len = *out_len;
-                }
-                Step::Act { kind, alpha, len } => {
-                    debug_assert_eq!(*len, cur_len);
-                    for v in scratch.bufs[cur][..cur_len].iter_mut() {
-                        *v = exec::activate(*v as f64, *kind, *alpha) as f32;
-                    }
-                    report.vector_cycles += (cur_len / 4) as u64;
-                }
-                Step::ConcatAux { n } => {
-                    if aux.len() != *n {
-                        bail!("aux length {} != {}", aux.len(), n);
-                    }
-                    scratch.bufs[cur][cur_len..cur_len + n].copy_from_slice(aux);
-                    cur_len += n;
-                }
-            }
-        }
-        Ok((scratch.bufs[cur][..cur_len].to_vec(), report))
+        self.walk_steps(scratch, input, aux, &mut |g, a_mat, s_a, out_mat, report| {
+            // trusted pin: the compiled weight encoding rides the
+            // job, so warm serving never re-reads or hash-verifies
+            // the resident image (cycle/byte stats identical to
+            // `gemm_resident`)
+            let (raw, rep) = soc.gemm_trusted(
+                a_mat,
+                g.k,
+                g.n,
+                arena.w_addrs[g.gemm_idx],
+                &g.w_enc,
+                arena.a_addr,
+                arena.c_addr,
+                g.sel,
+                Precision::Fp32,
+            )?;
+            report.per_layer_cycles.push((g.layer_idx, rep.total_cycles));
+            report.jobs.merge(&rep);
+            exec::postprocess_gemm(&raw, s_a, g.s_b, &g.bias, g.out_prec, out_mat);
+            Ok(())
+        })
+    }
+
+    /// Byte sizes of this model's warm blocks in the fixed block order
+    /// (one per GEMM weight image, then A-operand scratch, then result
+    /// scratch) — the single source the live-block walk and the
+    /// compaction rebase both derive from.
+    fn block_sizes(&self) -> Vec<usize> {
+        self.gemm_steps()
+            .iter()
+            .map(|g| g.weight.data.len() * 4)
+            .chain([self.a_len * 4, self.c_len * 4])
+            .collect()
     }
 
     /// Live resident data blocks of this model's warm arena on `soc`
-    /// (`(addr, len_bytes)` in the fixed order: one block per GEMM
-    /// weight image, then A-operand scratch, then result scratch).
+    /// (`(addr, len_bytes)` in [`CompiledModel::block_sizes`] order).
     /// Empty when the model is not warm there. The compaction pass
     /// relocates exactly these blocks and hands the new addresses back
     /// through [`CompiledModel::rebase_on`].
@@ -928,41 +1013,52 @@ impl CompiledModel {
         else {
             return Vec::new();
         };
-        let gemms = self.gemm_steps();
-        debug_assert_eq!(gemms.len(), arena.w_addrs.len());
-        let mut out = Vec::with_capacity(gemms.len() + 2);
-        for (g, &addr) in gemms.iter().zip(&arena.w_addrs) {
-            out.push((addr, g.weight.data.len() * 4));
-        }
-        out.push((arena.a_addr, self.a_len * 4));
-        out.push((arena.c_addr, self.c_len * 4));
-        out
+        paired_blocks(&arena.w_addrs, [arena.a_addr, arena.c_addr], &self.block_sizes())
     }
 
     /// Patch this model's warm arena after compaction moved its blocks:
     /// `new_addrs[i]` is the relocated base of block `i` (same order as
-    /// [`CompiledModel::live_blocks_on`]). The recorded spans are
-    /// rebuilt tight around the blocks — the old spans' alignment
-    /// padding was reclaimed by the compaction itself.
+    /// [`CompiledModel::live_blocks_on`]).
     pub(crate) fn rebase_on(&self, soc: &mut Soc, new_addrs: &[u64]) {
         let Some(mut state) = soc.take_model_state(self.uid) else { return };
         if let Some(arena) = state.downcast_mut::<Arena>() {
-            let n_w = arena.w_addrs.len();
-            debug_assert_eq!(new_addrs.len(), n_w + 2);
-            let sizes: Vec<usize> = self
-                .gemm_steps()
-                .iter()
-                .map(|g| g.weight.data.len() * 4)
-                .chain([self.a_len * 4, self.c_len * 4])
-                .collect();
-            arena.w_addrs.copy_from_slice(&new_addrs[..n_w]);
-            arena.a_addr = new_addrs[n_w];
-            arena.c_addr = new_addrs[n_w + 1];
-            arena.allocs =
-                new_addrs.iter().zip(&sizes).map(|(&a, &s)| (a, a + s as u64)).collect();
+            let Arena { w_addrs, a_addr, c_addr, allocs, .. } = arena;
+            rebase_blocks(w_addrs, [a_addr, c_addr], allocs, new_addrs, &self.block_sizes());
         }
         soc.put_model_state(self.uid, state);
     }
+}
+
+/// Pair a warm arena's block addresses with the owner's block sizes —
+/// the one live-block walk shared by [`CompiledModel::live_blocks_on`]
+/// and [`ShardedModel::live_blocks_on`] (weight images in order, then
+/// the two scratch blocks).
+fn paired_blocks(w_addrs: &[u64], scratch_addrs: [u64; 2], sizes: &[usize]) -> Vec<(u64, usize)> {
+    debug_assert_eq!(sizes.len(), w_addrs.len() + 2);
+    w_addrs.iter().copied().chain(scratch_addrs).zip(sizes.iter().copied()).collect()
+}
+
+/// Patch a warm arena's addresses after compaction — the one rebase
+/// shared by [`CompiledModel::rebase_on`] and
+/// [`ShardedModel::rebase_on`]. `new_addrs[i]` is the relocated base of
+/// block `i` in [`paired_blocks`] order; the recorded spans are rebuilt
+/// tight around the blocks — the old spans' alignment padding was
+/// reclaimed by the compaction itself.
+fn rebase_blocks(
+    w_addrs: &mut [u64],
+    scratch_addrs: [&mut u64; 2],
+    allocs: &mut Vec<(u64, u64)>,
+    new_addrs: &[u64],
+    sizes: &[usize],
+) {
+    let n_w = w_addrs.len();
+    debug_assert_eq!(new_addrs.len(), n_w + 2);
+    debug_assert_eq!(sizes.len(), n_w + 2);
+    w_addrs.copy_from_slice(&new_addrs[..n_w]);
+    let [sc0, sc1] = scratch_addrs;
+    *sc0 = new_addrs[n_w];
+    *sc1 = new_addrs[n_w + 1];
+    *allocs = new_addrs.iter().zip(sizes).map(|(&a, &s)| (a, a + s as u64)).collect();
 }
 
 // --------------------------------------------------------------- sharding
@@ -1011,9 +1107,26 @@ pub enum ShardSlice {
     /// reduce across shards.
     K { k0: usize, k1: usize },
     /// Columns `n0..n1` of the weight (the fallback when K is too small
-    /// to split): the shard consumes the full A and produces a disjoint
-    /// output column block — partial quires merge into zero quires.
+    /// to split): the shard consumes the full A, owns a disjoint output
+    /// column block outright, and runs the [`LocalTail`] on it — no
+    /// quires cross to the coordinator.
     N { n0: usize, n1: usize },
+}
+
+/// The shard-local output tail of an N-split slice: round the slice's
+/// quires once, then fold the element-wise part of the compiled
+/// postprocess (`(raw · s_a · s_b) + bias[c]` — see
+/// [`exec::postprocess_fold`]) on the replica that owns the columns.
+/// The fold touches each output element independently, so running it on
+/// disjoint column blocks is bit-exact; only the **global**
+/// requantization ([`exec::requantize`], whose scale spans the full
+/// output tensor) must wait for the assembled result at the
+/// coordinator. `bias` is the parent layer's bias sliced to this
+/// block's columns; `s_b` is the frozen whole-tensor weight scale.
+#[derive(Debug, Clone)]
+pub struct LocalTail {
+    pub s_b: f64,
+    pub bias: Vec<f32>,
 }
 
 /// One GEMM step's slice as held by one shard.
@@ -1035,6 +1148,11 @@ pub struct ShardStep {
     /// partial-GEMM job as a trusted pin exactly like the whole-model
     /// path's weight encodings.
     pub w_enc: Arc<EncodedOperand>,
+    /// `Some` exactly when `slice` is an N-split: the shard-local
+    /// round + fold stage. K-split slices must **not** carry one (the
+    /// fold runs once, centrally, after the quire merge — a per-shard
+    /// fold would double-apply the bias).
+    pub tail: Option<LocalTail>,
 }
 
 /// One replica's view of a sharded [`CompiledModel`]: per-GEMM weight
@@ -1069,6 +1187,126 @@ struct ShardArena {
     allocs: Vec<(u64, u64)>,
 }
 
+/// One shard's partial result for one GEMM layer.
+#[derive(Debug)]
+pub enum PartialOut {
+    /// K-split: full-width raw partial quires; the coordinator merges
+    /// them exactly and rounds once.
+    Quires(QuireMatrix),
+    /// N-split: the shard-local tail already rounded + folded this
+    /// disjoint f32 column block ([`LocalTail`]).
+    Cols(Matrix),
+}
+
+/// How [`CompiledModel::run_sharded`] schedules one layer's shard jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardFlow {
+    /// Scatter the whole layer upfront, keep `overlap_cycles_hidden`
+    /// at zero — the PR 4 schedule, kept as the differential oracle.
+    Barrier,
+    /// Windowed dispatch ([`SHARD_INFLIGHT_WINDOW`]) with arrival-order
+    /// incremental merge and the simulated-overlap counter.
+    /// Bit-identical to `Barrier` in values and in every report field
+    /// except `overlap_cycles_hidden`.
+    Streaming,
+}
+
+/// Cap on outstanding partial-GEMM dispatches per layer under
+/// [`ShardFlow::Streaming`]: one fresh dispatch per drained completion
+/// once the window fills. Keeps the serving queues' bounded-admission
+/// back-pressure meaningful and lets `Router::quiesce` drain a known,
+/// small set of in-flight jobs.
+pub const SHARD_INFLIGHT_WINDOW: usize = 4;
+
+/// The transport [`CompiledModel::run_sharded`] drives shard jobs
+/// through. `dispatch` hands shard `shard_idx` its A slice for
+/// `gemm_idx` (plus the layer's dynamic scale `s_a`, which the
+/// shard-local tail folds); `wait_any` blocks for **whichever**
+/// outstanding job completes next and returns its shard index with the
+/// partial. The router implements this over the async serving runtime's
+/// [`crate::serve::CompletionSet`]; tests implement it inline with
+/// seeded arrival permutations.
+pub trait ShardChannel {
+    fn dispatch(&mut self, shard_idx: usize, gemm_idx: usize, a: Matrix, s_a: f64) -> Result<()>;
+    fn wait_any(&mut self) -> Result<(usize, PartialOut, JobReport)>;
+}
+
+/// Per-layer timing snapshot for the streaming-overlap model: each
+/// shard's simulated job cycles for the layer, and the simulated cycle
+/// at which the coordinator's incremental merge of the layer finished.
+struct LayerTiming {
+    cycles: Vec<u64>,
+    finish: u64,
+}
+
+/// Simulated finish time of the incremental quire merge and the
+/// straggler cycles it hides relative to the barrier schedule.
+///
+/// Model: shard completions land at their job-cycle times `t` (sorted —
+/// the model is a function of the *costs*, never of the host-side
+/// arrival order that actually occurred, so the counter is
+/// deterministic). The reduction is split into one merge pass per
+/// arriving partial; pass `p` costs
+/// `(p·outs).div_ceil(4) − ((p−1)·outs).div_ceil(4)` cycles, so the
+/// passes tile [`reduction_cost`]'s cycle term exactly. The barrier
+/// schedule serializes the whole reduction after the last arrival
+/// (`max(t) + rc`); streaming interleaves passes with waits
+/// (`f = max(t_p, f) + c_p`), and the difference is the hidden time.
+/// Zero when `rc == 0` (single shard, or an N-split layer with no
+/// central reduction at all).
+fn streamed_merge_timing(cycles: &[u64], outs: u64, rc: u64) -> (u64, u64) {
+    let s = cycles.len();
+    let mut t = cycles.to_vec();
+    t.sort_unstable();
+    let barrier_finish = t[s - 1] + rc;
+    if rc == 0 {
+        return (barrier_finish, 0);
+    }
+    let mut finish = t[0];
+    for (p, &tp) in t.iter().enumerate().skip(1) {
+        let c_p = (p as u64 * outs).div_ceil(4) - ((p as u64 - 1) * outs).div_ceil(4);
+        finish = finish.max(tp) + c_p;
+    }
+    (finish, barrier_finish.saturating_sub(finish))
+}
+
+/// Simulated straggler cycles hidden by prefetching the next layer's
+/// resident weight slices during each shard's idle window.
+///
+/// Between finishing layer *i* and receiving layer *i+1*'s A slice, a
+/// shard sits idle for `prev.finish − prev.cycles[si]` simulated cycles
+/// (its own early finish against the coordinator's merge tail) plus
+/// `v_coord` (the coordinator's vector-unit steps between the two
+/// layers). The weight slice for layer *i+1* is already resident and
+/// its identity is known before any request data, so its DMA is
+/// data-independent and can fill that window. The weight share of the
+/// shard's layer-(i+1) DMA is prorated by packed bytes
+/// (`n · k.div_ceil(lanes) · 2` — the engine's fetch model) over the
+/// job's `bytes_in`, and at most `min(window, weight-DMA)` cycles come
+/// off that shard's completion time; the hidden total is the drop in
+/// the layer's critical path `max(t)`.
+fn prefetch_hidden(
+    shards: &[Arc<ShardedModel>],
+    gemm_idx: usize,
+    prev: &LayerTiming,
+    v_coord: u64,
+    cycles: &[u64],
+    dma: &[u64],
+    bytes_in: &[u64],
+) -> u64 {
+    let before = cycles.iter().copied().max().unwrap_or(0);
+    let mut after = 0u64;
+    for (si, sh) in shards.iter().enumerate() {
+        let st = &sh.steps[gemm_idx];
+        let w_bytes = (st.n * st.k.div_ceil(st.sel.lanes()) * 2) as u64;
+        let window = prev.finish.saturating_sub(prev.cycles[si]) + v_coord;
+        let weight_dma = dma[si].saturating_mul(w_bytes) / bytes_in[si].max(1);
+        let hid = window.min(weight_dma);
+        after = after.max(cycles[si].saturating_sub(hid));
+    }
+    before.saturating_sub(after)
+}
+
 /// Documented cross-shard reduction cost model for one **K-split** m×n
 /// GEMM layer reduced from `n_shards` overlapping partials: every
 /// shard's full-width partial-quire image moves to the reducer
@@ -1077,9 +1315,9 @@ struct ShardArena {
 /// block (the paper's precision-adaptive ADD/SUB stage), 4 adds per
 /// cycle. This is the term by which a sharded [`ExecReport`] exceeds
 /// the sum of its shard job reports — zero adds when `n_shards == 1`.
-/// N-split layers are cheaper ([`layer_reduction_cost`]): the partials
-/// tile the output, so only one image's worth of quires moves and
-/// nothing cross-merges.
+/// N-split layers pay **nothing** here ([`layer_reduction_cost`]): the
+/// shard-local tail ([`LocalTail`]) rounds and folds on the replica, so
+/// no quire image ever crosses to the coordinator.
 pub fn reduction_cost(n_shards: usize, m: usize, n: usize) -> (u64, u64) {
     let outs = (m * n) as u64;
     let bytes = n_shards as u64 * outs * QUIRE_SPILL_BYTES as u64;
@@ -1090,12 +1328,14 @@ pub fn reduction_cost(n_shards: usize, m: usize, n: usize) -> (u64, u64) {
 /// Reduction term for one layer given how it was actually sliced
 /// (every shard of a layer shares one slice kind, fixed by
 /// [`plan_slices`]): K-split partials overlap the full output and pay
-/// [`reduction_cost`]; N-split partials are disjoint column blocks —
-/// `m·n` quires of traffic in total and no cross-partial adds.
+/// [`reduction_cost`]; N-split partials run the shard-local tail and
+/// return rounded f32 column blocks — **zero** quire-reduction cycles
+/// and bytes. (Activation traffic, like every path's, is charged by the
+/// per-job DMA model, not here.)
 fn layer_reduction_cost(shards: &[Arc<ShardedModel>], g: &GemmStep) -> (u64, u64) {
     match shards[0].steps[g.gemm_idx].slice {
         ShardSlice::K { .. } => reduction_cost(shards.len(), g.m, g.n),
-        ShardSlice::N { .. } => (0, (g.m * g.n * QUIRE_SPILL_BYTES) as u64),
+        ShardSlice::N { .. } => (0, 0),
     }
 }
 
@@ -1176,6 +1416,16 @@ pub fn shard(model: &CompiledModel, n_shards: usize) -> Result<Vec<ShardedModel>
                 ),
             };
             let w_enc = Arc::new(EncodedOperand::cols(&weight, g.sel));
+            // N-split slices carry the shard-local tail: the bias block
+            // for their columns plus the frozen whole-tensor weight
+            // scale, so the replica can round + fold without the
+            // coordinator
+            let tail = match slice {
+                ShardSlice::K { .. } => None,
+                ShardSlice::N { n0, n1 } => {
+                    Some(LocalTail { s_b: g.s_b, bias: g.bias[n0..n1].to_vec() })
+                }
+            };
             per_shard[si].push(ShardStep {
                 gemm_idx: g.gemm_idx,
                 sel: g.sel,
@@ -1185,6 +1435,7 @@ pub fn shard(model: &CompiledModel, n_shards: usize) -> Result<Vec<ShardedModel>
                 slice,
                 weight,
                 w_enc,
+                tail,
             });
         }
     }
@@ -1302,72 +1553,85 @@ impl ShardedModel {
 
     /// Run this shard's partial GEMM for step `gemm_idx` on `soc`
     /// (warming on demand): `a` is the coordinator-scaled A slice for
-    /// this shard; the raw partial quires come back for reduction.
+    /// this shard, `s_a` the dynamic activation scale the coordinator
+    /// divided out (every shard of a layer receives the same value).
+    /// K-split slices return raw partial quires for the central
+    /// reduction; N-split slices run the [`LocalTail`] here — one
+    /// rounding of this block's (already-complete) quires, then the
+    /// element-wise scale/bias fold — and return an f32 column block.
     pub fn run_gemm(
         &self,
         soc: &mut Soc,
         gemm_idx: usize,
         a: &Matrix,
-    ) -> Result<(QuireMatrix, JobReport)> {
+        s_a: f64,
+    ) -> Result<(PartialOut, JobReport)> {
         self.ensure_warm(soc)?;
         // Only the addresses are needed — copy them out and restore the
         // warm state *before* any fallible/panicky work, so a contained
         // worker panic can never drop the arena (the sole record of the
         // resident spans and cache pins).
-        let (w_addr, a_addr, q_addr) = {
-            // xr_lint: allow(no-panic) -- ensure_warm installed the state above
-            let state = soc.take_model_state(self.uid).expect("warmed above");
-            let arena =
-                // xr_lint: allow(no-panic) -- uids are globally unique (NEXT_UID)
-                state.downcast_ref::<ShardArena>().expect("shard-state uid collision");
-            let addrs = (arena.w_addrs[gemm_idx], arena.a_addr, arena.q_addr);
-            soc.put_model_state(self.uid, state);
-            addrs
+        let state = match soc.take_model_state(self.uid) {
+            Some(s) => s,
+            None => return Err(WarmStateError::Missing { model: self.name.clone() }.into()),
+        };
+        let addrs = state
+            .downcast_ref::<ShardArena>()
+            .map(|arena| (arena.w_addrs[gemm_idx], arena.a_addr, arena.q_addr));
+        soc.put_model_state(self.uid, state);
+        let Some((w_addr, a_addr, q_addr)) = addrs else {
+            return Err(WarmStateError::Mismatch { model: self.name.clone() }.into());
         };
         let st = &self.steps[gemm_idx];
         debug_assert_eq!(st.gemm_idx, gemm_idx);
-        let res =
-            soc.gemm_partial(a, st.k, st.n, w_addr, &st.w_enc, a_addr, q_addr, st.sel);
-        Ok(res?)
+        let (quires, rep) =
+            soc.gemm_partial(a, st.k, st.n, w_addr, &st.w_enc, a_addr, q_addr, st.sel)?;
+        match &st.tail {
+            None => Ok((PartialOut::Quires(quires), rep)),
+            Some(tail) => {
+                // the slice's quires are the block's *complete*
+                // accumulation (full K), so this is the one rounding —
+                // the same Fp32 round + fold expressions as the central
+                // path, on this shard's disjoint columns
+                let raw = Matrix::from_vec(st.m, st.n, quires.round_to(Precision::Fp32));
+                let mut out = Matrix::zeros(st.m, st.n);
+                exec::postprocess_fold(&raw, s_a, tail.s_b, &tail.bias, &mut out);
+                Ok((PartialOut::Cols(out), rep))
+            }
+        }
     }
 
-    /// Live resident blocks of this shard's warm arena (mirror of
-    /// [`CompiledModel::live_blocks_on`]: weight slices, then A-slice
-    /// scratch, then quire-spill scratch).
+    /// Byte sizes of this shard's warm blocks (weight slices, then
+    /// A-slice scratch, then quire-spill scratch) — mirror of
+    /// [`CompiledModel::block_sizes`], feeding the same shared
+    /// live-block/rebase helpers.
+    fn block_sizes(&self) -> Vec<usize> {
+        self.steps
+            .iter()
+            .map(|st| st.weight.data.len() * 4)
+            .chain([self.a_len * 4, self.q_len * QUIRE_SPILL_BYTES])
+            .collect()
+    }
+
+    /// Live resident blocks of this shard's warm arena
+    /// ([`paired_blocks`] over [`ShardedModel::block_sizes`], exactly
+    /// like [`CompiledModel::live_blocks_on`]).
     pub(crate) fn live_blocks_on(&self, soc: &Soc) -> Vec<(u64, usize)> {
         let Some(arena) =
             soc.model_state_ref(self.uid).and_then(|s| s.downcast_ref::<ShardArena>())
         else {
             return Vec::new();
         };
-        debug_assert_eq!(self.steps.len(), arena.w_addrs.len());
-        let mut out = Vec::with_capacity(self.steps.len() + 2);
-        for (st, &addr) in self.steps.iter().zip(&arena.w_addrs) {
-            out.push((addr, st.weight.data.len() * 4));
-        }
-        out.push((arena.a_addr, self.a_len * 4));
-        out.push((arena.q_addr, self.q_len * QUIRE_SPILL_BYTES));
-        out
+        paired_blocks(&arena.w_addrs, [arena.a_addr, arena.q_addr], &self.block_sizes())
     }
 
-    /// Patch this shard's warm arena after compaction (mirror of
-    /// [`CompiledModel::rebase_on`]).
+    /// Patch this shard's warm arena after compaction ([`rebase_blocks`],
+    /// exactly like [`CompiledModel::rebase_on`]).
     pub(crate) fn rebase_on(&self, soc: &mut Soc, new_addrs: &[u64]) {
         let Some(mut state) = soc.take_model_state(self.uid) else { return };
         if let Some(arena) = state.downcast_mut::<ShardArena>() {
-            let n_w = arena.w_addrs.len();
-            debug_assert_eq!(new_addrs.len(), n_w + 2);
-            let sizes: Vec<usize> = self
-                .steps
-                .iter()
-                .map(|st| st.weight.data.len() * 4)
-                .chain([self.a_len * 4, self.q_len * QUIRE_SPILL_BYTES])
-                .collect();
-            arena.w_addrs.copy_from_slice(&new_addrs[..n_w]);
-            arena.a_addr = new_addrs[n_w];
-            arena.q_addr = new_addrs[n_w + 1];
-            arena.allocs =
-                new_addrs.iter().zip(&sizes).map(|(&a, &s)| (a, a + s as u64)).collect();
+            let ShardArena { w_addrs, a_addr, q_addr, allocs } = arena;
+            rebase_blocks(w_addrs, [a_addr, q_addr], allocs, new_addrs, &self.block_sizes());
         }
         soc.put_model_state(self.uid, state);
     }
@@ -1733,8 +1997,63 @@ mod tests {
         assert_eq!(e1, e2);
     }
 
+    /// Synchronous in-test [`ShardChannel`]: `dispatch` runs the shard
+    /// GEMM immediately, `wait_any` hands completions back FIFO — or,
+    /// with an order RNG, in a seeded random permutation of whatever is
+    /// outstanding, modelling stragglers finishing first / last /
+    /// interleaved.
+    struct InlineChannel<'a> {
+        shards: &'a [Arc<ShardedModel>],
+        socs: &'a mut [Soc],
+        ready: Vec<(usize, PartialOut, JobReport)>,
+        order: Option<Rng>,
+    }
+
+    impl ShardChannel for InlineChannel<'_> {
+        fn dispatch(&mut self, si: usize, gi: usize, a: Matrix, s_a: f64) -> Result<()> {
+            let (part, rep) = self.shards[si].run_gemm(&mut self.socs[si], gi, &a, s_a)?;
+            self.ready.push((si, part, rep));
+            Ok(())
+        }
+
+        fn wait_any(&mut self) -> Result<(usize, PartialOut, JobReport)> {
+            if self.ready.is_empty() {
+                bail!("wait_any with nothing in flight");
+            }
+            match &mut self.order {
+                Some(rng) => {
+                    let i = (rng.next_u64() as usize) % self.ready.len();
+                    Ok(self.ready.swap_remove(i))
+                }
+                None => Ok(self.ready.remove(0)),
+            }
+        }
+    }
+
     /// Drive `run_sharded` inline: shard `n_shards` ways, one fresh SoC
-    /// per shard, synchronous scatter. Returns outputs + report.
+    /// per shard, synchronous dispatch, arrival order FIFO or seeded by
+    /// `order_seed`. Returns outputs + report.
+    fn run_sharded_inline_flow(
+        compiled: &CompiledModel,
+        n_shards: usize,
+        socs: &mut [Soc],
+        input: &[f32],
+        aux: &[f32],
+        flow: ShardFlow,
+        order_seed: Option<u64>,
+    ) -> (Vec<f32>, ExecReport) {
+        let shards: Vec<Arc<ShardedModel>> =
+            shard(compiled, n_shards).expect("plan").into_iter().map(Arc::new).collect();
+        let mut ch = InlineChannel {
+            shards: &shards,
+            socs,
+            ready: Vec::new(),
+            order: order_seed.map(Rng::new),
+        };
+        compiled.run_sharded(&shards, input, aux, &mut ch, flow).expect("sharded run")
+    }
+
+    /// The default inline drive: streaming flow, FIFO arrivals.
     fn run_sharded_inline(
         compiled: &CompiledModel,
         n_shards: usize,
@@ -1742,17 +2061,7 @@ mod tests {
         input: &[f32],
         aux: &[f32],
     ) -> (Vec<f32>, ExecReport) {
-        let shards: Vec<Arc<ShardedModel>> =
-            shard(compiled, n_shards).expect("plan").into_iter().map(Arc::new).collect();
-        compiled
-            .run_sharded(
-                &shards,
-                input,
-                aux,
-                |si, gi, a| shards[si].run_gemm(&mut socs[si], gi, &a),
-                Ok,
-            )
-            .expect("sharded run")
+        run_sharded_inline_flow(compiled, n_shards, socs, input, aux, ShardFlow::Streaming, None)
     }
 
     #[test]
@@ -1878,9 +2187,9 @@ mod tests {
     #[test]
     fn nsplit_fallback_matches_whole_and_charges_no_merge() {
         // a K too small to split 3 ways forces the N-split fallback:
-        // values still bit-identical, and the reduction term reflects
-        // disjoint tiling — one output image of quire traffic, zero
-        // cross-partial merge adds
+        // values still bit-identical through the shard-local tail, and
+        // the layer charges zero coordinator reduction traffic — no
+        // quire image ever leaves the shards
         use crate::models::graph::Layer;
         let g = ModelGraph {
             name: "tiny_fc".into(),
@@ -1898,17 +2207,22 @@ mod tests {
             shards.iter().all(|s| matches!(s.steps[0].slice, ShardSlice::N { .. })),
             "k=6 < 4*3 must take the N-split fallback"
         );
+        for s in &shards {
+            let st = &s.steps[0];
+            let ShardSlice::N { n0, n1 } = st.slice else { unreachable!() };
+            let tail = st.tail.as_ref().expect("N slices must carry the local tail");
+            assert_eq!(tail.bias.len(), n1 - n0, "tail bias must cover exactly this block");
+        }
         let mut soc_w = Soc::new(SocConfig::default());
         let mut socs: Vec<Soc> = (0..3).map(|_| Soc::new(SocConfig::default())).collect();
         let input = test_input(6, 0.2);
         let (want, _) = compiled.replay(&mut soc_w, &input, &[]).unwrap();
         let (got, grep) = run_sharded_inline(&compiled, 3, &mut socs, &input, &[]);
         assert_eq!(got, want, "N-split sharded run diverged");
-        assert_eq!(grep.reduce_cycles, 0, "disjoint blocks have no cross-partial adds");
         assert_eq!(
-            grep.reduce_bytes,
-            (9 * QUIRE_SPILL_BYTES) as u64,
-            "N-split moves exactly one output image of quires"
+            (grep.reduce_cycles, grep.reduce_bytes),
+            (0, 0),
+            "shard-local tails leave nothing to reduce at the coordinator"
         );
     }
 
@@ -1931,6 +2245,139 @@ mod tests {
             let (want, _) = compiled.replay(&mut soc_w, &input, &aux).unwrap();
             let (got, _) = run_sharded_inline(&compiled, 2, &mut socs, &input, &aux);
             assert_eq!(got, want, "{}: sharded conv/mixed run diverged", g.name);
+        }
+    }
+
+    #[test]
+    fn streaming_matches_barrier_bit_identically_all_modes() {
+        // THE streaming acceptance differential: for every hardware mode
+        // and 2- and 3-way plans, the streaming flow (windowed dispatch,
+        // arrival-order incremental merge, overlap accounting) is
+        // bit-identical to the barrier flow in values AND in the whole
+        // ExecReport modulo the overlap counter — which is zero under
+        // the barrier and strictly positive under streaming (merge tail
+        // + weight prefetch both hide real simulated cycles on gaze)
+        let g = gaze::build();
+        for (mi, sel) in PrecSel::ALL.into_iter().enumerate() {
+            let w = random_weights(&g, 150 + mi as u64);
+            let plan = PrecisionPlan::uniform(sel, &g.compute_layer_params());
+            let compiled = compile(&g, &w, &plan).unwrap();
+            for n_shards in [2usize, 3] {
+                let mut socs_b: Vec<Soc> =
+                    (0..n_shards).map(|_| Soc::new(SocConfig::default())).collect();
+                let mut socs_s: Vec<Soc> =
+                    (0..n_shards).map(|_| Soc::new(SocConfig::default())).collect();
+                let input = test_input(g.input.numel(), 0.5 + mi as f32);
+                let (want, brep) = run_sharded_inline_flow(
+                    &compiled,
+                    n_shards,
+                    &mut socs_b,
+                    &input,
+                    &[],
+                    ShardFlow::Barrier,
+                    None,
+                );
+                let (got, srep) = run_sharded_inline_flow(
+                    &compiled,
+                    n_shards,
+                    &mut socs_s,
+                    &input,
+                    &[],
+                    ShardFlow::Streaming,
+                    None,
+                );
+                assert_eq!(got, want, "{sel:?} x{n_shards}: streaming values diverged");
+                assert_eq!(brep.overlap_cycles_hidden, 0, "barrier must hide nothing");
+                assert!(
+                    srep.overlap_cycles_hidden > 0,
+                    "{sel:?} x{n_shards}: streaming must hide simulated cycles"
+                );
+                assert!(
+                    srep.overlap_cycles_hidden < srep.total_cycles(),
+                    "{sel:?} x{n_shards}: hidden time must stay below the barrier schedule"
+                );
+                let mut scrubbed = srep.clone();
+                scrubbed.overlap_cycles_hidden = 0;
+                assert_eq!(
+                    scrubbed, brep,
+                    "{sel:?} x{n_shards}: reports diverged beyond the overlap counter"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_matches_barrier_conv_and_mixed_plans() {
+        // conv workloads (im2col gather at the coordinator) and a mixed
+        // per-layer morph schedule stream just as exactly
+        for (g, seed) in [(effnet::build(), 160u64), (ulvio::build(), 161)] {
+            let params = g.compute_layer_params();
+            let mut plan = PrecisionPlan::uniform(PrecSel::Fp4x4, &params);
+            for (i, sel) in plan.per_layer.iter_mut().enumerate() {
+                *sel = PrecSel::ALL[i % PrecSel::ALL.len()];
+            }
+            let w = random_weights(&g, seed);
+            let compiled = compile(&g, &w, &plan).unwrap();
+            let aux: Vec<f32> = test_input(aux_len(&g), 0.7);
+            let input = test_input(g.input.numel(), 0.4);
+            let mut socs_b = vec![Soc::new(SocConfig::default()), Soc::new(SocConfig::default())];
+            let mut socs_s = vec![Soc::new(SocConfig::default()), Soc::new(SocConfig::default())];
+            let (want, brep) = run_sharded_inline_flow(
+                &compiled,
+                2,
+                &mut socs_b,
+                &input,
+                &aux,
+                ShardFlow::Barrier,
+                None,
+            );
+            let (got, srep) = run_sharded_inline_flow(
+                &compiled,
+                2,
+                &mut socs_s,
+                &input,
+                &aux,
+                ShardFlow::Streaming,
+                None,
+            );
+            assert_eq!(got, want, "{}: streaming conv/mixed run diverged", g.name);
+            let mut scrubbed = srep.clone();
+            scrubbed.overlap_cycles_hidden = 0;
+            assert_eq!(scrubbed, brep, "{}: reports diverged beyond the counter", g.name);
+        }
+    }
+
+    #[test]
+    fn streaming_is_arrival_order_independent() {
+        // seeded permutations of shard completion arrival (stragglers
+        // first, last, interleaved — whatever the seeds produce) must
+        // leave outputs AND the full report, overlap counter included,
+        // bit-identical: the merge is exact and the overlap model is a
+        // function of the simulated costs, not of host arrival order
+        let g = gaze::build();
+        let w = random_weights(&g, 170);
+        let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+        let compiled = compile(&g, &w, &plan).unwrap();
+        let input = test_input(g.input.numel(), 0.6);
+        let mut base: Option<(Vec<f32>, ExecReport)> = None;
+        for seed in [None, Some(1u64), Some(2), Some(3)] {
+            let mut socs: Vec<Soc> = (0..3).map(|_| Soc::new(SocConfig::default())).collect();
+            let got = run_sharded_inline_flow(
+                &compiled,
+                3,
+                &mut socs,
+                &input,
+                &[],
+                ShardFlow::Streaming,
+                seed,
+            );
+            match &base {
+                None => base = Some(got),
+                Some((want, wrep)) => {
+                    assert_eq!(&got.0, want, "seed {seed:?}: values depend on arrival order");
+                    assert_eq!(&got.1, wrep, "seed {seed:?}: report depends on arrival order");
+                }
+            }
         }
     }
 
@@ -1968,6 +2415,10 @@ mod tests {
         let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
         let compiled = compile(&g, &w, &plan).unwrap();
         let shards = shard(&compiled, 2).unwrap();
+        assert!(
+            shards.iter().flat_map(|s| &s.steps).all(|st| st.tail.is_none()),
+            "K slices must never carry a local tail (the fold runs once, centrally)"
+        );
         let mut soc = Soc::new(SocConfig::default());
         let mark = soc.resident_mark();
         shards[0].ensure_warm(&mut soc).unwrap();

@@ -57,6 +57,15 @@ pub struct ExecReport {
     /// Cross-shard quire traffic in bytes (partial-quire images moved to
     /// the reducer); zero on the whole-model path.
     pub reduce_bytes: u64,
+    /// Simulated straggler cycles the **streaming** sharded pipeline
+    /// hides: quire-merge passes overlapped with in-flight shard compute
+    /// plus next-layer weight-DMA prefetched behind the coordinator's
+    /// merge/vector tail. Observability only — [`ExecReport::total_cycles`]
+    /// stays the barrier-schedule sum (subtract this to get the
+    /// streaming critical path). Zero on the whole-model path and under
+    /// the barrier shard flow; deterministic (derived from per-shard
+    /// [`JobReport`] components, never host arrival order).
+    pub overlap_cycles_hidden: u64,
     /// Per-layer (layer index, cycles) breakdown.
     pub per_layer_cycles: Vec<(usize, u64)>,
 }
@@ -71,6 +80,7 @@ impl ExecReport {
         self.vector_cycles += o.vector_cycles;
         self.reduce_cycles += o.reduce_cycles;
         self.reduce_bytes += o.reduce_bytes;
+        self.overlap_cycles_hidden += o.overlap_cycles_hidden;
     }
 }
 
@@ -304,12 +314,30 @@ pub(crate) fn postprocess_gemm(
     out_prec: Precision,
     out: &mut Matrix,
 ) {
+    postprocess_fold(raw, s_a, s_b, bias, out);
+    requantize(out_prec, out);
+}
+
+/// First half of [`postprocess_gemm`]: fold the operand scales back in
+/// and add the bias — **purely element-wise**, so a disjoint column
+/// block computed on a shard replica (the N-split local tail, with the
+/// bias sliced to the block) is bit-identical to the same columns of the
+/// full-matrix fold. Split out for exactly that reuse.
+pub(crate) fn postprocess_fold(raw: &Matrix, s_a: f64, s_b: f64, bias: &[f32], out: &mut Matrix) {
     debug_assert_eq!((out.rows, out.cols), (raw.rows, raw.cols));
     for r in 0..raw.rows {
         for c in 0..raw.cols {
             out.set(r, c, ((raw.at(r, c) as f64) * s_a * s_b) as f32 + bias[c]);
         }
     }
+}
+
+/// Second half of [`postprocess_gemm`]: requantize once to the layer's
+/// activation format at its own pow-2 scale. `s_out` is computed over
+/// the **full** output tensor — a global data dependence, which is why
+/// the N-split local tail stops at the fold and the coordinator runs
+/// this pass on the assembled output.
+pub(crate) fn requantize(out_prec: Precision, out: &mut Matrix) {
     let s_out = scale_for(&out.data, out_prec);
     for v in out.data.iter_mut() {
         *v = (s_out * tables::quantize(out_prec, *v as f64 / s_out)) as f32;

@@ -37,8 +37,9 @@ pub mod ulvio;
 pub mod verify;
 
 pub use compile::{
-    compile, reduction_cost, shard, CompileError, CompiledModel, GatherMap, ShardError,
-    ShardSlice, ShardedModel,
+    compile, reduction_cost, shard, CompileError, CompiledModel, GatherMap, LocalTail,
+    PartialOut, ShardChannel, ShardError, ShardFlow, ShardSlice, ShardStep, ShardedModel,
+    WarmStateError, SHARD_INFLIGHT_WINDOW,
 };
 pub use exec::{Backend, ExecReport, Executor};
 pub use graph::{ActKind, Layer, LayerKind, ModelGraph, PoolKind};

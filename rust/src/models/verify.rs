@@ -46,7 +46,11 @@
 //!   share one kind, K-splits must tile `0..k` exactly once with every
 //!   interior boundary on a [`SHARD_K_ALIGN`] multiple, N-splits must
 //!   tile `0..n` exactly once, slice dims must match their weight
-//!   slices, the cross-shard [`reduction_cost`] must match the
+//!   slices, every N-slice must carry a shard-local fold tail
+//!   ([`LocalTail`](super::compile::LocalTail)) agreeing bit-for-bit
+//!   with the parent fold (sliced bias, frozen `s_b`) while K-slices
+//!   must carry none (the fold runs once, centrally, after the quire
+//!   merge), the cross-shard [`reduction_cost`] must match the
 //!   documented formula, and each shard's own layout/footprint/staging
 //!   obeys the same rules as a whole model.
 //!
@@ -103,6 +107,9 @@ pub enum VerifyError {
     NSplitCoverage { model: String, gemm_idx: usize, detail: String },
     /// A shard slice's dims/weight disagree with its declared range.
     SliceShape { model: String, gemm_idx: usize, shard_idx: usize, detail: String },
+    /// A shard-local fold tail is missing from an N-slice, grafted onto
+    /// a K-slice, or disagrees with the parent layer's fold.
+    TailMismatch { model: String, gemm_idx: usize, shard_idx: usize, detail: String },
     /// [`reduction_cost`] drifted from the documented formula.
     ReductionCostMismatch { model: String, gemm_idx: usize, got: (u64, u64), want: (u64, u64) },
 }
@@ -171,6 +178,9 @@ impl fmt::Display for VerifyError {
             }
             VerifyError::SliceShape { model, gemm_idx, shard_idx, detail } => {
                 write!(f, "`{model}` gemm {gemm_idx} shard {shard_idx}: {detail}")
+            }
+            VerifyError::TailMismatch { model, gemm_idx, shard_idx, detail } => {
+                write!(f, "`{model}` gemm {gemm_idx} shard {shard_idx}: fold-tail defect: {detail}")
             }
             VerifyError::ReductionCostMismatch { model, gemm_idx, got, want } => write!(
                 f,
@@ -629,12 +639,56 @@ pub fn verify_shard_plan<S: Borrow<ShardedModel>>(
                     st.k * st.n
                 )));
             }
+            // fold-tail double-entry: an N-slice rounds + folds on the
+            // replica, so it must carry the parent bias columns and the
+            // frozen weight scale bit-for-bit; a K-slice ships raw
+            // quires and the fold runs once centrally after the merge —
+            // a tail there would apply bias and `s_b` a second time
+            let tail_err = |detail: String| VerifyError::TailMismatch {
+                model: model.name.clone(),
+                gemm_idx: i,
+                shard_idx: si,
+                detail,
+            };
+            match (st.slice, &st.tail) {
+                (ShardSlice::K { .. }, None) => {}
+                (ShardSlice::K { .. }, Some(_)) => {
+                    return Err(tail_err(
+                        "K-slice carries a fold tail — bias would be applied again \
+                         after the central post-merge fold"
+                            .into(),
+                    ));
+                }
+                (ShardSlice::N { .. }, None) => {
+                    return Err(tail_err(
+                        "N-slice is missing its fold tail — the column block would \
+                         ship unfolded"
+                            .into(),
+                    ));
+                }
+                (ShardSlice::N { n0, n1 }, Some(tail)) => {
+                    if tail.s_b.to_bits() != g.s_b.to_bits() {
+                        return Err(tail_err(format!(
+                            "tail s_b {} disagrees with the parent's frozen scale {}",
+                            tail.s_b, g.s_b
+                        )));
+                    }
+                    if tail.bias[..] != g.bias[n0..n1] {
+                        return Err(tail_err(format!(
+                            "tail bias disagrees with parent bias[{n0}..{n1}]"
+                        )));
+                    }
+                }
+            }
         }
 
         // --- reduction-cost agreement -----------------------------------
         // recompute the documented formula literally: every shard's
         // full-width partial image moves (n_shards·m·n quire spills) and
-        // (n_shards−1)·m·n exact adds run 4 per cycle
+        // (n_shards−1)·m·n exact adds run 4 per cycle. N-split layers
+        // charge no reduction term at all (the fold tail keeps quires on
+        // the shards) — enforced structurally by the tail checks above,
+        // so only the K formula needs re-deriving here.
         if all_k {
             let outs = (g.m * g.n) as u64;
             let want = (
@@ -707,7 +761,7 @@ pub fn verify_shard_plan<S: Borrow<ShardedModel>>(
 mod tests {
     use super::*;
     use crate::models::graph::{ActKind, Layer, LayerKind, ModelGraph, Shape};
-    use crate::models::{compile, effnet, gaze, random_weights, shard, ulvio};
+    use crate::models::{compile, effnet, gaze, random_weights, shard, ulvio, LocalTail};
     use crate::quant::PrecisionPlan;
     use crate::soc::{Soc, SocConfig};
     use crate::util::proptest::{self, Config, Draw};
@@ -1014,6 +1068,56 @@ mod tests {
         assert!(matches!(
             verify_program(&c, limit()),
             Err(VerifyError::WeightShape { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_tail_defects() {
+        // corruption class 10: the shard-local fold tail out of
+        // double-entry with the parent layer — missing from an N-slice,
+        // carrying the wrong scale or bias, or grafted onto a K-slice
+        let g = ModelGraph {
+            name: "tiny_fc".into(),
+            input: Shape::vec(6),
+            layers: vec![Layer {
+                name: "fc".into(),
+                kind: LayerKind::Fc { in_f: 6, out_f: 9 },
+            }],
+        };
+        let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+        let c = compiled(&g, 759, &plan);
+        let mut shards = shard(&c, 3).expect("K=6 forces the N-split fallback");
+        assert!(matches!(shards[0].steps[0].slice, ShardSlice::N { .. }));
+
+        let saved = shards[0].steps[0].tail.take().expect("N-slice carries a tail");
+        assert!(matches!(
+            verify_shard_plan(&c, &shards, limit()),
+            Err(VerifyError::TailMismatch { gemm_idx: 0, shard_idx: 0, .. })
+        ));
+        shards[0].steps[0].tail =
+            Some(LocalTail { s_b: saved.s_b * 2.0, bias: saved.bias.clone() });
+        assert!(matches!(
+            verify_shard_plan(&c, &shards, limit()),
+            Err(VerifyError::TailMismatch { .. })
+        ));
+        shards[0].steps[0].tail =
+            Some(LocalTail { s_b: saved.s_b, bias: vec![1.0; saved.bias.len()] });
+        assert!(matches!(
+            verify_shard_plan(&c, &shards, limit()),
+            Err(VerifyError::TailMismatch { .. })
+        ));
+        shards[0].steps[0].tail = Some(saved);
+        verify_shard_plan(&c, &shards, limit()).expect("restored tail verifies");
+
+        // the inverse defect: a fold tail on a K-slice would fold twice
+        let g = gaze::build();
+        let c = compiled(&g, 760, &mixed_plan(&g));
+        let mut shards = shard(&c, 2).expect("shard");
+        assert!(matches!(shards[1].steps[0].slice, ShardSlice::K { .. }));
+        shards[1].steps[0].tail = Some(LocalTail { s_b: 1.0, bias: Vec::new() });
+        assert!(matches!(
+            verify_shard_plan(&c, &shards, limit()),
+            Err(VerifyError::TailMismatch { gemm_idx: 0, shard_idx: 1, .. })
         ));
     }
 

@@ -7,6 +7,12 @@
 //! or block ([`Completion::wait`]); if the job is dropped unfulfilled
 //! (runtime shutdown, worker death) the waiter gets [`Canceled`] instead
 //! of hanging.
+//!
+//! [`CompletionSet`] groups many in-flight completions behind one shared
+//! waker so a coordinator can block on **whichever finishes first**
+//! ([`CompletionSet::wait_any`]) — the primitive the streaming sharded
+//! pipeline uses to merge partial quires in completion-arrival order
+//! instead of fixed shard order.
 
 use std::fmt;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -31,9 +37,54 @@ enum Slot<T> {
     Canceled,
 }
 
+/// Shared wake channel of a [`CompletionSet`]: a generation counter
+/// bumped on every member fulfill/cancel. Waiters snapshot the
+/// generation, scan their members, and sleep only until the generation
+/// moves past the snapshot — so a fulfill that lands between the scan
+/// and the sleep can never be lost.
+struct WakeSet {
+    gen: Mutex<u64>,
+    cv: Condvar,
+}
+
+/// Lock the generation counter, clearing poisoning (a plain `u64`
+/// replaced under the lock is always consistent; see [`lock_slot`]).
+fn lock_gen(m: &Mutex<u64>) -> MutexGuard<'_, u64> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+impl WakeSet {
+    fn notify(&self) {
+        let mut gen = lock_gen(&self.gen);
+        *gen += 1;
+        self.cv.notify_all();
+    }
+
+    fn generation(&self) -> u64 {
+        *lock_gen(&self.gen)
+    }
+
+    fn wait_past(&self, seen: u64) {
+        let mut gen = lock_gen(&self.gen);
+        while *gen <= seen {
+            gen = match self.cv.wait(gen) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
 struct Inner<T> {
     slot: Mutex<Slot<T>>,
     cv: Condvar,
+    /// Set when this completion is a member of a [`CompletionSet`]:
+    /// fulfill/cancel also bumps the set's shared wake channel (after
+    /// releasing the slot lock — the two locks are never nested).
+    wake: Option<Arc<WakeSet>>,
 }
 
 /// Lock a completion slot, clearing poisoning: the slot is a single
@@ -59,7 +110,8 @@ pub struct Completion<T> {
 
 /// Create a linked sender/handle pair.
 pub fn completion<T>() -> (CompletionSender<T>, Completion<T>) {
-    let inner = Arc::new(Inner { slot: Mutex::new(Slot::Pending), cv: Condvar::new() });
+    let inner =
+        Arc::new(Inner { slot: Mutex::new(Slot::Pending), cv: Condvar::new(), wake: None });
     (CompletionSender { inner: Some(Arc::clone(&inner)) }, Completion { inner })
 }
 
@@ -67,8 +119,15 @@ impl<T> CompletionSender<T> {
     /// Deliver the value and wake the waiter.
     pub fn fulfill(mut self, value: T) {
         if let Some(inner) = self.inner.take() {
-            *lock_slot(&inner.slot) = Slot::Ready(value);
-            inner.cv.notify_all();
+            {
+                *lock_slot(&inner.slot) = Slot::Ready(value);
+                inner.cv.notify_all();
+            }
+            // slot lock released above: the set waker is bumped outside
+            // it so the two locks never nest
+            if let Some(w) = &inner.wake {
+                w.notify();
+            }
         }
     }
 }
@@ -76,11 +135,102 @@ impl<T> CompletionSender<T> {
 impl<T> Drop for CompletionSender<T> {
     fn drop(&mut self) {
         if let Some(inner) = self.inner.take() {
-            let mut slot = lock_slot(&inner.slot);
-            if matches!(*slot, Slot::Pending) {
-                *slot = Slot::Canceled;
-                inner.cv.notify_all();
+            let canceled = {
+                let mut slot = lock_slot(&inner.slot);
+                if matches!(*slot, Slot::Pending) {
+                    *slot = Slot::Canceled;
+                    inner.cv.notify_all();
+                    true
+                } else {
+                    false
+                }
+            };
+            if canceled {
+                if let Some(w) = &inner.wake {
+                    w.notify();
+                }
             }
+        }
+    }
+}
+
+/// A group of in-flight completions sharing one waker, redeemed in
+/// **completion order** rather than submission order.
+///
+/// [`CompletionSet::sender`] mints a sender whose completion joins the
+/// set under a caller-chosen key; [`CompletionSet::wait_any`] blocks
+/// until *any* member is fulfilled (or canceled), removes it, and
+/// returns its key with the outcome. The streaming sharded coordinator
+/// drives its incremental quire merge with this: partials are merged as
+/// their shard replicas finish, so merge work overlaps the stragglers'
+/// compute instead of waiting for the slowest shard.
+pub struct CompletionSet<T> {
+    wake: Arc<WakeSet>,
+    pending: Vec<(usize, Completion<T>)>,
+}
+
+impl<T> Default for CompletionSet<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> CompletionSet<T> {
+    pub fn new() -> CompletionSet<T> {
+        CompletionSet {
+            wake: Arc::new(WakeSet { gen: Mutex::new(0), cv: Condvar::new() }),
+            pending: Vec::new(),
+        }
+    }
+
+    /// Mint a sender whose completion is tracked by this set under
+    /// `key` (keys need not be unique; each sender is its own member).
+    pub fn sender(&mut self, key: usize) -> CompletionSender<T> {
+        let inner = Arc::new(Inner {
+            slot: Mutex::new(Slot::Pending),
+            cv: Condvar::new(),
+            wake: Some(Arc::clone(&self.wake)),
+        });
+        self.pending.push((key, Completion { inner: Arc::clone(&inner) }));
+        CompletionSender { inner: Some(inner) }
+    }
+
+    /// Members still awaited.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Block until any member completes; remove it and return its key
+    /// with the outcome (`Err(Canceled)` if its sender was dropped
+    /// unfulfilled). `None` when the set has no members left.
+    pub fn wait_any(&mut self) -> Option<(usize, Result<T, Canceled>)> {
+        loop {
+            if self.pending.is_empty() {
+                return None;
+            }
+            // snapshot BEFORE scanning: a fulfill landing mid-scan bumps
+            // the generation past the snapshot, so the wait below
+            // returns immediately instead of losing the wakeup
+            let seen = self.wake.generation();
+            let mut i = 0;
+            while i < self.pending.len() {
+                match self.pending[i].1.try_take() {
+                    Ok(Some(v)) => {
+                        let (key, _) = self.pending.swap_remove(i);
+                        return Some((key, Ok(v)));
+                    }
+                    Err(Canceled) => {
+                        let (key, _) = self.pending.swap_remove(i);
+                        return Some((key, Err(Canceled)));
+                    }
+                    Ok(None) => i += 1,
+                }
+            }
+            self.wake.wait_past(seen);
         }
     }
 }
@@ -160,6 +310,65 @@ mod tests {
         drop(tx);
         assert!(rx.is_ready());
         assert_eq!(rx.wait(), Err(Canceled));
+    }
+
+    #[test]
+    fn set_returns_members_already_ready() {
+        let mut set = CompletionSet::new();
+        let a = set.sender(7);
+        let b = set.sender(9);
+        b.fulfill("b");
+        a.fulfill("a");
+        // completion order, not insertion order: b finished first
+        assert_eq!(set.len(), 2);
+        let first = set.wait_any().unwrap();
+        let second = set.wait_any().unwrap();
+        let mut got = [first, second];
+        got.sort_by_key(|(k, _)| *k);
+        assert_eq!(got[0], (7, Ok("a")));
+        assert_eq!(got[1], (9, Ok("b")));
+        assert!(set.wait_any().is_none(), "drained set yields None");
+    }
+
+    #[test]
+    fn set_wait_any_wakes_on_cross_thread_fulfill_in_any_order() {
+        let mut set = CompletionSet::new();
+        let senders: Vec<_> = (0..4).map(|k| set.sender(k)).collect();
+        let t = std::thread::spawn(move || {
+            // fulfill in scrambled order with small gaps so wait_any
+            // really blocks between arrivals
+            for (i, tx) in senders.into_iter().enumerate().rev() {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                tx.fulfill(i * 10);
+            }
+        });
+        let mut got = Vec::new();
+        while let Some((k, v)) = set.wait_any() {
+            got.push((k, v.unwrap()));
+        }
+        t.join().unwrap();
+        // arrival order is reversed insertion order
+        assert_eq!(got, vec![(3, 30), (2, 20), (1, 10), (0, 0)]);
+    }
+
+    #[test]
+    fn set_reports_canceled_member() {
+        let mut set = CompletionSet::new();
+        let a = set.sender(1);
+        let b = set.sender(2);
+        drop(b); // canceled
+        a.fulfill(5u32);
+        let mut got = vec![set.wait_any().unwrap(), set.wait_any().unwrap()];
+        got.sort_by_key(|(k, _)| *k);
+        assert_eq!(got[0], (1, Ok(5)));
+        assert_eq!(got[1], (2, Err(Canceled)));
+    }
+
+    #[test]
+    fn empty_set_yields_none_without_blocking() {
+        let mut set: CompletionSet<()> = CompletionSet::new();
+        assert!(set.is_empty());
+        assert!(set.wait_any().is_none());
     }
 
     #[test]

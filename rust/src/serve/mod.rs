@@ -34,7 +34,7 @@ pub mod queue;
 pub mod worker;
 
 pub use autoscale::{AutoscaleConfig, Autoscaler, CycleAutoscaleConfig, CycleAutoscaler};
-pub use handle::{completion, Canceled, Completion, CompletionSender};
+pub use handle::{completion, Canceled, Completion, CompletionSender, CompletionSet};
 pub use queue::{Closed, WorkQueue};
 pub use worker::{
     device_lock, Job, JobPayload, ReplicaWorker, RuntimeMetrics, ServeRuntime, WindowedStats,

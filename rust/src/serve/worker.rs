@@ -19,12 +19,11 @@
 
 use super::handle::CompletionSender;
 use super::queue::{Closed, WorkQueue};
-use crate::arith::QuireMatrix;
 use crate::coordinator::metrics::LatencyStats;
 use crate::coordinator::router::{RoutedResult, WorkloadKind};
 use crate::coordinator::scheduler::ModelInstance;
 use crate::models::residency::{residency_lock, ResidencyManager, ResidentImage};
-use crate::models::ShardedModel;
+use crate::models::{PartialOut, ShardedModel};
 use crate::soc::{JobReport, Soc, SocConfig};
 use crate::util::lockdep::{lock_tracked, LockClass, Tracked};
 use crate::util::Matrix;
@@ -64,13 +63,17 @@ pub enum JobPayload {
         done: CompletionSender<Result<RoutedResult>>,
     },
     /// One **partial GEMM** of a sharded layer: the coordinator-scaled
-    /// A slice runs against this replica's resident weight shard and
-    /// the raw partial quires come back for cross-shard reduction.
+    /// A slice runs against this replica's resident weight shard. A
+    /// K-split slice sends raw partial quires back for cross-shard
+    /// reduction; an N-split slice runs its shard-local tail here and
+    /// sends back a rounded f32 column block (`s_a` is the layer's
+    /// dynamic activation scale the tail folds).
     Partial {
         shard: Arc<ShardedModel>,
         gemm_idx: usize,
         a: Matrix,
-        done: CompletionSender<Result<(QuireMatrix, JobReport)>>,
+        s_a: f64,
+        done: CompletionSender<Result<(PartialOut, JobReport)>>,
     },
     /// Diagnostic escape hatch: run an arbitrary closure on the replica
     /// (device checks, and the panic-containment regression tests).
@@ -377,10 +380,10 @@ impl ReplicaWorker {
                         Err(p) => done.fulfill(Err(WorkerPanic::new(id, p).into())),
                     }
                 }
-                JobPayload::Partial { shard, gemm_idx, a, done } => {
+                JobPayload::Partial { shard, gemm_idx, a, s_a, done } => {
                     let res = catch_unwind(AssertUnwindSafe(|| {
                         let mut dev = device_lock(soc);
-                        shard.run_gemm(&mut dev, gemm_idx, &a)
+                        shard.run_gemm(&mut dev, gemm_idx, &a, s_a)
                     }));
                     let service = t0.elapsed().as_nanos() as u64;
                     let cycles = match &res {
