@@ -200,6 +200,30 @@ mod tests {
     }
 
     #[test]
+    fn fps_of_zero_samples_is_zero_never_nan() {
+        let s = LatencyStats::new();
+        let f = s.fps(250e6);
+        assert_eq!(f, 0.0);
+        assert!(!f.is_nan() && !f.is_infinite());
+    }
+
+    #[test]
+    fn fps_edge_cases_stay_finite() {
+        // all-zero-cycle samples: mean 0 would divide to infinity —
+        // the guard returns 0 instead
+        let mut s = LatencyStats::new();
+        s.record(0);
+        s.record(0);
+        assert_eq!(s.fps(250e6), 0.0);
+        // a zero clock yields zero fps, not NaN
+        let mut t = LatencyStats::new();
+        t.record(1_000);
+        let f = t.fps(0.0);
+        assert_eq!(f, 0.0);
+        assert!(!f.is_nan());
+    }
+
+    #[test]
     fn batch_metrics_accumulate() {
         let mut m = BatchMetrics::new();
         m.record_batch(&[

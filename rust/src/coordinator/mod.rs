@@ -31,5 +31,5 @@ pub use pipeline::{
     execute_batch, serve_with_batcher, serve_with_batcher_async, BatchServeReport,
     PerceptionPipeline, PipelineConfig, RuntimeBreakdown,
 };
-pub use router::{InferCompletion, RoutedResult, Router, RuntimeConfig, WorkloadKind};
+pub use router::{CacheStats, InferCompletion, RoutedResult, Router, RuntimeConfig, WorkloadKind};
 pub use scheduler::ModelInstance;

@@ -26,17 +26,18 @@ use crate::models::{
     shard, verify_program, verify_shard_plan, ExecReport, PartialOut, ShardChannel, ShardFlow,
     ShardedModel,
 };
+use crate::obs::{ShardLaneTracer, TraceCtx, TraceEvent, TraceSink};
 use crate::serve::{
     device_lock, AutoscaleConfig, Autoscaler, Completion, CompletionSet, CycleAutoscaler, Job,
     JobPayload, RuntimeMetrics, ServeRuntime, WorkQueue,
 };
 use crate::soc::{JobReport, SocConfig};
+use crate::util::hosttime::host_now;
 use crate::util::Matrix;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 /// Perception workload kinds (paper Fig. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -72,6 +73,33 @@ pub struct RoutedResult {
 /// Handle for one submitted request: redeem with [`Router::resolve`]
 /// (or [`Completion::wait`] directly).
 pub type InferCompletion = Completion<Result<RoutedResult>>;
+
+/// Operand-encoding cache counters of one replica — the observable
+/// proof that registered weights encode zero times on the serving
+/// path: weight operands ride their trusted pins past the cache
+/// entirely (`trusted`), only per-request activations encode
+/// (`misses`). Supersedes the old anonymous `(u64, u64, u64, u64)`
+/// return of [`Router::replica_cache_stats`]; every field is
+/// registered under a `sim_cache_*` key by [`crate::obs::snapshot`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Encoded-operand reuse hits.
+    pub hits: u64,
+    /// Cold encodes (per-request activations).
+    pub misses: u64,
+    /// Weight panels encoded once at warm/registration time.
+    pub preloads: u64,
+    /// Weight operands served straight off their trusted pins.
+    pub trusted: u64,
+}
+
+impl CacheStats {
+    /// The legacy `(hits, misses, preloads, trusted)` tuple view, for
+    /// compact assertions.
+    pub fn as_tuple(self) -> (u64, u64, u64, u64) {
+        (self.hits, self.misses, self.preloads, self.trusted)
+    }
+}
 
 /// Serving-runtime knobs for a router.
 #[derive(Debug, Clone, Copy)]
@@ -142,14 +170,19 @@ struct RuntimeShardChannel<'a> {
     entry: &'a ShardedEntry,
     rt: &'a ServeRuntime,
     set: CompletionSet<Result<(PartialOut, JobReport)>>,
+    /// Per-shard lane cursors stamping [`TraceEvent::ShardPartial`] /
+    /// [`TraceEvent::QuireMerge`] spans at the coordinator (partial
+    /// jobs themselves carry no trace context — the coordinator owns
+    /// the request's trace id). `None` when tracing is off.
+    lanes: Option<ShardLaneTracer>,
 }
 
 impl ShardChannel for RuntimeShardChannel<'_> {
     fn dispatch(&mut self, si: usize, gemm_idx: usize, a: Matrix, s_a: f64) -> Result<()> {
         let done = self.set.sender(si);
         let job = Job {
-            // xr_lint: allow(wall-clock) -- queue-latency metrics are explicitly host wall-clock; sim time lives in service_cycles
-            enqueued: Instant::now(),
+            enqueued: host_now(),
+            trace: None,
             payload: JobPayload::Partial {
                 shard: Arc::clone(&self.entry.shards[si]),
                 gemm_idx,
@@ -167,9 +200,20 @@ impl ShardChannel for RuntimeShardChannel<'_> {
     fn wait_any(&mut self) -> Result<(usize, PartialOut, JobReport)> {
         match self.set.wait_any() {
             None => bail!("wait_any with no partial GEMM in flight"),
-            Some((si, Ok(Ok((part, rep))))) => Ok((si, part, rep)),
+            Some((si, Ok(Ok((part, rep))))) => {
+                if let Some(lanes) = &mut self.lanes {
+                    lanes.on_partial(si, rep.total_cycles);
+                }
+                Ok((si, part, rep))
+            }
             Some((_, Ok(Err(e)))) => Err(e),
             Some((_, Err(canceled))) => Err(canceled.into()),
+        }
+    }
+
+    fn on_merge(&mut self, shard_idx: usize, merge_cycles: u64) {
+        if let Some(lanes) = &mut self.lanes {
+            lanes.on_merge(shard_idx, merge_cycles);
         }
     }
 }
@@ -182,8 +226,16 @@ impl ShardedEntry {
     /// [`ShardFlow::Streaming`]). Values are bit-identical to
     /// whole-model serving; `replica` in the result is the first
     /// shard's home (the merge runs at the coordinator).
-    fn serve(&self, rt: &ServeRuntime, input: Vec<f32>, aux: Vec<f32>) -> Result<RoutedResult> {
-        let mut ch = RuntimeShardChannel { entry: self, rt, set: CompletionSet::new() };
+    fn serve(
+        &self,
+        rt: &ServeRuntime,
+        input: Vec<f32>,
+        aux: Vec<f32>,
+        trace: Option<TraceCtx>,
+    ) -> Result<RoutedResult> {
+        let lanes =
+            trace.as_ref().map(|tr| ShardLaneTracer::new(tr.clone(), self.replicas.clone()));
+        let mut ch = RuntimeShardChannel { entry: self, rt, set: CompletionSet::new(), lanes };
         let (output, report) = self.inst.compiled.run_sharded(
             &self.shards,
             &input,
@@ -191,6 +243,9 @@ impl ShardedEntry {
             &mut ch,
             ShardFlow::Streaming,
         )?;
+        if let Some(tr) = &trace {
+            tr.emit(self.replicas[0], report.total_cycles(), 0, TraceEvent::Complete);
+        }
         Ok(RoutedResult { kind: self.kind, output, report, replica: self.replicas[0] })
     }
 }
@@ -279,6 +334,13 @@ pub struct Router {
     sharded_inflight: Arc<(Mutex<usize>, Condvar)>,
     /// Per-kind request counters (admitted to the runtime).
     pub served: HashMap<WorkloadKind, u64>,
+    /// Optional fleet trace sink ([`Router::set_trace_sink`]): when
+    /// attached, every submission mints a [`crate::obs::TraceId`] and
+    /// the request's span events ride the job through the workers and
+    /// shard coordinators. `None` (the default) is provably
+    /// zero-overhead — no event is constructed, and results stay
+    /// bit-identical to an untraced run.
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl Router {
@@ -315,6 +377,40 @@ impl Router {
             next_replica: 0,
             sharded_inflight: Arc::new((Mutex::new(0), Condvar::new())),
             served: HashMap::new(),
+            trace: None,
+        }
+    }
+
+    /// Attach a bounded trace sink: every subsequent submission mints a
+    /// fresh [`crate::obs::TraceId`] and records simulated-cycle span
+    /// events from submit to completion. Tracing is purely additive —
+    /// outputs and reports are bit-identical with or without a sink.
+    pub fn set_trace_sink(&mut self, sink: Arc<TraceSink>) {
+        self.trace = Some(sink);
+    }
+
+    /// Detach the trace sink (tracing off; already-recorded events stay
+    /// in the sink the caller holds).
+    pub fn clear_trace_sink(&mut self) {
+        self.trace = None;
+    }
+
+    /// The attached trace sink, if any.
+    pub fn trace_sink(&self) -> Option<&Arc<TraceSink>> {
+        self.trace.as_ref()
+    }
+
+    /// Mint a per-request trace context when tracing is on.
+    fn mint_ctx(&self) -> Option<TraceCtx> {
+        self.trace.as_ref().map(|sink| TraceCtx { id: sink.mint(), sink: Arc::clone(sink) })
+    }
+
+    /// Record a router-level (no request span) fleet event:
+    /// autoscale decisions, verification rejects.
+    fn emit_fleet_event(&self, event: TraceEvent) {
+        if let Some(sink) = &self.trace {
+            let id = sink.mint();
+            sink.emit(id, 0, 0, 0, event);
         }
     }
 
@@ -346,7 +442,10 @@ impl Router {
         // *before* it can touch any replica's catalog or DRAM. The
         // typed `VerifyError` stays downcastable through anyhow.
         let limit = device_lock(self.runtime.soc(0)).resident_limit();
-        verify_program(&inst.compiled, limit)?;
+        if let Err(e) = verify_program(&inst.compiled, limit) {
+            self.emit_fleet_event(TraceEvent::VerifyReject);
+            return Err(e.into());
+        }
         let image: Arc<dyn ResidentImage> = Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
         let needed = image.warm_footprint_bytes() as u64;
         let n_rep = self.runtime.n_replicas();
@@ -469,8 +568,14 @@ impl Router {
         // program never warms on one replica (that's the point of
         // sharding) — only the per-shard footprints face the limit.
         let limit = device_lock(self.runtime.soc(0)).resident_limit();
-        verify_program(&inst.compiled, u64::MAX)?;
-        verify_shard_plan(&inst.compiled, &shards, limit)?;
+        if let Err(e) = verify_program(&inst.compiled, u64::MAX) {
+            self.emit_fleet_event(TraceEvent::VerifyReject);
+            return Err(e.into());
+        }
+        if let Err(e) = verify_shard_plan(&inst.compiled, &shards, limit) {
+            self.emit_fleet_event(TraceEvent::VerifyReject);
+            return Err(e.into());
+        }
         // DRAM-budget placement against **post-eviction** budgets: the
         // heaviest shard goes to the replica that could free the most
         // resident budget, and so on down the ranks (the final K-shard
@@ -649,9 +754,14 @@ impl Router {
                     Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
                 residency_lock(&self.residency[replica]).pin_image(&image);
                 let (tx, rx) = crate::serve::completion();
+                let trace = self.mint_ctx();
+                if let Some(tr) = &trace {
+                    tr.emit(replica, 0, 0, TraceEvent::Submit { kind: kind.name() });
+                    tr.emit(replica, 0, 0, TraceEvent::Enqueue);
+                }
                 let job = Job {
-                    // xr_lint: allow(wall-clock) -- queue-latency metrics are explicitly host wall-clock; sim time lives in service_cycles
-                    enqueued: Instant::now(),
+                    enqueued: host_now(),
+                    trace,
                     payload: JobPayload::Infer {
                         kind,
                         inst,
@@ -680,13 +790,19 @@ impl Router {
                     *n += 1;
                 }
                 let (tx, rx) = crate::serve::completion();
+                let trace = self.mint_ctx();
+                if let Some(tr) = &trace {
+                    tr.emit(se.replicas[0], 0, 0, TraceEvent::Submit { kind: kind.name() });
+                    tr.emit(se.replicas[0], 0, 0, TraceEvent::Enqueue);
+                }
                 let task: Box<dyn FnOnce() + Send> = Box::new(move || {
                     // panic-fenced like the replica workers: a dying
                     // coordinator must still release the quiesce gate
                     // and fail its waiter with a typed error, never
                     // wedge the router
+                    let panic_trace = trace.clone();
                     let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        se.serve(&rt, input, aux)
+                        se.serve(&rt, input, aux, trace)
                     }));
                     // account before fulfilling (the worker invariant)
                     {
@@ -700,6 +816,9 @@ impl Router {
                     tx.fulfill(match res {
                         Ok(r) => r,
                         Err(p) => {
+                            if let Some(tr) = &panic_trace {
+                                tr.emit(se.replicas[0], 0, 0, TraceEvent::WorkerPanic);
+                            }
                             Err(crate::serve::WorkerPanic::new(se.replicas[0], p).into())
                         }
                     });
@@ -762,9 +881,14 @@ impl Router {
             let replica = (offset + i) % self.active;
             residency_lock(&self.residency[replica]).pin_image(&image);
             let (tx, rx) = crate::serve::completion();
+            let trace = self.mint_ctx();
+            if let Some(tr) = &trace {
+                tr.emit(replica, 0, 0, TraceEvent::Submit { kind: kind.name() });
+                tr.emit(replica, 0, 0, TraceEvent::Enqueue);
+            }
             let job = Job {
-                // xr_lint: allow(wall-clock) -- queue-latency metrics are explicitly host wall-clock; sim time lives in service_cycles
-                enqueued: Instant::now(),
+                enqueued: host_now(),
+                trace,
                 payload: JobPayload::Infer {
                     kind,
                     inst: Arc::clone(&inst),
@@ -803,7 +927,12 @@ impl Router {
         if let Some(ModelEntry::Sharded(se)) = self.models.get(&kind) {
             let se = Arc::clone(se);
             *self.served.entry(kind).or_insert(0) += 1;
-            return se.serve(&self.runtime, input.to_vec(), aux.to_vec());
+            let trace = self.mint_ctx();
+            if let Some(tr) = &trace {
+                tr.emit(se.replicas[0], 0, 0, TraceEvent::Submit { kind: kind.name() });
+                tr.emit(se.replicas[0], 0, 0, TraceEvent::Enqueue);
+            }
+            return se.serve(&self.runtime, input.to_vec(), aux.to_vec(), trace);
         }
         Router::resolve(self.submit(kind, input.to_vec(), aux.to_vec())?)
     }
@@ -932,6 +1061,7 @@ impl Router {
         let target = self.autoscaler.decide(self.active, self.runtime.in_flight());
         self.active = target.clamp(1, self.runtime.n_replicas());
         self.steered_active = Some(self.active);
+        self.emit_fleet_event(TraceEvent::AutoscaleDecision { active: self.active });
         self.active
     }
 
@@ -983,6 +1113,7 @@ impl Router {
         let target = policy.decide(self.active, self.runtime.in_flight(), depth);
         self.active = target.clamp(1, self.runtime.n_replicas());
         self.steered_active = Some(self.active);
+        self.emit_fleet_event(TraceEvent::AutoscaleDecision { active: self.active });
         self.active
     }
 
@@ -1022,15 +1153,11 @@ impl Router {
         device_lock(self.runtime.soc(i)).lifetime.clone()
     }
 
-    /// (hits, misses, preloads, trusted) of replica `i`'s
-    /// operand-encoding cache — the observable proof that registered
-    /// weights encode zero times on the serving path: weight operands
-    /// ride their trusted pins past the cache entirely (`trusted`),
-    /// only per-request activations encode (`misses`).
-    pub fn replica_cache_stats(&self, i: usize) -> (u64, u64, u64, u64) {
+    /// [`CacheStats`] of replica `i`'s operand-encoding cache.
+    pub fn replica_cache_stats(&self, i: usize) -> CacheStats {
         let soc = device_lock(self.runtime.soc(i));
         let c = &soc.enc_cache;
-        (c.hits, c.misses, c.preloads, c.trusted)
+        CacheStats { hits: c.hits, misses: c.misses, preloads: c.preloads, trusted: c.trusted }
     }
 
     /// Pinned (weight-preload) entries resident in replica `i`'s cache.
@@ -1173,7 +1300,7 @@ mod tests {
         let w = weights_for(&g, 7);
         r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
             .unwrap();
-        let stats: Vec<_> = (0..3).map(|i| r.replica_cache_stats(i)).collect();
+        let stats: Vec<_> = (0..3).map(|i| r.replica_cache_stats(i).as_tuple()).collect();
         assert_eq!(stats[0], (0, 0, n_gemm, 0), "floor replica is warm");
         assert_eq!(stats[1], (0, 0, 0, 0), "replica 1 not warmed yet");
         assert_eq!(stats[2], (0, 0, 0, 0), "replica 2 not warmed yet");
@@ -1184,7 +1311,7 @@ mod tests {
             r.route(WorkloadKind::Gaze, &vec![0.01 * q as f32; 16], &[]).unwrap();
         }
         for i in 0..3 {
-            let (hits, misses, preloads, trusted) = r.replica_cache_stats(i);
+            let CacheStats { hits, misses, preloads, trusted } = r.replica_cache_stats(i);
             assert_eq!(preloads, n_gemm, "replica {i} warmed (eagerly or on demand)");
             assert_eq!(hits, 0, "replica {i}: weights never consult the cache");
             assert_eq!(misses, 2 * n_gemm, "replica {i}: only activations encode");
@@ -1202,7 +1329,7 @@ mod tests {
         r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
             .unwrap();
         for i in 0..3 {
-            let (hits, misses, preloads, trusted) = r.replica_cache_stats(i);
+            let (hits, misses, preloads, trusted) = r.replica_cache_stats(i).as_tuple();
             assert_eq!((hits, misses, preloads, trusted), (0, 0, n_gemm, 0), "replica {i}");
         }
     }
@@ -1483,7 +1610,7 @@ mod tests {
         r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
             .unwrap();
         for i in 0..3 {
-            let (_, _, preloads, _) = r.replica_cache_stats(i);
+            let preloads = r.replica_cache_stats(i).preloads;
             assert_eq!(preloads, n_gemm, "replica {i} must be warm at registration");
         }
     }
@@ -1774,5 +1901,131 @@ mod tests {
         assert!(!r.has(WorkloadKind::Vio));
         assert_eq!(r.replica_resident(0), (0, 0));
         assert_eq!(r.replica_resident(1), (0, 0));
+    }
+
+    #[test]
+    fn tracing_on_is_bit_identical_to_tracing_off_in_every_prec_sel() {
+        // the zero-overhead contract: attaching a sink must not perturb
+        // outputs, reports, or placement in any precision mode
+        use crate::obs::TraceSink;
+        for prec in [PrecSel::Fp4x4, PrecSel::Posit4x4, PrecSel::Posit8x2, PrecSel::Posit16x1] {
+            let run = |traced: bool| {
+                let mut r = Router::new(2, SocConfig::default());
+                if traced {
+                    r.set_trace_sink(TraceSink::new(4096));
+                }
+                let g = gaze::build();
+                let w = weights_for(&g, 91);
+                r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, prec).unwrap())
+                    .unwrap();
+                (0..4)
+                    .map(|q| r.route(WorkloadKind::Gaze, &vec![0.02 * q as f32; 16], &[]).unwrap())
+                    .collect::<Vec<_>>()
+            };
+            let off = run(false);
+            let on = run(true);
+            for (a, b) in off.iter().zip(&on) {
+                assert_eq!(a.output, b.output, "{prec:?}: outputs must be bit-identical");
+                assert_eq!(a.report, b.report, "{prec:?}: reports must be bit-identical");
+                assert_eq!(a.replica, b.replica, "{prec:?}: placement must match");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_trace_export_is_byte_identical_for_a_fixed_seed() {
+        use crate::obs::{export_chrome_trace, TraceSink};
+        let run = || {
+            let mut r = Router::new(1, SocConfig::default());
+            let sink = TraceSink::new(4096);
+            r.set_trace_sink(Arc::clone(&sink));
+            let g = gaze::build();
+            let w = weights_for(&g, 92);
+            r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+                .unwrap();
+            for q in 0..3 {
+                r.route(WorkloadKind::Gaze, &vec![0.03 * q as f32; 16], &[]).unwrap();
+            }
+            r.quiesce();
+            export_chrome_trace(&sink.records())
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "fixed-seed serial runs must export byte-identically");
+        assert!(a.contains("\"ph\":\"X\""), "complete events present");
+        assert!(a.contains("Submit") && a.contains("GemmJob") && a.contains("Complete"));
+    }
+
+    #[test]
+    fn traced_request_spans_cover_submit_to_completion() {
+        use crate::obs::{TraceEvent, TraceSink};
+        let mut r = Router::new(1, SocConfig::default());
+        let sink = TraceSink::new(4096);
+        r.set_trace_sink(Arc::clone(&sink));
+        let g = gaze::build();
+        let n_gemm = g.compute_layers().len();
+        let w = weights_for(&g, 93);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        let out = r.route(WorkloadKind::Gaze, &vec![0.1; 16], &[]).unwrap();
+        r.quiesce();
+        let recs = sink.records();
+        let names: Vec<&str> = recs.iter().map(|rec| rec.event.name()).collect();
+        for want in ["Submit", "Enqueue", "Dispatch", "GemmJob", "Requantize", "Complete"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        assert_eq!(
+            recs.iter().filter(|rec| matches!(rec.event, TraceEvent::GemmJob { .. })).count(),
+            n_gemm,
+            "one GemmJob span per compute layer"
+        );
+        let gemm_span_cycles: u64 = recs
+            .iter()
+            .filter(|rec| matches!(rec.event, TraceEvent::GemmJob { .. }))
+            .map(|rec| rec.dur_cycles)
+            .sum();
+        assert_eq!(
+            gemm_span_cycles,
+            out.report.gemm_cycles(),
+            "GemmJob spans re-lay the report's own accounting, never a second one"
+        );
+        let complete = recs
+            .iter()
+            .find(|rec| matches!(rec.event, TraceEvent::Complete))
+            .expect("Complete marker");
+        assert_eq!(
+            complete.begin_cycles,
+            out.report.total_cycles(),
+            "Complete is stamped at the request's total simulated cost"
+        );
+        assert_eq!(sink.dropped(), 0);
+    }
+
+    #[test]
+    fn registry_snapshot_folds_fleet_counters() {
+        use crate::obs::TraceSink;
+        let mut r = Router::new(2, SocConfig::default());
+        let sink = TraceSink::new(4096);
+        r.set_trace_sink(Arc::clone(&sink));
+        let g = gaze::build();
+        let w = weights_for(&g, 94);
+        r.register(WorkloadKind::Gaze, ModelInstance::uniform(g, w, PrecSel::Posit8x2).unwrap())
+            .unwrap();
+        for q in 0..4 {
+            r.route(WorkloadKind::Gaze, &vec![0.01 * q as f32; 16], &[]).unwrap();
+        }
+        r.quiesce();
+        let snap = crate::obs::snapshot(&r);
+        assert_eq!(snap["sim_requests_served"], 4);
+        assert_eq!(snap["sim_served_gaze"], 4);
+        assert_eq!(snap["sim_completed_jobs"], 4);
+        assert!(snap["sim_trace_events"] > 0, "sink events surface in the snapshot");
+        assert_eq!(snap["sim_trace_dropped"], 0);
+        assert!(snap.contains_key("sim_cache_misses_r0"));
+        assert!(snap.contains_key("sim_lifetime_cycles_r1"));
+        // every key follows the bench_gate simulated-field convention
+        assert!(snap
+            .keys()
+            .all(|k| k.starts_with("sim_") || k.contains("cycles") || k.contains("bytes")));
     }
 }

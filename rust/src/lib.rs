@@ -39,6 +39,10 @@
 //!   frame batcher, workload router with async submission and parallel
 //!   batch execution across SoC replicas, per-request latency stamps,
 //!   and the full perception pipeline.
+//! * [`obs`] — deterministic fleet observability: simulated-cycle trace
+//!   spans from submit to completion (bounded sink, Chrome/Perfetto
+//!   export) and the unified `sim_*` counter registry that `bench_gate`
+//!   snapshots ratchet in CI.
 //! * [`runtime`] — PJRT CPU client that loads the JAX/Pallas-authored
 //!   HLO artifacts and runs them from the Rust request path (behind the
 //!   `pjrt` feature; the offline build uses an API-compatible stub).
@@ -54,6 +58,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod models;
 pub mod npe;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -7,6 +7,10 @@
 //! xr-npe gemm M K N [prec]            run one GEMM on the co-processor sim
 //! xr-npe pipeline [frames]            run the XR perception pipeline
 //! xr-npe serve [requests] [replicas]  drive the async serving runtime
+//! xr-npe trace [workload] [requests] [out.json]
+//!                                     record a deterministic fleet trace
+//!                                     (Chrome/Perfetto JSON + registry
+//!                                     snapshot JSONL + text timeline)
 //! xr-npe artifacts [dir]              list compiled model artifacts
 //! ```
 //!
@@ -36,9 +40,12 @@ fn run() -> Result<()> {
         Some("gemm") => gemm(&args[1..]),
         Some("pipeline") => pipeline(&args[1..]),
         Some("serve") => serve(&args[1..]),
+        Some("trace") => trace(&args[1..]),
         Some("artifacts") => artifacts(&args[1..]),
         Some(other) => {
-            bail!("unknown subcommand `{other}` (try: info, gemm, pipeline, serve, artifacts)")
+            bail!(
+                "unknown subcommand `{other}` (try: info, gemm, pipeline, serve, trace, artifacts)"
+            )
         }
     }
 }
@@ -231,6 +238,75 @@ fn serve(args: &[String]) -> Result<()> {
             "  replica {i}: {:>12} lifetime cycles  resident {:>7} B (+{free} B free-list)",
             life.total_cycles, mark
         );
+    }
+    Ok(())
+}
+
+/// Record a deterministic fleet trace: run `requests` requests of one
+/// workload through a 2-replica traced router, then write the
+/// Chrome/Perfetto trace JSON, a `bench_gate`-shaped registry-snapshot
+/// JSONL next to it, and print the head of the text timeline. Every
+/// stamp is simulated cycles — a fixed invocation reproduces the trace
+/// byte-for-byte.
+fn trace(args: &[String]) -> Result<()> {
+    use xr_npe::models::LayerKind;
+    use xr_npe::obs::{export_chrome_trace, snapshot, text_timeline, to_bench_jsonl, TraceSink};
+    use xr_npe::serve::{CycleAutoscaleConfig, CycleAutoscaler};
+    let workload = args.first().map(String::as_str).unwrap_or("gaze");
+    let requests: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let out = args.get(2).map(String::as_str).unwrap_or("trace.json");
+
+    let (kind, graph) = match workload {
+        "gaze" => (WorkloadKind::Gaze, gaze::build()),
+        "vio" => (WorkloadKind::Vio, ulvio::build()),
+        "classify" => (WorkloadKind::Classify, effnet::build()),
+        other => bail!("unknown workload `{other}` (try: gaze, vio, classify)"),
+    };
+    let in_len = graph.input.numel();
+    let aux_len: usize = graph
+        .layers
+        .iter()
+        .filter_map(|l| match l.kind {
+            LayerKind::ConcatAux { n } => Some(n),
+            _ => None,
+        })
+        .sum();
+    let w = random_weights(&graph, 42);
+
+    let mut router = Router::new(2, SocConfig::default());
+    let sink = TraceSink::new(1 << 16);
+    router.set_trace_sink(std::sync::Arc::clone(&sink));
+    router.register(kind, ModelInstance::uniform(graph, w, PrecSel::Posit8x2)?)?;
+
+    for q in 0..requests {
+        let input: Vec<f32> =
+            (0..in_len).map(|j| ((q * in_len + j) as f32 * 0.05).sin() * 0.5).collect();
+        let aux: Vec<f32> = (0..aux_len).map(|j| (j as f32 * 0.11).cos() * 0.2).collect();
+        router.route(kind, &input, &aux)?;
+    }
+    router.quiesce();
+    // one cycle-driven autoscale tick so the trace shows a fleet event
+    // too — inputs are simulator output, so this stays reproducible
+    let mut policy =
+        CycleAutoscaler::new(CycleAutoscaleConfig { floor: 1, max: 2, ..Default::default() });
+    let active = router.autoscale_tick_cycles(&mut policy);
+
+    let recs = sink.records();
+    std::fs::write(out, export_chrome_trace(&recs))?;
+    let snap = snapshot(&router);
+    let metrics_path = format!("{out}.metrics.jsonl");
+    std::fs::write(&metrics_path, to_bench_jsonl("trace_snapshot", &snap))?;
+
+    println!(
+        "recorded {} trace events ({} dropped) over {requests} {workload} requests; {active} replicas active",
+        recs.len(),
+        sink.dropped()
+    );
+    println!("chrome/perfetto trace -> {out}   (open in https://ui.perfetto.dev or chrome://tracing)");
+    println!("registry snapshot     -> {metrics_path}");
+    println!("\ntimeline (first 20 spans):");
+    for line in text_timeline(&recs).lines().take(20) {
+        println!("  {line}");
     }
     Ok(())
 }

@@ -787,7 +787,10 @@ impl CompiledModel {
                 match (part, shards[si].steps[g.gemm_idx].slice) {
                     // incremental merge as each partial lands — exact,
                     // so arrival order cannot change the result
-                    (PartialOut::Quires(p), ShardSlice::K { .. }) => quires.merge_block(0, &p),
+                    (PartialOut::Quires(p), ShardSlice::K { .. }) => {
+                        quires.merge_block(0, &p);
+                        ch.on_merge(si, merge_pass_cycles(si, (g.m * g.n) as u64));
+                    }
                     // local-tail block: already rounded + folded on the
                     // shard, lands in its disjoint columns
                     (PartialOut::Cols(block), ShardSlice::N { n0, n1 }) => {
@@ -1229,6 +1232,12 @@ pub const SHARD_INFLIGHT_WINDOW: usize = 4;
 pub trait ShardChannel {
     fn dispatch(&mut self, shard_idx: usize, gemm_idx: usize, a: Matrix, s_a: f64) -> Result<()>;
     fn wait_any(&mut self) -> Result<(usize, PartialOut, JobReport)>;
+    /// Observability hook: called right after shard `shard_idx`'s
+    /// K-split partial is merged into the layer's quires, with that
+    /// shard's deterministic share of the layer reduction cost
+    /// ([`merge_pass_cycles`]). Default is a no-op so transports that
+    /// do not trace (inline test channels) need no code.
+    fn on_merge(&mut self, _shard_idx: usize, _merge_cycles: u64) {}
 }
 
 /// Per-layer timing snapshot for the streaming-overlap model: each
@@ -1323,6 +1332,22 @@ pub fn reduction_cost(n_shards: usize, m: usize, n: usize) -> (u64, u64) {
     let bytes = n_shards as u64 * outs * QUIRE_SPILL_BYTES as u64;
     let cycles = (n_shards.saturating_sub(1) as u64 * outs).div_ceil(4);
     (cycles, bytes)
+}
+
+/// Deterministic per-shard share of [`reduction_cost`]'s cycle term,
+/// used to stamp trace merge spans ([`ShardChannel::on_merge`]): shard
+/// `si` is charged merge pass `si` of [`streamed_merge_timing`]'s
+/// tiling, so the shares sum to the layer's exact reduction cycles
+/// (the sum telescopes to `(n_shards−1)·outs` div-ceil 4) and are a
+/// function of the shard *index*, never of the host arrival order —
+/// Barrier and Streaming runs stamp identical spans. Pass 0 (the first
+/// merge into the zeroed quires) is free, matching the timing model.
+pub fn merge_pass_cycles(si: usize, outs: u64) -> u64 {
+    if si == 0 {
+        0
+    } else {
+        (si as u64 * outs).div_ceil(4) - ((si as u64 - 1) * outs).div_ceil(4)
+    }
 }
 
 /// Reduction term for one layer given how it was actually sliced
@@ -1956,7 +1981,7 @@ mod tests {
                 Arc::clone(&a) as Arc<dyn ResidentImage>,
                 Arc::clone(&c) as Arc<dyn ResidentImage>,
             ];
-            let new_top = compact_resident(&mut soc, &live);
+            let new_top = compact_resident(&mut soc, &live).unwrap();
             assert!(new_top < mark, "{sel:?}: compaction must reclaim the hole");
             assert_eq!(soc.resident_free_bytes(), 0, "{sel:?}");
             let (got_a, got_ra) = a.replay(&mut soc, &xa, &[]).unwrap();
@@ -2062,6 +2087,80 @@ mod tests {
         aux: &[f32],
     ) -> (Vec<f32>, ExecReport) {
         run_sharded_inline_flow(compiled, n_shards, socs, input, aux, ShardFlow::Streaming, None)
+    }
+
+    /// [`ShardChannel`] adapter that records trace spans around any
+    /// inner transport — the same wiring the router's runtime channel
+    /// uses, reused here to differential-test the determinism contract.
+    struct TracingChannel<C: ShardChannel> {
+        inner: C,
+        lanes: crate::obs::ShardLaneTracer,
+    }
+
+    impl<C: ShardChannel> ShardChannel for TracingChannel<C> {
+        fn dispatch(&mut self, si: usize, gi: usize, a: Matrix, s_a: f64) -> Result<()> {
+            self.inner.dispatch(si, gi, a, s_a)
+        }
+
+        fn wait_any(&mut self) -> Result<(usize, PartialOut, JobReport)> {
+            let (si, part, rep) = self.inner.wait_any()?;
+            self.lanes.on_partial(si, rep.total_cycles);
+            Ok((si, part, rep))
+        }
+
+        fn on_merge(&mut self, si: usize, merge_cycles: u64) {
+            self.lanes.on_merge(si, merge_cycles);
+        }
+    }
+
+    #[test]
+    fn barrier_and_streaming_traces_have_equal_event_multisets() {
+        // the obs determinism contract: span stamps are functions of the
+        // per-shard costs, so the dispatch flow (and a scrambled arrival
+        // permutation) must not change the canonical event multiset
+        use crate::obs::{canonical_multiset, ShardLaneTracer, TraceCtx, TraceSink};
+        let g = ulvio::build();
+        let w = random_weights(&g, 430);
+        let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+        let compiled = compile(&g, &w, &plan).unwrap();
+        let input = test_input(g.input.numel(), 0.3);
+        let aux = test_input(aux_len(&g), 0.7);
+        let n_shards = 3;
+        let shards: Vec<Arc<ShardedModel>> =
+            shard(&compiled, n_shards).unwrap().into_iter().map(Arc::new).collect();
+        let mut run = |flow: ShardFlow, order_seed: Option<u64>| {
+            let sink = TraceSink::new(8192);
+            let ctx = TraceCtx { sink: Arc::clone(&sink), id: sink.mint() };
+            let mut socs: Vec<Soc> =
+                (0..n_shards).map(|_| Soc::new(SocConfig::default())).collect();
+            let inner = InlineChannel {
+                shards: &shards,
+                socs: &mut socs,
+                ready: Vec::new(),
+                order: order_seed.map(Rng::new),
+            };
+            let mut ch = TracingChannel {
+                inner,
+                lanes: ShardLaneTracer::new(ctx, (0..n_shards).collect()),
+            };
+            compiled.run_sharded(&shards, &input, &aux, &mut ch, flow).expect("sharded run");
+            sink.records()
+        };
+        let barrier = run(ShardFlow::Barrier, None);
+        let streaming = run(ShardFlow::Streaming, Some(0x5eed));
+        assert!(!barrier.is_empty(), "sharded run must emit shard spans");
+        let has_k_split =
+            shards[0].steps.iter().any(|st| matches!(st.slice, ShardSlice::K { .. }));
+        assert_eq!(
+            barrier.iter().any(|r| matches!(r.event, crate::obs::TraceEvent::QuireMerge { .. })),
+            has_k_split,
+            "K-split layers (and only those) produce merge spans"
+        );
+        assert_eq!(
+            canonical_multiset(&barrier),
+            canonical_multiset(&streaming),
+            "flows must trace the same canonical event multiset"
+        );
     }
 
     #[test]

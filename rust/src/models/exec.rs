@@ -75,6 +75,17 @@ impl ExecReport {
         self.jobs.total_cycles + self.vector_cycles + self.reduce_cycles
     }
 
+    /// Sum of the per-layer GEMM cycles — the portion of
+    /// [`ExecReport::total_cycles`] the tracer renders as `GemmJob`
+    /// spans; the remainder splits into the `Requantize` span
+    /// (`vector_cycles`) and, on the sharded path, the `QuireMerge`
+    /// spans (`reduce_cycles`). The trace decomposition in
+    /// [`crate::obs`] is therefore exactly this report, re-laid-out on
+    /// a timeline — never a second accounting.
+    pub fn gemm_cycles(&self) -> u64 {
+        self.per_layer_cycles.iter().map(|&(_, c)| c).sum()
+    }
+
     pub fn merge(&mut self, o: &ExecReport) {
         self.jobs.merge(&o.jobs);
         self.vector_cycles += o.vector_cycles;

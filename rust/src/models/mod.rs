@@ -37,15 +37,15 @@ pub mod ulvio;
 pub mod verify;
 
 pub use compile::{
-    compile, reduction_cost, shard, CompileError, CompiledModel, GatherMap, LocalTail,
-    PartialOut, ShardChannel, ShardError, ShardFlow, ShardSlice, ShardStep, ShardedModel,
-    WarmStateError, SHARD_INFLIGHT_WINDOW,
+    compile, merge_pass_cycles, reduction_cost, shard, CompileError, CompiledModel, GatherMap,
+    LocalTail, PartialOut, ShardChannel, ShardError, ShardFlow, ShardSlice, ShardStep,
+    ShardedModel, WarmStateError, SHARD_INFLIGHT_WINDOW,
 };
 pub use exec::{Backend, ExecReport, Executor};
 pub use graph::{ActKind, Layer, LayerKind, ModelGraph, PoolKind};
 pub use residency::{
-    compact_resident, residency_lock, Candidate, EvictionPolicy, LruPolicy, ResidencyError,
-    ResidencyManager, ResidencyStats, ResidentImage,
+    compact_resident, residency_lock, AdmitOutcome, Candidate, EvictionPolicy, LruPolicy,
+    ResidencyError, ResidencyManager, ResidencyStats, ResidentImage,
 };
 pub use verify::{verify_program, verify_shard_plan, ProgramProof, VerifyError};
 

@@ -208,6 +208,21 @@ pub struct ResidencyStats {
     pub resident_high_water: u64,
 }
 
+/// What one admission actually did — the per-request delta of
+/// [`ResidencyStats`], returned by [`ResidencyManager::admit_outcome`]
+/// so the serving worker can stamp `Evict`/`Compact`/`ColdWarm` trace
+/// events against the request that caused them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmitOutcome {
+    /// Catalog entries this admission evicted.
+    pub evictions: u64,
+    /// Compaction passes this admission triggered.
+    pub compactions: u64,
+    /// 1 when this admission cold-warmed the model, 0 when it was
+    /// already warm.
+    pub cold_warms: u64,
+}
+
 struct Entry {
     image: Arc<dyn ResidentImage>,
     /// Budgeted footprint, bytes (frozen at insert).
@@ -354,6 +369,18 @@ impl ResidencyManager {
         soc: &mut Soc,
         image: &Arc<dyn ResidentImage>,
     ) -> Result<(), ResidencyError> {
+        self.admit_outcome(soc, image).map(|_| ())
+    }
+
+    /// [`ResidencyManager::admit`], additionally reporting what the
+    /// admission did as an [`AdmitOutcome`] delta (the trace layer's
+    /// source for `Evict`/`Compact`/`ColdWarm` events).
+    pub fn admit_outcome(
+        &mut self,
+        soc: &mut Soc,
+        image: &Arc<dyn ResidentImage>,
+    ) -> Result<AdmitOutcome, ResidencyError> {
+        let before = self.stats;
         let uid = image.uid();
         self.clock += 1;
         let clock = self.clock;
@@ -379,7 +406,7 @@ impl ResidencyManager {
             e.warm_hint = warm;
         }
         if warm {
-            return Ok(());
+            return Ok(AdmitOutcome::default());
         }
         // policy-driven eviction until the budgeted warm set fits
         while self.warm_bytes(soc) + need > self.budget {
@@ -427,7 +454,7 @@ impl ResidencyManager {
         // reclaims both, and when nothing is reclaimable the retry
         // fails exactly like the first attempt did.
         if image.ensure_warm(soc).is_err() {
-            self.compact(soc);
+            self.compact(soc)?;
             image.ensure_warm(soc)?;
         }
         if let Some(e) = self.entries.get_mut(&uid) {
@@ -436,13 +463,19 @@ impl ResidencyManager {
         self.stats.cold_warms += 1;
         let now = self.warm_bytes(soc);
         self.stats.resident_high_water = self.stats.resident_high_water.max(now);
-        Ok(())
+        Ok(AdmitOutcome {
+            evictions: self.stats.evictions - before.evictions,
+            compactions: self.stats.compactions - before.compactions,
+            cold_warms: self.stats.cold_warms - before.cold_warms,
+        })
     }
 
     /// Defragment the resident region: slide every warm catalog model's
     /// live blocks down over the reclaimed holes and patch their
-    /// arenas. Serving is bit-identical afterwards.
-    pub fn compact(&mut self, soc: &mut Soc) {
+    /// arenas. Serving is bit-identical afterwards. An `Err` means the
+    /// simulated device refused a relocation ([`compact_resident`]) —
+    /// nothing was counted and the caller's admission fails typed.
+    pub fn compact(&mut self, soc: &mut Soc) -> Result<(), SocError> {
         let mut images: Vec<Arc<dyn ResidentImage>> = self
             .entries
             .values()
@@ -450,8 +483,9 @@ impl ResidencyManager {
             .map(|e| Arc::clone(&e.image))
             .collect();
         images.sort_by_key(|i| i.uid());
-        compact_resident(soc, &images);
+        compact_resident(soc, &images)?;
         self.stats.compactions += 1;
+        Ok(())
     }
 }
 
@@ -461,8 +495,15 @@ impl ResidencyManager {
 /// is provably at or below its source), the stale free list is dropped
 /// ([`Soc::resident_compacted`]) and every arena is patched
 /// ([`ResidentImage::rebase`]). `images` must cover **every** live
-/// resident allocation on the SoC. Returns the new watermark.
-pub fn compact_resident(soc: &mut Soc, images: &[Arc<dyn ResidentImage>]) -> u64 {
+/// resident allocation on the SoC. Returns the new watermark. A failed
+/// relocation (`dst <= addr` is proven by the ascending sort, so only a
+/// simulator bug can refuse one) propagates as a typed [`SocError`]
+/// instead of panicking — the admission that triggered the compaction
+/// fails, the fleet keeps serving.
+pub fn compact_resident(
+    soc: &mut Soc,
+    images: &[Arc<dyn ResidentImage>],
+) -> Result<u64, SocError> {
     // (addr, len, image idx, block idx); zero-length blocks sort before
     // a same-address live block so their relocation target stays <= src
     let mut blocks: Vec<(u64, usize, usize, usize)> = Vec::new();
@@ -480,8 +521,7 @@ pub fn compact_resident(soc: &mut Soc, images: &[Arc<dyn ResidentImage>]) -> u64
         let dst = top.next_multiple_of(64);
         debug_assert!(dst <= addr, "compaction must only move blocks down");
         if dst != addr && len > 0 {
-            // xr_lint: allow(no-panic) -- dst <= addr is proven by the ascending sort, so the move can only fail on a simulator bug
-            soc.move_resident(addr, dst, len).expect("compaction move stays in bounds");
+            soc.move_resident(addr, dst, len)?;
         }
         new_addrs[ii][bi] = dst;
         top = dst + len as u64;
@@ -490,7 +530,7 @@ pub fn compact_resident(soc: &mut Soc, images: &[Arc<dyn ResidentImage>]) -> u64
     for (img, addrs) in images.iter().zip(&new_addrs) {
         img.rebase(soc, addrs);
     }
-    top
+    Ok(top)
 }
 
 #[cfg(test)]
@@ -658,7 +698,7 @@ mod tests {
                 })
                 .collect();
             let old_mark = soc.resident_mark();
-            let new_top = compact_resident(&mut soc, &live);
+            let new_top = compact_resident(&mut soc, &live).unwrap();
             assert!(new_top < old_mark, "{sel:?}: compaction must reclaim the hole");
             assert_eq!(soc.resident_free_bytes(), 0);
             let after: Vec<Vec<u8>> = live

@@ -1,0 +1,235 @@
+//! Trace exporters: Chrome trace-event / Perfetto JSON and a compact
+//! text timeline for tests.
+//!
+//! Both exporters are **deterministic**: records go through
+//! [`canonical_sort`] — (begin cycle, trace id, seq) — and all string
+//! building is explicit, so a fixed-seed serial run exports a
+//! byte-identical trace on every invocation (asserted in
+//! `coordinator/router.rs`).
+//!
+//! The Chrome format maps one simulated cycle to one microsecond-unit
+//! `ts` tick (the trace has no real-time axis at all), replicas to
+//! `tid`s, and the whole fleet to `pid` 0. Open the file in
+//! [Perfetto](https://ui.perfetto.dev) or `chrome://tracing`. Because
+//! record stamps are request-relative (see the module docs in
+//! [`crate::obs`]), the exporter lays requests out end-to-end in
+//! ascending [`TraceId`] order — a *logical* timeline that shows each
+//! request's internal parallelism (shard lanes overlap across `tid`s)
+//! without claiming cross-request concurrency.
+
+use std::fmt::Write as _;
+
+use super::{TraceEvent, TraceId, TraceRecord};
+
+/// Canonical deterministic order: (begin cycle, trace id, seq).
+pub fn canonical_sort(records: &mut [TraceRecord]) {
+    records.sort_by_key(|r| (r.begin_cycles, r.id, r.seq));
+}
+
+/// The canonical event multiset: every record minus its arrival-order
+/// `seq`, sorted. Two runs of the same requests — e.g. a Barrier and a
+/// Streaming sharded run — must produce equal multisets even though
+/// their `seq` interleavings differ.
+pub fn canonical_multiset(records: &[TraceRecord]) -> Vec<(TraceId, usize, u64, u64, TraceEvent)> {
+    let mut keys: Vec<_> = records
+        .iter()
+        .map(|r| (r.id, r.replica, r.begin_cycles, r.dur_cycles, r.event))
+        .collect();
+    keys.sort();
+    keys
+}
+
+/// Render the payload fields of an event as Chrome trace `args`.
+fn args_json(out: &mut String, ev: &TraceEvent) {
+    match ev {
+        TraceEvent::Submit { kind } => {
+            let _ = write!(out, ",\"kind\":\"{kind}\"");
+        }
+        TraceEvent::GemmJob { layer } => {
+            let _ = write!(out, ",\"layer\":{layer}");
+        }
+        TraceEvent::ShardPartial { shard } | TraceEvent::QuireMerge { shard } => {
+            let _ = write!(out, ",\"shard\":{shard}");
+        }
+        TraceEvent::Evict { count }
+        | TraceEvent::Compact { count }
+        | TraceEvent::ColdWarm { count } => {
+            let _ = write!(out, ",\"count\":{count}");
+        }
+        TraceEvent::AutoscaleDecision { active } => {
+            let _ = write!(out, ",\"active\":{active}");
+        }
+        TraceEvent::Enqueue
+        | TraceEvent::Dispatch
+        | TraceEvent::Requantize
+        | TraceEvent::VerifyReject
+        | TraceEvent::WorkerPanic
+        | TraceEvent::Complete => {}
+    }
+}
+
+/// Per-request end-to-end layout: each trace id is offset by the summed
+/// spans of every lower id, in ascending id order.
+fn request_offsets(records: &[TraceRecord]) -> Vec<(TraceId, u64)> {
+    let mut ids: Vec<TraceId> = records.iter().map(|r| r.id).collect();
+    ids.sort();
+    ids.dedup();
+    let mut offsets = Vec::with_capacity(ids.len());
+    let mut cursor = 0u64;
+    for id in ids {
+        offsets.push((id, cursor));
+        let span = records
+            .iter()
+            .filter(|r| r.id == id)
+            .map(|r| r.begin_cycles + r.dur_cycles)
+            .max()
+            .unwrap_or(0);
+        cursor += span;
+    }
+    offsets
+}
+
+/// Export records as Chrome trace-event JSON (object form, complete
+/// `"X"` events; `ts`/`dur` are simulated cycles). Deterministic:
+/// byte-identical output for identical record sets.
+pub fn export_chrome_trace(records: &[TraceRecord]) -> String {
+    let mut recs = records.to_vec();
+    canonical_sort(&mut recs);
+    let offsets = request_offsets(&recs);
+    let offset_of = |id: TraceId| -> u64 {
+        offsets
+            .iter()
+            .find(|(i, _)| *i == id)
+            .map(|(_, off)| *off)
+            .unwrap_or(0)
+    };
+    // deterministic tid listing: every replica that appears, ascending
+    let mut tids: Vec<usize> = recs.iter().map(|r| r.replica).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    let mut out = String::new();
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    let mut first = true;
+    let mut sep = |out: &mut String, first: &mut bool| {
+        if *first {
+            *first = false;
+        } else {
+            out.push_str(",\n");
+        }
+    };
+    sep(&mut out, &mut first);
+    out.push_str(
+        "{\"ph\":\"M\",\"pid\":0,\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"xr-npe fleet (simulated cycles)\"}}",
+    );
+    for tid in &tids {
+        sep(&mut out, &mut first);
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"replica {tid}\"}}}}"
+        );
+    }
+    for r in &recs {
+        sep(&mut out, &mut first);
+        let ts = offset_of(r.id) + r.begin_cycles;
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"cat\":\"xr\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":0,\"tid\":{},\"args\":{{\"trace_id\":{},\"seq\":{}",
+            r.event.name(),
+            ts,
+            r.dur_cycles,
+            r.replica,
+            r.id.0,
+            r.seq,
+        );
+        args_json(&mut out, &r.event);
+        out.push_str("}}");
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Compact one-line-per-record text timeline, canonically sorted — the
+/// grep-able form tests assert against.
+pub fn text_timeline(records: &[TraceRecord]) -> String {
+    let mut recs = records.to_vec();
+    canonical_sort(&mut recs);
+    let mut out = String::new();
+    for r in &recs {
+        let _ = writeln!(
+            out,
+            "t{:08}+{:06} id{:04} r{} {:?}",
+            r.begin_cycles, r.dur_cycles, r.id.0, r.replica, r.event
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::TraceSink;
+    use super::*;
+
+    fn sample() -> Vec<TraceRecord> {
+        let sink = TraceSink::new(64);
+        let a = sink.mint();
+        let b = sink.mint();
+        sink.emit(a, 0, 0, 0, TraceEvent::Submit { kind: "vio" });
+        sink.emit(a, 0, 0, 100, TraceEvent::GemmJob { layer: 0 });
+        sink.emit(b, 1, 0, 0, TraceEvent::Submit { kind: "gaze" });
+        sink.emit(a, 0, 100, 40, TraceEvent::Requantize);
+        sink.emit(b, 1, 0, 80, TraceEvent::ShardPartial { shard: 0 });
+        sink.emit(b, 1, 80, 8, TraceEvent::QuireMerge { shard: 0 });
+        sink.emit(a, 0, 140, 0, TraceEvent::Complete);
+        sink.emit(b, 1, 88, 0, TraceEvent::Complete);
+        sink.records()
+    }
+
+    #[test]
+    fn export_is_byte_identical_across_calls() {
+        let recs = sample();
+        assert_eq!(export_chrome_trace(&recs), export_chrome_trace(&recs));
+        assert_eq!(text_timeline(&recs), text_timeline(&recs));
+    }
+
+    #[test]
+    fn export_is_order_independent_modulo_seq() {
+        // shuffled emission order sorts back to the same canonical view
+        let recs = sample();
+        let mut rev: Vec<TraceRecord> = recs.iter().rev().cloned().collect();
+        // renumber seq to emission order of the reversed stream
+        for (i, r) in rev.iter_mut().enumerate() {
+            r.seq = i as u64;
+        }
+        assert_eq!(canonical_multiset(&recs), canonical_multiset(&rev));
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let txt = export_chrome_trace(&sample());
+        assert!(txt.starts_with("{\"displayTimeUnit\""), "{txt}");
+        assert!(txt.contains("\"ph\":\"X\""));
+        assert!(txt.contains("\"name\":\"GemmJob\""));
+        assert!(txt.contains("\"kind\":\"vio\""));
+        assert!(txt.contains("\"thread_name\""));
+        // request b (id 1) is laid out after request a's 140-cycle span:
+        // its merge begins at 140 + 80
+        assert!(txt.contains("\"name\":\"QuireMerge\",\"cat\":\"xr\",\"ph\":\"X\",\"ts\":220"), "{txt}");
+        assert!(txt.trim_end().ends_with("]}"));
+    }
+
+    #[test]
+    fn timeline_is_sorted_by_begin_cycle() {
+        let txt = text_timeline(&sample());
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines.len(), 8);
+        assert!(lines[0].contains("Submit"), "{txt}");
+        // begin stamps (the leading `t` column) are non-decreasing
+        let begins: Vec<&str> = lines.iter().map(|l| &l[..9]).collect();
+        let mut sorted = begins.clone();
+        sorted.sort();
+        assert_eq!(begins, sorted, "{txt}");
+    }
+}

@@ -1,0 +1,384 @@
+//! Deterministic fleet tracing and unified metrics.
+//!
+//! The serving stack accumulates several stat surfaces
+//! ([`crate::serve::RuntimeMetrics`], residency stats, per-replica cache
+//! counters, [`crate::models::ExecReport`]) but none of them shows *one
+//! request's* life: queue wait, dispatch, per-shard partials, streamed
+//! quire merges, the evictions it triggered. This module adds that
+//! timeline view — and because `xr_lint` bans wall-clock reads in
+//! library code, it is **fully deterministic**: every span is stamped
+//! with simulated cycles taken from the existing
+//! [`crate::models::JobReport`] / [`crate::models::ExecReport`]
+//! accounting plus a monotone sequence number. Traces are therefore
+//! diffable, assertable in tests, and gateable in CI like any other
+//! simulated quantity.
+//!
+//! # Stamping model
+//!
+//! Every event is **request-relative**: cycle 0 is the moment the
+//! request's compute starts, and all begin/duration stamps are derived
+//! purely from report fields (`per_layer_cycles`, shard
+//! `JobReport::total_cycles`, [`crate::models::compile::reduction_cost`]
+//! merge shares). This makes the stamps independent of host scheduling
+//! *and* of the dispatch flow: a [`ShardFlow::Barrier`] run and a
+//! [`ShardFlow::Streaming`] run of the same request produce the same
+//! event multiset (asserted by a differential test in
+//! `models/compile.rs`), differing only in arrival-order `seq`. The
+//! exporter ([`export_chrome_trace`]) lays requests out on a global
+//! timeline deterministically at export time.
+//!
+//! [`ShardFlow::Barrier`]: crate::models::compile::ShardFlow::Barrier
+//! [`ShardFlow::Streaming`]: crate::models::compile::ShardFlow::Streaming
+//!
+//! # Zero overhead when off
+//!
+//! Tracing rides along as an `Option<TraceCtx>`; with the sink disabled
+//! no event is constructed and no lock is touched, and even with it
+//! enabled the stamps are read from report values that were already
+//! computed — the traced run's `ExecReport`s are bit-identical to the
+//! untraced run's (differential test in `coordinator/router.rs`).
+//!
+//! # Boundedness
+//!
+//! [`TraceSink`] is a fixed-capacity ring: once full, new events are
+//! counted in [`TraceSink::dropped`] and discarded — the sink never
+//! grows and never panics, so it is safe to leave enabled in a
+//! long-running fleet.
+
+pub mod export;
+pub mod registry;
+
+pub use export::{canonical_multiset, canonical_sort, export_chrome_trace, text_timeline};
+pub use registry::{snapshot, to_bench_jsonl, MetricsRegistry};
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Per-request trace identifier, minted by `Router::submit` /
+/// `submit_batch` (fleet-internal events such as autoscale decisions
+/// mint their own). Ids are sequential per sink, so a fixed submission
+/// order yields fixed ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u64);
+
+/// Typed trace event. Payload fields carry the structural identity of
+/// the span (which layer, which shard); cycle stamps live on the
+/// enclosing [`TraceRecord`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TraceEvent {
+    /// Request accepted by the router for the named workload.
+    Submit { kind: &'static str },
+    /// Job pushed onto a replica's bounded work queue.
+    Enqueue,
+    /// Worker popped the job off its queue.
+    Dispatch,
+    /// One GEMM layer's engine run (whole-model path).
+    GemmJob { layer: usize },
+    /// One shard's partial-GEMM job for a layer (sharded path).
+    ShardPartial { shard: usize },
+    /// Coordinator merge pass folding that shard's partial quires in.
+    QuireMerge { shard: usize },
+    /// Coordinator-side vector-unit work: postprocess folds and the
+    /// global requantization pass.
+    Requantize,
+    /// Residency admission evicted `count` catalog entries.
+    Evict { count: u64 },
+    /// Residency admission ran `count` DRAM compaction passes.
+    Compact { count: u64 },
+    /// Residency admission cold-warmed `count` images.
+    ColdWarm { count: u64 },
+    /// Autoscaler resized the fleet to `active` replicas.
+    AutoscaleDecision { active: usize },
+    /// Static verification rejected a program at registration.
+    VerifyReject,
+    /// A worker panic was fenced and converted to an error.
+    WorkerPanic,
+    /// Request finished; `begin_cycles` is its total simulated cost.
+    Complete,
+}
+
+impl TraceEvent {
+    /// Stable event name for exporters.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Submit { .. } => "Submit",
+            TraceEvent::Enqueue => "Enqueue",
+            TraceEvent::Dispatch => "Dispatch",
+            TraceEvent::GemmJob { .. } => "GemmJob",
+            TraceEvent::ShardPartial { .. } => "ShardPartial",
+            TraceEvent::QuireMerge { .. } => "QuireMerge",
+            TraceEvent::Requantize => "Requantize",
+            TraceEvent::Evict { .. } => "Evict",
+            TraceEvent::Compact { .. } => "Compact",
+            TraceEvent::ColdWarm { .. } => "ColdWarm",
+            TraceEvent::AutoscaleDecision { .. } => "AutoscaleDecision",
+            TraceEvent::VerifyReject => "VerifyReject",
+            TraceEvent::WorkerPanic => "WorkerPanic",
+            TraceEvent::Complete => "Complete",
+        }
+    }
+}
+
+/// One recorded span/marker. `begin_cycles`/`dur_cycles` are
+/// request-relative simulated cycles (markers carry `dur_cycles == 0`);
+/// `seq` is the sink-wide monotone emission index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub id: TraceId,
+    pub replica: usize,
+    pub seq: u64,
+    pub begin_cycles: u64,
+    pub dur_cycles: u64,
+    pub event: TraceEvent,
+}
+
+struct SinkState {
+    buf: VecDeque<TraceRecord>,
+    next_id: u64,
+    next_seq: u64,
+    dropped: u64,
+}
+
+/// Bounded, poison-safe trace collector. Capacity is fixed at
+/// construction; once the ring is full further emissions are counted in
+/// [`TraceSink::dropped`] and discarded, so the sink can stay enabled
+/// indefinitely without unbounded growth. All methods take `&self` —
+/// the sink is shared as an `Arc` across the router, workers, and shard
+/// coordinators.
+pub struct TraceSink {
+    capacity: usize,
+    inner: Mutex<SinkState>,
+}
+
+impl TraceSink {
+    /// A bounded sink with room for `capacity` records.
+    pub fn new(capacity: usize) -> Arc<Self> {
+        Arc::new(TraceSink {
+            capacity,
+            inner: Mutex::new(SinkState {
+                buf: VecDeque::with_capacity(capacity.min(4096)),
+                next_id: 0,
+                next_seq: 0,
+                dropped: 0,
+            }),
+        })
+    }
+
+    /// Poison-safe lock: a worker that panicked mid-emit leaves only a
+    /// fully-written or not-yet-written record behind, so the state is
+    /// always usable — observability must not take the fleet down.
+    fn lock(&self) -> MutexGuard<'_, SinkState> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Mint the next sequential [`TraceId`].
+    pub fn mint(&self) -> TraceId {
+        let mut st = self.lock();
+        let id = TraceId(st.next_id);
+        st.next_id += 1;
+        id
+    }
+
+    /// Record one event. Stamps the sink-wide `seq`; if the ring is
+    /// full the record is dropped and counted instead.
+    pub fn emit(
+        &self,
+        id: TraceId,
+        replica: usize,
+        begin_cycles: u64,
+        dur_cycles: u64,
+        event: TraceEvent,
+    ) {
+        let mut st = self.lock();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        if st.buf.len() >= self.capacity {
+            st.dropped += 1;
+            return;
+        }
+        st.buf.push_back(TraceRecord { id, replica, seq, begin_cycles, dur_cycles, event });
+    }
+
+    /// Copy of every retained record, in emission order.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        self.lock().buf.iter().cloned().collect()
+    }
+
+    /// Take every retained record out, leaving the sink empty (drop and
+    /// seq counters keep running).
+    pub fn drain(&self) -> Vec<TraceRecord> {
+        self.lock().buf.drain(..).collect()
+    }
+
+    /// Exact number of records discarded because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    /// Number of records currently retained.
+    pub fn len(&self) -> usize {
+        self.lock().buf.len()
+    }
+
+    /// True when no records are retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A request's tracing handle: the shared sink plus the request's
+/// minted id. Rides `serve::Job` as an `Option<TraceCtx>` — `None`
+/// means tracing is off and no emission code runs at all.
+#[derive(Clone)]
+pub struct TraceCtx {
+    pub sink: Arc<TraceSink>,
+    pub id: TraceId,
+}
+
+impl TraceCtx {
+    /// Emit one event under this request's id.
+    pub fn emit(&self, replica: usize, begin_cycles: u64, dur_cycles: u64, event: TraceEvent) {
+        self.sink.emit(self.id, replica, begin_cycles, dur_cycles, event);
+    }
+}
+
+/// Request-relative lane bookkeeping for sharded runs, shared by the
+/// router's runtime shard channel and the inline test channels: each
+/// shard is a lane whose cursor advances by its partial's job cycles
+/// and its merge pass's share of the reduction cost. Because the
+/// cursors are functions of the per-shard *costs* (never of the host
+/// arrival order that actually occurred), the emitted spans are
+/// identical for Barrier and Streaming flows.
+pub struct ShardLaneTracer {
+    ctx: TraceCtx,
+    replicas: Vec<usize>,
+    lanes: Vec<u64>,
+}
+
+impl ShardLaneTracer {
+    /// Lane tracer for a request fanned out over `replicas[shard]`.
+    pub fn new(ctx: TraceCtx, replicas: Vec<usize>) -> Self {
+        let lanes = vec![0u64; replicas.len()];
+        ShardLaneTracer { ctx, replicas, lanes }
+    }
+
+    fn replica_of(&self, shard: usize) -> usize {
+        self.replicas.get(shard).copied().unwrap_or(shard)
+    }
+
+    /// Shard `shard`'s partial for the current layer took `cycles`.
+    pub fn on_partial(&mut self, shard: usize, cycles: u64) {
+        let begin = self.lanes.get(shard).copied().unwrap_or(0);
+        self.ctx.emit(self.replica_of(shard), begin, cycles, TraceEvent::ShardPartial { shard });
+        if let Some(l) = self.lanes.get_mut(shard) {
+            *l += cycles;
+        }
+    }
+
+    /// The coordinator merged shard `shard`'s partial in `cycles`
+    /// (its deterministic share of the layer's reduction cost).
+    pub fn on_merge(&mut self, shard: usize, cycles: u64) {
+        let begin = self.lanes.get(shard).copied().unwrap_or(0);
+        self.ctx.emit(self.replica_of(shard), begin, cycles, TraceEvent::QuireMerge { shard });
+        if let Some(l) = self.lanes.get_mut(shard) {
+            *l += cycles;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn marker(sink: &TraceSink, id: TraceId) {
+        sink.emit(id, 0, 0, 0, TraceEvent::Enqueue);
+    }
+
+    #[test]
+    fn mint_is_sequential() {
+        let s = TraceSink::new(8);
+        assert_eq!(s.mint(), TraceId(0));
+        assert_eq!(s.mint(), TraceId(1));
+        assert_eq!(s.mint(), TraceId(2));
+    }
+
+    #[test]
+    fn seq_is_monotone_across_emissions() {
+        let s = TraceSink::new(8);
+        let id = s.mint();
+        for _ in 0..5 {
+            marker(&s, id);
+        }
+        let seqs: Vec<u64> = s.records().iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn overflow_drops_exactly_and_never_grows() {
+        let s = TraceSink::new(4);
+        let id = s.mint();
+        for _ in 0..10 {
+            marker(&s, id);
+        }
+        assert_eq!(s.len(), 4, "ring must stay at capacity");
+        assert_eq!(s.dropped(), 6, "exact drop count under overflow");
+        // the retained records are the earliest four emissions
+        let seqs: Vec<u64> = s.records().iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3]);
+        // draining frees capacity again and keeps counters running
+        assert_eq!(s.drain().len(), 4);
+        assert!(s.is_empty());
+        marker(&s, id);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.dropped(), 6);
+    }
+
+    #[test]
+    fn zero_capacity_sink_only_counts() {
+        let s = TraceSink::new(0);
+        let id = s.mint();
+        for _ in 0..3 {
+            marker(&s, id);
+        }
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.dropped(), 3);
+    }
+
+    #[test]
+    fn poisoned_sink_stays_usable() {
+        let s = TraceSink::new(8);
+        let id = s.mint();
+        marker(&s, id);
+        // poison the mutex from a panicking thread
+        let s2 = Arc::clone(&s);
+        let _ = std::thread::spawn(move || {
+            let _guard = s2.inner.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        marker(&s, id);
+        assert_eq!(s.len(), 2, "emissions survive a poisoned lock");
+    }
+
+    #[test]
+    fn lane_tracer_advances_per_shard_cursors() {
+        let sink = TraceSink::new(64);
+        let ctx = TraceCtx { sink: Arc::clone(&sink), id: sink.mint() };
+        let mut lanes = ShardLaneTracer::new(ctx, vec![5, 6]);
+        lanes.on_partial(0, 100);
+        lanes.on_merge(0, 10);
+        lanes.on_partial(1, 80);
+        lanes.on_merge(1, 12);
+        lanes.on_partial(0, 50);
+        let recs = sink.records();
+        let spans: Vec<(usize, u64, u64)> =
+            recs.iter().map(|r| (r.replica, r.begin_cycles, r.dur_cycles)).collect();
+        assert_eq!(
+            spans,
+            vec![(5, 0, 100), (5, 100, 10), (6, 0, 80), (6, 80, 12), (5, 110, 50)]
+        );
+    }
+}

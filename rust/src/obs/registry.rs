@@ -1,0 +1,163 @@
+//! Unified counter registry and fleet-wide snapshots.
+//!
+//! [`MetricsRegistry`] is a flat, deterministic `name -> u64` store of
+//! monotonic counters and gauges; [`snapshot`] folds every stat surface
+//! the fleet already keeps (`RuntimeMetrics`, residency counters, the
+//! per-replica encoder-cache [`CacheStats`], lifetime job reports, the
+//! trace sink's own emit/drop counters) into one `BTreeMap` with
+//! deterministic key order. All keys follow the `bench_gate` simulated
+//! convention (`sim_` prefix / `cycles` / `bytes`), and
+//! [`to_bench_jsonl`] renders a snapshot as one flat JSONL record the
+//! gate can ratchet — so any new counter registered here gets CI
+//! regression gating for free.
+//!
+//! [`CacheStats`]: crate::coordinator::CacheStats
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::coordinator::Router;
+
+/// Named monotonic counters and gauges with deterministic iteration
+/// order. Poison-safe for the same reason as
+/// [`super::TraceSink`]: metrics must survive worker panics.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, u64>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, u64>> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Add `delta` to the named monotonic counter (creating it at 0).
+    pub fn counter_add(&self, name: &str, delta: u64) {
+        let mut m = self.lock();
+        let slot = m.entry(name.to_string()).or_insert(0);
+        *slot = slot.saturating_add(delta);
+    }
+
+    /// Set the named gauge to `value`.
+    pub fn gauge_set(&self, name: &str, value: u64) {
+        self.lock().insert(name.to_string(), value);
+    }
+
+    /// Current value of a name (0 when absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.lock().get(name).copied().unwrap_or(0)
+    }
+
+    /// Deterministically-ordered copy of every named value.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.lock().clone()
+    }
+}
+
+/// Fold every fleet stat surface into one deterministic snapshot. Key
+/// order is the `BTreeMap`'s lexical order; every key matches the
+/// `bench_gate` simulated-field convention. Host wall-clock latency
+/// windows are deliberately excluded — only simulated quantities are
+/// snapshotted.
+pub fn snapshot(router: &Router) -> BTreeMap<String, u64> {
+    let reg = MetricsRegistry::new();
+    let m = router.runtime_metrics();
+    reg.gauge_set("sim_completed_jobs", m.completed);
+    reg.gauge_set("sim_worker_panics", m.worker_panics);
+    reg.gauge_set("sim_worker_respawns", m.worker_respawns);
+    reg.gauge_set("sim_evictions", m.evictions);
+    reg.gauge_set("sim_compactions", m.compactions);
+    reg.gauge_set("sim_cold_warms", m.cold_warms);
+    reg.gauge_set("sim_resident_high_water_bytes", m.resident_high_water);
+    reg.gauge_set("sim_service_cycles_p50", m.service_cycles.p50());
+    reg.gauge_set("sim_service_cycles_p95", m.service_cycles.p95());
+    reg.gauge_set("sim_service_cycles_max", m.service_cycles.max());
+    reg.gauge_set("sim_requests_served", router.total_served());
+    let mut served: Vec<(&'static str, u64)> =
+        router.served.iter().map(|(k, &n)| (k.name(), n)).collect();
+    served.sort();
+    for (name, n) in served {
+        reg.gauge_set(&format!("sim_served_{name}"), n);
+    }
+    for i in 0..router.n_replicas() {
+        let c = router.replica_cache_stats(i);
+        reg.gauge_set(&format!("sim_cache_hits_r{i}"), c.hits);
+        reg.gauge_set(&format!("sim_cache_misses_r{i}"), c.misses);
+        reg.gauge_set(&format!("sim_cache_preloads_r{i}"), c.preloads);
+        reg.gauge_set(&format!("sim_cache_trusted_r{i}"), c.trusted);
+        reg.gauge_set(
+            &format!("sim_lifetime_cycles_r{i}"),
+            router.replica_lifetime(i).total_cycles,
+        );
+    }
+    if let Some(sink) = router.trace_sink() {
+        reg.gauge_set("sim_trace_events", sink.len() as u64);
+        reg.gauge_set("sim_trace_dropped", sink.dropped());
+    }
+    reg.snapshot()
+}
+
+/// Render a snapshot as one flat JSONL record in the `bench_gate`
+/// format: `{"section":"<section>","sim_...":N,...}`. Key order is the
+/// snapshot's deterministic order, so the line is byte-stable.
+pub fn to_bench_jsonl(section: &str, snap: &BTreeMap<String, u64>) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = write!(out, "{{\"section\":\"{section}\"");
+    for (k, v) in snap {
+        let _ = write!(out, ",\"{k}\":{v}");
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotone_and_gauges_overwrite() {
+        let r = MetricsRegistry::new();
+        r.counter_add("sim_a", 2);
+        r.counter_add("sim_a", 3);
+        assert_eq!(r.get("sim_a"), 5);
+        r.gauge_set("sim_b", 9);
+        r.gauge_set("sim_b", 4);
+        assert_eq!(r.get("sim_b"), 4);
+        assert_eq!(r.get("sim_absent"), 0);
+        r.counter_add("sim_sat", u64::MAX);
+        r.counter_add("sim_sat", 1);
+        assert_eq!(r.get("sim_sat"), u64::MAX, "counters saturate, never wrap");
+    }
+
+    #[test]
+    fn snapshot_order_is_deterministic() {
+        let r = MetricsRegistry::new();
+        r.gauge_set("sim_z", 1);
+        r.gauge_set("sim_a", 2);
+        r.gauge_set("sim_m", 3);
+        let keys: Vec<String> = r.snapshot().keys().cloned().collect();
+        assert_eq!(keys, vec!["sim_a", "sim_m", "sim_z"]);
+    }
+
+    #[test]
+    fn bench_jsonl_is_flat_and_stable() {
+        let r = MetricsRegistry::new();
+        r.gauge_set("sim_cycles_total", 123);
+        r.gauge_set("sim_bytes_moved", 7);
+        let snap = r.snapshot();
+        let line = to_bench_jsonl("registry_snapshot", &snap);
+        assert_eq!(
+            line,
+            "{\"section\":\"registry_snapshot\",\"sim_bytes_moved\":7,\"sim_cycles_total\":123}\n"
+        );
+        assert_eq!(line, to_bench_jsonl("registry_snapshot", &snap));
+    }
+}

@@ -24,7 +24,9 @@ use crate::coordinator::router::{RoutedResult, WorkloadKind};
 use crate::coordinator::scheduler::ModelInstance;
 use crate::models::residency::{residency_lock, ResidencyManager, ResidentImage};
 use crate::models::{PartialOut, ShardedModel};
+use crate::obs::{TraceCtx, TraceEvent};
 use crate::soc::{JobReport, Soc, SocConfig};
+use crate::util::hosttime::{host_now, HostInstant};
 use crate::util::lockdep::{lock_tracked, LockClass, Tracked};
 use crate::util::Matrix;
 use anyhow::Result;
@@ -33,13 +35,18 @@ use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 /// One unit of work for a replica worker.
 pub struct Job {
-    /// Submission timestamp (host clock) — queue latency is measured
+    /// Submission timestamp (host clock, via the quarantined
+    /// [`crate::util::hosttime`] boundary) — queue latency is measured
     /// from here to worker pickup.
-    pub enqueued: Instant,
+    pub enqueued: HostInstant,
+    /// The request's tracing handle, when the fleet has a trace sink
+    /// enabled. `None` (the default for direct runtime users) means no
+    /// emission code runs at all — tracing is provably zero-overhead
+    /// when off.
+    pub trace: Option<TraceCtx>,
     pub payload: JobPayload,
 }
 
@@ -338,11 +345,15 @@ impl ReplicaWorker {
     /// one poisoned request cannot strand the queued requests behind it.
     fn drain(id: usize, q: &WorkQueue<Job>, soc: &Arc<Mutex<Soc>>, shared: &Shared) {
         while let Some(job) = q.pop() {
-            let waited = job.enqueued.elapsed().as_nanos() as u64;
-            // xr_lint: allow(wall-clock) -- RuntimeMetrics is explicitly host wall-clock latency; sim-cycle metrics live in service_cycles
-            let t0 = Instant::now();
+            let waited = job.enqueued.elapsed_nanos();
+            let t0 = host_now();
+            let trace = job.trace;
+            if let Some(tr) = &trace {
+                tr.emit(id, 0, 0, TraceEvent::Dispatch);
+            }
             match job.payload {
                 JobPayload::Infer { kind, inst, input, aux, residency, done } => {
+                    let mut admitted = None;
                     let res = catch_unwind(AssertUnwindSafe(
                         || -> Result<(Vec<f32>, crate::models::ExecReport)> {
                         let mut dev = device_lock(soc);
@@ -353,12 +364,12 @@ impl ReplicaWorker {
                             // all under the device lock, so a relocated
                             // arena is never observed mid-move
                             let image: Arc<dyn ResidentImage> = Arc::clone(&inst.compiled);
-                            residency_lock(mgr).admit(&mut dev, &image)?;
+                            admitted = Some(residency_lock(mgr).admit_outcome(&mut dev, &image)?);
                         }
                         inst.infer(&mut dev, &input, &aux)
                     },
                     ));
-                    let service = t0.elapsed().as_nanos() as u64;
+                    let service = t0.elapsed_nanos();
                     let cycles = match &res {
                         Ok(Ok((_, rep))) => Some(rep.total_cycles()),
                         _ => None,
@@ -368,6 +379,35 @@ impl ReplicaWorker {
                     // hold its eviction protection
                     if let Some(mgr) = &residency {
                         residency_lock(mgr).unpin(inst.compiled.uid());
+                    }
+                    // trace spans are derived from report values that
+                    // are already computed — emission cannot perturb
+                    // the simulated accounting
+                    if let Some(tr) = &trace {
+                        if let Some(o) = &admitted {
+                            if o.evictions > 0 {
+                                tr.emit(id, 0, 0, TraceEvent::Evict { count: o.evictions });
+                            }
+                            if o.compactions > 0 {
+                                tr.emit(id, 0, 0, TraceEvent::Compact { count: o.compactions });
+                            }
+                            if o.cold_warms > 0 {
+                                tr.emit(id, 0, 0, TraceEvent::ColdWarm { count: o.cold_warms });
+                            }
+                        }
+                        match &res {
+                            Ok(Ok((_, rep))) => {
+                                let mut at = 0u64;
+                                for &(layer, c) in &rep.per_layer_cycles {
+                                    tr.emit(id, at, c, TraceEvent::GemmJob { layer });
+                                    at += c;
+                                }
+                                tr.emit(id, at, rep.vector_cycles, TraceEvent::Requantize);
+                                tr.emit(id, rep.total_cycles(), 0, TraceEvent::Complete);
+                            }
+                            Ok(Err(_)) => {}
+                            Err(_) => tr.emit(id, 0, 0, TraceEvent::WorkerPanic),
+                        }
                     }
                     account(shared, waited, service, cycles, res.is_err());
                     match res {
@@ -385,11 +425,17 @@ impl ReplicaWorker {
                         let mut dev = device_lock(soc);
                         shard.run_gemm(&mut dev, gemm_idx, &a, s_a)
                     }));
-                    let service = t0.elapsed().as_nanos() as u64;
+                    let service = t0.elapsed_nanos();
                     let cycles = match &res {
                         Ok(Ok((_, rep))) => Some(rep.total_cycles),
                         _ => None,
                     };
+                    // partial spans themselves are stamped by the
+                    // coordinator's shard channel (which owns the lane
+                    // cursors); the worker only flags contained panics
+                    if let (Some(tr), Err(_)) = (&trace, &res) {
+                        tr.emit(id, 0, 0, TraceEvent::WorkerPanic);
+                    }
                     account(shared, waited, service, cycles, res.is_err());
                     match res {
                         Ok(r) => done.fulfill(r),
@@ -401,7 +447,10 @@ impl ReplicaWorker {
                         let mut dev = device_lock(soc);
                         run(&mut dev)
                     }));
-                    let service = t0.elapsed().as_nanos() as u64;
+                    let service = t0.elapsed_nanos();
+                    if let (Some(tr), Err(_)) = (&trace, &res) {
+                        tr.emit(id, 0, 0, TraceEvent::WorkerPanic);
+                    }
                     account(shared, waited, service, None, res.is_err());
                     match res {
                         Ok(r) => done.fulfill(r),
@@ -554,7 +603,8 @@ mod tests {
         let (tx, rx) = completion();
         (
             Job {
-                enqueued: Instant::now(),
+                enqueued: host_now(),
+                trace: None,
                 payload: JobPayload::Infer {
                     kind: WorkloadKind::Gaze,
                     inst: Arc::clone(inst),
@@ -623,7 +673,8 @@ mod tests {
             rt.dispatch(
                 0,
                 Job {
-                    enqueued: Instant::now(),
+                    enqueued: host_now(),
+                    trace: None,
                     payload: JobPayload::Infer {
                         kind: WorkloadKind::Classify,
                         inst: Arc::clone(&ei),
@@ -666,13 +717,54 @@ mod tests {
         assert_eq!(s.tail(usize::MAX).len(), WindowedStats::DEFAULT_WINDOW, "tail clamps to the window");
     }
 
+    #[test]
+    fn windowed_stats_empty_window_is_all_zeros() {
+        let s = WindowedStats::default();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.recorded(), 0);
+        assert_eq!(s.max(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p50(), 0);
+        assert_eq!(s.p99(), 0);
+        assert!(s.tail(5).is_empty());
+    }
+
+    #[test]
+    fn windowed_stats_repeated_wraparound_stays_exact() {
+        // wrap a tiny window many times over: retention stays bounded,
+        // `recorded` stays monotone-exact, and every percentile is a
+        // function of the *live* window only — displaced samples can
+        // never resurface
+        let mut s = WindowedStats::with_window(4);
+        for round in 0u64..10 {
+            for v in 0..4 {
+                s.record(round * 1000 + v);
+            }
+            assert_eq!(s.count(), 4);
+            assert_eq!(s.recorded(), (round + 1) * 4);
+            // after each full round the window holds exactly that
+            // round's four samples
+            assert_eq!(s.percentile(0.0), round * 1000);
+            assert_eq!(s.max(), round * 1000 + 3);
+            assert_eq!(s.p50(), round * 1000 + 1);
+            assert_eq!(s.mean(), round as f64 * 1000.0 + 1.5);
+        }
+        // a partial extra wrap displaces only the oldest samples
+        s.record(99_999);
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.recorded(), 41);
+        assert_eq!(s.percentile(0.0), 9001, "oldest live sample after displacement");
+        assert_eq!(s.max(), 99_999);
+    }
+
     fn probe_job(
         f: impl FnOnce(&mut crate::soc::Soc) -> Result<Vec<f32>> + Send + 'static,
     ) -> (Job, crate::serve::handle::Completion<Result<Vec<f32>>>) {
         let (tx, rx) = completion();
         (
             Job {
-                enqueued: Instant::now(),
+                enqueued: host_now(),
+                trace: None,
                 payload: JobPayload::Probe { run: Box::new(f), done: tx },
             },
             rx,
@@ -763,7 +855,8 @@ mod tests {
             let (tx, rx) = completion();
             (
                 Job {
-                    enqueued: Instant::now(),
+                    enqueued: host_now(),
+                    trace: None,
                     payload: JobPayload::Infer {
                         kind: WorkloadKind::Gaze,
                         inst: Arc::clone(inst),

@@ -1,0 +1,50 @@
+//! Quarantined host wall-clock access.
+//!
+//! `xr_lint` bans `Instant::now` / `SystemTime` in library code so the
+//! simulated-cycle accounting can never silently absorb host time. The
+//! serving runtime still wants *informational* wall-clock numbers (queue
+//! wait fed to `RuntimeMetrics`), so this module is the single sanctioned
+//! boundary: one waived construction site, an opaque [`HostInstant`]
+//! handle, and nanosecond deltas on request. Everything host-timed in the
+//! fleet flows through here, which keeps the waiver count at exactly one
+//! and makes "is this number deterministic?" answerable by grep: if it
+//! did not come from `hosttime`, it is simulated.
+//!
+//! Host-time values must never feed a simulated-cycle field, a trace
+//! event stamp, or a `bench_gate`-gated metric — they are for human-read
+//! latency printouts only.
+
+use std::time::Instant;
+
+/// Opaque host timestamp. Deliberately exposes no absolute value — only
+/// elapsed deltas — so host time cannot leak into simulated accounting
+/// by accident.
+#[derive(Debug, Clone, Copy)]
+pub struct HostInstant(Instant);
+
+/// Capture the current host time. The only sanctioned wall-clock read in
+/// the library.
+pub fn host_now() -> HostInstant {
+    // xr_lint: allow(wall-clock) -- sole sanctioned host-time boundary; callers only ever see elapsed deltas for informational latency metrics
+    HostInstant(Instant::now())
+}
+
+impl HostInstant {
+    /// Nanoseconds elapsed on the host since this instant was captured.
+    pub fn elapsed_nanos(&self) -> u64 {
+        self.0.elapsed().as_nanos() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotone() {
+        let t = host_now();
+        let a = t.elapsed_nanos();
+        let b = t.elapsed_nanos();
+        assert!(b >= a);
+    }
+}

@@ -5,6 +5,7 @@
 //! runs are reproducible and the Python build path can mirror the same
 //! streams (same algorithm, same seeds — see `python/compile/datasets.py`).
 
+pub mod hosttime;
 pub mod io;
 pub mod lockdep;
 pub mod matrix;

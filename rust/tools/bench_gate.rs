@@ -469,4 +469,27 @@ mod tests {
         set(&mut c[0], "speedup", Value::Num(0.01));
         assert!(gate(&base(1000.0), &c).regressions.is_empty());
     }
+
+    #[test]
+    fn registry_snapshot_records_gate_like_any_bench_section() {
+        // the obs::to_bench_jsonl shape: one flat record, every key
+        // following the simulated-field convention — the gate must arm
+        // on it, pass a matching run, and catch a seeded cycle regression
+        let line = "{\"section\":\"trace_snapshot\",\"sim_completed_jobs\":8,\
+                    \"sim_lifetime_cycles_r0\":52000,\"sim_lifetime_cycles_r1\":48000,\
+                    \"sim_trace_events\":64,\"sim_trace_dropped\":0}\n";
+        let baseline = parse_jsonl(line).unwrap();
+        assert!(baseline_armed(&baseline));
+        for key in baseline[0].iter().map(|(k, _)| k).filter(|k| *k != "section") {
+            assert!(is_sim_key(key), "registry key `{key}` must be gateable");
+        }
+        let same = parse_jsonl(line).unwrap();
+        let rep = gate(&baseline, &same);
+        assert!(rep.regressions.is_empty(), "{:?}", rep.regressions);
+        let mut worse = parse_jsonl(line).unwrap();
+        set(&mut worse[0], "sim_lifetime_cycles_r0", Value::Num(60000.0));
+        let rep = gate(&baseline, &worse);
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("sim_lifetime_cycles_r0"));
+    }
 }

@@ -615,6 +615,26 @@ mod tests {
     }
 
     #[test]
+    fn wall_clock_rule_covers_the_obs_tracing_module() {
+        // the deterministic-tracing contract: obs/ stamps spans with
+        // simulated cycles only, so a wall-clock read sneaking into the
+        // tracer must fail the lint like any other library code — and
+        // the sanctioned hosttime boundary needs its explicit waiver
+        let src = "fn stamp() -> u64 {\n\
+                   \x20   let t = std::time::Instant::now();\n\
+                   \x20   0\n\
+                   }\n";
+        let f = lint_source("src/obs/sink.rs", src);
+        assert_eq!(rules(&f), vec!["wall-clock"], "{f:?}");
+        assert_eq!(f[0].line, 2);
+        let waived = "fn stamp() {\n\
+                      \x20   // xr_lint: allow(wall-clock) -- sole sanctioned host-time boundary\n\
+                      \x20   let t = std::time::Instant::now();\n\
+                      }\n";
+        assert!(lint_source("src/util/hosttime.rs", waived).is_empty());
+    }
+
+    #[test]
     fn tokens_inside_strings_and_comments_are_masked() {
         let src = "fn f() -> &'static str {\n\
                    \x20   // this mentions .unwrap() and Instant::now in prose\n\
