@@ -464,16 +464,26 @@ fn main() {
         let barrier = run_all(&mut socs, ShardFlow::Barrier);
         let streaming = run_all(&mut socs, ShardFlow::Streaming);
 
-        let (mut b_total, mut s_crit, mut hidden, mut reduce) = (0u64, 0u64, 0u64, 0u64);
+        let (mut b_total, mut s_crit, mut hidden, mut prefetch, mut stall, mut reduce) =
+            (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
         for ((bo, br), (so, sr)) in barrier.iter().zip(&streaming) {
             assert_eq!(bo, so, "streaming dataflow diverged from the barrier reference");
             assert_eq!(br.overlap_cycles_hidden, 0, "barrier flow must not record overlap");
+            assert_eq!(br.axi_stall_cycles, 0, "barrier flow must not record AXI stall");
             let mut scrub = sr.clone();
             scrub.overlap_cycles_hidden = 0;
-            assert_eq!(&scrub, br, "streaming report drifted beyond the overlap counter");
+            scrub.axi_stall_cycles = 0;
+            scrub.prefetch_hidden_cycles = 0;
+            assert_eq!(&scrub, br, "streaming report drifted beyond the overlap counters");
+            assert!(
+                sr.axi_stall_cycles + sr.overlap_cycles_hidden <= sr.total_cycles(),
+                "stall + hidden must stay within the request total"
+            );
             b_total += br.total_cycles();
             s_crit += sr.total_cycles() - sr.overlap_cycles_hidden;
             hidden += sr.overlap_cycles_hidden;
+            prefetch += sr.prefetch_hidden_cycles;
+            stall += sr.axi_stall_cycles;
             reduce += sr.reduce_cycles;
         }
         assert!(
@@ -483,20 +493,24 @@ fn main() {
         );
         let n = reqs as u64;
         println!(
-            "  barrier {:>8} sim-cycles/req   streaming {:>8} sim-cycles/req   hidden {:>6} cycles/req   ({:.1}% shorter critical path, bit-identical)",
+            "  barrier {:>8} sim-cycles/req   streaming {:>8} sim-cycles/req   hidden {:>6} cycles/req   stalled {:>5} cycles/req   ({:.1}% shorter critical path, bit-identical)",
             b_total / n,
             s_crit / n,
             hidden / n,
+            stall / n,
             100.0 * hidden as f64 / b_total as f64
         );
         bench_json.push(format!(
             "{{\"bench\":\"hotpath\",\"section\":\"sharded_streaming_vs_barrier\",\
              \"model\":\"mlp_xr\",\"shards\":2,\"requests\":{reqs},\
              \"sim_cycles_per_round\":{},\"sim_reduce_cycles_per_round\":{},\
-             \"sim_overlap_hidden_per_round\":{},\"barrier_sim_cycles_per_round\":{}}}",
+             \"sim_overlap_hidden_per_round\":{},\"sim_prefetch_hidden_per_round\":{},\
+             \"sim_axi_stall_per_round\":{},\"barrier_sim_cycles_per_round\":{}}}",
             s_crit / n,
             reduce / n,
             hidden / n,
+            prefetch / n,
+            stall / n,
             b_total / n
         ));
     }

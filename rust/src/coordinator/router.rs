@@ -31,7 +31,7 @@ use crate::serve::{
     device_lock, AutoscaleConfig, Autoscaler, Completion, CompletionSet, CycleAutoscaler, Job,
     JobPayload, RuntimeMetrics, ServeRuntime, WorkQueue,
 };
-use crate::soc::{JobReport, SocConfig};
+use crate::soc::{InitiatorStats, JobReport, SocConfig};
 use crate::util::hosttime::host_now;
 use crate::util::Matrix;
 use anyhow::{bail, Result};
@@ -126,6 +126,14 @@ pub struct RuntimeConfig {
     /// round-robin cursor still advances one step per request, and an
     /// under-budget fleet keeps exact round-robin placement.
     pub warm_affinity: bool,
+    /// Gateway-predicted cold-model **warm-ahead** (default off): each
+    /// whole-model dispatch predicts the next registered model still
+    /// cold on its replica (fixed [`WorkloadKind::ALL`] scan order —
+    /// deterministic) and the worker streams it into the catalog right
+    /// after the job, charged to the AXI **management** initiator. The
+    /// next request for that model then skips its cold warm. Purely
+    /// additive: serving values are bit-identical with it on or off.
+    pub warm_ahead: bool,
 }
 
 impl Default for RuntimeConfig {
@@ -136,6 +144,7 @@ impl Default for RuntimeConfig {
             autoscale: AutoscaleConfig::default(),
             resident_budget: None,
             warm_affinity: true,
+            warm_ahead: false,
         }
     }
 }
@@ -244,7 +253,30 @@ impl ShardedEntry {
             ShardFlow::Streaming,
         )?;
         if let Some(tr) = &trace {
-            tr.emit(self.replicas[0], report.total_cycles(), 0, TraceEvent::Complete);
+            // overlap/stall lanes: the hidden next-layer weight
+            // prefetch span trails into the end of the request (merge
+            // overlap already shows as QuireMerge lanes), the exposed
+            // stall directly precedes it — both derived from already-
+            // computed report values, so emission cannot perturb the
+            // accounting
+            let total = report.total_cycles();
+            if report.prefetch_hidden_cycles > 0 {
+                tr.emit(
+                    self.replicas[0],
+                    total - report.prefetch_hidden_cycles,
+                    report.prefetch_hidden_cycles,
+                    TraceEvent::Prefetch,
+                );
+            }
+            if report.axi_stall_cycles > 0 {
+                tr.emit(
+                    self.replicas[0],
+                    total - report.axi_stall_cycles,
+                    report.axi_stall_cycles,
+                    TraceEvent::AxiStall,
+                );
+            }
+            tr.emit(self.replicas[0], total, 0, TraceEvent::Complete);
         }
         Ok(RoutedResult { kind: self.kind, output, report, replica: self.replicas[0] })
     }
@@ -322,6 +354,8 @@ pub struct Router {
     warm_floor: usize,
     /// Warm-affinity dispatch toggle ([`RuntimeConfig::warm_affinity`]).
     warm_affinity: bool,
+    /// Warm-ahead prediction toggle ([`RuntimeConfig::warm_ahead`]).
+    warm_ahead: bool,
     /// Active count last steered explicitly (autoscaler tick or
     /// [`Router::set_active`]); registration warms
     /// `max(warm_floor, steered)` so a scaled-up fleet never pays
@@ -373,6 +407,7 @@ impl Router {
             fed_cycle_samples: 0,
             warm_floor: rt.warm_floor.clamp(1, n_replicas),
             warm_affinity: rt.warm_affinity,
+            warm_ahead: rt.warm_ahead,
             steered_active: None,
             next_replica: 0,
             sharded_inflight: Arc::new((Mutex::new(0), Condvar::new())),
@@ -726,6 +761,28 @@ impl Router {
         rr
     }
 
+    /// Gateway prediction for worker warm-ahead
+    /// ([`RuntimeConfig::warm_ahead`]): the next registered whole model
+    /// believed **cold** on `replica`, scanning kinds in the fixed
+    /// [`WorkloadKind::ALL`] order so the prediction is deterministic.
+    /// `None` when the feature is off, or every other registered whole
+    /// model is already warm there.
+    fn predict_warm_ahead(&self, replica: usize, current: u64) -> Option<Arc<ModelInstance>> {
+        if !self.warm_ahead {
+            return None;
+        }
+        let mgr = residency_lock(&self.residency[replica]);
+        for kind in WorkloadKind::ALL {
+            if let Some(ModelEntry::Whole(inst)) = self.models.get(&kind) {
+                let uid = inst.compiled.uid();
+                if uid != current && !mgr.warm_hint(uid) {
+                    return Some(Arc::clone(inst));
+                }
+            }
+        }
+        None
+    }
+
     /// Submit one request to the runtime; returns immediately with a
     /// completion handle. Whole-model kinds round-robin over the active
     /// replica set (same-replica requests serialize in FIFO order),
@@ -753,6 +810,7 @@ impl Router {
                 let image: Arc<dyn ResidentImage> =
                     Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
                 residency_lock(&self.residency[replica]).pin_image(&image);
+                let warm_ahead = self.predict_warm_ahead(replica, inst.compiled.uid());
                 let (tx, rx) = crate::serve::completion();
                 let trace = self.mint_ctx();
                 if let Some(tr) = &trace {
@@ -768,6 +826,7 @@ impl Router {
                         input,
                         aux,
                         residency: Some(Arc::clone(&self.residency[replica])),
+                        warm_ahead,
                         done: tx,
                     },
                 };
@@ -895,6 +954,7 @@ impl Router {
                     input: r.input.clone(),
                     aux: r.aux.clone(),
                     residency: Some(Arc::clone(&self.residency[replica])),
+                    warm_ahead: self.predict_warm_ahead(replica, inst.compiled.uid()),
                     done: tx,
                 },
             };
@@ -1151,6 +1211,15 @@ impl Router {
     /// Lifetime job report of replica `i` (snapshot).
     pub fn replica_lifetime(&self, i: usize) -> JobReport {
         device_lock(self.runtime.soc(i)).lifetime.clone()
+    }
+
+    /// AXI **management**-initiator traffic of replica `i`: resident-
+    /// arena relocations, compaction copies and cold-model warm
+    /// uploads, as charged by the shared-channel arbiter
+    /// ([`crate::soc::AxiInitiator::Management`]). Snapshotted into the
+    /// `sim_mgmt_*` registry keys by [`crate::obs::snapshot`].
+    pub fn replica_axi_mgmt(&self, i: usize) -> InitiatorStats {
+        device_lock(self.runtime.soc(i)).management_traffic()
     }
 
     /// [`CacheStats`] of replica `i`'s operand-encoding cache.
@@ -1421,6 +1490,64 @@ mod tests {
         r.route(WorkloadKind::Classify, &vec![0.1; 256], &[]).unwrap();
         assert_eq!(r.total_served(), 2);
         assert_eq!(r.served[&WorkloadKind::Gaze], 1);
+    }
+
+    #[test]
+    fn warm_ahead_streams_the_predicted_cold_model_behind_a_request() {
+        // gateway-predicted warm-ahead: the second gaze request lands on
+        // never-warmed replica 1, and its worker streams the still-cold
+        // classify model in right behind it on the management budget —
+        // while an identical warm-ahead-off fleet leaves classify cold
+        // there. Serving values are bit-identical either way.
+        let gg = gaze::build();
+        let wg = weights_for(&gg, 70);
+        let gc = effnet::build();
+        let wc = weights_for(&gc, 71);
+        let build_router = |warm_ahead: bool| {
+            let rt = RuntimeConfig { warm_ahead, ..Default::default() };
+            let mut r = Router::with_runtime(2, SocConfig::default(), rt);
+            r.register(
+                WorkloadKind::Gaze,
+                ModelInstance::uniform(gg.clone(), wg.clone(), PrecSel::Posit8x2).unwrap(),
+            )
+            .unwrap();
+            r.register(
+                WorkloadKind::Classify,
+                ModelInstance::uniform(gc.clone(), wc.clone(), PrecSel::Fp4x4).unwrap(),
+            )
+            .unwrap();
+            r
+        };
+        let mut on = build_router(true);
+        let mut off = build_router(false);
+        let classify_uid = on.model(WorkloadKind::Classify).unwrap().compiled.uid();
+        for q in 0..2 {
+            let input = vec![0.03 * (q + 1) as f32; 16];
+            let a = on.route(WorkloadKind::Gaze, &input, &[]).unwrap();
+            let b = off.route(WorkloadKind::Gaze, &input, &[]).unwrap();
+            assert_eq!(a.output, b.output, "req {q}: warm-ahead must not perturb values");
+            assert_eq!(a.replica, b.replica, "req {q}: placement must match");
+        }
+        on.quiesce();
+        off.quiesce();
+        // request 1 served on replica 1 (round-robin), whose worker
+        // warm-ahead-streamed classify in behind it
+        assert!(
+            residency_lock(&on.residency[1]).warm_hint(classify_uid),
+            "warm-ahead must leave the predicted model warm on replica 1"
+        );
+        assert!(
+            !residency_lock(&off.residency[1]).warm_hint(classify_uid),
+            "test premise: without warm-ahead, classify stays cold on replica 1"
+        );
+        let mgmt_on = on.replica_axi_mgmt(1);
+        let mgmt_off = off.replica_axi_mgmt(1);
+        assert!(
+            mgmt_on.bytes_written > mgmt_off.bytes_written,
+            "the warm-ahead upload must be charged to the management initiator \
+             ({mgmt_on:?} vs {mgmt_off:?})"
+        );
+        assert!(mgmt_on.cycles > 0);
     }
 
     #[test]
@@ -2023,6 +2150,11 @@ mod tests {
         assert_eq!(snap["sim_trace_dropped"], 0);
         assert!(snap.contains_key("sim_cache_misses_r0"));
         assert!(snap.contains_key("sim_lifetime_cycles_r1"));
+        // the management-budget traffic surfaces per replica, and the
+        // registration floor-warm of replica 0 already charged it
+        assert!(snap["sim_mgmt_bytes_r0"] > 0, "floor warm rides the management budget");
+        assert!(snap["sim_mgmt_cycles_r0"] > 0);
+        assert!(snap.contains_key("sim_mgmt_bytes_r1"));
         // every key follows the bench_gate simulated-field convention
         assert!(snap
             .keys()

@@ -20,7 +20,7 @@ use anyhow::{bail, Result};
 use xr_npe::coordinator::scheduler::ModelInstance;
 use xr_npe::coordinator::{PerceptionPipeline, PipelineConfig, Router, WorkloadKind};
 use xr_npe::energy::{AsicModel, FpgaModel};
-use xr_npe::models::{effnet, gaze, random_weights, ulvio};
+use xr_npe::models::{effnet, gaze, mlp, random_weights, ulvio};
 use xr_npe::npe::PrecSel;
 use xr_npe::soc::{Soc, SocConfig};
 use xr_npe::util::{Matrix, Rng};
@@ -247,7 +247,9 @@ fn serve(args: &[String]) -> Result<()> {
 /// Chrome/Perfetto trace JSON, a `bench_gate`-shaped registry-snapshot
 /// JSONL next to it, and print the head of the text timeline. Every
 /// stamp is simulated cycles — a fixed invocation reproduces the trace
-/// byte-for-byte.
+/// byte-for-byte. The `sharded` workload registers a 2-way K-split MLP
+/// so the timeline carries the shard lanes (ShardPartial/QuireMerge)
+/// and the memory-hierarchy spans (Prefetch/AxiStall).
 fn trace(args: &[String]) -> Result<()> {
     use xr_npe::models::LayerKind;
     use xr_npe::obs::{export_chrome_trace, snapshot, text_timeline, to_bench_jsonl, TraceSink};
@@ -256,11 +258,15 @@ fn trace(args: &[String]) -> Result<()> {
     let requests: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
     let out = args.get(2).map(String::as_str).unwrap_or("trace.json");
 
-    let (kind, graph) = match workload {
-        "gaze" => (WorkloadKind::Gaze, gaze::build()),
-        "vio" => (WorkloadKind::Vio, ulvio::build()),
-        "classify" => (WorkloadKind::Classify, effnet::build()),
-        other => bail!("unknown workload `{other}` (try: gaze, vio, classify)"),
+    let (kind, graph, shards) = match workload {
+        "gaze" => (WorkloadKind::Gaze, gaze::build(), 1),
+        "vio" => (WorkloadKind::Vio, ulvio::build(), 1),
+        "classify" => (WorkloadKind::Classify, effnet::build(), 1),
+        // 2-way K-split MLP: the streaming coordinator path, so the
+        // trace gains ShardPartial/QuireMerge lanes plus the Prefetch
+        // and AxiStall spans from the memory-hierarchy model
+        "sharded" => (WorkloadKind::Classify, mlp::build(), 2),
+        other => bail!("unknown workload `{other}` (try: gaze, vio, classify, sharded)"),
     };
     let in_len = graph.input.numel();
     let aux_len: usize = graph
@@ -276,7 +282,12 @@ fn trace(args: &[String]) -> Result<()> {
     let mut router = Router::new(2, SocConfig::default());
     let sink = TraceSink::new(1 << 16);
     router.set_trace_sink(std::sync::Arc::clone(&sink));
-    router.register(kind, ModelInstance::uniform(graph, w, PrecSel::Posit8x2)?)?;
+    let inst = ModelInstance::uniform(graph, w, PrecSel::Posit8x2)?;
+    if shards > 1 {
+        router.register_sharded(kind, inst, shards)?;
+    } else {
+        router.register(kind, inst)?;
+    }
 
     for q in 0..requests {
         let input: Vec<f32> =

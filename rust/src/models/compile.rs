@@ -40,7 +40,7 @@ use crate::arith::{Precision, QuireMatrix, QUIRE_SPILL_BYTES};
 use crate::array::EncodedOperand;
 use crate::npe::PrecSel;
 use crate::quant::PrecisionPlan;
-use crate::soc::{JobReport, Soc, SocError};
+use crate::soc::{AxiBus, JobReport, Soc, SocError};
 use crate::util::io::TensorMap;
 use crate::util::Matrix;
 use anyhow::{bail, Result};
@@ -776,7 +776,6 @@ impl CompiledModel {
             let mut layer_jobs = JobReport::default();
             let mut shard_cycles = vec![0u64; n_shards];
             let mut shard_dma = vec![0u64; n_shards];
-            let mut shard_bytes_in = vec![0u64; n_shards];
             // drain in completion-arrival order, refilling the window
             for _ in 0..n_shards {
                 let (si, part, rep) = ch.wait_any()?;
@@ -809,7 +808,6 @@ impl CompiledModel {
                 }
                 shard_cycles[si] = rep.total_cycles;
                 shard_dma[si] = rep.dma_cycles;
-                shard_bytes_in[si] = rep.bytes_in;
                 layer_jobs.merge(&rep);
             }
             let (rc, rb) = layer_reduction_cost(shards, g);
@@ -835,20 +833,27 @@ impl CompiledModel {
             // cost model — deterministic, independent of the host
             // arrival order that actually occurred
             let finish = if flow == ShardFlow::Streaming {
+                // only K-split quire merges interleave with arrivals —
+                // the N-split gather share of `rc` is a coordinator-side
+                // column-block read with no per-partial pass structure,
+                // so it must not fabricate merge passes here
+                let merge_rc = if matches!(kind, ShardSlice::K { .. }) { rc } else { 0 };
                 let (finish, hidden_merge) =
-                    streamed_merge_timing(&shard_cycles, (g.m * g.n) as u64, rc);
+                    streamed_merge_timing(&shard_cycles, (g.m * g.n) as u64, merge_rc);
                 let mut hidden = hidden_merge;
                 if let Some(prev) = &prev_timing {
                     let v_coord = report.vector_cycles - vec_mark;
-                    hidden += prefetch_hidden(
+                    let (ph, stall) = prefetch_overlap(
                         shards,
                         g.gemm_idx,
                         prev,
                         v_coord,
                         &shard_cycles,
                         &shard_dma,
-                        &shard_bytes_in,
                     );
+                    hidden += ph;
+                    report.prefetch_hidden_cycles += ph;
+                    report.axi_stall_cycles += stall;
                 }
                 report.overlap_cycles_hidden += hidden;
                 Some(LayerTiming { cycles: shard_cycles, finish })
@@ -1279,41 +1284,54 @@ fn streamed_merge_timing(cycles: &[u64], outs: u64, rc: u64) -> (u64, u64) {
     (finish, barrier_finish.saturating_sub(finish))
 }
 
-/// Simulated straggler cycles hidden by prefetching the next layer's
-/// resident weight slices during each shard's idle window.
+/// Simulated double-buffered weight-prefetch schedule for one streaming
+/// layer transition: returns `(hidden, stall)` cycles.
 ///
 /// Between finishing layer *i* and receiving layer *i+1*'s A slice, a
 /// shard sits idle for `prev.finish − prev.cycles[si]` simulated cycles
 /// (its own early finish against the coordinator's merge tail) plus
 /// `v_coord` (the coordinator's vector-unit steps between the two
 /// layers). The weight slice for layer *i+1* is already resident and
-/// its identity is known before any request data, so its DMA is
-/// data-independent and can fill that window. The weight share of the
-/// shard's layer-(i+1) DMA is prorated by packed bytes
-/// (`n · k.div_ceil(lanes) · 2` — the engine's fetch model) over the
-/// job's `bytes_in`, and at most `min(window, weight-DMA)` cycles come
-/// off that shard's completion time; the hidden total is the drop in
-/// the layer's critical path `max(t)`.
-fn prefetch_hidden(
+/// its identity is known before any request data, so during that window
+/// the control FSM streams it into the staging half of the weight
+/// ping-pong (an FSM-reserved slot, not capacity-gated — see the README
+/// memory-hierarchy section). The stream is costed as a real [`AxiBus`]
+/// burst read of the slice's packed image (`n · k.div_ceil(lanes) · 2`
+/// bytes — the engine's fetch model), i.e. the bus's *idle* read
+/// bandwidth, replacing the old `dma × w_bytes / bytes_in` proration
+/// proxy. What the prefetch can usefully hide is capped by the shard's
+/// actual layer-(i+1) DMA cycles (`want`): hiding more than the fetch
+/// work that exists is meaningless. `hid = min(window, want)` comes off
+/// that shard's completion time; the **hidden** total is the drop in
+/// the layer's critical path `max(t)`, and the demand the window could
+/// not absorb (`want − hid`, summed over shards) is the **stall** —
+/// the exposed share of the streaming critical path, surfaced as
+/// [`ExecReport::axi_stall_cycles`]. Every term is a function of the
+/// simulated *costs*, never of host arrival order, so both counters
+/// are deterministic (asserted by the arrival-order test below).
+fn prefetch_overlap(
     shards: &[Arc<ShardedModel>],
     gemm_idx: usize,
     prev: &LayerTiming,
     v_coord: u64,
     cycles: &[u64],
     dma: &[u64],
-    bytes_in: &[u64],
-) -> u64 {
+) -> (u64, u64) {
     let before = cycles.iter().copied().max().unwrap_or(0);
+    let bus = AxiBus::default();
     let mut after = 0u64;
+    let mut stall = 0u64;
     for (si, sh) in shards.iter().enumerate() {
         let st = &sh.steps[gemm_idx];
-        let w_bytes = (st.n * st.k.div_ceil(st.sel.lanes()) * 2) as u64;
+        let w_bytes = st.n * st.k.div_ceil(st.sel.lanes()) * 2;
+        let stream = bus.read_cycles(w_bytes);
         let window = prev.finish.saturating_sub(prev.cycles[si]) + v_coord;
-        let weight_dma = dma[si].saturating_mul(w_bytes) / bytes_in[si].max(1);
-        let hid = window.min(weight_dma);
+        let want = stream.min(dma[si]);
+        let hid = window.min(want);
+        stall += want - hid;
         after = after.max(cycles[si].saturating_sub(hid));
     }
-    before.saturating_sub(after)
+    (before.saturating_sub(after), stall)
 }
 
 /// Documented cross-shard reduction cost model for one **K-split** m×n
@@ -1324,9 +1342,10 @@ fn prefetch_hidden(
 /// block (the paper's precision-adaptive ADD/SUB stage), 4 adds per
 /// cycle. This is the term by which a sharded [`ExecReport`] exceeds
 /// the sum of its shard job reports — zero adds when `n_shards == 1`.
-/// N-split layers pay **nothing** here ([`layer_reduction_cost`]): the
-/// shard-local tail ([`LocalTail`]) rounds and folds on the replica, so
-/// no quire image ever crosses to the coordinator.
+/// N-split layers pay no quire traffic here: the shard-local tail
+/// ([`LocalTail`]) rounds and folds on the replica, so no quire image
+/// ever crosses to the coordinator — they charge the much cheaper f32
+/// column-block gather instead ([`layer_reduction_cost`]).
 pub fn reduction_cost(n_shards: usize, m: usize, n: usize) -> (u64, u64) {
     let outs = (m * n) as u64;
     let bytes = n_shards as u64 * outs * QUIRE_SPILL_BYTES as u64;
@@ -1354,14 +1373,43 @@ pub fn merge_pass_cycles(si: usize, outs: u64) -> u64 {
 /// (every shard of a layer shares one slice kind, fixed by
 /// [`plan_slices`]): K-split partials overlap the full output and pay
 /// [`reduction_cost`]; N-split partials run the shard-local tail and
-/// return rounded f32 column blocks — **zero** quire-reduction cycles
-/// and bytes. (Activation traffic, like every path's, is charged by the
-/// per-job DMA model, not here.)
+/// return rounded f32 column blocks — no quire image ever crosses, but
+/// the blocks themselves are real traffic on the shared AXI channel:
+/// each shard's `m·(n1−n0)` f32s (4 bytes apiece) are charged at the
+/// bus's burst read cost. Per output element that is 4 bytes total
+/// (blocks are disjoint) against a K-split's `n_shards ·`
+/// [`QUIRE_SPILL_BYTES`] — the asymmetry the audit test pins.
+/// (Activation traffic, like every path's, is charged by the per-job
+/// DMA model, not here.)
 fn layer_reduction_cost(shards: &[Arc<ShardedModel>], g: &GemmStep) -> (u64, u64) {
     match shards[0].steps[g.gemm_idx].slice {
         ShardSlice::K { .. } => reduction_cost(shards.len(), g.m, g.n),
-        ShardSlice::N { .. } => (0, 0),
+        ShardSlice::N { .. } => {
+            let slices: Vec<ShardSlice> =
+                shards.iter().map(|sh| sh.steps[g.gemm_idx].slice).collect();
+            gather_cost(&slices, g.m)
+        }
     }
+}
+
+/// Documented cross-shard gather cost for one **N-split** m×n GEMM
+/// layer: each shard's rounded f32 column block (`m·(n1−n0)·4` bytes)
+/// crosses the shared AXI read channel at the default bus's burst cost
+/// ([`AxiBus::read_cycles`]). K slices contribute nothing here. The
+/// static verifier re-derives this literally from the bus parameters
+/// (double-entry, like [`reduction_cost`]'s K formula).
+pub fn gather_cost(slices: &[ShardSlice], m: usize) -> (u64, u64) {
+    let bus = AxiBus::default();
+    let mut cycles = 0u64;
+    let mut bytes = 0u64;
+    for s in slices {
+        if let ShardSlice::N { n0, n1 } = *s {
+            let block = m * (n1 - n0) * 4;
+            cycles += bus.read_cycles(block);
+            bytes += block as u64;
+        }
+    }
+    (cycles, bytes)
 }
 
 /// Slice boundaries for one GEMM step. `None` = unsplittable.
@@ -2287,8 +2335,8 @@ mod tests {
     fn nsplit_fallback_matches_whole_and_charges_no_merge() {
         // a K too small to split 3 ways forces the N-split fallback:
         // values still bit-identical through the shard-local tail, and
-        // the layer charges zero coordinator reduction traffic — no
-        // quire image ever leaves the shards
+        // the layer charges no quire-merge traffic — only the f32
+        // column-block gather over the shared AXI channel
         use crate::models::graph::Layer;
         let g = ModelGraph {
             name: "tiny_fc".into(),
@@ -2318,10 +2366,14 @@ mod tests {
         let (want, _) = compiled.replay(&mut soc_w, &input, &[]).unwrap();
         let (got, grep) = run_sharded_inline(&compiled, 3, &mut socs, &input, &[]);
         assert_eq!(got, want, "N-split sharded run diverged");
+        // expected gather charge: three disjoint 1×3 f32 column blocks
+        // (m=1, n=9 split 3/3/3), each a burst read on the shared bus
+        let bus = AxiBus::default();
+        let block = 3 * 4; // m·(n1−n0)·4 bytes
         assert_eq!(
             (grep.reduce_cycles, grep.reduce_bytes),
-            (0, 0),
-            "shard-local tails leave nothing to reduce at the coordinator"
+            (3 * bus.read_cycles(block), 3 * block as u64),
+            "N-split gather must charge each shard's f32 column block over the AXI model"
         );
     }
 
@@ -2397,9 +2449,11 @@ mod tests {
                 );
                 let mut scrubbed = srep.clone();
                 scrubbed.overlap_cycles_hidden = 0;
+                scrubbed.axi_stall_cycles = 0;
+                scrubbed.prefetch_hidden_cycles = 0;
                 assert_eq!(
                     scrubbed, brep,
-                    "{sel:?} x{n_shards}: reports diverged beyond the overlap counter"
+                    "{sel:?} x{n_shards}: reports diverged beyond the overlap counters"
                 );
             }
         }
@@ -2442,7 +2496,9 @@ mod tests {
             assert_eq!(got, want, "{}: streaming conv/mixed run diverged", g.name);
             let mut scrubbed = srep.clone();
             scrubbed.overlap_cycles_hidden = 0;
-            assert_eq!(scrubbed, brep, "{}: reports diverged beyond the counter", g.name);
+            scrubbed.axi_stall_cycles = 0;
+            scrubbed.prefetch_hidden_cycles = 0;
+            assert_eq!(scrubbed, brep, "{}: reports diverged beyond the counters", g.name);
         }
     }
 
@@ -2539,5 +2595,195 @@ mod tests {
         let input = test_input(g.input.numel(), 0.0);
         let bad_aux = vec![0.0; aux_len(&g) + 1];
         assert!(compiled.replay(&mut soc, &input, &bad_aux).is_err());
+    }
+
+    #[test]
+    fn streaming_stall_and_hidden_stay_within_totals() {
+        // conservation invariants of the overlap model, all modes and
+        // shard counts: the barrier flow exposes no stall, and under
+        // streaming the hidden + stalled cycles can never exceed the
+        // job work they are carved from (per shard hid ≤ want ≤ dma ≤
+        // job cycles, so both counters are bounded by the layer totals)
+        let g = gaze::build();
+        for (mi, sel) in PrecSel::ALL.into_iter().enumerate() {
+            let w = random_weights(&g, 600 + mi as u64);
+            let plan = PrecisionPlan::uniform(sel, &g.compute_layer_params());
+            let compiled = compile(&g, &w, &plan).unwrap();
+            let input = test_input(g.input.numel(), 0.3 + mi as f32);
+            for n_shards in [2usize, 3] {
+                let mut socs_b: Vec<Soc> =
+                    (0..n_shards).map(|_| Soc::new(SocConfig::default())).collect();
+                let mut socs_s: Vec<Soc> =
+                    (0..n_shards).map(|_| Soc::new(SocConfig::default())).collect();
+                let (_, brep) = run_sharded_inline_flow(
+                    &compiled,
+                    n_shards,
+                    &mut socs_b,
+                    &input,
+                    &[],
+                    ShardFlow::Barrier,
+                    None,
+                );
+                let (_, srep) = run_sharded_inline_flow(
+                    &compiled,
+                    n_shards,
+                    &mut socs_s,
+                    &input,
+                    &[],
+                    ShardFlow::Streaming,
+                    None,
+                );
+                assert_eq!(
+                    brep.axi_stall_cycles, 0,
+                    "{sel:?} x{n_shards}: the barrier flow exposes no stall"
+                );
+                assert!(
+                    srep.axi_stall_cycles + srep.overlap_cycles_hidden <= srep.total_cycles(),
+                    "{sel:?} x{n_shards}: stall + hidden must stay within the total"
+                );
+                assert!(
+                    srep.prefetch_hidden_cycles <= srep.overlap_cycles_hidden,
+                    "{sel:?} x{n_shards}: the prefetch share cannot exceed the hidden total"
+                );
+                // flows agree on the total, so hidden > 0 (asserted by
+                // the bit-identity differential) makes the streaming
+                // critical path strictly shorter than the barrier one
+                assert!(
+                    srep.total_cycles() - srep.overlap_cycles_hidden < brep.total_cycles(),
+                    "{sel:?} x{n_shards}: prefetch must shorten the critical path"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_moves_identical_bytes_to_barrier() {
+        // the prefetch schedule re-times weight traffic, it never adds
+        // or removes bytes: job and reduction byte totals are identical
+        // with overlap on (Streaming) and off (Barrier), for a K-split
+        // plan (gaze) and the N-split fallback (tiny fc)
+        use crate::models::graph::Layer;
+        let tiny = ModelGraph {
+            name: "tiny_fc".into(),
+            input: Shape::vec(6),
+            layers: vec![Layer { name: "fc".into(), kind: LayerKind::Fc { in_f: 6, out_f: 9 } }],
+        };
+        for (g, n_shards, seed) in [(gaze::build(), 3usize, 630u64), (tiny, 3, 631)] {
+            let w = random_weights(&g, seed);
+            let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+            let compiled = compile(&g, &w, &plan).unwrap();
+            let input = test_input(g.input.numel(), 0.2);
+            let mut socs_b: Vec<Soc> =
+                (0..n_shards).map(|_| Soc::new(SocConfig::default())).collect();
+            let mut socs_s: Vec<Soc> =
+                (0..n_shards).map(|_| Soc::new(SocConfig::default())).collect();
+            let (_, brep) = run_sharded_inline_flow(
+                &compiled,
+                n_shards,
+                &mut socs_b,
+                &input,
+                &[],
+                ShardFlow::Barrier,
+                None,
+            );
+            let (_, srep) = run_sharded_inline_flow(
+                &compiled,
+                n_shards,
+                &mut socs_s,
+                &input,
+                &[],
+                ShardFlow::Streaming,
+                None,
+            );
+            assert_eq!(srep.jobs, brep.jobs, "{}: job work/bytes must be conserved", g.name);
+            assert_eq!(
+                srep.reduce_bytes, brep.reduce_bytes,
+                "{}: reduction bytes must be conserved",
+                g.name
+            );
+        }
+    }
+
+    #[test]
+    fn shard_axi_accounting_telescopes_under_seeded_arrivals() {
+        // the shared-channel property referenced from `soc/axi.rs`:
+        // every AXI mutation goes through per-initiator attribution, so
+        // the per-initiator sums equal the shared totals on every shard
+        // SoC — under seeded arrival permutations, and with management
+        // traffic (a compaction-style move) mixed onto one bus
+        use crate::soc::AxiInitiator;
+        let g = gaze::build();
+        let w = random_weights(&g, 610);
+        let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+        let compiled = compile(&g, &w, &plan).unwrap();
+        let input = test_input(g.input.numel(), 0.4);
+        for seed in [None, Some(7u64), Some(8), Some(9)] {
+            let mut socs: Vec<Soc> = (0..3).map(|_| Soc::new(SocConfig::default())).collect();
+            let _ = run_sharded_inline_flow(
+                &compiled,
+                3,
+                &mut socs,
+                &input,
+                &[],
+                ShardFlow::Streaming,
+                seed,
+            );
+            socs[0].move_resident(0, 0, 256).unwrap();
+            for (si, soc) in socs.iter().enumerate() {
+                let s = &soc.bus.stats;
+                let sum_r: u64 = s.initiators.iter().map(|i| i.bytes_read).sum();
+                let sum_w: u64 = s.initiators.iter().map(|i| i.bytes_written).sum();
+                let sum_c: u64 = s.initiators.iter().map(|i| i.cycles).sum();
+                assert_eq!(
+                    (sum_r, sum_w, sum_c),
+                    (s.bytes_read, s.bytes_written, s.cycles),
+                    "seed {seed:?} shard {si}: initiator accounting must telescope"
+                );
+                assert!(
+                    s.of(AxiInitiator::FsmFetch).bytes_read > 0,
+                    "seed {seed:?} shard {si}: FSM weight fetch must be attributed"
+                );
+            }
+            let mgmt = socs[0].management_traffic();
+            assert!(mgmt.bytes_read == 256 && mgmt.bytes_written == 256 && mgmt.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn reduction_traffic_audit_nsplit_f32_vs_ksplit_quire() {
+        // the split-asymmetry audit: the same logical 1×9 output costs
+        // 4 bytes per element to gather under an N split (one rounded
+        // f32; blocks are disjoint) but n_shards · 17 bytes per element
+        // of full quire images under a K split — the asymmetry the
+        // planner and the residency benches must weigh
+        use crate::models::graph::Layer;
+        let fc = |k: usize| ModelGraph {
+            name: "audit".into(),
+            input: Shape::vec(k),
+            layers: vec![Layer { name: "fc".into(), kind: LayerKind::Fc { in_f: k, out_f: 9 } }],
+        };
+        let n_shards = 3usize;
+        let run = |k: usize, seed: u64| {
+            let g = fc(k);
+            let w = random_weights(&g, seed);
+            let plan = PrecisionPlan::uniform(PrecSel::Posit8x2, &g.compute_layer_params());
+            let compiled = compile(&g, &w, &plan).unwrap();
+            let mut socs: Vec<Soc> =
+                (0..n_shards).map(|_| Soc::new(SocConfig::default())).collect();
+            let (_, rep) =
+                run_sharded_inline(&compiled, n_shards, &mut socs, &test_input(k, 0.1), &[]);
+            rep
+        };
+        // k = 24 ≥ SHARD_K_ALIGN·3 → K split; k = 6 forces the fallback
+        let rep_k = run(24, 620);
+        let rep_n = run(6, 621);
+        let outs = 9u64; // m = 1
+        assert_eq!(rep_k.reduce_bytes, n_shards as u64 * outs * QUIRE_SPILL_BYTES as u64);
+        assert_eq!(rep_n.reduce_bytes, outs * 4);
+        // cross-product form of the per-element ratio 4 : n_shards·17
+        assert_eq!(
+            rep_n.reduce_bytes * n_shards as u64 * QUIRE_SPILL_BYTES as u64,
+            rep_k.reduce_bytes * 4
+        );
     }
 }

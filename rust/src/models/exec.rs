@@ -66,6 +66,22 @@ pub struct ExecReport {
     /// the barrier shard flow; deterministic (derived from per-shard
     /// [`JobReport`] components, never host arrival order).
     pub overlap_cycles_hidden: u64,
+    /// Prefetch demand the shared AXI channel could **not** absorb
+    /// inside the coordinator's merge/vector window: the part of the
+    /// next layer's weight stream left exposed on the streaming critical
+    /// path. Together with the hidden counter it is bounded by the work
+    /// actually performed (`axi_stall_cycles + overlap_cycles_hidden ≤
+    /// total_cycles()`, property-tested in `models::compile`).
+    /// Observability only, like `overlap_cycles_hidden`; zero on the
+    /// whole-model path and under the barrier shard flow.
+    pub axi_stall_cycles: u64,
+    /// The prefetch share of [`ExecReport::overlap_cycles_hidden`]:
+    /// next-layer weight streaming hidden behind the coordinator's
+    /// merge/vector tail (the remainder of the hidden counter is
+    /// incremental quire-merge overlap). What the bench gate ratchets
+    /// as `sim_prefetch_hidden_per_round` and the tracer renders as the
+    /// `Prefetch` span. Always `≤ overlap_cycles_hidden`.
+    pub prefetch_hidden_cycles: u64,
     /// Per-layer (layer index, cycles) breakdown.
     pub per_layer_cycles: Vec<(usize, u64)>,
 }
@@ -92,6 +108,8 @@ impl ExecReport {
         self.reduce_cycles += o.reduce_cycles;
         self.reduce_bytes += o.reduce_bytes;
         self.overlap_cycles_hidden += o.overlap_cycles_hidden;
+        self.axi_stall_cycles += o.axi_stall_cycles;
+        self.prefetch_hidden_cycles += o.prefetch_hidden_cycles;
     }
 }
 

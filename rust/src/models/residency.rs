@@ -460,6 +460,11 @@ impl ResidencyManager {
         if let Some(e) = self.entries.get_mut(&uid) {
             e.warm_hint = true;
         }
+        // the cold→warm image upload rides the management budget on the
+        // shared AXI channel, like the compaction moves — eviction churn
+        // (re-upload on the next admission) and compaction (move once)
+        // now weigh against each other in the same counters
+        soc.charge_management_upload(need as usize);
         self.stats.cold_warms += 1;
         let now = self.warm_bytes(soc);
         self.stats.resident_high_water = self.stats.resident_high_water.max(now);
@@ -654,6 +659,17 @@ mod tests {
         assert_eq!(s.compactions, 1, "the fragmented free list must be compacted");
         assert!(soc.has_model_state(b.uid()) && soc.has_model_state(c.uid()));
         assert_eq!(soc.resident_free_bytes(), 0, "compaction drains the free list");
+        // compaction + cold-warm uploads are charged to the management
+        // budget on the shared AXI channel: the relocation reads the
+        // moved bytes back over the bus, the three admissions upload
+        // their images — nonzero cost, visible per initiator
+        let mgmt = soc.management_traffic();
+        assert!(mgmt.bytes_read > 0, "compaction moves must charge management reads");
+        assert!(
+            mgmt.bytes_written > mgmt.bytes_read,
+            "uploads + move writes must exceed the move reads"
+        );
+        assert!(mgmt.cycles > 0);
         // b was relocated live: values AND reports bit-identical
         let (got_b, got_rep_b) = b.replay(&mut soc, &xb, &[]).unwrap();
         assert_eq!(got_b, want_b, "relocated model diverged");

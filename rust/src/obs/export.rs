@@ -62,6 +62,8 @@ fn args_json(out: &mut String, ev: &TraceEvent) {
         TraceEvent::Enqueue
         | TraceEvent::Dispatch
         | TraceEvent::Requantize
+        | TraceEvent::Prefetch
+        | TraceEvent::AxiStall
         | TraceEvent::VerifyReject
         | TraceEvent::WorkerPanic
         | TraceEvent::Complete => {}

@@ -89,6 +89,15 @@ pub enum TraceEvent {
     ColdWarm { count: u64 },
     /// Autoscaler resized the fleet to `active` replicas.
     AutoscaleDecision { active: usize },
+    /// Next-layer weight streaming hidden behind compute / the
+    /// coordinator tail (the streaming flow's double-buffered prefetch,
+    /// or a worker's gateway-predicted warm-ahead); `dur_cycles` is the
+    /// hidden amount ([`crate::models::ExecReport::prefetch_hidden_cycles`]).
+    Prefetch,
+    /// Prefetch demand the shared AXI channel could not absorb inside
+    /// the overlap window — the exposed part of the streaming critical
+    /// path ([`crate::models::ExecReport::axi_stall_cycles`]).
+    AxiStall,
     /// Static verification rejected a program at registration.
     VerifyReject,
     /// A worker panic was fenced and converted to an error.
@@ -112,6 +121,8 @@ impl TraceEvent {
             TraceEvent::Compact { .. } => "Compact",
             TraceEvent::ColdWarm { .. } => "ColdWarm",
             TraceEvent::AutoscaleDecision { .. } => "AutoscaleDecision",
+            TraceEvent::Prefetch => "Prefetch",
+            TraceEvent::AxiStall => "AxiStall",
             TraceEvent::VerifyReject => "VerifyReject",
             TraceEvent::WorkerPanic => "WorkerPanic",
             TraceEvent::Complete => "Complete",

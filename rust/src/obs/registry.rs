@@ -96,6 +96,9 @@ pub fn snapshot(router: &Router) -> BTreeMap<String, u64> {
             &format!("sim_lifetime_cycles_r{i}"),
             router.replica_lifetime(i).total_cycles,
         );
+        let mgmt = router.replica_axi_mgmt(i);
+        reg.gauge_set(&format!("sim_mgmt_bytes_r{i}"), mgmt.bytes_read + mgmt.bytes_written);
+        reg.gauge_set(&format!("sim_mgmt_cycles_r{i}"), mgmt.cycles);
     }
     if let Some(sink) = router.trace_sink() {
         reg.gauge_set("sim_trace_events", sink.len() as u64);

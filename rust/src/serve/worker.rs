@@ -66,6 +66,17 @@ pub enum JobPayload {
         /// legacy path (direct runtime users, tests): the model warms
         /// on demand with no budget accounting.
         residency: Option<Arc<Mutex<ResidencyManager>>>,
+        /// Gateway-predicted **warm-ahead** target
+        /// ([`crate::coordinator::RuntimeConfig::warm_ahead`]): after
+        /// this job completes, the worker streams the predicted-next
+        /// cold model into the catalog through the same budgeted
+        /// admission — its weight upload is charged to the AXI
+        /// **management** initiator while the replica is between
+        /// requests, so the next dispatch finds the model already
+        /// warm. Best effort: an over-budget or failed admission just
+        /// leaves the model cold. `None` = prediction off (the
+        /// default) — the serving path is untouched.
+        warm_ahead: Option<Arc<ModelInstance>>,
         /// Fulfilled with the inference result (or its error).
         done: CompletionSender<Result<RoutedResult>>,
     },
@@ -352,7 +363,7 @@ impl ReplicaWorker {
                 tr.emit(id, 0, 0, TraceEvent::Dispatch);
             }
             match job.payload {
-                JobPayload::Infer { kind, inst, input, aux, residency, done } => {
+                JobPayload::Infer { kind, inst, input, aux, residency, warm_ahead, done } => {
                     let mut admitted = None;
                     let res = catch_unwind(AssertUnwindSafe(
                         || -> Result<(Vec<f32>, crate::models::ExecReport)> {
@@ -380,6 +391,27 @@ impl ReplicaWorker {
                     if let Some(mgr) = &residency {
                         residency_lock(mgr).unpin(inst.compiled.uid());
                     }
+                    // gateway-predicted warm-ahead: stream the
+                    // predicted-next cold model into the catalog after
+                    // this job's compute, before the next dispatch can
+                    // land — the upload rides the AXI management
+                    // budget. Panic-fenced and best effort; runs
+                    // before the job is accounted so completion
+                    // implies the warm-ahead landed (deterministic for
+                    // tests).
+                    let mut warm_ahead_cycles = 0u64;
+                    if let (Some(mgr), Some(next)) = (&residency, &warm_ahead) {
+                        let image: Arc<dyn ResidentImage> = Arc::clone(&next.compiled);
+                        let warmed = catch_unwind(AssertUnwindSafe(|| {
+                            let mut dev = device_lock(soc);
+                            let before = dev.management_traffic().cycles;
+                            let ok = residency_lock(mgr).admit_outcome(&mut dev, &image).is_ok();
+                            (ok, dev.management_traffic().cycles.saturating_sub(before))
+                        }));
+                        if let Ok((true, spent)) = warmed {
+                            warm_ahead_cycles = spent;
+                        }
+                    }
                     // trace spans are derived from report values that
                     // are already computed — emission cannot perturb
                     // the simulated accounting
@@ -403,6 +435,14 @@ impl ReplicaWorker {
                                     at += c;
                                 }
                                 tr.emit(id, at, rep.vector_cycles, TraceEvent::Requantize);
+                                if warm_ahead_cycles > 0 {
+                                    tr.emit(
+                                        id,
+                                        rep.total_cycles(),
+                                        warm_ahead_cycles,
+                                        TraceEvent::Prefetch,
+                                    );
+                                }
                                 tr.emit(id, rep.total_cycles(), 0, TraceEvent::Complete);
                             }
                             Ok(Err(_)) => {}
@@ -611,6 +651,7 @@ mod tests {
                     input,
                     aux: vec![],
                     residency: None,
+                    warm_ahead: None,
                     done: tx,
                 },
             },
@@ -681,6 +722,7 @@ mod tests {
                         input: vec![0.1; 256],
                         aux: vec![],
                         residency: None,
+                        warm_ahead: None,
                         done: tx,
                     },
                 },
@@ -863,6 +905,7 @@ mod tests {
                         input: vec![x; 16],
                         aux: vec![],
                         residency: Some(Arc::clone(&mgr)),
+                        warm_ahead: None,
                         done: tx,
                     },
                 },
@@ -889,6 +932,51 @@ mod tests {
         assert_eq!(s.cold_warms, 6, "every dispatch found its model cold");
         assert_eq!(s.evictions, 5, "each admit after the first evicts the other model");
         assert!(s.resident_high_water <= budget);
+    }
+
+    #[test]
+    fn warm_ahead_streams_the_predicted_model_on_the_management_budget() {
+        // a job carrying a warm-ahead prediction leaves the predicted
+        // model warm by the time its completion is observable, with
+        // the cold-model upload charged to the AXI management
+        // initiator — the gateway-predicted analogue of the streaming
+        // flow's double-buffered weight prefetch
+        let rt = ServeRuntime::new(1, SocConfig::default(), 8);
+        let a = gaze_inst(30);
+        let b = gaze_inst(31);
+        let budget = a.compiled.warm_footprint_bytes() as u64
+            + b.compiled.warm_footprint_bytes() as u64
+            + 1024;
+        let mgr = Arc::new(Mutex::new(ResidencyManager::lru(budget)));
+        let (tx, rx) = completion();
+        rt.dispatch(
+            0,
+            Job {
+                enqueued: host_now(),
+                trace: None,
+                payload: JobPayload::Infer {
+                    kind: WorkloadKind::Gaze,
+                    inst: Arc::clone(&a),
+                    input: vec![0.1; 16],
+                    aux: vec![],
+                    residency: Some(Arc::clone(&mgr)),
+                    warm_ahead: Some(Arc::clone(&b)),
+                    done: tx,
+                },
+            },
+        )
+        .unwrap();
+        rx.wait().unwrap().unwrap();
+        assert!(
+            residency_lock(&mgr).warm_hint(b.compiled.uid()),
+            "completion implies the warm-ahead admission landed"
+        );
+        let mgmt = rt.soc(0).lock().unwrap().management_traffic();
+        assert!(
+            mgmt.bytes_written >= b.compiled.warm_footprint_bytes() as u64,
+            "the warm-ahead upload must ride the management budget: {mgmt:?}"
+        );
+        assert!(mgmt.cycles > 0);
     }
 
     #[test]

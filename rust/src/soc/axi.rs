@@ -11,6 +11,58 @@
 
 use super::error::SocError;
 
+/// Who is driving an AXI transaction. The bus is a **shared channel**:
+/// every initiator draws from the same modeled read/write budget, so
+/// per-initiator byte/cycle attribution is what lets the benches weigh
+/// e.g. compaction churn against eviction churn honestly. Telescoping
+/// invariant (property-tested in `models/compile.rs`): the per-initiator
+/// sums always equal the [`AxiStats`] totals, because every mutation
+/// goes through [`AxiBus::read_cost_as`]/[`AxiBus::write_cost_as`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum AxiInitiator {
+    /// Control-FSM weight fetch (the B operand stream).
+    FsmFetch = 0,
+    /// Per-request DMA: activations in, results out.
+    RequestDma = 1,
+    /// Raw 17-byte quire spill traffic (sharded partial outputs).
+    QuireSpill = 2,
+    /// Residency management: compaction moves + cold→warm uploads.
+    Management = 3,
+    /// Double-buffered next-layer weight prefetch into the staging slot.
+    Prefetch = 4,
+}
+
+/// Number of [`AxiInitiator`] variants (the `initiators` array length).
+pub const AXI_INITIATORS: usize = 5;
+
+impl AxiInitiator {
+    pub const ALL: [AxiInitiator; AXI_INITIATORS] = [
+        AxiInitiator::FsmFetch,
+        AxiInitiator::RequestDma,
+        AxiInitiator::QuireSpill,
+        AxiInitiator::Management,
+        AxiInitiator::Prefetch,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AxiInitiator::FsmFetch => "fsm_fetch",
+            AxiInitiator::RequestDma => "request_dma",
+            AxiInitiator::QuireSpill => "quire_spill",
+            AxiInitiator::Management => "management",
+            AxiInitiator::Prefetch => "prefetch",
+        }
+    }
+}
+
+/// Per-initiator slice of the shared-channel accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InitiatorStats {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub cycles: u64,
+}
+
 /// AXI bus parameters + counters.
 #[derive(Debug, Clone)]
 pub struct AxiBus {
@@ -32,6 +84,17 @@ pub struct AxiStats {
     pub bytes_read: u64,
     pub bytes_written: u64,
     pub cycles: u64,
+    /// Per-initiator attribution, indexed by `AxiInitiator as usize`.
+    /// Always telescopes: byte/cycle sums across this array equal the
+    /// shared totals above.
+    pub initiators: [InitiatorStats; AXI_INITIATORS],
+}
+
+impl AxiStats {
+    /// The slice of the shared budget one initiator consumed.
+    pub fn of(&self, who: AxiInitiator) -> InitiatorStats {
+        self.initiators[who as usize]
+    }
 }
 
 impl Default for AxiBus {
@@ -47,34 +110,59 @@ impl Default for AxiBus {
 }
 
 impl AxiBus {
-    /// Cycles to read `bytes` (possibly split over bursts).
-    pub fn read_cost(&mut self, bytes: usize) -> u64 {
-        let mut cycles = 0;
-        let mut remaining = bytes.div_ceil(self.data_bytes);
-        while remaining > 0 {
-            let beats = remaining.min(self.max_beats);
-            cycles += self.read_latency + beats as u64;
-            remaining -= beats;
-            self.stats.read_txns += 1;
-        }
+    /// Number of bursts `bytes` splits into on this bus (0 for 0 bytes).
+    fn bursts(&self, bytes: usize) -> u64 {
+        bytes.div_ceil(self.data_bytes).div_ceil(self.max_beats) as u64
+    }
+
+    /// **Pure** read cost: cycles to move `bytes` over the read channel,
+    /// split into `max_beats` bursts, without touching any counter.
+    /// Closed form of the burst loop: `latency · bursts + beats`.
+    pub fn read_cycles(&self, bytes: usize) -> u64 {
+        let beats = bytes.div_ceil(self.data_bytes) as u64;
+        self.read_latency * self.bursts(bytes) + beats
+    }
+
+    /// **Pure** write cost (see [`AxiBus::read_cycles`]).
+    pub fn write_cycles(&self, bytes: usize) -> u64 {
+        let beats = bytes.div_ceil(self.data_bytes) as u64;
+        self.write_latency * self.bursts(bytes) + beats
+    }
+
+    /// Cycles to read `bytes` (possibly split over bursts), attributed
+    /// to `who` on top of the shared-channel totals.
+    pub fn read_cost_as(&mut self, bytes: usize, who: AxiInitiator) -> u64 {
+        let cycles = self.read_cycles(bytes);
+        self.stats.read_txns += self.bursts(bytes);
         self.stats.bytes_read += bytes as u64;
         self.stats.cycles += cycles;
+        let slot = &mut self.stats.initiators[who as usize];
+        slot.bytes_read += bytes as u64;
+        slot.cycles += cycles;
         cycles
     }
 
-    /// Cycles to write `bytes`.
-    pub fn write_cost(&mut self, bytes: usize) -> u64 {
-        let mut cycles = 0;
-        let mut remaining = bytes.div_ceil(self.data_bytes);
-        while remaining > 0 {
-            let beats = remaining.min(self.max_beats);
-            cycles += self.write_latency + beats as u64;
-            remaining -= beats;
-            self.stats.write_txns += 1;
-        }
+    /// Cycles to write `bytes`, attributed to `who`.
+    pub fn write_cost_as(&mut self, bytes: usize, who: AxiInitiator) -> u64 {
+        let cycles = self.write_cycles(bytes);
+        self.stats.write_txns += self.bursts(bytes);
         self.stats.bytes_written += bytes as u64;
         self.stats.cycles += cycles;
+        let slot = &mut self.stats.initiators[who as usize];
+        slot.bytes_written += bytes as u64;
+        slot.cycles += cycles;
         cycles
+    }
+
+    /// Cycles to read `bytes`, attributed to the request-DMA initiator
+    /// (the historical default before the bus was arbitrated).
+    pub fn read_cost(&mut self, bytes: usize) -> u64 {
+        self.read_cost_as(bytes, AxiInitiator::RequestDma)
+    }
+
+    /// Cycles to write `bytes` (request-DMA attribution).
+    pub fn write_cost(&mut self, bytes: usize) -> u64 {
+        self.write_cost_as(bytes, AxiInitiator::RequestDma)
     }
 }
 
@@ -196,6 +284,40 @@ mod tests {
         bus.write_cost(100);
         assert_eq!(bus.stats.bytes_written, 200);
         assert_eq!(bus.stats.write_txns, 2);
+    }
+
+    #[test]
+    fn pure_cost_matches_charged_cost() {
+        let bus = AxiBus::default();
+        for bytes in [0usize, 1, 7, 8, 64, 100, 2048, 2049, 4096, 123_457] {
+            let mut charged = bus.clone();
+            assert_eq!(bus.read_cycles(bytes), charged.read_cost(bytes), "read {bytes}");
+            let mut charged = bus.clone();
+            assert_eq!(bus.write_cycles(bytes), charged.write_cost(bytes), "write {bytes}");
+        }
+        assert_eq!(bus.read_cycles(0), 0);
+        assert_eq!(bus.write_cycles(0), 0);
+    }
+
+    #[test]
+    fn initiator_accounting_telescopes() {
+        let mut bus = AxiBus::default();
+        bus.read_cost_as(4096, AxiInitiator::FsmFetch);
+        bus.read_cost_as(64, AxiInitiator::RequestDma);
+        bus.write_cost_as(1700, AxiInitiator::QuireSpill);
+        bus.read_cost_as(512, AxiInitiator::Management);
+        bus.write_cost_as(512, AxiInitiator::Management);
+        bus.read_cost_as(96, AxiInitiator::Prefetch);
+        let s = &bus.stats;
+        let sum_r: u64 = s.initiators.iter().map(|i| i.bytes_read).sum();
+        let sum_w: u64 = s.initiators.iter().map(|i| i.bytes_written).sum();
+        let sum_c: u64 = s.initiators.iter().map(|i| i.cycles).sum();
+        assert_eq!(sum_r, s.bytes_read);
+        assert_eq!(sum_w, s.bytes_written);
+        assert_eq!(sum_c, s.cycles);
+        assert_eq!(s.of(AxiInitiator::Management).bytes_read, 512);
+        assert_eq!(s.of(AxiInitiator::Management).bytes_written, 512);
+        assert_eq!(s.of(AxiInitiator::Prefetch).bytes_read, 96);
     }
 
     #[test]

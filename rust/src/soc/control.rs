@@ -25,7 +25,7 @@
 //! packed and DMA'd back out. Content equality between the DMA'd bytes
 //! and what the array consumed is asserted in tests.
 
-use super::axi::{AxiBus, ExternalMem};
+use super::axi::{AxiBus, AxiInitiator, ExternalMem};
 use super::csr::{self, CsrFile};
 use super::dma::{Descriptor, Dir, DmaEngine};
 use super::error::SocError;
@@ -286,19 +286,23 @@ impl ControlFsm {
         ext.write(stage + a_packed.len() as u64, &b_packed)?;
         let half = spm.capacity() / 2;
         let mut dma_in_cycles = 0u64;
-        for (base_ext, len, region) in
-            [(stage, a_packed.len(), 0usize), (stage + a_packed.len() as u64, b_packed.len(), half)]
-        {
+        // shared-channel attribution: the A stream is per-request DMA
+        // (activations), the B stream is the FSM's weight fetch
+        for (base_ext, len, region, who) in [
+            (stage, a_packed.len(), 0usize, AxiInitiator::RequestDma),
+            (stage + a_packed.len() as u64, b_packed.len(), half, AxiInitiator::FsmFetch),
+        ] {
             let mut off = 0usize;
             while off < len {
                 let chunk = (len - off).min(half);
-                dma_in_cycles += dma.execute(
+                dma_in_cycles += dma.execute_as(
                     Descriptor {
                         ext_addr: base_ext + off as u64,
                         spm_addr: region + (off % half.max(1)).min(half - chunk.min(half)),
                         bytes: chunk,
                         dir: Dir::ToSpm,
                     },
+                    who,
                     bus,
                     spm,
                     ext,
@@ -339,6 +343,12 @@ impl ControlFsm {
         // quire spill)
         spm.write(0, &c_packed[..c_packed.len().min(half)])?;
         let wb_chunk = c_packed_len.min(half.max(1));
+        // raw quire images drain on the spill lane; rounded results are
+        // per-request DMA like the activations they feed
+        let wb_who = match output {
+            GemmOutput::Rounded => AxiInitiator::RequestDma,
+            GemmOutput::PartialQuires => AxiInitiator::QuireSpill,
+        };
         let mut dma_out_cycles = 0u64;
         let mut off = 0usize;
         while off < c_packed_len {
@@ -348,8 +358,9 @@ impl ControlFsm {
             // so large outputs of small-operand jobs never run off the
             // end (a 17x19 C from 17x1 + 1x19 A/B, say)
             let scratch = (ext.capacity() - chunk) as u64;
-            dma_out_cycles += dma.execute(
+            dma_out_cycles += dma.execute_as(
                 Descriptor { ext_addr: scratch, spm_addr: 0, bytes: chunk, dir: Dir::FromSpm },
+                wb_who,
                 bus,
                 spm,
                 ext,
@@ -733,6 +744,60 @@ mod tests {
             )
             .unwrap_err();
         assert!(matches!(err, SocError::PinnedOperandMismatch { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn job_traffic_is_attributed_per_initiator() {
+        // whole path: A on the request-DMA lane, B on the FSM weight
+        // lane, rounded C back on the request lane; the per-initiator
+        // slices telescope to the shared totals
+        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) = rig();
+        let mut rng = Rng::new(21);
+        let a = Matrix::random(8, 16, 1.0, &mut rng);
+        let b = Matrix::random(16, 8, 1.0, &mut rng);
+        ext.write_f32(0, &a.data).unwrap();
+        ext.write_f32(4096, &b.data).unwrap();
+        let job = GemmJob {
+            m: 8,
+            k: 16,
+            n: 8,
+            sel: PrecSel::Posit8x2,
+            out_prec: Precision::Posit8,
+            a_addr: 0,
+            b_addr: 4096,
+            c_addr: 8192,
+        };
+        fsm.run(job, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs, &mut cache)
+            .unwrap();
+        let s = bus.stats;
+        assert_eq!(
+            s.of(AxiInitiator::RequestDma).bytes_read,
+            packed_bytes(8, 16, PrecSel::Posit8x2) as u64,
+            "A operand rides the request lane"
+        );
+        assert_eq!(
+            s.of(AxiInitiator::FsmFetch).bytes_read,
+            packed_bytes(8, 16, PrecSel::Posit8x2) as u64,
+            "B operand rides the weight-fetch lane"
+        );
+        assert_eq!(s.of(AxiInitiator::QuireSpill), Default::default(), "no spill on the whole path");
+        let sum_r: u64 = s.initiators.iter().map(|i| i.bytes_read).sum();
+        let sum_w: u64 = s.initiators.iter().map(|i| i.bytes_written).sum();
+        assert_eq!((sum_r, sum_w), (s.bytes_read, s.bytes_written));
+
+        // partial path: the quire image drains on the spill lane
+        let (mut fsm, mut array, mut dma, mut bus, mut spm, mut ext, mut csrs, mut cache) = rig();
+        ext.write_f32(0, &a.data).unwrap();
+        ext.write_f32(4096, &b.data).unwrap();
+        fsm.run_partial(
+            job, None, &mut array, &mut dma, &mut bus, &mut spm, &mut ext, &mut csrs, &mut cache,
+        )
+        .unwrap();
+        assert_eq!(
+            bus.stats.of(AxiInitiator::QuireSpill).bytes_written,
+            (8 * 8 * QUIRE_SPILL_BYTES) as u64,
+            "partial writeback carries the quire image on the spill lane"
+        );
     }
 
     #[test]

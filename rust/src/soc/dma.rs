@@ -6,7 +6,7 @@
 //! `setup + max(axi_burst, spm_burst)` — the AXI stream and SRAM fill
 //! pipeline against each other, so the slower side dominates.
 
-use super::axi::{AxiBus, ExternalMem};
+use super::axi::{AxiBus, AxiInitiator, ExternalMem};
 use super::error::SocError;
 use super::memory::Scratchpad;
 
@@ -53,7 +53,7 @@ impl DmaEngine {
     /// Execute one descriptor; returns the cycle cost. A malformed
     /// descriptor (out-of-bounds on either side) comes back as a typed
     /// [`SocError`] so the serving process can reject the command and
-    /// keep going.
+    /// keep going. Request-DMA attribution (see [`DmaEngine::execute_as`]).
     pub fn execute(
         &mut self,
         d: Descriptor,
@@ -61,16 +61,29 @@ impl DmaEngine {
         spm: &mut Scratchpad,
         ext: &mut ExternalMem,
     ) -> Result<u64, SocError> {
+        self.execute_as(d, AxiInitiator::RequestDma, bus, spm, ext)
+    }
+
+    /// [`DmaEngine::execute`] with the AXI traffic attributed to `who`
+    /// on the shared channel.
+    pub fn execute_as(
+        &mut self,
+        d: Descriptor,
+        who: AxiInitiator,
+        bus: &mut AxiBus,
+        spm: &mut Scratchpad,
+        ext: &mut ExternalMem,
+    ) -> Result<u64, SocError> {
         let cycles = match d.dir {
             Dir::ToSpm => {
                 let data = ext.read(d.ext_addr, d.bytes)?.to_vec();
-                let axi_c = bus.read_cost(d.bytes);
+                let axi_c = bus.read_cost_as(d.bytes, who);
                 let spm_c = spm.write(d.spm_addr, &data)?;
                 self.setup_cycles + axi_c.max(spm_c)
             }
             Dir::FromSpm => {
                 let (data, spm_c) = spm.read(d.spm_addr, d.bytes)?;
-                let axi_c = bus.write_cost(d.bytes);
+                let axi_c = bus.write_cost_as(d.bytes, who);
                 ext.write(d.ext_addr, &data)?;
                 self.setup_cycles + axi_c.max(spm_c)
             }

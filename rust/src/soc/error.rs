@@ -33,6 +33,11 @@ pub enum SocError {
     /// A trusted pinned B-operand encoding disagrees with the job's
     /// mode or dimensions (mis-plumbed warm state).
     PinnedOperandMismatch { want_k: usize, want_n: usize, got_elems: usize, got_rows: usize },
+    /// The FSM completion protocol was violated: a single submitted
+    /// GEMM command must come back as exactly one completion carrying a
+    /// report. Surfacing this as a typed error (instead of unwrapping
+    /// the completion vector) keeps a queue-plumbing bug recoverable.
+    FsmCompletionProtocol { completions: usize },
 }
 
 impl fmt::Display for SocError {
@@ -64,6 +69,11 @@ impl fmt::Display for SocError {
             SocError::PinnedOperandMismatch { want_k, want_n, got_elems, got_rows } => write!(
                 f,
                 "pinned B operand is {got_elems}x{got_rows} (K x N), job wants {want_k}x{want_n}"
+            ),
+            SocError::FsmCompletionProtocol { completions } => write!(
+                f,
+                "FSM completion protocol violated: one submitted GEMM must yield exactly one \
+                 reported completion, got {completions}"
             ),
         }
     }

@@ -9,7 +9,7 @@
 //! this interface and nothing else, mirroring how userspace would drive
 //! the accelerator.
 
-use super::axi::{AxiBus, ExternalMem};
+use super::axi::{AxiBus, AxiInitiator, ExternalMem, InitiatorStats};
 use super::control::{ControlFsm, GemmJob, JobReport};
 use super::csr::CsrFile;
 use super::dma::DmaEngine;
@@ -52,6 +52,20 @@ pub enum Command {
 pub struct Completion {
     pub seq: u64,
     pub report: Option<JobReport>,
+}
+
+/// A single submitted GEMM command must come back as exactly one
+/// completion carrying a report; anything else is a typed
+/// [`SocError::FsmCompletionProtocol`] instead of an unwrap.
+fn single_completion(mut comps: Vec<Completion>) -> Result<JobReport, SocError> {
+    let completions = comps.len();
+    if completions != 1 {
+        return Err(SocError::FsmCompletionProtocol { completions });
+    }
+    comps
+        .pop()
+        .and_then(|c| c.report)
+        .ok_or(SocError::FsmCompletionProtocol { completions })
 }
 
 /// SoC configuration.
@@ -259,12 +273,35 @@ impl Soc {
     /// semantics — the ranges may overlap). The live-compaction
     /// primitive: the residency manager slides resident weight images
     /// down over reclaimed holes and then patches the owning arenas'
-    /// addresses. Functional only — compaction is a management
-    /// operation off the serving path, so it charges no cycles and the
-    /// replayed programs stay bit-identical afterwards (asserted by the
-    /// compaction differential tests).
+    /// addresses. The move is charged to the **management budget** on
+    /// the shared AXI channel (`len` bytes read + `len` bytes written
+    /// under [`AxiInitiator::Management`]) — compaction competes with
+    /// serving traffic for the same bus, and the benches read its cost
+    /// from [`AxiStats::of`](super::axi::AxiStats::of). Per-request
+    /// [`JobReport`]s are untouched, so replayed programs stay
+    /// bit-identical in values *and* reports afterwards (asserted by
+    /// the compaction differential tests).
     pub fn move_resident(&mut self, src: u64, dst: u64, len: usize) -> Result<(), SocError> {
-        self.ext.copy_within(src, dst, len)
+        self.ext.copy_within(src, dst, len)?;
+        self.bus.read_cost_as(len, AxiInitiator::Management);
+        self.bus.write_cost_as(len, AxiInitiator::Management);
+        Ok(())
+    }
+
+    /// Charge a cold→warm resident upload (a compiled image streaming
+    /// from host storage into resident DRAM) to the management budget.
+    /// Functional writes happen through `ext` at the warm site; this is
+    /// the matching shared-channel accounting, kept separate so the
+    /// warm path charges exactly once per uploaded image.
+    pub fn charge_management_upload(&mut self, bytes: usize) -> u64 {
+        self.bus.write_cost_as(bytes, AxiInitiator::Management)
+    }
+
+    /// The management-initiator slice of the shared AXI accounting:
+    /// compaction moves + cold→warm uploads. What the residency benches
+    /// and `obs::snapshot`'s `sim_mgmt_*` keys read.
+    pub fn management_traffic(&self) -> InitiatorStats {
+        self.bus.stats.of(AxiInitiator::Management)
     }
 
     /// Install a compacted resident layout: the caller has relocated
@@ -423,9 +460,7 @@ impl Soc {
         self.ext.write_f32(b_addr, &b.data)?;
         let job = GemmJob { m, k, n, sel, out_prec, a_addr, b_addr, c_addr };
         self.submit(Command::Gemm(job));
-        let mut comps = self.process_all()?;
-        // xr_lint: allow(no-panic) -- FSM invariant: a single submitted command always completes with a report
-        let rep = comps.pop().unwrap().report.unwrap();
+        let rep = single_completion(self.process_all()?)?;
         let c = Matrix::from_vec(m, n, self.ext.read_f32(c_addr, m * n)?);
         Ok((c, rep))
     }
@@ -519,9 +554,7 @@ impl Soc {
             c_addr: q_addr,
         };
         self.submit(Command::GemmPartial(job, Arc::clone(w_enc)));
-        let mut comps = self.process_all()?;
-        // xr_lint: allow(no-panic) -- FSM invariant: a single submitted command always completes with a report
-        let rep = comps.pop().unwrap().report.unwrap();
+        let rep = single_completion(self.process_all()?)?;
         let spill = self.ext.read(q_addr, a.rows * n * QUIRE_SPILL_BYTES)?;
         let quires = QuireMatrix::from_spill_bytes(a.rows, n, spill);
         Ok((quires, rep))
@@ -570,9 +603,7 @@ impl Soc {
             Some(enc) => self.submit(Command::GemmPinned(job, Arc::clone(enc))),
             None => self.submit(Command::Gemm(job)),
         };
-        let mut comps = self.process_all()?;
-        // xr_lint: allow(no-panic) -- FSM invariant: a single submitted command always completes with a report
-        let rep = comps.pop().unwrap().report.unwrap();
+        let rep = single_completion(self.process_all()?)?;
         let c = Matrix::from_vec(a.rows, n, self.ext.read_f32(c_addr, a.rows * n)?);
         Ok((c, rep))
     }
@@ -837,12 +868,47 @@ mod tests {
         assert_eq!(soc.resident_free_bytes(), 256);
         soc.move_resident(b, a, 256).unwrap();
         assert_eq!(soc.ext.read_f32(a, 64).unwrap(), vec![9.0; 64]);
+        // the move is charged to the management budget on the shared bus
+        let mgmt = soc.management_traffic();
+        assert_eq!((mgmt.bytes_read, mgmt.bytes_written), (256, 256));
+        assert!(mgmt.cycles > 0);
         soc.resident_compacted(a + 256);
         assert_eq!(soc.resident_mark(), a + 256);
         assert_eq!(soc.resident_free_bytes(), 0, "compaction drops the stale free list");
         // the allocator continues from the compacted watermark
         let c = soc.alloc_resident(64).unwrap();
         assert_eq!(c, a + 256);
+    }
+
+    #[test]
+    fn management_upload_charge_accumulates() {
+        let mut soc = Soc::new(SocConfig::default());
+        let c = soc.charge_management_upload(4096);
+        assert_eq!(c, soc.bus.write_cycles(4096));
+        soc.charge_management_upload(100);
+        let mgmt = soc.management_traffic();
+        assert_eq!(mgmt.bytes_written, 4196);
+        assert_eq!(mgmt.bytes_read, 0);
+        // management traffic lands on the shared totals too
+        assert_eq!(soc.bus.stats.bytes_written, 4196);
+    }
+
+    #[test]
+    fn completion_protocol_violation_is_typed_error() {
+        assert_eq!(
+            single_completion(Vec::new()).unwrap_err(),
+            SocError::FsmCompletionProtocol { completions: 0 }
+        );
+        // a completion without a report (a Fence, say) is also a violation
+        assert_eq!(
+            single_completion(vec![Completion { seq: 0, report: None }]).unwrap_err(),
+            SocError::FsmCompletionProtocol { completions: 1 }
+        );
+        let rep = JobReport { total_cycles: 7, ..Default::default() };
+        assert_eq!(
+            single_completion(vec![Completion { seq: 0, report: Some(rep.clone()) }]).unwrap(),
+            rep
+        );
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod error;
 pub mod host;
 pub mod memory;
 
+pub use axi::{AxiBus, AxiInitiator, AxiStats, InitiatorStats, AXI_INITIATORS};
 pub use control::{ControlFsm, FsmState, GemmJob, JobReport};
 pub use error::SocError;
 pub use host::{Command, Completion, Soc, SocConfig};
