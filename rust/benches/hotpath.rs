@@ -597,6 +597,88 @@ fn main() {
         ));
     }
 
+    // 4h. load-adaptive precision ladder: one logical gaze model served
+    // as three co-resident precision rungs (high-fidelity → balanced →
+    // FP4-heavy) on a 2-replica fleet. A seeded queue-depth trace drives
+    // `LadderPolicy` through an idle → burst → idle cycle; the policy is
+    // a pure function of simulated service cycles and the seeded depths,
+    // so the switch sequence, per-request rung stamps and the whole
+    // fleet snapshot replay byte-identically — asserted by running the
+    // trace twice. The JSONL records the gated `sim_ladder_*` keys plus
+    // the per-request cycle cost at the top and bottom rungs; all of
+    // them are simulated, so quick and full runs agree.
+    println!("\n-- serving: load-adaptive precision ladder (gaze, 2 replicas, seeded burst) --");
+    {
+        use std::collections::BTreeMap;
+        use xr_npe::coordinator::{ModelInstance, Router, WorkloadKind};
+        use xr_npe::serve::{LadderConfig, LadderPolicy};
+        use xr_npe::soc::SocConfig;
+
+        let depths = [0usize, 16, 16, 16, 16, 16, 0, 0, 0, 0, 0, 0, 0];
+        let run = || {
+            let mut r = Router::new(2, SocConfig::default());
+            let g = xr_npe::models::gaze::build();
+            let w = common::random_weights(&g, 140);
+            r.register_ladder(
+                WorkloadKind::Gaze,
+                ModelInstance::ladder(g, w, PrecSel::Fp4x4, true).unwrap(),
+            )
+            .unwrap();
+            let mut policy = LadderPolicy::new(LadderConfig {
+                shift_down: 50_000,
+                shift_up: 5_000,
+                window: 64,
+                dwell_ticks: 2,
+                idle_patience: 2,
+            });
+            // prime the service-cost window on the high-fidelity rung
+            for q in 0..4 {
+                r.route(WorkloadKind::Gaze, &vec![0.02 * q as f32; 16], &[]).unwrap();
+            }
+            r.quiesce();
+            let mut seq = Vec::new();
+            let mut cycles_by_rung = [0u64; 3];
+            let mut reqs_by_rung = [0u64; 3];
+            for &d in &depths {
+                let rung = r.ladder_tick_with(&mut policy, d);
+                let res = r.route(WorkloadKind::Gaze, &vec![0.05; 16], &[]).unwrap();
+                assert_eq!(res.report.rung as usize, rung, "stamp must match the decided rung");
+                cycles_by_rung[rung] += res.report.total_cycles();
+                reqs_by_rung[rung] += 1;
+                seq.push(rung);
+                r.quiesce();
+            }
+            let snap = xr_npe::obs::snapshot(&r);
+            (seq, cycles_by_rung, reqs_by_rung, snap)
+        };
+        let (seq, cycles, nreqs, snap) = run();
+        let again = run();
+        assert_eq!(
+            (&seq, &cycles, &nreqs, &snap),
+            (&again.0, &again.1, &again.2, &again.3),
+            "the ladder trace must replay byte-identically"
+        );
+        assert_eq!(seq.iter().max().copied(), Some(2), "burst must reach the FP4-heavy rung: {seq:?}");
+        assert_eq!(seq.last().copied(), Some(0), "idle must recover high fidelity: {seq:?}");
+        let per_req = |r: usize| if nreqs[r] == 0 { 0 } else { cycles[r] / nreqs[r] };
+        println!(
+            "  trace {:?}\n  rung0 {:>6} sim-cycles/req   rung2 {:>6} sim-cycles/req   {} switches (deterministic, bit-identical replay)",
+            seq,
+            per_req(0),
+            per_req(2),
+            snap["sim_ladder_switches"],
+        );
+        let mut gated: BTreeMap<String, u64> = snap
+            .iter()
+            .filter(|(k, _)| k.starts_with("sim_ladder_"))
+            .map(|(k, &v)| (k.clone(), v))
+            .collect();
+        gated.insert("sim_rung0_cycles_per_req".into(), per_req(0));
+        gated.insert("sim_rung2_cycles_per_req".into(), per_req(2));
+        bench_json
+            .push(xr_npe::obs::to_bench_jsonl("precision_ladder", &gated).trim_end().to_string());
+    }
+
     // trajectory artifacts: one JSON object per line (JSONL)
     let json = bench_json.join("\n") + "\n";
     if let Err(e) = std::fs::write("BENCH_hotpath.json", &json) {

@@ -23,13 +23,13 @@ use super::batcher::Batch;
 use super::scheduler::ModelInstance;
 use crate::models::residency::{residency_lock, ResidencyManager, ResidencyStats, ResidentImage};
 use crate::models::{
-    shard, verify_program, verify_shard_plan, ExecReport, PartialOut, ShardChannel, ShardFlow,
-    ShardedModel,
+    shard, verify_ladder, verify_program, verify_shard_plan, ExecReport, PartialOut, ShardChannel,
+    ShardFlow, ShardedModel,
 };
 use crate::obs::{ShardLaneTracer, TraceCtx, TraceEvent, TraceSink};
 use crate::serve::{
     device_lock, AutoscaleConfig, Autoscaler, Completion, CompletionSet, CycleAutoscaler, Job,
-    JobPayload, RuntimeMetrics, ServeRuntime, WorkQueue,
+    JobPayload, LadderPolicy, RuntimeMetrics, ServeRuntime, WorkQueue,
 };
 use crate::soc::{InitiatorStats, JobReport, SocConfig};
 use crate::util::hosttime::host_now;
@@ -156,6 +156,26 @@ enum ModelEntry {
     /// The model is split into per-replica weight shards; requests serve
     /// through the coordinator's scatter → quire-reduce loop.
     Sharded(Arc<ShardedEntry>),
+    /// A **precision ladder**: several co-resident compiled plans of the
+    /// same logical model, ordered from highest fidelity (rung 0) to
+    /// most aggressive quantization. Dispatch serves the router's
+    /// current rung; [`Router::ladder_tick_cycles`] shifts it with load.
+    Ladder(Arc<LadderEntry>),
+}
+
+/// A precision-ladder registration: one logical model compiled under
+/// several [`crate::quant::PrecisionPlan`]s of descending fidelity,
+/// all co-resident in the replica catalogs under distinct program uids.
+struct LadderEntry {
+    /// Rung 0 is the highest-fidelity plan; each later rung lowers the
+    /// same graph at a strictly-not-higher average bit width
+    /// (cross-checked by [`verify_ladder`] at registration).
+    rungs: Vec<Arc<ModelInstance>>,
+    /// Per-rung accuracy-proxy scores from the quantization sensitivity
+    /// model (fixed-point `distortion_score × 1e6`; rung 0 is the
+    /// reference). Surfaced as `sim_ladder_score_rung{r}` so the bench
+    /// differential can account the quality cost of each switch.
+    scores: Vec<u64>,
 }
 
 /// A sharded registration: the shard views plus their placement.
@@ -351,6 +371,18 @@ pub struct Router {
     fed_samples: u64,
     /// Checkpoint for [`ServeRuntime::service_cycle_samples_since`].
     fed_cycle_samples: u64,
+    /// The ladder tick's own sample checkpoint — the ladder policy and
+    /// the cycle autoscaler must not steal each other's fresh samples.
+    fed_ladder_samples: u64,
+    /// Current precision-ladder dispatch rung (0 = highest fidelity;
+    /// meaningful only while a ladder is registered).
+    ladder_rung: usize,
+    /// Rung switches applied by ladder ticks since registration.
+    ladder_switches: u64,
+    /// Requests dispatched per rung (sized at ladder registration;
+    /// empty when no ladder is registered — the registry snapshot keys
+    /// off that).
+    ladder_served: Vec<u64>,
     warm_floor: usize,
     /// Warm-affinity dispatch toggle ([`RuntimeConfig::warm_affinity`]).
     warm_affinity: bool,
@@ -405,6 +437,10 @@ impl Router {
             active: n_replicas,
             fed_samples: 0,
             fed_cycle_samples: 0,
+            fed_ladder_samples: 0,
+            ladder_rung: 0,
+            ladder_switches: 0,
+            ladder_served: Vec::new(),
             warm_floor: rt.warm_floor.clamp(1, n_replicas),
             warm_affinity: rt.warm_affinity,
             warm_ahead: rt.warm_ahead,
@@ -512,6 +548,81 @@ impl Router {
             let _ = mgr.admit(&mut dev, &image);
         }
         self.replace_entry(kind, ModelEntry::Whole(inst));
+        Ok(())
+    }
+
+    /// Register a **precision ladder** for a workload kind: several
+    /// compiled plans of the same logical model — rung 0 the highest
+    /// fidelity, each later rung a more aggressive quantization (built
+    /// by [`ModelInstance::ladder`], which also supplies the per-rung
+    /// sensitivity scores). All rungs join every replica's DRAM-budget
+    /// catalog as independent evictable images; only rung 0 warms
+    /// eagerly on the floor/steered set — lower rungs warm on their
+    /// first dispatch, exactly like a cold whole model.
+    ///
+    /// The ladder is cross-verified before any catalog changes:
+    /// [`verify_ladder`] proves the rung tags, the shared model shape
+    /// and the descending-fidelity ordering, then runs the full
+    /// [`verify_program`] proof per rung. Dispatch serves the router's
+    /// **current rung** ([`Router::ladder_rung`]), which
+    /// [`Router::ladder_tick_cycles`] moves under congestion; with no
+    /// ticks the ladder serves rung 0 forever — bit-identical to
+    /// registering that plan alone via [`Router::register`].
+    pub fn register_ladder(
+        &mut self,
+        kind: WorkloadKind,
+        rungs: Vec<(ModelInstance, u64)>,
+    ) -> Result<()> {
+        if rungs.is_empty() {
+            bail!("a precision ladder needs at least one rung");
+        }
+        let (insts, scores): (Vec<Arc<ModelInstance>>, Vec<u64>) =
+            rungs.into_iter().map(|(inst, score)| (Arc::new(inst), score)).unzip();
+        let limit = device_lock(self.runtime.soc(0)).resident_limit();
+        let compiled: Vec<&crate::models::CompiledModel> =
+            insts.iter().map(|i| i.compiled.as_ref()).collect();
+        if let Err(e) = verify_ladder(&compiled, limit) {
+            self.emit_fleet_event(TraceEvent::VerifyReject);
+            return Err(e.into());
+        }
+        let n_rep = self.runtime.n_replicas();
+        let min_budget = (0..n_rep)
+            .map(|i| residency_lock(&self.residency[i]).budget())
+            .min()
+            .unwrap_or(0);
+        for inst in &insts {
+            let needed = inst.compiled.warm_footprint_bytes() as u64;
+            if needed > min_budget {
+                bail!(
+                    "ladder rung {} of `{}` needs {} resident bytes but the replica budget is {}",
+                    inst.compiled.rung,
+                    inst.compiled.name,
+                    needed,
+                    min_budget
+                );
+            }
+        }
+        // catalog-join every rung everywhere; eager warm only rung 0 on
+        // the floor/steered set (best effort, like register_whole)
+        let warm_n = self.warm_floor.max(self.steered_active.unwrap_or(0)).min(n_rep);
+        for i in 0..n_rep {
+            let mut mgr = residency_lock(&self.residency[i]);
+            for inst in &insts {
+                mgr.insert(Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>);
+            }
+        }
+        for i in 0..warm_n {
+            let image: Arc<dyn ResidentImage> =
+                Arc::clone(&insts[0].compiled) as Arc<dyn ResidentImage>;
+            let soc = Arc::clone(self.runtime.soc(i));
+            let mut dev = device_lock(&soc);
+            let mut mgr = residency_lock(&self.residency[i]);
+            let _ = mgr.admit(&mut dev, &image);
+        }
+        let n_rungs = insts.len();
+        self.replace_entry(kind, ModelEntry::Ladder(Arc::new(LadderEntry { rungs: insts, scores })));
+        self.ladder_rung = 0;
+        self.ladder_served = vec![0; n_rungs];
         Ok(())
     }
 
@@ -683,6 +794,12 @@ impl Router {
         if let Some(old) = self.models.remove(&kind) {
             self.quiesce();
             self.evict_entry(&old);
+            if matches!(old, ModelEntry::Ladder(_)) {
+                // the ladder's dispatch state dies with its registration
+                self.ladder_rung = 0;
+                self.ladder_switches = 0;
+                self.ladder_served.clear();
+            }
         }
         self.models.insert(kind, entry);
     }
@@ -705,6 +822,16 @@ impl Router {
                     mgr.remove(&mut dev, sh.uid());
                 }
             }
+            ModelEntry::Ladder(le) => {
+                for i in 0..self.runtime.n_replicas() {
+                    let soc = Arc::clone(self.runtime.soc(i));
+                    let mut dev = device_lock(&soc);
+                    let mut mgr = residency_lock(&self.residency[i]);
+                    for inst in &le.rungs {
+                        mgr.remove(&mut dev, inst.compiled.uid());
+                    }
+                }
+            }
         }
     }
 
@@ -716,6 +843,8 @@ impl Router {
         self.models.get(&kind).map(|e| match e {
             ModelEntry::Whole(inst) => inst.as_ref(),
             ModelEntry::Sharded(se) => se.inst.as_ref(),
+            // a ladder's canonical metadata is its highest-fidelity rung
+            ModelEntry::Ladder(le) => le.rungs[0].as_ref(),
         })
     }
 
@@ -723,7 +852,7 @@ impl Router {
     /// `replicas[i]`) when the model is sharded, `None` when whole.
     pub fn shard_placement(&self, kind: WorkloadKind) -> Option<&[usize]> {
         match self.models.get(&kind)? {
-            ModelEntry::Whole(_) => None,
+            ModelEntry::Whole(_) | ModelEntry::Ladder(_) => None,
             ModelEntry::Sharded(se) => Some(&se.replicas),
         }
     }
@@ -801,41 +930,13 @@ impl Router {
         let Some(entry) = self.models.get(&kind) else {
             bail!("no model registered for {:?}", kind);
         };
-        match entry {
-            ModelEntry::Whole(inst) => {
-                let inst = Arc::clone(inst);
-                let replica = self.pick_replica(inst.compiled.uid());
-                // in-flight pin: from dispatch to job completion the
-                // model cannot be an eviction victim on its replica
-                let image: Arc<dyn ResidentImage> =
-                    Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
-                residency_lock(&self.residency[replica]).pin_image(&image);
-                let warm_ahead = self.predict_warm_ahead(replica, inst.compiled.uid());
-                let (tx, rx) = crate::serve::completion();
-                let trace = self.mint_ctx();
-                if let Some(tr) = &trace {
-                    tr.emit(replica, 0, 0, TraceEvent::Submit { kind: kind.name() });
-                    tr.emit(replica, 0, 0, TraceEvent::Enqueue);
-                }
-                let job = Job {
-                    enqueued: host_now(),
-                    trace,
-                    payload: JobPayload::Infer {
-                        kind,
-                        inst,
-                        input,
-                        aux,
-                        residency: Some(Arc::clone(&self.residency[replica])),
-                        warm_ahead,
-                        done: tx,
-                    },
-                };
-                if self.runtime.dispatch(replica, job).is_err() {
-                    residency_lock(&self.residency[replica]).unpin(image.uid());
-                    bail!("serving runtime is shut down");
-                }
-                *self.served.entry(kind).or_insert(0) += 1;
-                Ok(rx)
+        let (inst, rung) = match entry {
+            ModelEntry::Whole(inst) => (Arc::clone(inst), None),
+            ModelEntry::Ladder(le) => {
+                // serve the router's current rung (ticks move it; the
+                // clamp is defensive — registration sizes the counters)
+                let r = self.ladder_rung.min(le.rungs.len() - 1);
+                (Arc::clone(&le.rungs[r]), Some(r))
             }
             ModelEntry::Sharded(se) => {
                 let se = Arc::clone(se);
@@ -901,9 +1002,43 @@ impl Router {
                     bail!("coordinator pool is shut down");
                 }
                 *self.served.entry(kind).or_insert(0) += 1;
-                Ok(rx)
+                return Ok(rx);
             }
+        };
+        let replica = self.pick_replica(inst.compiled.uid());
+        // in-flight pin: from dispatch to job completion the model
+        // cannot be an eviction victim on its replica
+        let image: Arc<dyn ResidentImage> = Arc::clone(&inst.compiled) as Arc<dyn ResidentImage>;
+        residency_lock(&self.residency[replica]).pin_image(&image);
+        let warm_ahead = self.predict_warm_ahead(replica, inst.compiled.uid());
+        let (tx, rx) = crate::serve::completion();
+        let trace = self.mint_ctx();
+        if let Some(tr) = &trace {
+            tr.emit(replica, 0, 0, TraceEvent::Submit { kind: kind.name() });
+            tr.emit(replica, 0, 0, TraceEvent::Enqueue);
         }
+        let job = Job {
+            enqueued: host_now(),
+            trace,
+            payload: JobPayload::Infer {
+                kind,
+                inst,
+                input,
+                aux,
+                residency: Some(Arc::clone(&self.residency[replica])),
+                warm_ahead,
+                done: tx,
+            },
+        };
+        if self.runtime.dispatch(replica, job).is_err() {
+            residency_lock(&self.residency[replica]).unpin(image.uid());
+            bail!("serving runtime is shut down");
+        }
+        if let Some(r) = rung {
+            self.ladder_served[r] += 1;
+        }
+        *self.served.entry(kind).or_insert(0) += 1;
+        Ok(rx)
     }
 
     /// Submit every request of a released [`Batch`]; returns completion
@@ -927,10 +1062,16 @@ impl Router {
                 .map(|r| self.submit(kind, r.input.clone(), r.aux.clone()))
                 .collect();
         }
-        let inst = match self.models.get(&kind) {
+        let (inst, rung) = match self.models.get(&kind) {
             None => bail!("no model registered for {:?}", kind),
             Some(ModelEntry::Sharded(_)) => unreachable!("handled above"),
-            Some(ModelEntry::Whole(inst)) => Arc::clone(inst),
+            Some(ModelEntry::Whole(inst)) => (Arc::clone(inst), None),
+            Some(ModelEntry::Ladder(le)) => {
+                // the whole batch serves on one rung — a tick between
+                // batches, not within one, is what moves the ladder
+                let r = self.ladder_rung.min(le.rungs.len() - 1);
+                (Arc::clone(&le.rungs[r]), Some(r))
+            }
         };
         let offset = self.next_replica % self.active;
         self.next_replica = (offset + reqs.len()) % self.active;
@@ -963,6 +1104,9 @@ impl Router {
                 bail!("serving runtime is shut down");
             }
             handles.push(rx);
+        }
+        if let Some(r) = rung {
+            self.ladder_served[r] += reqs.len() as u64;
         }
         *self.served.entry(kind).or_insert(0) += reqs.len() as u64;
         Ok(handles)
@@ -1022,6 +1166,9 @@ impl Router {
             None => bail!("no model registered for {:?}", kind),
             Some(ModelEntry::Sharded(_)) => {
                 bail!("sharded models serve via submit/route (the runtime path), not the fan-out")
+            }
+            Some(ModelEntry::Ladder(_)) => {
+                bail!("ladder models serve via submit/route (the runtime path), not the fan-out")
             }
             Some(ModelEntry::Whole(inst)) => inst,
         };
@@ -1175,6 +1322,87 @@ impl Router {
         self.steered_active = Some(self.active);
         self.emit_fleet_event(TraceEvent::AutoscaleDecision { active: self.active });
         self.active
+    }
+
+    /// The registered ladder entry, if any (fixed [`WorkloadKind::ALL`]
+    /// scan order, so multi-kind fleets resolve deterministically).
+    fn ladder_entry(&self) -> Option<&Arc<LadderEntry>> {
+        WorkloadKind::ALL.iter().find_map(|k| match self.models.get(k) {
+            Some(ModelEntry::Ladder(le)) => Some(le),
+            _ => None,
+        })
+    }
+
+    /// One wall-clock-free **precision-ladder** tick: feed the
+    /// runtime's fresh simulated service-cycle samples to the
+    /// [`LadderPolicy`] (its own sample checkpoint — it never steals
+    /// the cycle autoscaler's feed) and apply its congestion decision
+    /// to the dispatch rung. Live queue depth is sampled from the
+    /// replica queues; for deterministic tests and benches drive
+    /// [`Router::ladder_tick_with`] with a seeded depth trace instead.
+    /// Returns the rung subsequent dispatch will serve.
+    pub fn ladder_tick_cycles(&mut self, policy: &mut LadderPolicy) -> usize {
+        let depth: usize =
+            (0..self.runtime.n_replicas()).map(|i| self.runtime.queue_len(i)).sum();
+        self.ladder_tick_with(policy, depth)
+    }
+
+    /// [`Router::ladder_tick_cycles`] with an **explicit queue depth**
+    /// — the deterministic form: every input (service-cycle samples,
+    /// depth, in-flight count at a quiesced checkpoint) is simulator
+    /// output or caller-seeded, so a fixed congestion trace replays to
+    /// a byte-identical switch sequence. No-op (returns 0) when no
+    /// ladder is registered.
+    pub fn ladder_tick_with(&mut self, policy: &mut LadderPolicy, queue_depth: usize) -> usize {
+        let Some(n_rungs) = self.ladder_entry().map(|le| le.rungs.len()) else {
+            return 0;
+        };
+        let (fresh, total) = self.runtime.service_cycle_samples_since(self.fed_ladder_samples);
+        self.fed_ladder_samples = total;
+        policy.observe_samples(&fresh);
+        let target = policy.decide(n_rungs, self.runtime.in_flight(), queue_depth);
+        if target != self.ladder_rung {
+            self.ladder_rung = target;
+            self.ladder_switches += 1;
+            self.emit_fleet_event(TraceEvent::LadderSwitch { rung: target });
+        }
+        self.ladder_rung
+    }
+
+    /// The precision-ladder rung subsequent dispatch will serve (0 when
+    /// no ladder is registered).
+    pub fn ladder_rung(&self) -> usize {
+        self.ladder_rung
+    }
+
+    /// Rung switches applied by ladder ticks since registration.
+    pub fn ladder_switches(&self) -> u64 {
+        self.ladder_switches
+    }
+
+    /// Requests dispatched per rung — empty when no ladder is
+    /// registered (the registry snapshot gates its `sim_ladder_*` keys
+    /// on that).
+    pub fn ladder_served(&self) -> Vec<u64> {
+        self.ladder_served.clone()
+    }
+
+    /// Per-rung accuracy-proxy scores from the quantization
+    /// sensitivity model (fixed-point `distortion_score × 1e6`; see
+    /// [`ModelInstance::ladder`]). Empty when no ladder is registered.
+    pub fn ladder_scores(&self) -> Vec<u64> {
+        self.ladder_entry().map(|le| le.scores.clone()).unwrap_or_default()
+    }
+
+    /// Force the dispatch rung (clamped to the ladder length; no-op
+    /// when no ladder is registered) — load-shaping for tests and
+    /// benches, exactly like [`Router::set_active`] for replicas.
+    /// Ladder ticks adjust from here; a forced move does not count as a
+    /// switch.
+    pub fn set_ladder_rung(&mut self, rung: usize) {
+        if let Some(n) = self.ladder_entry().map(|le| le.rungs.len()) {
+            self.ladder_rung = rung.min(n - 1);
+        }
     }
 
     /// Host-side queue/service latency metrics from the runtime, with
@@ -2159,5 +2387,161 @@ mod tests {
         assert!(snap
             .keys()
             .all(|k| k.starts_with("sim_") || k.contains("cycles") || k.contains("bytes")));
+        // no ladder registered: the sim_ladder_* keys must be absent, so
+        // pre-ladder baselines never see them
+        assert!(snap.keys().all(|k| !k.starts_with("sim_ladder_")));
+    }
+
+    /// The ladder's core differential: every rung must serve
+    /// bit-identically to a **fresh single-plan compile** of that
+    /// rung's plan, in all four hardware modes — values and (rung-stamp
+    /// aside) the full `ExecReport`. Rung 0 doubles as the
+    /// "ladder off ≡ pre-ladder serving" proof.
+    #[test]
+    fn every_ladder_rung_serves_bit_identical_to_a_fresh_single_plan_compile() {
+        for (i, sel) in PrecSel::ALL.into_iter().enumerate() {
+            let g = gaze::build();
+            let w = weights_for(&g, 150 + i as u64);
+            let plans: Vec<_> = ModelInstance::ladder(g.clone(), w.clone(), sel, true)
+                .unwrap()
+                .into_iter()
+                .map(|(inst, _)| inst.plan.clone())
+                .collect();
+            assert_eq!(plans.len(), 3, "{sel:?}: one instance per ladder budget");
+            for (rung, plan) in plans.into_iter().enumerate() {
+                let x = vec![0.01 + 0.03 * rung as f32; 16];
+                let mut lad = Router::new(1, SocConfig::default());
+                lad.register_ladder(
+                    WorkloadKind::Gaze,
+                    ModelInstance::ladder(g.clone(), w.clone(), sel, true).unwrap(),
+                )
+                .unwrap();
+                lad.set_ladder_rung(rung);
+                let got = lad.route(WorkloadKind::Gaze, &x, &[]).unwrap();
+                assert_eq!(got.report.rung, rung as u32, "{sel:?}: per-request plan stamp");
+                let mut fresh = Router::new(1, SocConfig::default());
+                fresh
+                    .register(
+                        WorkloadKind::Gaze,
+                        ModelInstance::with_plan(g.clone(), w.clone(), plan).unwrap(),
+                    )
+                    .unwrap();
+                let want = fresh.route(WorkloadKind::Gaze, &x, &[]).unwrap();
+                assert_eq!(got.output, want.output, "{sel:?} rung {rung}: values diverged");
+                let mut scrub = got.report.clone();
+                scrub.rung = want.report.rung; // a single-plan compile stamps rung 0
+                assert_eq!(scrub, want.report, "{sel:?} rung {rung}: reports diverged");
+            }
+        }
+    }
+
+    /// A seeded congestion trace drives the ladder down to the
+    /// FP4-heavy rung during the burst and back to high fidelity when
+    /// idle, respecting dwell-tick hysteresis — and the whole switch
+    /// sequence (plus the registry snapshot) replays byte-identically.
+    #[test]
+    fn ladder_congestion_burst_shifts_to_fp4_and_recovers_deterministically() {
+        use crate::serve::{LadderConfig, LadderPolicy};
+        let run = || {
+            let mut r = Router::new(2, SocConfig::default());
+            let g = gaze::build();
+            let w = weights_for(&g, 140);
+            r.register_ladder(
+                WorkloadKind::Gaze,
+                ModelInstance::ladder(g, w, PrecSel::Fp4x4, true).unwrap(),
+            )
+            .unwrap();
+            let mut policy = LadderPolicy::new(LadderConfig {
+                shift_down: 50_000,
+                shift_up: 5_000,
+                window: 64,
+                dwell_ticks: 2,
+                idle_patience: 2,
+            });
+            // prime the service-cost window on the high-fidelity rung
+            for q in 0..4 {
+                r.route(WorkloadKind::Gaze, &vec![0.02 * q as f32; 16], &[]).unwrap();
+            }
+            r.quiesce();
+            // seeded depth trace: idle → congestion burst → idle. Each
+            // tick then serves one request on the decided rung.
+            let depths = [0usize, 16, 16, 16, 16, 16, 0, 0, 0, 0, 0, 0, 0];
+            let mut seq = Vec::new();
+            let mut stamps = Vec::new();
+            for &d in &depths {
+                let rung = r.ladder_tick_with(&mut policy, d);
+                seq.push(rung);
+                let res = r.route(WorkloadKind::Gaze, &vec![0.05; 16], &[]).unwrap();
+                stamps.push(res.report.rung);
+                r.quiesce();
+            }
+            let snap = crate::obs::snapshot(&r);
+            (seq, stamps, r.ladder_switches(), snap)
+        };
+        let (seq_a, stamps_a, switches_a, snap_a) = run();
+        let (seq_b, stamps_b, switches_b, snap_b) = run();
+        assert_eq!(seq_a, seq_b, "switch sequence must replay identically");
+        assert_eq!(stamps_a, stamps_b);
+        assert_eq!(switches_a, switches_b);
+        assert_eq!(snap_a, snap_b, "the whole fleet snapshot must replay identically");
+        // the burst reaches the FP4-heavy bottom rung; idle recovers to
+        // the high-fidelity top
+        assert_eq!(seq_a.iter().max().copied(), Some(2), "{seq_a:?}");
+        assert_eq!(seq_a.last().copied(), Some(0), "{seq_a:?}");
+        // every request is stamped with the rung that served it
+        let as_stamps: Vec<u32> = seq_a.iter().map(|&r| r as u32).collect();
+        assert_eq!(stamps_a, as_stamps);
+        // hysteresis: the ladder moves one rung at a time, and dwell
+        // ticks enforce a minimum residence between switches
+        for w in seq_a.windows(2) {
+            assert!(w[0].abs_diff(w[1]) <= 1, "{seq_a:?}");
+        }
+        assert!(switches_a >= 4, "down to rung 2 and back is at least 4 switches");
+        // the snapshot carries the gated ladder keys
+        assert_eq!(snap_a["sim_ladder_rung"], 0);
+        assert_eq!(snap_a["sim_ladder_switches"], switches_a);
+        let rung2_serves = seq_a.iter().filter(|&&r| r == 2).count() as u64;
+        assert_eq!(snap_a["sim_ladder_served_rung2"], rung2_serves);
+        assert!(snap_a.contains_key("sim_ladder_score_rung0"));
+        // quality accounting: scores rise monotonically down the ladder
+        let scores = (0..3).map(|r| snap_a[&format!("sim_ladder_score_rung{r}")]).collect::<Vec<_>>();
+        assert!(scores.windows(2).all(|w| w[0] <= w[1]), "{scores:?}");
+    }
+
+    /// Rotating rungs through a two-rung DRAM budget evicts only cold
+    /// rungs, and the rung being served keeps producing bit-identical
+    /// outputs through its neighbors' evictions and re-warms.
+    #[test]
+    fn evicting_cold_rungs_never_perturbs_hot_rung_serving() {
+        let g = gaze::build();
+        let w = weights_for(&g, 160);
+        let rungs = ModelInstance::ladder(g, w, PrecSel::Fp4x4, true).unwrap();
+        let fp: Vec<u64> =
+            rungs.iter().map(|(inst, _)| inst.compiled.warm_footprint_bytes() as u64).collect();
+        // room for any two rungs but never all three: admitting the
+        // third rotates the least-recently-dispatched cold one out
+        let rt = RuntimeConfig {
+            resident_budget: Some((fp[0] + fp[1] + fp[2] / 2) as usize),
+            ..RuntimeConfig::default()
+        };
+        let mut r = Router::with_runtime(1, SocConfig::default(), rt);
+        r.register_ladder(WorkloadKind::Gaze, rungs).unwrap();
+        let x = vec![0.09; 16];
+        let serve = |r: &mut Router, rung: usize| {
+            r.set_ladder_rung(rung);
+            r.route(WorkloadKind::Gaze, &x, &[]).unwrap()
+        };
+        let out0 = serve(&mut r, 0).output;
+        let out1 = serve(&mut r, 1).output;
+        // admitting rung 2 must evict the LRU cold rung (rung 0)...
+        let out2 = serve(&mut r, 2).output;
+        assert!(r.replica_residency_stats(0).evictions >= 1, "the budget forces a rotation");
+        // ...and the rung that serves next is untouched by that eviction
+        assert_eq!(serve(&mut r, 2).output, out2, "hot rung must survive its neighbor's eviction");
+        // evicted rungs re-warm and serve bit-identically
+        assert_eq!(serve(&mut r, 0).output, out0);
+        assert_eq!(serve(&mut r, 1).output, out1);
+        assert_eq!(r.ladder_served(), vec![2, 2, 2]);
+        assert_ne!(out0, out2, "rungs really are different precision plans");
     }
 }

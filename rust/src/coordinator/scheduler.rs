@@ -58,6 +58,46 @@ impl ModelInstance {
         Self::build(graph, weights, plan, sens)
     }
 
+    /// Build the load-adaptive precision **ladder**: one instance per
+    /// [`crate::quant::LADDER_BUDGETS`] rung, highest fidelity first,
+    /// each compiled from its own budgeted plan over the *same*
+    /// sensitivity analysis and tagged with its rung index
+    /// ([`CompiledModel::rung`] — the per-request plan stamp). Returns
+    /// each instance paired with its gradient-weighted distortion score
+    /// in fixed-point micro-units (the accuracy-delta accounting the
+    /// differential harness and the `sim_ladder_score_*` registry keys
+    /// surface): rung 0 scores lowest (best), the FP4-heavy congestion
+    /// rung highest.
+    pub fn ladder(
+        graph: ModelGraph,
+        weights: TensorMap,
+        base4: PrecSel,
+        pin_high_last: bool,
+    ) -> Result<Vec<(ModelInstance, u64)>> {
+        let (ws, gs) = layer_tensors(&graph, &weights);
+        let sens = analyze_layers(&ws, &gs);
+        let params = graph.compute_layer_params();
+        let pins: Vec<usize> =
+            if pin_high_last && !params.is_empty() { vec![params.len() - 1] } else { vec![] };
+        policy::ladder_plans(&sens, &params, base4, &pins)
+            .into_iter()
+            .enumerate()
+            .map(|(rung, plan)| {
+                let score = (plan.distortion_score(&ws, &gs) * 1e6).round() as u64;
+                let mut compiled = compile(&graph, &weights, &plan)?;
+                compiled.rung = rung as u32;
+                let inst = ModelInstance {
+                    graph: graph.clone(),
+                    weights: weights.clone(),
+                    plan,
+                    sensitivities: sens.clone(),
+                    compiled: Arc::new(compiled),
+                };
+                Ok((inst, score))
+            })
+            .collect()
+    }
+
     /// Build with a uniform plan (precision sweeps) and compile.
     pub fn uniform(graph: ModelGraph, weights: TensorMap, sel: PrecSel) -> Result<ModelInstance> {
         let params = graph.compute_layer_params();

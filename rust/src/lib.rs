@@ -51,17 +51,35 @@
 //! the QAT workload models, verifies the Pallas kernels against pure-jnp
 //! oracles, and exports HLO text + weights into `artifacts/`.
 
+// Public-API documentation is enforced module by module: the serving
+// stack (`serve`, `obs`, `quant`, and the `models` compile/residency/
+// verify passes) is fully documented and CI denies regressions there
+// (`RUSTDOCFLAGS="-D missing_docs"`); the remaining modules carry an
+// explicit `allow` until their own sweep lands. Remove an `allow`, fix
+// what `cargo doc` reports, and CI keeps that module honest forever.
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod arith;
+#[allow(missing_docs)]
 pub mod array;
+#[allow(missing_docs)]
 pub mod artifacts;
+#[allow(missing_docs)]
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod energy;
 pub mod models;
+#[allow(missing_docs)]
 pub mod npe;
 pub mod obs;
 pub mod quant;
+#[allow(missing_docs)]
 pub mod runtime;
 pub mod serve;
+#[allow(missing_docs)]
 pub mod soc;
+#[allow(missing_docs)]
 pub mod util;
+#[allow(missing_docs)]
 pub mod vio;

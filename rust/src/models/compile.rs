@@ -193,8 +193,11 @@ pub struct GemmStep {
     pub sel: PrecSel,
     /// Activation format the output is requantized to.
     pub out_prec: Precision,
+    /// GEMM M dim (output rows; 1 for fc on a single request).
     pub m: usize,
+    /// GEMM K dim (reduction extent).
     pub k: usize,
+    /// GEMM N dim (output columns).
     pub n: usize,
     /// im2col gather (conv); `None` for fc (the activation vector is the
     /// 1×K operand directly).
@@ -207,6 +210,7 @@ pub struct GemmStep {
     /// once at compile time and shared (via `Arc`) with every replica's
     /// operand cache.
     pub w_enc: Arc<EncodedOperand>,
+    /// Per-output-column bias, added in the postprocess fold.
     pub bias: Vec<f32>,
     /// Frozen per-tensor pow-2 weight scale.
     pub s_b: f64,
@@ -216,9 +220,13 @@ pub struct GemmStep {
 /// dwarfs the vector-unit steps (resident weight image + gather map).
 #[derive(Debug, Clone)]
 pub enum Step {
+    /// A conv/fc layer lowered to one GEMM on the array.
     Gemm(Box<GemmStep>),
+    /// A pooling layer on the vector unit.
     Pool { kind: PoolKind, size: usize, in_shape: Shape, out_len: usize },
+    /// An activation layer on the vector unit.
     Act { kind: ActKind, alpha: f64, len: usize },
+    /// Append `n` auxiliary input elements to the activation vector.
     ConcatAux { n: usize },
 }
 
@@ -233,7 +241,9 @@ pub struct CompiledModel {
     pub plan: PrecisionPlan,
     /// The lowered program, in graph order (`Flatten` lowers to nothing).
     pub steps: Vec<Step>,
+    /// Flat input element count the program expects.
     pub input_len: usize,
+    /// Flat output element count the program produces.
     pub output_len: usize,
     /// Elements per ping-pong activation buffer (widest layer boundary).
     pub buf_len: usize,
@@ -241,6 +251,13 @@ pub struct CompiledModel {
     pub a_len: usize,
     /// Elements of output scratch (max m·n over GEMM steps).
     pub c_len: usize,
+    /// Precision-ladder rung this compilation serves (0 = highest
+    /// fidelity; also 0 for every single-plan compile, so non-ladder
+    /// models are unchanged). The ladder constructor
+    /// ([`crate::coordinator::ModelInstance::ladder`]) tags each rung
+    /// before the program is shared; every [`ExecReport`] the program
+    /// produces carries the tag as its per-request plan stamp.
+    pub rung: u32,
     uid: u64,
 }
 
@@ -450,6 +467,7 @@ pub fn compile(
         buf_len,
         a_len,
         c_len,
+        rung: 0,
         uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
     })
 }
@@ -891,7 +909,7 @@ impl CompiledModel {
             bail!("input length {} != {}", input.len(), self.input_len);
         }
         let ReplicaScratch { bufs, a_mat, out_mat } = scratch;
-        let mut report = ExecReport::default();
+        let mut report = ExecReport { rung: self.rung, ..ExecReport::default() };
         let mut cur = 0usize;
         let mut cur_len = input.len();
         bufs[0][..cur_len].copy_from_slice(input);
@@ -1133,7 +1151,9 @@ pub enum ShardSlice {
 /// block's columns; `s_b` is the frozen whole-tensor weight scale.
 #[derive(Debug, Clone)]
 pub struct LocalTail {
+    /// Frozen whole-tensor weight scale of the parent layer.
     pub s_b: f64,
+    /// Parent bias sliced to this block's output columns.
     pub bias: Vec<f32>,
 }
 
@@ -1142,6 +1162,7 @@ pub struct LocalTail {
 pub struct ShardStep {
     /// Index among the parent model's GEMM steps.
     pub gemm_idx: usize,
+    /// Engine mode of the parent step (shared by every shard).
     pub sel: PrecSel,
     /// Output rows of the layer (shared by every shard).
     pub m: usize,
@@ -1149,6 +1170,7 @@ pub struct ShardStep {
     pub k: usize,
     /// This slice's N extent.
     pub n: usize,
+    /// Which K rows / N columns of the parent operand this shard holds.
     pub slice: ShardSlice,
     /// The pre-scaled weight slice (resident DRAM image of this shard).
     pub weight: Matrix,
@@ -1175,7 +1197,9 @@ pub struct ShardedModel {
     pub name: String,
     /// Uid of the [`CompiledModel`] this shard was planned from.
     pub model_uid: u64,
+    /// This shard's position in the plan (`0..n_shards`).
     pub shard_idx: usize,
+    /// Total shards in the plan this view belongs to.
     pub n_shards: usize,
     /// One slice per parent GEMM step, indexed by `gemm_idx`.
     pub steps: Vec<ShardStep>,
@@ -1235,7 +1259,12 @@ pub const SHARD_INFLIGHT_WINDOW: usize = 4;
 /// [`crate::serve::CompletionSet`]; tests implement it inline with
 /// seeded arrival permutations.
 pub trait ShardChannel {
+    /// Hand shard `shard_idx` its sliced activation operand for GEMM
+    /// step `gemm_idx` (`s_a` is the request's dynamic activation
+    /// scale). Must not block on the job finishing.
     fn dispatch(&mut self, shard_idx: usize, gemm_idx: usize, a: Matrix, s_a: f64) -> Result<()>;
+    /// Block until **any** outstanding dispatch completes; return its
+    /// shard index, partial output and job report.
     fn wait_any(&mut self) -> Result<(usize, PartialOut, JobReport)>;
     /// Observability hook: called right after shard `shard_idx`'s
     /// K-split partial is merged into the layer's quires, with that

@@ -84,6 +84,15 @@ pub struct ExecReport {
     pub prefetch_hidden_cycles: u64,
     /// Per-layer (layer index, cycles) breakdown.
     pub per_layer_cycles: Vec<(usize, u64)>,
+    /// Precision-ladder rung that produced this report (0 = highest
+    /// fidelity; also 0 for every single-plan model, so pre-ladder
+    /// reports are unchanged). Stamped by
+    /// [`super::compile::CompiledModel::replay`] from the compiled
+    /// program's rung tag — the per-request plan stamp the tracer
+    /// renders as `PlanStamp` and the registry rolls up under
+    /// `sim_ladder_*`. [`ExecReport::merge`] keeps `self`'s rung: a
+    /// sharded request's partials all come from the same rung.
+    pub rung: u32,
 }
 
 impl ExecReport {

@@ -27,12 +27,18 @@
 //!   (documented per builder).
 
 pub mod compile;
+#[allow(missing_docs)]
 pub mod effnet;
+#[allow(missing_docs)]
 pub mod exec;
+#[allow(missing_docs)]
 pub mod gaze;
+#[allow(missing_docs)]
 pub mod graph;
+#[allow(missing_docs)]
 pub mod mlp;
 pub mod residency;
+#[allow(missing_docs)]
 pub mod ulvio;
 pub mod verify;
 
@@ -47,7 +53,7 @@ pub use residency::{
     compact_resident, residency_lock, AdmitOutcome, Candidate, EvictionPolicy, LruPolicy,
     ResidencyError, ResidencyManager, ResidencyStats, ResidentImage,
 };
-pub use verify::{verify_program, verify_shard_plan, ProgramProof, VerifyError};
+pub use verify::{verify_ladder, verify_program, verify_shard_plan, ProgramProof, VerifyError};
 
 /// He-initialized random weight map for a graph (bias zero, PACT α = 4)
 /// — the one init shared by CLI demos, benches and tests that exercise

@@ -131,6 +131,7 @@ pub fn residency_lock(m: &Mutex<ResidencyManager>) -> Tracked<MutexGuard<'_, Res
 /// catalog entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Candidate {
+    /// The entry's stable warm-state key ([`ResidentImage::uid`]).
     pub uid: u64,
     /// Logical dispatch clock of the entry's last admit/touch.
     pub last_use: u64,

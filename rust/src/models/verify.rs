@@ -114,6 +114,10 @@ pub enum VerifyError {
     /// [`reduction_cost`] (K quire merge) or [`gather_cost`] (N f32
     /// column-block gather) drifted from its documented formula.
     ReductionCostMismatch { model: String, gemm_idx: usize, got: (u64, u64), want: (u64, u64) },
+    /// A precision-ladder rung set is malformed: empty, mis-tagged rung
+    /// indices, rungs lowering different models, or plan fidelity not
+    /// non-increasing down the ladder.
+    LadderShape { model: String, detail: String },
 }
 
 impl fmt::Display for VerifyError {
@@ -189,6 +193,9 @@ impl fmt::Display for VerifyError {
                 "`{model}` gemm {gemm_idx}: reduction_cost returned {got:?}, documented \
                  formula says {want:?}"
             ),
+            VerifyError::LadderShape { model, detail } => {
+                write!(f, "`{model}`: malformed precision ladder: {detail}")
+            }
         }
     }
 }
@@ -784,6 +791,63 @@ pub fn verify_shard_plan<S: Borrow<ShardedModel>>(
     Ok(proofs)
 }
 
+/// Statically verify a precision-ladder rung set: every rung must
+/// verify independently as a whole program ([`verify_program`]), all
+/// rungs must lower the *same* model (name, IO extents, compute-layer
+/// count), rung tags must be exactly `0..n` in order, and plan fidelity
+/// (average bits per weight) must be non-increasing down the ladder —
+/// rung 0 is the high-fidelity plan the fleet serves when idle. Returns
+/// one [`ProgramProof`] per rung, in ladder order.
+pub fn verify_ladder<M: Borrow<CompiledModel>>(
+    rungs: &[M],
+    resident_limit: u64,
+) -> Result<Vec<ProgramProof>, VerifyError> {
+    let first = match rungs.first() {
+        Some(m) => m.borrow(),
+        None => {
+            return Err(VerifyError::LadderShape {
+                model: String::new(),
+                detail: "ladder has zero rungs".into(),
+            })
+        }
+    };
+    let mut proofs = Vec::with_capacity(rungs.len());
+    let mut prev_bits = f64::INFINITY;
+    for (i, m) in rungs.iter().enumerate() {
+        let m = m.borrow();
+        if m.rung as usize != i {
+            return Err(VerifyError::LadderShape {
+                model: m.name.clone(),
+                detail: format!("rung {i} carries tag {}", m.rung),
+            });
+        }
+        if m.name != first.name
+            || m.input_len != first.input_len
+            || m.output_len != first.output_len
+            || m.plan.per_layer.len() != first.plan.per_layer.len()
+        {
+            return Err(VerifyError::LadderShape {
+                model: first.name.clone(),
+                detail: format!("rung {i} lowers a different model (`{}`)", m.name),
+            });
+        }
+        let bits = m.plan.avg_bits();
+        if bits > prev_bits + 1e-9 {
+            return Err(VerifyError::LadderShape {
+                model: m.name.clone(),
+                detail: format!(
+                    "rung {i} has {bits:.2} avg bits, above rung {} ({prev_bits:.2}) — \
+                     the ladder must descend in fidelity",
+                    i - 1
+                ),
+            });
+        }
+        prev_bits = bits;
+        proofs.push(verify_program(m, resident_limit)?);
+    }
+    Ok(proofs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1156,5 +1220,60 @@ mod tests {
                 _ => None,
             })
             .expect("gemm_idx in range")
+    }
+
+    #[test]
+    fn ladder_of_descending_plans_verifies() {
+        let g = gaze::build();
+        let params = g.compute_layer_params();
+        let mut rungs = Vec::new();
+        for (i, sel) in [PrecSel::Posit16x1, PrecSel::Posit8x2, PrecSel::Fp4x4]
+            .into_iter()
+            .enumerate()
+        {
+            let mut c = compiled(&g, 770, &PrecisionPlan::uniform(sel, &params));
+            c.rung = i as u32;
+            rungs.push(c);
+        }
+        let proofs = verify_ladder(&rungs, limit()).expect("descending ladder verifies");
+        assert_eq!(proofs.len(), 3);
+    }
+
+    #[test]
+    fn ladder_rejects_mistag_ascent_and_empty() {
+        let g = gaze::build();
+        let params = g.compute_layer_params();
+        let hi = compiled(&g, 771, &PrecisionPlan::uniform(PrecSel::Posit16x1, &params));
+        let mut lo = compiled(&g, 771, &PrecisionPlan::uniform(PrecSel::Fp4x4, &params));
+        // mis-tagged: first rung carries tag 1
+        lo.rung = 1;
+        assert!(matches!(
+            verify_ladder(std::slice::from_ref(&lo), limit()),
+            Err(VerifyError::LadderShape { .. })
+        ));
+        // ascending fidelity: the FP4 plan ordered before the Posit16 one
+        let mut hi2 = hi.clone();
+        let mut lo2 = lo.clone();
+        lo2.rung = 0;
+        hi2.rung = 1;
+        let err = verify_ladder(&[lo2, hi2], limit()).expect_err("ascending ladder");
+        assert!(err.to_string().contains("descend"), "{err}");
+        // zero rungs
+        assert!(matches!(
+            verify_ladder::<CompiledModel>(&[], limit()),
+            Err(VerifyError::LadderShape { .. })
+        ));
+    }
+
+    #[test]
+    fn ladder_rejects_a_rung_of_a_different_model() {
+        let g = gaze::build();
+        let mut r0 = compiled(&g, 772, &PrecisionPlan::uniform(PrecSel::Posit16x1, &g.compute_layer_params()));
+        r0.rung = 0;
+        let e = effnet::build();
+        let mut r1 = compiled(&e, 773, &PrecisionPlan::uniform(PrecSel::Fp4x4, &e.compute_layer_params()));
+        r1.rung = 1;
+        let err = verify_ladder(&[r0, r1], limit()).expect_err("foreign rung");
+        assert!(err.to_string().contains("different model"), "{err}");
     }
 }

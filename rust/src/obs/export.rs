@@ -59,6 +59,12 @@ fn args_json(out: &mut String, ev: &TraceEvent) {
         TraceEvent::AutoscaleDecision { active } => {
             let _ = write!(out, ",\"active\":{active}");
         }
+        TraceEvent::PlanStamp { rung } => {
+            let _ = write!(out, ",\"rung\":{rung}");
+        }
+        TraceEvent::LadderSwitch { rung } => {
+            let _ = write!(out, ",\"rung\":{rung}");
+        }
         TraceEvent::Enqueue
         | TraceEvent::Dispatch
         | TraceEvent::Requantize

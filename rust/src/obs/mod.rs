@@ -102,6 +102,15 @@ pub enum TraceEvent {
     VerifyReject,
     /// A worker panic was fenced and converted to an error.
     WorkerPanic,
+    /// Per-request precision-plan stamp: the ladder rung whose compiled
+    /// plan served this request (0 = highest fidelity; every single-plan
+    /// model stamps 0). Emitted by the worker next to `Complete`, from
+    /// the [`crate::models::ExecReport::rung`] the replay carried.
+    PlanStamp { rung: u32 },
+    /// Fleet-level marker: the ladder policy switched dispatch to
+    /// `rung`. Emitted by the router's ladder tick, like
+    /// `AutoscaleDecision`.
+    LadderSwitch { rung: usize },
     /// Request finished; `begin_cycles` is its total simulated cost.
     Complete,
 }
@@ -125,6 +134,8 @@ impl TraceEvent {
             TraceEvent::AxiStall => "AxiStall",
             TraceEvent::VerifyReject => "VerifyReject",
             TraceEvent::WorkerPanic => "WorkerPanic",
+            TraceEvent::PlanStamp { .. } => "PlanStamp",
+            TraceEvent::LadderSwitch { .. } => "LadderSwitch",
             TraceEvent::Complete => "Complete",
         }
     }
@@ -135,11 +146,17 @@ impl TraceEvent {
 /// `seq` is the sink-wide monotone emission index.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TraceRecord {
+    /// The request this span belongs to ([`TraceSink::mint`]).
     pub id: TraceId,
+    /// Replica lane the span renders on (fleet events use lane 0).
     pub replica: usize,
+    /// Sink-wide monotone emission index — the serialization tiebreak.
     pub seq: u64,
+    /// Span start, simulated cycles relative to the request's start.
     pub begin_cycles: u64,
+    /// Span length in simulated cycles; 0 marks an instant event.
     pub dur_cycles: u64,
+    /// What happened (see [`TraceEvent`]).
     pub event: TraceEvent,
 }
 
@@ -245,7 +262,9 @@ impl TraceSink {
 /// means tracing is off and no emission code runs at all.
 #[derive(Clone)]
 pub struct TraceCtx {
+    /// The fleet's shared trace collector.
     pub sink: Arc<TraceSink>,
+    /// The id minted for this request at submit time.
     pub id: TraceId,
 }
 

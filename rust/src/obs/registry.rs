@@ -27,6 +27,7 @@ pub struct MetricsRegistry {
 }
 
 impl MetricsRegistry {
+    /// An empty registry (same as `Default`).
     pub fn new() -> MetricsRegistry {
         MetricsRegistry::default()
     }
@@ -99,6 +100,19 @@ pub fn snapshot(router: &Router) -> BTreeMap<String, u64> {
         let mgmt = router.replica_axi_mgmt(i);
         reg.gauge_set(&format!("sim_mgmt_bytes_r{i}"), mgmt.bytes_read + mgmt.bytes_written);
         reg.gauge_set(&format!("sim_mgmt_cycles_r{i}"), mgmt.cycles);
+    }
+    // ladder keys appear only when a precision ladder is registered, so
+    // pre-ladder snapshots (and their committed baselines) are unchanged
+    let rung_served = router.ladder_served();
+    if !rung_served.is_empty() {
+        reg.gauge_set("sim_ladder_rung", router.ladder_rung() as u64);
+        reg.gauge_set("sim_ladder_switches", router.ladder_switches());
+        for (r, &n) in rung_served.iter().enumerate() {
+            reg.gauge_set(&format!("sim_ladder_served_rung{r}"), n);
+        }
+        for (r, &s) in router.ladder_scores().iter().enumerate() {
+            reg.gauge_set(&format!("sim_ladder_score_rung{r}"), s);
+        }
     }
     if let Some(sink) = router.trace_sink() {
         reg.gauge_set("sim_trace_events", sink.len() as u64);

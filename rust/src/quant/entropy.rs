@@ -19,11 +19,13 @@
 /// Parameters of the entropy quantizer for one tensor.
 #[derive(Debug, Clone, Copy)]
 pub struct EntropyQuant {
+    /// Target bit width the thresholds were optimized for.
     pub n_bits: u32,
     /// eq. (3) scale.
     pub k: f64,
-    /// Lower/upper saturation thresholds in the k-normalized domain.
+    /// Lower saturation threshold in the k-normalized domain.
     pub w_l: f64,
+    /// Upper saturation threshold in the k-normalized domain.
     pub w_h: f64,
 }
 

@@ -19,5 +19,5 @@ pub mod pact;
 pub mod policy;
 pub mod sensitivity;
 
-pub use policy::{PlanBudget, PrecisionPlan};
+pub use policy::{ladder_plans, PlanBudget, PrecisionPlan, LADDER_BUDGETS};
 pub use sensitivity::LayerSensitivity;

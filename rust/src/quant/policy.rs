@@ -13,7 +13,7 @@
 //! fragile; the sensitivity metric discovers this on real nets, and a
 //! `pin` list lets callers enforce it.
 
-use super::sensitivity::LayerSensitivity;
+use super::sensitivity::{distortion, l2, LayerSensitivity};
 use crate::arith::Precision;
 use crate::npe::PrecSel;
 
@@ -61,6 +61,52 @@ impl PrecisionPlan {
     pub fn layer_precision(&self, layer: usize) -> Precision {
         self.per_layer[layer].precision()
     }
+
+    /// Gradient-weighted quantization distortion of the whole plan —
+    /// the accuracy proxy the serving ladder surfaces per rung:
+    /// `Σ_l ‖Q_l(w_l) − w_l‖ · ‖∇L_{w_l}‖ / n_l` over the plan's
+    /// per-layer precisions (same first-order Taylor weighting as
+    /// eq. 1). Lower is better; a Posit(16,1)-everywhere plan scores
+    /// near zero, an FP4-heavy plan scores highest.
+    pub fn distortion_score(&self, weights: &[Vec<f32>], grads: &[Vec<f32>]) -> f64 {
+        assert_eq!(weights.len(), self.per_layer.len(), "weights/plan length mismatch");
+        assert_eq!(grads.len(), self.per_layer.len(), "grads/plan length mismatch");
+        self.per_layer
+            .iter()
+            .zip(weights.iter().zip(grads))
+            .map(|(sel, (w, g))| {
+                if w.is_empty() {
+                    0.0
+                } else {
+                    distortion(w, sel.precision()) * l2(g) / w.len() as f64
+                }
+            })
+            .sum()
+    }
+}
+
+/// Average-bit budgets for the three serving-ladder rungs, highest
+/// fidelity first: rung 0 promotes everything to Posit(16,1), rung 1 is
+/// the paper's balanced MxP mix, rung 2 is the FP4-heavy congestion
+/// plan that only spares the layers the sensitivity metric flags.
+pub const LADDER_BUDGETS: [PlanBudget; 3] = [
+    PlanBudget { avg_bits: 16.0 },
+    PlanBudget { avg_bits: 6.0 },
+    PlanBudget { avg_bits: 4.2 },
+];
+
+/// Derive the load-adaptive precision ladder: one [`plan`] per
+/// [`LADDER_BUDGETS`] entry, ordered highest fidelity first. All rungs
+/// share the sensitivity ranking, the 4-bit base mode, and the pinned
+/// high-precision layers, so rung 0 is a superset-precision view of
+/// rung 2 — what the serving fleet downshifts through under congestion.
+pub fn ladder_plans(
+    sens: &[LayerSensitivity],
+    params: &[usize],
+    base4: PrecSel,
+    pin_high: &[usize],
+) -> Vec<PrecisionPlan> {
+    LADDER_BUDGETS.iter().map(|&b| plan(sens, params, b, base4, pin_high)).collect()
 }
 
 /// Promotion ladder (4-bit → 8 → 16).
@@ -209,6 +255,32 @@ mod tests {
         assert!((get("FP32") - 13.5).abs() < 0.1);
         assert!((get("FP8") - 3.375).abs() < 0.05);
         assert!((get("MxP") - 2.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn ladder_plans_descend_in_fidelity() {
+        let (ws, gs, params) = fake_net(7);
+        let sens = analyze_layers(&ws, &gs);
+        let rungs = ladder_plans(&sens, &params, PrecSel::Fp4x4, &[]);
+        assert_eq!(rungs.len(), LADDER_BUDGETS.len());
+        // average bits are non-increasing down the ladder
+        assert!(rungs[0].avg_bits() >= rungs[1].avg_bits());
+        assert!(rungs[1].avg_bits() >= rungs[2].avg_bits());
+        // rung 0 is the full-fidelity view
+        assert!(rungs[0].per_layer.iter().all(|&s| s == PrecSel::Posit16x1));
+        // the accuracy proxy degrades (score grows) down the ladder
+        let s: Vec<f64> = rungs.iter().map(|p| p.distortion_score(&ws, &gs)).collect();
+        assert!(s[0] <= s[1] && s[1] <= s[2], "{s:?}");
+    }
+
+    #[test]
+    fn ladder_plans_respect_pins_on_every_rung() {
+        let (ws, gs, params) = fake_net(8);
+        let sens = analyze_layers(&ws, &gs);
+        let rungs = ladder_plans(&sens, &params, PrecSel::Fp4x4, &[4]);
+        for p in &rungs {
+            assert_eq!(p.per_layer[4], PrecSel::Posit16x1);
+        }
     }
 
     #[test]

@@ -55,6 +55,7 @@ pub fn sensitivity_candidate(
 /// values for diagnostics).
 #[derive(Debug, Clone)]
 pub struct LayerSensitivity {
+    /// Compute-layer index this summary describes.
     pub layer: usize,
     /// eq. (2): max over the 8-bit and 4-bit scale candidates.
     pub s: f64,
@@ -62,7 +63,9 @@ pub struct LayerSensitivity {
     /// FP32 reference, gradient-weighted — the "cost of going low". This
     /// is what the policy ranks by (high ⇒ keep precision).
     pub cost_low: f64,
+    /// Raw eq. (1) value for the 8-bit scale candidate.
     pub s_sc8: f64,
+    /// Raw eq. (1) value for the 4-bit scale candidate.
     pub s_sc4: f64,
 }
 

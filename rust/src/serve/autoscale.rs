@@ -63,6 +63,7 @@ impl Default for AutoscaleConfig {
 /// [`WindowedStats`], sized by [`AutoscaleConfig::window`]).
 #[derive(Debug)]
 pub struct Autoscaler {
+    /// The thresholds and limits this policy decides with.
     pub cfg: AutoscaleConfig,
     stats: WindowedStats,
     seen_at_last_decide: u64,
@@ -70,6 +71,8 @@ pub struct Autoscaler {
 }
 
 impl Autoscaler {
+    /// Build a policy from `cfg` (asserts the knobs are coherent:
+    /// `floor >= 1`, `max >= floor`, non-zero window and step).
     pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
         assert!(cfg.floor >= 1, "autoscale floor must be >= 1");
         assert!(cfg.max >= cfg.floor, "autoscale max must be >= floor");
@@ -192,6 +195,7 @@ impl Default for CycleAutoscaleConfig {
 /// tuning. Fed by [`crate::coordinator::Router::autoscale_tick_cycles`].
 #[derive(Debug)]
 pub struct CycleAutoscaler {
+    /// The thresholds and limits this policy decides with.
     pub cfg: CycleAutoscaleConfig,
     service: WindowedStats,
     seen_at_last_decide: u64,
@@ -199,6 +203,8 @@ pub struct CycleAutoscaler {
 }
 
 impl CycleAutoscaler {
+    /// Build a policy from `cfg` (asserts the knobs are coherent:
+    /// `floor >= 1`, `max >= floor`, non-zero window and step).
     pub fn new(cfg: CycleAutoscaleConfig) -> CycleAutoscaler {
         assert!(cfg.floor >= 1, "autoscale floor must be >= 1");
         assert!(cfg.max >= cfg.floor, "autoscale max must be >= floor");

@@ -176,6 +176,7 @@ impl<T> Default for CompletionSet<T> {
 }
 
 impl<T> CompletionSet<T> {
+    /// An empty set with its own shared wake channel.
     pub fn new() -> CompletionSet<T> {
         CompletionSet {
             wake: Arc::new(WakeSet { gen: Mutex::new(0), cv: Condvar::new() }),
@@ -200,6 +201,7 @@ impl<T> CompletionSet<T> {
         self.pending.len()
     }
 
+    /// True when no members are awaited ([`CompletionSet::len`] == 0).
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
     }

@@ -1,0 +1,292 @@
+//! The load-adaptive **precision ladder** policy — autoscale quality,
+//! not just replicas.
+//!
+//! The fleet already scales the replica count on simulated-cycle
+//! congestion ([`super::autoscale::CycleAutoscaler`]). This sibling
+//! policy scales the *precision* axis instead: a model registered as a
+//! ladder ([`crate::coordinator::Router::register_ladder`]) has several
+//! co-resident compiled plans — rung 0 the high-fidelity plan, the last
+//! rung the FP4-heavy congestion plan — and this policy decides which
+//! rung dispatch uses:
+//!
+//! * sustained congestion (`queue depth × windowed mean service cycles`
+//!   at/above [`LadderConfig::shift_down`]) moves dispatch one rung
+//!   *down* the ladder (cheaper, lower fidelity);
+//! * a relaxed fleet (congestion at/below [`LadderConfig::shift_up`])
+//!   moves one rung back *up*;
+//! * a truly idle fleet (no fresh samples, empty queues, nothing in
+//!   flight for [`LadderConfig::idle_patience`] ticks) snaps straight
+//!   back to rung 0.
+//!
+//! **Hysteresis**: after any switch the policy dwells for
+//! [`LadderConfig::dwell_ticks`] ticks before it will switch again, so
+//! congestion hovering around a threshold cannot thrash the ladder.
+//! Every input is simulator output (service cycles, queue depth) — no
+//! wall clock anywhere — so a seeded congestion trace replays to a
+//! byte-identical switch sequence on any host (the repo's `xr_lint`
+//! wall-clock rule applies here as everywhere).
+//!
+//! Like the autoscalers, this is pure policy: it never touches queues
+//! or threads. [`crate::coordinator::Router::ladder_tick_cycles`] feeds
+//! it live queue depth; [`crate::coordinator::Router::ladder_tick_with`]
+//! feeds it a seeded depth trace for deterministic tests and benches.
+
+use super::worker::WindowedStats;
+
+/// Knobs for the precision-ladder policy. Thresholds are in units of
+/// *congestion* = queued jobs × windowed mean service cycles, exactly
+/// like [`super::autoscale::CycleAutoscaleConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct LadderConfig {
+    /// Congestion at/above this shifts dispatch one rung **down** the
+    /// ladder (toward the FP4-heavy plan).
+    pub shift_down: u64,
+    /// Congestion at/below this shifts one rung back **up** (toward the
+    /// high-fidelity plan).
+    pub shift_up: u64,
+    /// Service-cycle sample window length.
+    pub window: usize,
+    /// Hysteresis: ticks the policy holds after any switch before it
+    /// will switch again.
+    pub dwell_ticks: u32,
+    /// Truly-idle ticks (no fresh samples, nothing queued or in flight)
+    /// before snapping back to rung 0.
+    pub idle_patience: u32,
+}
+
+impl Default for LadderConfig {
+    fn default() -> Self {
+        LadderConfig {
+            // one gaze-class inference is ~20-40k sim-cycles; several
+            // requests' worth of queued work justifies spending fewer
+            // bits per request
+            shift_down: 150_000,
+            shift_up: 15_000,
+            window: 256,
+            dwell_ticks: 2,
+            idle_patience: 2,
+        }
+    }
+}
+
+/// The precision-ladder policy + its sliding service-cycle window.
+#[derive(Debug)]
+pub struct LadderPolicy {
+    /// The policy knobs (public like the autoscalers' `cfg`).
+    pub cfg: LadderConfig,
+    service: WindowedStats,
+    seen_at_last_decide: u64,
+    idle_ticks: u32,
+    dwell: u32,
+    rung: usize,
+}
+
+impl LadderPolicy {
+    /// Build a policy at rung 0 (high fidelity).
+    pub fn new(cfg: LadderConfig) -> LadderPolicy {
+        assert!(cfg.shift_down > cfg.shift_up, "ladder thresholds must leave a dead band");
+        assert!(cfg.window >= 1);
+        LadderPolicy {
+            cfg,
+            service: WindowedStats::with_window(cfg.window),
+            seen_at_last_decide: 0,
+            idle_ticks: 0,
+            dwell: 0,
+            rung: 0,
+        }
+    }
+
+    /// Feed one completed job's simulated service cost.
+    pub fn observe_service_cycles(&mut self, cycles: u64) {
+        self.service.record(cycles);
+    }
+
+    /// Feed a batch of samples (the runtime's incremental tail).
+    pub fn observe_samples(&mut self, samples: &[u64]) {
+        for &s in samples {
+            self.observe_service_cycles(s);
+        }
+    }
+
+    /// The rung the last [`LadderPolicy::decide`] settled on (0 until
+    /// the first tick).
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+
+    /// The congestion signal: `queue_depth ×` windowed mean service
+    /// cycles — identical to the replica autoscaler's.
+    pub fn congestion(&self, queue_depth: usize) -> u64 {
+        (queue_depth as f64 * self.service.mean()) as u64
+    }
+
+    /// One policy tick: given the ladder length and the fleet's current
+    /// load, return the rung dispatch should use (always
+    /// `< n_rungs.max(1)`). Deep queues shift down even when nothing
+    /// completed since the last tick (a backlogged fleet produces no
+    /// fresh samples — exactly when shedding bits matters most);
+    /// snapping back to rung 0 requires a truly idle runtime.
+    pub fn decide(&mut self, n_rungs: usize, in_flight: usize, queue_depth: usize) -> usize {
+        let top = n_rungs.saturating_sub(1);
+        self.rung = self.rung.min(top);
+        let fresh = self.service.recorded() > self.seen_at_last_decide;
+        self.seen_at_last_decide = self.service.recorded();
+        if !fresh && queue_depth == 0 {
+            if in_flight > 0 {
+                // backlogged, not idle: hold until completions report in
+                self.idle_ticks = 0;
+                return self.rung;
+            }
+            self.idle_ticks += 1;
+            if self.idle_ticks >= self.cfg.idle_patience {
+                self.rung = 0;
+                self.dwell = 0;
+            }
+            return self.rung;
+        }
+        self.idle_ticks = 0;
+        if self.service.count() == 0 {
+            // queued work but no cost estimate yet: hold for a sample
+            return self.rung;
+        }
+        if self.dwell > 0 {
+            // hysteresis: a recent switch pins the rung for dwell_ticks
+            self.dwell -= 1;
+            return self.rung;
+        }
+        let congestion = self.congestion(queue_depth);
+        if congestion >= self.cfg.shift_down && self.rung < top {
+            self.rung += 1;
+            self.dwell = self.cfg.dwell_ticks;
+        } else if congestion <= self.cfg.shift_up && self.rung > 0 {
+            self.rung -= 1;
+            self.dwell = self.cfg.dwell_ticks;
+        }
+        self.rung
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LadderConfig {
+        LadderConfig {
+            shift_down: 50_000,
+            shift_up: 5_000,
+            window: 16,
+            dwell_ticks: 2,
+            idle_patience: 2,
+        }
+    }
+
+    #[test]
+    fn congestion_shifts_down_and_idle_snaps_back_to_high_fidelity() {
+        let mut p = LadderPolicy::new(cfg());
+        p.observe_samples(&[20_000; 4]); // mean 20k cycles/request
+        assert_eq!(p.decide(3, 3, 3), 1, "60k congestion >= 50k shifts down");
+        // dwell holds through continued pressure...
+        p.observe_samples(&[20_000; 2]);
+        assert_eq!(p.decide(3, 3, 3), 1, "dwell tick 1 pins the rung");
+        p.observe_samples(&[20_000; 2]);
+        assert_eq!(p.decide(3, 3, 3), 1, "dwell tick 2 pins the rung");
+        // ...then the still-deep queue shifts the rest of the way down
+        p.observe_samples(&[20_000; 2]);
+        assert_eq!(p.decide(3, 3, 3), 2, "sustained pressure reaches the FP4-heavy rung");
+        // truly idle: patience, then snap to rung 0
+        assert_eq!(p.decide(3, 0, 0), 2, "first idle tick within patience");
+        assert_eq!(p.decide(3, 0, 0), 0, "second idle tick snaps to high fidelity");
+    }
+
+    #[test]
+    fn dead_band_holds_the_current_rung() {
+        let mut p = LadderPolicy::new(cfg());
+        p.observe_samples(&[20_000; 4]);
+        assert_eq!(p.decide(3, 3, 3), 1);
+        // burn the dwell with mid-band congestion, then stay mid-band
+        for _ in 0..4 {
+            p.observe_samples(&[20_000; 1]);
+            assert_eq!(p.decide(3, 1, 1), 1, "20k congestion sits in the dead band");
+        }
+    }
+
+    #[test]
+    fn relaxed_fresh_traffic_steps_back_up_one_rung_at_a_time() {
+        let mut p = LadderPolicy::new(cfg());
+        p.observe_samples(&[30_000; 8]);
+        assert_eq!(p.decide(3, 4, 4), 1);
+        for _ in 0..2 {
+            p.observe_samples(&[30_000; 1]);
+            p.decide(3, 4, 4); // burn dwell under pressure
+        }
+        p.observe_samples(&[30_000; 1]);
+        assert_eq!(p.decide(3, 4, 4), 2, "still congested: bottom rung");
+        // congestion collapses but traffic stays fresh: step up, not snap
+        p.observe_samples(&[30_000; 1]);
+        p.decide(3, 0, 0); // dwell tick (fresh sample, zero depth)
+        p.observe_samples(&[30_000; 1]);
+        p.decide(3, 0, 0); // dwell tick
+        p.observe_samples(&[30_000; 1]);
+        assert_eq!(p.decide(3, 0, 0), 1, "zero congestion steps up one rung");
+        for _ in 0..2 {
+            p.observe_samples(&[30_000; 1]);
+            p.decide(3, 0, 0); // dwell
+        }
+        p.observe_samples(&[30_000; 1]);
+        assert_eq!(p.decide(3, 0, 0), 0, "and the next eligible tick reaches rung 0");
+    }
+
+    #[test]
+    fn backlog_without_completions_still_shifts_down() {
+        // no fresh samples but a deep queue: exactly when shedding bits
+        // matters — the policy must act on the last known mean cost
+        let mut p = LadderPolicy::new(cfg());
+        p.observe_samples(&[30_000; 4]);
+        assert_eq!(p.decide(3, 4, 2), 1, "tick 1: 60k queued-cycles shifts down");
+        assert_eq!(p.decide(3, 4, 2), 1, "dwell holds");
+        assert_eq!(p.decide(3, 4, 2), 1, "dwell holds");
+        assert_eq!(p.decide(3, 4, 2), 2, "tick 4: still backlogged, bottom rung");
+    }
+
+    #[test]
+    fn in_flight_work_blocks_the_idle_snap_back() {
+        let mut p = LadderPolicy::new(cfg());
+        p.observe_samples(&[30_000; 4]);
+        assert_eq!(p.decide(2, 4, 4), 1);
+        // draining: nothing queued but jobs in flight → hold
+        assert_eq!(p.decide(2, 2, 0), 1);
+        assert_eq!(p.decide(2, 2, 0), 1, "in-flight work blocks the snap");
+        // truly idle: patience, then rung 0
+        assert_eq!(p.decide(2, 0, 0), 1);
+        assert_eq!(p.decide(2, 0, 0), 0);
+    }
+
+    #[test]
+    fn holds_until_first_cost_sample_and_clamps_to_ladder_length() {
+        let mut p = LadderPolicy::new(cfg());
+        assert_eq!(p.decide(3, 3, 3), 0, "no cost estimate yet: hold rung 0");
+        p.observe_samples(&[1_000_000; 4]);
+        assert_eq!(p.decide(1, 9, 9), 0, "a one-rung ladder never moves");
+        assert_eq!(p.decide(0, 0, 0), 0, "an empty ladder is pinned to 0");
+    }
+
+    #[test]
+    fn seeded_congestion_trace_replays_to_identical_switch_sequence() {
+        // the acceptance-criteria property at policy level: the same
+        // seeded (samples, depth) trace yields the same rung sequence
+        let trace: Vec<(u64, usize, usize)> =
+            vec![(20_000, 1, 1), (25_000, 6, 6), (25_000, 6, 6), (25_000, 5, 5), (0, 0, 0), (0, 0, 0), (0, 0, 0)];
+        let run = || {
+            let mut p = LadderPolicy::new(cfg());
+            let mut seq = Vec::new();
+            for &(cycles, inflight, depth) in &trace {
+                if cycles > 0 {
+                    p.observe_service_cycles(cycles);
+                }
+                seq.push(p.decide(3, inflight, depth));
+            }
+            seq
+        };
+        assert_eq!(run(), run());
+    }
+}

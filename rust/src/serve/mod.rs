@@ -21,6 +21,10 @@
 //!   ([`crate::coordinator::LatencyStats`] p95 over a sliding window)
 //!   and grows/parks the active replica set between a configurable
 //!   floor and the fleet size.
+//! * [`ladder`] — the precision-ladder sibling of the cycle autoscaler:
+//!   the same simulated-cycle congestion signal, but instead of adding
+//!   replicas it shifts dispatch between co-resident compiled precision
+//!   plans (high-fidelity ↔ FP4-heavy), with dwell-tick hysteresis.
 //!
 //! [`crate::coordinator::Router`] builds its `submit`/`submit_batch`
 //! entry points on this runtime; its `route`/`route_batch` are thin
@@ -30,10 +34,12 @@
 
 pub mod autoscale;
 pub mod handle;
+pub mod ladder;
 pub mod queue;
 pub mod worker;
 
 pub use autoscale::{AutoscaleConfig, Autoscaler, CycleAutoscaleConfig, CycleAutoscaler};
+pub use ladder::{LadderConfig, LadderPolicy};
 pub use handle::{completion, Canceled, Completion, CompletionSender, CompletionSet};
 pub use queue::{Closed, WorkQueue};
 pub use worker::{

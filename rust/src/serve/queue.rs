@@ -120,6 +120,7 @@ impl<T> WorkQueue<T> {
         self.not_full.notify_all();
     }
 
+    /// Has [`WorkQueue::close`] been called?
     pub fn is_closed(&self) -> bool {
         lock_state(&self.state).closed
     }
@@ -130,10 +131,12 @@ impl<T> WorkQueue<T> {
         lock_state(&self.state).items.len()
     }
 
+    /// True when nothing is queued (racy, like [`WorkQueue::len`]).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The bound passed at construction — pushes beyond it block.
     pub fn capacity(&self) -> usize {
         self.cap
     }

@@ -47,6 +47,7 @@ pub struct Job {
     /// emission code runs at all — tracing is provably zero-overhead
     /// when off.
     pub trace: Option<TraceCtx>,
+    /// What to run (see [`JobPayload`]).
     pub payload: JobPayload,
 }
 
@@ -176,6 +177,7 @@ impl WindowedStats {
         WindowedStats { cap, window: VecDeque::new(), recorded: 0 }
     }
 
+    /// Append one sample, dropping the oldest past the window cap.
     pub fn record(&mut self, v: u64) {
         if self.window.len() == self.cap {
             self.window.pop_front();
@@ -210,14 +212,17 @@ impl WindowedStats {
         stats.percentile(p)
     }
 
+    /// Window median ([`WindowedStats::percentile`] at 50).
     pub fn p50(&self) -> u64 {
         self.percentile(50.0)
     }
 
+    /// Window 95th percentile — the autoscalers' pressure signal.
     pub fn p95(&self) -> u64 {
         self.percentile(95.0)
     }
 
+    /// Window 99th percentile (tail latency).
     pub fn p99(&self) -> u64 {
         self.percentile(99.0)
     }
@@ -288,6 +293,7 @@ struct Shared {
 
 /// One spawned worker: its queue plus the thread draining it.
 pub struct ReplicaWorker {
+    /// The replica index this worker drains (fleet-wide, 0-based).
     pub id: usize,
     queue: Arc<WorkQueue<Job>>,
     handle: Option<JoinHandle<()>>,
@@ -443,6 +449,15 @@ impl ReplicaWorker {
                                         TraceEvent::Prefetch,
                                     );
                                 }
+                                // per-request plan stamp: which ladder
+                                // rung (0 for single-plan models)
+                                // produced this report
+                                tr.emit(
+                                    id,
+                                    rep.total_cycles(),
+                                    0,
+                                    TraceEvent::PlanStamp { rung: rep.rung },
+                                );
                                 tr.emit(id, rep.total_cycles(), 0, TraceEvent::Complete);
                             }
                             Ok(Err(_)) => {}
@@ -532,6 +547,7 @@ impl ServeRuntime {
         ServeRuntime { socs, workers, shared }
     }
 
+    /// Number of replica workers (and SoCs) this runtime drives.
     pub fn n_replicas(&self) -> usize {
         self.socs.len()
     }

@@ -251,8 +251,7 @@ impl ExternalMem {
         let bytes = self.read(addr, count * 4)?;
         Ok(bytes
             .chunks_exact(4)
-            // xr_lint: allow(no-panic) -- chunks_exact(4) yields 4-byte slices; the conversion is infallible
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
 }

@@ -107,9 +107,8 @@ pub fn load_tensors(path: impl AsRef<Path>) -> Result<TensorMap> {
         let mut data = vec![0f32; total];
         let mut buf = vec![0u8; total * 4];
         f.read_exact(&mut buf)?;
-        for (i, chunk) in buf.chunks_exact(4).enumerate() {
-            // xr_lint: allow(no-panic) -- chunks_exact(4) yields 4-byte slices; the conversion is infallible
-            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
         }
         if out.insert(name.clone(), Tensor::new(dims, data)).is_some() {
             bail!("duplicate tensor name {name}");

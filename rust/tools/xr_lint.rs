@@ -21,6 +21,10 @@
 //!   acquisition must precede the first `residency_lock`/`shared_lock`
 //!   when both appear. This is the static shadow of the runtime
 //!   lockdep in `util::lockdep` (Device < Residency < Shared).
+//! * **doc-hygiene** — every file under the repo's `docs/` tree must be
+//!   named in `README.md`, so the documentation index can't silently
+//!   rot as docs are added. Runs only in the default (argument-less)
+//!   invocation, which is what CI uses.
 //!
 //! Sites where the invariant is deliberately broken carry an inline
 //! waiver on the same line or the line above:
@@ -44,11 +48,15 @@ use std::path::{Path, PathBuf};
 /// One lint finding.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Finding {
+    /// Path of the offending file, as reported.
     pub file: String,
     /// 1-indexed line.
     pub line: usize,
+    /// Which rule fired (`wall-clock`, `no-panic`, …).
     pub rule: &'static str,
+    /// The matched token or path.
     pub token: String,
+    /// Human-readable explanation.
     pub message: String,
 }
 
@@ -465,6 +473,72 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
     findings
 }
 
+/// doc-hygiene: every path in `doc_paths` (repo-relative, e.g.
+/// `docs/ARCHITECTURE.md`) must appear verbatim in the README text.
+pub fn lint_doc_tree(readme: &str, doc_paths: &[String]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for p in doc_paths {
+        if !readme.contains(p.as_str()) {
+            findings.push(Finding {
+                file: p.clone(),
+                line: 1,
+                rule: "doc-hygiene",
+                token: p.clone(),
+                message: "docs/ file not named in README.md; link it from the Documentation section"
+                    .to_string(),
+            });
+        }
+    }
+    findings
+}
+
+/// Recursively collect every file under `root`, sorted for stable output.
+fn collect_files(root: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(root).map_err(|e| format!("read_dir {}: {e}", root.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", root.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_files(&path, out)?;
+        } else {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(())
+}
+
+/// Locate `README.md` + `docs/` relative to the working directory (the
+/// tool runs from `rust/` in CI and from the repo root locally) and
+/// apply the doc-hygiene rule. A repo without a docs tree is clean.
+fn doc_hygiene_findings() -> Result<Vec<Finding>, String> {
+    for base in ["..", "."] {
+        let readme = Path::new(base).join("README.md");
+        let docs = Path::new(base).join("docs");
+        if !(readme.is_file() && docs.is_dir()) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&readme)
+            .map_err(|e| format!("read {}: {e}", readme.display()))?;
+        let mut files = Vec::new();
+        collect_files(&docs, &mut files)?;
+        let rels: Vec<String> = files
+            .iter()
+            .map(|p| {
+                let s = p.to_string_lossy().replace('\\', "/");
+                // report repo-relative "docs/…" regardless of which base matched
+                match s.find("docs/") {
+                    Some(at) => s[at..].to_string(),
+                    None => s,
+                }
+            })
+            .collect();
+        return Ok(lint_doc_tree(&text, &rels));
+    }
+    Ok(Vec::new())
+}
+
 /// Recursively collect `*.rs` files under `root`, sorted for stable output.
 fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
     let entries =
@@ -519,13 +593,24 @@ fn main() {
         None if Path::new("src").is_dir() => PathBuf::from("src"),
         None => PathBuf::from("rust/src"),
     };
-    let findings = match run(&root) {
+    let mut findings = match run(&root) {
         Ok(f) => f,
         Err(e) => {
             eprintln!("xr_lint: {e}");
             std::process::exit(2);
         }
     };
+    // repo-level rules only apply in the default invocation — an explicit
+    // path argument means "lint that tree", nothing else
+    if args.is_empty() {
+        match doc_hygiene_findings() {
+            Ok(f) => findings.extend(f),
+            Err(e) => {
+                eprintln!("xr_lint: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     for f in &findings {
         println!(
             "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"token\":\"{}\",\"message\":\"{}\"}}",
@@ -717,6 +802,27 @@ mod tests {
                    \x20   let soc = device_lock(self.runtime.soc(0));\n\
                    }\n";
         assert!(lint_source("src/coordinator/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn doc_hygiene_flags_unlinked_docs_files() {
+        let readme = "# repo\nSee [docs/ARCHITECTURE.md](docs/ARCHITECTURE.md).\n";
+        let docs = vec![
+            "docs/ARCHITECTURE.md".to_string(),
+            "docs/PRECISION.md".to_string(),
+        ];
+        let f = lint_doc_tree(readme, &docs);
+        assert_eq!(rules(&f), vec!["doc-hygiene"], "{f:?}");
+        assert_eq!(f[0].file, "docs/PRECISION.md");
+    }
+
+    #[test]
+    fn doc_hygiene_clean_when_every_docs_file_is_named() {
+        let readme = "docs line: docs/A.md and docs/sub/B.md are both linked";
+        let docs = vec!["docs/A.md".to_string(), "docs/sub/B.md".to_string()];
+        assert!(lint_doc_tree(readme, &docs).is_empty());
+        // an empty docs tree gates nothing
+        assert!(lint_doc_tree("no docs mentioned", &[]).is_empty());
     }
 
     #[test]
